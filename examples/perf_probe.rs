@@ -1,0 +1,29 @@
+//! Whole-stack perf probe (EXPERIMENTS.md §Perf).
+use pasgal::algo::{bcc, bfs, scc, sssp};
+fn t<R>(name: &str, mut f: impl FnMut() -> R) {
+    let t0 = std::time::Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    std::hint::black_box(f());
+    println!("{name:<22} {:>10.3?} (2nd: {:>10.3?})", once, t0.elapsed());
+}
+fn main() {
+    let road = pasgal::graph::gen::road(150, 350, 0xAF);
+    let road_sym = road.symmetrize();
+    let social = pasgal::graph::gen::social(14, 14, 0x17);
+    println!("road n={} m={} | social n={} m={}", road.n(), road.m(), social.n(), social.m());
+    t("seq_bfs(road)", || bfs::seq_bfs(&road, 0));
+    t("frontier_bfs(road)", || bfs::frontier_bfs(&road, 0, None));
+    t("vgc_bfs(road)", || bfs::vgc_bfs(&road, 0, 512, None));
+    t("vgc_bfs(social)", || bfs::vgc_bfs(&social, 0, 512, None));
+    t("frontier_bfs(social)", || bfs::frontier_bfs(&social, 0, None));
+    t("dijkstra(road)", || sssp::dijkstra(&road, 0));
+    t("rho(road)", || sssp::rho_stepping(&road, 0, 512, None));
+    t("delta(road)", || sssp::delta_stepping(&road, 0, None, None));
+    t("tarjan(road)", || scc::tarjan_scc(&road));
+    t("vgc_scc(road)", || scc::vgc_scc(&road, None, 512, 42, None));
+    t("hopcroft(road)", || bcc::hopcroft_tarjan(&road_sym));
+    t("fast_bcc(road)", || bcc::fast_bcc(&road_sym, None));
+    t("gbbs_bcc(road)", || bcc::gbbs_bcc(&road_sym, None));
+}

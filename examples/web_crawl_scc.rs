@@ -1,0 +1,106 @@
+//! Web-graph structure analysis: SCC bow-tie decomposition of a
+//! crawl-like graph, comparing PASGAL's VGC SCC against the
+//! round-synchronous baseline (the paper's Table 4 story at
+//! example scale).
+//!
+//! ```bash
+//! cargo run --release --example web_crawl_scc
+//! ```
+
+use pasgal::algo::scc;
+use pasgal::bench::{fmt_duration, time_once};
+use pasgal::sim::AlgoTrace;
+
+fn main() {
+    let g = pasgal::graph::gen::web(14, 23, 0x5D); // SD-like crawl
+    let gt = g.transpose();
+    println!("web crawl: n={} m={}", g.n(), g.m());
+
+    // PASGAL SCC vs baselines, cross-checked.
+    let mut tr_vgc = AlgoTrace::new();
+    let (vgc, t_vgc) = time_once(|| scc::vgc_scc(&g, Some(&gt), 512, 42, Some(&mut tr_vgc)));
+    let mut tr_bgss = AlgoTrace::new();
+    let (bgss, t_bgss) = time_once(|| scc::bgss_scc(&g, Some(&gt), 42, Some(&mut tr_bgss)));
+    let (tarjan, t_tarjan) = time_once(|| scc::tarjan_scc(&g));
+    assert_eq!(
+        scc::canonicalize(&vgc),
+        scc::canonicalize(&tarjan),
+        "vgc_scc disagrees with Tarjan"
+    );
+    assert_eq!(
+        scc::canonicalize(&bgss),
+        scc::canonicalize(&tarjan),
+        "bgss_scc disagrees with Tarjan"
+    );
+    println!(
+        "PASGAL {} ({} rounds) | GBBS-like {} ({} rounds) | Tarjan {}",
+        fmt_duration(t_vgc),
+        tr_vgc.num_rounds(),
+        fmt_duration(t_bgss),
+        tr_bgss.num_rounds(),
+        fmt_duration(t_tarjan),
+    );
+
+    // Bow-tie decomposition: CORE (largest SCC), IN (reaches CORE),
+    // OUT (reached from CORE), TENDRILS (rest).
+    let mut sizes = std::collections::HashMap::new();
+    for &l in &vgc {
+        *sizes.entry(l).or_insert(0usize) += 1;
+    }
+    let (&core_label, &core_size) = sizes.iter().max_by_key(|&(_, &s)| s).unwrap();
+    let core_members: Vec<u32> = (0..g.n() as u32)
+        .filter(|&v| vgc[v as usize] == core_label)
+        .collect();
+    let seed = core_members[0];
+
+    let reach_fwd = reach_set(&g, seed);
+    let reach_bwd = reach_set(&gt, seed);
+    let mut in_c = 0usize;
+    let mut out_c = 0usize;
+    let mut tendril = 0usize;
+    for v in 0..g.n() {
+        let in_core = vgc[v] == core_label;
+        if in_core {
+            continue;
+        }
+        match (reach_bwd[v], reach_fwd[v]) {
+            (true, false) => in_c += 1,
+            (false, true) => out_c += 1,
+            _ => tendril += 1,
+        }
+    }
+    println!("bow-tie structure (Broder et al. shape):");
+    println!("  CORE     {core_size:>8}  ({:.1}%)", pct(core_size, g.n()));
+    println!("  IN       {in_c:>8}  ({:.1}%)", pct(in_c, g.n()));
+    println!("  OUT      {out_c:>8}  ({:.1}%)", pct(out_c, g.n()));
+    println!("  TENDRILS {tendril:>8}  ({:.1}%)", pct(tendril, g.n()));
+    println!("  #SCCs    {:>8}", sizes.len());
+
+    // SCC size distribution tail.
+    let mut dist: Vec<usize> = sizes.values().copied().collect();
+    dist.sort_unstable_by(|a, b| b.cmp(a));
+    println!(
+        "largest SCCs: {:?}",
+        &dist[..dist.len().min(8)]
+    );
+}
+
+fn pct(a: usize, b: usize) -> f64 {
+    100.0 * a as f64 / b as f64
+}
+
+/// Simple sequential reachability (example-local helper).
+fn reach_set(g: &pasgal::graph::Graph, src: u32) -> Vec<bool> {
+    let mut seen = vec![false; g.n()];
+    let mut stack = vec![src];
+    seen[src as usize] = true;
+    while let Some(u) = stack.pop() {
+        for &w in g.neighbors(u) {
+            if !seen[w as usize] {
+                seen[w as usize] = true;
+                stack.push(w);
+            }
+        }
+    }
+    seen
+}

@@ -1,0 +1,102 @@
+"""AOT bridge: lower the L2 graphs to HLO *text* for the Rust runtime.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+    relax_t{T}_s{S}_h{H}.hlo.txt   multi-hop relaxation artifacts
+    closure_t{T}.hlo.txt           tile APSP closure artifacts
+    manifest.txt                   line-based manifest the Rust side
+                                   parses (no JSON: no serde offline)
+
+Usage: python -m compile.aot [--out-dir DIR]
+Idempotent: skips artifacts whose file already exists unless --force.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (tile, sources, hops) configurations compiled for the Rust hot path.
+# t64/h64 gives full intra-tile closure for the dense-block local
+# search; t128/h16 is the cheaper "advance a few hops" variant the
+# coordinator uses when the block is only a waypoint.
+RELAX_CONFIGS = [
+    (64, 4, 64),
+    (64, 4, 8),
+    (128, 4, 16),
+]
+CLOSURE_TILES = [64, 128]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_relax(t, s, hops) -> str:
+    spec_adj = jax.ShapeDtypeStruct((t, t), jax.numpy.float32)
+    spec_dist = jax.ShapeDtypeStruct((t, s), jax.numpy.float32)
+    fn = functools.partial(model.relax_block, hops=hops)
+    return to_hlo_text(jax.jit(fn).lower(spec_adj, spec_dist))
+
+
+def lower_closure(t) -> str:
+    spec_adj = jax.ShapeDtypeStruct((t, t), jax.numpy.float32)
+    return to_hlo_text(jax.jit(model.tile_closure).lower(spec_adj))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: ignored, use --out-dir")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        # Makefile compat: `--out ../artifacts/model.hlo.txt`.
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_lines = []
+
+    def emit(name, kind, text, **meta):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"artifact {name}")
+        manifest_lines.append(f"file {fname}")
+        manifest_lines.append(f"kind {kind}")
+        for k, v in meta.items():
+            manifest_lines.append(f"{k} {v}")
+        manifest_lines.append("")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for t, s, h in RELAX_CONFIGS:
+        name = f"relax_t{t}_s{s}_h{h}"
+        emit(name, "relax", lower_relax(t, s, h), tile=t, sources=s, hops=h)
+
+    for t in CLOSURE_TILES:
+        name = f"closure_t{t}"
+        emit(name, "closure", lower_closure(t), tile=t)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

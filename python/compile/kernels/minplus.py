@@ -1,0 +1,131 @@
+"""L1 Pallas kernels: tropical (min, +) semiring primitives.
+
+These are the dense hot-spot of the PASGAL reproduction. The paper's
+vertical granularity control (VGC) performs a multi-hop *local search*
+per scheduled task to amortize scheduling overhead; on a TPU the same
+insight becomes "advance many hops per kernel launch": a k-hop
+relaxation over a dense adjacency tile is k iterations of a min-plus
+mat-vec, kept entirely inside one Pallas kernel so the intermediate
+distance vectors live in VMEM and never round-trip to HBM.
+
+Kernels
+-------
+minplus_matmul(a, b)
+    C[i, j] = min_k (A[i, k] + B[k, j]) with BlockSpec tiling over an
+    (i, j, k) grid and min-accumulation across the contraction axis.
+    Used for batched tile-to-tile distance composition (block APSP).
+
+multihop_relax(adj, dist, hops=...)
+    dist'[v, s] = min over walks of length <= hops from v of
+    (path weight + dist[end, s]), i.e. `hops` iterations of
+    d <- min(d, A (min,+) d). Single-block kernel: the adjacency tile
+    and the distance panel are staged to VMEM once, the hop loop runs
+    on-chip. This is VGC-as-a-kernel.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); real-TPU characteristics are estimated in DESIGN.md.
+
+Infinity convention: float32 with INF = 1e18 (absorbing enough that
+INF + INF stays finite in f32 and min() recovers reachability).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 1.0e18
+
+# ---------------------------------------------------------------------------
+# minplus_matmul: tiled (min, +) matrix product
+# ---------------------------------------------------------------------------
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] = min(o[i,j], minplus(a[i,k], b[k,j]))."""
+    k = pl.program_id(2)
+
+    # (bm, bk, bn) broadcasted tropical product of the two VMEM tiles.
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+    prod = jnp.min(a[:, :, None] + b[None, :, :], axis=1)  # (bm, bn)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = prod
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] = jnp.minimum(o_ref[...], prod)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def minplus_matmul(a, b, *, block=None):
+    """Tropical matmul C = A (min,+) B for square f32 matrices.
+
+    `block` selects the VMEM tile edge; defaults to min(n, 128). The
+    contraction axis is the innermost grid dimension so each output
+    tile is revisited with min-accumulation (classic MXU-style
+    schedule, with min replacing add).
+    """
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bs = block or min(128, n, m, k)
+    assert n % bs == 0 and m % bs == 0 and k % bs == 0, (
+        f"dims {(n, k, m)} must be multiples of block {bs}"
+    )
+    grid = (n // bs, m // bs, k // bs)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bs), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bs, bs), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bs, bs), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# multihop_relax: k-hop Bellman-Ford relaxation inside one kernel
+# ---------------------------------------------------------------------------
+
+
+def _relax_kernel(adj_ref, dist_ref, o_ref, *, hops):
+    """Run `hops` rounds of d <- min(d, A (min,+) d) fully in VMEM.
+
+    adj_ref:  (t, t) tile, adj[u, v] = w(u -> v) or INF.
+    dist_ref: (t, s) panel of per-source tentative distances.
+    """
+    adj = adj_ref[...]
+    dist = dist_ref[...]
+
+    def body(_, d):
+        # relax[u, s] = min_v adj[u, v] + d[v, s]
+        relaxed = jnp.min(adj[:, :, None] + d[None, :, :], axis=1)
+        return jnp.minimum(d, relaxed)
+
+    o_ref[...] = jax.lax.fori_loop(0, hops, body, dist)
+
+
+@functools.partial(jax.jit, static_argnames=("hops",))
+def multihop_relax(adj, dist, *, hops):
+    """`hops`-hop tropical relaxation of a distance panel over one tile.
+
+    Single-block pallas_call: the whole (t, t) adjacency tile plus the
+    (t, s) distance panel are staged to VMEM once and the hop loop runs
+    on-chip — the kernel-level analog of PASGAL's vertical granularity
+    control (many hops per synchronization).
+    """
+    t, t2 = adj.shape
+    tv, s = dist.shape
+    assert t == t2 == tv, f"shape mismatch adj={adj.shape} dist={dist.shape}"
+    return pl.pallas_call(
+        functools.partial(_relax_kernel, hops=hops),
+        out_shape=jax.ShapeDtypeStruct((t, s), jnp.float32),
+        interpret=True,
+    )(adj, dist)

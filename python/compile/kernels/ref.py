@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the tropical-semiring kernels.
+
+These are the correctness references the Pallas kernels must match.
+Min-plus over f32 is exact for the integer-valued weights the graph
+layer feeds it, so tests can use tight tolerances.
+"""
+
+import jax.numpy as jnp
+
+INF = 1.0e18
+
+
+def minplus_matmul_ref(a, b):
+    """C[i, j] = min_k A[i, k] + B[k, j], materialized in one shot."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def multihop_relax_ref(adj, dist, hops):
+    """`hops` rounds of d <- min(d, A (min,+) d)."""
+    d = dist
+    for _ in range(hops):
+        relaxed = jnp.min(adj[:, :, None] + d[None, :, :], axis=1)
+        d = jnp.minimum(d, relaxed)
+    return d
+
+
+def closure_ref(adj):
+    """All-pairs shortest-path closure of one tile (repeated squaring)."""
+    n = adj.shape[0]
+    d = jnp.minimum(adj, jnp.where(jnp.eye(n, dtype=bool), 0.0, INF))
+    hops = 1
+    while hops < n:
+        d = jnp.minimum(d, minplus_matmul_ref(d, d))
+        hops *= 2
+    return d

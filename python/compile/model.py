@@ -1,0 +1,44 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Two entry points, both built on the L1 Pallas kernels:
+
+relax_block(adj, dist)
+    The dense VGC local search: HOPS iterations of tropical relaxation
+    of a multi-source distance panel over one adjacency tile. The hop
+    count is baked at lowering time (one artifact per (tile, sources,
+    hops) configuration) so the Rust hot path is a single
+    compile-once / execute-many call with no dynamic shapes.
+
+tile_closure(adj)
+    All-pairs shortest-path closure of one tile by log2(t) rounds of
+    tropical squaring (minplus_matmul on itself), used by the
+    coordinator to turn a dense community block into a distance oracle.
+
+Python runs only at build time; the lowered HLO text in artifacts/ is
+the interchange format (see aot.py for why text, not proto).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.minplus import INF, minplus_matmul, multihop_relax
+
+
+def relax_block(adj, dist, *, hops):
+    """`hops`-hop relaxation of dist (t, s) over the tile adj (t, t)."""
+    return multihop_relax(adj, dist, hops=hops)
+
+
+def tile_closure(adj, *, block=None):
+    """APSP closure of one tile via repeated tropical squaring.
+
+    ceil(log2(t)) minplus_matmul rounds; each round doubles the walk
+    length covered, so the result is exact shortest distances within
+    the tile.
+    """
+    t = adj.shape[0]
+    d = jnp.minimum(adj, jnp.where(jnp.eye(t, dtype=bool), 0.0, INF))
+    hops = 1
+    while hops < t:
+        d = jnp.minimum(d, minplus_matmul(d, d, block=block))
+        hops *= 2
+    return d

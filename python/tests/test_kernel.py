@@ -1,0 +1,187 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps tile sizes, source counts, hop counts, densities and
+weight ranges; every property asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.minplus import INF, minplus_matmul, multihop_relax
+from compile.kernels.ref import (
+    closure_ref,
+    minplus_matmul_ref,
+    multihop_relax_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_tile(rng, t, density=0.3, wmax=100.0):
+    """Random weighted adjacency tile with INF non-edges, zero diagonal."""
+    mask = rng.random((t, t)) < density
+    w = rng.integers(1, int(wmax), size=(t, t)).astype(np.float32)
+    adj = np.where(mask, w, np.float32(INF))
+    np.fill_diagonal(adj, 0.0)
+    return jnp.asarray(adj)
+
+
+def random_dist(rng, t, s, seeded=1):
+    """Distance panel: a few seeded zeros per source, INF elsewhere."""
+    d = np.full((t, s), INF, dtype=np.float32)
+    for j in range(s):
+        for v in rng.integers(0, t, size=seeded):
+            d[v, j] = 0.0
+    return jnp.asarray(d)
+
+
+# ---------------------------------------------------------------------------
+# minplus_matmul
+# ---------------------------------------------------------------------------
+
+
+class TestMinplusMatmul:
+    def test_identity(self):
+        n = 8
+        eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, INF).astype(jnp.float32)
+        a = random_tile(np.random.default_rng(0), n)
+        out = minplus_matmul(a, eye, block=4)
+        np.testing.assert_allclose(out, a, rtol=0, atol=0)
+
+    def test_matches_ref_single_block(self):
+        rng = np.random.default_rng(1)
+        a, b = random_tile(rng, 16), random_tile(rng, 16)
+        np.testing.assert_allclose(
+            minplus_matmul(a, b, block=16), minplus_matmul_ref(a, b)
+        )
+
+    def test_matches_ref_tiled_contraction(self):
+        # block < n exercises the min-accumulation across the k grid axis.
+        rng = np.random.default_rng(2)
+        a, b = random_tile(rng, 32), random_tile(rng, 32)
+        np.testing.assert_allclose(
+            minplus_matmul(a, b, block=8), minplus_matmul_ref(a, b)
+        )
+
+    def test_all_inf_inputs(self):
+        n = 8
+        a = jnp.full((n, n), INF, dtype=jnp.float32)
+        out = minplus_matmul(a, a, block=4)
+        # INF + INF then min: stays huge (>= INF), i.e. no spurious paths.
+        assert bool(jnp.all(out >= INF))
+
+    def test_triangle_inequality_on_closure_step(self):
+        rng = np.random.default_rng(3)
+        a = random_tile(rng, 16, density=0.5)
+        sq = minplus_matmul(a, a, block=8)
+        # One squaring never increases any distance that a 2-walk improves.
+        two_walk = minplus_matmul_ref(a, a)
+        np.testing.assert_allclose(sq, two_walk)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        t=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+        density=st.floats(0.05, 0.9),
+    )
+    def test_property_matches_ref(self, t, seed, density):
+        rng = np.random.default_rng(seed)
+        a = random_tile(rng, 2 * t, density=density)
+        b = random_tile(rng, 2 * t, density=density)
+        np.testing.assert_allclose(
+            minplus_matmul(a, b, block=t), minplus_matmul_ref(a, b)
+        )
+
+
+# ---------------------------------------------------------------------------
+# multihop_relax
+# ---------------------------------------------------------------------------
+
+
+class TestMultihopRelax:
+    def test_zero_hops_would_be_identity_one_hop_relaxes(self):
+        rng = np.random.default_rng(4)
+        adj = random_tile(rng, 8, density=0.5)
+        dist = random_dist(rng, 8, 2)
+        out = multihop_relax(adj, dist, hops=1)
+        np.testing.assert_allclose(out, multihop_relax_ref(adj, dist, 1))
+        # Relaxation is monotone non-increasing.
+        assert bool(jnp.all(out <= dist))
+
+    def test_matches_ref_multi_hop(self):
+        rng = np.random.default_rng(5)
+        adj = random_tile(rng, 16, density=0.2)
+        dist = random_dist(rng, 16, 4)
+        for hops in (2, 5, 16):
+            np.testing.assert_allclose(
+                multihop_relax(adj, dist, hops=hops),
+                multihop_relax_ref(adj, dist, hops),
+            )
+
+    def test_converges_to_tile_closure(self):
+        # t hops from a single-source seed == row of the APSP closure.
+        # Panel convention: adj[u, v] = w(v -> u), i.e. adj is the
+        # transpose of the usual adjacency, so compare vs closure(adj.T).
+        rng = np.random.default_rng(6)
+        t = 12
+        adj = random_tile(rng, t, density=0.3)
+        src = 3
+        dist = np.full((t, 1), INF, dtype=np.float32)
+        dist[src, 0] = 0.0
+        out = multihop_relax(adj, jnp.asarray(dist), hops=t)
+        closure = closure_ref(adj.T)
+        np.testing.assert_allclose(out[:, 0], closure[src, :], rtol=1e-6)
+
+    def test_unreachable_stays_inf(self):
+        t = 8
+        adj = jnp.where(jnp.eye(t, dtype=bool), 0.0, INF).astype(jnp.float32)
+        dist = np.full((t, 1), INF, dtype=np.float32)
+        dist[0, 0] = 0.0
+        out = multihop_relax(adj, jnp.asarray(dist), hops=t)
+        assert out[0, 0] == 0.0
+        assert bool(jnp.all(out[1:, 0] >= INF))
+
+    def test_hop_semantics_chain(self):
+        # Chain 0->1->2->...: after h hops exactly h+1 vertices reached.
+        t = 8
+        adj = np.full((t, t), INF, dtype=np.float32)
+        np.fill_diagonal(adj, 0.0)
+        for v in range(t - 1):
+            adj[v + 1, v] = 1.0  # adj[u, v] = w(v -> u) for d <- A d panels
+        dist = np.full((t, 1), INF, dtype=np.float32)
+        dist[0, 0] = 0.0
+        for h in (1, 3, 7):
+            out = np.asarray(multihop_relax(jnp.asarray(adj), jnp.asarray(dist), hops=h))
+            reached = (out[:, 0] < INF).sum()
+            assert reached == h + 1, (h, out[:, 0])
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        t=st.sampled_from([4, 8, 16, 32]),
+        s=st.sampled_from([1, 2, 4]),
+        hops=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_matches_ref(self, t, s, hops, seed):
+        rng = np.random.default_rng(seed)
+        adj = random_tile(rng, t, density=0.3)
+        dist = random_dist(rng, t, s, seeded=2)
+        np.testing.assert_allclose(
+            multihop_relax(adj, dist, hops=hops),
+            multihop_relax_ref(adj, dist, hops),
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_monotone_in_hops(self, seed):
+        rng = np.random.default_rng(seed)
+        adj = random_tile(rng, 16, density=0.25)
+        dist = random_dist(rng, 16, 2)
+        prev = dist
+        for hops in (1, 2, 4, 8):
+            cur = multihop_relax(adj, dist, hops=hops)
+            assert bool(jnp.all(cur <= prev + 1e-6))
+            prev = cur

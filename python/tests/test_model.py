@@ -1,0 +1,85 @@
+"""L2 model tests: shapes, closure semantics, and AOT lowering sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.minplus import INF
+from compile.kernels.ref import closure_ref
+from tests.test_kernel import random_dist, random_tile
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestRelaxBlock:
+    def test_shape_and_dtype(self):
+        rng = np.random.default_rng(0)
+        adj = random_tile(rng, 64)
+        dist = random_dist(rng, 64, 4)
+        out = model.relax_block(adj, dist, hops=8)
+        assert out.shape == (64, 4)
+        assert out.dtype == jnp.float32
+
+    def test_full_hops_reaches_closure(self):
+        rng = np.random.default_rng(1)
+        t = 16
+        adj = random_tile(rng, t, density=0.3)
+        # adj[u, v] = w(v -> u) panel convention: compare against the
+        # closure of the transposed tile.
+        dist = np.full((t, 1), INF, dtype=np.float32)
+        dist[5, 0] = 0.0
+        out = model.relax_block(adj, jnp.asarray(dist), hops=t)
+        closure = closure_ref(adj.T)
+        np.testing.assert_allclose(out[:, 0], closure[5, :], rtol=1e-6)
+
+
+class TestTileClosure:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(2)
+        adj = random_tile(rng, 16, density=0.4)
+        np.testing.assert_allclose(
+            model.tile_closure(adj, block=8), closure_ref(adj), rtol=1e-6
+        )
+
+    def test_diagonal_zero(self):
+        rng = np.random.default_rng(3)
+        adj = random_tile(rng, 8, density=0.3)
+        out = model.tile_closure(adj, block=4)
+        np.testing.assert_allclose(jnp.diag(out), jnp.zeros(8))
+
+    def test_idempotent(self):
+        # A closure is a fixed point of further squaring.
+        rng = np.random.default_rng(4)
+        adj = random_tile(rng, 8, density=0.5)
+        c = model.tile_closure(adj, block=4)
+        c2 = model.tile_closure(c, block=4)
+        np.testing.assert_allclose(c, c2, rtol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.1, 0.8))
+    def test_property_triangle_inequality(self, seed, density):
+        rng = np.random.default_rng(seed)
+        adj = random_tile(rng, 8, density=density)
+        c = np.asarray(model.tile_closure(adj, block=4))
+        # c[i,k] + c[k,j] >= c[i,j] for all triples (spot-check a slice).
+        lhs = c[:, :, None] + c[None, :, :]
+        assert (lhs.min(axis=1) >= c - 1e-3).all()
+
+
+class TestAotLowering:
+    def test_relax_lowering_has_expected_signature(self):
+        from compile.aot import lower_relax
+
+        text = lower_relax(16, 2, 4)
+        assert "f32[16,16]" in text
+        assert "f32[16,2]" in text
+        assert "ENTRY" in text
+
+    def test_closure_lowering_has_expected_signature(self):
+        from compile.aot import lower_closure
+
+        text = lower_closure(16)
+        assert "f32[16,16]" in text
+        assert "ENTRY" in text

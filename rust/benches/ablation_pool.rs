@@ -1,0 +1,69 @@
+//! Scheduler microbenchmarks: the raw numbers behind the simulator's
+//! cost model (`pasgal calibrate` re-derives them; this prints the
+//! full breakdown and the per-structure costs).
+
+use pasgal::bench::{bench, Table};
+use pasgal::parallel::{join, parallel_for, pool};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn main() {
+    let pool = pool::global();
+    println!("pool: {} worker thread(s)", pool.threads());
+
+    let mut t = Table::new(&["micro", "mean", "per-unit"]);
+
+    // join overhead (empty both sides)
+    let reps = 200_000;
+    let s = bench(3, || {
+        for _ in 0..reps {
+            join(|| {}, || {});
+        }
+    });
+    t.row(vec![
+        "join(empty, empty)".into(),
+        format!("{:?}", s.mean),
+        format!("{:.0} ns/join", s.mean.as_nanos() as f64 / reps as f64),
+    ]);
+
+    // parallel_for spawn cost at grain 1
+    let tasks = 100_000;
+    let sink = AtomicUsize::new(0);
+    let s = bench(3, || {
+        parallel_for(0, tasks, 1, |i| {
+            sink.fetch_add(i, Ordering::Relaxed);
+        });
+    });
+    t.row(vec![
+        format!("parallel_for {tasks} tasks, grain 1"),
+        format!("{:?}", s.mean),
+        format!("{:.0} ns/task", s.mean.as_nanos() as f64 / tasks as f64),
+    ]);
+
+    // parallel_for with realistic grain
+    let s = bench(3, || {
+        parallel_for(0, tasks, 1024, |i| {
+            sink.fetch_add(i, Ordering::Relaxed);
+        });
+    });
+    t.row(vec![
+        format!("parallel_for {tasks} tasks, grain 1024"),
+        format!("{:?}", s.mean),
+        format!("{:.2} ns/iter", s.mean.as_nanos() as f64 / tasks as f64),
+    ]);
+
+    // barrier (one full fork-join round trip)
+    let rounds = 5_000;
+    let s = bench(3, || {
+        for _ in 0..rounds {
+            pool.run(|| std::hint::black_box(0));
+        }
+    });
+    t.row(vec![
+        "pool.run round trip".into(),
+        format!("{:?}", s.mean),
+        format!("{:.0} ns/round", s.mean.as_nanos() as f64 / rounds as f64),
+    ]);
+
+    println!("{}", t.render());
+    println!("steals so far: {}", pool.steal_count());
+}

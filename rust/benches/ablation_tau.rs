@@ -1,0 +1,55 @@
+//! Ablation A1: the VGC budget τ (DESIGN.md §4).
+//!
+//! Sweeps τ for VGC-BFS and VGC-SCC on one large-diameter (road) and
+//! one small-diameter (social) graph, reporting measured 1-core time,
+//! synchronized-round count, and simulated 192-processor speedup.
+//! The paper's claim: larger τ collapses rounds on large-diameter
+//! graphs (until extra re-visits dominate), while small-diameter
+//! graphs are insensitive.
+
+use pasgal::algo::{bfs, scc};
+use pasgal::bench::{fmt_duration, suite::SIM_P, time_once, Table};
+use pasgal::graph::gen;
+use pasgal::sim::{makespan, AlgoTrace, CostModel};
+
+fn main() {
+    let model = CostModel::default();
+    let taus = [1usize, 16, 64, 256, 1024, 4096];
+    let graphs = [
+        ("road (large-D)", gen::road(100, 300, 0xAF)),
+        ("social (small-D)", gen::social(13, 14, 0x17)),
+    ];
+    for (name, g) in &graphs {
+        println!("=== VGC-BFS τ sweep on {name}: n={} m={} ===", g.n(), g.m());
+        let mut t = Table::new(&["tau", "t1core", "rounds", format!("sim{SIM_P} speedup").as_str()]);
+        for &tau in &taus {
+            let mut tr = AlgoTrace::new();
+            let (_, d) = time_once(|| bfs::vgc_bfs(g, 0, tau, Some(&mut tr)));
+            let sim = makespan(&tr, &model, SIM_P);
+            let seq = model.seq_time(g.n() as u64, g.m() as u64);
+            t.row(vec![
+                tau.to_string(),
+                fmt_duration(d),
+                tr.num_rounds().to_string(),
+                format!("{:.2}x", seq / sim),
+            ]);
+        }
+        println!("{}", t.render());
+
+        println!("=== VGC-SCC τ sweep on {name} ===");
+        let mut t = Table::new(&["tau", "t1core", "rounds", format!("sim{SIM_P} speedup").as_str()]);
+        for &tau in &taus {
+            let mut tr = AlgoTrace::new();
+            let (_, d) = time_once(|| scc::vgc_scc(g, None, tau, 42, Some(&mut tr)));
+            let sim = makespan(&tr, &model, SIM_P);
+            let seq = model.seq_time(g.n() as u64, g.m() as u64);
+            t.row(vec![
+                tau.to_string(),
+                fmt_duration(d),
+                tr.num_rounds().to_string(),
+                format!("{:.2}x", seq / sim),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig1_scc_scalability` — regenerates the paper artifact.
+//! Scale via PASGAL_SCALE=tiny|small|medium (default tiny).
+fn main() {
+    let scale = pasgal::bench::suite::env_scale();
+    println!("{}", pasgal::bench::suite::fig1_scc_scalability(scale));
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench table4_scc` — regenerates the paper artifact.
+//! Scale via PASGAL_SCALE=tiny|small|medium (default tiny).
+fn main() {
+    let scale = pasgal::bench::suite::env_scale();
+    println!("{}", pasgal::bench::suite::table4_scc(scale));
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench table5_bfs` — regenerates the paper artifact.
+//! Scale via PASGAL_SCALE=tiny|small|medium (default tiny).
+fn main() {
+    let scale = pasgal::bench::suite::env_scale();
+    println!("{}", pasgal::bench::suite::table5_bfs(scale));
+}

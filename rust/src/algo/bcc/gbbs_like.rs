@@ -1,0 +1,106 @@
+//! GBBS-like BCC: Tarjan–Vishkin low/high over a **BFS spanning
+//! tree** (what GBBS [9] does). Correct and space-frugal, but the
+//! tree construction takes O(D) synchronized rounds — this is the
+//! Table 3 baseline that degrades on road/kNN/synthetic graphs.
+
+use super::skeleton::{run, BccResult, Mode};
+use super::tree::build_rooted_forest;
+use crate::graph::Graph;
+use crate::parallel::atomic::claim;
+use crate::parallel::parallel_for;
+use crate::sim::trace::{Recorder, TaskCost};
+use crate::V;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+const UNSET: u32 = u32::MAX;
+
+/// BFS spanning forest: one multi-source BFS seeded at every
+/// component root simultaneously (roots from a connectivity pass, as
+/// GBBS does), so the round count is the *maximum* component diameter
+/// — still the O(D) weakness, but not a sum over components.
+fn bfs_forest(g: &Graph, rec: &mut Recorder) -> Vec<(V, V)> {
+    let n = g.n();
+    let labels = crate::algo::cc::connected_components(g);
+    let parent: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNSET)).collect();
+    let mut frontier: Vec<V> =
+        crate::parallel::pack_index(n, |v| labels[v] == v as u32);
+    for &r in &frontier {
+        parent[r as usize].store(r, Ordering::Relaxed);
+    }
+    let mut forest: Vec<(V, V)> = Vec::with_capacity(n.saturating_sub(frontier.len()));
+    while !frontier.is_empty() {
+        let bag = crate::hashbag::HashBag::new(n);
+        {
+            let frontier_ref = &frontier;
+            let parent_ref = &parent;
+            let bag_ref = &bag;
+            parallel_for(0, frontier_ref.len(), 64, move |i| {
+                let v = frontier_ref[i];
+                for &w in g.neighbors(v) {
+                    if claim(&parent_ref[w as usize], UNSET, v) {
+                        bag_ref.insert(w);
+                    }
+                }
+            });
+        }
+        if let Some(trace) = rec.as_deref_mut() {
+            trace.push_round(
+                frontier
+                    .iter()
+                    .map(|&v| TaskCost {
+                        vertices: 1,
+                        edges: g.degree(v) as u64,
+                    })
+                    .collect(),
+            );
+        }
+        let next = bag.extract_and_clear();
+        forest.extend(
+            next.iter()
+                .map(|&w| (parent[w as usize].load(Ordering::Relaxed), w)),
+        );
+        frontier = next;
+    }
+    forest
+}
+
+/// GBBS-like BCC over a symmetric, deduplicated graph.
+pub fn gbbs_bcc(g: &Graph, mut rec: Recorder) -> BccResult {
+    let forest = bfs_forest(g, &mut rec);
+    let rf = build_rooted_forest(g.n(), &forest, rec.as_deref_mut());
+    run(g, &rf, Mode::Implicit, rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn two_triangles_share_articulation() {
+        let g = crate::graph::Graph::from_edges(
+            5,
+            &[(0, 1), (1, 2), (2, 0), (2, 3), (3, 4), (4, 2)],
+            true,
+        )
+        .symmetrize();
+        let r = gbbs_bcc(&g, None);
+        assert_eq!(r.n_bcc, 2);
+        assert!(r.articulation[2]);
+    }
+
+    #[test]
+    fn rounds_scale_with_diameter_unlike_fast_bcc() {
+        let long = gen::cycle(4096).symmetrize();
+        let mut t_gbbs = crate::sim::AlgoTrace::new();
+        let _ = gbbs_bcc(&long, Some(&mut t_gbbs));
+        let mut t_fast = crate::sim::AlgoTrace::new();
+        let _ = super::super::fast_bcc(&long, Some(&mut t_fast));
+        assert!(
+            t_gbbs.num_rounds() > 20 * t_fast.num_rounds(),
+            "BFS-tree rounds {} should dwarf FAST-BCC rounds {}",
+            t_gbbs.num_rounds(),
+            t_fast.num_rounds()
+        );
+    }
+}

@@ -1,0 +1,241 @@
+//! Sequential Hopcroft–Tarjan biconnected components [14] — the
+//! paper's sequential baseline and our correctness oracle.
+//!
+//! Iterative DFS with an explicit edge stack; pops a block whenever a
+//! child's lowpoint does not pass its parent. Inputs must be
+//! symmetric and deduplicated (what [`crate::graph::Graph::symmetrize`]
+//! produces); self-loops are ignored.
+
+use super::skeleton::{BccResult, NO_BCC};
+use crate::graph::Graph;
+use crate::V;
+
+const UNSET: u32 = u32::MAX;
+
+/// Arc index of (w -> u) given that (u -> w) exists — unique because
+/// the graph is deduplicated; neighbors are sorted by construction.
+fn twin(g: &Graph, u: V, w: V) -> usize {
+    let base = g.offsets[w as usize] as usize;
+    let nbrs = g.neighbors(w);
+    let i = nbrs.partition_point(|&x| x < u);
+    debug_assert!(nbrs[i] == u, "twin arc missing: graph not symmetric?");
+    base + i
+}
+
+/// Sequential BCC.
+pub fn hopcroft_tarjan(g: &Graph) -> BccResult {
+    let n = g.n();
+    let m = g.m();
+    let mut disc = vec![UNSET; n];
+    let mut low = vec![0u32; n];
+    let mut arc_label = vec![NO_BCC; m];
+    let mut articulation = vec![false; n];
+    let mut edge_stack: Vec<u32> = Vec::new(); // arc ids, canonical dir
+    let mut n_bcc = 0u32;
+    let mut timer = 0u32;
+
+    // Call frames: (vertex, parent, arc-to-parent twin, next edge i,
+    // #tree children).
+    struct Frame {
+        v: V,
+        parent: V,
+        skip_arc: u32, // the arc (v -> parent), skipped once
+        ei: usize,
+        children: u32,
+    }
+
+    for s in 0..n as V {
+        if disc[s as usize] != UNSET {
+            continue;
+        }
+        disc[s as usize] = timer;
+        low[s as usize] = timer;
+        timer += 1;
+        let mut stack = vec![Frame {
+            v: s,
+            parent: s,
+            skip_arc: u32::MAX,
+            ei: 0,
+            children: 0,
+        }];
+        while let Some(top) = stack.last_mut() {
+            let v = top.v;
+            let base = g.offsets[v as usize] as usize;
+            let nbrs = g.neighbors(v);
+            if top.ei < nbrs.len() {
+                let i = top.ei;
+                top.ei += 1;
+                let w = nbrs[i];
+                let arc = (base + i) as u32;
+                if w == v || arc == top.skip_arc {
+                    continue; // self-loop or the parent edge
+                }
+                if disc[w as usize] == UNSET {
+                    // Tree edge: push and descend.
+                    top.children += 1;
+                    edge_stack.push(arc);
+                    disc[w as usize] = timer;
+                    low[w as usize] = timer;
+                    timer += 1;
+                    let skip = twin(g, v, w) as u32;
+                    stack.push(Frame {
+                        v: w,
+                        parent: v,
+                        skip_arc: skip,
+                        ei: 0,
+                        children: 0,
+                    });
+                } else if disc[w as usize] < disc[v as usize] {
+                    // Back edge (to an ancestor): stack it.
+                    edge_stack.push(arc);
+                    low[v as usize] = low[v as usize].min(disc[w as usize]);
+                }
+                // disc[w] > disc[v]: the edge was stacked from w's side.
+            } else {
+                // Retreat from v into parent u.
+                let frame = stack.pop().unwrap();
+                let (v, u) = (frame.v, frame.parent);
+                if v == u {
+                    // Component root done; leftover (shouldn't happen:
+                    // every pushed edge pops with some block).
+                    debug_assert!(edge_stack.is_empty());
+                    // Root articulation: >= 2 tree children.
+                    if frame.children >= 2 {
+                        articulation[v as usize] = true;
+                    }
+                    continue;
+                }
+                low[u as usize] = low[u as usize].min(low[v as usize]);
+                if low[v as usize] >= disc[u as usize] {
+                    // Pop one block: all edges until (u, v) inclusive.
+                    let stop_arc = {
+                        // the tree arc (u -> v) pushed at descent
+                        let ub = g.offsets[u as usize] as usize;
+                        let i = g.neighbors(u).partition_point(|&x| x < v);
+                        (ub + i) as u32
+                    };
+                    let comp = n_bcc;
+                    n_bcc += 1;
+                    loop {
+                        let arc = edge_stack.pop().expect("edge stack underflow");
+                        let a = arc as usize;
+                        arc_label[a] = comp;
+                        // label the twin too
+                        let (au, aw) = arc_endpoints(g, a);
+                        arc_label[twin(g, au, aw)] = comp;
+                        if arc == stop_arc {
+                            break;
+                        }
+                    }
+                    // u separates this block (unless u is the root:
+                    // handled via child count on retreat).
+                    let u_frame = stack.last().unwrap();
+                    if u_frame.parent != u_frame.v {
+                        articulation[u as usize] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    BccResult {
+        arc_label,
+        n_bcc: n_bcc as usize,
+        articulation,
+        aux_bytes: 0,
+    }
+}
+
+/// (source, target) of a CSR arc index.
+fn arc_endpoints(g: &Graph, arc: usize) -> (V, V) {
+    // binary search the offsets for the source vertex
+    let u = match g.offsets.binary_search(&(arc as u64)) {
+        Ok(mut i) => {
+            // offsets may repeat for degree-0 vertices: take the last
+            // vertex whose slice starts here
+            while i + 1 < g.offsets.len() && g.offsets[i + 1] == arc as u64 {
+                i += 1;
+            }
+            i
+        }
+        Err(i) => i - 1,
+    };
+    (u as V, g.targets[arc])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn blocks(g: &Graph) -> BccResult {
+        hopcroft_tarjan(g)
+    }
+
+    #[test]
+    fn triangle_is_one_block_no_articulation() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (2, 0)], true).symmetrize();
+        let r = blocks(&g);
+        assert_eq!(r.n_bcc, 1);
+        assert!(r.articulation.iter().all(|&a| !a));
+        assert!(r.arc_label.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn path_every_edge_own_block_inner_vertices_articulate() {
+        let g = gen::path(5).symmetrize();
+        let r = blocks(&g);
+        assert_eq!(r.n_bcc, 4);
+        assert_eq!(r.articulation, vec![false, true, true, true, false]);
+    }
+
+    #[test]
+    fn two_triangles_sharing_a_vertex() {
+        // 0-1-2-0 and 2-3-4-2; vertex 2 articulates.
+        let g = Graph::from_edges(
+            5,
+            &[(0, 1), (1, 2), (2, 0), (2, 3), (3, 4), (4, 2)],
+            true,
+        )
+        .symmetrize();
+        let r = blocks(&g);
+        assert_eq!(r.n_bcc, 2);
+        assert_eq!(r.articulation, vec![false, false, true, false, false]);
+    }
+
+    #[test]
+    fn bubbles_one_block_per_bubble() {
+        let nb = 7;
+        let g = gen::bubbles(nb, 5, 1);
+        let r = blocks(&g);
+        // each bubble is a cycle (+ maybe a chord): one block each
+        assert_eq!(r.n_bcc, nb);
+    }
+
+    #[test]
+    fn star_center_articulates() {
+        let g = gen::star(6).symmetrize();
+        let r = blocks(&g);
+        assert_eq!(r.n_bcc, 5);
+        assert!(r.articulation[0]);
+        assert!(!r.articulation[1]);
+    }
+
+    #[test]
+    fn twin_arcs_share_labels() {
+        let g = gen::road(6, 9, 2).symmetrize();
+        let r = blocks(&g);
+        for u in 0..g.n() as V {
+            let base = g.offsets[u as usize] as usize;
+            for (i, &w) in g.neighbors(u).iter().enumerate() {
+                if w == u {
+                    continue;
+                }
+                let tw = twin(&g, u, w);
+                assert_eq!(r.arc_label[base + i], r.arc_label[tw]);
+            }
+        }
+    }
+
+    use crate::graph::Graph;
+}

@@ -1,0 +1,121 @@
+//! Biconnected components: the Table 3 contenders.
+//!
+//! * [`hopcroft_tarjan::hopcroft_tarjan`] — sequential baseline [14].
+//! * [`tarjan_vishkin::tarjan_vishkin`] — parallel, explicit aux graph
+//!   (O(m) space: the "o.o.m." baseline) [22].
+//! * [`gbbs_like::gbbs_bcc`] — BFS-spanning-tree variant (O(D)
+//!   rounds: the round-bound baseline) [9].
+//! * [`fast_bcc::fast_bcc`] — PASGAL's FAST-BCC [12]: CC spanning
+//!   tree + implicit skeleton: no BFS, O(n) aux space, polylog span.
+//!
+//! All four produce per-arc block labels, articulation flags and a
+//! block count; cross-tests verify the *edge partitions* match the
+//! sequential oracle exactly.
+
+pub mod fast_bcc;
+pub mod gbbs_like;
+pub mod hopcroft_tarjan;
+pub mod skeleton;
+pub mod tarjan_vishkin;
+pub mod tree;
+
+pub use fast_bcc::fast_bcc;
+pub use gbbs_like::gbbs_bcc;
+pub use hopcroft_tarjan::hopcroft_tarjan;
+pub use skeleton::{BccResult, NO_BCC};
+pub use tarjan_vishkin::tarjan_vishkin;
+
+/// Canonicalize an arc labeling: each label class renamed to the
+/// smallest arc index it contains. Two labelings describe the same
+/// edge partition iff their canonical forms are equal.
+pub fn canonicalize_arcs(labels: &[u32]) -> Vec<u32> {
+    let mut min_of = std::collections::HashMap::<u32, u32>::new();
+    for (i, &l) in labels.iter().enumerate() {
+        if l == NO_BCC {
+            continue;
+        }
+        let e = min_of.entry(l).or_insert(i as u32);
+        if (i as u32) < *e {
+            *e = i as u32;
+        }
+    }
+    labels
+        .iter()
+        .map(|&l| if l == NO_BCC { NO_BCC } else { min_of[&l] })
+        .collect()
+}
+
+#[cfg(test)]
+mod cross_tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::Graph;
+    use crate::prop::{forall, Rng};
+    use crate::V;
+
+    fn check_all(g: &Graph) {
+        assert!(g.symmetric, "BCC inputs are symmetrized");
+        let want = hopcroft_tarjan(g);
+        let want_arcs = canonicalize_arcs(&want.arc_label);
+        for (name, got) in [
+            ("tarjan_vishkin", tarjan_vishkin(g, None)),
+            ("gbbs_bcc", gbbs_bcc(g, None)),
+            ("fast_bcc", fast_bcc(g, None)),
+        ] {
+            assert_eq!(got.n_bcc, want.n_bcc, "{name}: block count");
+            assert_eq!(
+                canonicalize_arcs(&got.arc_label),
+                want_arcs,
+                "{name}: edge partition"
+            );
+            assert_eq!(got.articulation, want.articulation, "{name}: articulation");
+        }
+    }
+
+    #[test]
+    fn all_agree_on_named_shapes() {
+        check_all(&gen::path(30).symmetrize());
+        check_all(&gen::cycle(30).symmetrize());
+        check_all(&gen::star(20).symmetrize());
+        check_all(&gen::complete(10).symmetrize());
+        check_all(&gen::bubbles(8, 5, 3));
+        check_all(&gen::grid(5, 7).symmetrize());
+    }
+
+    #[test]
+    fn all_agree_on_suite_categories() {
+        check_all(&gen::social(9, 6, 3).symmetrize());
+        check_all(&gen::road(7, 11, 4).symmetrize());
+        check_all(&gen::traces(40, 5, 5));
+        check_all(&gen::knn_chain(400, 3, 6, 6).symmetrize());
+    }
+
+    #[test]
+    fn prop_all_agree_on_random_graphs() {
+        forall(0xBCC, |rng: &mut Rng| {
+            let n = rng.range(2, 120);
+            let m = rng.range(0, 3 * n);
+            let edges: Vec<(V, V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+                .collect();
+            let g = Graph::from_edges(n, &edges, true).symmetrize();
+            check_all(&g);
+        });
+    }
+
+    #[test]
+    fn prop_sparse_tree_like_graphs() {
+        // Trees + a few extra edges: lots of bridges + articulation.
+        forall(0xBCD, |rng: &mut Rng| {
+            let n = rng.range(2, 150);
+            let mut edges: Vec<(V, V)> = (1..n)
+                .map(|v| (rng.range(0, v) as V, v as V))
+                .collect();
+            for _ in 0..rng.range(0, 5) {
+                edges.push((rng.below(n as u64) as V, rng.below(n as u64) as V));
+            }
+            let g = Graph::from_edges(n, &edges, true).symmetrize();
+            check_all(&g);
+        });
+    }
+}

@@ -1,0 +1,268 @@
+//! Shared BCC skeleton: Tarjan–Vishkin auxiliary-graph connectivity
+//! over a rooted spanning forest.
+//!
+//! Nodes of the auxiliary graph are the non-root vertices (vertex v
+//! stands for its parent tree edge). Two rules generate aux edges:
+//!
+//! * **Rule A** (cross edges): a non-tree edge {u, v} with neither
+//!   endpoint an ancestor of the other puts e_u and e_v on a common
+//!   cycle (through their LCA): union(u, v).
+//! * **Rule B** (chaining): tree edge (p, v) joins e_v with e_p iff
+//!   some edge from subtree(v) *escapes* subtree(p) — computed from
+//!   subtree min/max of neighbor entry times via segment-tree range
+//!   queries (the low/high of Tarjan–Vishkin, cross-edge-safe).
+//!
+//! Back edges (ancestor-related non-tree edges) need no rule: the
+//! chain of Rule B unions along the tree path covers their cycle, and
+//! the fence at the top child stops exactly below the ancestor — this
+//! is what keeps two blocks that share an articulation vertex apart.
+//!
+//! The connected components of the aux graph are the biconnected
+//! components. [`Mode::Explicit`] materializes the aux edge list
+//! (Tarjan–Vishkin's O(m) space — the paper's o.o.m. column);
+//! [`Mode::Implicit`] unions on the fly in O(n) extra space
+//! (FAST-BCC's space discipline).
+
+use super::tree::{RootedForest, SegTree};
+use crate::algo::cc::UnionFind;
+use crate::graph::Graph;
+use crate::parallel::parallel_for;
+use crate::sim::trace::{Recorder, TaskCost};
+use crate::V;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+
+/// No-label sentinel (self-loops).
+pub const NO_BCC: u32 = u32::MAX;
+
+/// Aux-graph materialization strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Materialize the aux edge list (O(m) space).
+    Explicit,
+    /// Union on the fly (O(n) space).
+    Implicit,
+}
+
+/// BCC output shared by all implementations.
+pub struct BccResult {
+    /// Per-CSR-arc BCC label (`NO_BCC` for self-loops). Arcs (u,v)
+    /// and (v,u) always agree.
+    pub arc_label: Vec<u32>,
+    /// Number of biconnected components.
+    pub n_bcc: usize,
+    /// Per-vertex articulation flags.
+    pub articulation: Vec<bool>,
+    /// Peak auxiliary bytes beyond the input graph (the Table 3
+    /// space story: O(m) for Tarjan–Vishkin vs O(n) for FAST-BCC).
+    pub aux_bytes: usize,
+}
+
+/// Run the skeleton over `g` (symmetric, deduplicated) and its rooted
+/// spanning forest.
+pub fn run(g: &Graph, rf: &RootedForest, mode: Mode, mut rec: Recorder) -> BccResult {
+    let n = g.n();
+    let m = g.m();
+
+    // --- per-vertex neighbor-entry-time extremes (self excluded) ---
+    // nf[v] = min(first(v), min first(w) over non-tree neighbors w)
+    // xf[v] = max(...). Tree edges to parent/children are excluded:
+    // they never witness an escape (parent edge handled by Rule B
+    // itself; child edges stay inside the subtree).
+    let is_tree_arc = |u: V, w: V| rf.parent[w as usize] == u || rf.parent[u as usize] == w;
+    let mut nf = vec![u64::MAX; n];
+    let mut xf = vec![0u64; n];
+    {
+        let nfp = crate::parallel::ops::SendPtr(nf.as_mut_ptr());
+        let xfp = crate::parallel::ops::SendPtr(xf.as_mut_ptr());
+        parallel_for(0, n, 512, move |v| unsafe {
+            let vf = rf.first[v];
+            let mut lo = vf;
+            let mut hi = vf;
+            for &w in g.neighbors(v as V) {
+                if w as usize == v || is_tree_arc(v as V, w) {
+                    continue;
+                }
+                let wf = rf.first[w as usize];
+                lo = lo.min(wf);
+                hi = hi.max(wf);
+            }
+            *nfp.add(v) = lo;
+            *xfp.add(v) = hi;
+        });
+    }
+    if let Some(trace) = rec.as_deref_mut() {
+        trace.push_round(vec![TaskCost {
+            vertices: n as u64,
+            edges: m as u64,
+        }]);
+    }
+
+    // --- position-indexed arrays + segment trees ---
+    let pos_span = (0..n).map(|v| rf.first[v]).max().unwrap_or(0) as usize + 2;
+    let mut wmin = vec![u64::MAX; pos_span];
+    let mut wmax = vec![0u64; pos_span];
+    for v in 0..n {
+        let p = rf.first[v] as usize;
+        wmin[p] = nf[v];
+        wmax[p] = xf[v];
+    }
+    let seg_min = SegTree::<true>::build(&wmin);
+    let seg_max = SegTree::<false>::build(&wmax);
+
+    // Escape test: subtree(v) has an edge leaving subtree(parent(v)).
+    // Roots' last is huge so escapes never fire for root children.
+    let escape = |v: usize| -> bool {
+        let p = rf.parent[v] as usize;
+        if p == v {
+            return false;
+        }
+        // Clamp the query into the position array (root last is inf).
+        let hi = rf.last[v].min(pos_span as u64 - 1);
+        let w1 = seg_min.query(rf.first[v], hi);
+        let w2 = seg_max.query(rf.first[v], hi);
+        w1 < rf.first[p] || w2 > rf.last[p]
+    };
+
+    // --- auxiliary connectivity ---
+    let uf = UnionFind::new(n);
+    let mut aux_bytes = 0usize;
+    match mode {
+        Mode::Implicit => {
+            // Rule B.
+            parallel_for(0, n, 512, |v| {
+                if !rf.is_root(v as V) && escape(v) {
+                    uf.unite(v as u32, rf.parent[v]);
+                }
+            });
+            // Rule A.
+            parallel_for(0, n, 256, |u| {
+                for &w in g.neighbors(u as V) {
+                    let (u, w) = (u as V, w);
+                    if u >= w || w as usize == u as usize {
+                        continue; // each undirected edge once
+                    }
+                    if is_tree_arc(u, w) {
+                        continue;
+                    }
+                    if !rf.is_ancestor(u, w) && !rf.is_ancestor(w, u) {
+                        uf.unite(u, w);
+                    }
+                }
+            });
+            aux_bytes += n * 4; // the union-find parents
+        }
+        Mode::Explicit => {
+            // Materialize the aux edge list first (the O(m) cost).
+            let buckets: Vec<std::sync::Mutex<Vec<(V, V)>>> =
+                (0..n.div_ceil(256)).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+            crate::parallel::ops::parallel_for_chunks(0, n, 256, |ci, range| {
+                let mut local = Vec::new();
+                for v in range.clone() {
+                    if !rf.is_root(v as V) && escape(v) {
+                        local.push((v as V, rf.parent[v]));
+                    }
+                }
+                for u in range {
+                    for &w in g.neighbors(u as V) {
+                        let u = u as V;
+                        if u >= w {
+                            continue;
+                        }
+                        if is_tree_arc(u, w) {
+                            continue;
+                        }
+                        if !rf.is_ancestor(u, w) && !rf.is_ancestor(w, u) {
+                            local.push((u, w));
+                        }
+                    }
+                }
+                *buckets[ci].lock().unwrap() = local;
+            });
+            let mut aux_edges: Vec<(V, V)> = Vec::new();
+            for b in buckets {
+                aux_edges.extend(b.into_inner().unwrap());
+            }
+            aux_bytes += aux_edges.capacity() * std::mem::size_of::<(V, V)>() + n * 4;
+            parallel_for(0, aux_edges.len(), 1024, |i| {
+                let (u, v) = aux_edges[i];
+                uf.unite(u, v);
+            });
+        }
+    }
+    if let Some(trace) = rec.as_deref_mut() {
+        trace.push_round(vec![TaskCost {
+            vertices: n as u64,
+            edges: m as u64,
+        }]);
+    }
+
+    // --- labels per arc ---
+    let comp = uf.labels();
+    let mut arc_label = vec![NO_BCC; m];
+    {
+        let lp = crate::parallel::ops::SendPtr(arc_label.as_mut_ptr());
+        let comp = &comp;
+        parallel_for(0, n, 256, move |u| {
+            let base = g.offsets[u] as usize;
+            for (i, &w) in g.neighbors(u as V).iter().enumerate() {
+                let u = u as V;
+                if w == u {
+                    continue; // self-loop: no block
+                }
+                let label = if rf.parent[w as usize] == u {
+                    comp[w as usize]
+                } else if rf.parent[u as usize] == w {
+                    comp[u as usize]
+                } else if rf.is_ancestor(u, w) {
+                    comp[w as usize]
+                } else if rf.is_ancestor(w, u) {
+                    comp[u as usize]
+                } else {
+                    comp[u as usize]
+                };
+                unsafe { *lp.add(base + i) = label };
+            }
+        });
+    }
+
+    // --- articulation points ---
+    // A vertex articulates iff it belongs to >= 2 blocks. Non-root p
+    // belongs to comp(p) (its parent edge) plus comp(c) of every
+    // child c, so: exists child with comp(c) != comp(p). A root has
+    // no parent edge: >= 2 distinct comps among its children.
+    let art: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    let root_first_comp: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(NO_BCC)).collect();
+    parallel_for(0, n, 512, |v| {
+        let p = rf.parent[v] as usize;
+        if p == v {
+            return;
+        }
+        let c = comp[v];
+        if rf.is_root(p as V) {
+            let prev = root_first_comp[p]
+                .compare_exchange(NO_BCC, c, Ordering::AcqRel, Ordering::Relaxed);
+            if let Err(existing) = prev {
+                if existing != c {
+                    art[p].store(true, Ordering::Relaxed);
+                }
+            }
+        } else if c != comp[p] {
+            art[p].store(true, Ordering::Relaxed);
+        }
+    });
+
+    // --- count blocks ---
+    let mut distinct = std::collections::HashSet::new();
+    for v in 0..n {
+        if !rf.is_root(v as V) {
+            distinct.insert(comp[v]);
+        }
+    }
+
+    BccResult {
+        arc_label,
+        n_bcc: distinct.len(),
+        articulation: art.into_iter().map(|a| a.into_inner()).collect(),
+        aux_bytes,
+    }
+}

@@ -1,0 +1,50 @@
+//! Tarjan–Vishkin BCC [22] (implementation role: the O(m)-space
+//! baseline of Table 3).
+//!
+//! Spanning forest from parallel connectivity, Euler-tour rooting,
+//! then the auxiliary graph is **materialized** as an explicit edge
+//! list before running connectivity on it — asymptotically fine
+//! (O(n+m) work, polylog span) but the O(m) auxiliary space is what
+//! makes it blow up on the paper's billion-edge graphs ("o.o.m." in
+//! Table 3). `BccResult::aux_bytes` reports that footprint.
+
+use super::skeleton::{run, BccResult, Mode};
+use super::tree::build_rooted_forest;
+use crate::algo::cc::spanning_forest;
+use crate::graph::Graph;
+use crate::sim::trace::Recorder;
+
+/// Parallel Tarjan–Vishkin BCC over a symmetric, deduplicated graph.
+pub fn tarjan_vishkin(g: &Graph, mut rec: Recorder) -> BccResult {
+    let (_labels, forest) = spanning_forest(g);
+    let rf = build_rooted_forest(g.n(), &forest, rec.as_deref_mut());
+    run(g, &rf, Mode::Explicit, rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn triangle_one_block() {
+        let g = crate::graph::Graph::from_edges(3, &[(0, 1), (1, 2), (2, 0)], true).symmetrize();
+        let r = tarjan_vishkin(&g, None);
+        assert_eq!(r.n_bcc, 1);
+        assert!(r.arc_label.iter().all(|&l| l == r.arc_label[0]));
+    }
+
+    #[test]
+    fn aux_bytes_scale_with_m() {
+        let small = gen::bubbles(10, 5, 1);
+        let big = gen::bubbles(100, 5, 1);
+        let rs = tarjan_vishkin(&small, None);
+        let rb = tarjan_vishkin(&big, None);
+        assert!(
+            rb.aux_bytes > 3 * rs.aux_bytes,
+            "explicit aux edges must grow with the graph: {} vs {}",
+            rs.aux_bytes,
+            rb.aux_bytes
+        );
+    }
+}

@@ -1,0 +1,480 @@
+//! Rooted-forest machinery for parallel BCC: Euler tours, parallel
+//! list ranking (Wyllie), first/last interval labels, and
+//! segment-tree range-min/max for subtree aggregates.
+//!
+//! This is the substrate shared by all three parallel BCC variants:
+//! given a spanning forest (from parallel CC or from BFS), it roots
+//! every tree *without* a sequential DFS — the Euler circuit is built
+//! arc-locally and positions come from pointer-jumping list ranking,
+//! so the span stays polylogarithmic regardless of tree depth (a
+//! chain-shaped tree would kill any DFS/BFS-based numbering).
+
+use crate::parallel::parallel_for;
+use crate::sim::trace::{Recorder, TaskCost};
+use crate::V;
+
+const NIL: u32 = u32::MAX;
+
+/// A rooted spanning forest with Euler-interval labels.
+pub struct RootedForest {
+    /// parent\[v\] (== v for roots and isolated vertices).
+    pub parent: Vec<V>,
+    /// Entry time: unique within a component; subtree(v) = vertices u
+    /// with first\[v\] <= first\[u\] <= last\[v\]. Comparisons are only
+    /// meaningful within one component.
+    pub first: Vec<u64>,
+    /// Exit time (see `first`).
+    pub last: Vec<u64>,
+}
+
+impl RootedForest {
+    #[inline]
+    pub fn is_root(&self, v: V) -> bool {
+        self.parent[v as usize] == v
+    }
+
+    /// Is `u` an ancestor of `v` (or equal), same component assumed.
+    #[inline]
+    pub fn is_ancestor(&self, u: V, v: V) -> bool {
+        self.first[u as usize] <= self.first[v as usize]
+            && self.first[v as usize] <= self.last[u as usize]
+    }
+}
+
+/// Build a rooted forest from an edge list (each edge once, any
+/// orientation). Roots are the minimum vertex id of each tree
+/// (matching `UnionFind`'s hook-by-min labels). `rec` receives the
+/// pointer-jumping rounds.
+pub fn build_rooted_forest(
+    n: usize,
+    forest_edges: &[(V, V)],
+    mut rec: Recorder,
+) -> RootedForest {
+    let t = forest_edges.len();
+    let n_arcs = 2 * t;
+    if t == 0 {
+        return RootedForest {
+            parent: (0..n as V).collect(),
+            first: (0..n as u64).collect(),
+            last: (0..n as u64).collect(),
+        };
+    }
+
+    // Arcs: 2k = (u -> v), 2k+1 = (v -> u); twin(a) = a ^ 1.
+    let src = |a: u32| -> V {
+        let (u, v) = forest_edges[(a >> 1) as usize];
+        if a & 1 == 0 {
+            u
+        } else {
+            v
+        }
+    };
+    let dst = |a: u32| -> V {
+        let (u, v) = forest_edges[(a >> 1) as usize];
+        if a & 1 == 0 {
+            v
+        } else {
+            u
+        }
+    };
+
+    // Bucket arc ids by source (counting sort: O(n + L), no
+    // comparisons — this sat on the BCC hot path, EXPERIMENTS.md
+    // §Perf).
+    let mut degree = vec![0usize; n];
+    for a in 0..n_arcs as u32 {
+        degree[src(a) as usize] += 1;
+    }
+    let mut starts = vec![0usize; n];
+    {
+        let mut acc = 0usize;
+        for v in 0..n {
+            starts[v] = acc;
+            acc += degree[v];
+        }
+    }
+    let mut order: Vec<u32> = vec![0; n_arcs];
+    {
+        let mut cursor = starts.clone();
+        for a in 0..n_arcs as u32 {
+            let v = src(a) as usize;
+            order[cursor[v]] = a;
+            cursor[v] += 1;
+        }
+    }
+    let order = order;
+    let starts = starts;
+    let degree = degree;
+    // Position of each arc within its source's slice.
+    let mut pos_of = vec![0u32; n_arcs];
+    {
+        let pp = crate::parallel::ops::SendPtr(pos_of.as_mut_ptr());
+        let order_ref = &order;
+        let starts_ref = &starts;
+        parallel_for(0, n_arcs, 4096, move |i| unsafe {
+            let a = order_ref[i];
+            *pp.add(a as usize) = (i - starts_ref[src(a) as usize]) as u32;
+        });
+    }
+
+    // Euler circuit successor: succ[a] = arc after twin(a) in
+    // dst(a)'s list (cyclic).
+    let mut succ = vec![NIL; n_arcs];
+    {
+        let sp = crate::parallel::ops::SendPtr(succ.as_mut_ptr());
+        let order_ref = &order;
+        let starts_ref = &starts;
+        let degree_ref = &degree;
+        let pos_ref = &pos_of;
+        parallel_for(0, n_arcs, 4096, move |ai| unsafe {
+            let a = ai as u32;
+            let tw = a ^ 1;
+            let v = dst(a) as usize; // == src(tw)
+            let d = degree_ref[v];
+            let next_pos = (pos_ref[tw as usize] as usize + 1) % d;
+            *sp.add(ai) = order_ref[starts_ref[v] + next_pos];
+        });
+    }
+
+    // Roots: min vertex per component. Find components by replaying
+    // the forest through union-find (cheap: t edges).
+    let uf = crate::algo::cc::UnionFind::new(n);
+    for &(u, v) in forest_edges {
+        uf.unite(u, v);
+    }
+    let comp = uf.labels(); // label = min vertex of component
+    // Component heads in increasing root order.
+    let mut roots: Vec<V> = (0..n as V)
+        .filter(|&v| comp[v as usize] == v && degree[v as usize] > 0)
+        .collect();
+    roots.sort_unstable();
+    // Break each circuit before its head arc and chain the lists.
+    let mut heads = Vec::with_capacity(roots.len());
+    for &r in &roots {
+        let head = order[starts[r as usize]];
+        // Arc x with succ[x] == head: twin of the last arc in r's list.
+        let last_arc = order[starts[r as usize] + degree[r as usize] - 1];
+        let x = last_arc ^ 1;
+        debug_assert_eq!(succ[x as usize], head);
+        succ[x as usize] = NIL; // temporarily: re-chain below
+        heads.push((head, x));
+    }
+    for i in 0..heads.len().saturating_sub(1) {
+        let (_, tail) = heads[i];
+        let (next_head, _) = heads[i + 1];
+        succ[tail as usize] = next_head;
+    }
+
+    // List ranking: pos[a] = index of arc a in the chained Euler
+    // order. Two engines with identical output and identical *modeled*
+    // round structure (the simulator always sees the O(log L)
+    // pointer-jumping rounds a real multicore run would execute):
+    //   - sequential walk (O(L)) when only one worker exists — the
+    //     classic granularity-control fallback;
+    //   - Wyllie pointer jumping (O(L log L) work, O(log L) rounds)
+    //     otherwise.
+    let total = n_arcs as u64;
+    let pos: Vec<u64> = if crate::parallel::num_threads() == 1 || n_arcs < (1 << 14) {
+        let mut pos = vec![0u64; n_arcs];
+        let mut p = 0u64;
+        let (head0, _) = heads[0];
+        let mut a = head0;
+        while a != NIL {
+            pos[a as usize] = p;
+            p += 1;
+            a = succ[a as usize];
+        }
+        debug_assert_eq!(p, total);
+        pos
+    } else {
+        // rank[a] = #arcs strictly after a.
+        let mut rank: Vec<u64> = succ
+            .iter()
+            .map(|&s| if s == NIL { 0 } else { 1 })
+            .collect();
+        let mut next = succ.clone();
+        let mut rank2 = rank.clone();
+        let mut next2 = next.clone();
+        loop {
+            let done = std::sync::atomic::AtomicBool::new(true);
+            {
+                let r2 = crate::parallel::ops::SendPtr(rank2.as_mut_ptr());
+                let n2 = crate::parallel::ops::SendPtr(next2.as_mut_ptr());
+                let rank_ref = &rank;
+                let next_ref = &next;
+                let done_ref = &done;
+                parallel_for(0, n_arcs, 2048, move |a| unsafe {
+                    let nx = next_ref[a];
+                    if nx == NIL {
+                        *r2.add(a) = rank_ref[a];
+                        *n2.add(a) = NIL;
+                    } else {
+                        done_ref.store(false, std::sync::atomic::Ordering::Relaxed);
+                        *r2.add(a) = rank_ref[a] + rank_ref[nx as usize];
+                        *n2.add(a) = next_ref[nx as usize];
+                    }
+                });
+            }
+            std::mem::swap(&mut rank, &mut rank2);
+            std::mem::swap(&mut next, &mut next2);
+            if done.load(std::sync::atomic::Ordering::Relaxed) {
+                break;
+            }
+        }
+        rank.iter().map(|&r| total - 1 - r).collect()
+    };
+    // Model the pointer-jumping rounds regardless of engine.
+    if let Some(trace) = rec.as_deref_mut() {
+        let rounds = (n_arcs.max(2) as f64).log2().ceil() as usize;
+        for _ in 0..rounds {
+            trace.push_round(vec![TaskCost {
+                vertices: (n_arcs / rounds.max(1)) as u64,
+                edges: n_arcs as u64,
+            }]);
+        }
+    }
+
+    // parent / first / last.
+    let mut parent: Vec<V> = (0..n as V).collect();
+    let mut first = vec![0u64; n];
+    let mut last = vec![0u64; n];
+    {
+        let pp = crate::parallel::ops::SendPtr(parent.as_mut_ptr());
+        let fp = crate::parallel::ops::SendPtr(first.as_mut_ptr());
+        let lp = crate::parallel::ops::SendPtr(last.as_mut_ptr());
+        let starts_ref = &starts;
+        let degree_ref = &degree;
+        let order_ref = &order;
+        let pos_ref = &pos;
+        let comp_ref = &comp;
+        parallel_for(0, n, 1024, move |v| unsafe {
+            let d = degree_ref[v];
+            if d == 0 {
+                // Isolated: unique interval beyond all arc positions.
+                *fp.add(v) = total + v as u64;
+                *lp.add(v) = total + v as u64;
+                return;
+            }
+            if comp_ref[v] == v as u32 {
+                // Root: spans its whole component; use its head arc's
+                // position for first and "infinity" for last (interval
+                // tests are intra-component only).
+                let head = order_ref[starts_ref[v]];
+                *fp.add(v) = pos_ref[head as usize];
+                *lp.add(v) = u64::MAX / 2;
+                return;
+            }
+            // parent arc = incoming arc (u -> v) with minimal position.
+            let mut best_arc = NIL;
+            let mut best_pos = u64::MAX;
+            for i in 0..d {
+                let out = order_ref[starts_ref[v] + i];
+                let incoming = out ^ 1;
+                if pos_ref[incoming as usize] < best_pos {
+                    best_pos = pos_ref[incoming as usize];
+                    best_arc = incoming;
+                }
+            }
+            *pp.add(v) = src(best_arc);
+            *fp.add(v) = best_pos + 1;
+            *lp.add(v) = pos_ref[(best_arc ^ 1) as usize] + 1;
+        });
+    }
+    RootedForest {
+        parent,
+        first,
+        last,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Segment trees for subtree range-min / range-max queries
+// ---------------------------------------------------------------------------
+
+/// Static segment tree over u64 values (min or max by `MIN` flag).
+pub struct SegTree<const MIN: bool> {
+    size: usize,
+    tree: Vec<u64>,
+}
+
+impl<const MIN: bool> SegTree<MIN> {
+    const ID: u64 = if MIN { u64::MAX } else { 0 };
+
+    #[inline]
+    fn op(a: u64, b: u64) -> u64 {
+        if MIN {
+            a.min(b)
+        } else {
+            a.max(b)
+        }
+    }
+
+    /// Build over `values` (parallel bottom-up level by level).
+    pub fn build(values: &[u64]) -> Self {
+        let size = values.len().next_power_of_two().max(1);
+        let mut tree = vec![Self::ID; 2 * size];
+        tree[size..size + values.len()].copy_from_slice(values);
+        // levels bottom-up
+        let mut lo = size / 2;
+        while lo >= 1 {
+            let hi = lo * 2;
+            {
+                let tp = crate::parallel::ops::SendPtr(tree.as_mut_ptr());
+                parallel_for(lo, hi, 4096, |i| unsafe {
+                    let l = *tp.add(2 * i);
+                    let r = *tp.add(2 * i + 1);
+                    *tp.add(i) = Self::op(l, r);
+                });
+            }
+            lo /= 2;
+            if lo == 0 {
+                break;
+            }
+        }
+        SegTree { size, tree }
+    }
+
+    /// Aggregate over the inclusive index range [l, r].
+    pub fn query(&self, l: u64, r: u64) -> u64 {
+        let (mut l, mut r) = (
+            (l as usize).min(self.size - 1) + self.size,
+            (r as usize).min(self.size - 1) + self.size + 1,
+        );
+        let mut acc = Self::ID;
+        while l < r {
+            if l & 1 == 1 {
+                acc = Self::op(acc, self.tree[l]);
+                l += 1;
+            }
+            if r & 1 == 1 {
+                r -= 1;
+                acc = Self::op(acc, self.tree[r]);
+            }
+            l /= 2;
+            r /= 2;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn forest_for_path(n: usize) -> RootedForest {
+        let edges: Vec<(V, V)> = (0..n - 1).map(|i| (i as V, (i + 1) as V)).collect();
+        build_rooted_forest(n, &edges, None)
+    }
+
+    #[test]
+    fn path_parents_point_down_from_root_zero() {
+        let f = forest_for_path(6);
+        assert!(f.is_root(0));
+        for v in 1..6u32 {
+            assert_eq!(f.parent[v as usize], v - 1);
+        }
+    }
+
+    #[test]
+    fn path_intervals_nest() {
+        let f = forest_for_path(8);
+        for v in 0..8u32 {
+            for u in 0..8u32 {
+                let anc = f.is_ancestor(v, u);
+                assert_eq!(anc, v <= u, "ancestor({v},{u})");
+            }
+        }
+    }
+
+    #[test]
+    fn star_all_children_of_center() {
+        let edges: Vec<(V, V)> = (1..7).map(|i| (0, i as V)).collect();
+        let f = build_rooted_forest(7, &edges, None);
+        assert!(f.is_root(0));
+        for v in 1..7u32 {
+            assert_eq!(f.parent[v as usize], 0);
+            assert!(f.is_ancestor(0, v));
+            assert!(!f.is_ancestor(v, 0));
+            for u in 1..7u32 {
+                if u != v {
+                    assert!(!f.is_ancestor(v, u), "{v} anc of {u}?");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_component_forest() {
+        // Two trees: {0-1-2} and {5-6}, isolated 3, 4.
+        let edges = vec![(0, 1), (1, 2), (5, 6)];
+        let f = build_rooted_forest(7, &edges, None);
+        assert!(f.is_root(0));
+        assert!(f.is_root(5));
+        assert!(f.is_root(3) && f.is_root(4));
+        assert_eq!(f.parent[6], 5);
+        assert!(f.is_ancestor(0, 2));
+        assert!(f.is_ancestor(5, 6));
+    }
+
+    #[test]
+    fn binary_tree_subtree_intervals() {
+        //        0
+        //      1   2
+        //     3 4 5 6
+        let edges = vec![(0, 1), (0, 2), (1, 3), (1, 4), (2, 5), (2, 6)];
+        let f = build_rooted_forest(7, &edges, None);
+        assert!(f.is_ancestor(1, 3) && f.is_ancestor(1, 4));
+        assert!(!f.is_ancestor(1, 5) && !f.is_ancestor(1, 2));
+        assert!(f.is_ancestor(2, 6));
+        assert!(f.is_ancestor(0, 6));
+    }
+
+    #[test]
+    fn random_tree_parent_edges_are_forest_edges() {
+        use crate::prop::{forall, Rng};
+        forall(0x7EE, |rng: &mut Rng| {
+            let n = rng.range(2, 200);
+            // random spanning tree: attach v to a random earlier vertex
+            let edges: Vec<(V, V)> = (1..n)
+                .map(|v| (rng.range(0, v) as V, v as V))
+                .collect();
+            let f = build_rooted_forest(n, &edges, None);
+            let set: std::collections::HashSet<(V, V)> = edges
+                .iter()
+                .flat_map(|&(a, b)| [(a, b), (b, a)])
+                .collect();
+            assert!(f.is_root(0));
+            for v in 1..n as u32 {
+                assert!(
+                    set.contains(&(f.parent[v as usize], v)),
+                    "parent edge missing"
+                );
+                assert!(f.is_ancestor(0, v));
+            }
+            // interval containment is a partial order consistent with
+            // parent pointers
+            for v in 1..n as u32 {
+                assert!(f.is_ancestor(f.parent[v as usize], v));
+            }
+        });
+    }
+
+    #[test]
+    fn segtree_min_max_match_naive() {
+        use crate::prop::{forall, Rng};
+        forall(0x5E6, |rng: &mut Rng| {
+            let n = rng.range(1, 300);
+            let vals: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+            let mn = SegTree::<true>::build(&vals);
+            let mx = SegTree::<false>::build(&vals);
+            for _ in 0..20 {
+                let l = rng.range(0, n);
+                let r = rng.range(l, n);
+                let want_min = vals[l..=r.min(n - 1)].iter().copied().min().unwrap();
+                let want_max = vals[l..=r.min(n - 1)].iter().copied().max().unwrap();
+                assert_eq!(mn.query(l as u64, r as u64), want_min);
+                assert_eq!(mx.query(l as u64, r as u64), want_max);
+            }
+        });
+    }
+}

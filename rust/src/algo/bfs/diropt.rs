@@ -1,0 +1,173 @@
+//! GAPBS-like direction-optimizing BFS (Beamer, Asanović, Patterson
+//! [4]).
+//!
+//! Top-down rounds process the frontier sparsely (like
+//! `frontier_bfs`); when the frontier's out-edge count grows past
+//! m/ALPHA the round flips to bottom-up: every unvisited vertex scans
+//! its *in*-neighbors for a frontier member and claims itself. On
+//! low-diameter graphs this skips the huge mid-BFS frontiers — the
+//! optimization that makes parallel BFS superlinear on social
+//! networks. On large-diameter graphs frontiers never get dense, the
+//! heuristic never fires, and the O(D)-round cost remains — exactly
+//! the contrast the paper draws.
+
+use crate::algo::UNREACHED;
+use crate::graph::Graph;
+use crate::parallel::atomic::claim;
+use crate::parallel::{pack_index, parallel_for};
+use crate::sim::trace::{Recorder, RoundSlots, TaskCost};
+use crate::V;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// GAPBS defaults.
+const ALPHA: usize = 15;
+const BETA: usize = 18;
+
+/// Hop distances from `src`. `gt` supplies in-neighbors for directed
+/// graphs (pass `Some(&g)` for symmetric ones); without it the
+/// algorithm stays top-down (still correct).
+pub fn diropt_bfs(g: &Graph, gt: Option<&Graph>, src: V, mut rec: Recorder) -> Vec<u32> {
+    let n = g.n();
+    let m = g.m();
+    let mut dist = vec![UNREACHED; n];
+    if n == 0 {
+        return dist;
+    }
+    dist[src as usize] = 0;
+    let dist_at: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(&mut dist);
+    let gt = gt.or(if g.symmetric { Some(g) } else { None });
+
+    // Frontier as sparse list + dense flag array (flags always kept in
+    // sync so either representation can be used next round).
+    let flags: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    flags[src as usize].store(1, Ordering::Relaxed);
+    let mut frontier: Vec<V> = vec![src];
+    let mut level: u32 = 0;
+
+    while !frontier.is_empty() {
+        let frontier_edges: usize = frontier.iter().map(|&v| g.degree(v)).sum();
+        let dense = gt.is_some() && frontier_edges > m / ALPHA && frontier.len() > n / (BETA * 4);
+
+        // Clear current flags lazily after each round: we instead use
+        // level-stamps — flag[v] = level+1 when v entered frontier at
+        // `level`. Membership test: flag[v] == level (+1 offset).
+        if dense {
+            let gt = gt.unwrap();
+            // Bottom-up: every unvisited vertex looks back.
+            let nchunks = n.div_ceil(1024);
+            let slots = RoundSlots::new(nchunks);
+            let edges_scanned = AtomicU64::new(0);
+            crate::parallel::ops::parallel_for_chunks(0, n, 1024, |ci, range| {
+                let mut scanned = 0u64;
+                let mut visited = 0u64;
+                for v in range {
+                    if dist_at[v].load(Ordering::Relaxed) != UNREACHED {
+                        continue;
+                    }
+                    visited += 1;
+                    for &u in gt.neighbors(v as V) {
+                        scanned += 1;
+                        if flags[u as usize].load(Ordering::Relaxed) == level + 1 {
+                            dist_at[v].store(level + 1, Ordering::Relaxed);
+                            flags[v].store(level + 2, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                }
+                slots.set(
+                    ci,
+                    TaskCost {
+                        vertices: visited,
+                        edges: scanned,
+                    },
+                );
+                edges_scanned.fetch_add(scanned, Ordering::Relaxed);
+            });
+            if let Some(trace) = rec.as_deref_mut() {
+                trace.push_round(slots.into_round());
+            }
+            frontier = pack_index(n, |v| flags[v].load(Ordering::Relaxed) == level + 2)
+                .into_iter()
+                .collect();
+        } else {
+            // Top-down sparse round.
+            let mut offs: Vec<usize> = frontier.iter().map(|&v| g.degree(v)).collect();
+            let total = crate::parallel::scan_inplace(&mut offs);
+            let mut out: Vec<u32> = vec![UNREACHED; total];
+            {
+                let op = crate::parallel::ops::SendPtr(out.as_mut_ptr());
+                let frontier_ref = &frontier;
+                let offs_ref = &offs;
+                let flags_ref = &flags;
+                parallel_for(0, frontier_ref.len(), 64, move |i| {
+                    let v = frontier_ref[i];
+                    let base = offs_ref[i];
+                    for (j, &w) in g.neighbors(v).iter().enumerate() {
+                        if claim(&dist_at[w as usize], UNREACHED, level + 1) {
+                            flags_ref[w as usize].store(level + 2, Ordering::Relaxed);
+                            unsafe { *op.add(base + j) = w };
+                        }
+                    }
+                });
+            }
+            if let Some(trace) = rec.as_deref_mut() {
+                trace.push_round(
+                    frontier
+                        .iter()
+                        .map(|&v| TaskCost {
+                            vertices: 1,
+                            edges: g.degree(v) as u64,
+                        })
+                        .collect(),
+                );
+            }
+            frontier = crate::parallel::pack(&out, |i| out[i] != UNREACHED);
+        }
+        level += 1;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::bfs::seq_bfs;
+    use crate::graph::gen;
+
+    #[test]
+    fn matches_seq_on_dense_social() {
+        // Dense enough to trigger bottom-up rounds.
+        let g = gen::social(11, 30, 7).symmetrize();
+        let got = diropt_bfs(&g, Some(&g), 0, None);
+        assert_eq!(got, seq_bfs(&g, 0));
+    }
+
+    #[test]
+    fn directed_graph_with_transpose() {
+        let g = gen::web(10, 20, 3);
+        let gt = g.transpose();
+        let got = diropt_bfs(&g, Some(&gt), 1, None);
+        assert_eq!(got, seq_bfs(&g, 1));
+    }
+
+    #[test]
+    fn no_transpose_falls_back_to_topdown() {
+        let g = gen::web(9, 12, 5);
+        assert_eq!(diropt_bfs(&g, None, 2, None), seq_bfs(&g, 2));
+    }
+
+    #[test]
+    fn road_like_graph_stays_sparse_and_correct() {
+        let g = gen::road(12, 40, 11);
+        let got = diropt_bfs(&g, Some(&g), 0, None);
+        assert_eq!(got, seq_bfs(&g, 0));
+    }
+
+    #[test]
+    fn trace_rounds_match_levels_on_path() {
+        let g = gen::path(40).symmetrize();
+        let mut t = crate::sim::AlgoTrace::new();
+        let _ = diropt_bfs(&g, Some(&g), 0, Some(&mut t));
+        assert_eq!(t.num_rounds(), 40);
+    }
+}

@@ -1,0 +1,107 @@
+//! GBBS-like round-synchronous frontier BFS (sparse edge-map).
+//!
+//! The classic theoretically-efficient parallel BFS: each round
+//! processes the current frontier in parallel, claiming unvisited
+//! neighbors with a CAS and packing them into the next frontier.
+//! Exactly O(D) rounds with a global barrier each — the behaviour
+//! whose large-diameter cost PASGAL attacks.
+
+use crate::algo::UNREACHED;
+use crate::graph::Graph;
+use crate::parallel::atomic::claim;
+use crate::parallel::{pack, parallel_for};
+use crate::sim::trace::{Recorder, TaskCost};
+use crate::V;
+use std::sync::atomic::AtomicU32;
+
+/// Hop distances from `src` (parallel, round-synchronous).
+pub fn frontier_bfs(g: &Graph, src: V, mut rec: Recorder) -> Vec<u32> {
+    let n = g.n();
+    let mut dist = vec![UNREACHED; n];
+    if n == 0 {
+        return dist;
+    }
+    dist[src as usize] = 0;
+    let dist_at: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(&mut dist);
+    let mut frontier = vec![src];
+    let mut level: u32 = 0;
+
+    while !frontier.is_empty() {
+        // Sparse edge map: exclusive scan of frontier degrees gives
+        // each vertex a disjoint slice of the output buffer.
+        let mut offs: Vec<usize> = frontier.iter().map(|&v| g.degree(v)).collect();
+        let total = crate::parallel::scan_inplace(&mut offs);
+        let mut out: Vec<u32> = vec![UNREACHED; total];
+        {
+            let op = crate::parallel::ops::SendPtr(out.as_mut_ptr());
+            let frontier_ref = &frontier;
+            let offs_ref = &offs;
+            parallel_for(0, frontier_ref.len(), 64, move |i| {
+                let v = frontier_ref[i];
+                let base = offs_ref[i];
+                for (j, &w) in g.neighbors(v).iter().enumerate() {
+                    if claim(&dist_at[w as usize], UNREACHED, level + 1) {
+                        unsafe { *op.add(base + j) = w };
+                    }
+                }
+            });
+        }
+        if let Some(trace) = rec.as_deref_mut() {
+            // One task per frontier vertex: the natural unit the
+            // scheduler chunks (see sim::sched grouping).
+            trace.push_round(
+                frontier
+                    .iter()
+                    .map(|&v| TaskCost {
+                        vertices: 1,
+                        edges: g.degree(v) as u64,
+                    })
+                    .collect(),
+            );
+        }
+        frontier = pack(&out, |i| out[i] != UNREACHED);
+        level += 1;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::bfs::seq_bfs;
+    use crate::graph::gen;
+
+    #[test]
+    fn matches_seq_on_grid() {
+        let g = gen::grid(12, 30);
+        assert_eq!(frontier_bfs(&g, 0, None), seq_bfs(&g, 0));
+    }
+
+    #[test]
+    fn records_one_round_per_level() {
+        let g = gen::path(64);
+        let mut trace = crate::sim::AlgoTrace::new();
+        let d = frontier_bfs(&g, 0, Some(&mut trace));
+        assert_eq!(d[63], 63);
+        // 64 levels processed (last one expands no one but is a round).
+        assert_eq!(trace.num_rounds(), 64);
+        assert_eq!(trace.total().vertices, 64);
+        assert_eq!(trace.total().edges, 63);
+    }
+
+    #[test]
+    fn empty_graph_and_isolated_source() {
+        let g = gen::star(5); // directed star, leaves have out-degree 0
+        let d = frontier_bfs(&g, 3, None);
+        assert_eq!(d[3], 0);
+        assert_eq!(d[0], UNREACHED);
+    }
+
+    #[test]
+    fn handles_duplicate_discoveries() {
+        // Diamond: two paths to the same vertex in one round.
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)], false);
+        let d = frontier_bfs(&g, 0, None);
+        assert_eq!(d, vec![0, 1, 1, 2]);
+    }
+}

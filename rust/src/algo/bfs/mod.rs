@@ -1,0 +1,98 @@
+//! Breadth-first search: all four implementations compared in Table 5.
+//!
+//! * [`seq::seq_bfs`] — the standard queue-based sequential algorithm
+//!   (the paper's baseline, "Queue-based*").
+//! * [`frontier::frontier_bfs`] — GBBS-like round-synchronous sparse
+//!   edge-map: O(D) rounds, one barrier each.
+//! * [`diropt::diropt_bfs`] — GAPBS-like direction-optimizing BFS
+//!   (Beamer et al. [4]): switches between sparse top-down and dense
+//!   bottom-up rounds.
+//! * [`vgc::vgc_bfs`] — PASGAL's BFS: τ-budget VGC local searches,
+//!   multiple 2^i-distance frontiers backed by hash bags (§2.2).
+//!
+//! All return hop distances (`UNREACHED` = not reachable) and agree
+//! with `seq_bfs` on every graph — enforced by the cross-validation
+//! tests at the bottom.
+
+pub mod diropt;
+pub mod frontier;
+pub mod seq;
+pub mod vgc;
+
+pub use diropt::diropt_bfs;
+pub use frontier::frontier_bfs;
+pub use seq::seq_bfs;
+pub use vgc::vgc_bfs;
+
+#[cfg(test)]
+mod cross_tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::Graph;
+    use crate::prop::{forall, Rng};
+    use crate::V;
+
+    fn check_all(g: &Graph, src: V) {
+        let want = seq_bfs(g, src);
+        let f = frontier_bfs(g, src, None);
+        assert_eq!(f, want, "frontier_bfs mismatch");
+        let d = diropt_bfs(g, None, src, None);
+        assert_eq!(d, want, "diropt_bfs mismatch");
+        let v = vgc_bfs(g, src, 64, None);
+        assert_eq!(v, want, "vgc_bfs mismatch");
+        // τ=1 degenerates to plain frontier processing; still correct.
+        let v1 = vgc_bfs(g, src, 1, None);
+        assert_eq!(v1, want, "vgc_bfs tau=1 mismatch");
+    }
+
+    #[test]
+    fn all_agree_on_named_shapes() {
+        check_all(&gen::path(200), 0);
+        check_all(&gen::path(200), 199);
+        check_all(&gen::cycle(100), 5);
+        check_all(&gen::star(50).symmetrize(), 3);
+        check_all(&gen::grid(17, 23), 0);
+        check_all(&gen::complete(20), 7);
+        check_all(&gen::bubbles(12, 5, 3), 0);
+    }
+
+    #[test]
+    fn all_agree_on_suite_categories() {
+        check_all(&gen::social(10, 8, 1), 0);
+        check_all(&gen::road(15, 25, 2), 7);
+        check_all(&gen::knn_chain(3000, 4, 9, 3), 1500);
+        check_all(&gen::traces(60, 6, 4), 0);
+    }
+
+    #[test]
+    fn prop_all_agree_on_random_graphs() {
+        forall(0xBF5, |rng: &mut Rng| {
+            let n = rng.range(1, 250);
+            let m = rng.range(0, 4 * n);
+            let edges: Vec<(V, V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+                .collect();
+            let g = Graph::from_edges(n, &edges, true);
+            let src = rng.below(n as u64) as V;
+            check_all(&g, src);
+        });
+    }
+
+    #[test]
+    fn prop_symmetric_graphs_with_transpose_diropt() {
+        forall(0xBF6, |rng: &mut Rng| {
+            let n = rng.range(2, 200);
+            let m = rng.range(1, 3 * n);
+            let edges: Vec<(V, V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+                .collect();
+            let g = Graph::from_edges(n, &edges, true).symmetrize();
+            let src = rng.below(n as u64) as V;
+            let want = seq_bfs(&g, src);
+            // With an explicit transpose (== g for symmetric graphs),
+            // the dense path is exercised.
+            let got = diropt_bfs(&g, Some(&g), src, None);
+            assert_eq!(got, want);
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! The standard sequential queue-based BFS (Table 5's baseline).
+
+use crate::algo::UNREACHED;
+use crate::graph::Graph;
+use crate::V;
+use std::collections::VecDeque;
+
+/// Hop distances from `src`; `UNREACHED` where not reachable.
+pub fn seq_bfs(g: &Graph, src: V) -> Vec<u32> {
+    let n = g.n();
+    let mut dist = vec![UNREACHED; n];
+    if n == 0 {
+        return dist;
+    }
+    let mut q = VecDeque::new();
+    dist[src as usize] = 0;
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        let du = dist[u as usize];
+        for &v in g.neighbors(u) {
+            if dist[v as usize] == UNREACHED {
+                dist[v as usize] = du + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn path_distances_are_indices() {
+        let g = gen::path(10);
+        let d = seq_bfs(&g, 0);
+        for (i, &x) in d.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+
+    #[test]
+    fn unreachable_marked() {
+        let g = gen::path(10);
+        let d = seq_bfs(&g, 5);
+        assert_eq!(d[4], UNREACHED);
+        assert_eq!(d[5], 0);
+        assert_eq!(d[9], 4);
+    }
+
+    #[test]
+    fn grid_distance_is_manhattan() {
+        let g = gen::grid(5, 7);
+        let d = seq_bfs(&g, 0);
+        for r in 0..5 {
+            for c in 0..7 {
+                assert_eq!(d[r * 7 + c], (r + c) as u32);
+            }
+        }
+    }
+}

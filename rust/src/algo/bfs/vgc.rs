@@ -1,0 +1,263 @@
+//! PASGAL's BFS: vertical granularity control + multiple 2^i-distance
+//! frontiers backed by hash bags (paper §2.2).
+//!
+//! Each scheduled task seeds a τ-budget local search ([`local_search`])
+//! from a few frontier vertices and walks the graph in *relaxed*
+//! (non-BFS) order, claiming vertices with `write_min` on the hop
+//! distance. Because the walk may overshoot (a vertex's first claimed
+//! distance need not be its final one), a vertex can be visited more
+//! than once; the multi-frontier structure bounds that extra work:
+//! a claim `delta = d - cur` hops ahead of the current level lands in
+//! frontier bucket ⌊log2 delta⌋, so far-ahead (likely-stale) vertices
+//! are not expanded until the wavefront approaches them.
+//!
+//! One round = process current frontier with local searches + one
+//! bucket extraction — so the number of synchronized rounds drops from
+//! O(D) to roughly O(D/τ) on path-like graphs, the paper's headline
+//! mechanism.
+
+use crate::algo::UNREACHED;
+use crate::graph::Graph;
+use crate::hashbag::HashBag;
+use crate::parallel::atomic::write_min_u32;
+use crate::sim::trace::{Recorder, RoundSlots};
+use crate::V;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Number of exponential frontier buckets (covers deltas < 2^K).
+const K: usize = 8;
+
+/// Seeds per local-search task.
+const SEEDS: usize = 4;
+
+/// Hop window: a local search keeps walking while the tentative
+/// distance is within `cur + WINDOW`; farther discoveries go to the
+/// exponential buckets instead of being expanded now ("avoid visiting
+/// too many unready vertices", paper §2.2). Must stay below 2^K.
+const WINDOW: u32 = 64;
+
+#[inline]
+fn bucket(delta: u32) -> usize {
+    debug_assert!(delta >= 1);
+    (31 - delta.leading_zeros()).min(K as u32 - 1) as usize
+}
+
+/// Hop distances from `src` with VGC budget `tau`.
+pub fn vgc_bfs(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<u32> {
+    let n = g.n();
+    let mut dist = vec![UNREACHED; n];
+    if n == 0 {
+        return dist;
+    }
+    dist[src as usize] = 0;
+    let dist_at: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(&mut dist);
+    // expanded[v] = distance value v was last expanded with; a vertex
+    // qualifies for (re-)expansion whenever dist[v] < expanded[v].
+    let expanded: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNREACHED)).collect();
+    // A vertex may be claimed (and inserted) several times per round
+    // while its distance improves, so size by n + m, not n; chunks
+    // are allocated lazily so unused capacity costs nothing.
+    let bags: Vec<HashBag> = (0..K).map(|_| HashBag::new(n + g.m())).collect();
+
+    let mut cur: u32 = 0;
+    let mut frontier: Vec<V> = vec![src];
+    let tau = tau.max(1);
+    // Buckets 0..=B cover deltas within the hop window; higher buckets
+    // hold "unready" far-ahead discoveries.
+    let near = bucket(WINDOW);
+
+    loop {
+        if frontier.is_empty() {
+            // Gather the within-window buckets (one frontier round may
+            // advance up to WINDOW levels).
+            let mut candidates: Vec<V> = Vec::new();
+            for b in &bags[..=near] {
+                if !b.is_empty() {
+                    candidates.extend(b.extract_and_clear());
+                }
+            }
+            if candidates.is_empty() {
+                // Cascade: pull the first non-empty far bucket.
+                let Some(j) = bags.iter().position(|b| !b.is_empty()) else {
+                    break;
+                };
+                candidates = bags[j].extract_and_clear();
+            }
+            // Re-align `cur` to the smallest still-pending distance
+            // (it may even move backward: local searches overshoot and
+            // later corrections re-queue vertices below `cur`).
+            let mut min_d = UNREACHED;
+            for &v in &candidates {
+                let d = dist_at[v as usize].load(Ordering::Relaxed);
+                if d < expanded[v as usize].load(Ordering::Relaxed) && d < min_d {
+                    min_d = d;
+                }
+            }
+            if min_d == UNREACHED {
+                continue; // all stale; keep draining
+            }
+            cur = min_d;
+            for &v in &candidates {
+                let d = dist_at[v as usize].load(Ordering::Relaxed);
+                if d >= expanded[v as usize].load(Ordering::Relaxed) {
+                    continue; // stale entry: a newer claim handled it
+                }
+                let delta = d.saturating_sub(cur);
+                if delta <= WINDOW {
+                    frontier.push(v);
+                } else {
+                    bags[bucket(delta)].insert(v);
+                }
+            }
+            continue;
+        }
+
+        // Process the frontier with τ-budget local searches.
+        let ntasks = frontier.len().div_ceil(SEEDS);
+        let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
+        let record = rec.is_some();
+        {
+            let frontier_ref = &frontier;
+            let bags_ref = &bags;
+            let expanded_ref = &expanded;
+            let slots_ref = &slots;
+            crate::parallel::ops::parallel_for_chunks(
+                0,
+                frontier_ref.len(),
+                SEEDS,
+                move |ti, range| {
+                    // FIFO local search: processing the task-local
+                    // queue in discovery order keeps the walk close to
+                    // BFS order *within* the region, which bounds the
+                    // distance overestimates (and thus re-visits) that
+                    // a LIFO walk would cause on meshes.
+                    let mut queue: Vec<u32> = Vec::with_capacity(64);
+                    for i in range {
+                        queue.push(frontier_ref[i]);
+                    }
+                    let mut head = 0usize;
+                    let mut stats = crate::parallel::vgc::SearchStats::default();
+                    while head < queue.len() && (stats.vertices as usize) < tau {
+                        let v = queue[head];
+                        head += 1;
+                        stats.vertices += 1;
+                        let vd = dist_at[v as usize].load(Ordering::Relaxed);
+                        // Qualify: only expand if this distance hasn't
+                        // been expanded yet (one winner per value).
+                        let exp = expanded_ref[v as usize].load(Ordering::Relaxed);
+                        if vd >= exp
+                            || expanded_ref[v as usize]
+                                .compare_exchange(exp, vd, Ordering::AcqRel, Ordering::Relaxed)
+                                .is_err()
+                        {
+                            continue;
+                        }
+                        let nd = vd + 1;
+                        for &w in g.neighbors(v) {
+                            stats.edges += 1;
+                            if write_min_u32(&dist_at[w as usize], nd) {
+                                // `cur` may sit above nd after a
+                                // backward cascade: saturate.
+                                let delta = nd.saturating_sub(cur);
+                                if delta <= WINDOW {
+                                    queue.push(w);
+                                } else {
+                                    bags_ref[bucket(delta)].insert(w);
+                                }
+                            }
+                        }
+                    }
+                    // Budget exhausted: spill leftovers into buckets.
+                    for &w in &queue[head..] {
+                        let d = dist_at[w as usize].load(Ordering::Relaxed);
+                        if d < expanded_ref[w as usize].load(Ordering::Relaxed) {
+                            let delta = d.saturating_sub(cur).max(1);
+                            bags_ref[bucket(delta)].insert(w);
+                        }
+                    }
+                    if record {
+                        slots_ref.set(ti, stats.into());
+                    }
+                },
+            );
+        }
+        if let Some(trace) = rec.as_deref_mut() {
+            trace.push_round(slots.into_round());
+        }
+
+        // Next frontier: gathered from the buckets at the top of the
+        // loop (which also re-aligns `cur`).
+        frontier = Vec::new();
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::bfs::seq_bfs;
+    use crate::graph::gen;
+    use crate::prop::{forall, Rng};
+
+    #[test]
+    fn bucket_is_log2() {
+        assert_eq!(bucket(1), 0);
+        assert_eq!(bucket(2), 1);
+        assert_eq!(bucket(3), 1);
+        assert_eq!(bucket(4), 2);
+        assert_eq!(bucket(255), 7);
+        assert_eq!(bucket(1 << 20), K - 1);
+    }
+
+    #[test]
+    fn chain_uses_few_rounds_with_big_tau() {
+        let g = gen::path(4096);
+        let mut trace = crate::sim::AlgoTrace::new();
+        let d = vgc_bfs(&g, 0, 512, Some(&mut trace));
+        assert_eq!(d, seq_bfs(&g, 0));
+        // The whole point of VGC: rounds << D.
+        assert!(
+            trace.num_rounds() < 200,
+            "VGC should collapse 4096 levels into few rounds, got {}",
+            trace.num_rounds()
+        );
+    }
+
+    #[test]
+    fn tau_one_matches_frontier_behaviour() {
+        let g = gen::grid(9, 13);
+        assert_eq!(vgc_bfs(&g, 0, 1, None), seq_bfs(&g, 0));
+    }
+
+    #[test]
+    fn revisits_fix_overestimates_on_mesh() {
+        // Grids force overshooting local searches to be corrected.
+        let g = gen::grid(31, 17);
+        for tau in [4usize, 32, 1024] {
+            assert_eq!(vgc_bfs(&g, 0, tau, None), seq_bfs(&g, 0), "tau={tau}");
+        }
+    }
+
+    #[test]
+    fn prop_matches_seq_on_random_graphs_various_tau() {
+        forall(0x76C, |rng: &mut Rng| {
+            let n = rng.range(1, 300);
+            let m = rng.range(0, 4 * n);
+            let edges: Vec<(crate::V, crate::V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as crate::V, rng.below(n as u64) as crate::V))
+                .collect();
+            let g = crate::graph::Graph::from_edges(n, &edges, true);
+            let src = rng.below(n as u64) as crate::V;
+            let tau = *rng.pick(&[1usize, 2, 7, 64, 100_000]);
+            assert_eq!(vgc_bfs(&g, src, tau, None), seq_bfs(&g, src));
+        });
+    }
+
+    #[test]
+    fn disconnected_unreached_stays_max() {
+        let g = gen::path(10); // directed: 5 can't reach 0..4
+        let d = vgc_bfs(&g, 5, 16, None);
+        assert_eq!(d[0], UNREACHED);
+        assert_eq!(d[9], 4);
+    }
+}

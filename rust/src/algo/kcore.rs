@@ -1,0 +1,286 @@
+//! k-core decomposition — the paper's §4 future-work extension
+//! ("we believe the techniques in current PASGAL can be extended to
+//! more problems, including k-core and other peeling algorithms").
+//!
+//! Coreness of v = largest k such that v belongs to a subgraph of
+//! minimum degree k. The classic parallel algorithm peels degree-<k
+//! vertices level by level — another round-synchronous frontier
+//! computation whose round count ("peeling complexity") can be huge
+//! on degenerate graphs, so the same hash-bag frontier machinery
+//! applies. We provide the sequential bucket algorithm
+//! (Matula–Beck / Batagelj–Zaveršnik) as the oracle and a parallel
+//! peeler over hash bags.
+
+use crate::graph::Graph;
+use crate::hashbag::HashBag;
+use crate::parallel::{pack_index, parallel_for};
+use crate::sim::trace::{Recorder, TaskCost};
+use crate::V;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Sequential O(n + m) bucket peeling (the oracle). Input must be
+/// symmetric; self-loops are ignored.
+pub fn seq_kcore(g: &Graph) -> Vec<u32> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut deg: Vec<u32> = (0..n as V)
+        .map(|v| {
+            g.neighbors(v).iter().filter(|&&w| w != v).count() as u32
+        })
+        .collect();
+    let maxd = deg.iter().copied().max().unwrap_or(0) as usize;
+    // Bucket sort vertices by degree.
+    let mut bucket_start = vec![0usize; maxd + 2];
+    for &d in &deg {
+        bucket_start[d as usize + 1] += 1;
+    }
+    for i in 1..bucket_start.len() {
+        bucket_start[i] += bucket_start[i - 1];
+    }
+    let mut pos = vec![0usize; n];
+    let mut order = vec![0 as V; n];
+    {
+        let mut cursor = bucket_start.clone();
+        for v in 0..n {
+            let d = deg[v] as usize;
+            pos[v] = cursor[d];
+            order[cursor[d]] = v as V;
+            cursor[d] += 1;
+        }
+    }
+    let mut core = vec![0u32; n];
+    let mut bucket_cursor = bucket_start.clone();
+    for i in 0..n {
+        let v = order[i];
+        core[v as usize] = deg[v as usize];
+        for &w in g.neighbors(v) {
+            let w = w as usize;
+            if deg[w] > deg[v as usize] {
+                // Move w one bucket down (swap with the first vertex
+                // of its current bucket).
+                let dw = deg[w] as usize;
+                let pw = pos[w];
+                let first = bucket_cursor[dw].max(i + 1);
+                let u = order[first];
+                order.swap(pw, first);
+                pos[w] = first;
+                pos[u as usize] = pw;
+                bucket_cursor[dw] = first + 1;
+                deg[w] -= 1;
+            }
+        }
+        // Advance cursor past processed vertex.
+        let dv = core[v as usize] as usize;
+        bucket_cursor[dv] = bucket_cursor[dv].max(i + 1);
+    }
+    core
+}
+
+/// Parallel peeling with hash-bag frontiers: peel all vertices of
+/// degree <= k simultaneously, round by round, incrementing k when the
+/// k-frontier drains. Records one trace round per peel wave.
+pub fn par_kcore(g: &Graph, mut rec: Recorder) -> Vec<u32> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let deg: Vec<AtomicU32> = (0..n as V)
+        .map(|v| {
+            AtomicU32::new(g.neighbors(v).iter().filter(|&&w| w != v).count() as u32)
+        })
+        .collect();
+    let core: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+    let mut remaining = n;
+    let mut k = 0u32;
+    while remaining > 0 {
+        // Frontier: unpeeled vertices with degree <= k.
+        let mut frontier: Vec<V> = pack_index(n, |v| {
+            core[v].load(Ordering::Relaxed) == u32::MAX
+                && deg[v].load(Ordering::Relaxed) <= k
+        });
+        // Claim them (avoids double peeling across waves).
+        frontier.retain(|&v| {
+            core[v as usize]
+                .compare_exchange(u32::MAX, k, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+        });
+        if frontier.is_empty() {
+            k += 1;
+            continue;
+        }
+        while !frontier.is_empty() {
+            remaining -= frontier.len();
+            let bag = HashBag::new(n);
+            {
+                let frontier_ref = &frontier;
+                let bag_ref = &bag;
+                let deg_ref = &deg;
+                let core_ref = &core;
+                parallel_for(0, frontier_ref.len(), 64, move |i| {
+                    let v = frontier_ref[i];
+                    for &w in g.neighbors(v) {
+                        if w == v || core_ref[w as usize].load(Ordering::Relaxed) != u32::MAX
+                        {
+                            continue;
+                        }
+                        // Decrement; if w sinks to <= k, peel it now.
+                        let old = deg_ref[w as usize].fetch_sub(1, Ordering::Relaxed);
+                        if old.saturating_sub(1) <= k
+                            && core_ref[w as usize]
+                                .compare_exchange(
+                                    u32::MAX,
+                                    k,
+                                    Ordering::AcqRel,
+                                    Ordering::Relaxed,
+                                )
+                                .is_ok()
+                        {
+                            bag_ref.insert(w);
+                        }
+                    }
+                });
+            }
+            if let Some(trace) = rec.as_deref_mut() {
+                trace.push_round(
+                    frontier
+                        .iter()
+                        .map(|&v| TaskCost {
+                            vertices: 1,
+                            edges: g.degree(v) as u64,
+                        })
+                        .collect(),
+                );
+            }
+            frontier = bag.extract_and_clear();
+        }
+        k += 1;
+    }
+    core.into_iter().map(|c| c.into_inner()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::prop::{forall, Rng};
+
+    #[test]
+    fn path_is_1_core_endpoints_too() {
+        let g = gen::path(6).symmetrize();
+        let c = seq_kcore(&g);
+        assert_eq!(c, vec![1, 1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn clique_is_k_minus_1_core() {
+        let g = gen::complete(6).symmetrize();
+        let c = seq_kcore(&g);
+        assert!(c.iter().all(|&x| x == 5));
+    }
+
+    #[test]
+    fn star_center_core_1() {
+        let g = gen::star(10).symmetrize();
+        let c = seq_kcore(&g);
+        assert!(c.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn clique_with_tail() {
+        // K4 on {0,1,2,3} plus tail 3-4-5: tail coreness 1, clique 3.
+        let mut edges = vec![(3u32, 4u32), (4, 5)];
+        for u in 0..4u32 {
+            for v in (u + 1)..4 {
+                edges.push((u, v));
+            }
+        }
+        let g = crate::graph::Graph::from_edges(6, &edges, true).symmetrize();
+        let c = seq_kcore(&g);
+        assert_eq!(c, vec![3, 3, 3, 3, 1, 1]);
+    }
+
+    #[test]
+    fn par_matches_seq_on_shapes() {
+        for g in [
+            gen::bubbles(10, 6, 1),
+            gen::social(10, 8, 2).symmetrize(),
+            gen::road(10, 14, 3).symmetrize(),
+            gen::grid(6, 9).symmetrize(),
+        ] {
+            assert_eq!(par_kcore(&g, None), seq_kcore(&g), "mismatch");
+        }
+    }
+
+    /// Definition-level oracle: core[v] >= k iff v survives
+    /// iterated removal of degree-<k vertices.
+    fn brute_kcore(g: &crate::graph::Graph) -> Vec<u32> {
+        let n = g.n();
+        let mut core = vec![0u32; n];
+        let maxd = (0..n as V).map(|v| g.degree(v)).max().unwrap_or(0) as u32;
+        for k in 1..=maxd {
+            let mut alive = vec![true; n];
+            loop {
+                let mut changed = false;
+                for v in 0..n as V {
+                    if !alive[v as usize] {
+                        continue;
+                    }
+                    let d = g
+                        .neighbors(v)
+                        .iter()
+                        .filter(|&&w| w != v && alive[w as usize])
+                        .count() as u32;
+                    if d < k {
+                        alive[v as usize] = false;
+                        changed = true;
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+            for v in 0..n {
+                if alive[v] {
+                    core[v] = k;
+                }
+            }
+        }
+        core
+    }
+
+    #[test]
+    fn prop_par_and_seq_match_definition() {
+        forall(0xC04E, |rng: &mut Rng| {
+            let n = rng.range(1, 80);
+            let m = rng.range(0, 4 * n);
+            let edges: Vec<(V, V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+                .collect();
+            let g = crate::graph::Graph::from_edges(n, &edges, true).symmetrize();
+            let want = brute_kcore(&g);
+            assert_eq!(seq_kcore(&g), want, "seq vs definition");
+            assert_eq!(par_kcore(&g, None), want, "par vs definition");
+        });
+    }
+
+    #[test]
+    fn coreness_is_monotone_under_edge_addition() {
+        forall(0xC04F, |rng: &mut Rng| {
+            let n = rng.range(3, 80);
+            let m = rng.range(1, 2 * n);
+            let mut edges: Vec<(V, V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+                .collect();
+            let g1 = crate::graph::Graph::from_edges(n, &edges, true).symmetrize();
+            let c1 = seq_kcore(&g1);
+            edges.push((rng.below(n as u64) as V, rng.below(n as u64) as V));
+            let g2 = crate::graph::Graph::from_edges(n, &edges, true).symmetrize();
+            let c2 = seq_kcore(&g2);
+            for v in 0..n {
+                assert!(c2[v] >= c1[v], "coreness dropped after adding an edge");
+            }
+        });
+    }
+}

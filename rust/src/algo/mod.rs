@@ -1,0 +1,24 @@
+//! The graph algorithms: PASGAL's contributions plus every published
+//! baseline the paper compares against, on the same substrate.
+//!
+//! | Problem | Sequential baseline | Parallel baselines | PASGAL |
+//! |---------|--------------------|--------------------|--------|
+//! | BFS  | queue BFS | GBBS-like frontier edge-map; GAPBS-like direction-optimizing | VGC BFS (τ local search, 2^i multi-frontiers, hash bags) |
+//! | SCC  | Tarjan | BGSS-style multi-pivot (BFS reachability); Multistep (trim + FW-BW + coloring) | VGC SCC (local-search reachability, hash bags) |
+//! | BCC  | Hopcroft–Tarjan | Tarjan–Vishkin (explicit aux graph, O(m) space); GBBS-like (BFS tree) | FAST-BCC (CC tree, implicit skeleton, O(n) space) |
+//! | SSSP | Dijkstra | Δ-stepping | ρ-stepping with VGC |
+//! | CC   | — | hook/compress union-find (+ spanning forest) | (substrate) |
+//!
+//! Every parallel implementation optionally records an execution
+//! trace ([`crate::sim::AlgoTrace`]) for the virtual-multicore
+//! scalability studies (Fig. 1 / Fig. 2).
+
+pub mod bcc;
+pub mod bfs;
+pub mod cc;
+pub mod kcore;
+pub mod scc;
+pub mod sssp;
+
+/// Distance sentinel for unreached vertices in hop-distance outputs.
+pub const UNREACHED: u32 = u32::MAX;

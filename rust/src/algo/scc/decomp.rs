@@ -1,0 +1,313 @@
+//! Shared SCC decomposition skeleton (trim + batched multi-pivot
+//! forward/backward reachability), parameterized by the reachability
+//! engine. `bgss_scc` plugs in the round-synchronous engine,
+//! `vgc_scc` the VGC engine — so the measured difference between them
+//! is exactly the paper's contribution.
+
+use super::reach::{bfs_multi_reach, vgc_multi_reach, ReachCtx, UNSET};
+use crate::graph::Graph;
+use crate::parallel::parallel_for;
+use crate::prop::Rng;
+use crate::sim::trace::Recorder;
+use crate::V;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
+/// Which reachability engine drives the decomposition.
+#[derive(Debug, Clone, Copy)]
+pub enum Engine {
+    /// Round-synchronous BFS-order frontier (GBBS-style).
+    Rounds,
+    /// VGC local searches with budget τ (PASGAL).
+    Vgc(usize),
+}
+
+/// Largest pivot batch (bits in the reachability mask).
+const MAX_BATCH: usize = 64;
+
+/// splitmix-style label mixer for subproblem refinement.
+#[inline]
+fn mix(a: u64, b: u64, c: u64) -> u64 {
+    let mut z = a ^ b.rotate_left(23) ^ c.rotate_left(47);
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// How far trimming goes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrimMode {
+    /// One peel round (what PASGAL [24] and GBBS-style SCC do).
+    Once,
+    /// Worklist to fixpoint (Multistep's signature phase — the
+    /// iterated peel is itself O(D) rounds on chain-shaped fringes).
+    Fixpoint,
+}
+
+/// Peel trivial SCCs: vertices with zero active in- or out-degree
+/// cannot be in a nontrivial SCC, so they are their own (singleton)
+/// components. Returns #peeled.
+pub fn trim(
+    g: &Graph,
+    gt: &Graph,
+    scc: &[AtomicU32],
+    mode: TrimMode,
+    mut rec: Recorder,
+) -> usize {
+    let n = g.n();
+    let peeled = AtomicUsize::new(0);
+    // Active out/in degrees.
+    let out_deg: Vec<AtomicU32> = (0..n as u32).map(|v| AtomicU32::new(g.degree(v) as u32)).collect();
+    let in_deg: Vec<AtomicU32> = (0..n as u32)
+        .map(|v| AtomicU32::new(gt.degree(v) as u32))
+        .collect();
+    // Self-loops keep a vertex alive as its own cycle only if the
+    // loop exists; standard trim treats self-loop as non-trivial.
+    // We count self-loops out of the degrees.
+    parallel_for(0, n, 1024, |v| {
+        let selfs = g.neighbors(v as V).iter().filter(|&&w| w == v as V).count() as u32;
+        if selfs > 0 {
+            out_deg[v].fetch_sub(selfs, Ordering::Relaxed);
+            in_deg[v].fetch_sub(selfs, Ordering::Relaxed);
+        }
+    });
+
+    let mut frontier: Vec<V> = crate::parallel::pack_index(n, |v| {
+        out_deg[v].load(Ordering::Relaxed) == 0 || in_deg[v].load(Ordering::Relaxed) == 0
+    });
+    // Claim initial frontier.
+    frontier.retain(|&v| {
+        scc[v as usize]
+            .compare_exchange(UNSET, v, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+    });
+    while !frontier.is_empty() {
+        peeled.fetch_add(frontier.len(), Ordering::Relaxed);
+        let bag = crate::hashbag::HashBag::new(n);
+        {
+            let frontier_ref = &frontier;
+            let bag_ref = &bag;
+            let out_ref = &out_deg;
+            let in_ref = &in_deg;
+            parallel_for(0, frontier_ref.len(), 64, move |i| {
+                let v = frontier_ref[i];
+                // v leaves: decrement in-degree of out-neighbors and
+                // out-degree of in-neighbors; newly-zero ones peel.
+                for &w in g.neighbors(v) {
+                    if w == v || scc[w as usize].load(Ordering::Relaxed) != UNSET {
+                        continue;
+                    }
+                    if in_ref[w as usize].fetch_sub(1, Ordering::Relaxed) == 1
+                        && scc[w as usize]
+                            .compare_exchange(UNSET, w, Ordering::AcqRel, Ordering::Relaxed)
+                            .is_ok()
+                    {
+                        bag_ref.insert(w);
+                    }
+                }
+                for &w in gt.neighbors(v) {
+                    if w == v || scc[w as usize].load(Ordering::Relaxed) != UNSET {
+                        continue;
+                    }
+                    if out_ref[w as usize].fetch_sub(1, Ordering::Relaxed) == 1
+                        && scc[w as usize]
+                            .compare_exchange(UNSET, w, Ordering::AcqRel, Ordering::Relaxed)
+                            .is_ok()
+                    {
+                        bag_ref.insert(w);
+                    }
+                }
+            });
+        }
+        if let Some(trace) = rec.as_deref_mut() {
+            trace.push_round(
+                frontier
+                    .iter()
+                    .map(|&v| crate::sim::trace::TaskCost {
+                        vertices: 1,
+                        edges: (g.degree(v) + gt.degree(v)) as u64,
+                    })
+                    .collect(),
+            );
+        }
+        frontier = match mode {
+            TrimMode::Once => Vec::new(),
+            TrimMode::Fixpoint => bag.extract_and_clear(),
+        };
+    }
+    peeled.load(Ordering::Relaxed)
+}
+
+/// Full decomposition. Returns per-vertex SCC labels (member vertex).
+pub fn decompose(
+    g: &Graph,
+    gt: Option<&Graph>,
+    engine: Engine,
+    seed: u64,
+    mut rec: Recorder,
+) -> Vec<u32> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let gt_owned;
+    let gt = match gt {
+        Some(t) => t,
+        None => {
+            gt_owned = g.transpose();
+            &gt_owned
+        }
+    };
+    let scc: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNSET)).collect();
+    let mut sub: Vec<u64> = vec![0; n];
+
+    trim(g, gt, &scc, TrimMode::Once, rec.as_deref_mut());
+
+    // Random pivot order.
+    let mut perm: Vec<V> = (0..n as V).collect();
+    Rng::new(seed).shuffle(&mut perm);
+    let mut cursor = 0usize;
+    let mut batch = 1usize;
+
+    while cursor < n {
+        // Next `batch` active pivots in permutation order.
+        let mut pivots: Vec<V> = Vec::with_capacity(batch);
+        while cursor < n && pivots.len() < batch {
+            let v = perm[cursor];
+            cursor += 1;
+            if scc[v as usize].load(Ordering::Relaxed) == UNSET {
+                pivots.push(v);
+            }
+        }
+        if pivots.is_empty() {
+            break;
+        }
+        let ctx = ReachCtx {
+            scc: &scc,
+            sub: &sub,
+        };
+        let (fwd, bwd) = match engine {
+            Engine::Rounds => (
+                bfs_multi_reach(g, &pivots, &ctx, rec.as_deref_mut()),
+                bfs_multi_reach(gt, &pivots, &ctx, rec.as_deref_mut()),
+            ),
+            Engine::Vgc(tau) => (
+                vgc_multi_reach(g, &pivots, &ctx, tau, rec.as_deref_mut()),
+                vgc_multi_reach(gt, &pivots, &ctx, tau, rec.as_deref_mut()),
+            ),
+        };
+        // Assign SCCs / refine subproblems.
+        {
+            let sub_at = crate::parallel::atomic::as_atomic_u64(&mut sub);
+            let pivots_ref = &pivots;
+            let scc_ref = &scc;
+            let fwd_ref = &fwd;
+            let bwd_ref = &bwd;
+            parallel_for(0, n, 2048, move |v| {
+                if scc_ref[v].load(Ordering::Relaxed) != UNSET {
+                    return;
+                }
+                let (f, b) = (fwd_ref[v], bwd_ref[v]);
+                let common = f & b;
+                if common != 0 {
+                    let pivot = pivots_ref[common.trailing_zeros() as usize];
+                    scc_ref[v].store(pivot, Ordering::Relaxed);
+                } else if f != 0 || b != 0 {
+                    let old = sub_at[v].load(Ordering::Relaxed);
+                    sub_at[v].store(mix(old, f, b), Ordering::Relaxed);
+                }
+            });
+        }
+        // Partition-refinement shortcut: an active vertex alone in its
+        // subproblem can share an SCC with no other active vertex, so
+        // it is a singleton SCC. This keeps the 64-bit-mask batching
+        // efficient on DAG-like regions (unique (f,b) signatures
+        // separate fast), playing the role of BGSS's unbounded prefix
+        // doubling.
+        {
+            let mut sub_count: std::collections::HashMap<u64, u32> =
+                std::collections::HashMap::new();
+            for v in 0..n {
+                if scc[v].load(Ordering::Relaxed) == UNSET {
+                    *sub_count.entry(sub[v]).or_insert(0) += 1;
+                }
+            }
+            let sub_ref = &sub;
+            let sub_count_ref = &sub_count;
+            let scc_ref = &scc;
+            parallel_for(0, n, 2048, move |v| {
+                if scc_ref[v].load(Ordering::Relaxed) == UNSET
+                    && sub_count_ref[&sub_ref[v]] == 1
+                {
+                    scc_ref[v].store(v as u32, Ordering::Relaxed);
+                }
+            });
+        }
+        batch = (batch * 4).min(MAX_BATCH);
+    }
+    // Safety net: any vertex still unassigned (shouldn't happen since
+    // every vertex appears in the permutation) becomes a singleton.
+    scc.into_iter()
+        .enumerate()
+        .map(|(v, a)| {
+            let x = a.into_inner();
+            if x == UNSET {
+                v as u32
+            } else {
+                x
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn trim_peels_dag_completely() {
+        let g = gen::grid(5, 6);
+        let gt = g.transpose();
+        let scc: Vec<AtomicU32> = (0..g.n()).map(|_| AtomicU32::new(UNSET)).collect();
+        let peeled = trim(&g, &gt, &scc, TrimMode::Fixpoint, None);
+        assert_eq!(peeled, g.n(), "a DAG trims away entirely");
+        for (v, s) in scc.iter().enumerate() {
+            assert_eq!(s.load(Ordering::Relaxed), v as u32);
+        }
+    }
+
+    #[test]
+    fn trim_leaves_cycle_alone() {
+        let g = gen::cycle(10);
+        let gt = g.transpose();
+        let scc: Vec<AtomicU32> = (0..10).map(|_| AtomicU32::new(UNSET)).collect();
+        let peeled = trim(&g, &gt, &scc, TrimMode::Fixpoint, None);
+        assert_eq!(peeled, 0);
+    }
+
+    #[test]
+    fn trim_peels_tail_into_cycle() {
+        // cycle 0..5 plus tail 5->6->7
+        let mut edges: Vec<(V, V)> = (0..5).map(|i| (i, (i + 1) % 5)).collect();
+        edges.push((0, 5));
+        edges.push((5, 6));
+        edges.push((6, 7));
+        let g = Graph::from_edges(8, &edges, true);
+        let gt = g.transpose();
+        let scc: Vec<AtomicU32> = (0..8).map(|_| AtomicU32::new(UNSET)).collect();
+        let peeled = trim(&g, &gt, &scc, TrimMode::Fixpoint, None);
+        assert_eq!(peeled, 3, "tail 5,6,7 peels; cycle stays");
+    }
+
+    use crate::graph::Graph;
+
+    #[test]
+    fn decompose_cycle_single_scc() {
+        let g = gen::cycle(64);
+        let labels = decompose(&g, None, Engine::Rounds, 1, None);
+        assert!(labels.iter().all(|&l| l == labels[0]));
+        let labels = decompose(&g, None, Engine::Vgc(8), 2, None);
+        assert!(labels.iter().all(|&l| l == labels[0]));
+    }
+}

@@ -1,0 +1,118 @@
+//! Strongly connected components: the Table 4 / Fig. 1 contenders.
+//!
+//! * [`tarjan::tarjan_scc`] — sequential Tarjan (the baseline, always
+//!   speedup 1 in Fig. 1).
+//! * [`bgss::bgss_scc`] — GBBS-style randomized multi-pivot SCC
+//!   (Blelloch–Gu–Shun–Sun framework): batched forward/backward
+//!   *BFS-order* reachability — O(D) synchronized rounds per batch,
+//!   the large-diameter weakness.
+//! * [`multistep::multistep_scc`] — Slota–Rajamanickam–Madduri
+//!   Multistep: trim, one FW-BW for the giant SCC, then coloring.
+//! * [`vgc_scc::vgc_scc`] — PASGAL's SCC [24]: identical decomposition
+//!   to BGSS but every reachability search uses VGC local searches
+//!   over hash bags, collapsing the round count.
+//!
+//! All outputs are per-vertex SCC labels (label = some canonical
+//! member vertex); cross-tests verify the induced *partitions* match
+//! Tarjan exactly.
+
+mod decomp;
+pub mod bgss;
+pub mod multistep;
+pub mod reach;
+pub mod tarjan;
+pub mod vgc_scc;
+
+pub use bgss::bgss_scc;
+pub use multistep::multistep_scc;
+pub use tarjan::tarjan_scc;
+pub use vgc_scc::vgc_scc;
+
+/// Normalize an SCC labeling to the partition's canonical form: every
+/// vertex labeled with the *smallest* vertex id in its class. Two
+/// labelings are equivalent iff their canonical forms are equal.
+pub fn canonicalize(labels: &[u32]) -> Vec<u32> {
+    let n = labels.len();
+    let mut min_of = std::collections::HashMap::<u32, u32>::new();
+    for (v, &l) in labels.iter().enumerate() {
+        let e = min_of.entry(l).or_insert(v as u32);
+        if (v as u32) < *e {
+            *e = v as u32;
+        }
+    }
+    (0..n).map(|v| min_of[&labels[v]]).collect()
+}
+
+#[cfg(test)]
+mod cross_tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::Graph;
+    use crate::prop::{forall, Rng};
+    use crate::V;
+
+    fn check_all(g: &Graph) {
+        let want = canonicalize(&tarjan_scc(g));
+        let gt = g.transpose();
+        let b = canonicalize(&bgss_scc(g, Some(&gt), 42, None));
+        assert_eq!(b, want, "bgss_scc mismatch");
+        let m = canonicalize(&multistep_scc(g, Some(&gt), None));
+        assert_eq!(m, want, "multistep_scc mismatch");
+        let v = canonicalize(&vgc_scc(g, Some(&gt), 64, 42, None));
+        assert_eq!(v, want, "vgc_scc mismatch");
+        let v1 = canonicalize(&vgc_scc(g, Some(&gt), 1, 7, None));
+        assert_eq!(v1, want, "vgc_scc tau=1 mismatch");
+    }
+
+    #[test]
+    fn all_agree_on_named_shapes() {
+        check_all(&gen::cycle(50)); // one big SCC
+        check_all(&gen::path(50)); // all singletons
+        check_all(&gen::complete(12));
+        check_all(&gen::grid(7, 9)); // DAG: singletons
+        // two cycles joined by a one-way bridge
+        let mut edges: Vec<(V, V)> = (0..10).map(|i| (i, (i + 1) % 10)).collect();
+        edges.extend((10..20).map(|i| (i, 10 + (i + 1 - 10) % 10)));
+        edges.push((3, 15));
+        check_all(&Graph::from_edges(20, &edges, true));
+    }
+
+    #[test]
+    fn all_agree_on_suite_categories() {
+        check_all(&gen::social(9, 10, 3));
+        check_all(&gen::web(9, 8, 4));
+        check_all(&gen::road(8, 14, 5));
+        check_all(&gen::knn_chain(500, 3, 7, 6));
+        check_all(&gen::grid(4, 50));
+    }
+
+    #[test]
+    fn prop_all_agree_on_random_graphs() {
+        forall(0x5CC, |rng: &mut Rng| {
+            let n = rng.range(1, 160);
+            let m = rng.range(0, 4 * n);
+            let edges: Vec<(V, V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+                .collect();
+            check_all(&Graph::from_edges(n, &edges, true));
+        });
+    }
+
+    #[test]
+    fn prop_sccs_shrink_under_edge_removal_sanity() {
+        // Adding all reverse edges makes every weakly-connected
+        // component one SCC — a structural sanity check.
+        forall(0x5CD, |rng: &mut Rng| {
+            let n = rng.range(2, 120);
+            let m = rng.range(1, 3 * n);
+            let edges: Vec<(V, V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+                .collect();
+            let g = Graph::from_edges(n, &edges, true).symmetrize();
+            let scc = canonicalize(&vgc_scc(&g, Some(&g), 16, 1, None));
+            let cc = crate::algo::cc::connected_components(&g);
+            let cc_canon = canonicalize(&cc);
+            assert_eq!(scc, cc_canon, "SCC of symmetric graph == CC");
+        });
+    }
+}

@@ -1,0 +1,195 @@
+//! Multistep SCC (Slota, Rajamanickam, Madduri — IPDPS'14 [20]).
+//!
+//! Phases: (1) trim trivial SCCs; (2) one forward/backward BFS from a
+//! high-degree pivot extracts the giant SCC; (3) the remainder is
+//! decomposed by *coloring*: propagate the maximum vertex id forward
+//! to a fixpoint, then a backward search from each color root within
+//! its color class yields one SCC per root. All phases are
+//! round-synchronous — the large-diameter weakness Fig. 1 shows.
+
+use super::decomp::{trim, TrimMode};
+use super::reach::{bfs_multi_reach, ReachCtx, UNSET};
+use crate::graph::Graph;
+use crate::hashbag::HashBag;
+use crate::parallel::{pack_index, parallel_for};
+use crate::sim::trace::{Recorder, TaskCost};
+use crate::V;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Per-vertex SCC labels.
+pub fn multistep_scc(g: &Graph, gt: Option<&Graph>, mut rec: Recorder) -> Vec<u32> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let gt_owned;
+    let gt = match gt {
+        Some(t) => t,
+        None => {
+            gt_owned = g.transpose();
+            &gt_owned
+        }
+    };
+    let scc: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNSET)).collect();
+    let sub: Vec<u64> = vec![0; n];
+
+    // Phase 1: trim.
+    trim(g, gt, &scc, TrimMode::Fixpoint, rec.as_deref_mut());
+
+    // Phase 2: FW-BW from the max-degree-product active pivot.
+    let pivot = (0..n as V)
+        .filter(|&v| scc[v as usize].load(Ordering::Relaxed) == UNSET)
+        .max_by_key(|&v| (g.degree(v) as u64 + 1) * (gt.degree(v) as u64 + 1));
+    if let Some(p) = pivot {
+        let ctx = ReachCtx {
+            scc: &scc,
+            sub: &sub,
+        };
+        let fwd = bfs_multi_reach(g, &[p], &ctx, rec.as_deref_mut());
+        let bwd = bfs_multi_reach(gt, &[p], &ctx, rec.as_deref_mut());
+        parallel_for(0, n, 2048, |v| {
+            if fwd[v] & bwd[v] != 0 {
+                scc[v as usize].store(p, Ordering::Relaxed);
+            }
+        });
+    }
+
+    // Phase 3: coloring rounds on the remainder.
+    // color[v] starts as v; forward edges propagate the max; roots
+    // (color[v] == v) then collect their SCC by backward search
+    // restricted to their color class.
+    let color: Vec<AtomicU32> = (0..n as u32).map(AtomicU32::new).collect();
+    loop {
+        let active: Vec<V> = pack_index(n, |v| scc[v].load(Ordering::Relaxed) == UNSET);
+        if active.is_empty() {
+            break;
+        }
+        // Reset colors of active vertices.
+        parallel_for(0, active.len(), 2048, |i| {
+            let v = active[i];
+            color[v as usize].store(v, Ordering::Relaxed);
+        });
+        // Propagate max color forward to fixpoint (worklist rounds).
+        // We propagate *negated-min* via write_min on !color so one
+        // atomic primitive serves: max(color) == min(!color).
+        let mut frontier = active.clone();
+        let pending: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        while !frontier.is_empty() {
+            let bag = HashBag::new(n);
+            {
+                let frontier_ref = &frontier;
+                let color_ref = &color;
+                let pending_ref = &pending;
+                let bag_ref = &bag;
+                let scc_ref = &scc;
+                parallel_for(0, frontier_ref.len(), 64, move |i| {
+                    let v = frontier_ref[i];
+                    pending_ref[v as usize].store(0, Ordering::Relaxed);
+                    let cv = color_ref[v as usize].load(Ordering::Relaxed);
+                    for &w in g.neighbors(v) {
+                        if scc_ref[w as usize].load(Ordering::Relaxed) != UNSET {
+                            continue;
+                        }
+                        // color[w] = max(color[w], cv) (write-max CAS).
+                        let slot = &color_ref[w as usize];
+                        let mut cur = slot.load(Ordering::Relaxed);
+                        let mut improved = false;
+                        while cv > cur {
+                            match slot.compare_exchange_weak(
+                                cur,
+                                cv,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            ) {
+                                Ok(_) => {
+                                    improved = true;
+                                    break;
+                                }
+                                Err(seen) => cur = seen,
+                            }
+                        }
+                        if improved
+                            && pending_ref[w as usize].swap(1, Ordering::Relaxed) == 0
+                        {
+                            bag_ref.insert(w);
+                        }
+                    }
+                });
+            }
+            if let Some(trace) = rec.as_deref_mut() {
+                trace.push_round(
+                    frontier
+                        .iter()
+                        .map(|&v| TaskCost {
+                            vertices: 1,
+                            edges: g.degree(v) as u64,
+                        })
+                        .collect(),
+                );
+            }
+            frontier = bag.extract_and_clear();
+        }
+        // Roots, in batches of 64: backward reach within color class.
+        let roots: Vec<V> = active
+            .iter()
+            .copied()
+            .filter(|&v| color[v as usize].load(Ordering::Relaxed) == v)
+            .collect();
+        debug_assert!(!roots.is_empty());
+        for chunk in roots.chunks(64) {
+            // Color classes act as subproblem labels for this search.
+            let class: Vec<u64> = (0..n)
+                .map(|v| color[v].load(Ordering::Relaxed) as u64)
+                .collect();
+            let ctx = ReachCtx {
+                scc: &scc,
+                sub: &class,
+            };
+            let bwd = bfs_multi_reach(gt, chunk, &ctx, rec.as_deref_mut());
+            let chunk_ref = chunk;
+            parallel_for(0, n, 2048, |v| {
+                if scc[v].load(Ordering::Relaxed) == UNSET && bwd[v] != 0 {
+                    let root = chunk_ref[bwd[v].trailing_zeros() as usize];
+                    // v is in root's class and reaches root => same SCC.
+                    scc[v].store(root, Ordering::Relaxed);
+                }
+            });
+        }
+    }
+    scc.into_iter().map(|a| a.into_inner()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scc::{canonicalize, tarjan_scc};
+    use crate::graph::gen;
+
+    #[test]
+    fn cycle_single_scc() {
+        let g = gen::cycle(30);
+        let got = multistep_scc(&g, None, None);
+        assert!(got.iter().all(|&l| l == got[0]));
+    }
+
+    #[test]
+    fn matches_tarjan_on_web() {
+        let g = gen::web(10, 8, 21);
+        assert_eq!(
+            canonicalize(&multistep_scc(&g, None, None)),
+            canonicalize(&tarjan_scc(&g))
+        );
+    }
+
+    #[test]
+    fn matches_tarjan_on_two_cycles_and_bridge() {
+        let mut edges: Vec<(V, V)> = (0..8).map(|i| (i, (i + 1) % 8)).collect();
+        edges.extend((8..16).map(|i| (i, 8 + (i + 1 - 8) % 8)));
+        edges.push((2, 9));
+        let g = crate::graph::Graph::from_edges(16, &edges, true);
+        assert_eq!(
+            canonicalize(&multistep_scc(&g, None, None)),
+            canonicalize(&tarjan_scc(&g))
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Sequential Tarjan SCC (the paper's sequential baseline, [21]).
+//!
+//! Iterative formulation with explicit stacks — recursion would blow
+//! the thread stack on the large-diameter graphs this library targets
+//! (a 10^5-vertex chain is a normal input here).
+
+use crate::graph::Graph;
+
+const UNSET: u32 = u32::MAX;
+
+/// Per-vertex SCC labels; label = the vertex of the class that Tarjan
+/// pops as the root (canonicalize before comparing partitions).
+pub fn tarjan_scc(g: &Graph) -> Vec<u32> {
+    let n = g.n();
+    let mut index = vec![UNSET; n]; // discovery order
+    let mut low = vec![0u32; n];
+    let mut on_stack = vec![false; n];
+    let mut scc = vec![UNSET; n];
+    let mut stack: Vec<u32> = Vec::new(); // Tarjan's vertex stack
+    let mut next_index = 0u32;
+
+    // Explicit DFS call stack: (vertex, next-edge-offset).
+    let mut call: Vec<(u32, usize)> = Vec::new();
+    for start in 0..n as u32 {
+        if index[start as usize] != UNSET {
+            continue;
+        }
+        call.push((start, 0));
+        index[start as usize] = next_index;
+        low[start as usize] = next_index;
+        next_index += 1;
+        stack.push(start);
+        on_stack[start as usize] = true;
+
+        while let Some(&mut (v, ref mut ei)) = call.last_mut() {
+            let nbrs = g.neighbors(v);
+            if *ei < nbrs.len() {
+                let w = nbrs[*ei];
+                *ei += 1;
+                if index[w as usize] == UNSET {
+                    // Tree edge: descend.
+                    index[w as usize] = next_index;
+                    low[w as usize] = next_index;
+                    next_index += 1;
+                    stack.push(w);
+                    on_stack[w as usize] = true;
+                    call.push((w, 0));
+                } else if on_stack[w as usize] {
+                    low[v as usize] = low[v as usize].min(index[w as usize]);
+                }
+            } else {
+                // Retreat.
+                call.pop();
+                if low[v as usize] == index[v as usize] {
+                    // v is a root: pop its SCC.
+                    loop {
+                        let w = stack.pop().expect("tarjan stack underflow");
+                        on_stack[w as usize] = false;
+                        scc[w as usize] = v;
+                        if w == v {
+                            break;
+                        }
+                    }
+                }
+                if let Some(&(parent, _)) = call.last() {
+                    low[parent as usize] = low[parent as usize].min(low[v as usize]);
+                }
+            }
+        }
+    }
+    scc
+}
+
+/// Number of SCCs in a labeling.
+pub fn scc_count(labels: &[u32]) -> usize {
+    let mut seen = std::collections::HashSet::new();
+    for &l in labels {
+        seen.insert(l);
+    }
+    seen.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn cycle_is_one_scc() {
+        let g = gen::cycle(100);
+        let scc = tarjan_scc(&g);
+        assert!(scc.iter().all(|&x| x == scc[0]));
+    }
+
+    #[test]
+    fn dag_is_all_singletons() {
+        let g = gen::grid(6, 8);
+        let scc = tarjan_scc(&g);
+        assert_eq!(scc_count(&scc), g.n());
+    }
+
+    #[test]
+    fn textbook_example() {
+        // 0→1→2→0 (SCC); 3→4, 4→3 (SCC); 2→3; 5 isolated
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (2, 0), (3, 4), (4, 3), (2, 3)], false);
+        let scc = tarjan_scc(&g);
+        assert_eq!(scc[0], scc[1]);
+        assert_eq!(scc[1], scc[2]);
+        assert_eq!(scc[3], scc[4]);
+        assert_ne!(scc[0], scc[3]);
+        assert_ne!(scc[5], scc[0]);
+        assert_eq!(scc_count(&scc), 3);
+    }
+
+    use crate::graph::Graph;
+
+    #[test]
+    fn deep_chain_no_stack_overflow() {
+        // 200k-vertex cycle: recursion would smash the stack.
+        let g = gen::cycle(200_000);
+        let scc = tarjan_scc(&g);
+        assert!(scc.iter().all(|&x| x == scc[0]));
+    }
+
+    #[test]
+    fn self_loop_is_singleton_scc() {
+        let g = Graph::from_edges(3, &[(0, 0), (0, 1), (1, 2)], false);
+        let scc = tarjan_scc(&g);
+        assert_eq!(scc_count(&scc), 3);
+    }
+}

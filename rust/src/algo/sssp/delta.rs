@@ -1,0 +1,158 @@
+//! Δ-stepping SSSP (Meyer & Sanders) — the parallel baseline.
+//!
+//! Distances are partitioned into width-Δ buckets processed in order;
+//! within a bucket, relaxations iterate to a fixpoint (the classic
+//! simplification that folds the light/heavy split into repeated
+//! rounds). Each inner iteration is a synchronized round — on
+//! large-diameter weighted graphs the bucket chain is long and the
+//! round count grows accordingly.
+
+use crate::graph::Graph;
+use crate::hashbag::HashBag;
+use crate::parallel::atomic::{load_f32, write_min_f32};
+use crate::parallel::parallel_for;
+use crate::sim::trace::{Recorder, TaskCost};
+use crate::{INF, V};
+use std::sync::atomic::AtomicU32;
+
+/// Shortest distances from `src`. `delta` defaults to the mean edge
+/// weight (a standard heuristic).
+pub fn delta_stepping(g: &Graph, src: V, delta: Option<f32>, mut rec: Recorder) -> Vec<f32> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let delta = delta.unwrap_or_else(|| {
+        match &g.weights {
+            Some(ws) if !ws.is_empty() => {
+                (ws.iter().sum::<f32>() / ws.len() as f32).max(1e-6)
+            }
+            _ => 1.0,
+        }
+    });
+    let mut dist_bits = vec![INF.to_bits(); n];
+    let dist: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(unsafe {
+        // Reinterpret u32 bits storage (same layout as the helper used
+        // elsewhere; write_min_f32 operates on bits).
+        std::mem::transmute::<&mut [u32], &mut [u32]>(&mut dist_bits)
+    });
+    write_min_f32(&dist[src as usize], 0.0);
+
+    let bucket_of = |d: f32| -> usize { (d / delta) as usize };
+    let mut buckets: Vec<HashBag> = Vec::new();
+    let ensure = |buckets: &mut Vec<HashBag>, i: usize, n: usize| {
+        while buckets.len() <= i {
+            buckets.push(HashBag::new(n));
+        }
+    };
+    ensure(&mut buckets, 0, n);
+    buckets[0].insert(src);
+
+    let mut i = 0usize;
+    while i < buckets.len() {
+        loop {
+            let frontier: Vec<V> = buckets[i].extract_and_clear();
+            if frontier.is_empty() {
+                break;
+            }
+            // Split: current-bucket vertices vs deferred.
+            let mut work: Vec<V> = Vec::with_capacity(frontier.len());
+            for &v in &frontier {
+                let d = load_f32(&dist[v as usize]);
+                let b = bucket_of(d);
+                if b < i {
+                    continue; // settled in an earlier bucket: stale
+                } else if b == i {
+                    work.push(v);
+                } else {
+                    ensure(&mut buckets, b, n);
+                    buckets[b].insert(v);
+                }
+            }
+            if work.is_empty() {
+                break;
+            }
+            // One synchronized relaxation round over `work`.
+            let max_new_bucket =
+                std::sync::atomic::AtomicUsize::new(i);
+            {
+                // Collect insertions first (buckets can't grow during
+                // the parallel phase), staged through one overflow bag.
+                let staged = HashBag::new(n);
+                let work_ref = &work;
+                let staged_ref = &staged;
+                let max_ref = &max_new_bucket;
+                parallel_for(0, work_ref.len(), 32, move |k| {
+                    let v = work_ref[k];
+                    let dv = load_f32(&dist[v as usize]);
+                    let ws = g.weights.as_ref().map(|_| g.weights_of(v));
+                    for (j, &u) in g.neighbors(v).iter().enumerate() {
+                        let w = ws.map_or(1.0, |ws| ws[j]);
+                        let nd = dv + w;
+                        if write_min_f32(&dist[u as usize], nd) {
+                            let b = bucket_of(nd);
+                            max_ref.fetch_max(b, std::sync::atomic::Ordering::Relaxed);
+                            staged_ref.insert(u);
+                        }
+                    }
+                });
+                if let Some(trace) = rec.as_deref_mut() {
+                    trace.push_round(
+                        work.iter()
+                            .map(|&v| TaskCost {
+                                vertices: 1,
+                                edges: g.degree(v) as u64,
+                            })
+                            .collect(),
+                    );
+                }
+                // Distribute staged updates into their buckets.
+                let hi = max_new_bucket.load(std::sync::atomic::Ordering::Relaxed);
+                ensure(&mut buckets, hi, n);
+                for u in staged.extract_and_clear() {
+                    let b = bucket_of(load_f32(&dist[u as usize]));
+                    buckets[b.max(i)].insert(u);
+                }
+            }
+        }
+        i += 1;
+    }
+    dist_bits.into_iter().map(f32::from_bits).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sssp::dijkstra;
+    use crate::graph::gen;
+
+    #[test]
+    fn matches_dijkstra_on_road() {
+        let g = gen::road(9, 13, 7);
+        let want = dijkstra(&g, 0);
+        let got = delta_stepping(&g, 0, None, None);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-3 * b.max(1.0) || (*a >= INF && *b >= INF));
+        }
+    }
+
+    #[test]
+    fn tiny_delta_degenerates_to_dijkstra_like() {
+        let g = gen::road(6, 8, 1);
+        let want = dijkstra(&g, 5);
+        let got = delta_stepping(&g, 5, Some(0.5), None);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-3 * b.max(1.0) || (*a >= INF && *b >= INF));
+        }
+    }
+
+    #[test]
+    fn huge_delta_degenerates_to_bellman_ford() {
+        let g = gen::road(6, 8, 2);
+        let want = dijkstra(&g, 0);
+        let got = delta_stepping(&g, 0, Some(1e9), None);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-3 * b.max(1.0) || (*a >= INF && *b >= INF));
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Sequential binary-heap Dijkstra — the SSSP correctness oracle and
+//! sequential baseline.
+
+use crate::graph::Graph;
+use crate::{INF, V};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Total-ordered f32 wrapper for the heap (distances are never NaN).
+#[derive(PartialEq, PartialOrd)]
+struct D(f32);
+impl Eq for D {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for D {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// Shortest distances from `src` over non-negative weights.
+pub fn dijkstra(g: &Graph, src: V) -> Vec<f32> {
+    let n = g.n();
+    let mut dist = vec![INF; n];
+    if n == 0 {
+        return dist;
+    }
+    let mut heap: BinaryHeap<Reverse<(D, V)>> = BinaryHeap::new();
+    dist[src as usize] = 0.0;
+    heap.push(Reverse((D(0.0), src)));
+    while let Some(Reverse((D(d), v))) = heap.pop() {
+        if d > dist[v as usize] {
+            continue; // stale entry
+        }
+        let ws = if g.weights.is_some() {
+            Some(g.weights_of(v))
+        } else {
+            None
+        };
+        for (i, &u) in g.neighbors(v).iter().enumerate() {
+            let w = ws.map_or(1.0, |ws| ws[i]);
+            debug_assert!(w >= 0.0, "negative weight");
+            let nd = d + w;
+            if nd < dist[u as usize] {
+                dist[u as usize] = nd;
+                heap.push(Reverse((D(nd), u)));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::Graph;
+
+    #[test]
+    fn weighted_diamond_prefers_cheap_path() {
+        // 0->1 (1), 0->2 (10), 1->2 (1): dist(2) = 2 not 10.
+        let g = Graph::from_weighted_edges(3, &[(0, 1, 1.0), (0, 2, 10.0), (1, 2, 1.0)], false);
+        let d = dijkstra(&g, 0);
+        assert_eq!(d, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn unreachable_is_inf() {
+        let g = Graph::from_weighted_edges(3, &[(0, 1, 1.0)], false);
+        let d = dijkstra(&g, 0);
+        assert!(d[2] >= INF);
+    }
+
+    #[test]
+    fn unweighted_graph_counts_hops() {
+        let g = gen::path(6);
+        let d = dijkstra(&g, 0);
+        assert_eq!(d, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn road_distances_respect_triangle_inequality() {
+        let g = gen::road(8, 12, 3);
+        let d = dijkstra(&g, 0);
+        for u in 0..g.n() as V {
+            if d[u as usize] >= INF {
+                continue;
+            }
+            for (i, &v) in g.neighbors(u).iter().enumerate() {
+                let w = g.weights_of(u)[i];
+                assert!(
+                    d[v as usize] <= d[u as usize] + w + 1e-3,
+                    "triangle violated at {u}->{v}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Single-source shortest paths (paper §2.2: stepping framework [11]).
+//!
+//! * [`dijkstra::dijkstra`] — sequential binary-heap Dijkstra (the
+//!   baseline).
+//! * [`delta::delta_stepping`] — Δ-stepping (Meyer & Sanders), the
+//!   classic parallel baseline: distance-bucketed rounds.
+//! * [`rho::rho_stepping`] — ρ-stepping from the stepping-algorithm
+//!   framework [11] with VGC local searches + hash bags, PASGAL's
+//!   SSSP.
+//!
+//! Distances are `f32` with [`crate::INF`] for unreachable; weights
+//! must be non-negative (checked in debug).
+
+pub mod delta;
+pub mod dijkstra;
+pub mod rho;
+
+pub use delta::delta_stepping;
+pub use dijkstra::dijkstra;
+pub use rho::rho_stepping;
+
+#[cfg(test)]
+mod cross_tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::Graph;
+    use crate::prop::{forall, Rng};
+    use crate::{INF, V, W};
+
+    fn assert_dists_eq(got: &[f32], want: &[f32], tag: &str) {
+        assert_eq!(got.len(), want.len());
+        for (v, (g, w)) in got.iter().zip(want).enumerate() {
+            let ok = if *w >= INF {
+                *g >= INF
+            } else {
+                (g - w).abs() <= 1e-3 * w.max(1.0)
+            };
+            assert!(ok, "{tag}: vertex {v}: got {g}, want {w}");
+        }
+    }
+
+    fn check_all(g: &Graph, src: V) {
+        let want = dijkstra(g, src);
+        let d = delta_stepping(g, src, None, None);
+        assert_dists_eq(&d, &want, "delta");
+        let r = rho_stepping(g, src, 64, None);
+        assert_dists_eq(&r, &want, "rho");
+        let r1 = rho_stepping(g, src, 1, None);
+        assert_dists_eq(&r1, &want, "rho tau=1");
+    }
+
+    #[test]
+    fn all_agree_on_weighted_shapes() {
+        check_all(&gen::road(10, 14, 3), 0);
+        check_all(&gen::road(10, 14, 3), 77);
+        check_all(&gen::knn_points(400, 4, 5), 7);
+        let g = gen::with_random_weights(&gen::grid(9, 11), 13);
+        check_all(&g, 0);
+        let g = gen::with_random_weights(&gen::social(9, 8, 17), 19);
+        check_all(&g, 3);
+    }
+
+    #[test]
+    fn prop_all_agree_on_random_weighted_graphs() {
+        forall(0x555, |rng: &mut Rng| {
+            let n = rng.range(1, 200);
+            let m = rng.range(0, 4 * n);
+            let edges: Vec<(V, V, W)> = (0..m)
+                .map(|_| {
+                    (
+                        rng.below(n as u64) as V,
+                        rng.below(n as u64) as V,
+                        1.0 + rng.below(50) as W,
+                    )
+                })
+                .collect();
+            let g = Graph::from_weighted_edges(n, &edges, true);
+            check_all(&g, rng.below(n as u64) as V);
+        });
+    }
+
+    #[test]
+    fn unit_weights_reduce_to_bfs() {
+        let g = gen::grid(8, 9).with_unit_weights();
+        let bfs = crate::algo::bfs::seq_bfs(&g, 0);
+        let sssp = rho_stepping(&g, 0, 32, None);
+        for v in 0..g.n() {
+            if bfs[v] == u32::MAX {
+                assert!(sssp[v] >= INF);
+            } else {
+                assert_eq!(sssp[v], bfs[v] as f32);
+            }
+        }
+    }
+}

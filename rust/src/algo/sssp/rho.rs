@@ -1,0 +1,218 @@
+//! ρ-stepping SSSP with VGC (Dong, Gu, Sun, Zhang — SPAA'21 [11]):
+//! PASGAL's shortest-path algorithm (§2.2).
+//!
+//! One pending bag holds every vertex whose distance improved. Each
+//! round samples the pending distances to pick a threshold θ that
+//! admits roughly ρ vertices, processes the admitted set with
+//! τ-budget VGC local searches (relaxations need no strict priority
+//! order — write_min fixes any overshoot), and defers the rest. Far
+//! fewer synchronized rounds than Δ-stepping's bucket chain.
+
+use crate::graph::Graph;
+use crate::hashbag::HashBag;
+use crate::parallel::atomic::{load_f32, write_min_f32};
+use crate::sim::trace::{Recorder, RoundSlots};
+use crate::{INF, V};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Vertices admitted per round (the ρ parameter of [11]).
+const RHO: usize = 1 << 10;
+
+/// Seeds per local-search task.
+const SEEDS: usize = 4;
+
+/// Shortest distances from `src` with VGC budget `tau`.
+pub fn rho_stepping(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<f32> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let tau = tau.max(1);
+    let mut dist_bits = vec![INF.to_bits(); n];
+    let dist: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(&mut dist_bits);
+    write_min_f32(&dist[src as usize], 0.0);
+    let pending_flag: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    pending_flag[src as usize].store(1, Ordering::Relaxed);
+    // settled[v] = distance (as bits) v was last *expanded* with; a
+    // vertex re-expands only after a strict improvement. Without this
+    // qualify step, in-round corrections re-relax whole neighborhoods
+    // quadratically (measured 100x work amplification on road meshes
+    // — see EXPERIMENTS.md §Perf).
+    let settled: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(INF.to_bits())).collect();
+
+    let mut pending: Vec<V> = vec![src];
+    let bag = HashBag::new(n);
+    // Mean edge weight: the admission window is measured in units of
+    // it (see below).
+    let mean_w = match &g.weights {
+        Some(ws) if !ws.is_empty() => {
+            (ws.iter().sum::<f32>() / ws.len() as f32).max(1e-6)
+        }
+        _ => 1.0,
+    };
+    // Distance width of one round's admitted slice. Admitting an
+    // unbounded slice makes the relaxation Bellman-Ford-like: distances
+    // get corrected O(width/min_w) times each (measured 100x work
+    // amplification with theta = INF — EXPERIMENTS.md §Perf). 16 mean
+    // hops per round keeps the re-relaxation factor ~2.5x while still
+    // collapsing Δ-stepping's one-hop bucket chain ~25x (width sweep
+    // in EXPERIMENTS.md §Perf).
+    let width = 16.0 * mean_w;
+
+    while !pending.is_empty() {
+        // Threshold: the smaller of (a) the ~RHO-th smallest pending
+        // distance and (b) min pending distance + the width cap.
+        let stride = (pending.len() / 1024).max(1);
+        let mut sample: Vec<f32> = pending
+            .iter()
+            .step_by(stride)
+            .map(|&v| load_f32(&dist[v as usize]))
+            .collect();
+        sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Count bound only binds above RHO pending; the width bound
+        // always applies (and always leaves room to chain forward).
+        let by_count = if pending.len() <= RHO {
+            INF
+        } else {
+            let idx = (RHO * sample.len() / pending.len()).min(sample.len() - 1);
+            sample[idx]
+        };
+        let theta = by_count.min(sample[0] + width);
+
+        // Partition: admitted now, deferred back to the bag.
+        let mut work: Vec<V> = Vec::new();
+        for &v in &pending {
+            if load_f32(&dist[v as usize]) <= theta {
+                work.push(v);
+            } else {
+                bag.insert(v); // still pending (flag stays 1)
+            }
+        }
+        if work.is_empty() {
+            // θ below every pending distance can't happen (θ is a
+            // pending distance or INF), but guard against fp quirks.
+            work = pending.clone();
+        }
+
+        // VGC local searches over the admitted set.
+        let ntasks = work.len().div_ceil(SEEDS);
+        let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
+        let record = rec.is_some();
+        {
+            let work_ref = &work;
+            let bag_ref = &bag;
+            let flag_ref = &pending_flag;
+            let settled_ref = &settled;
+            crate::parallel::ops::parallel_for_chunks(0, work_ref.len(), SEEDS, |ti, range| {
+                // FIFO local search (discovery order): keeps the walk
+                // close to distance order within the admitted slice,
+                // which bounds overshoot corrections (a LIFO walk
+                // churns on path-like graphs).
+                let mut queue: Vec<u32> = Vec::with_capacity(64);
+                queue.extend(range.map(|i| work_ref[i]));
+                let mut head = 0usize;
+                let mut stats = crate::parallel::vgc::SearchStats::default();
+                while head < queue.len() && (stats.vertices as usize) < tau {
+                    let v = queue[head];
+                    head += 1;
+                    stats.vertices += 1;
+                    flag_ref[v as usize].store(0, Ordering::Relaxed);
+                    let dv = load_f32(&dist[v as usize]);
+                    // Qualify: expand only on strict improvement since
+                    // the last expansion (one winner per value).
+                    let set = settled_ref[v as usize].load(Ordering::Relaxed);
+                    if dv.to_bits() >= set
+                        || settled_ref[v as usize]
+                            .compare_exchange(
+                                set,
+                                dv.to_bits(),
+                                Ordering::AcqRel,
+                                Ordering::Relaxed,
+                            )
+                            .is_err()
+                    {
+                        continue;
+                    }
+                    let ws = g.weights.as_ref().map(|_| g.weights_of(v));
+                    for (j, &u) in g.neighbors(v).iter().enumerate() {
+                        stats.edges += 1;
+                        let w = ws.map_or(1.0, |ws| ws[j]);
+                        let nd = dv + w;
+                        if write_min_f32(&dist[u as usize], nd)
+                            && flag_ref[u as usize].swap(1, Ordering::Relaxed) == 0
+                        {
+                            if nd <= theta {
+                                // Near: keep walking inside this task.
+                                queue.push(u);
+                            } else {
+                                bag_ref.insert(u);
+                            }
+                        }
+                    }
+                }
+                // Budget exhausted: leftovers stay pending.
+                for &u in &queue[head..] {
+                    bag_ref.insert(u);
+                }
+                if record {
+                    slots.set(ti, stats.into());
+                }
+            });
+        }
+        if let Some(trace) = rec.as_deref_mut() {
+            trace.push_round(slots.into_round());
+        }
+        pending = bag.extract_and_clear();
+        // Dedupe: flag==0 entries were already processed this round.
+        pending.retain(|&v| pending_flag[v as usize].load(Ordering::Relaxed) == 1);
+    }
+    dist_bits.into_iter().map(f32::from_bits).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sssp::dijkstra;
+    use crate::graph::gen;
+
+    fn close(got: &[f32], want: &[f32]) {
+        for (v, (a, b)) in got.iter().zip(want).enumerate() {
+            let ok = if *b >= INF {
+                *a >= INF
+            } else {
+                (a - b).abs() <= 1e-3 * b.max(1.0)
+            };
+            assert!(ok, "vertex {v}: got {a} want {b}");
+        }
+    }
+
+    #[test]
+    fn matches_dijkstra_on_knn() {
+        let g = gen::knn_points(300, 5, 9);
+        close(&rho_stepping(&g, 0, 64, None), &dijkstra(&g, 0));
+    }
+
+    #[test]
+    fn various_tau_all_correct() {
+        let g = gen::road(7, 11, 5);
+        let want = dijkstra(&g, 3);
+        for tau in [1usize, 8, 512, 1 << 20] {
+            close(&rho_stepping(&g, 3, tau, None), &want);
+        }
+    }
+
+    #[test]
+    fn fewer_rounds_than_delta_on_long_road() {
+        let g = gen::road(3, 700, 1);
+        let mut t_rho = crate::sim::AlgoTrace::new();
+        let _ = rho_stepping(&g, 0, 512, Some(&mut t_rho));
+        let mut t_delta = crate::sim::AlgoTrace::new();
+        let _ = super::super::delta_stepping(&g, 0, None, Some(&mut t_delta));
+        assert!(
+            t_rho.num_rounds() * 4 < t_delta.num_rounds(),
+            "rho rounds {} vs delta rounds {}",
+            t_rho.num_rounds(),
+            t_delta.num_rounds()
+        );
+    }
+}

@@ -1,0 +1,129 @@
+//! Job types for the coordinator.
+
+use crate::V;
+use std::time::Duration;
+
+/// Which analysis to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// PASGAL VGC BFS (τ from the request).
+    BfsVgc { tau: usize },
+    /// GBBS-like frontier BFS (baseline).
+    BfsFrontier,
+    /// Direction-optimizing BFS (baseline).
+    BfsDirOpt,
+    /// PASGAL VGC SCC.
+    SccVgc { tau: usize },
+    /// Multistep SCC (baseline).
+    SccMultistep,
+    /// FAST-BCC.
+    Bcc,
+    /// ρ-stepping SSSP with VGC.
+    SsspRho { tau: usize },
+    /// Δ-stepping SSSP (baseline).
+    SsspDelta,
+    /// Dense-block closure on the PJRT engine: all-pairs distances
+    /// within a extracted dense subgraph (the L1/L2 path).
+    DenseClosure { block: usize },
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str, tau: usize) -> Option<AlgoKind> {
+        Some(match s {
+            "bfs" | "bfs-vgc" => AlgoKind::BfsVgc { tau },
+            "bfs-frontier" => AlgoKind::BfsFrontier,
+            "bfs-diropt" => AlgoKind::BfsDirOpt,
+            "scc" | "scc-vgc" => AlgoKind::SccVgc { tau },
+            "scc-multistep" => AlgoKind::SccMultistep,
+            "bcc" | "bcc-fast" => AlgoKind::Bcc,
+            "sssp" | "sssp-rho" => AlgoKind::SsspRho { tau },
+            "sssp-delta" => AlgoKind::SsspDelta,
+            "dense-closure" => AlgoKind::DenseClosure { block: 64 },
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlgoKind::BfsVgc { .. } => "bfs-vgc",
+            AlgoKind::BfsFrontier => "bfs-frontier",
+            AlgoKind::BfsDirOpt => "bfs-diropt",
+            AlgoKind::SccVgc { .. } => "scc-vgc",
+            AlgoKind::SccMultistep => "scc-multistep",
+            AlgoKind::Bcc => "bcc-fast",
+            AlgoKind::SsspRho { .. } => "sssp-rho",
+            AlgoKind::SsspDelta => "sssp-delta",
+            AlgoKind::DenseClosure { .. } => "dense-closure",
+        }
+    }
+}
+
+/// One analysis request.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub id: u64,
+    /// Name of a graph previously loaded into the coordinator.
+    pub graph: String,
+    pub algo: AlgoKind,
+    /// Source vertex for traversal queries.
+    pub source: V,
+}
+
+/// Compact algorithm output (the full vectors stay with the caller
+/// when run through the library API; the server reports summaries).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobOutput {
+    /// (#reached, max distance) for BFS.
+    Bfs { reached: usize, ecc: u32 },
+    /// (#components, largest component size).
+    Scc { count: usize, largest: usize },
+    /// (#blocks, #articulation points).
+    Bcc { blocks: usize, articulation: usize },
+    /// (#reached, max finite distance).
+    Sssp { reached: usize, radius: f32 },
+    /// (block size, #finite pairwise distances).
+    Dense { block: usize, finite_pairs: usize },
+}
+
+/// A finished job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub algo: &'static str,
+    pub output: JobOutput,
+    /// Pure execution time.
+    pub exec: Duration,
+    /// Queue + execution (request-to-response) latency.
+    pub latency: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_labels() {
+        for s in [
+            "bfs-vgc",
+            "bfs-frontier",
+            "bfs-diropt",
+            "scc-vgc",
+            "scc-multistep",
+            "bcc-fast",
+            "sssp-rho",
+            "sssp-delta",
+            "dense-closure",
+        ] {
+            let k = AlgoKind::parse(s, 512).unwrap();
+            assert_eq!(k.label(), s);
+        }
+        assert!(AlgoKind::parse("nope", 1).is_none());
+    }
+
+    #[test]
+    fn aliases_accepted() {
+        assert_eq!(AlgoKind::parse("bfs", 7), Some(AlgoKind::BfsVgc { tau: 7 }));
+        assert_eq!(AlgoKind::parse("scc", 9), Some(AlgoKind::SccVgc { tau: 9 }));
+        assert_eq!(AlgoKind::parse("bcc", 1), Some(AlgoKind::Bcc));
+    }
+}

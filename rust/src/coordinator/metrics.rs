@@ -1,0 +1,136 @@
+//! Lightweight metrics registry: counters + latency summaries.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Percentile summary of a sample set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Thread-safe metrics: named counters and named latency series.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<HashMap<String, AtomicU64>>,
+    series: Mutex<HashMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a named counter.
+    pub fn bump(&self, name: &str, by: u64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Current counter value.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record a latency observation.
+    pub fn observe(&self, name: &str, d: Duration) {
+        self.series
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(d.as_secs_f64() * 1e3);
+    }
+
+    /// Summarize a latency series (None if empty/unknown).
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        let map = self.series.lock().unwrap();
+        let xs = map.get(name)?;
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+            sorted[idx]
+        };
+        Some(Summary {
+            count: sorted.len(),
+            mean_ms: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50_ms: q(0.50),
+            p95_ms: q(0.95),
+            p99_ms: q(0.99),
+            max_ms: *sorted.last().unwrap(),
+        })
+    }
+
+    /// All series names (sorted).
+    pub fn series_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.series.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.bump("jobs", 1);
+        m.bump("jobs", 2);
+        assert_eq!(m.counter("jobs"), 3);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.observe("lat", Duration::from_millis(i));
+        }
+        let s = m.summary("lat").unwrap();
+        assert_eq!(s.count, 100);
+        assert!((s.p50_ms - 50.0).abs() <= 1.5, "p50={}", s.p50_ms);
+        assert!((s.p95_ms - 95.0).abs() <= 1.5);
+        assert!((s.max_ms - 100.0).abs() < 1e-9);
+        assert!((s.mean_ms - 50.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn summary_of_unknown_is_none() {
+        assert!(Metrics::new().summary("nope").is_none());
+    }
+
+    #[test]
+    fn concurrent_observes_all_recorded() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for i in 0..250 {
+                        m.observe("x", Duration::from_micros(i));
+                    }
+                });
+            }
+        });
+        assert_eq!(m.summary("x").unwrap().count, 1000);
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 analysis-job coordinator: the serving layer around the library.
+//!
+//! A [`Coordinator`] owns loaded graphs (with lazily materialized
+//! transposes/symmetrizations), the worker pool, an optional PJRT
+//! [`crate::runtime::DenseEngine`] for dense-block queries, and a
+//! metrics registry. Clients submit [`job::JobRequest`]s; the server
+//! loop batches requests *by graph* (amortizing cache warmth the way
+//! an inference router batches by model), executes them on the pool,
+//! and reports per-job latency plus queue/throughput metrics.
+//!
+//! Python never appears here: the dense path executes AOT-compiled
+//! HLO artifacts through PJRT.
+
+pub mod dense;
+pub mod job;
+pub mod metrics;
+pub mod server;
+
+pub use dense::DenseBlock;
+pub use job::{AlgoKind, JobOutput, JobRequest, JobResult};
+pub use metrics::{Metrics, Summary};
+pub use server::{workload, Coordinator, LoadedGraph};

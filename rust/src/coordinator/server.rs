@@ -1,0 +1,440 @@
+//! The coordinator server: graph registry, per-graph batching, job
+//! execution, and a channel-based serving loop.
+
+use super::dense::DenseBlock;
+use super::job::{AlgoKind, JobOutput, JobRequest, JobResult};
+use super::metrics::Metrics;
+use crate::algo::{bcc, bfs, scc, sssp, UNREACHED};
+use crate::graph::Graph;
+use crate::runtime::EngineHandle;
+use crate::{INF, V};
+use anyhow::{bail, Context, Result};
+use once_cell::sync::OnceCell;
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A registered graph with lazily materialized derived views.
+pub struct LoadedGraph {
+    pub graph: Arc<Graph>,
+    transpose: OnceCell<Arc<Graph>>,
+    symmetrized: OnceCell<Arc<Graph>>,
+}
+
+impl LoadedGraph {
+    pub fn new(graph: Graph) -> Self {
+        LoadedGraph {
+            graph: Arc::new(graph),
+            transpose: OnceCell::new(),
+            symmetrized: OnceCell::new(),
+        }
+    }
+
+    /// Transpose, computed once on first use.
+    pub fn transpose(&self) -> &Graph {
+        if self.graph.symmetric {
+            return &self.graph;
+        }
+        self.transpose
+            .get_or_init(|| Arc::new(self.graph.transpose()))
+    }
+
+    /// Symmetrized view (identity for already-symmetric graphs).
+    pub fn symmetrized(&self) -> &Graph {
+        if self.graph.symmetric {
+            return &self.graph;
+        }
+        self.symmetrized
+            .get_or_init(|| Arc::new(self.graph.symmetrize()))
+    }
+}
+
+/// The analysis-job coordinator.
+pub struct Coordinator {
+    graphs: Mutex<HashMap<String, Arc<LoadedGraph>>>,
+    engine: Option<EngineHandle>,
+    pub metrics: Metrics,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Coordinator {
+    /// Coordinator without a dense engine (sparse algorithms only).
+    pub fn new() -> Self {
+        Coordinator {
+            graphs: Mutex::new(HashMap::new()),
+            engine: None,
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Coordinator with the PJRT dense engine attached.
+    pub fn with_engine(engine: EngineHandle) -> Self {
+        Coordinator {
+            graphs: Mutex::new(HashMap::new()),
+            engine: Some(engine),
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Register a graph under `name` (replaces any previous one).
+    pub fn load_graph(&self, name: &str, graph: Graph) {
+        self.graphs
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::new(LoadedGraph::new(graph)));
+        self.metrics.bump("graphs_loaded", 1);
+    }
+
+    /// Fetch a registered graph.
+    pub fn graph(&self, name: &str) -> Option<Arc<LoadedGraph>> {
+        self.graphs.lock().unwrap().get(name).cloned()
+    }
+
+    /// Execute one request immediately (no queueing).
+    pub fn execute(&self, req: &JobRequest) -> Result<JobResult> {
+        let submitted = Instant::now();
+        let lg = self
+            .graph(&req.graph)
+            .with_context(|| format!("unknown graph {:?}", req.graph))?;
+        let g = &*lg.graph;
+        if matches!(
+            req.algo,
+            AlgoKind::BfsVgc { .. }
+                | AlgoKind::BfsFrontier
+                | AlgoKind::BfsDirOpt
+                | AlgoKind::SsspRho { .. }
+                | AlgoKind::SsspDelta
+        ) && (req.source as usize) >= g.n()
+        {
+            bail!("source {} out of range (n={})", req.source, g.n());
+        }
+
+        let exec_start = Instant::now();
+        let output = match req.algo {
+            AlgoKind::BfsVgc { tau } => summarize_bfs(&bfs::vgc_bfs(g, req.source, tau, None)),
+            AlgoKind::BfsFrontier => summarize_bfs(&bfs::frontier_bfs(g, req.source, None)),
+            AlgoKind::BfsDirOpt => {
+                summarize_bfs(&bfs::diropt_bfs(g, Some(lg.transpose()), req.source, None))
+            }
+            AlgoKind::SccVgc { tau } => {
+                summarize_scc(&scc::vgc_scc(g, Some(lg.transpose()), tau, 42, None))
+            }
+            AlgoKind::SccMultistep => {
+                summarize_scc(&scc::multistep_scc(g, Some(lg.transpose()), None))
+            }
+            AlgoKind::Bcc => {
+                let r = bcc::fast_bcc(lg.symmetrized(), None);
+                JobOutput::Bcc {
+                    blocks: r.n_bcc,
+                    articulation: r.articulation.iter().filter(|&&a| a).count(),
+                }
+            }
+            AlgoKind::SsspRho { tau } => {
+                summarize_sssp(&sssp::rho_stepping(g, req.source, tau, None))
+            }
+            AlgoKind::SsspDelta => {
+                summarize_sssp(&sssp::delta_stepping(g, req.source, None, None))
+            }
+            AlgoKind::DenseClosure { block } => {
+                let engine = self
+                    .engine
+                    .as_ref()
+                    .context("no dense engine attached (run `make artifacts`)")?;
+                let tile = engine
+                    .closure_tiles()
+                    .into_iter()
+                    .filter(|&t| t >= block.min(g.n()))
+                    .min()
+                    .context("no closure artifact large enough")?;
+                let k = block.min(g.n()).min(tile);
+                let vs = DenseBlock::top_degree_block(g, k);
+                let db = DenseBlock::extract(g, &vs, tile);
+                let closure = db.closure(engine)?;
+                let finite = closure.iter().filter(|&&d| d < INF).count();
+                JobOutput::Dense {
+                    block: k,
+                    finite_pairs: finite,
+                }
+            }
+        };
+        let exec = exec_start.elapsed();
+        let latency = submitted.elapsed();
+        self.metrics.bump("jobs_executed", 1);
+        self.metrics.observe(&format!("exec/{}", req.algo.label()), exec);
+        Ok(JobResult {
+            id: req.id,
+            algo: req.algo.label(),
+            output,
+            exec,
+            latency,
+        })
+    }
+
+    /// Run a batch: requests grouped by graph (cache-warm batching),
+    /// results returned in submission order. Latencies include the
+    /// in-batch queueing delay.
+    pub fn run_batch(&self, reqs: &[JobRequest]) -> Vec<Result<JobResult>> {
+        let t0 = Instant::now();
+        // Group indices by graph, preserving order within groups.
+        let mut groups: HashMap<&str, Vec<usize>> = HashMap::new();
+        for (i, r) in reqs.iter().enumerate() {
+            groups.entry(r.graph.as_str()).or_default().push(i);
+        }
+        let mut order: Vec<&str> = groups.keys().copied().collect();
+        order.sort();
+        let mut results: Vec<Option<Result<JobResult>>> = (0..reqs.len()).map(|_| None).collect();
+        for name in order {
+            for &i in &groups[name] {
+                let mut res = self.execute(&reqs[i]);
+                if let Ok(r) = res.as_mut() {
+                    r.latency = t0.elapsed(); // include batch queueing
+                    self.metrics.observe("latency", r.latency);
+                }
+                results[i] = Some(res);
+            }
+        }
+        self.metrics.bump("batches", 1);
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    /// Serving loop: drain the request channel, batch what is
+    /// immediately available (up to `max_batch`), execute, respond.
+    /// Returns when the request channel closes.
+    pub fn serve(&self, rx: Receiver<JobRequest>, tx: Sender<JobResult>, max_batch: usize) {
+        loop {
+            // Block for the first request.
+            let Ok(first) = rx.recv() else { return };
+            let mut batch = vec![first];
+            while batch.len() < max_batch {
+                match rx.try_recv() {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+            self.metrics.bump("batched_requests", batch.len() as u64);
+            for res in self.run_batch(&batch) {
+                match res {
+                    Ok(r) => {
+                        if tx.send(r).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        self.metrics.bump("errors", 1);
+                        eprintln!("coordinator: job failed: {e:#}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn summarize_bfs(dist: &[u32]) -> JobOutput {
+    let mut reached = 0usize;
+    let mut ecc = 0u32;
+    for &d in dist {
+        if d != UNREACHED {
+            reached += 1;
+            ecc = ecc.max(d);
+        }
+    }
+    JobOutput::Bfs { reached, ecc }
+}
+
+fn summarize_scc(labels: &[u32]) -> JobOutput {
+    let mut counts: HashMap<u32, usize> = HashMap::new();
+    for &l in labels {
+        *counts.entry(l).or_insert(0) += 1;
+    }
+    JobOutput::Scc {
+        count: counts.len(),
+        largest: counts.values().copied().max().unwrap_or(0),
+    }
+}
+
+fn summarize_sssp(dist: &[f32]) -> JobOutput {
+    let mut reached = 0usize;
+    let mut radius = 0.0f32;
+    for &d in dist {
+        if d < INF {
+            reached += 1;
+            radius = radius.max(d);
+        }
+    }
+    JobOutput::Sssp { reached, radius }
+}
+
+/// Convenience: build requests for a synthetic workload trace.
+pub fn workload(graphs: &[&str], algos: &[AlgoKind], queries: usize, seed: u64) -> Vec<JobRequest> {
+    let mut rng = crate::prop::Rng::new(seed);
+    (0..queries as u64)
+        .map(|id| JobRequest {
+            id,
+            graph: graphs[rng.range(0, graphs.len())].to_string(),
+            algo: *rng.pick(algos),
+            source: rng.below(1 << 14) as V, // clamped by caller's graphs
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn coord_with_graphs() -> Coordinator {
+        let c = Coordinator::new();
+        c.load_graph("road", gen::road(8, 12, 1));
+        c.load_graph("social", gen::social(9, 8, 2));
+        c
+    }
+
+    #[test]
+    fn execute_bfs_and_scc() {
+        let c = coord_with_graphs();
+        let r = c
+            .execute(&JobRequest {
+                id: 1,
+                graph: "road".into(),
+                algo: AlgoKind::BfsVgc { tau: 64 },
+                source: 0,
+            })
+            .unwrap();
+        match r.output {
+            JobOutput::Bfs { reached, .. } => assert!(reached > 1),
+            other => panic!("wrong output {other:?}"),
+        }
+        let r = c
+            .execute(&JobRequest {
+                id: 2,
+                graph: "social".into(),
+                algo: AlgoKind::SccVgc { tau: 64 },
+                source: 0,
+            })
+            .unwrap();
+        match r.output {
+            JobOutput::Scc { count, largest } => {
+                assert!(count >= 1 && largest >= 1);
+            }
+            other => panic!("wrong output {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_graph_and_bad_source_error() {
+        let c = coord_with_graphs();
+        assert!(c
+            .execute(&JobRequest {
+                id: 1,
+                graph: "nope".into(),
+                algo: AlgoKind::BfsFrontier,
+                source: 0,
+            })
+            .is_err());
+        assert!(c
+            .execute(&JobRequest {
+                id: 2,
+                graph: "road".into(),
+                algo: AlgoKind::BfsFrontier,
+                source: u32::MAX - 1,
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn variants_agree_through_the_server() {
+        let c = coord_with_graphs();
+        let mk = |algo| JobRequest {
+            id: 0,
+            graph: "road".into(),
+            algo,
+            source: 3,
+        };
+        let a = c.execute(&mk(AlgoKind::BfsVgc { tau: 32 })).unwrap();
+        let b = c.execute(&mk(AlgoKind::BfsFrontier)).unwrap();
+        let d = c.execute(&mk(AlgoKind::BfsDirOpt)).unwrap();
+        assert_eq!(a.output, b.output);
+        assert_eq!(b.output, d.output);
+        let x = c.execute(&mk(AlgoKind::SsspRho { tau: 32 })).unwrap();
+        let y = c.execute(&mk(AlgoKind::SsspDelta)).unwrap();
+        match (&x.output, &y.output) {
+            (
+                JobOutput::Sssp {
+                    reached: r1,
+                    radius: d1,
+                },
+                JobOutput::Sssp {
+                    reached: r2,
+                    radius: d2,
+                },
+            ) => {
+                assert_eq!(r1, r2);
+                assert!((d1 - d2).abs() <= 1e-2 * d2.max(1.0));
+            }
+            other => panic!("wrong outputs {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_returns_in_submission_order_and_observes_metrics() {
+        let c = coord_with_graphs();
+        let reqs: Vec<JobRequest> = (0..6)
+            .map(|i| JobRequest {
+                id: i,
+                graph: if i % 2 == 0 { "road" } else { "social" }.into(),
+                algo: AlgoKind::BfsVgc { tau: 64 },
+                source: (i % 3) as V,
+            })
+            .collect();
+        let out = c.run_batch(&reqs);
+        assert_eq!(out.len(), 6);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap().id, i as u64);
+        }
+        assert_eq!(c.metrics.counter("jobs_executed"), 6);
+        assert!(c.metrics.summary("latency").unwrap().count == 6);
+    }
+
+    #[test]
+    fn serve_loop_over_channels() {
+        let c = Arc::new(coord_with_graphs());
+        let (req_tx, req_rx) = std::sync::mpsc::channel();
+        let (res_tx, res_rx) = std::sync::mpsc::channel();
+        let server = {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || c.serve(req_rx, res_tx, 8))
+        };
+        for i in 0..10u64 {
+            req_tx
+                .send(JobRequest {
+                    id: i,
+                    graph: "road".into(),
+                    algo: AlgoKind::SsspRho { tau: 64 },
+                    source: (i % 5) as V,
+                })
+                .unwrap();
+        }
+        drop(req_tx);
+        let mut got: Vec<u64> = res_rx.iter().map(|r| r.id).collect();
+        server.join().unwrap();
+        got.sort();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn workload_generator_is_deterministic() {
+        let a = workload(&["g1", "g2"], &[AlgoKind::BfsFrontier], 20, 7);
+        let b = workload(&["g1", "g2"], &[AlgoKind::BfsFrontier], 20, 7);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.graph, y.graph);
+            assert_eq!(x.source, y.source);
+        }
+    }
+}

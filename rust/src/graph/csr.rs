@@ -1,0 +1,354 @@
+//! Compressed sparse row graphs.
+//!
+//! The single [`Graph`] type serves directed and undirected
+//! (symmetrized) graphs, optionally weighted. Construction from edge
+//! lists is parallel (sort by source, then offsets by binary search
+//! per block); transpose reuses construction.
+
+use crate::parallel::{parallel_for, parallel_sort_by_key, scan_inplace};
+use crate::{V, W};
+
+/// CSR graph. Vertices are `0..n` as `u32`; edges are stored as
+/// per-source slices of `targets` (and `weights` when present).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// n+1 offsets into `targets`.
+    pub offsets: Vec<u64>,
+    /// Flat adjacency, length m.
+    pub targets: Vec<V>,
+    /// Optional per-edge weights, parallel to `targets`.
+    pub weights: Option<Vec<W>>,
+    /// Whether the edge set is symmetric (undirected view).
+    pub symmetric: bool,
+}
+
+impl Graph {
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Number of directed edges stored (an undirected edge counts 2).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: V) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Out-neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: V) -> &[V] {
+        &self.targets[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Out-edge weights of `v` (only when weighted).
+    #[inline]
+    pub fn weights_of(&self, v: V) -> &[W] {
+        let w = self
+            .weights
+            .as_ref()
+            .expect("weights_of called on unweighted graph");
+        &w[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Build from a directed edge list (parallel). Self-loops and
+    /// duplicate edges are kept unless `dedup` is set.
+    pub fn from_edges(n: usize, edges: &[(V, V)], dedup: bool) -> Graph {
+        let weighted: Vec<(V, V, W)> = edges.iter().map(|&(u, v)| (u, v, 1.0)).collect();
+        let mut g = Self::from_weighted_edges(n, &weighted, dedup);
+        g.weights = None;
+        g
+    }
+
+    /// Build from a weighted directed edge list (parallel).
+    pub fn from_weighted_edges(n: usize, edges: &[(V, V, W)], dedup: bool) -> Graph {
+        let mut es = edges.to_vec();
+        // Sort by (source, target): gives CSR order and groups dups.
+        parallel_sort_by_key(&mut es, |&(u, v, _)| ((u as u64) << 32) | v as u64);
+        if dedup {
+            es.dedup_by_key(|&mut (u, v, _)| (u, v));
+        }
+        let m = es.len();
+        // Count per-source degrees in parallel.
+        let mut counts = vec![0usize; n + 1];
+        {
+            let cp = crate::parallel::ops::SendPtr(counts.as_mut_ptr());
+            let es_ref = &es;
+            // Block-partition: each vertex's count is written by the
+            // single block containing its first edge... simpler: each
+            // block finds its source range via ownership of edges whose
+            // source differs from the previous edge's source.
+            parallel_for(0, m, 4096, move |i| unsafe {
+                let u = es_ref[i].0 as usize;
+                if i == 0 || es_ref[i - 1].0 as usize != u {
+                    // i owns the whole run of source u: count it.
+                    let mut j = i;
+                    while j < m && es_ref[j].0 as usize == u {
+                        j += 1;
+                    }
+                    *cp.add(u) = j - i;
+                }
+            });
+        }
+        scan_inplace(&mut counts);
+        let offsets: Vec<u64> = counts.iter().map(|&c| c as u64).collect();
+        let mut targets: Vec<V> = Vec::with_capacity(m);
+        let mut weights: Vec<W> = Vec::with_capacity(m);
+        unsafe {
+            targets.set_len(m);
+            weights.set_len(m);
+        }
+        {
+            let tp = crate::parallel::ops::SendPtr(targets.as_mut_ptr());
+            let wp = crate::parallel::ops::SendPtr(weights.as_mut_ptr());
+            let es_ref = &es;
+            parallel_for(0, m, 8192, move |i| unsafe {
+                *tp.add(i) = es_ref[i].1;
+                *wp.add(i) = es_ref[i].2;
+            });
+        }
+        Graph {
+            offsets,
+            targets,
+            weights: Some(weights),
+            symmetric: false,
+        }
+    }
+
+    /// Transposed graph (reverse every edge). Counting-sort scatter:
+    /// O(n + m), no comparison sort (transposes sit on the SCC hot
+    /// path — see EXPERIMENTS.md §Perf).
+    pub fn transpose(&self) -> Graph {
+        let n = self.n();
+        let m = self.m();
+        // In-degrees -> offsets.
+        let mut counts = vec![0usize; n + 1];
+        for &t in &self.targets {
+            counts[t as usize] += 1;
+        }
+        scan_inplace(&mut counts[..n]);
+        counts[n] = m;
+        let offsets: Vec<u64> = counts.iter().map(|&c| c as u64).collect();
+        // Scatter (sequential cursor bump per target; deterministic).
+        let mut cursor: Vec<usize> = counts[..n].to_vec();
+        let mut targets = vec![0 as V; m];
+        let mut weights = self.weights.as_ref().map(|_| vec![0.0 as W; m]);
+        for u in 0..n as V {
+            let ws = self.weights.as_ref().map(|_| self.weights_of(u));
+            for (j, &v) in self.neighbors(u).iter().enumerate() {
+                let slot = cursor[v as usize];
+                cursor[v as usize] += 1;
+                targets[slot] = u;
+                if let (Some(out), Some(ws)) = (weights.as_mut(), ws) {
+                    out[slot] = ws[j];
+                }
+            }
+        }
+        Graph {
+            offsets,
+            targets,
+            weights,
+            symmetric: self.symmetric,
+        }
+    }
+
+    /// Symmetrized graph: edge set ∪ reversed edge set, deduplicated.
+    pub fn symmetrize(&self) -> Graph {
+        let edges = self.edges_weighted();
+        let mut both: Vec<(V, V, W)> = Vec::with_capacity(edges.len() * 2);
+        both.extend_from_slice(&edges);
+        both.extend(edges.iter().map(|&(u, v, w)| (v, u, w)));
+        let mut g = Graph::from_weighted_edges(self.n(), &both, true);
+        if self.weights.is_none() {
+            g.weights = None;
+        }
+        g.symmetric = true;
+        g
+    }
+
+    /// Materialize the edge list (weight 1.0 when unweighted).
+    pub fn edges_weighted(&self) -> Vec<(V, V, W)> {
+        let mut out = Vec::with_capacity(self.m());
+        for u in 0..self.n() as V {
+            let nbrs = self.neighbors(u);
+            match &self.weights {
+                Some(_) => {
+                    let ws = self.weights_of(u);
+                    for (&v, &w) in nbrs.iter().zip(ws) {
+                        out.push((u, v, w));
+                    }
+                }
+                None => {
+                    for &v in nbrs {
+                        out.push((u, v, 1.0));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize the unweighted edge list.
+    pub fn edges(&self) -> Vec<(V, V)> {
+        self.edges_weighted()
+            .into_iter()
+            .map(|(u, v, _)| (u, v))
+            .collect()
+    }
+
+    /// Attach unit weights (for SSSP on unweighted inputs).
+    pub fn with_unit_weights(mut self) -> Graph {
+        if self.weights.is_none() {
+            self.weights = Some(vec![1.0; self.m()]);
+        }
+        self
+    }
+
+    /// Total degree (in+out would need transpose; this is out-degree).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n() as V).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Structural sanity check used by tests and after IO round-trips.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n();
+        if self.offsets.is_empty() {
+            return Err("offsets empty".into());
+        }
+        if self.offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        if *self.offsets.last().unwrap() as usize != self.targets.len() {
+            return Err("offsets[n] != m".into());
+        }
+        for w in self.offsets.windows(2) {
+            if w[0] > w[1] {
+                return Err("offsets not monotone".into());
+            }
+        }
+        if self.targets.iter().any(|&t| (t as usize) >= n) {
+            return Err("target out of range".into());
+        }
+        if let Some(w) = &self.weights {
+            if w.len() != self.targets.len() {
+                return Err("weights length mismatch".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Rng};
+
+    fn tiny() -> Graph {
+        // 0->1, 0->2, 1->2, 3->0 ; vertex 4 isolated
+        Graph::from_edges(5, &[(0, 1), (0, 2), (1, 2), (3, 0)], false)
+    }
+
+    #[test]
+    fn builds_csr_from_edges() {
+        let g = tiny();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[2]);
+        assert_eq!(g.neighbors(2), &[] as &[V]);
+        assert_eq!(g.neighbors(3), &[0]);
+        assert_eq!(g.degree(4), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dedup_removes_duplicates() {
+        let g = Graph::from_edges(3, &[(0, 1), (0, 1), (0, 2), (0, 1)], true);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    fn transpose_reverses() {
+        let g = tiny();
+        let t = g.transpose();
+        assert_eq!(t.neighbors(0), &[3]);
+        assert_eq!(t.neighbors(2), &[0, 1]);
+        assert_eq!(t.m(), g.m());
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn symmetrize_makes_undirected() {
+        let g = tiny();
+        let s = g.symmetrize();
+        assert!(s.symmetric);
+        assert_eq!(s.neighbors(0), &[1, 2, 3]);
+        assert_eq!(s.neighbors(2), &[0, 1]);
+        s.validate().unwrap();
+        // every edge has its reverse
+        for u in 0..s.n() as V {
+            for &v in s.neighbors(u) {
+                assert!(s.neighbors(v).contains(&u), "missing reverse {v}->{u}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_edges_preserved() {
+        let g = Graph::from_weighted_edges(3, &[(0, 1, 2.5), (1, 2, 0.5)], false);
+        assert_eq!(g.weights_of(0), &[2.5]);
+        assert_eq!(g.weights_of(1), &[0.5]);
+    }
+
+    #[test]
+    fn double_transpose_is_identity() {
+        forall(0xC5A, |rng: &mut Rng| {
+            let n = rng.range(1, 200);
+            let m = rng.range(0, 4 * n);
+            let edges: Vec<(V, V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+                .collect();
+            let g = Graph::from_edges(n, &edges, true);
+            let tt = g.transpose().transpose();
+            assert_eq!(g.offsets, tt.offsets);
+            assert_eq!(g.targets, tt.targets);
+        });
+    }
+
+    #[test]
+    fn prop_from_edges_preserves_multiset() {
+        forall(0xED6E5, |rng: &mut Rng| {
+            let n = rng.range(1, 100);
+            let m = rng.range(0, 500);
+            let mut edges: Vec<(V, V)> = (0..m)
+                .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+                .collect();
+            let g = Graph::from_edges(n, &edges, false);
+            let mut got = g.edges();
+            got.sort();
+            edges.sort();
+            assert_eq!(got, edges);
+            g.validate().unwrap();
+        });
+    }
+
+    #[test]
+    fn large_parallel_build_is_consistent() {
+        let n = 100_000;
+        let mut rng = Rng::new(77);
+        let edges: Vec<(V, V)> = (0..500_000)
+            .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+            .collect();
+        let g = Graph::from_edges(n, &edges, false);
+        g.validate().unwrap();
+        assert_eq!(g.m(), 500_000);
+        let deg_sum: usize = (0..n as V).map(|v| g.degree(v)).sum();
+        assert_eq!(deg_sum, g.m());
+    }
+}

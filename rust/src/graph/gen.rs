@@ -1,0 +1,664 @@
+//! Deterministic graph generators + the scaled-down 22-graph suite.
+//!
+//! The paper evaluates on 22 real graphs up to 3.56B vertices
+//! (Table 2). This environment has neither the datasets nor the
+//! memory, so each graph is replaced by a *synthetic analog in the
+//! same structural category* (DESIGN.md §1): what drives the paper's
+//! results is the diameter regime and degree distribution, both of
+//! which the generators control directly. All generators are
+//! deterministic in their seed.
+
+use super::csr::Graph;
+use crate::prop::Rng;
+use crate::{V, W};
+
+// ---------------------------------------------------------------------------
+// Elementary generators (also used heavily by unit tests)
+// ---------------------------------------------------------------------------
+
+/// Directed path 0 -> 1 -> ... -> n-1. Diameter n-1: the adversarial
+/// case the paper concedes (CH5 discussion).
+pub fn path(n: usize) -> Graph {
+    let edges: Vec<(V, V)> = (0..n.saturating_sub(1))
+        .map(|i| (i as V, (i + 1) as V))
+        .collect();
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Directed cycle.
+pub fn cycle(n: usize) -> Graph {
+    let edges: Vec<(V, V)> = (0..n).map(|i| (i as V, ((i + 1) % n) as V)).collect();
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Star: center 0 -> leaves.
+pub fn star(n: usize) -> Graph {
+    let edges: Vec<(V, V)> = (1..n).map(|i| (0, i as V)).collect();
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Complete directed graph on k vertices (no self loops).
+pub fn complete(k: usize) -> Graph {
+    let mut edges = Vec::with_capacity(k * (k - 1));
+    for u in 0..k as V {
+        for v in 0..k as V {
+            if u != v {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::from_edges(k, &edges, false)
+}
+
+/// Erdős–Rényi G(n, m) with uniform random directed edges.
+pub fn random_graph(n: usize, m: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let edges: Vec<(V, V)> = (0..m)
+        .map(|_| (rng.below(n as u64) as V, rng.below(n as u64) as V))
+        .collect();
+    Graph::from_edges(n, &edges, true)
+}
+
+// ---------------------------------------------------------------------------
+// Paper-category generators
+// ---------------------------------------------------------------------------
+
+/// Directed 2D grid `rows × cols` with east and south edges — the
+/// paper's own synthetic REC family ("10^3 × 10^5 grid" [24]).
+/// Undirected diameter ≈ rows + cols.
+pub fn grid(rows: usize, cols: usize) -> Graph {
+    let n = rows * cols;
+    let at = |r: usize, c: usize| (r * cols + c) as V;
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((at(r, c), at(r, c + 1)));
+            }
+            if r + 1 < rows {
+                edges.push((at(r, c), at(r + 1, c)));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Grid with each edge kept with probability `keep` — the paper's
+/// SREC ("sampled REC"): sparser, even larger effective diameter.
+pub fn sampled_grid(rows: usize, cols: usize, keep: f64, seed: u64) -> Graph {
+    let full = grid(rows, cols);
+    let mut rng = Rng::new(seed);
+    let edges: Vec<(V, V)> = full
+        .edges()
+        .into_iter()
+        .filter(|_| rng.chance(keep))
+        .collect();
+    Graph::from_edges(rows * cols, &edges, false)
+}
+
+/// Directed grid with back edges: east+south always, west/north each
+/// with probability `p_rev` — long cycles everywhere, so SCC is
+/// nontrivial while the diameter stays Θ(rows+cols). This matches the
+/// role of the [24] REC grid in the SCC evaluation (a pure east/south
+/// grid would be a DAG and trim away entirely).
+pub fn grid_cyclic(rows: usize, cols: usize, p_rev: f64, seed: u64) -> Graph {
+    let n = rows * cols;
+    let at = |r: usize, c: usize| (r * cols + c) as V;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(3 * n);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((at(r, c), at(r, c + 1)));
+                if rng.chance(p_rev) {
+                    edges.push((at(r, c + 1), at(r, c)));
+                }
+            }
+            if r + 1 < rows {
+                edges.push((at(r, c), at(r + 1, c)));
+                if rng.chance(p_rev) {
+                    edges.push((at(r + 1, c), at(r, c)));
+                }
+            }
+        }
+    }
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Road-network analog (AF/NA/AS/EU): a grid with random edge
+/// deletions, occasional diagonal shortcuts, and physical-ish weights.
+/// Sparse (avg degree ~2.6 directed), diameter Θ(rows+cols).
+pub fn road(rows: usize, cols: usize, seed: u64) -> Graph {
+    let n = rows * cols;
+    let at = |r: usize, c: usize| (r * cols + c) as V;
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(V, V, W)> = Vec::with_capacity(3 * n);
+    for r in 0..rows {
+        for c in 0..cols {
+            // Keep most lattice edges; weight = 1..20 ("road length").
+            // ~12% are one-way streets (the paper's road graphs are
+            // directed: m' < m in Table 2), so SCC is nontrivial.
+            if c + 1 < cols && rng.chance(0.92) {
+                let w = 1.0 + rng.below(20) as W;
+                edges.push((at(r, c), at(r, c + 1), w));
+                if rng.chance(0.88) {
+                    edges.push((at(r, c + 1), at(r, c), w));
+                }
+            }
+            if r + 1 < rows && rng.chance(0.92) {
+                let w = 1.0 + rng.below(20) as W;
+                edges.push((at(r, c), at(r + 1, c), w));
+                if rng.chance(0.88) {
+                    edges.push((at(r + 1, c), at(r, c), w));
+                }
+            }
+            // Rare diagonal shortcut (highway ramp).
+            if r + 1 < rows && c + 1 < cols && rng.chance(0.02) {
+                let w = 1.0 + rng.below(30) as W;
+                edges.push((at(r, c), at(r + 1, c + 1), w));
+                edges.push((at(r + 1, c + 1), at(r, c), w));
+            }
+        }
+    }
+    Graph::from_weighted_edges(n, &edges, true)
+}
+
+/// R-MAT power-law generator (social/web analog: LJ/TW/FB/OK/FS and
+/// WK/SD/CW/HL at small scale). `scale` = log2(n).
+pub fn rmat(scale: u32, m: usize, seed: u64, (a, b, c): (f64, f64, f64)) -> Graph {
+    let n = 1usize << scale;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (bu, bv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | bu;
+            v = (v << 1) | bv;
+        }
+        edges.push((u as V, v as V));
+    }
+    Graph::from_edges(n, &edges, true)
+}
+
+/// Social-network analog: RMAT with the GAPBS/Graph500 parameters.
+pub fn social(scale: u32, avg_deg: usize, seed: u64) -> Graph {
+    rmat(scale, (1usize << scale) * avg_deg, seed, (0.57, 0.19, 0.19))
+}
+
+/// Web-crawl analog: more skewed RMAT (larger hubs, pronounced
+/// bow-tie SCC structure when directed).
+pub fn web(scale: u32, avg_deg: usize, seed: u64) -> Graph {
+    rmat(scale, (1usize << scale) * avg_deg, seed, (0.65, 0.15, 0.15))
+}
+
+/// k-NN time-series analog (CH5): each vertex connects to `k`
+/// *preceding* vertices within a window — path-like global structure
+/// with very large diameter relative to size, like the paper's Chem
+/// sensor-series 5-NN graph.
+pub fn knn_chain(n: usize, k: usize, window: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(n * k);
+    for v in 1..n {
+        let w = window.min(v);
+        for _ in 0..k.min(w) {
+            let back = 1 + rng.below(w as u64) as usize;
+            edges.push((v as V, (v - back) as V));
+            // Mutual-neighbor pairs (~1/3, like real kNN graphs):
+            // gives the directed graph cycles so SCC is nontrivial.
+            if rng.chance(0.35) {
+                edges.push(((v - back) as V, v as V));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges, true)
+}
+
+/// k-NN point-cloud analog (GL5/GL10/COS5): uniform 2D points, each
+/// connected to its k nearest by grid-bucketed approximate search.
+/// Low degree, lattice-like, diameter ~√n.
+pub fn knn_points(n: usize, k: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+    // Bucket grid with ~1 point per cell.
+    let side = (n as f64).sqrt().ceil() as usize;
+    let cell_of = |p: (f64, f64)| {
+        let cx = ((p.0 * side as f64) as usize).min(side - 1);
+        let cy = ((p.1 * side as f64) as usize).min(side - 1);
+        (cx, cy)
+    };
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); side * side];
+    for (i, &p) in pts.iter().enumerate() {
+        let (cx, cy) = cell_of(p);
+        buckets[cy * side + cx].push(i as u32);
+    }
+    let mut edges: Vec<(V, V, W)> = Vec::with_capacity(n * k);
+    let mut cand: Vec<(f64, u32)> = Vec::new();
+    for (i, &p) in pts.iter().enumerate() {
+        cand.clear();
+        let (cx, cy) = cell_of(p);
+        // Expand rings until we have enough candidates.
+        let mut ring = 1usize;
+        loop {
+            cand.clear();
+            let x0 = cx.saturating_sub(ring);
+            let x1 = (cx + ring).min(side - 1);
+            let y0 = cy.saturating_sub(ring);
+            let y1 = (cy + ring).min(side - 1);
+            for y in y0..=y1 {
+                for x in x0..=x1 {
+                    for &j in &buckets[y * side + x] {
+                        if j as usize != i {
+                            let q = pts[j as usize];
+                            let d2 = (p.0 - q.0).powi(2) + (p.1 - q.1).powi(2);
+                            cand.push((d2, j));
+                        }
+                    }
+                }
+            }
+            if cand.len() >= k || (x1 - x0 + 1) >= side {
+                break;
+            }
+            ring += 1;
+        }
+        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(d2, j) in cand.iter().take(k) {
+            edges.push((i as V, j, (d2.sqrt() * 1000.0) as W + 1.0));
+        }
+    }
+    Graph::from_weighted_edges(n, &edges, true)
+}
+
+/// "Huge bubbles" analog (BBL): a long chain of small cycles
+/// ("bubbles") sharing articulation vertices — every bubble is one
+/// biconnected component; diameter Θ(n_bubbles · bubble).
+pub fn bubbles(n_bubbles: usize, bubble: usize, seed: u64) -> Graph {
+    assert!(bubble >= 3);
+    let mut rng = Rng::new(seed);
+    let n = n_bubbles * (bubble - 1) + 1;
+    let mut edges: Vec<(V, V)> = Vec::new();
+    let mut anchor: V = 0;
+    let mut next: V = 1;
+    for _ in 0..n_bubbles {
+        // Cycle: anchor -> next .. next+bubble-2 -> anchor.
+        let mut prev = anchor;
+        let first = next;
+        for _ in 0..bubble - 1 {
+            edges.push((prev, next));
+            edges.push((next, prev));
+            prev = next;
+            next += 1;
+        }
+        edges.push((prev, anchor));
+        edges.push((anchor, prev));
+        // Occasional chord makes some bubbles denser.
+        if bubble > 4 && rng.chance(0.3) {
+            let a = first + rng.below((bubble - 1) as u64) as V;
+            let b = first + rng.below((bubble - 1) as u64) as V;
+            if a != b {
+                edges.push((a, b));
+                edges.push((b, a));
+            }
+        }
+        anchor = prev; // chain: last vertex anchors the next bubble
+    }
+    let mut g = Graph::from_edges(n, &edges, true);
+    g.symmetric = true;
+    g
+}
+
+/// "Huge traces" analog (TRCE): a deep layered DAG with random
+/// forward edges, symmetrized — long and thin like execution traces.
+pub fn traces(layers: usize, width: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let n = layers * width;
+    let at = |l: usize, i: usize| (l * width + i) as V;
+    let mut edges: Vec<(V, V)> = Vec::new();
+    for l in 0..layers - 1 {
+        for i in 0..width {
+            // 1-3 forward edges to the next layer.
+            let deg = 1 + rng.below(3) as usize;
+            for _ in 0..deg {
+                edges.push((at(l, i), at(l + 1, rng.below(width as u64) as usize)));
+            }
+        }
+    }
+    let mut g = Graph::from_edges(n, &edges, true).symmetrize();
+    g.symmetric = true;
+    g
+}
+
+/// Attach deterministic pseudo-random weights in [1, 100] to any graph
+/// (for SSSP benchmarks on category analogs that are unweighted).
+pub fn with_random_weights(g: &Graph, seed: u64) -> Graph {
+    let mut g = g.clone();
+    let mut rng = Rng::new(seed);
+    g.weights = Some((0..g.m()).map(|_| 1.0 + rng.below(100) as W).collect());
+    g
+}
+
+// ---------------------------------------------------------------------------
+// The 22-graph suite (Table 2 analogs)
+// ---------------------------------------------------------------------------
+
+/// Paper categories (Table 2 row groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    Social,
+    Web,
+    Road,
+    Knn,
+    Synthetic,
+}
+
+impl Category {
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::Social => "Social",
+            Category::Web => "Web",
+            Category::Road => "Road",
+            Category::Knn => "kNN",
+            Category::Synthetic => "Synthetic",
+        }
+    }
+}
+
+/// Suite scale: Tiny for unit tests/CI, Small for benches (default),
+/// Medium for the headline runs in EXPERIMENTS.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Tiny,
+    Small,
+    Medium,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "tiny" => Some(Scale::Tiny),
+            "small" => Some(Scale::Small),
+            "medium" => Some(Scale::Medium),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Scale::Tiny => "tiny",
+            Scale::Small => "small",
+            Scale::Medium => "medium",
+        }
+    }
+}
+
+/// Per-scale size selector.
+fn sz(s: Scale, tiny: usize, small: usize, medium: usize) -> usize {
+    match s {
+        Scale::Tiny => tiny,
+        Scale::Small => small,
+        Scale::Medium => medium,
+    }
+}
+
+/// One graph of the suite: the paper's name, its category, whether the
+/// paper's version is directed, and the generator.
+pub struct SuiteEntry {
+    pub name: &'static str,
+    pub category: Category,
+    pub directed: bool,
+    gen_fn: fn(Scale) -> Graph,
+}
+
+impl SuiteEntry {
+    /// Generate at the given scale.
+    pub fn build(&self, scale: Scale) -> Graph {
+        (self.gen_fn)(scale)
+    }
+}
+
+macro_rules! entry {
+    ($name:literal, $cat:expr, $dir:expr, $f:expr) => {
+        SuiteEntry {
+            name: $name,
+            category: $cat,
+            directed: $dir,
+            gen_fn: $f,
+        }
+    };
+}
+
+/// The 22-graph suite mirroring Table 2. Names match the paper; sizes
+/// are scaled down (DESIGN.md §1). Directed entries correspond to the
+/// paper's directed graphs (SCC applies); undirected ones are built
+/// symmetric (BCC/BFS).
+pub fn suite() -> Vec<SuiteEntry> {
+    use Category::*;
+    vec![
+        // --- Social (power-law, small diameter) ---
+        entry!("LJ", Social, true, |s| social(
+            sz(s, 11, 14, 16) as u32,
+            14,
+            0x17
+        )),
+        entry!("FB", Social, false, |s| social(sz(s, 12, 15, 17) as u32, 3, 0xFB)
+            .symmetrize()),
+        entry!("OK", Social, false, |s| social(
+            sz(s, 10, 13, 15) as u32,
+            76,
+            0x0C
+        )
+        .symmetrize()),
+        entry!("TW", Social, true, |s| social(
+            sz(s, 12, 15, 17) as u32,
+            35,
+            0x72
+        )),
+        entry!("FS", Social, false, |s| social(
+            sz(s, 12, 15, 17) as u32,
+            55,
+            0xF5
+        )
+        .symmetrize()),
+        // --- Web (skewed power-law, directed, bow-tie) ---
+        entry!("WK", Web, true, |s| web(sz(s, 11, 14, 16) as u32, 25, 0x30)),
+        entry!("SD", Web, true, |s| web(sz(s, 12, 15, 17) as u32, 23, 0x5D)),
+        entry!("CW", Web, true, |s| web(sz(s, 13, 16, 18) as u32, 43, 0xC3)),
+        entry!("HL14", Web, true, |s| web(sz(s, 13, 16, 18) as u32, 37, 0x14)),
+        entry!("HL12", Web, true, |s| web(sz(s, 14, 17, 19) as u32, 36, 0x12)),
+        // --- Road (sparse mesh, large diameter) ---
+        entry!("AF", Road, true, |s| road(
+            sz(s, 50, 150, 300),
+            sz(s, 120, 350, 700),
+            0xAF
+        )),
+        entry!("NA", Road, true, |s| road(
+            sz(s, 80, 230, 460),
+            sz(s, 200, 600, 1200),
+            0x4A
+        )),
+        entry!("AS", Road, true, |s| road(
+            sz(s, 140, 400, 800),
+            sz(s, 130, 380, 760),
+            0xA5
+        )),
+        entry!("EU", Road, true, |s| road(
+            sz(s, 100, 280, 560),
+            sz(s, 260, 750, 1500),
+            0xE0
+        )),
+        // --- kNN (low degree, large diameter) ---
+        entry!("CH5", Knn, true, |s| knn_chain(
+            sz(s, 6_000, 50_000, 200_000),
+            5,
+            12,
+            0xC5
+        )),
+        entry!("GL5", Knn, true, |s| knn_points(
+            sz(s, 8_000, 60_000, 240_000),
+            5,
+            0x65
+        )),
+        entry!("GL10", Knn, true, |s| knn_points(
+            sz(s, 8_000, 60_000, 240_000),
+            10,
+            0x6A
+        )),
+        entry!("COS5", Knn, true, |s| knn_points(
+            sz(s, 25_000, 200_000, 800_000),
+            5,
+            0xC0
+        )),
+        // --- Synthetic (the paper's own grid family + net-repo analogs) ---
+        entry!("REC", Synthetic, true, |s| grid_cyclic(
+            sz(s, 50, 100, 200),
+            sz(s, 640, 2_560, 6_400),
+            0.5,
+            0x2EC
+        )),
+        entry!("SREC", Synthetic, true, |s| grid_cyclic(
+            sz(s, 50, 100, 200),
+            sz(s, 640, 2_560, 6_400),
+            0.2,
+            0x53
+        )),
+        entry!("TRCE", Synthetic, false, |s| traces(
+            sz(s, 400, 2_500, 8_000),
+            24,
+            0x7C
+        )),
+        entry!("BBL", Synthetic, false, |s| bubbles(
+            sz(s, 600, 4_000, 16_000),
+            10,
+            0xBB
+        )),
+    ]
+}
+
+/// Look up a suite entry by (paper) name.
+pub fn suite_entry(name: &str) -> Option<SuiteEntry> {
+    suite().into_iter().find(|e| e.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_and_cycle_shapes() {
+        let p = path(5);
+        assert_eq!(p.m(), 4);
+        assert_eq!(p.neighbors(4), &[] as &[V]);
+        let c = cycle(5);
+        assert_eq!(c.m(), 5);
+        assert_eq!(c.neighbors(4), &[0]);
+    }
+
+    #[test]
+    fn grid_has_expected_edge_count() {
+        let g = grid(3, 4);
+        assert_eq!(g.n(), 12);
+        // east: 3*(4-1)=9, south: (3-1)*4=8
+        assert_eq!(g.m(), 17);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn road_is_weighted_mostly_bidirectional() {
+        let g = road(20, 30, 1);
+        assert!(g.weights.is_some());
+        g.validate().unwrap();
+        let (mut two_way, mut total) = (0usize, 0usize);
+        for u in 0..g.n() as V {
+            for &v in g.neighbors(u) {
+                total += 1;
+                if g.neighbors(v).contains(&u) {
+                    two_way += 1;
+                }
+            }
+        }
+        // Most streets are two-way, but not all (one-way streets make
+        // SCC nontrivial, matching m' < m in the paper's Table 2).
+        assert!(two_way * 10 > total * 7, "{two_way}/{total}");
+        assert!(two_way < total, "some one-way streets expected");
+    }
+
+    #[test]
+    fn grid_cyclic_has_nontrivial_sccs() {
+        let g = grid_cyclic(10, 40, 0.5, 7);
+        g.validate().unwrap();
+        let scc = crate::algo::scc::tarjan_scc(&g);
+        let distinct: std::collections::HashSet<u32> = scc.iter().copied().collect();
+        assert!(distinct.len() < g.n(), "cycles must exist");
+        assert!(distinct.len() > 1 || g.n() == 1);
+    }
+
+    #[test]
+    fn rmat_is_power_lawish() {
+        let g = social(12, 16, 42);
+        g.validate().unwrap();
+        assert!(g.n() == 4096);
+        // Hubs exist: max degree far above average.
+        assert!(g.max_degree() > 16 * 8, "max deg {}", g.max_degree());
+    }
+
+    #[test]
+    fn knn_points_has_k_out_degree() {
+        let g = knn_points(500, 5, 3);
+        g.validate().unwrap();
+        let avg = g.m() as f64 / g.n() as f64;
+        assert!((4.0..=5.0).contains(&avg), "avg out-degree {avg}");
+    }
+
+    #[test]
+    fn bubbles_every_edge_bidirectional() {
+        let g = bubbles(10, 6, 9);
+        g.validate().unwrap();
+        for u in 0..g.n() as V {
+            for &v in g.neighbors(u) {
+                assert!(g.neighbors(v).contains(&u));
+            }
+        }
+    }
+
+    #[test]
+    fn traces_layered_structure() {
+        let g = traces(50, 8, 5);
+        g.validate().unwrap();
+        assert_eq!(g.n(), 400);
+        assert!(g.symmetric);
+    }
+
+    #[test]
+    fn suite_has_22_graphs_and_all_build_tiny() {
+        let s = suite();
+        assert_eq!(s.len(), 22);
+        for e in &s {
+            let g = e.build(Scale::Tiny);
+            g.validate()
+                .unwrap_or_else(|err| panic!("{}: {err}", e.name));
+            assert!(g.n() > 100, "{} too small: n={}", e.name, g.n());
+            if !e.directed {
+                assert!(g.symmetric, "{} should be symmetric", e.name);
+            }
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = social(10, 8, 7);
+        let b = social(10, 8, 7);
+        assert_eq!(a.targets, b.targets);
+        let a = road(10, 10, 3);
+        let b = road(10, 10, 3);
+        assert_eq!(a.targets, b.targets);
+    }
+}

@@ -1,0 +1,289 @@
+//! Graph file formats (the two formats the paper's library supports).
+//!
+//! * PBBS `.adj` — text "AdjacencyGraph" / "WeightedAdjacencyGraph"
+//!   from the Problem-Based Benchmark Suite [2]: header line, n, m,
+//!   then n offsets, m targets (and m weights when weighted).
+//! * GBBS-style `.bin` — little-endian binary: magic, flags, n, m,
+//!   offsets (u64), targets (u32), weights (f32, optional). Used to
+//!   cache generated suite graphs between bench runs.
+
+use super::csr::Graph;
+use crate::{V, W};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const BIN_MAGIC: &[u8; 8] = b"PASGAL01";
+const FLAG_SYMMETRIC: u64 = 1;
+const FLAG_WEIGHTED: u64 = 2;
+
+/// Write PBBS `.adj` text format.
+pub fn write_adj(g: &Graph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    let weighted = g.weights.is_some();
+    writeln!(
+        w,
+        "{}",
+        if weighted {
+            "WeightedAdjacencyGraph"
+        } else {
+            "AdjacencyGraph"
+        }
+    )?;
+    writeln!(w, "{}", g.n())?;
+    writeln!(w, "{}", g.m())?;
+    for v in 0..g.n() {
+        writeln!(w, "{}", g.offsets[v])?;
+    }
+    for &t in &g.targets {
+        writeln!(w, "{t}")?;
+    }
+    if let Some(ws) = &g.weights {
+        for &x in ws {
+            writeln!(w, "{x}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Read PBBS `.adj` text format.
+pub fn read_adj(path: &Path) -> Result<Graph> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut lines = BufReader::new(f).lines();
+    let mut next = || -> Result<String> {
+        loop {
+            match lines.next() {
+                Some(Ok(l)) => {
+                    let t = l.trim().to_string();
+                    if !t.is_empty() {
+                        return Ok(t);
+                    }
+                }
+                Some(Err(e)) => return Err(e.into()),
+                None => bail!("unexpected EOF in .adj file"),
+            }
+        }
+    };
+    let header = next()?;
+    let weighted = match header.as_str() {
+        "AdjacencyGraph" => false,
+        "WeightedAdjacencyGraph" => true,
+        h => bail!("bad .adj header {h:?}"),
+    };
+    let n: usize = next()?.parse().context("parsing n")?;
+    let m: usize = next()?.parse().context("parsing m")?;
+    let mut offsets = Vec::with_capacity(n + 1);
+    for i in 0..n {
+        let o: u64 = next()?.parse().with_context(|| format!("offset {i}"))?;
+        offsets.push(o);
+    }
+    offsets.push(m as u64);
+    let mut targets = Vec::with_capacity(m);
+    for i in 0..m {
+        let t: V = next()?.parse().with_context(|| format!("target {i}"))?;
+        targets.push(t);
+    }
+    let weights = if weighted {
+        let mut ws = Vec::with_capacity(m);
+        for i in 0..m {
+            let x: W = next()?.parse().with_context(|| format!("weight {i}"))?;
+            ws.push(x);
+        }
+        Some(ws)
+    } else {
+        None
+    };
+    let g = Graph {
+        offsets,
+        targets,
+        weights,
+        symmetric: false,
+    };
+    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
+}
+
+/// Write the binary `.bin` format.
+pub fn write_bin(g: &Graph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    let mut flags = 0u64;
+    if g.symmetric {
+        flags |= FLAG_SYMMETRIC;
+    }
+    if g.weights.is_some() {
+        flags |= FLAG_WEIGHTED;
+    }
+    w.write_all(&flags.to_le_bytes())?;
+    w.write_all(&(g.n() as u64).to_le_bytes())?;
+    w.write_all(&(g.m() as u64).to_le_bytes())?;
+    for &o in &g.offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &t in &g.targets {
+        w.write_all(&t.to_le_bytes())?;
+    }
+    if let Some(ws) = &g.weights {
+        for &x in ws {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the binary `.bin` format.
+pub fn read_bin(path: &Path) -> Result<Graph> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("bad magic in {path:?}");
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let flags = read_u64(&mut r)?;
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let mut offsets = vec![0u64; n + 1];
+    {
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(offsets.as_mut_ptr() as *mut u8, (n + 1) * 8)
+        };
+        r.read_exact(bytes)?;
+    }
+    let mut targets = vec![0 as V; m];
+    {
+        let bytes =
+            unsafe { std::slice::from_raw_parts_mut(targets.as_mut_ptr() as *mut u8, m * 4) };
+        r.read_exact(bytes)?;
+    }
+    let weights = if flags & FLAG_WEIGHTED != 0 {
+        let mut ws = vec![0.0 as W; m];
+        let bytes =
+            unsafe { std::slice::from_raw_parts_mut(ws.as_mut_ptr() as *mut u8, m * 4) };
+        r.read_exact(bytes)?;
+        Some(ws)
+    } else {
+        None
+    };
+    let g = Graph {
+        offsets,
+        targets,
+        weights,
+        symmetric: flags & FLAG_SYMMETRIC != 0,
+    };
+    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
+}
+
+/// Load a graph by extension (.adj or .bin).
+pub fn read_graph(path: &Path) -> Result<Graph> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("adj") => read_adj(path),
+        Some("bin") => read_bin(path),
+        other => bail!("unknown graph extension {other:?} (want .adj or .bin)"),
+    }
+}
+
+/// Build-or-load cache: generate `name` at `scale` once, cache as
+/// `.bin` under `cache_dir`, reuse on subsequent calls. Keeps bench
+/// runs fast and deterministic.
+pub fn cached_suite_graph(
+    cache_dir: &Path,
+    entry: &super::gen::SuiteEntry,
+    scale: super::gen::Scale,
+) -> Result<Graph> {
+    std::fs::create_dir_all(cache_dir)?;
+    let path = cache_dir.join(format!("{}_{}.bin", entry.name, scale.label()));
+    if path.exists() {
+        if let Ok(g) = read_bin(&path) {
+            return Ok(g);
+        }
+    }
+    let g = entry.build(scale);
+    write_bin(&g, &path)?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("pasgal_io_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn adj_roundtrip_unweighted() {
+        let g = gen::social(8, 6, 3);
+        let p = tmpdir().join("t1.adj");
+        write_adj(&g, &p).unwrap();
+        let h = read_adj(&p).unwrap();
+        assert_eq!(g.offsets, h.offsets);
+        assert_eq!(g.targets, h.targets);
+        assert!(h.weights.is_none());
+    }
+
+    #[test]
+    fn adj_roundtrip_weighted() {
+        let g = gen::road(8, 9, 1);
+        let p = tmpdir().join("t2.adj");
+        write_adj(&g, &p).unwrap();
+        let h = read_adj(&p).unwrap();
+        assert_eq!(g.targets, h.targets);
+        assert_eq!(g.weights, h.weights);
+    }
+
+    #[test]
+    fn bin_roundtrip_preserves_everything() {
+        let g = gen::road(10, 12, 5);
+        let p = tmpdir().join("t3.bin");
+        write_bin(&g, &p).unwrap();
+        let h = read_bin(&p).unwrap();
+        assert_eq!(g.offsets, h.offsets);
+        assert_eq!(g.targets, h.targets);
+        assert_eq!(g.weights, h.weights);
+        assert_eq!(g.symmetric, h.symmetric);
+    }
+
+    #[test]
+    fn bin_rejects_bad_magic() {
+        let p = tmpdir().join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC0000000000000000").unwrap();
+        assert!(read_bin(&p).is_err());
+    }
+
+    #[test]
+    fn read_graph_dispatches_on_extension() {
+        let g = gen::path(10);
+        let d = tmpdir();
+        let pa = d.join("t4.adj");
+        let pb = d.join("t4.bin");
+        write_adj(&g, &pa).unwrap();
+        write_bin(&g, &pb).unwrap();
+        assert_eq!(read_graph(&pa).unwrap().targets, g.targets);
+        assert_eq!(read_graph(&pb).unwrap().targets, g.targets);
+        assert!(read_graph(&d.join("t4.xyz")).is_err());
+    }
+
+    #[test]
+    fn cached_suite_graph_hits_cache() {
+        let d = tmpdir().join("cache");
+        let entry = gen::suite_entry("LJ").unwrap();
+        let a = cached_suite_graph(&d, &entry, gen::Scale::Tiny).unwrap();
+        let before = std::fs::metadata(d.join("LJ_tiny.bin")).unwrap().modified().unwrap();
+        let b = cached_suite_graph(&d, &entry, gen::Scale::Tiny).unwrap();
+        let after = std::fs::metadata(d.join("LJ_tiny.bin")).unwrap().modified().unwrap();
+        assert_eq!(a.targets, b.targets);
+        assert_eq!(before, after, "second call must not regenerate");
+    }
+}

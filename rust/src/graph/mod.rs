@@ -1,0 +1,22 @@
+//! Graph substrate: CSR representation, builders, generators, file
+//! formats, and statistics.
+//!
+//! * [`csr`] — compressed sparse row [`Graph`] with parallel
+//!   construction from edge lists, transpose and symmetrization.
+//! * [`gen`] — deterministic generators for every category the paper
+//!   evaluates (social/web power-law, road-like grids, k-NN,
+//!   synthetic grids/chains/bubbles/traces) plus the scaled-down
+//!   22-graph suite standing in for Table 2 (see DESIGN.md §1 for the
+//!   substitution argument).
+//! * [`io`] — PBBS `.adj` text format and a GBBS-style `.bin` binary
+//!   format, reader + writer.
+//! * [`stats`] — degree statistics and sampled-search diameter
+//!   estimation (the paper's Table 1 `D`/`D'` methodology).
+
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod stats;
+
+pub use csr::Graph;
+pub use gen::{suite, Category, Scale, SuiteEntry};

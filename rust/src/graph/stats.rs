@@ -1,0 +1,165 @@
+//! Graph statistics — Table 1/2 methodology.
+//!
+//! The paper reports n, m (undirected/symmetrized), m' (directed),
+//! D (undirected diameter) and D' (directed diameter), where the
+//! diameters are lower bounds from ≥1000 sampled searches. We do the
+//! same with sampled BFS sweeps (plus the classic double-sweep
+//! heuristic that chases the farthest vertex found so far).
+
+use super::csr::Graph;
+use crate::prop::Rng;
+use crate::V;
+
+/// Summary row for one graph (a Table 1 line).
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub n: usize,
+    pub m: usize,
+    pub max_degree: usize,
+    pub avg_degree: f64,
+    /// Lower bound on the diameter (hop distance) from sampled sweeps.
+    pub diameter_lb: usize,
+    /// Number of vertices reachable from the best-known sweep source
+    /// (contextualizes the bound on disconnected graphs).
+    pub reached: usize,
+}
+
+/// Sequential BFS returning (farthest vertex, eccentricity, #reached).
+/// Plain queue BFS — stats are offline, simplicity wins.
+fn bfs_ecc(g: &Graph, src: V) -> (V, usize, usize) {
+    let n = g.n();
+    let mut dist = vec![u32::MAX; n];
+    let mut queue = std::collections::VecDeque::new();
+    dist[src as usize] = 0;
+    queue.push_back(src);
+    let (mut far, mut ecc, mut cnt) = (src, 0usize, 0usize);
+    while let Some(u) = queue.pop_front() {
+        cnt += 1;
+        let du = dist[u as usize];
+        if du as usize > ecc {
+            ecc = du as usize;
+            far = u;
+        }
+        for &v in g.neighbors(u) {
+            if dist[v as usize] == u32::MAX {
+                dist[v as usize] = du + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    (far, ecc, cnt)
+}
+
+/// Diameter lower bound by `samples` random-start double sweeps.
+pub fn estimate_diameter(g: &Graph, samples: usize, seed: u64) -> (usize, usize) {
+    let n = g.n();
+    if n == 0 {
+        return (0, 0);
+    }
+    let mut rng = Rng::new(seed);
+    let mut best = 0usize;
+    let mut best_reached = 0usize;
+    for _ in 0..samples.max(1) {
+        let s = rng.below(n as u64) as V;
+        let (far, ecc, cnt) = bfs_ecc(g, s);
+        if ecc > best {
+            best = ecc;
+        }
+        if cnt > best_reached {
+            best_reached = cnt;
+        }
+        // Double sweep: re-run from the farthest vertex found.
+        let (_, ecc2, cnt2) = bfs_ecc(g, far);
+        if ecc2 > best {
+            best = ecc2;
+        }
+        if cnt2 > best_reached {
+            best_reached = cnt2;
+        }
+    }
+    (best, best_reached)
+}
+
+/// Compute the stats row. `samples` sweeps for the diameter bound
+/// (the paper uses 1000 on huge graphs; a handful suffices at our
+/// scale because double sweeps converge fast on meshes).
+pub fn stats(g: &Graph, samples: usize, seed: u64) -> GraphStats {
+    let n = g.n();
+    let m = g.m();
+    let (diameter_lb, reached) = estimate_diameter(g, samples, seed);
+    GraphStats {
+        n,
+        m,
+        max_degree: g.max_degree(),
+        avg_degree: if n > 0 { m as f64 / n as f64 } else { 0.0 },
+        diameter_lb,
+        reached,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn path_diameter_exact() {
+        let g = gen::path(50).symmetrize();
+        let (d, reached) = estimate_diameter(&g, 4, 1);
+        assert_eq!(d, 49);
+        assert_eq!(reached, 50);
+    }
+
+    #[test]
+    fn cycle_diameter_half() {
+        let g = gen::cycle(100).symmetrize();
+        let (d, _) = estimate_diameter(&g, 4, 2);
+        assert_eq!(d, 50);
+    }
+
+    #[test]
+    fn grid_diameter_rows_plus_cols() {
+        let g = gen::grid(10, 20).symmetrize();
+        let (d, _) = estimate_diameter(&g, 6, 3);
+        assert_eq!(d, 28); // (10-1) + (20-1)
+    }
+
+    #[test]
+    fn star_diameter_two() {
+        let g = gen::star(1000).symmetrize();
+        let (d, _) = estimate_diameter(&g, 3, 4);
+        assert_eq!(d, 2);
+    }
+
+    #[test]
+    fn directed_diameter_larger_than_undirected() {
+        // Directed cycle: eccentricity n-1; symmetrized: n/2.
+        let g = gen::cycle(40);
+        let (dd, _) = estimate_diameter(&g, 4, 5);
+        let (du, _) = estimate_diameter(&g.symmetrize(), 4, 5);
+        assert_eq!(dd, 39);
+        assert_eq!(du, 20);
+    }
+
+    #[test]
+    fn stats_fields_consistent() {
+        let g = gen::social(10, 8, 9);
+        let s = stats(&g, 3, 6);
+        assert_eq!(s.n, 1024);
+        assert_eq!(s.m, g.m());
+        assert!(s.avg_degree > 1.0);
+        assert!(s.max_degree >= s.avg_degree as usize);
+    }
+
+    #[test]
+    fn suite_large_diameter_graphs_have_large_diameter() {
+        // The substitution argument (DESIGN.md §1) requires the
+        // analogs to land in the right diameter regime.
+        let rec = gen::grid(50, 640).symmetrize();
+        let (d_rec, _) = estimate_diameter(&rec, 2, 7);
+        assert!(d_rec >= 600, "REC tiny analog diameter {d_rec}");
+        let lj = gen::social(11, 14, 0x17).symmetrize();
+        let (d_lj, _) = estimate_diameter(&lj, 2, 8);
+        assert!(d_lj <= 30, "LJ tiny analog diameter {d_lj}");
+    }
+}

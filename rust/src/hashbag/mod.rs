@@ -1,0 +1,320 @@
+//! Concurrent hash bag — the frontier data structure of PASGAL
+//! (Wang, Dong, Gu, Sun — SIGMOD'23 [24]).
+//!
+//! A frontier-based algorithm needs a set the parallel round can
+//! *insert into* concurrently (vertices claimed for the next round)
+//! and then *extract in parallel* — without knowing the frontier size
+//! in advance, and paying O(frontier) rather than O(n) to extract.
+//!
+//! The bag is a sequence of geometrically growing hash chunks. Inserts
+//! hash into the currently active chunk with bounded linear probing;
+//! when a chunk saturates (probe failures or load factor), the
+//! inserter advances the shared active index and retries in the next,
+//! twice-as-large chunk. Slot arrays are allocated lazily, so an
+//! algorithm that touches a tiny frontier never pays for a big one.
+//! Extraction packs occupied slots of the chunks actually used.
+//!
+//! Duplicate values are allowed (it is a bag): PASGAL algorithms claim
+//! a vertex with a CAS *before* inserting, so each vertex enters at
+//! most once per round — except where the algorithm explicitly allows
+//! re-insertion (ρ-stepping re-relaxation), which bag semantics
+//! supports for free.
+
+use crate::parallel::{pack, parallel_for};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Sentinel for an empty slot. Graphs cap vertex ids below u32::MAX.
+const EMPTY: u32 = u32::MAX;
+
+/// Probe budget per chunk before spilling into the next one.
+const PROBE_LIMIT: usize = 16;
+
+/// Load factor (percent) at which inserters advance to the next chunk.
+const LOAD_PCT: usize = 60;
+
+/// Smallest chunk capacity (power of two).
+const MIN_CHUNK: usize = 1 << 12;
+
+struct Chunk {
+    /// Lazily allocated slot array (len = cap, all EMPTY when fresh).
+    slots: Mutex<Option<Box<[AtomicU32]>>>,
+    /// Readable pointer once allocated (set exactly once under the
+    /// mutex; readers load with Acquire).
+    ptr: std::sync::atomic::AtomicPtr<AtomicU32>,
+    cap: usize,
+    /// Approximate occupancy (monotone within a round).
+    count: AtomicUsize,
+}
+
+impl Chunk {
+    fn new(cap: usize) -> Self {
+        Chunk {
+            slots: Mutex::new(None),
+            ptr: std::sync::atomic::AtomicPtr::new(std::ptr::null_mut()),
+            cap,
+            count: AtomicUsize::new(0),
+        }
+    }
+
+    /// Slot array, allocating on first touch.
+    fn ensure(&self) -> &[AtomicU32] {
+        let p = self.ptr.load(Ordering::Acquire);
+        if !p.is_null() {
+            return unsafe { std::slice::from_raw_parts(p, self.cap) };
+        }
+        let mut guard = self.slots.lock().unwrap();
+        if guard.is_none() {
+            let boxed: Box<[AtomicU32]> = (0..self.cap).map(|_| AtomicU32::new(EMPTY)).collect();
+            let raw = boxed.as_ptr() as *mut AtomicU32;
+            *guard = Some(boxed);
+            self.ptr.store(raw, Ordering::Release);
+        }
+        let p = self.ptr.load(Ordering::Acquire);
+        unsafe { std::slice::from_raw_parts(p, self.cap) }
+    }
+
+    /// Slot array if already allocated.
+    fn get(&self) -> Option<&[AtomicU32]> {
+        let p = self.ptr.load(Ordering::Acquire);
+        (!p.is_null()).then(|| unsafe { std::slice::from_raw_parts(p, self.cap) })
+    }
+}
+
+/// The concurrent hash bag.
+pub struct HashBag {
+    chunks: Vec<Chunk>,
+    active: AtomicUsize,
+    /// Cold-path spill for inserts beyond the sized capacity (bag
+    /// semantics allow unbounded duplicates; correctness must not
+    /// depend on the sizing heuristic).
+    overflow: Mutex<Vec<u32>>,
+    overflow_len: AtomicUsize,
+}
+
+fn hash32(x: u32, salt: u32) -> u32 {
+    // fmix32 finalizer — good avalanche, cheap.
+    let mut h = x ^ salt.wrapping_mul(0x9E3779B9);
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^ (h >> 16)
+}
+
+impl HashBag {
+    /// A bag able to hold up to ~`max_elems` values (chunk capacities
+    /// double from [`MIN_CHUNK`] until they cover that).
+    pub fn new(max_elems: usize) -> Self {
+        let mut chunks = Vec::new();
+        let mut cap = MIN_CHUNK;
+        let mut covered = 0usize;
+        // Total capacity must cover max_elems even at the load-factor
+        // threshold; one extra jumbo chunk gives headroom.
+        while covered * LOAD_PCT / 100 < max_elems.max(1) {
+            chunks.push(Chunk::new(cap));
+            covered += cap;
+            cap *= 2;
+        }
+        chunks.push(Chunk::new(cap));
+        HashBag {
+            chunks,
+            active: AtomicUsize::new(0),
+            overflow: Mutex::new(Vec::new()),
+            overflow_len: AtomicUsize::new(0),
+        }
+    }
+
+    /// Insert a value (thread-safe). Falls back to the mutex-guarded
+    /// overflow vector if every chunk saturates (cold path).
+    pub fn insert(&self, v: u32) {
+        debug_assert_ne!(v, EMPTY, "u32::MAX is the empty sentinel");
+        let mut ci = self.active.load(Ordering::Relaxed);
+        loop {
+            if ci >= self.chunks.len() {
+                self.overflow.lock().unwrap().push(v);
+                self.overflow_len.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            let chunk = &self.chunks[ci];
+            if chunk.count.load(Ordering::Relaxed) * 100 < chunk.cap * LOAD_PCT {
+                let slots = chunk.ensure();
+                let mask = chunk.cap - 1;
+                let mut idx = hash32(v, ci as u32) as usize & mask;
+                let mut ok = false;
+                for _ in 0..PROBE_LIMIT {
+                    match slots[idx].compare_exchange(
+                        EMPTY,
+                        v,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => {
+                            ok = true;
+                            break;
+                        }
+                        Err(_) => idx = (idx + 1) & mask,
+                    }
+                }
+                if ok {
+                    chunk.count.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+            // Chunk saturated: advance the shared active index (racy
+            // CAS is fine — losers just retry in the new chunk).
+            let _ =
+                self.active
+                    .compare_exchange(ci, ci + 1, Ordering::Relaxed, Ordering::Relaxed);
+            ci = self.active.load(Ordering::Relaxed).max(ci + 1);
+        }
+    }
+
+    /// Approximate number of elements currently stored.
+    pub fn len_approx(&self) -> usize {
+        self.chunks
+            .iter()
+            .map(|c| c.count.load(Ordering::Relaxed))
+            .sum::<usize>()
+            + self.overflow_len.load(Ordering::Relaxed)
+    }
+
+    /// True if no element was inserted since the last `extract_and_clear`.
+    pub fn is_empty(&self) -> bool {
+        self.len_approx() == 0
+    }
+
+    /// Parallel-pack all stored values out, resetting the bag for the
+    /// next round. Cost is O(capacity of touched chunks), i.e.
+    /// O(frontier), not O(n).
+    pub fn extract_and_clear(&self) -> Vec<u32> {
+        let hi = (self.active.load(Ordering::Acquire) + 1).min(self.chunks.len());
+        let mut out = Vec::new();
+        for chunk in &self.chunks[..hi] {
+            let Some(slots) = chunk.get() else { continue };
+            if chunk.count.load(Ordering::Relaxed) == 0 {
+                continue;
+            }
+            // Pack occupied slots, then clear them.
+            let vals = pack(
+                unsafe {
+                    // &[AtomicU32] -> &[u32] snapshot view for packing:
+                    // no concurrent inserts during extract by contract.
+                    std::slice::from_raw_parts(slots.as_ptr() as *const u32, slots.len())
+                },
+                |i| slots[i].load(Ordering::Relaxed) != EMPTY,
+            );
+            parallel_for(0, slots.len(), 4096, |i| {
+                slots[i].store(EMPTY, Ordering::Relaxed);
+            });
+            chunk.count.store(0, Ordering::Relaxed);
+            out.extend_from_slice(&vals);
+        }
+        {
+            let mut spill = self.overflow.lock().unwrap();
+            out.append(&mut spill);
+            self.overflow_len.store(0, Ordering::Relaxed);
+        }
+        self.active.store(0, Ordering::Release);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Rng};
+
+    #[test]
+    fn insert_then_extract_roundtrips() {
+        let bag = HashBag::new(10_000);
+        for v in 0..1000u32 {
+            bag.insert(v);
+        }
+        let mut out = bag.extract_and_clear();
+        out.sort();
+        assert_eq!(out, (0..1000u32).collect::<Vec<_>>());
+        assert!(bag.is_empty());
+    }
+
+    #[test]
+    fn extract_clears_for_reuse() {
+        let bag = HashBag::new(1000);
+        bag.insert(7);
+        assert_eq!(bag.extract_and_clear(), vec![7]);
+        assert!(bag.extract_and_clear().is_empty());
+        bag.insert(9);
+        assert_eq!(bag.extract_and_clear(), vec![9]);
+    }
+
+    #[test]
+    fn handles_more_than_one_chunk() {
+        let n = MIN_CHUNK * 4;
+        let bag = HashBag::new(n);
+        for v in 0..n as u32 {
+            bag.insert(v);
+        }
+        let mut out = bag.extract_and_clear();
+        out.sort();
+        assert_eq!(out.len(), n);
+        assert_eq!(out, (0..n as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn duplicates_are_kept_bag_semantics() {
+        let bag = HashBag::new(100);
+        bag.insert(5);
+        bag.insert(5);
+        bag.insert(5);
+        let out = bag.extract_and_clear();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|&v| v == 5));
+    }
+
+    #[test]
+    fn concurrent_inserts_lose_nothing() {
+        let n = 80_000u32;
+        let threads = 8;
+        let bag = HashBag::new(n as usize);
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let bag = &bag;
+                s.spawn(move || {
+                    let mut v = t;
+                    while v < n {
+                        bag.insert(v);
+                        v += threads;
+                    }
+                });
+            }
+        });
+        let mut out = bag.extract_and_clear();
+        out.sort();
+        assert_eq!(out, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lazy_allocation_small_frontier_touches_one_chunk() {
+        let bag = HashBag::new(1 << 20);
+        bag.insert(1);
+        bag.insert(2);
+        let allocated = bag.chunks.iter().filter(|c| c.get().is_some()).count();
+        assert_eq!(allocated, 1, "small frontier must not allocate big chunks");
+    }
+
+    #[test]
+    fn prop_random_batches_roundtrip() {
+        forall(0xBA6, |rng: &mut Rng| {
+            let n = rng.range(1, 5000);
+            let bag = HashBag::new(n);
+            let mut expect: Vec<u32> = (0..n).map(|_| rng.below(1 << 30) as u32).collect();
+            for &v in &expect {
+                bag.insert(v);
+            }
+            let mut out = bag.extract_and_clear();
+            out.sort();
+            expect.sort();
+            assert_eq!(out, expect);
+        });
+    }
+}

@@ -1,0 +1,46 @@
+//! # PASGAL — Parallel And Scalable Graph Algorithm Library (reproduction)
+//!
+//! A from-scratch reproduction of *PASGAL: Parallel And Scalable Graph
+//! Algorithm Library* (Dong, Gu, Sun, Wang — SPAA 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the graph library and every substrate it
+//!   needs: a work-stealing fork-join runtime ([`parallel`]), the
+//!   concurrent hash-bag frontier structure ([`hashbag`]), CSR graphs,
+//!   generators and I/O ([`graph`]), the paper's algorithms and all
+//!   published baselines ([`algo`]), a deterministic virtual-multicore
+//!   simulator for scalability studies ([`sim`]), an analysis-job
+//!   coordinator ([`coordinator`]), and a PJRT runtime that executes
+//!   AOT-compiled dense kernels ([`runtime`]).
+//! * **L2/L1 (build time)** — JAX + Pallas tropical-semiring kernels,
+//!   lowered once to `artifacts/*.hlo.txt` by `make artifacts`; Python
+//!   never runs on the request path.
+//!
+//! The paper's core technique, **vertical granularity control (VGC)**,
+//! is implemented in [`parallel::vgc`] and used by the PASGAL variants
+//! of BFS ([`algo::bfs`]), SCC ([`algo::scc`]) and SSSP
+//! ([`algo::sssp`]); BCC uses the FAST-BCC algorithm ([`algo::bcc`]).
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod algo;
+pub mod bench;
+pub mod coordinator;
+pub mod graph;
+pub mod hashbag;
+pub mod parallel;
+pub mod prop;
+pub mod runtime;
+pub mod sim;
+
+/// Vertex id type. 32-bit like the paper's default build (the paper
+/// notes Multistep fails beyond 32-bit ids; we keep u32 and document
+/// the same limit).
+pub type V = u32;
+
+/// Edge weight type for weighted algorithms.
+pub type W = f32;
+
+/// Sentinel "infinite" distance matching the L1 kernels' convention.
+pub const INF: f32 = 1.0e18;

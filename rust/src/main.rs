@@ -1,0 +1,323 @@
+//! `pasgal` — launcher CLI for the PASGAL reproduction.
+//!
+//! Subcommands (offline crate set has no clap; parsing is by hand):
+//!
+//! ```text
+//! pasgal gen    --name LJ --scale small --out lj.bin
+//! pasgal stats  --suite [--scale tiny] | --graph path.bin
+//! pasgal run    --algo bfs-vgc --graph path.bin --source 0 [--tau 512] [--p 192]
+//! pasgal serve  --demo [--requests 64]
+//! pasgal table1|table3|table4|table5|sssp|fig1|fig2   [--scale tiny]
+//! pasgal calibrate
+//! ```
+
+use anyhow::{bail, Context, Result};
+use pasgal::algo::{bcc, bfs, scc, sssp};
+use pasgal::bench::suite as bsuite;
+use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
+use pasgal::graph::gen::{suite_entry, Scale};
+use pasgal::graph::{io, stats};
+use pasgal::sim::{makespan, AlgoTrace, CostModel};
+use pasgal::{parallel, V};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Minimal `--key value` / `--flag` argument map.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            }
+            i += 1;
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn scale(&self) -> Scale {
+        self.get("scale")
+            .and_then(Scale::parse)
+            .unwrap_or_else(bsuite::env_scale)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let result = match cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "stats" => cmd_stats(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "calibrate" => cmd_calibrate(),
+        "table1" => print_ok(bsuite::table1_graphs(args.scale())),
+        "table3" => print_ok(bsuite::table3_bcc(args.scale())),
+        "table4" => print_ok(bsuite::table4_scc(args.scale())),
+        "table5" => print_ok(bsuite::table5_bfs(args.scale())),
+        "sssp" => print_ok(bsuite::table_sssp(args.scale())),
+        "fig1" => print_ok(bsuite::fig1_scc_scalability(args.scale())),
+        "fig2" => print_ok(bsuite::fig2_speedup(args.scale())),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            Err(anyhow::anyhow!("unknown command {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("pasgal: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_ok(s: String) -> Result<()> {
+    println!("{s}");
+    Ok(())
+}
+
+fn print_usage() {
+    eprintln!(
+        "pasgal — Parallel And Scalable Graph Algorithm Library (reproduction)
+
+USAGE: pasgal <command> [--key value ...]
+
+  gen       --name <LJ|TW|AF|REC|...> [--scale tiny|small|medium] --out g.bin
+  stats     --suite [--scale tiny]  |  --graph g.bin
+  run       --algo <bfs-vgc|bfs-frontier|bfs-diropt|scc-vgc|scc-multistep|
+                    bcc-fast|sssp-rho|sssp-delta> --graph g.bin
+            [--source 0] [--tau 512] [--p 192]  (report simulated speedup)
+  serve     --demo [--requests 64]   coordinator demo over a workload trace
+  table1 | table3 | table4 | table5 | sssp | fig1 | fig2   [--scale tiny]
+  calibrate                          measure + print the sim cost model
+"
+    );
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let name = args.get("name").context("--name required")?;
+    let out = PathBuf::from(args.get("out").context("--out required")?);
+    let entry = suite_entry(name).with_context(|| format!("unknown suite graph {name:?}"))?;
+    let g = entry.build(args.scale());
+    match out.extension().and_then(|e| e.to_str()) {
+        Some("adj") => io::write_adj(&g, &out)?,
+        _ => io::write_bin(&g, &out)?,
+    }
+    println!(
+        "wrote {} (n={}, m={}, directed={}) to {}",
+        name,
+        g.n(),
+        g.m(),
+        entry.directed,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    if args.has("suite") {
+        println!("{}", bsuite::table1_graphs(args.scale()));
+        return Ok(());
+    }
+    let path = PathBuf::from(args.get("graph").context("--graph or --suite required")?);
+    let g = io::read_graph(&path)?;
+    let s = stats::stats(&g, args.num("samples", 4), 0x57);
+    println!(
+        "n={} m={} avg_deg={:.2} max_deg={} diameter_lb={} reached={}",
+        s.n, s.m, s.avg_degree, s.max_degree, s.diameter_lb, s.reached
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let algo = args.get("algo").context("--algo required")?;
+    let path = PathBuf::from(args.get("graph").context("--graph required")?);
+    let g = io::read_graph(&path)?;
+    let src: V = args.num("source", 0);
+    let tau: usize = args.num("tau", 512);
+    let p: usize = args.num("p", bsuite::SIM_P);
+    let model = CostModel::default();
+    let mut trace = AlgoTrace::new();
+
+    let (label, t1core) = match algo {
+        "bfs-vgc" => {
+            let (_, d) = pasgal::bench::time_once(|| bfs::vgc_bfs(&g, src, tau, Some(&mut trace)));
+            ("bfs-vgc", d)
+        }
+        "bfs-frontier" => {
+            let (_, d) =
+                pasgal::bench::time_once(|| bfs::frontier_bfs(&g, src, Some(&mut trace)));
+            ("bfs-frontier", d)
+        }
+        "bfs-diropt" => {
+            let gt = if g.symmetric { None } else { Some(g.transpose()) };
+            let (_, d) = pasgal::bench::time_once(|| {
+                bfs::diropt_bfs(&g, gt.as_ref().or(Some(&g)), src, Some(&mut trace))
+            });
+            ("bfs-diropt", d)
+        }
+        "scc-vgc" => {
+            let (_, d) =
+                pasgal::bench::time_once(|| scc::vgc_scc(&g, None, tau, 42, Some(&mut trace)));
+            ("scc-vgc", d)
+        }
+        "scc-multistep" => {
+            let (_, d) =
+                pasgal::bench::time_once(|| scc::multistep_scc(&g, None, Some(&mut trace)));
+            ("scc-multistep", d)
+        }
+        "bcc-fast" => {
+            let sym = if g.symmetric { g.clone() } else { g.symmetrize() };
+            let (_, d) = pasgal::bench::time_once(|| bcc::fast_bcc(&sym, Some(&mut trace)));
+            ("bcc-fast", d)
+        }
+        "sssp-rho" => {
+            let (_, d) =
+                pasgal::bench::time_once(|| sssp::rho_stepping(&g, src, tau, Some(&mut trace)));
+            ("sssp-rho", d)
+        }
+        "sssp-delta" => {
+            let (_, d) =
+                pasgal::bench::time_once(|| sssp::delta_stepping(&g, src, None, Some(&mut trace)));
+            ("sssp-delta", d)
+        }
+        other => bail!("unknown algo {other:?} (see `pasgal help`)"),
+    };
+
+    let sim_ns = makespan(&trace, &model, p);
+    let seq_ns = model.seq_time(g.n() as u64, g.m() as u64);
+    println!(
+        "{label}: n={} m={} rounds={} t1core={:?} sim{p}={:.3}ms speedup_vs_seq_model={:.2}x",
+        g.n(),
+        g.m(),
+        trace.num_rounds(),
+        t1core,
+        sim_ns / 1e6,
+        seq_ns / sim_ns
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests: usize = args.num("requests", 64);
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let coord = match pasgal::runtime::EngineHandle::spawn(artifacts) {
+        Ok(engine) => {
+            let (specs, tiles, _) = engine.info()?;
+            println!(
+                "dense engine loaded ({} relax + {} closure artifacts)",
+                specs.len(),
+                tiles.len()
+            );
+            Coordinator::with_engine(engine)
+        }
+        Err(e) => {
+            println!("no dense engine ({e}); serving sparse algorithms only");
+            Coordinator::new()
+        }
+    };
+    coord.load_graph("road", pasgal::graph::gen::road(60, 140, 0xAF));
+    coord.load_graph("social", pasgal::graph::gen::social(12, 14, 0x17));
+    println!("loaded graphs: road (large-diameter), social (small-diameter)");
+
+    let algos = [
+        AlgoKind::BfsVgc { tau: 512 },
+        AlgoKind::SsspRho { tau: 512 },
+        AlgoKind::SccVgc { tau: 512 },
+        AlgoKind::Bcc,
+        AlgoKind::DenseClosure { block: 64 },
+    ];
+    let mut reqs = pasgal::coordinator::workload(&["road", "social"], &algos, requests, 7);
+    for r in &mut reqs {
+        r.source %= 4000; // clamp into the smallest loaded graph
+    }
+    let (req_tx, req_rx) = std::sync::mpsc::channel::<JobRequest>();
+    let (res_tx, res_rx) = std::sync::mpsc::channel();
+    let coord = std::sync::Arc::new(coord);
+    let server = {
+        let coord = std::sync::Arc::clone(&coord);
+        std::thread::spawn(move || coord.serve(req_rx, res_tx, 16))
+    };
+    let t0 = std::time::Instant::now();
+    for r in reqs {
+        req_tx.send(r).unwrap();
+    }
+    drop(req_tx);
+    let mut done = 0usize;
+    for res in res_rx {
+        done += 1;
+        if done <= 5 {
+            println!(
+                "  job {} {} -> {:?} ({}ms)",
+                res.id,
+                res.algo,
+                res.output,
+                res.exec.as_millis()
+            );
+        }
+    }
+    server.join().unwrap();
+    let wall = t0.elapsed();
+    println!(
+        "served {done} jobs in {:.2}s ({:.1} jobs/s, threads={})",
+        wall.as_secs_f64(),
+        done as f64 / wall.as_secs_f64(),
+        parallel::num_threads()
+    );
+    for name in coord.metrics.series_names() {
+        if let Some(s) = coord.metrics.summary(&name) {
+            println!(
+                "  {name}: count={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+                s.count, s.mean_ms, s.p50_ms, s.p95_ms, s.p99_ms
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<()> {
+    let pool = parallel::pool::global();
+    let m = CostModel::calibrate(pool);
+    println!("calibrated cost model (ns):");
+    println!("  c_task      = {:.1}", m.c_task);
+    println!("  c_vertex    = {:.2}", m.c_vertex);
+    println!("  c_edge      = {:.2}", m.c_edge);
+    println!("  sync_base   = {:.0}", m.sync_base);
+    println!("  sync_log    = {:.0} (per log2 P, literature-scaled)", m.sync_log);
+    println!("  sync_linear = {:.0} (per P, literature-scaled)", m.sync_linear);
+    println!("pool: threads={} steals={}", pool.threads(), pool.steal_count());
+    Ok(())
+}

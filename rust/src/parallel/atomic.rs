@@ -1,0 +1,159 @@
+//! Lock-free helpers the graph algorithms lean on.
+//!
+//! All PASGAL frontier algorithms race to update per-vertex state
+//! (tentative distance, label, visited bit) with `min`-style CAS loops
+//! — the "write-min" primitive of the paper's framework.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+/// Atomically `slot = min(slot, value)`. Returns `true` iff `value`
+/// strictly improved the slot (the caller "won" and should propagate).
+#[inline]
+pub fn write_min_u32(slot: &AtomicU32, value: u32) -> bool {
+    let mut cur = slot.load(Ordering::Relaxed);
+    while value < cur {
+        match slot.compare_exchange_weak(cur, value, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(seen) => cur = seen,
+        }
+    }
+    false
+}
+
+/// Atomically `slot = min(slot, value)` on u64.
+#[inline]
+pub fn write_min_u64(slot: &AtomicU64, value: u64) -> bool {
+    let mut cur = slot.load(Ordering::Relaxed);
+    while value < cur {
+        match slot.compare_exchange_weak(cur, value, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(seen) => cur = seen,
+        }
+    }
+    false
+}
+
+/// Atomic f32 min via the order-preserving bit trick: for
+/// non-negative finite floats, the IEEE-754 bit pattern ordering as
+/// u32 equals the numeric ordering, so `write_min_u32` on `to_bits`
+/// is a numeric min. All PASGAL distances are non-negative.
+#[inline]
+pub fn write_min_f32(slot: &AtomicU32, value: f32) -> bool {
+    debug_assert!(value >= 0.0, "bit-trick min requires non-negative floats");
+    write_min_u32(slot, value.to_bits())
+}
+
+/// Read an f32 stored with [`write_min_f32`].
+#[inline]
+pub fn load_f32(slot: &AtomicU32) -> f32 {
+    f32::from_bits(slot.load(Ordering::Relaxed))
+}
+
+/// One-shot claim of a flag slot (e.g. BFS "visited"): returns true
+/// for exactly one caller.
+#[inline]
+pub fn claim(slot: &AtomicU32, from: u32, to: u32) -> bool {
+    slot.compare_exchange(from, to, Ordering::AcqRel, Ordering::Relaxed)
+        .is_ok()
+}
+
+/// Fetch-add convenience on usize counters.
+#[inline]
+pub fn bump(counter: &AtomicUsize, by: usize) -> usize {
+    counter.fetch_add(by, Ordering::Relaxed)
+}
+
+/// Reinterpret a `&mut [u32]` as `&[AtomicU32]` for a parallel phase.
+///
+/// Sound because `AtomicU32` has the same layout as `u32` and the
+/// borrow is exclusive for its lifetime.
+#[inline]
+pub fn as_atomic_u32(slice: &mut [u32]) -> &[AtomicU32] {
+    unsafe { &*(slice as *mut [u32] as *const [AtomicU32]) }
+}
+
+/// Reinterpret a `&mut [u64]` as `&[AtomicU64]`.
+#[inline]
+pub fn as_atomic_u64(slice: &mut [u64]) -> &[AtomicU64] {
+    unsafe { &*(slice as *mut [u64] as *const [AtomicU64]) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_min_improves_only_downward() {
+        let a = AtomicU32::new(10);
+        assert!(write_min_u32(&a, 5));
+        assert_eq!(a.load(Ordering::Relaxed), 5);
+        assert!(!write_min_u32(&a, 7));
+        assert_eq!(a.load(Ordering::Relaxed), 5);
+        assert!(!write_min_u32(&a, 5));
+    }
+
+    #[test]
+    fn f32_min_bit_trick_orders_correctly() {
+        let a = AtomicU32::new(crate::INF.to_bits());
+        assert!(write_min_f32(&a, 3.5));
+        assert!((load_f32(&a) - 3.5).abs() < 1e-9);
+        assert!(!write_min_f32(&a, 4.0));
+        assert!(write_min_f32(&a, 0.25));
+        assert!((load_f32(&a) - 0.25).abs() < 1e-9);
+        assert!(write_min_f32(&a, 0.0));
+        assert_eq!(load_f32(&a), 0.0);
+    }
+
+    #[test]
+    fn claim_is_exclusive() {
+        let a = AtomicU32::new(0);
+        assert!(claim(&a, 0, 1));
+        assert!(!claim(&a, 0, 2));
+        assert_eq!(a.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn claim_under_contention_admits_exactly_one() {
+        use std::sync::Arc;
+        let a = Arc::new(AtomicU32::new(0));
+        let wins: usize = std::thread::scope(|s| {
+            (0..8)
+                .map(|i| {
+                    let a = Arc::clone(&a);
+                    s.spawn(move || claim(&a, 0, i + 1) as usize)
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .sum()
+        });
+        assert_eq!(wins, 1);
+    }
+
+    #[test]
+    fn concurrent_write_min_settles_at_global_min() {
+        use std::sync::Arc;
+        let a = Arc::new(AtomicU32::new(u32::MAX));
+        std::thread::scope(|s| {
+            for t in 0..8u32 {
+                let a = Arc::clone(&a);
+                s.spawn(move || {
+                    for i in 0..1000u32 {
+                        write_min_u32(&a, 1 + ((t * 1000 + i) % 997));
+                    }
+                });
+            }
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn as_atomic_roundtrip() {
+        let mut v = vec![1u32, 2, 3];
+        {
+            let at = as_atomic_u32(&mut v);
+            at[1].store(42, Ordering::Relaxed);
+        }
+        assert_eq!(v, vec![1, 42, 3]);
+    }
+}

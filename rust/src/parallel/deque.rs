@@ -1,0 +1,268 @@
+//! Chase–Lev work-stealing deque.
+//!
+//! Implementation follows Lê, Pop, Cohen & Zappa Nardelli, *Correct
+//! and Efficient Work-Stealing for Weak Memory Models* (PPoPP'13),
+//! specialized to single-word items ([`JobRef`]). The owner pushes and
+//! pops at the bottom; thieves steal from the top with a CAS.
+//!
+//! Growth strategy: the owner doubles the circular buffer and *leaks*
+//! the old one. A stale thief may still read a slot from a retired
+//! buffer, but its subsequent CAS on `top` fails, so the value is
+//! discarded; leaking keeps that read memory-safe without an epoch
+//! reclamation scheme. Total leaked memory is bounded by twice the
+//! final buffer size (geometric series), and deques live for the
+//! process lifetime anyway.
+
+use super::job::JobRef;
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
+
+const INITIAL_CAP: usize = 256;
+
+struct Buffer {
+    cap: usize, // power of two
+    slots: Box<[AtomicUsize]>,
+}
+
+impl Buffer {
+    fn new(cap: usize) -> Box<Buffer> {
+        assert!(cap.is_power_of_two());
+        let slots = (0..cap).map(|_| AtomicUsize::new(0)).collect();
+        Box::new(Buffer { cap, slots })
+    }
+
+    #[inline]
+    fn get(&self, i: isize) -> JobRef {
+        let raw = self.slots[(i as usize) & (self.cap - 1)].load(Ordering::Relaxed);
+        JobRef(raw as *mut _)
+    }
+
+    #[inline]
+    fn put(&self, i: isize, job: JobRef) {
+        self.slots[(i as usize) & (self.cap - 1)].store(job.0 as usize, Ordering::Relaxed);
+    }
+}
+
+/// Result of a steal attempt.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Steal {
+    Empty,
+    Retry,
+    Success(JobRef),
+}
+
+/// The deque. Owner-side calls (`push`, `pop`) must come from one
+/// thread; `steal` may be called from any thread.
+pub struct Deque {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    buf: AtomicPtr<Buffer>,
+}
+
+unsafe impl Send for Deque {}
+unsafe impl Sync for Deque {}
+
+impl Deque {
+    pub fn new() -> Self {
+        Deque {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(Box::into_raw(Buffer::new(INITIAL_CAP))),
+        }
+    }
+
+    /// Approximate occupancy (monitoring only).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner: push a job at the bottom.
+    pub fn push(&self, job: JobRef) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        if b - t >= buf.cap as isize - 1 {
+            buf = self.grow(b, t, buf);
+        }
+        buf.put(b, job);
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner: pop from the bottom (LIFO).
+    pub fn pop(&self) -> Option<JobRef> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let job = buf.get(b);
+            if t == b {
+                // Last element: race the thieves for it.
+                let won = self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                if won {
+                    Some(job)
+                } else {
+                    None
+                }
+            } else {
+                Some(job)
+            }
+        } else {
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Thief: steal from the top (FIFO).
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t < b {
+            let buf = unsafe { &*self.buf.load(Ordering::Acquire) };
+            let job = buf.get(t);
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_err()
+            {
+                return Steal::Retry;
+            }
+            Steal::Success(job)
+        } else {
+            Steal::Empty
+        }
+    }
+
+    /// Owner-only: double the buffer, copying live elements. Old
+    /// buffer is intentionally leaked (see module docs).
+    fn grow(&self, b: isize, t: isize, old: &Buffer) -> &Buffer {
+        let new = Buffer::new(old.cap * 2);
+        for i in t..b {
+            new.put(i, old.get(i));
+        }
+        let ptr = Box::into_raw(new);
+        self.buf.store(ptr, Ordering::Release);
+        unsafe { &*ptr }
+    }
+}
+
+impl Default for Deque {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::job::JobHeader;
+
+    fn fake_job(i: usize) -> JobRef {
+        // Tests only move pointers around; they never execute them.
+        JobRef((i * 8 + 8) as *mut JobHeader)
+    }
+
+    #[test]
+    fn lifo_for_owner() {
+        let d = Deque::new();
+        d.push(fake_job(1));
+        d.push(fake_job(2));
+        assert_eq!(d.pop(), Some(fake_job(2)));
+        assert_eq!(d.pop(), Some(fake_job(1)));
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn fifo_for_thief() {
+        let d = Deque::new();
+        d.push(fake_job(1));
+        d.push(fake_job(2));
+        assert_eq!(d.steal(), Steal::Success(fake_job(1)));
+        assert_eq!(d.steal(), Steal::Success(fake_job(2)));
+        assert_eq!(d.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn grow_preserves_contents() {
+        let d = Deque::new();
+        let n = INITIAL_CAP * 4;
+        for i in 0..n {
+            d.push(fake_job(i));
+        }
+        assert_eq!(d.len(), n);
+        for i in (0..n).rev() {
+            assert_eq!(d.pop(), Some(fake_job(i)));
+        }
+    }
+
+    #[test]
+    fn concurrent_steal_no_loss_no_dup() {
+        use std::collections::HashSet;
+        use std::sync::atomic::{AtomicBool, Ordering as O};
+        use std::sync::Mutex;
+
+        let d = Deque::new();
+        let n = 20_000usize;
+        let seen = Mutex::new(HashSet::new());
+        let done = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        match d.steal() {
+                            Steal::Success(j) => local.push(j.0 as usize),
+                            Steal::Retry => {}
+                            Steal::Empty => {
+                                if done.load(O::Acquire) {
+                                    break;
+                                }
+                                std::hint::spin_loop();
+                            }
+                        }
+                    }
+                    let mut set = seen.lock().unwrap();
+                    for v in local {
+                        assert!(set.insert(v), "duplicate steal of {v:#x}");
+                    }
+                });
+            }
+            // Owner interleaves pushes and pops.
+            let mut popped = Vec::new();
+            for i in 0..n {
+                d.push(fake_job(i));
+                if i % 3 == 0 {
+                    if let Some(j) = d.pop() {
+                        popped.push(j.0 as usize);
+                    }
+                }
+            }
+            while let Some(j) = d.pop() {
+                popped.push(j.0 as usize);
+            }
+            done.store(true, O::Release);
+            // merge owner's pops after thieves finish
+            s.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            });
+            let mut set = seen.lock().unwrap();
+            for v in popped {
+                assert!(set.insert(v), "duplicate pop of {v:#x}");
+            }
+        });
+        let set = seen.lock().unwrap();
+        assert_eq!(set.len(), n, "lost {} jobs", n - set.len());
+    }
+}

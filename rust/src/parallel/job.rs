@@ -1,0 +1,170 @@
+//! Type-erased jobs for the work-stealing scheduler.
+//!
+//! A deque slot must be a single machine word (stealers CAS `top` and
+//! read the slot non-atomically-paired), so jobs are erased to a raw
+//! pointer to a header whose first field is the execute thunk —
+//! rayon's `JobRef` scheme, simplified.
+
+use super::latch::{CountLatch, Latch, SpinLatch};
+use std::mem::ManuallyDrop;
+
+/// First field of every concrete job type; the deque stores `*mut JobHeader`.
+#[repr(C)]
+pub struct JobHeader {
+    /// Called exactly once; consumes the job's payload.
+    pub exec: unsafe fn(*mut JobHeader),
+}
+
+/// Single-word erased reference to a pending job.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct JobRef(pub *mut JobHeader);
+
+unsafe impl Send for JobRef {}
+
+impl JobRef {
+    /// Execute (and logically consume) the job.
+    ///
+    /// # Safety
+    /// Must be called exactly once per job instance, and the job
+    /// storage must still be alive (guaranteed by `StackJob`'s scoped
+    /// usage and `HeapJob`'s boxed ownership).
+    pub unsafe fn execute(self) {
+        ((*self.0).exec)(self.0)
+    }
+}
+
+/// A job whose closure and result live in the spawning stack frame
+/// (used by `join`: frame outlives the job by construction).
+///
+/// Panics in the job are caught and stored, then re-thrown on the
+/// joining thread by [`StackJob::take_result`] — a panic must not
+/// unwind through the worker loop (it would kill the worker and
+/// deadlock every waiter).
+#[repr(C)]
+pub struct StackJob<F, R> {
+    header: JobHeader,
+    func: ManuallyDrop<F>,
+    pub result: Option<std::thread::Result<R>>,
+    pub latch: SpinLatch,
+}
+
+impl<F, R> StackJob<F, R>
+where
+    F: FnOnce() -> R + Send,
+    R: Send,
+{
+    pub fn new(func: F) -> Self {
+        StackJob {
+            header: JobHeader {
+                exec: Self::exec_thunk,
+            },
+            func: ManuallyDrop::new(func),
+            result: None,
+            latch: SpinLatch::new(),
+        }
+    }
+
+    pub fn as_job_ref(&mut self) -> JobRef {
+        JobRef(&mut self.header as *mut JobHeader)
+    }
+
+    unsafe fn exec_thunk(header: *mut JobHeader) {
+        let this = &mut *(header as *mut Self);
+        let func = ManuallyDrop::take(&mut this.func);
+        this.result = Some(std::panic::catch_unwind(std::panic::AssertUnwindSafe(func)));
+        this.latch.set();
+    }
+
+    /// Run inline on the owning thread (un-stolen pop fast path).
+    pub unsafe fn run_inline(&mut self) {
+        let func = ManuallyDrop::take(&mut self.func);
+        self.result = Some(std::panic::catch_unwind(std::panic::AssertUnwindSafe(func)));
+        self.latch.set();
+    }
+
+    /// Unwrap the result, re-throwing a stored panic.
+    pub fn take_result(&mut self) -> R {
+        match self.result.take().expect("join: missing forked result") {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+}
+
+/// A heap-owned fire-and-forget job (used by the injector for external
+/// submissions and scope spawns); decrements `done` when finished.
+#[repr(C)]
+pub struct HeapJob<F> {
+    header: JobHeader,
+    func: ManuallyDrop<F>,
+    done: *const CountLatch,
+}
+
+impl<F> HeapJob<F>
+where
+    F: FnOnce() + Send,
+{
+    /// Box the job and return its erased ref. `done` must outlive the
+    /// job's execution (the pool's `install`/`scope` guarantee it).
+    pub fn push(func: F, done: *const CountLatch) -> JobRef {
+        let boxed = Box::new(HeapJob {
+            header: JobHeader {
+                exec: Self::exec_thunk,
+            },
+            func: ManuallyDrop::new(func),
+            done,
+        });
+        JobRef(Box::into_raw(boxed) as *mut JobHeader)
+    }
+
+    unsafe fn exec_thunk(header: *mut JobHeader) {
+        let mut boxed = Box::from_raw(header as *mut Self);
+        let func = ManuallyDrop::take(&mut boxed.func);
+        let done = boxed.done;
+        drop(boxed);
+        func();
+        if !done.is_null() {
+            (*done).done();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn stack_job_roundtrip() {
+        let mut job = StackJob::new(|| 21 * 2);
+        let r = job.as_job_ref();
+        unsafe { r.execute() };
+        assert!(job.latch.probe());
+        assert_eq!(job.take_result(), 42);
+    }
+
+    #[test]
+    fn stack_job_captures_panic() {
+        let mut job = StackJob::new(|| -> u32 { panic!("boom") });
+        let r = job.as_job_ref();
+        unsafe { r.execute() }; // must not unwind here
+        assert!(job.latch.probe());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.take_result()));
+        assert!(caught.is_err(), "panic must re-throw at take_result");
+    }
+
+    #[test]
+    fn heap_job_runs_and_counts_down() {
+        let hit = AtomicUsize::new(0);
+        let latch = CountLatch::new(1);
+        let r = HeapJob::push(
+            || {
+                hit.fetch_add(1, Ordering::SeqCst);
+            },
+            &latch as *const CountLatch,
+        );
+        unsafe { r.execute() };
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+        assert!(latch.probe());
+    }
+}

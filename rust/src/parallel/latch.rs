@@ -1,0 +1,130 @@
+//! Completion latches for the scheduler.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Minimal latch interface: one-way false -> true.
+pub trait Latch {
+    fn set(&self);
+    fn probe(&self) -> bool;
+}
+
+/// Set-once flag probed by a worker that steals while waiting.
+#[derive(Default)]
+pub struct SpinLatch {
+    set: AtomicBool,
+}
+
+impl SpinLatch {
+    pub fn new() -> Self {
+        SpinLatch {
+            set: AtomicBool::new(false),
+        }
+    }
+}
+
+impl Latch for SpinLatch {
+    #[inline]
+    fn set(&self) {
+        self.set.store(true, Ordering::Release);
+    }
+    #[inline]
+    fn probe(&self) -> bool {
+        self.set.load(Ordering::Acquire)
+    }
+}
+
+/// Blocking latch for external (non-worker) threads: `wait` parks on a
+/// condvar until a worker calls `set`.
+pub struct LockLatch {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl LockLatch {
+    pub fn new() -> Self {
+        LockLatch {
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+}
+
+impl Latch for LockLatch {
+    fn set(&self) {
+        *self.done.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+    fn probe(&self) -> bool {
+        *self.done.lock().unwrap()
+    }
+}
+
+/// Counts down to zero; used by scopes / batched injections.
+pub struct CountLatch {
+    remaining: AtomicUsize,
+}
+
+impl CountLatch {
+    pub fn new(count: usize) -> Self {
+        CountLatch {
+            remaining: AtomicUsize::new(count),
+        }
+    }
+
+    pub fn add(&self, n: usize) {
+        self.remaining.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn done(&self) {
+        self.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    pub fn probe(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spin_latch_transitions_once() {
+        let l = SpinLatch::new();
+        assert!(!l.probe());
+        l.set();
+        assert!(l.probe());
+    }
+
+    #[test]
+    fn count_latch_counts() {
+        let l = CountLatch::new(2);
+        assert!(!l.probe());
+        l.done();
+        assert!(!l.probe());
+        l.done();
+        assert!(l.probe());
+    }
+
+    #[test]
+    fn lock_latch_wakes_waiter() {
+        use std::sync::Arc;
+        let l = Arc::new(LockLatch::new());
+        let l2 = Arc::clone(&l);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            l2.set();
+        });
+        l.wait();
+        assert!(l.probe());
+        h.join().unwrap();
+    }
+}

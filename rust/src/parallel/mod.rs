@@ -1,0 +1,44 @@
+//! Fork-join parallel runtime (the ParlayLib-role substrate).
+//!
+//! PASGAL's subject is *scheduling overhead*: on large-diameter graphs
+//! the per-round cost of distributing and synchronizing threads
+//! dominates the tiny per-round work. To study that honestly we own
+//! the scheduler end-to-end:
+//!
+//! * [`deque`] — Chase–Lev work-stealing deques (per worker).
+//! * [`pool`] — persistent worker pool with a global injector,
+//!   fork-join [`join`], and worker parking.
+//! * [`ops`] — flat data-parallel primitives: [`parallel_for`],
+//!   [`parallel_reduce`], [`scan_inplace`], [`pack`], built on `join`
+//!   with (horizontal) granularity control.
+//! * [`sort`] — parallel stable merge sort.
+//! * [`vgc`] — **vertical granularity control**: the paper's core
+//!   technique. A τ-budgeted local search that lets one scheduled task
+//!   advance many hops, hiding scheduling overhead (§2.1 of the
+//!   paper).
+//! * [`atomic`] — lock-free min/CAS helpers used by the algorithms.
+//!
+//! Thread count comes from `PASGAL_THREADS` or
+//! `std::thread::available_parallelism`.
+
+pub mod atomic;
+pub mod deque;
+mod job;
+mod latch;
+pub mod ops;
+pub mod pool;
+pub mod sort;
+pub mod vgc;
+
+pub use ops::{pack, pack_index, parallel_for, parallel_reduce, scan_inplace};
+pub use pool::{join, num_threads, with_pool, Pool, Scope};
+pub use sort::parallel_sort_by_key;
+pub use vgc::LocalSearch;
+
+/// Default horizontal granularity (iterations per leaf task) for
+/// `parallel_for` when the caller has no better estimate.
+pub const DEFAULT_GRAIN: usize = 1024;
+
+/// Default vertical granularity τ: minimum vertices visited per local
+/// search (paper §2.1; tuned by `benches/ablation_tau.rs`).
+pub const DEFAULT_TAU: usize = 512;

@@ -1,0 +1,357 @@
+//! Flat data-parallel primitives built on [`join`].
+//!
+//! These are the ParlayLib-style building blocks the graph algorithms
+//! use between frontier rounds: `parallel_for` (with horizontal
+//! granularity control), `parallel_reduce`, blocked exclusive
+//! `scan_inplace`, and `pack`/`pack_index` (filter-by-flag, the
+//! frontier-compaction primitive).
+
+use super::pool::join;
+
+/// Raw pointer wrapper so disjoint writes can cross the `join`
+/// boundary. Safety contract: every call site must write disjoint
+/// index ranges.
+#[derive(Copy, Clone)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline]
+    pub(crate) unsafe fn add(self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+
+/// Parallel `for i in lo..hi { f(i) }` with leaf size `grain`.
+///
+/// Recursive binary splitting over the index range; leaves run
+/// sequentially. `grain` is the paper's *horizontal* granularity
+/// control: the task size below which scheduling overhead would
+/// exceed useful work.
+pub fn parallel_for<F>(lo: usize, hi: usize, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for_ref(lo, hi, grain.max(1), &f);
+}
+
+fn parallel_for_ref<F>(lo: usize, hi: usize, grain: usize, f: &F)
+where
+    F: Fn(usize) + Sync,
+{
+    if hi <= lo {
+        return;
+    }
+    if hi - lo <= grain {
+        for i in lo..hi {
+            f(i);
+        }
+        return;
+    }
+    let mid = lo + (hi - lo) / 2;
+    join(
+        || parallel_for_ref(lo, mid, grain, f),
+        || parallel_for_ref(mid, hi, grain, f),
+    );
+}
+
+/// Parallel loop over *chunks*: `f(chunk_index, lo..hi)` for
+/// consecutive ranges of length `grain` (last one shorter). Used where
+/// the body wants chunk-local state (e.g. a VGC local-search stack).
+pub fn parallel_for_chunks<F>(lo: usize, hi: usize, grain: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let grain = grain.max(1);
+    if hi <= lo {
+        return;
+    }
+    let chunks = (hi - lo).div_ceil(grain);
+    parallel_for(0, chunks, 1, |c| {
+        let s = lo + c * grain;
+        let e = (s + grain).min(hi);
+        f(c, s..e);
+    });
+}
+
+/// Parallel reduction of `map(i)` over `lo..hi` with an associative
+/// `combine` and identity `id`.
+pub fn parallel_reduce<R, M, C>(lo: usize, hi: usize, grain: usize, id: R, map: M, combine: C) -> R
+where
+    R: Send + Sync + Clone,
+    M: Fn(usize) -> R + Sync,
+    C: Fn(R, R) -> R + Sync,
+{
+    reduce_ref(lo, hi, grain.max(1), &id, &map, &combine)
+}
+
+fn reduce_ref<R, M, C>(lo: usize, hi: usize, grain: usize, id: &R, map: &M, combine: &C) -> R
+where
+    R: Send + Sync + Clone,
+    M: Fn(usize) -> R + Sync,
+    C: Fn(R, R) -> R + Sync,
+{
+    if hi <= lo {
+        return id.clone();
+    }
+    if hi - lo <= grain {
+        let mut acc = id.clone();
+        for i in lo..hi {
+            acc = combine(acc, map(i));
+        }
+        return acc;
+    }
+    let mid = lo + (hi - lo) / 2;
+    let (a, b) = join(
+        || reduce_ref(lo, mid, grain, id, map, combine),
+        || reduce_ref(mid, hi, grain, id, map, combine),
+    );
+    combine(a, b)
+}
+
+/// Exclusive prefix sum in place; returns the total. Blocked two-pass
+/// (block sums, sequential scan of block sums, parallel fix-up).
+pub fn scan_inplace(v: &mut [usize]) -> usize {
+    let n = v.len();
+    if n == 0 {
+        return 0;
+    }
+    let block = scan_block_size(n);
+    let nblocks = n.div_ceil(block);
+    if nblocks <= 1 {
+        return seq_exclusive_scan(v);
+    }
+    // Pass 1: per-block totals.
+    let mut sums = vec![0usize; nblocks];
+    {
+        let vp = SendPtr(v.as_mut_ptr());
+        let sp = SendPtr(sums.as_mut_ptr());
+        parallel_for(0, nblocks, 1, |b| unsafe {
+            let s = b * block;
+            let e = (s + block).min(n);
+            let mut acc = 0usize;
+            for i in s..e {
+                acc += *vp.add(i);
+            }
+            *sp.add(b) = acc;
+        });
+    }
+    // Sequential scan of block sums (nblocks is small).
+    let total = seq_exclusive_scan(&mut sums);
+    // Pass 2: per-block exclusive scan with block offset.
+    {
+        let vp = SendPtr(v.as_mut_ptr());
+        let sums_ref = &sums;
+        parallel_for(0, nblocks, 1, move |b| unsafe {
+            let s = b * block;
+            let e = (s + block).min(n);
+            let mut acc = sums_ref[b];
+            for i in s..e {
+                let x = *vp.add(i);
+                *vp.add(i) = acc;
+                acc += x;
+            }
+        });
+    }
+    total
+}
+
+fn scan_block_size(n: usize) -> usize {
+    let t = super::pool::num_threads();
+    (n.div_ceil(4 * t)).clamp(1024, 1 << 16).min(n.max(1))
+}
+
+fn seq_exclusive_scan(v: &mut [usize]) -> usize {
+    let mut acc = 0usize;
+    for x in v.iter_mut() {
+        let cur = *x;
+        *x = acc;
+        acc += cur;
+    }
+    acc
+}
+
+/// Keep `input[i]` where `keep(i)`; returns the packed vector in
+/// order. The frontier-compaction primitive.
+pub fn pack<T, F>(input: &[T], keep: F) -> Vec<T>
+where
+    T: Copy + Send + Sync,
+    F: Fn(usize) -> bool + Sync,
+{
+    let n = input.len();
+    let mut counts = count_blocks(n, &keep);
+    let total = scan_inplace(&mut counts);
+    let mut out: Vec<T> = Vec::with_capacity(total);
+    {
+        let op = SendPtr(out.as_mut_ptr());
+        let block = pack_block_size(n);
+        let counts_ref = &counts;
+        let keep_ref = &keep;
+        parallel_for(0, counts.len(), 1, move |b| unsafe {
+            let s = b * block;
+            let e = (s + block).min(n);
+            let mut w = counts_ref[b];
+            for i in s..e {
+                if keep_ref(i) {
+                    *op.add(w) = input[i];
+                    w += 1;
+                }
+            }
+        });
+    }
+    unsafe { out.set_len(total) };
+    out
+}
+
+/// Indices `i in 0..n` with `keep(i)`, in order.
+pub fn pack_index<F>(n: usize, keep: F) -> Vec<u32>
+where
+    F: Fn(usize) -> bool + Sync,
+{
+    let mut counts = count_blocks(n, &keep);
+    let total = scan_inplace(&mut counts);
+    let mut out: Vec<u32> = Vec::with_capacity(total);
+    {
+        let op = SendPtr(out.as_mut_ptr());
+        let block = pack_block_size(n);
+        let counts_ref = &counts;
+        let keep_ref = &keep;
+        parallel_for(0, counts.len(), 1, move |b| unsafe {
+            let s = b * block;
+            let e = (s + block).min(n);
+            let mut w = counts_ref[b];
+            for i in s..e {
+                if keep_ref(i) {
+                    *op.add(w) = i as u32;
+                    w += 1;
+                }
+            }
+        });
+    }
+    unsafe { out.set_len(total) };
+    out
+}
+
+fn pack_block_size(n: usize) -> usize {
+    scan_block_size(n)
+}
+
+fn count_blocks<F>(n: usize, keep: &F) -> Vec<usize>
+where
+    F: Fn(usize) -> bool + Sync,
+{
+    if n == 0 {
+        return vec![0];
+    }
+    let block = pack_block_size(n);
+    let nblocks = n.div_ceil(block);
+    let mut counts = vec![0usize; nblocks];
+    {
+        let cp = SendPtr(counts.as_mut_ptr());
+        parallel_for(0, nblocks, 1, move |b| unsafe {
+            let s = b * block;
+            let e = (s + block).min(n);
+            let mut c = 0usize;
+            for i in s..e {
+                if keep(i) {
+                    c += 1;
+                }
+            }
+            *cp.add(b) = c;
+        });
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let n = 100_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(0, n, 128, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_empty_and_single() {
+        parallel_for(5, 5, 10, |_| panic!("must not run"));
+        let hit = AtomicUsize::new(0);
+        parallel_for(7, 8, 10, |i| {
+            assert_eq!(i, 7);
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chunks_partition_range() {
+        let total = AtomicU64::new(0);
+        let chunks = AtomicUsize::new(0);
+        parallel_for_chunks(3, 1003, 97, |_, r| {
+            chunks.fetch_add(1, Ordering::Relaxed);
+            total.fetch_add(r.map(|x| x as u64).sum::<u64>(), Ordering::Relaxed);
+        });
+        let want: u64 = (3..1003u64).sum();
+        assert_eq!(total.load(Ordering::Relaxed), want);
+        assert_eq!(chunks.load(Ordering::Relaxed), 1000usize.div_ceil(97));
+    }
+
+    #[test]
+    fn reduce_sums() {
+        let s = parallel_reduce(0, 1_000_001, 1000, 0u64, |i| i as u64, |a, b| a + b);
+        assert_eq!(s, 500_000_500_000);
+    }
+
+    #[test]
+    fn reduce_empty_is_identity() {
+        let s = parallel_reduce(10, 10, 4, 7u64, |_| 0, |a, b| a + b);
+        assert_eq!(s, 7);
+    }
+
+    #[test]
+    fn scan_matches_sequential() {
+        for n in [0usize, 1, 2, 1023, 1024, 1025, 100_000] {
+            let mut v: Vec<usize> = (0..n).map(|i| (i * 7 + 3) % 11).collect();
+            let mut expect = v.clone();
+            let mut acc = 0;
+            for x in expect.iter_mut() {
+                let c = *x;
+                *x = acc;
+                acc += c;
+            }
+            let total = scan_inplace(&mut v);
+            assert_eq!(total, acc, "n={n}");
+            assert_eq!(v, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pack_keeps_order() {
+        let input: Vec<u32> = (0..50_000).collect();
+        let out = pack(&input, |i| i % 3 == 0);
+        let expect: Vec<u32> = (0..50_000).filter(|x| x % 3 == 0).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn pack_index_matches_filter() {
+        let out = pack_index(10_000, |i| i % 7 == 2);
+        let expect: Vec<u32> = (0..10_000u32).filter(|x| x % 7 == 2).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn pack_all_and_none() {
+        let input = [5u32; 100];
+        assert_eq!(pack(&input, |_| true).len(), 100);
+        assert!(pack(&input, |_| false).is_empty());
+        assert!(pack_index(0, |_| true).is_empty());
+    }
+}

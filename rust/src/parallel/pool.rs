@@ -1,0 +1,579 @@
+//! Persistent work-stealing fork-join pool.
+//!
+//! One [`Deque`] per worker plus a global injector for external
+//! submissions and overflow. [`join`] is the fork-join primitive all
+//! data-parallel ops are built on: the forked half is pushed to the
+//! local deque (work-first), and while waiting the owner *helps* —
+//! popping its own deque or stealing — so no worker ever blocks on a
+//! latch with runnable work in the system.
+//!
+//! The pool is deliberately simple where simplicity is honest (park
+//! with timeout instead of a lost-wakeup-proof sleep protocol) and
+//! careful where the paper's measurements live (push/pop/steal are
+//! the calibrated `spawn` cost of the simulator's cost model).
+
+use super::deque::{Deque, Steal};
+use super::job::{HeapJob, JobRef, StackJob};
+use super::latch::{CountLatch, Latch, LockLatch, SpinLatch};
+use once_cell::sync::OnceCell;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+thread_local! {
+    /// (shared pool ptr, worker index) when running on a worker.
+    static WORKER: Cell<(usize, usize)> = const { Cell::new((0, usize::MAX)) };
+}
+
+struct Shared {
+    deques: Vec<Deque>,
+    injector: Mutex<VecDeque<JobRef>>,
+    injector_len: AtomicUsize,
+    sleep_lock: Mutex<()>,
+    wake: Condvar,
+    sleepers: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Monotone counters for the calibration benches.
+    steals: AtomicUsize,
+    executed: AtomicUsize,
+}
+
+/// A fork-join worker pool. Usually accessed through the process-wide
+/// instance via [`with_pool`] / [`join`]; tests construct private ones.
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+/// Thread count: `PASGAL_THREADS` env override, else
+/// `available_parallelism`.
+pub fn num_threads() -> usize {
+    static N: OnceCell<usize> = OnceCell::new();
+    *N.get_or_init(|| {
+        std::env::var("PASGAL_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+static GLOBAL: OnceCell<Pool> = OnceCell::new();
+
+/// The process-wide pool (created on first use with [`num_threads`]).
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| Pool::new(num_threads()))
+}
+
+/// Run `f` with a reference to the global pool.
+pub fn with_pool<R>(f: impl FnOnce(&Pool) -> R) -> R {
+    f(global())
+}
+
+/// Fork-join on the global pool: runs `a` and `b` in parallel, returns
+/// both results. The primitive everything else is built from.
+pub fn join<A, B, RA, RB>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    global().join(a, b)
+}
+
+impl Pool {
+    /// Spin up `threads` workers.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            deques: (0..threads).map(|_| Deque::new()).collect(),
+            injector: Mutex::new(VecDeque::new()),
+            injector_len: AtomicUsize::new(0),
+            sleep_lock: Mutex::new(()),
+            wake: Condvar::new(),
+            sleepers: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            steals: AtomicUsize::new(0),
+            executed: AtomicUsize::new(0),
+        });
+        let handles = (0..threads)
+            .map(|idx| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pasgal-worker-{idx}"))
+                    // Helping-while-waiting compounds stack frames of
+                    // unrelated jobs on one stack; give workers room.
+                    .stack_size(64 << 20)
+                    .spawn(move || worker_loop(sh, idx))
+                    .expect("spawning worker")
+            })
+            .collect();
+        Pool {
+            shared,
+            handles,
+            threads,
+        }
+    }
+
+    /// Number of workers.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Total successful steals (calibration metric).
+    pub fn steal_count(&self) -> usize {
+        self.shared.steals.load(Ordering::Relaxed)
+    }
+
+    /// Total jobs executed by workers (calibration metric).
+    pub fn executed_count(&self) -> usize {
+        self.shared.executed.load(Ordering::Relaxed)
+    }
+
+    fn shared_id(&self) -> usize {
+        Arc::as_ptr(&self.shared) as usize
+    }
+
+    fn on_this_pool(&self) -> Option<usize> {
+        let (pool, idx) = WORKER.with(|w| w.get());
+        (pool == self.shared_id() && idx != usize::MAX).then_some(idx)
+    }
+
+    /// Run `f` on a worker of this pool, blocking until done. If the
+    /// caller already is a worker of this pool, runs inline.
+    pub fn run<F, R>(&self, f: F) -> R
+    where
+        F: FnOnce() -> R + Send,
+        R: Send,
+    {
+        if self.on_this_pool().is_some() {
+            return f();
+        }
+        let latch = LockLatch::new();
+        let mut result: Option<std::thread::Result<R>> = None;
+        {
+            let result_ptr = super::ops::SendPtr(&mut result as *mut Option<std::thread::Result<R>>);
+            let latch_ptr = super::ops::SendPtr(&latch as *const LockLatch as *mut LockLatch);
+            // Safety: we block on `latch` before `result`/`latch` drop,
+            // so the raw pointers outlive the job.
+            let wrapper = move || {
+                // Bind the wrappers whole: edition-2021 disjoint capture
+                // would otherwise capture the raw-pointer fields (which
+                // are not Send) instead of the Send wrapper structs.
+                let (result_ptr, latch_ptr) = (result_ptr, latch_ptr);
+                // Catch panics: they must not unwind through the worker
+                // loop (that kills the worker and deadlocks waiters);
+                // re-thrown on the calling thread below.
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                unsafe {
+                    *result_ptr.0 = Some(r);
+                    (*latch_ptr.0).set();
+                }
+            };
+            let job = HeapJob::push(wrapper, std::ptr::null());
+            self.inject(job);
+        }
+        latch.wait();
+        match result.expect("pool job did not produce a result") {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+
+    /// Fork-join inside this pool.
+    pub fn join<A, B, RA, RB>(&self, a: A, b: B) -> (RA, RB)
+    where
+        A: FnOnce() -> RA + Send,
+        B: FnOnce() -> RB + Send,
+        RA: Send,
+        RB: Send,
+    {
+        match self.on_this_pool() {
+            Some(idx) => self.join_worker(idx, a, b),
+            None => self.run(|| {
+                let idx = self.on_this_pool().expect("run() puts us on a worker");
+                self.join_worker(idx, a, b)
+            }),
+        }
+    }
+
+    fn join_worker<A, B, RA, RB>(&self, idx: usize, a: A, b: B) -> (RA, RB)
+    where
+        A: FnOnce() -> RA + Send,
+        B: FnOnce() -> RB + Send,
+        RA: Send,
+        RB: Send,
+    {
+        let sh = &*self.shared;
+        let mut job_b = StackJob::new(b);
+        let b_ref = job_b.as_job_ref();
+        sh.deques[idx].push(b_ref);
+        sh.wake_one();
+
+        let ra = a();
+
+        // Drain our own deque until we find job_b or it's been stolen.
+        while !job_b.latch.probe() {
+            match sh.deques[idx].pop() {
+                Some(j) if j == b_ref => {
+                    // Not stolen: run inline (fast path).
+                    unsafe { job_b.run_inline() };
+                    break;
+                }
+                Some(j) => unsafe {
+                    sh.executed.fetch_add(1, Ordering::Relaxed);
+                    j.execute();
+                },
+                None => {
+                    // Stolen: help others while the thief finishes.
+                    self.wait_helping(idx, &job_b.latch);
+                    break;
+                }
+            }
+        }
+        debug_assert!(job_b.latch.probe());
+        let rb = job_b.take_result();
+        (ra, rb)
+    }
+
+    /// Steal/execute work until `latch` is set.
+    fn wait_helping(&self, idx: usize, latch: &SpinLatch) {
+        let sh = &*self.shared;
+        let mut spin = 0u32;
+        while !latch.probe() {
+            if let Some(job) = sh.find_work(idx) {
+                sh.executed.fetch_add(1, Ordering::Relaxed);
+                unsafe { job.execute() };
+                spin = 0;
+            } else {
+                spin += 1;
+                if spin < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Push an external job to the injector and wake a worker.
+    fn inject(&self, job: JobRef) {
+        let sh = &*self.shared;
+        sh.injector.lock().unwrap().push_back(job);
+        sh.injector_len.fetch_add(1, Ordering::Release);
+        sh.wake_all();
+    }
+
+    /// Fire-and-forget spawn tracked by `done`.
+    fn spawn_counted<F>(&self, f: F, done: &CountLatch)
+    where
+        F: FnOnce() + Send,
+    {
+        done.add(1);
+        let job = HeapJob::push(f, done as *const CountLatch);
+        match self.on_this_pool() {
+            Some(idx) => {
+                self.shared.deques[idx].push(job);
+                self.shared.wake_one();
+            }
+            None => self.inject(job),
+        }
+    }
+
+    /// Structured-concurrency scope: `body` may spawn any number of
+    /// tasks through the [`Scope`] handle; `scope` returns only after
+    /// every spawned task finished. Tasks must be `'static`-free via
+    /// the scope lifetime (they may borrow data outliving the call).
+    pub fn scope<'env, F, R>(&self, body: F) -> R
+    where
+        F: FnOnce(&Scope<'env, '_>) -> R,
+    {
+        let done = CountLatch::new(0);
+        let scope = Scope {
+            pool: self,
+            done: &done,
+            _env: std::marker::PhantomData,
+        };
+        let r = body(&scope);
+        // Help until every spawned task completes.
+        match self.on_this_pool() {
+            Some(idx) => {
+                let sh = &*self.shared;
+                while !done.probe() {
+                    if let Some(job) = sh.deques[idx].pop().or_else(|| sh.find_work(idx)) {
+                        sh.executed.fetch_add(1, Ordering::Relaxed);
+                        unsafe { job.execute() };
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+            None => {
+                while !done.probe() {
+                    std::thread::yield_now();
+                }
+            }
+        }
+        r
+    }
+}
+
+/// Spawn handle passed to [`Pool::scope`] bodies.
+pub struct Scope<'env, 'pool> {
+    pool: &'pool Pool,
+    done: &'pool CountLatch,
+    _env: std::marker::PhantomData<&'env ()>,
+}
+
+impl<'env, 'pool> Scope<'env, 'pool> {
+    /// Spawn a task that must finish before the scope returns.
+    ///
+    /// The closure may borrow from `'env` (data outliving the scope
+    /// call); the scope's exit barrier makes that sound.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        // Safety: the scope blocks until `done` reaches zero, so the
+        // erased closure cannot outlive its borrows.
+        let f: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        let f: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(f) };
+        self.pool.spawn_counted(move || f(), self.done);
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.wake_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Shared {
+    /// Find runnable work: injector first (fairness for external
+    /// callers), then steal sweep starting after `idx`.
+    fn find_work(&self, idx: usize) -> Option<JobRef> {
+        if self.injector_len.load(Ordering::Acquire) > 0 {
+            if let Some(job) = self.injector.lock().unwrap().pop_front() {
+                self.injector_len.fetch_sub(1, Ordering::Release);
+                return Some(job);
+            }
+        }
+        let n = self.deques.len();
+        for probe in 0..n {
+            let victim = (idx + 1 + probe) % n;
+            if victim == idx {
+                continue;
+            }
+            loop {
+                match self.deques[victim].steal() {
+                    Steal::Success(job) => {
+                        self.steals.fetch_add(1, Ordering::Relaxed);
+                        return Some(job);
+                    }
+                    Steal::Retry => continue,
+                    Steal::Empty => break,
+                }
+            }
+        }
+        None
+    }
+
+    fn wake_one(&self) {
+        if self.sleepers.load(Ordering::Acquire) > 0 {
+            let _g = self.sleep_lock.lock().unwrap();
+            self.wake.notify_one();
+        }
+    }
+
+    fn wake_all(&self) {
+        let _g = self.sleep_lock.lock().unwrap();
+        self.wake.notify_all();
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, idx: usize) {
+    WORKER.with(|w| w.set((Arc::as_ptr(&sh) as usize, idx)));
+    let mut spin = 0u32;
+    loop {
+        if sh.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let job = sh.deques[idx].pop().or_else(|| sh.find_work(idx));
+        match job {
+            Some(j) => {
+                sh.executed.fetch_add(1, Ordering::Relaxed);
+                unsafe { j.execute() };
+                spin = 0;
+            }
+            None => {
+                spin += 1;
+                if spin < 16 {
+                    std::hint::spin_loop();
+                } else if spin < 32 {
+                    std::thread::yield_now();
+                } else {
+                    // Park with timeout: immune to lost wakeups.
+                    sh.sleepers.fetch_add(1, Ordering::AcqRel);
+                    let g = sh.sleep_lock.lock().unwrap();
+                    let _ = sh.wake.wait_timeout(g, Duration::from_millis(1)).unwrap();
+                    sh.sleepers.fetch_sub(1, Ordering::AcqRel);
+                    spin = 16;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_returns_both_results() {
+        let pool = Pool::new(2);
+        let (a, b) = pool.join(|| 1 + 1, || "two");
+        assert_eq!(a, 2);
+        assert_eq!(b, "two");
+    }
+
+    #[test]
+    fn nested_joins_compute_fib() {
+        fn fib(pool: &Pool, n: u64) -> u64 {
+            if n < 2 {
+                return n;
+            }
+            let (a, b) = pool.join(|| fib_inner(n - 1), || fib_inner(n - 2));
+            a + b
+        }
+        fn fib_inner(n: u64) -> u64 {
+            if n < 2 {
+                return n;
+            }
+            let (a, b) = join(|| fib_inner(n - 1), || fib_inner(n - 2));
+            a + b
+        }
+        let pool = Pool::new(4);
+        assert_eq!(fib(&pool, 16), 987);
+    }
+
+    #[test]
+    fn run_from_external_thread() {
+        let pool = Pool::new(2);
+        let v = pool.run(|| (0..100).sum::<i32>());
+        assert_eq!(v, 4950);
+    }
+
+    #[test]
+    fn join_borrows_stack_data() {
+        let pool = Pool::new(2);
+        let data = vec![1u64; 1000];
+        let (s1, s2) = pool.join(
+            || data[..500].iter().sum::<u64>(),
+            || data[500..].iter().sum::<u64>(),
+        );
+        assert_eq!(s1 + s2, 1000);
+    }
+
+    #[test]
+    fn many_concurrent_runs() {
+        let pool = Arc::new(Pool::new(3));
+        std::thread::scope(|s| {
+            for t in 0..6 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    for i in 0..50 {
+                        let v = pool.run(move || t * 1000 + i);
+                        assert_eq!(v, t * 1000 + i);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn global_pool_join_works() {
+        let (a, b) = join(|| 40, || 2);
+        assert_eq!(a + b, 42);
+    }
+
+    #[test]
+    fn scope_waits_for_all_spawns() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = Pool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..100 {
+                s.spawn(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn scope_spawns_borrow_stack_data() {
+        let pool = Pool::new(2);
+        let data = vec![1u64; 1000];
+        let sum = std::sync::atomic::AtomicU64::new(0);
+        pool.scope(|s| {
+            for chunk in data.chunks(100) {
+                let sum = &sum;
+                s.spawn(move || {
+                    sum.fetch_add(
+                        chunk.iter().sum::<u64>(),
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                });
+            }
+        });
+        assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn nested_scopes() {
+        let pool = Pool::new(2);
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        pool.scope(|outer| {
+            for _ in 0..4 {
+                let count = &count;
+                outer.spawn(move || {
+                    count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                });
+            }
+        });
+        pool.scope(|s| {
+            let count = &count;
+            s.spawn(move || {
+                count.fetch_add(10, std::sync::atomic::Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::Relaxed), 14);
+    }
+
+    #[test]
+    fn deep_recursion_balanced_tree() {
+        // ~2^12 leaves; exercises deque growth + stealing.
+        fn count(lo: usize, hi: usize) -> usize {
+            if hi - lo <= 1 {
+                return hi - lo;
+            }
+            let mid = (lo + hi) / 2;
+            let (a, b) = join(|| count(lo, mid), || count(mid, hi));
+            a + b
+        }
+        assert_eq!(count(0, 4096), 4096);
+    }
+}

@@ -1,0 +1,196 @@
+//! Parallel stable merge sort (the ParlayLib `sort` role).
+//!
+//! Used by Tarjan–Vishkin BCC (edge-list sorting), graph construction
+//! (CSR building from edge lists) and the generators. Parallel
+//! recursion with sequential leaves; the merge splits by binary search
+//! so the span stays polylogarithmic.
+
+use super::ops::SendPtr;
+use super::pool::join;
+
+const SORT_GRAIN: usize = 1 << 12;
+const MERGE_GRAIN: usize = 1 << 13;
+
+/// Sort `v` by `key`, stably, in parallel.
+pub fn parallel_sort_by_key<T, K, F>(v: &mut [T], key: F)
+where
+    T: Send + Sync + Copy,
+    K: Ord,
+    F: Fn(&T) -> K + Sync,
+{
+    let n = v.len();
+    if n <= SORT_GRAIN {
+        v.sort_by_key(|x| key(x));
+        return;
+    }
+    let mut buf: Vec<T> = Vec::with_capacity(n);
+    unsafe { buf.set_len(n) };
+    sort_into(v, &mut buf, false, &key);
+}
+
+/// Recursive merge sort. If `to_buf`, the sorted result lands in
+/// `buf`, else in `v` (ping-pong to avoid copies).
+fn sort_into<T, K, F>(v: &mut [T], buf: &mut [T], to_buf: bool, key: &F)
+where
+    T: Send + Sync + Copy,
+    K: Ord,
+    F: Fn(&T) -> K + Sync,
+{
+    let n = v.len();
+    if n <= SORT_GRAIN {
+        v.sort_by_key(|x| key(x));
+        if to_buf {
+            buf.copy_from_slice(v);
+        }
+        return;
+    }
+    let mid = n / 2;
+    let (vl, vr) = v.split_at_mut(mid);
+    let (bl, br) = buf.split_at_mut(mid);
+    join(
+        || sort_into(vl, bl, !to_buf, key),
+        || sort_into(vr, br, !to_buf, key),
+    );
+    // Halves now live in (bl, br) if !to_buf was their destination.
+    if to_buf {
+        merge_par(vl, vr, buf, key);
+    } else {
+        let (bl, br) = buf.split_at(mid);
+        merge_par(bl, br, v, key);
+    }
+}
+
+/// Parallel stable merge of sorted `a`, `b` into `out`.
+fn merge_par<T, K, F>(a: &[T], b: &[T], out: &mut [T], key: &F)
+where
+    T: Send + Sync + Copy,
+    K: Ord,
+    F: Fn(&T) -> K + Sync,
+{
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    if a.len() + b.len() <= MERGE_GRAIN {
+        merge_seq(a, b, out, key);
+        return;
+    }
+    // Split at the larger side's midpoint; binary-search the other.
+    if a.len() >= b.len() {
+        let am = a.len() / 2;
+        // First index in b whose key is >= key(a[am]) keeps stability
+        // (equal elements of `a` precede equal elements of `b`).
+        let bm = b.partition_point(|x| key(x) < key(&a[am]));
+        let (out_l, out_r) = out.split_at_mut(am + bm);
+        join(
+            || merge_par(&a[..am], &b[..bm], out_l, key),
+            || merge_par(&a[am..], &b[bm..], out_r, key),
+        );
+    } else {
+        let bm = b.len() / 2;
+        let am = a.partition_point(|x| key(x) <= key(&b[bm]));
+        let (out_l, out_r) = out.split_at_mut(am + bm);
+        join(
+            || merge_par(&a[..am], &b[..bm], out_l, key),
+            || merge_par(&a[am..], &b[bm..], out_r, key),
+        );
+    }
+}
+
+fn merge_seq<T, K, F>(a: &[T], b: &[T], out: &mut [T], key: &F)
+where
+    T: Copy,
+    K: Ord,
+    F: Fn(&T) -> K,
+{
+    let (mut i, mut j) = (0, 0);
+    let op = SendPtr(out.as_mut_ptr());
+    let mut w = 0usize;
+    unsafe {
+        while i < a.len() && j < b.len() {
+            if key(&a[i]) <= key(&b[j]) {
+                *op.add(w) = a[i];
+                i += 1;
+            } else {
+                *op.add(w) = b[j];
+                j += 1;
+            }
+            w += 1;
+        }
+        while i < a.len() {
+            *op.add(w) = a[i];
+            i += 1;
+            w += 1;
+        }
+        while j < b.len() {
+            *op.add(w) = b[j];
+            j += 1;
+            w += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(state: &mut u64) -> u64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        *state
+    }
+
+    #[test]
+    fn sorts_random_u64() {
+        let mut s = 12345u64;
+        let mut v: Vec<u64> = (0..200_000).map(|_| xorshift(&mut s) % 1_000).collect();
+        let mut expect = v.clone();
+        expect.sort();
+        parallel_sort_by_key(&mut v, |&x| x);
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn sorts_already_sorted_and_reverse() {
+        let mut v: Vec<u32> = (0..50_000).collect();
+        parallel_sort_by_key(&mut v, |&x| x);
+        assert!(v.windows(2).all(|w| w[0] <= w[1]));
+        let mut v: Vec<u32> = (0..50_000).rev().collect();
+        parallel_sort_by_key(&mut v, |&x| x);
+        assert!(v.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn stable_on_equal_keys() {
+        // (key, original index): after sorting by key, indices within a
+        // key group must stay increasing.
+        let mut s = 99u64;
+        let mut v: Vec<(u8, u32)> = (0..100_000u32)
+            .map(|i| ((xorshift(&mut s) % 16) as u8, i))
+            .collect();
+        parallel_sort_by_key(&mut v, |&(k, _)| k);
+        for w in v.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "stability violated");
+            }
+        }
+    }
+
+    #[test]
+    fn small_inputs() {
+        let mut v: Vec<u32> = vec![];
+        parallel_sort_by_key(&mut v, |&x| x);
+        let mut v = vec![3u32, 1, 2];
+        parallel_sort_by_key(&mut v, |&x| x);
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn sorts_by_extracted_key() {
+        let mut v: Vec<(u32, &str)> = vec![(3, "c"), (1, "a"), (2, "b"), (1, "a2")];
+        parallel_sort_by_key(&mut v, |&(k, _)| k);
+        assert_eq!(
+            v.iter().map(|&(_, s)| s).collect::<Vec<_>>(),
+            vec!["a", "a2", "b", "c"]
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! Vertical granularity control (VGC) — the paper's core technique
+//! (§2.1).
+//!
+//! Classic (horizontal) granularity control stops *creating* parallel
+//! tasks below a size threshold. VGC instead *enlarges each task*: a
+//! scheduled task processing a frontier vertex keeps going — a τ-budget
+//! *local search* over an explicit stack, possibly advancing many hops
+//! — before returning to the scheduler. On large-diameter graphs this
+//! (1) collapses the O(D) synchronized rounds into far fewer rounds
+//! and (2) inflates the frontier quickly, producing enough parallel
+//! slack to occupy all processors.
+//!
+//! [`local_search`] is the shared driver used by VGC-BFS, VGC-SCC and
+//! ρ-stepping SSSP: algorithms supply an `expand` closure that claims
+//! a vertex's neighbors (pushing newly-claimed ones on the stack) and
+//! the driver enforces the τ budget, returning leftover stack entries
+//! for the caller to flush into the next frontier.
+
+/// Work performed by one local search (feeds the simulator's cost
+/// model and the coordinator's metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Vertices popped (i.e. expanded) by this search.
+    pub vertices: u64,
+    /// Edges scanned while expanding.
+    pub edges: u64,
+}
+
+impl SearchStats {
+    /// Accumulate another search's counts.
+    #[inline]
+    pub fn merge(&mut self, other: SearchStats) {
+        self.vertices += other.vertices;
+        self.edges += other.edges;
+    }
+}
+
+/// Run a τ-budget local search.
+///
+/// Pops vertices from `stack` and calls `expand(v, stack)`, which
+/// scans v's neighbors, pushes any newly claimed ones, and returns the
+/// number of edges it scanned. Stops when the stack empties or at
+/// least `tau` vertices have been expanded; whatever remains on
+/// `stack` is the caller's to emit into the next frontier.
+#[inline]
+pub fn local_search<F>(stack: &mut Vec<u32>, tau: usize, mut expand: F) -> SearchStats
+where
+    F: FnMut(u32, &mut Vec<u32>) -> usize,
+{
+    let mut stats = SearchStats::default();
+    while let Some(v) = stack.pop() {
+        stats.vertices += 1;
+        stats.edges += expand(v, stack) as u64;
+        if stats.vertices as usize >= tau {
+            break;
+        }
+    }
+    stats
+}
+
+/// Convenience wrapper holding a reusable stack buffer, so hot loops
+/// do not re-allocate per task.
+#[derive(Default)]
+pub struct LocalSearch {
+    /// Explicit DFS-order stack (arbitrary visit order is the point:
+    /// reachability-style algorithms don't need BFS order).
+    pub stack: Vec<u32>,
+}
+
+impl LocalSearch {
+    pub fn new() -> Self {
+        LocalSearch { stack: Vec::new() }
+    }
+
+    /// Seed with one start vertex and run to the τ budget.
+    pub fn run<F>(&mut self, seeds: &[u32], tau: usize, expand: F) -> SearchStats
+    where
+        F: FnMut(u32, &mut Vec<u32>) -> usize,
+    {
+        self.stack.clear();
+        self.stack.extend_from_slice(seeds);
+        local_search(&mut self.stack, tau, expand)
+    }
+
+    /// Vertices left unexpanded when the budget ran out.
+    pub fn leftover(&self) -> &[u32] {
+        &self.stack
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Chain 0 -> 1 -> ... -> n-1 expressed as an expand closure.
+    fn chain_expand(n: u32) -> impl FnMut(u32, &mut Vec<u32>) -> usize {
+        move |v, stack| {
+            if v + 1 < n {
+                stack.push(v + 1);
+                1
+            } else {
+                0
+            }
+        }
+    }
+
+    #[test]
+    fn unbounded_search_drains_chain() {
+        let mut ls = LocalSearch::new();
+        let stats = ls.run(&[0], usize::MAX, chain_expand(100));
+        assert_eq!(stats.vertices, 100);
+        assert_eq!(stats.edges, 99);
+        assert!(ls.leftover().is_empty());
+    }
+
+    #[test]
+    fn budget_stops_search_with_leftover() {
+        let mut ls = LocalSearch::new();
+        let stats = ls.run(&[0], 10, chain_expand(100));
+        assert_eq!(stats.vertices, 10);
+        assert_eq!(ls.leftover(), &[10]);
+    }
+
+    #[test]
+    fn budget_one_expands_single_vertex() {
+        // τ=1 degenerates to the classic one-vertex-per-task frontier
+        // algorithm — the ablation baseline.
+        let mut ls = LocalSearch::new();
+        let stats = ls.run(&[5], 1, chain_expand(100));
+        assert_eq!(stats.vertices, 1);
+        assert_eq!(ls.leftover(), &[6]);
+    }
+
+    #[test]
+    fn multiple_seeds_all_expanded() {
+        let mut ls = LocalSearch::new();
+        let stats = ls.run(&[0, 50, 99], usize::MAX, chain_expand(100));
+        // 99 is expanded once from the seed and reached again from 50's
+        // chain only if the closure re-pushes — ours doesn't dedupe;
+        // the chain from 0 and from 50 both run to 99. Expansion counts:
+        // seed 99: 1 vertex; seed 50: 50..=99 => 50; seed 0: 0..=99 => 100.
+        assert_eq!(stats.vertices, 1 + 50 + 100);
+        assert!(ls.leftover().is_empty());
+    }
+
+    #[test]
+    fn stats_merge_adds() {
+        let mut a = SearchStats {
+            vertices: 3,
+            edges: 7,
+        };
+        a.merge(SearchStats {
+            vertices: 2,
+            edges: 5,
+        });
+        assert_eq!(
+            a,
+            SearchStats {
+                vertices: 5,
+                edges: 12
+            }
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Dense tiles + pure-Rust reference semantics for the PJRT kernels.
+//!
+//! [`DenseTile`] is the exchange format between the sparse graph world
+//! (CSR subgraphs extracted by the coordinator) and the dense kernel
+//! world (fixed-size f32 tiles the AOT modules expect). The `_ref`
+//! functions are the oracle the PJRT path is integration-tested
+//! against — and double as a fallback when artifacts are absent.
+
+use crate::INF;
+
+/// A t×t dense adjacency tile in the kernels' *panel convention*:
+/// `w[u * t + v]` is the weight of edge `v -> u` (transposed adjacency)
+/// so that one relaxation step is `d[u] = min_v w[u][v] + d[v]`.
+#[derive(Debug, Clone)]
+pub struct DenseTile {
+    t: usize,
+    w: Vec<f32>,
+}
+
+impl DenseTile {
+    /// A tile with no edges (all INF) and zero diagonal.
+    pub fn empty(t: usize) -> Self {
+        let mut w = vec![INF; t * t];
+        for i in 0..t {
+            w[i * t + i] = 0.0;
+        }
+        DenseTile { t, w }
+    }
+
+    /// Build from explicit row-major panel data (`w[u*t+v] = w(v->u)`).
+    pub fn from_raw(t: usize, w: Vec<f32>) -> Self {
+        assert_eq!(w.len(), t * t, "tile data must be t*t");
+        DenseTile { t, w }
+    }
+
+    /// Tile edge length.
+    pub fn size(&self) -> usize {
+        self.t
+    }
+
+    /// Raw panel data (row-major, length t*t).
+    pub fn raw(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Record a directed edge `from -> to` of weight `weight`
+    /// (keeping the minimum on multi-edges).
+    pub fn add_edge(&mut self, from: usize, to: usize, weight: f32) {
+        assert!(from < self.t && to < self.t);
+        let slot = &mut self.w[to * self.t + from];
+        if weight < *slot {
+            *slot = weight;
+        }
+    }
+
+    /// Weight of edge `from -> to` (INF when absent).
+    pub fn edge(&self, from: usize, to: usize) -> f32 {
+        self.w[to * self.t + from]
+    }
+}
+
+/// Pure-Rust reference of the L1 `multihop_relax` kernel: `hops`
+/// rounds of `d[u] <- min(d[u], min_v w(v->u) + d[v])` over a
+/// multi-source panel `dist[v * s + j]` (row-major, s sources).
+pub fn relax_ref(tile: &DenseTile, dist: &[f32], sources: usize, hops: usize) -> Vec<f32> {
+    let t = tile.t;
+    assert_eq!(dist.len(), t * sources, "panel must be t*s");
+    let mut d = dist.to_vec();
+    let mut next = vec![0.0f32; d.len()];
+    for _ in 0..hops {
+        for u in 0..t {
+            for j in 0..sources {
+                let mut best = d[u * sources + j];
+                for v in 0..t {
+                    let w = tile.w[u * t + v];
+                    if w < INF {
+                        let cand = w + d[v * sources + j];
+                        if cand < best {
+                            best = cand;
+                        }
+                    }
+                }
+                next[u * sources + j] = best;
+            }
+        }
+        std::mem::swap(&mut d, &mut next);
+    }
+    d
+}
+
+/// Pure-Rust reference of the L2 `tile_closure` graph: all-pairs
+/// shortest distances within the tile (Floyd–Warshall on the panel
+/// convention; output `c[u*t+v]` = shortest distance `v -> u`,
+/// matching the artifact's output layout).
+pub fn closure_ref(tile: &DenseTile) -> Vec<f32> {
+    let t = tile.t;
+    let mut d = tile.w.clone();
+    for i in 0..t {
+        if d[i * t + i] > 0.0 {
+            d[i * t + i] = 0.0;
+        }
+    }
+    for k in 0..t {
+        for u in 0..t {
+            let duk = d[u * t + k];
+            if duk >= INF {
+                continue;
+            }
+            for v in 0..t {
+                let cand = duk + d[k * t + v];
+                if cand < d[u * t + v] {
+                    d[u * t + v] = cand;
+                }
+            }
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_tile(t: usize) -> DenseTile {
+        let mut tile = DenseTile::empty(t);
+        for v in 0..t - 1 {
+            tile.add_edge(v, v + 1, 1.0);
+        }
+        tile
+    }
+
+    #[test]
+    fn empty_tile_has_zero_diag_inf_off() {
+        let t = DenseTile::empty(4);
+        assert_eq!(t.edge(2, 2), 0.0);
+        assert_eq!(t.edge(0, 1), INF);
+    }
+
+    #[test]
+    fn add_edge_keeps_minimum() {
+        let mut t = DenseTile::empty(4);
+        t.add_edge(0, 1, 5.0);
+        t.add_edge(0, 1, 3.0);
+        t.add_edge(0, 1, 9.0);
+        assert_eq!(t.edge(0, 1), 3.0);
+    }
+
+    #[test]
+    fn relax_ref_chain_hop_semantics() {
+        let t = 8;
+        let tile = chain_tile(t);
+        let mut dist = vec![INF; t];
+        dist[0] = 0.0;
+        for hops in [1usize, 3, 7] {
+            let out = relax_ref(&tile, &dist, 1, hops);
+            let reached = out.iter().filter(|&&d| d < INF).count();
+            assert_eq!(reached, hops + 1);
+            // distances along the chain are exact hop counts
+            for (v, &d) in out.iter().enumerate().take(hops + 1) {
+                assert_eq!(d, v as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn relax_ref_multi_source_panel() {
+        let t = 6;
+        let tile = chain_tile(t);
+        let s = 2;
+        let mut dist = vec![INF; t * s];
+        dist[0 * s + 0] = 0.0; // source 0 at vertex 0
+        dist[3 * s + 1] = 0.0; // source 1 at vertex 3
+        let out = relax_ref(&tile, &dist, s, t);
+        assert_eq!(out[5 * s + 0], 5.0);
+        assert_eq!(out[5 * s + 1], 2.0);
+        assert!(out[1 * s + 1] >= INF, "chain is directed; 3 cannot reach 1");
+    }
+
+    #[test]
+    fn closure_ref_matches_relax_to_convergence() {
+        // closure[u*t+v] = dist v->u must equal relaxing a point source.
+        let t = 8;
+        let mut tile = DenseTile::empty(t);
+        // a little dag + a cycle
+        tile.add_edge(0, 1, 2.0);
+        tile.add_edge(1, 2, 2.0);
+        tile.add_edge(2, 0, 2.0);
+        tile.add_edge(2, 5, 1.0);
+        tile.add_edge(5, 7, 4.0);
+        let closure = closure_ref(&tile);
+        for src in 0..t {
+            let mut dist = vec![INF; t];
+            dist[src] = 0.0;
+            let out = relax_ref(&tile, &dist, 1, t);
+            for u in 0..t {
+                assert_eq!(out[u], closure[u * t + src], "src={src} u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn closure_ref_zero_diagonal_even_with_positive_self_loop() {
+        let mut tile = DenseTile::empty(3);
+        tile.add_edge(1, 1, 7.0);
+        let c = closure_ref(&tile);
+        assert_eq!(c[1 * 3 + 1], 0.0);
+    }
+}

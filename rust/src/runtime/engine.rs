@@ -1,0 +1,278 @@
+//! The compile-once / execute-many PJRT engine.
+//!
+//! One [`DenseEngine`] owns a PJRT CPU client plus every executable
+//! described by the artifact manifest. Loading compiles each HLO-text
+//! module exactly once; the coordinator then calls [`DenseEngine::relax`]
+//! / [`DenseEngine::closure`] from its hot path with plain `f32`
+//! slices. All Literal packing/unpacking is contained here.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use super::dense::DenseTile;
+use super::manifest::{ArtifactKind, Manifest};
+
+/// The static configuration of one compiled relax module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RelaxSpec {
+    /// Tile edge length (adjacency is tile×tile).
+    pub tile: usize,
+    /// Distance-panel width (number of sources per call).
+    pub sources: usize,
+    /// Hops advanced per execution (baked at lowering time).
+    pub hops: usize,
+}
+
+struct RelaxExec {
+    spec: RelaxSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+struct ClosureExec {
+    tile: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT engine holding all compiled dense kernels.
+pub struct DenseEngine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    relax: Vec<RelaxExec>,
+    closure: Vec<ClosureExec>,
+    /// Total kernel executions (for coordinator metrics).
+    executions: AtomicU64,
+}
+
+impl DenseEngine {
+    /// Load every artifact under `dir` (usually `artifacts/`), compiling
+    /// each module once on a fresh PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(&manifest)
+    }
+
+    /// Compile all modules listed in an already-parsed manifest.
+    pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut relax = Vec::new();
+        let mut closure = Vec::new();
+        for art in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                art.path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", art.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", art.name))?;
+            match art.kind {
+                ArtifactKind::Relax => relax.push(RelaxExec {
+                    spec: RelaxSpec {
+                        tile: art.tile,
+                        sources: art.sources,
+                        hops: art.hops,
+                    },
+                    exe,
+                }),
+                ArtifactKind::Closure => closure.push(ClosureExec {
+                    tile: art.tile,
+                    exe,
+                }),
+            }
+        }
+        // Largest tiles first so `best_relax` prefers doing more work
+        // per launch when several configurations fit.
+        relax.sort_by(|a, b| (b.spec.tile, b.spec.hops).cmp(&(a.spec.tile, a.spec.hops)));
+        closure.sort_by(|a, b| b.tile.cmp(&a.tile));
+        Ok(DenseEngine {
+            client,
+            relax,
+            closure,
+            executions: AtomicU64::new(0),
+        })
+    }
+
+    /// Specs of all loaded relax modules (largest tile/hops first).
+    pub fn relax_specs(&self) -> Vec<RelaxSpec> {
+        self.relax.iter().map(|r| r.spec).collect()
+    }
+
+    /// Tile sizes of all loaded closure modules (largest first).
+    pub fn closure_tiles(&self) -> Vec<usize> {
+        self.closure.iter().map(|c| c.tile).collect()
+    }
+
+    /// Number of kernel executions so far.
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    /// Run the relax module matching `spec` exactly: `spec.hops` rounds
+    /// of tropical relaxation of the `dist` panel (row-major
+    /// `tile × sources`) over `tile`. Returns the relaxed panel.
+    pub fn relax(&self, spec: RelaxSpec, tile: &DenseTile, dist: &[f32]) -> Result<Vec<f32>> {
+        let entry = self
+            .relax
+            .iter()
+            .find(|r| r.spec == spec)
+            .with_context(|| format!("no relax artifact for {spec:?}"))?;
+        if tile.size() != spec.tile {
+            bail!("tile size {} != artifact tile {}", tile.size(), spec.tile);
+        }
+        if dist.len() != spec.tile * spec.sources {
+            bail!(
+                "panel len {} != tile*sources {}",
+                dist.len(),
+                spec.tile * spec.sources
+            );
+        }
+        let t = spec.tile as i64;
+        let s = spec.sources as i64;
+        let adj_lit = xla::Literal::vec1(tile.raw()).reshape(&[t, t])?;
+        let dist_lit = xla::Literal::vec1(dist).reshape(&[t, s])?;
+        let out = entry.exe.execute::<xla::Literal>(&[adj_lit, dist_lit])?[0][0]
+            .to_literal_sync()?;
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Pick the best loaded relax spec for a block of `block_size`
+    /// vertices: smallest tile that fits (least padding waste).
+    pub fn best_relax(&self, block_size: usize) -> Option<RelaxSpec> {
+        self.relax
+            .iter()
+            .map(|r| r.spec)
+            .filter(|s| s.tile >= block_size)
+            .min_by_key(|s| s.tile)
+    }
+
+    /// Run the closure module for `tile.size()`: all-pairs shortest
+    /// distances within the tile (output `c[u*t+v]` = dist `v -> u`).
+    pub fn closure(&self, tile: &DenseTile) -> Result<Vec<f32>> {
+        let t = tile.size();
+        let entry = self
+            .closure
+            .iter()
+            .find(|c| c.tile == t)
+            .with_context(|| format!("no closure artifact for tile {t}"))?;
+        let ti = t as i64;
+        let adj_lit = xla::Literal::vec1(tile.raw()).reshape(&[ti, ti])?;
+        let out = entry.exe.execute::<xla::Literal>(&[adj_lit])?[0][0].to_literal_sync()?;
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::dense::{closure_ref, relax_ref};
+    use crate::INF;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> DenseEngine {
+        DenseEngine::load(&artifacts_dir()).expect("run `make artifacts` before cargo test")
+    }
+
+    fn random_tile(t: usize, seed: u64, density: f64) -> DenseTile {
+        let mut tile = DenseTile::empty(t);
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for u in 0..t {
+            for v in 0..t {
+                if u != v && (next() % 1000) as f64 / 1000.0 < density {
+                    tile.add_edge(u, v, (next() % 100 + 1) as f32);
+                }
+            }
+        }
+        tile
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let e = engine();
+        assert!(!e.relax_specs().is_empty());
+        assert!(!e.closure_tiles().is_empty());
+    }
+
+    #[test]
+    fn relax_matches_rust_reference() {
+        let e = engine();
+        for spec in e.relax_specs() {
+            let tile = random_tile(spec.tile, 42 + spec.tile as u64, 0.05);
+            let mut dist = vec![INF; spec.tile * spec.sources];
+            for j in 0..spec.sources {
+                dist[(j * 7 % spec.tile) * spec.sources + j] = 0.0;
+            }
+            let got = e.relax(spec, &tile, &dist).unwrap();
+            let want = relax_ref(&tile, &dist, spec.sources, spec.hops);
+            assert_eq!(got.len(), want.len());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                    "spec {spec:?} idx {i}: pjrt={g} ref={w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn closure_matches_rust_reference() {
+        let e = engine();
+        for t in e.closure_tiles() {
+            let tile = random_tile(t, 7 + t as u64, 0.04);
+            let got = e.closure(&tile).unwrap();
+            let want = closure_ref(&tile);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                let close = if *w >= INF {
+                    *g >= INF
+                } else {
+                    (g - w).abs() <= 1e-3 * w.abs().max(1.0)
+                };
+                assert!(close, "tile {t} idx {i}: pjrt={g} ref={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn best_relax_prefers_smallest_fitting_tile() {
+        let e = engine();
+        let specs = e.relax_specs();
+        let min_tile = specs.iter().map(|s| s.tile).min().unwrap();
+        let max_tile = specs.iter().map(|s| s.tile).max().unwrap();
+        assert_eq!(e.best_relax(1).unwrap().tile, min_tile);
+        assert_eq!(e.best_relax(max_tile).unwrap().tile, max_tile);
+        assert!(e.best_relax(max_tile + 1).is_none());
+    }
+
+    #[test]
+    fn relax_rejects_wrong_shapes() {
+        let e = engine();
+        let spec = e.relax_specs()[0];
+        let tile = DenseTile::empty(spec.tile + 1);
+        let dist = vec![INF; (spec.tile + 1) * spec.sources];
+        assert!(e.relax(spec, &tile, &dist).is_err());
+    }
+
+    #[test]
+    fn execution_counter_increments() {
+        let e = engine();
+        let spec = e.relax_specs()[0];
+        let tile = DenseTile::empty(spec.tile);
+        let dist = vec![INF; spec.tile * spec.sources];
+        let before = e.executions();
+        e.relax(spec, &tile, &dist).unwrap();
+        assert_eq!(e.executions(), before + 1);
+    }
+}

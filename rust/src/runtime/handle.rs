@@ -1,0 +1,195 @@
+//! Thread-safe handle to the PJRT engine.
+//!
+//! The `xla` crate's client/executable types are `!Send` (Rc-based
+//! internals), so the engine gets a dedicated executor thread — the
+//! same shape a GPU worker takes in an inference server. The
+//! [`EngineHandle`] is `Send + Sync` and can live inside the
+//! coordinator; calls are synchronous RPCs over channels.
+
+use super::dense::DenseTile;
+use super::engine::{DenseEngine, RelaxSpec};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+
+enum Cmd {
+    Relax {
+        spec: RelaxSpec,
+        tile: DenseTile,
+        dist: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Closure {
+        tile: DenseTile,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Info {
+        reply: Sender<(Vec<RelaxSpec>, Vec<usize>, u64)>,
+    },
+    Shutdown,
+}
+
+/// Send+Sync handle to an engine running on its own thread.
+pub struct EngineHandle {
+    tx: Sender<Cmd>,
+    // Keep the join handle so drop can reap the thread.
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineHandle {
+    /// Spawn the executor thread, loading all artifacts from `dir`.
+    /// Fails (synchronously) if loading/compiling fails.
+    pub fn spawn(dir: PathBuf) -> Result<EngineHandle> {
+        let (tx, rx) = channel::<Cmd>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pasgal-pjrt".into())
+            .spawn(move || {
+                let engine = match DenseEngine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Relax {
+                            spec,
+                            tile,
+                            dist,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.relax(spec, &tile, &dist));
+                        }
+                        Cmd::Closure { tile, reply } => {
+                            let _ = reply.send(engine.closure(&tile));
+                        }
+                        Cmd::Info { reply } => {
+                            let _ = reply.send((
+                                engine.relax_specs(),
+                                engine.closure_tiles(),
+                                engine.executions(),
+                            ));
+                        }
+                        Cmd::Shutdown => return,
+                    }
+                }
+            })
+            .context("spawning pjrt executor thread")?;
+        ready_rx
+            .recv()
+            .context("pjrt executor thread died during load")??;
+        Ok(EngineHandle {
+            tx,
+            join: Some(join),
+        })
+    }
+
+    /// Multi-hop relaxation on the executor thread.
+    pub fn relax(&self, spec: RelaxSpec, tile: &DenseTile, dist: &[f32]) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Cmd::Relax {
+                spec,
+                tile: tile.clone(),
+                dist: dist.to_vec(),
+                reply,
+            })
+            .context("engine thread gone")?;
+        rx.recv().context("engine thread dropped reply")?
+    }
+
+    /// Tile closure on the executor thread.
+    pub fn closure(&self, tile: &DenseTile) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Cmd::Closure {
+                tile: tile.clone(),
+                reply,
+            })
+            .context("engine thread gone")?;
+        rx.recv().context("engine thread dropped reply")?
+    }
+
+    /// (relax specs, closure tile sizes, execution count).
+    pub fn info(&self) -> Result<(Vec<RelaxSpec>, Vec<usize>, u64)> {
+        let (reply, rx) = channel();
+        self.tx.send(Cmd::Info { reply }).context("engine thread gone")?;
+        rx.recv().context("engine thread dropped reply")
+    }
+
+    /// Closure tile sizes available.
+    pub fn closure_tiles(&self) -> Vec<usize> {
+        self.info().map(|(_, c, _)| c).unwrap_or_default()
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{closure_ref, relax_ref};
+    use crate::INF;
+
+    fn artifacts_dir() -> PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn handle_roundtrip_matches_reference() {
+        let h = EngineHandle::spawn(artifacts_dir()).expect("make artifacts first");
+        let (specs, tiles, _) = h.info().unwrap();
+        assert!(!specs.is_empty() && !tiles.is_empty());
+        let spec = specs[specs.len() - 1];
+        let mut tile = DenseTile::empty(spec.tile);
+        for v in 0..spec.tile - 1 {
+            tile.add_edge(v, v + 1, 1.0);
+        }
+        let mut dist = vec![INF; spec.tile * spec.sources];
+        dist[0] = 0.0;
+        let got = h.relax(spec, &tile, &dist).unwrap();
+        let want = relax_ref(&tile, &dist, spec.sources, spec.hops);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-3 * w.abs().max(1.0));
+        }
+        let t = tiles[tiles.len() - 1];
+        let tile = DenseTile::empty(t);
+        let got = h.closure(&tile).unwrap();
+        let want = closure_ref(&tile);
+        assert_eq!(got.len(), want.len());
+    }
+
+    #[test]
+    fn handle_is_usable_from_many_threads() {
+        let h = std::sync::Arc::new(EngineHandle::spawn(artifacts_dir()).unwrap());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    let tiles = h.closure_tiles();
+                    let tile = DenseTile::empty(tiles[0]);
+                    let out = h.closure(&tile).unwrap();
+                    assert_eq!(out.len(), tiles[0] * tiles[0]);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn spawn_fails_cleanly_on_bad_dir() {
+        assert!(EngineHandle::spawn(PathBuf::from("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Parser for `artifacts/manifest.txt`.
+//!
+//! The manifest is a deliberately trivial line format (`key value`,
+//! blank line between records) because the offline crate set has no
+//! serde/JSON; see `python/compile/aot.py::main` for the writer.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What a compiled artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `relax_block`: multi-hop tropical relaxation of a distance panel.
+    Relax,
+    /// `tile_closure`: APSP closure of one adjacency tile.
+    Closure,
+}
+
+/// One compiled HLO module described by the manifest.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    /// Path to the `.hlo.txt` file, resolved relative to the manifest.
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    /// Tile edge length t (adjacency is t×t).
+    pub tile: usize,
+    /// Number of distance-panel columns (relax only; 0 for closure).
+    pub sources: usize,
+    /// Hop count baked into the module (relax only; 0 for closure).
+    pub hops: usize,
+}
+
+/// Parsed manifest: the artifact inventory for one `artifacts/` dir.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load and parse `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors relative artifact paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        let mut cur: Option<ArtifactBuilder> = None;
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                if let Some(b) = cur.take() {
+                    artifacts.push(b.build(dir).with_context(|| format!("line {}", lno + 1))?);
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once(' ')
+                .with_context(|| format!("manifest line {} has no value: {line:?}", lno + 1))?;
+            match key {
+                "artifact" => {
+                    if let Some(b) = cur.take() {
+                        artifacts.push(b.build(dir)?);
+                    }
+                    cur = Some(ArtifactBuilder::new(value));
+                }
+                _ => {
+                    let b = cur
+                        .as_mut()
+                        .with_context(|| format!("line {}: key before `artifact`", lno + 1))?;
+                    b.set(key, value)?;
+                }
+            }
+        }
+        if let Some(b) = cur.take() {
+            artifacts.push(b.build(dir)?);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// All artifacts of a given kind.
+    pub fn of_kind(&self, kind: ArtifactKind) -> impl Iterator<Item = &Artifact> {
+        self.artifacts.iter().filter(move |a| a.kind == kind)
+    }
+}
+
+struct ArtifactBuilder {
+    name: String,
+    file: Option<String>,
+    kind: Option<ArtifactKind>,
+    tile: usize,
+    sources: usize,
+    hops: usize,
+}
+
+impl ArtifactBuilder {
+    fn new(name: &str) -> Self {
+        ArtifactBuilder {
+            name: name.to_string(),
+            file: None,
+            kind: None,
+            tile: 0,
+            sources: 0,
+            hops: 0,
+        }
+    }
+
+    fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "file" => self.file = Some(value.to_string()),
+            "kind" => {
+                self.kind = Some(match value {
+                    "relax" => ArtifactKind::Relax,
+                    "closure" => ArtifactKind::Closure,
+                    other => bail!("unknown artifact kind {other:?}"),
+                })
+            }
+            "tile" => self.tile = value.parse().context("tile")?,
+            "sources" => self.sources = value.parse().context("sources")?,
+            "hops" => self.hops = value.parse().context("hops")?,
+            other => bail!("unknown manifest key {other:?}"),
+        }
+        Ok(())
+    }
+
+    fn build(self, dir: &Path) -> Result<Artifact> {
+        let file = self
+            .file
+            .with_context(|| format!("artifact {} missing `file`", self.name))?;
+        let kind = self
+            .kind
+            .with_context(|| format!("artifact {} missing `kind`", self.name))?;
+        if self.tile == 0 {
+            bail!("artifact {} missing `tile`", self.name);
+        }
+        Ok(Artifact {
+            name: self.name,
+            path: dir.join(file),
+            kind,
+            tile: self.tile,
+            sources: self.sources,
+            hops: self.hops,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "artifact relax_t64_s4_h64\nfile relax_t64_s4_h64.hlo.txt\nkind relax\ntile 64\nsources 4\nhops 64\n\nartifact closure_t64\nfile closure_t64.hlo.txt\nkind closure\ntile 64\n";
+
+    #[test]
+    fn parses_two_records() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let r = &m.artifacts[0];
+        assert_eq!(r.kind, ArtifactKind::Relax);
+        assert_eq!((r.tile, r.sources, r.hops), (64, 4, 64));
+        assert_eq!(r.path, Path::new("/tmp/a/relax_t64_s4_h64.hlo.txt"));
+        let c = &m.artifacts[1];
+        assert_eq!(c.kind, ArtifactKind::Closure);
+        assert_eq!(c.tile, 64);
+    }
+
+    #[test]
+    fn missing_kind_is_error() {
+        let bad = "artifact x\nfile x.hlo.txt\ntile 64\n";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let bad = "artifact x\nfile x.hlo.txt\nkind relax\ntile 64\nwat 9\n";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn of_kind_filters() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert_eq!(m.of_kind(ArtifactKind::Relax).count(), 1);
+        assert_eq!(m.of_kind(ArtifactKind::Closure).count(), 1);
+    }
+
+    #[test]
+    fn trailing_record_without_blank_line() {
+        let text = "artifact c\nfile c.hlo.txt\nkind closure\ntile 8";
+        let m = Manifest::parse(text, Path::new(".")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+}

@@ -1,0 +1,52 @@
+//! PJRT runtime: load and execute the AOT-compiled dense kernels.
+//!
+//! `make artifacts` lowers the L2 JAX graphs (which call the L1 Pallas
+//! tropical-semiring kernels) to HLO *text* under `artifacts/`. This
+//! module loads that text with [`xla::HloModuleProto::from_text_file`],
+//! compiles each module once on the PJRT CPU client, and exposes a
+//! typed execute-many API to the coordinator's hot path. Python never
+//! runs here.
+//!
+//! Artifact inventory comes from `artifacts/manifest.txt`, a line-based
+//! `key value` format (see `python/compile/aot.py`).
+
+mod dense;
+mod engine;
+mod handle;
+mod manifest;
+
+pub use dense::{closure_ref, relax_ref, DenseTile};
+pub use engine::{DenseEngine, RelaxSpec};
+pub use handle::EngineHandle;
+pub use manifest::{Artifact, ArtifactKind, Manifest};
+
+/// Sentinel infinite distance — must match `kernels/minplus.py::INF`.
+pub const INF: f32 = crate::INF;
+
+/// Object-safe closure executor: implemented by the same-thread
+/// [`DenseEngine`] and the cross-thread [`EngineHandle`], so callers
+/// (e.g. [`crate::coordinator::DenseBlock`]) are agnostic.
+pub trait TileExecutor {
+    /// All-pairs closure of one tile (output `c[u*t+v]` = dist v->u).
+    fn closure_exec(&self, tile: &DenseTile) -> anyhow::Result<Vec<f32>>;
+    /// Tile sizes with a compiled closure module.
+    fn closure_sizes(&self) -> Vec<usize>;
+}
+
+impl TileExecutor for DenseEngine {
+    fn closure_exec(&self, tile: &DenseTile) -> anyhow::Result<Vec<f32>> {
+        self.closure(tile)
+    }
+    fn closure_sizes(&self) -> Vec<usize> {
+        self.closure_tiles()
+    }
+}
+
+impl TileExecutor for EngineHandle {
+    fn closure_exec(&self, tile: &DenseTile) -> anyhow::Result<Vec<f32>> {
+        self.closure(tile)
+    }
+    fn closure_sizes(&self) -> Vec<usize> {
+        self.closure_tiles()
+    }
+}

@@ -1,0 +1,24 @@
+//! Deterministic virtual-multicore simulator.
+//!
+//! The paper's evaluation runs on a 96-core (192 hyperthread) machine;
+//! this environment has one core. The phenomenon the paper studies —
+//! *scheduling/synchronization overhead per round vs. useful work per
+//! round* — is a property of the algorithm's task structure, so we
+//! reproduce the scalability experiments by (1) instrumenting each
+//! parallel algorithm to record its per-round task costs
+//! ([`trace::AlgoTrace`]) and (2) replaying that trace on P virtual
+//! processors under a calibrated cost model ([`model::CostModel`],
+//! greedy list scheduling in [`sched`]).
+//!
+//! What this preserves and what it does not (DESIGN.md §1): speedup
+//! *shapes* — round-bound flattening on large-diameter graphs, VGC's
+//! round collapse, crossover points — are faithful; absolute times on
+//! the authors' Xeon testbed are not claimed.
+
+pub mod model;
+pub mod sched;
+pub mod trace;
+
+pub use model::CostModel;
+pub use sched::makespan;
+pub use trace::{AlgoTrace, RoundTrace, TaskCost};

@@ -1,0 +1,173 @@
+//! Greedy list scheduling of a recorded trace onto P virtual
+//! processors.
+//!
+//! Tasks within a round are independent (that is what a synchronized
+//! round means), so the round's makespan under a work-stealing
+//! scheduler is well-approximated by greedy list scheduling (Graham:
+//! within 2× of optimal; work stealing achieves the same bound in
+//! expectation). Between rounds we charge the barrier cost from the
+//! model. Processing order: longest task first (LPT) mirrors the
+//! steal-half / chunked splitting the real pool does.
+
+use super::model::CostModel;
+use super::trace::AlgoTrace;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulated wall-clock (ns) of `trace` on `p` virtual processors.
+pub fn makespan(trace: &AlgoTrace, model: &CostModel, p: usize) -> f64 {
+    let p = p.max(1);
+    let mut total = 0.0f64;
+    let mut times: Vec<f64> = Vec::new();
+    for round in &trace.rounds {
+        if round.tasks.is_empty() {
+            total += model.sync_cost(p);
+            continue;
+        }
+        times.clear();
+        times.extend(round.tasks.iter().map(|&t| model.task_time(t)));
+        // LPT: longest processing time first.
+        times.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let span = if p == 1 {
+            times.iter().sum::<f64>()
+        } else if times.len() <= p {
+            times[0]
+        } else {
+            // Greedy: assign each task to the earliest-free processor.
+            let mut heap: BinaryHeap<Reverse<u64>> = (0..p).map(|_| Reverse(0u64)).collect();
+            // Work in integer ns to keep the heap Ord.
+            for &t in &times {
+                let Reverse(earliest) = heap.pop().unwrap();
+                heap.push(Reverse(earliest + t.max(0.0) as u64));
+            }
+            heap.into_iter().map(|Reverse(t)| t).max().unwrap_or(0) as f64
+        };
+        total += span + model.sync_cost(p);
+    }
+    total
+}
+
+/// Simulated speedup of `trace` at `p` processors over a modeled
+/// sequential run touching `seq_vertices`/`seq_edges` once.
+pub fn speedup(
+    trace: &AlgoTrace,
+    model: &CostModel,
+    p: usize,
+    seq_vertices: u64,
+    seq_edges: u64,
+) -> f64 {
+    let seq = model.seq_time(seq_vertices, seq_edges);
+    let par = makespan(trace, model, p);
+    seq / par
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{AlgoTrace, TaskCost};
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel {
+            c_task: 100.0,
+            c_vertex: 1.0,
+            c_edge: 1.0,
+            sync_base: 1000.0,
+            sync_log: 0.0,
+            sync_linear: 0.0,
+        }
+    }
+
+    fn uniform_round(tasks: usize, edges: u64) -> Vec<TaskCost> {
+        (0..tasks)
+            .map(|_| TaskCost {
+                vertices: 0,
+                edges,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn perfect_parallelism_divides_work() {
+        let mut t = AlgoTrace::new();
+        t.push_round(uniform_round(64, 1000));
+        let m = model();
+        let t1 = makespan(&t, &m, 1);
+        let t64 = makespan(&t, &m, 64);
+        // 64 equal tasks on 64 procs: span = one task + sync.
+        assert!((t64 - (1100.0 + 1000.0)).abs() < 1.0, "t64={t64}");
+        assert!(t1 > 60.0 * 1100.0);
+    }
+
+    #[test]
+    fn more_processors_never_slower_per_round_work() {
+        let mut t = AlgoTrace::new();
+        for _ in 0..10 {
+            t.push_round(uniform_round(37, 313));
+        }
+        let m = model();
+        let mut prev = f64::INFINITY;
+        for p in [1, 2, 4, 8, 64] {
+            let ms = makespan(&t, &m, p);
+            assert!(ms <= prev + 1e-9);
+            prev = ms;
+        }
+    }
+
+    #[test]
+    fn sync_cost_dominates_many_empty_rounds() {
+        // The paper's large-diameter pathology: D rounds of tiny work.
+        let m = CostModel::default();
+        let mut many_rounds = AlgoTrace::new();
+        for _ in 0..1000 {
+            many_rounds.push_round(uniform_round(2, 3));
+        }
+        let mut one_round = AlgoTrace::new();
+        one_round.push_round(uniform_round(2000, 3));
+        let p = 96;
+        let slow = makespan(&many_rounds, &m, p);
+        let fast = makespan(&one_round, &m, p);
+        assert!(
+            slow > 10.0 * fast,
+            "round-bound trace must dominate: {slow} vs {fast}"
+        );
+    }
+
+    #[test]
+    fn round_bound_trace_stops_scaling() {
+        // Speedup curve flattens (and inverts) with P when rounds
+        // dominate — the Fig. 1 shape for baselines on road graphs.
+        let m = CostModel::default();
+        let mut t = AlgoTrace::new();
+        for _ in 0..5000 {
+            t.push_round(uniform_round(4, 8));
+        }
+        let s1 = speedup(&t, &m, 1, 20_000, 40_000);
+        let s192 = speedup(&t, &m, 192, 20_000, 40_000);
+        assert!(
+            s192 < s1 * 4.0,
+            "no linear scaling when round-bound: s1={s1} s192={s192}"
+        );
+    }
+
+    #[test]
+    fn lpt_handles_skewed_tasks() {
+        let m = model();
+        let mut t = AlgoTrace::new();
+        let mut tasks = uniform_round(63, 10);
+        tasks.push(TaskCost {
+            vertices: 0,
+            edges: 100_000,
+        });
+        t.push_round(tasks);
+        // One giant task bounds the round regardless of P.
+        let ms = makespan(&t, &m, 64);
+        assert!(ms >= 100_000.0);
+        assert!(ms < 110_000.0 + 2000.0);
+    }
+
+    #[test]
+    fn empty_trace_is_zero() {
+        let t = AlgoTrace::new();
+        assert_eq!(makespan(&t, &CostModel::default(), 8), 0.0);
+    }
+}

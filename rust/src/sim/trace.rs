@@ -1,0 +1,212 @@
+//! Execution traces: what a parallel algorithm did, round by round.
+//!
+//! Algorithms record, for every synchronized round, the cost of each
+//! parallel task (vertices expanded, edges scanned). Recording happens
+//! inside parallel loops via pre-sized slot vectors (one slot per
+//! task), so it is data-race free and nearly free when disabled.
+
+use crate::parallel::vgc::SearchStats;
+
+/// Cost of one parallel task within a round.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TaskCost {
+    pub vertices: u64,
+    pub edges: u64,
+}
+
+impl From<SearchStats> for TaskCost {
+    fn from(s: SearchStats) -> Self {
+        TaskCost {
+            vertices: s.vertices,
+            edges: s.edges,
+        }
+    }
+}
+
+/// One synchronized parallel round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundTrace {
+    pub tasks: Vec<TaskCost>,
+}
+
+impl RoundTrace {
+    pub fn total_vertices(&self) -> u64 {
+        self.tasks.iter().map(|t| t.vertices).sum()
+    }
+
+    pub fn total_edges(&self) -> u64 {
+        self.tasks.iter().map(|t| t.edges).sum()
+    }
+}
+
+/// A whole algorithm execution.
+#[derive(Debug, Clone, Default)]
+pub struct AlgoTrace {
+    pub rounds: Vec<RoundTrace>,
+}
+
+impl AlgoTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a round from per-task stats, dropping empty tasks
+    /// (chunks that found nothing claimable do no scheduling work
+    /// worth modeling beyond the spawn cost — we keep them: a spawned
+    /// no-op still pays the spawn cost, which is the paper's point).
+    pub fn push_round(&mut self, tasks: Vec<TaskCost>) {
+        self.rounds.push(RoundTrace { tasks });
+    }
+
+    /// Number of synchronized rounds (the paper's O(D) bottleneck).
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Total work in vertex/edge units.
+    pub fn total(&self) -> TaskCost {
+        let mut t = TaskCost::default();
+        for r in &self.rounds {
+            t.vertices += r.total_vertices();
+            t.edges += r.total_edges();
+        }
+        t
+    }
+
+    /// Largest single-task cost (span lower bound within rounds).
+    pub fn max_task_edges(&self) -> u64 {
+        self.rounds
+            .iter()
+            .flat_map(|r| r.tasks.iter())
+            .map(|t| t.vertices + t.edges)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Optional recorder threaded through the algorithms: `None` in
+/// production runs costs one branch per round.
+pub type Recorder<'a> = Option<&'a mut AlgoTrace>;
+
+/// Concurrent per-task stat slots for one round: each parallel chunk
+/// writes its own slot; `finish` turns them into a round record.
+pub struct RoundSlots {
+    slots: Vec<std::sync::atomic::AtomicU64>,
+}
+
+impl RoundSlots {
+    /// `tasks` slots, all zero. Each slot packs (vertices<<32|edges)
+    /// capped at u32::MAX each — ample for per-task counts.
+    pub fn new(tasks: usize) -> Self {
+        RoundSlots {
+            slots: (0..tasks)
+                .map(|_| std::sync::atomic::AtomicU64::new(0))
+                .collect(),
+        }
+    }
+
+    /// Record task `i`'s cost.
+    pub fn set(&self, i: usize, cost: TaskCost) {
+        let packed = (cost.vertices.min(u32::MAX as u64) << 32)
+            | cost.edges.min(u32::MAX as u64);
+        self.slots[i].store(packed, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Convert to a round record.
+    pub fn into_round(self) -> Vec<TaskCost> {
+        self.slots
+            .into_iter()
+            .map(|s| {
+                let p = s.into_inner();
+                TaskCost {
+                    vertices: p >> 32,
+                    edges: p & 0xFFFF_FFFF,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_accumulate() {
+        let mut t = AlgoTrace::new();
+        t.push_round(vec![
+            TaskCost {
+                vertices: 2,
+                edges: 5,
+            },
+            TaskCost {
+                vertices: 1,
+                edges: 3,
+            },
+        ]);
+        t.push_round(vec![TaskCost {
+            vertices: 4,
+            edges: 0,
+        }]);
+        assert_eq!(t.num_rounds(), 2);
+        assert_eq!(
+            t.total(),
+            TaskCost {
+                vertices: 7,
+                edges: 8
+            }
+        );
+        assert_eq!(t.max_task_edges(), 7);
+    }
+
+    #[test]
+    fn round_slots_pack_unpack() {
+        let slots = RoundSlots::new(3);
+        slots.set(
+            0,
+            TaskCost {
+                vertices: 10,
+                edges: 20,
+            },
+        );
+        slots.set(
+            2,
+            TaskCost {
+                vertices: 1,
+                edges: 2,
+            },
+        );
+        let round = slots.into_round();
+        assert_eq!(
+            round[0],
+            TaskCost {
+                vertices: 10,
+                edges: 20
+            }
+        );
+        assert_eq!(round[1], TaskCost::default());
+        assert_eq!(
+            round[2],
+            TaskCost {
+                vertices: 1,
+                edges: 2
+            }
+        );
+    }
+
+    #[test]
+    fn search_stats_converts() {
+        let s = SearchStats {
+            vertices: 3,
+            edges: 9,
+        };
+        let t: TaskCost = s.into();
+        assert_eq!(
+            t,
+            TaskCost {
+                vertices: 3,
+                edges: 9
+            }
+        );
+    }
+}
