@@ -28,7 +28,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pasgal::error::Result<()> {
     // --- Layer bring-up -------------------------------------------------
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let engine = EngineHandle::spawn(artifacts)?;

@@ -1,0 +1,138 @@
+//! Ablation A3: cold (allocate-per-call) vs warm (workspace-reuse)
+//! query latency — the zero-allocation query engine.
+//!
+//! Every query used to pay O(n) allocation + initialization before the
+//! first edge was scanned: distance/mark arrays, pending flags, and
+//! K hash bags sized n+m. With an epoch-stamped workspace that setup
+//! collapses to an O(1) epoch bump, so warm-query latency must sit
+//! strictly below cold-query latency — the gap IS the per-query setup
+//! cost the workspace amortizes away.
+//!
+//! Default graph: a 1000×1000 road mesh (1M vertices, ~2.6M directed
+//! edges). Override the side length with `PASGAL_WS_BENCH_SIDE` (e.g.
+//! 300 for a quick run). The full-SCC row runs at side/2 to keep the
+//! bench under a minute on one core.
+
+use pasgal::algo::scc::reach::{vgc_multi_reach, vgc_multi_reach_ws, ReachCtx, UNSET};
+use pasgal::algo::{bfs, scc, sssp, QueryWorkspace};
+use pasgal::bench::{bench, fmt_duration, Table};
+use pasgal::graph::gen;
+use std::sync::atomic::AtomicU32;
+
+const TAU: usize = 512;
+const REPS: usize = 3;
+
+fn main() {
+    let side: usize = std::env::var("PASGAL_WS_BENCH_SIDE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    let g = gen::road(side, side, 0xAB);
+    println!(
+        "workspace ablation: road {side}x{side} (n = {}, m = {}), tau = {TAU}, reps = {REPS}",
+        g.n(),
+        g.m()
+    );
+
+    let mut ws = QueryWorkspace::new();
+    let mut t = Table::new(&["query", "cold", "warm", "cold/warm"]);
+    let sources = [0u32, (g.n() / 2) as u32, (g.n() / 3) as u32];
+
+    // --- BFS -------------------------------------------------------------
+    let mut i = 0;
+    let cold = bench(REPS, || {
+        i += 1;
+        bfs::vgc_bfs(&g, sources[i % sources.len()], TAU, None).len()
+    });
+    // Warm the workspace once, then measure steady-state queries.
+    bfs::vgc_bfs_ws(&g, 0, TAU, None, &mut ws.bfs);
+    let mut i = 0;
+    let warm = bench(REPS, || {
+        i += 1;
+        bfs::vgc_bfs_ws(&g, sources[i % sources.len()], TAU, None, &mut ws.bfs);
+        ws.bfs.dist.len()
+    });
+    push_row(&mut t, "bfs-vgc", cold.mean, warm.mean);
+
+    // --- SSSP ------------------------------------------------------------
+    let mut i = 0;
+    let cold = bench(REPS, || {
+        i += 1;
+        sssp::rho_stepping(&g, sources[i % sources.len()], TAU, None).len()
+    });
+    sssp::rho_stepping_ws(&g, 0, TAU, None, &mut ws.sssp);
+    let mut i = 0;
+    let warm = bench(REPS, || {
+        i += 1;
+        sssp::rho_stepping_ws(&g, sources[i % sources.len()], TAU, None, &mut ws.sssp);
+        ws.sssp.dist.len()
+    });
+    push_row(&mut t, "sssp-rho", cold.mean, warm.mean);
+
+    // --- Multi-source reachability (the SCC inner engine) ---------------
+    let scc_state: Vec<AtomicU32> = (0..g.n()).map(|_| AtomicU32::new(UNSET)).collect();
+    let sub = vec![0u64; g.n()];
+    let ctx = ReachCtx {
+        scc: &scc_state,
+        sub: &sub,
+    };
+    let seeds: Vec<u32> = (0..64u32).map(|k| k * 999_983 % g.n() as u32).collect();
+    let cold = bench(REPS, || vgc_multi_reach(&g, &seeds, &ctx, TAU, None).len());
+    vgc_multi_reach_ws(
+        &g,
+        &seeds,
+        &ctx,
+        TAU,
+        None,
+        &mut ws.scc.fwd,
+        &mut ws.scc.pending,
+        &mut ws.scc.bag,
+        &mut ws.scc.frontier,
+    );
+    let warm = bench(REPS, || {
+        vgc_multi_reach_ws(
+            &g,
+            &seeds,
+            &ctx,
+            TAU,
+            None,
+            &mut ws.scc.fwd,
+            &mut ws.scc.pending,
+            &mut ws.scc.bag,
+            &mut ws.scc.frontier,
+        );
+        ws.scc.fwd.len()
+    });
+    push_row(&mut t, "reach-vgc x64src", cold.mean, warm.mean);
+
+    // --- Full SCC (smaller mesh: it walks the giant SCC four times) -----
+    let gs = gen::road(side / 2, side / 2, 0xAC);
+    let gst = gs.transpose();
+    let cold = bench(REPS, || vgc_scc_cold(&gs, &gst));
+    scc::vgc_scc_ws(&gs, Some(&gst), TAU, 42, None, &mut ws.scc);
+    let warm = bench(REPS, || {
+        scc::vgc_scc_ws(&gs, Some(&gst), TAU, 42, None, &mut ws.scc);
+        ws.scc.labels().len()
+    });
+    push_row(&mut t, "scc-vgc (side/2)", cold.mean, warm.mean);
+
+    println!("{}", t.render());
+    println!(
+        "(cold = allocate-per-call entry points; warm = same queries through one \
+reused QueryWorkspace: O(1) epoch-stamp reset, zero O(n)/O(m) allocation per query)"
+    );
+}
+
+fn vgc_scc_cold(g: &pasgal::graph::Graph, gt: &pasgal::graph::Graph) -> usize {
+    scc::vgc_scc(g, Some(gt), TAU, 42, None).len()
+}
+
+fn push_row(t: &mut Table, name: &str, cold: std::time::Duration, warm: std::time::Duration) {
+    let ratio = cold.as_secs_f64() / warm.as_secs_f64().max(1e-12);
+    t.row(vec![
+        name.to_string(),
+        fmt_duration(cold),
+        fmt_duration(warm),
+        format!("{ratio:.2}x"),
+    ]);
+}

@@ -10,47 +10,75 @@
 //! networks. On large-diameter graphs frontiers never get dense, the
 //! heuristic never fires, and the O(D)-round cost remains — exactly
 //! the contrast the paper draws.
+//!
+//! Per-query state (distances, level-stamped frontier flags, frontier
+//! and edge-map buffers) lives in a reusable [`BfsWorkspace`]:
+//! [`diropt_bfs_ws`] resets it in O(1) via epoch stamps;
+//! [`diropt_bfs`] is the allocate-per-call wrapper.
 
+use crate::algo::workspace::BfsWorkspace;
 use crate::algo::UNREACHED;
 use crate::graph::Graph;
-use crate::parallel::atomic::claim;
-use crate::parallel::{pack_index, parallel_for};
+use crate::parallel::{pack_index_into, pack_into, parallel_for};
 use crate::sim::trace::{Recorder, RoundSlots, TaskCost};
 use crate::V;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// GAPBS defaults.
 const ALPHA: usize = 15;
 const BETA: usize = 18;
 
-/// Hop distances from `src`. `gt` supplies in-neighbors for directed
-/// graphs (pass `Some(&g)` for symmetric ones); without it the
-/// algorithm stays top-down (still correct).
-pub fn diropt_bfs(g: &Graph, gt: Option<&Graph>, src: V, mut rec: Recorder) -> Vec<u32> {
+/// Hop distances from `src` (allocate-per-call wrapper around
+/// [`diropt_bfs_ws`]).
+pub fn diropt_bfs(g: &Graph, gt: Option<&Graph>, src: V, rec: Recorder) -> Vec<u32> {
+    let mut ws = BfsWorkspace::new();
+    diropt_bfs_ws(g, gt, src, rec, &mut ws);
+    ws.dist.export(g.n())
+}
+
+/// Hop distances from `src`, computed in a reusable workspace and left
+/// in `ws.dist`. `gt` supplies in-neighbors for directed graphs (pass
+/// `Some(&g)` for symmetric ones); without it the algorithm stays
+/// top-down (still correct).
+pub fn diropt_bfs_ws(
+    g: &Graph,
+    gt: Option<&Graph>,
+    src: V,
+    mut rec: Recorder,
+    ws: &mut BfsWorkspace,
+) {
     let n = g.n();
     let m = g.m();
-    let mut dist = vec![UNREACHED; n];
+    ws.dist.ensure_len(n);
+    ws.dist.reset(UNREACHED);
+    ws.aux.ensure_len(n);
+    ws.aux.reset(0);
     if n == 0 {
-        return dist;
+        return;
     }
-    dist[src as usize] = 0;
-    let dist_at: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(&mut dist);
+    let dist = &ws.dist;
+    // Frontier as sparse list + dense flag array (flags always kept in
+    // sync so either representation can be used next round). Flags are
+    // level-stamped — flag[v] = level+2 when v entered the frontier at
+    // `level` — so they never need clearing within a query, and the
+    // epoch stamp clears them across queries.
+    let flags = &ws.aux;
+    dist.store(src as usize, 0);
+    flags.store(src as usize, 1);
     let gt = gt.or(if g.symmetric { Some(g) } else { None });
 
-    // Frontier as sparse list + dense flag array (flags always kept in
-    // sync so either representation can be used next round).
-    let flags: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-    flags[src as usize].store(1, Ordering::Relaxed);
-    let mut frontier: Vec<V> = vec![src];
+    let mut frontier = std::mem::take(&mut ws.frontier);
+    frontier.clear();
+    frontier.push(src);
+    let mut next = std::mem::take(&mut ws.next);
+    let mut offs = std::mem::take(&mut ws.offs);
+    let mut out = std::mem::take(&mut ws.edge_buf);
     let mut level: u32 = 0;
 
     while !frontier.is_empty() {
         let frontier_edges: usize = frontier.iter().map(|&v| g.degree(v)).sum();
         let dense = gt.is_some() && frontier_edges > m / ALPHA && frontier.len() > n / (BETA * 4);
 
-        // Clear current flags lazily after each round: we instead use
-        // level-stamps — flag[v] = level+1 when v entered frontier at
-        // `level`. Membership test: flag[v] == level (+1 offset).
         if dense {
             let gt = gt.unwrap();
             // Bottom-up: every unvisited vertex looks back.
@@ -61,15 +89,15 @@ pub fn diropt_bfs(g: &Graph, gt: Option<&Graph>, src: V, mut rec: Recorder) -> V
                 let mut scanned = 0u64;
                 let mut visited = 0u64;
                 for v in range {
-                    if dist_at[v].load(Ordering::Relaxed) != UNREACHED {
+                    if dist.get(v) != UNREACHED {
                         continue;
                     }
                     visited += 1;
                     for &u in gt.neighbors(v as V) {
                         scanned += 1;
-                        if flags[u as usize].load(Ordering::Relaxed) == level + 1 {
-                            dist_at[v].store(level + 1, Ordering::Relaxed);
-                            flags[v].store(level + 2, Ordering::Relaxed);
+                        if flags.get(u as usize) == level + 1 {
+                            dist.store(v, level + 1);
+                            flags.store(v, level + 2);
                             break;
                         }
                     }
@@ -86,25 +114,25 @@ pub fn diropt_bfs(g: &Graph, gt: Option<&Graph>, src: V, mut rec: Recorder) -> V
             if let Some(trace) = rec.as_deref_mut() {
                 trace.push_round(slots.into_round());
             }
-            frontier = pack_index(n, |v| flags[v].load(Ordering::Relaxed) == level + 2)
-                .into_iter()
-                .collect();
+            pack_index_into(n, |v| flags.get(v) == level + 2, &mut next);
+            std::mem::swap(&mut frontier, &mut next);
         } else {
             // Top-down sparse round.
-            let mut offs: Vec<usize> = frontier.iter().map(|&v| g.degree(v)).collect();
+            offs.clear();
+            offs.extend(frontier.iter().map(|&v| g.degree(v)));
             let total = crate::parallel::scan_inplace(&mut offs);
-            let mut out: Vec<u32> = vec![UNREACHED; total];
+            out.clear();
+            out.resize(total, UNREACHED);
             {
                 let op = crate::parallel::ops::SendPtr(out.as_mut_ptr());
                 let frontier_ref = &frontier;
                 let offs_ref = &offs;
-                let flags_ref = &flags;
                 parallel_for(0, frontier_ref.len(), 64, move |i| {
                     let v = frontier_ref[i];
                     let base = offs_ref[i];
                     for (j, &w) in g.neighbors(v).iter().enumerate() {
-                        if claim(&dist_at[w as usize], UNREACHED, level + 1) {
-                            flags_ref[w as usize].store(level + 2, Ordering::Relaxed);
+                        if dist.compare_exchange(w as usize, UNREACHED, level + 1) {
+                            flags.store(w as usize, level + 2);
                             unsafe { *op.add(base + j) = w };
                         }
                     }
@@ -121,11 +149,16 @@ pub fn diropt_bfs(g: &Graph, gt: Option<&Graph>, src: V, mut rec: Recorder) -> V
                         .collect(),
                 );
             }
-            frontier = crate::parallel::pack(&out, |i| out[i] != UNREACHED);
+            pack_into(&out, |i| out[i] != UNREACHED, &mut next);
+            std::mem::swap(&mut frontier, &mut next);
         }
         level += 1;
     }
-    dist
+
+    ws.frontier = frontier;
+    ws.next = next;
+    ws.offs = offs;
+    ws.edge_buf = out;
 }
 
 #[cfg(test)]
@@ -169,5 +202,18 @@ mod tests {
         let mut t = crate::sim::AlgoTrace::new();
         let _ = diropt_bfs(&g, Some(&g), 0, Some(&mut t));
         assert_eq!(t.num_rounds(), 40);
+    }
+
+    #[test]
+    fn warm_workspace_reuse_matches_fresh_calls() {
+        let g = gen::social(10, 12, 9).symmetrize();
+        let mut ws = BfsWorkspace::new();
+        for src in [0u32, 5, 9, 0] {
+            diropt_bfs_ws(&g, Some(&g), src, None, &mut ws);
+            assert_eq!(ws.dist.export(g.n()), seq_bfs(&g, src), "src={src}");
+        }
+        // Same workspace also serves VGC BFS afterwards.
+        super::super::vgc::vgc_bfs_ws(&g, 2, 64, None, &mut ws);
+        assert_eq!(ws.dist.export(g.n()), seq_bfs(&g, 2));
     }
 }

@@ -19,10 +19,10 @@ pub mod frontier;
 pub mod seq;
 pub mod vgc;
 
-pub use diropt::diropt_bfs;
+pub use diropt::{diropt_bfs, diropt_bfs_ws};
 pub use frontier::frontier_bfs;
 pub use seq::seq_bfs;
-pub use vgc::vgc_bfs;
+pub use vgc::{vgc_bfs, vgc_bfs_ws};
 
 #[cfg(test)]
 mod cross_tests {

@@ -15,14 +15,19 @@
 //! bucket extraction — so the number of synchronized rounds drops from
 //! O(D) to roughly O(D/τ) on path-like graphs, the paper's headline
 //! mechanism.
+//!
+//! Per-query state (distances, expanded marks, the K frontier bags)
+//! lives in a reusable [`BfsWorkspace`]: [`vgc_bfs_ws`] resets it in
+//! O(1) via epoch stamps and performs zero O(n)/O(m) allocation once
+//! the workspace is warm; [`vgc_bfs`] is the allocate-per-call wrapper.
+//!
+//! [`local_search`]: crate::parallel::vgc::local_search
 
+use crate::algo::workspace::BfsWorkspace;
 use crate::algo::UNREACHED;
 use crate::graph::Graph;
-use crate::hashbag::HashBag;
-use crate::parallel::atomic::write_min_u32;
 use crate::sim::trace::{Recorder, RoundSlots};
 use crate::V;
-use std::sync::atomic::{AtomicU32, Ordering};
 
 /// Number of exponential frontier buckets (covers deltas < 2^K).
 const K: usize = 8;
@@ -42,25 +47,48 @@ fn bucket(delta: u32) -> usize {
     (31 - delta.leading_zeros()).min(K as u32 - 1) as usize
 }
 
-/// Hop distances from `src` with VGC budget `tau`.
-pub fn vgc_bfs(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<u32> {
+/// Hop distances from `src` with VGC budget `tau` (allocate-per-call
+/// wrapper around [`vgc_bfs_ws`]).
+pub fn vgc_bfs(g: &Graph, src: V, tau: usize, rec: Recorder) -> Vec<u32> {
+    let mut ws = BfsWorkspace::new();
+    vgc_bfs_ws(g, src, tau, rec, &mut ws);
+    ws.dist.export(g.n())
+}
+
+/// Hop distances from `src` with VGC budget `tau`, computed in a
+/// reusable workspace. Results are left in `ws.dist` (read with
+/// [`crate::parallel::StampedU32::get`] or export them); a warm
+/// workspace performs no O(n)/O(m) allocation.
+pub fn vgc_bfs_ws(g: &Graph, src: V, tau: usize, mut rec: Recorder, ws: &mut BfsWorkspace) {
     let n = g.n();
-    let mut dist = vec![UNREACHED; n];
+    ws.dist.ensure_len(n);
+    ws.dist.reset(UNREACHED);
+    ws.aux.ensure_len(n);
+    ws.aux.reset(UNREACHED);
     if n == 0 {
-        return dist;
+        return;
     }
-    dist[src as usize] = 0;
-    let dist_at: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(&mut dist);
+    // A vertex may be claimed (and inserted) several times per round
+    // while its distance improves, so size by n + m, not n; chunk slot
+    // arrays are allocated lazily (and kept across queries), so unused
+    // capacity costs nothing.
+    ws.prepare_bags(K, n + g.m());
+
+    let dist = &ws.dist;
     // expanded[v] = distance value v was last expanded with; a vertex
     // qualifies for (re-)expansion whenever dist[v] < expanded[v].
-    let expanded: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNREACHED)).collect();
-    // A vertex may be claimed (and inserted) several times per round
-    // while its distance improves, so size by n + m, not n; chunks
-    // are allocated lazily so unused capacity costs nothing.
-    let bags: Vec<HashBag> = (0..K).map(|_| HashBag::new(n + g.m())).collect();
+    let expanded = &ws.aux;
+    let bags = &ws.bags[..K];
+    dist.store(src as usize, 0);
+
+    let mut frontier = std::mem::take(&mut ws.frontier);
+    frontier.clear();
+    frontier.push(src);
+    let mut candidates = std::mem::take(&mut ws.next);
+    candidates.clear();
+    let mut gather = std::mem::take(&mut ws.gather);
 
     let mut cur: u32 = 0;
-    let mut frontier: Vec<V> = vec![src];
     let tau = tau.max(1);
     // Buckets 0..=B cover deltas within the hop window; higher buckets
     // hold "unready" far-ahead discoveries.
@@ -70,10 +98,11 @@ pub fn vgc_bfs(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<u32> {
         if frontier.is_empty() {
             // Gather the within-window buckets (one frontier round may
             // advance up to WINDOW levels).
-            let mut candidates: Vec<V> = Vec::new();
+            candidates.clear();
             for b in &bags[..=near] {
                 if !b.is_empty() {
-                    candidates.extend(b.extract_and_clear());
+                    b.extract_into(&mut gather);
+                    candidates.append(&mut gather);
                 }
             }
             if candidates.is_empty() {
@@ -81,15 +110,15 @@ pub fn vgc_bfs(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<u32> {
                 let Some(j) = bags.iter().position(|b| !b.is_empty()) else {
                     break;
                 };
-                candidates = bags[j].extract_and_clear();
+                bags[j].extract_into(&mut candidates);
             }
             // Re-align `cur` to the smallest still-pending distance
             // (it may even move backward: local searches overshoot and
             // later corrections re-queue vertices below `cur`).
             let mut min_d = UNREACHED;
             for &v in &candidates {
-                let d = dist_at[v as usize].load(Ordering::Relaxed);
-                if d < expanded[v as usize].load(Ordering::Relaxed) && d < min_d {
+                let d = dist.get(v as usize);
+                if d < expanded.get(v as usize) && d < min_d {
                     min_d = d;
                 }
             }
@@ -98,8 +127,8 @@ pub fn vgc_bfs(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<u32> {
             }
             cur = min_d;
             for &v in &candidates {
-                let d = dist_at[v as usize].load(Ordering::Relaxed);
-                if d >= expanded[v as usize].load(Ordering::Relaxed) {
+                let d = dist.get(v as usize);
+                if d >= expanded.get(v as usize) {
                     continue; // stale entry: a newer claim handled it
                 }
                 let delta = d.saturating_sub(cur);
@@ -118,8 +147,6 @@ pub fn vgc_bfs(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<u32> {
         let record = rec.is_some();
         {
             let frontier_ref = &frontier;
-            let bags_ref = &bags;
-            let expanded_ref = &expanded;
             let slots_ref = &slots;
             crate::parallel::ops::parallel_for_chunks(
                 0,
@@ -141,38 +168,34 @@ pub fn vgc_bfs(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<u32> {
                         let v = queue[head];
                         head += 1;
                         stats.vertices += 1;
-                        let vd = dist_at[v as usize].load(Ordering::Relaxed);
+                        let vd = dist.get(v as usize);
                         // Qualify: only expand if this distance hasn't
                         // been expanded yet (one winner per value).
-                        let exp = expanded_ref[v as usize].load(Ordering::Relaxed);
-                        if vd >= exp
-                            || expanded_ref[v as usize]
-                                .compare_exchange(exp, vd, Ordering::AcqRel, Ordering::Relaxed)
-                                .is_err()
-                        {
+                        let exp = expanded.get(v as usize);
+                        if vd >= exp || !expanded.compare_exchange(v as usize, exp, vd) {
                             continue;
                         }
                         let nd = vd + 1;
                         for &w in g.neighbors(v) {
                             stats.edges += 1;
-                            if write_min_u32(&dist_at[w as usize], nd) {
+                            if dist.write_min(w as usize, nd) {
                                 // `cur` may sit above nd after a
                                 // backward cascade: saturate.
                                 let delta = nd.saturating_sub(cur);
                                 if delta <= WINDOW {
                                     queue.push(w);
                                 } else {
-                                    bags_ref[bucket(delta)].insert(w);
+                                    bags[bucket(delta)].insert(w);
                                 }
                             }
                         }
                     }
                     // Budget exhausted: spill leftovers into buckets.
                     for &w in &queue[head..] {
-                        let d = dist_at[w as usize].load(Ordering::Relaxed);
-                        if d < expanded_ref[w as usize].load(Ordering::Relaxed) {
+                        let d = dist.get(w as usize);
+                        if d < expanded.get(w as usize) {
                             let delta = d.saturating_sub(cur).max(1);
-                            bags_ref[bucket(delta)].insert(w);
+                            bags[bucket(delta)].insert(w);
                         }
                     }
                     if record {
@@ -187,9 +210,12 @@ pub fn vgc_bfs(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<u32> {
 
         // Next frontier: gathered from the buckets at the top of the
         // loop (which also re-aligns `cur`).
-        frontier = Vec::new();
+        frontier.clear();
     }
-    dist
+
+    ws.frontier = frontier;
+    ws.next = candidates;
+    ws.gather = gather;
 }
 
 #[cfg(test)]
@@ -259,5 +285,27 @@ mod tests {
         let d = vgc_bfs(&g, 5, 16, None);
         assert_eq!(d[0], UNREACHED);
         assert_eq!(d[9], 4);
+    }
+
+    #[test]
+    fn warm_workspace_reuse_matches_fresh_calls() {
+        let g = gen::grid(13, 29);
+        let mut ws = BfsWorkspace::new();
+        for src in [0u32, 7, 100, 3, 0] {
+            vgc_bfs_ws(&g, src, 32, None, &mut ws);
+            assert_eq!(ws.dist.export(g.n()), seq_bfs(&g, src), "src={src}");
+        }
+    }
+
+    #[test]
+    fn workspace_survives_graph_switch() {
+        // Smaller graph after a bigger one: stale slots beyond n must
+        // not matter, and values from graph A must not leak into B.
+        let big = gen::grid(20, 40);
+        let small = gen::path(50);
+        let mut ws = BfsWorkspace::new();
+        vgc_bfs_ws(&big, 0, 64, None, &mut ws);
+        vgc_bfs_ws(&small, 3, 64, None, &mut ws);
+        assert_eq!(ws.dist.export(small.n()), seq_bfs(&small, 3));
     }
 }

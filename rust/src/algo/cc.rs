@@ -12,6 +12,7 @@ use crate::V;
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 
 /// Concurrent union-find over `0..n`.
+#[derive(Default)]
 pub struct UnionFind {
     parent: Vec<AtomicU32>,
 }
@@ -21,6 +22,23 @@ impl UnionFind {
         UnionFind {
             parent: (0..n as u32).map(AtomicU32::new).collect(),
         }
+    }
+
+    /// Rebind for a universe of size `n`, reusing the parent storage
+    /// (O(n) writes, zero allocation once warm).
+    pub fn reset(&mut self, n: usize) {
+        self.parent.clear();
+        self.parent.extend((0..n as u32).map(AtomicU32::new));
+    }
+
+    /// Universe size.
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    /// True when the universe is empty.
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
     }
 
     /// Current root of `x` with path halving.
@@ -72,28 +90,49 @@ impl UnionFind {
 
     /// Fully-compressed labels (parallel).
     pub fn labels(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.labels_into(&mut out);
+        out
+    }
+
+    /// [`Self::labels`] into a caller-owned buffer (reused storage).
+    pub fn labels_into(&self, out: &mut Vec<u32>) {
         let n = self.parent.len();
-        let mut out = vec![0u32; n];
+        out.clear();
+        out.resize(n, 0);
         {
             let op = crate::parallel::ops::SendPtr(out.as_mut_ptr());
             parallel_for(0, n, 2048, |i| unsafe {
                 *op.add(i) = self.find(i as u32);
             });
         }
-        out
     }
 }
 
 /// Connected-component labels of a (symmetric or not — edges treated
 /// both ways) graph. Label = smallest vertex id in the component.
 pub fn connected_components(g: &Graph) -> Vec<u32> {
-    let uf = UnionFind::new(g.n());
+    let mut ws = crate::algo::workspace::CcWorkspace::new();
+    connected_components_ws(g, &mut ws);
+    std::mem::take(&mut ws.labels)
+}
+
+/// [`connected_components`] out of a reusable workspace: labels are
+/// left in `ws.labels` (also returned as a slice); a warm workspace
+/// performs zero O(n) allocation.
+pub fn connected_components_ws<'a>(
+    g: &Graph,
+    ws: &'a mut crate::algo::workspace::CcWorkspace,
+) -> &'a [u32] {
+    ws.uf.reset(g.n());
+    let uf = &ws.uf;
     parallel_for(0, g.n(), 256, |u| {
         for &v in g.neighbors(u as V) {
             uf.unite(u as u32, v);
         }
     });
-    uf.labels()
+    uf.labels_into(&mut ws.labels);
+    &ws.labels
 }
 
 /// Spanning forest: edges whose `unite` succeeded. Returns (labels,
@@ -233,6 +272,17 @@ mod tests {
             let g = Graph::from_edges(n, &edges, true).symmetrize();
             assert_same_partition(&connected_components(&g), &seq_cc(&g));
         });
+    }
+
+    #[test]
+    fn warm_workspace_reuse_matches_fresh_calls() {
+        let mut ws = crate::algo::workspace::CcWorkspace::new();
+        let a = gen::bubbles(8, 5, 1);
+        let b = gen::path(30).symmetrize();
+        for _ in 0..3 {
+            assert_same_partition(&connected_components_ws(&a, &mut ws).to_vec(), &seq_cc(&a));
+            assert_same_partition(&connected_components_ws(&b, &mut ws).to_vec(), &seq_cc(&b));
+        }
     }
 
     #[test]

@@ -19,6 +19,9 @@ pub mod cc;
 pub mod kcore;
 pub mod scc;
 pub mod sssp;
+pub mod workspace;
+
+pub use workspace::{BfsWorkspace, CcWorkspace, QueryWorkspace, SccWorkspace, SsspWorkspace};
 
 /// Distance sentinel for unreached vertices in hop-distance outputs.
 pub const UNREACHED: u32 = u32::MAX;

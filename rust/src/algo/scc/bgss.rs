@@ -2,7 +2,8 @@
 //! round-synchronous BFS-order reachability. This is the "theoretically
 //! efficient but round-bound" baseline of Fig. 1 / Table 4.
 
-use super::decomp::{decompose, Engine};
+use super::decomp::{decompose, decompose_ws, Engine};
+use crate::algo::workspace::SccWorkspace;
 use crate::graph::Graph;
 use crate::sim::trace::Recorder;
 
@@ -11,6 +12,17 @@ use crate::sim::trace::Recorder;
 /// permutation.
 pub fn bgss_scc(g: &Graph, gt: Option<&Graph>, seed: u64, rec: Recorder) -> Vec<u32> {
     decompose(g, gt, Engine::Rounds, seed, rec)
+}
+
+/// [`bgss_scc`] out of a reusable workspace (labels in `ws.labels`).
+pub fn bgss_scc_ws(
+    g: &Graph,
+    gt: Option<&Graph>,
+    seed: u64,
+    rec: Recorder,
+    ws: &mut SccWorkspace,
+) {
+    decompose_ws(g, gt, Engine::Rounds, seed, rec, ws)
 }
 
 #[cfg(test)]

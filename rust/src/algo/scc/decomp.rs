@@ -3,14 +3,24 @@
 //! engine. `bgss_scc` plugs in the round-synchronous engine,
 //! `vgc_scc` the VGC engine — so the measured difference between them
 //! is exactly the paper's contribution.
+//!
+//! [`decompose_ws`] runs the whole decomposition out of a reusable
+//! [`SccWorkspace`]: labels, subproblem ids, trim degrees, the pivot
+//! permutation and — the hot part — the per-batch reachability masks
+//! are all reused, so repeated SCC queries on a warm workspace perform
+//! zero O(n) allocation, and the many reachability sub-queries *within*
+//! one decomposition stopped reallocating masks entirely.
 
-use super::reach::{bfs_multi_reach, vgc_multi_reach, ReachCtx, UNSET};
+use super::reach::{bfs_multi_reach_ws, vgc_multi_reach_ws, ReachCtx, UNSET};
+use crate::algo::workspace::SccWorkspace;
 use crate::graph::Graph;
-use crate::parallel::parallel_for;
+use crate::hashbag::HashBag;
+use crate::parallel::atomic::as_atomic_u32;
+use crate::parallel::{pack_index_into, parallel_for};
 use crate::prop::Rng;
 use crate::sim::trace::Recorder;
 use crate::V;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, Ordering};
 
 /// Which reachability engine drives the decomposition.
 #[derive(Debug, Clone, Copy)]
@@ -44,37 +54,64 @@ pub enum TrimMode {
     Fixpoint,
 }
 
-/// Peel trivial SCCs: vertices with zero active in- or out-degree
-/// cannot be in a nontrivial SCC, so they are their own (singleton)
-/// components. Returns #peeled.
-pub fn trim(
+/// Peel trivial SCCs (allocate-per-call wrapper around [`trim_ws`]).
+pub fn trim(g: &Graph, gt: &Graph, scc: &[AtomicU32], mode: TrimMode, rec: Recorder) -> usize {
+    let mut deg_out = Vec::new();
+    let mut deg_in = Vec::new();
+    let mut bag = HashBag::default();
+    let mut frontier = Vec::new();
+    trim_ws(
+        g,
+        gt,
+        scc,
+        mode,
+        rec,
+        &mut deg_out,
+        &mut deg_in,
+        &mut bag,
+        &mut frontier,
+    )
+}
+
+/// Peel trivial SCCs using caller-owned scratch: vertices with zero
+/// active in- or out-degree cannot be in a nontrivial SCC, so they are
+/// their own (singleton) components. Returns #peeled.
+#[allow(clippy::too_many_arguments)]
+pub fn trim_ws(
     g: &Graph,
     gt: &Graph,
     scc: &[AtomicU32],
     mode: TrimMode,
     mut rec: Recorder,
+    deg_out: &mut Vec<u32>,
+    deg_in: &mut Vec<u32>,
+    bag: &mut HashBag,
+    frontier: &mut Vec<V>,
 ) -> usize {
     let n = g.n();
-    let peeled = AtomicUsize::new(0);
-    // Active out/in degrees.
-    let out_deg: Vec<AtomicU32> = (0..n as u32).map(|v| AtomicU32::new(g.degree(v) as u32)).collect();
-    let in_deg: Vec<AtomicU32> = (0..n as u32)
-        .map(|v| AtomicU32::new(gt.degree(v) as u32))
-        .collect();
+    let mut peeled = 0usize;
+    bag.reset(n);
+    // Active out/in degrees (O(n) writes into reused storage).
+    deg_out.clear();
+    deg_out.resize(n, 0);
+    deg_in.clear();
+    deg_in.resize(n, 0);
+    let out_deg = as_atomic_u32(deg_out);
+    let in_deg = as_atomic_u32(deg_in);
     // Self-loops keep a vertex alive as its own cycle only if the
     // loop exists; standard trim treats self-loop as non-trivial.
     // We count self-loops out of the degrees.
     parallel_for(0, n, 1024, |v| {
         let selfs = g.neighbors(v as V).iter().filter(|&&w| w == v as V).count() as u32;
-        if selfs > 0 {
-            out_deg[v].fetch_sub(selfs, Ordering::Relaxed);
-            in_deg[v].fetch_sub(selfs, Ordering::Relaxed);
-        }
+        out_deg[v].store(g.degree(v as V) as u32 - selfs, Ordering::Relaxed);
+        in_deg[v].store(gt.degree(v as V) as u32 - selfs, Ordering::Relaxed);
     });
 
-    let mut frontier: Vec<V> = crate::parallel::pack_index(n, |v| {
-        out_deg[v].load(Ordering::Relaxed) == 0 || in_deg[v].load(Ordering::Relaxed) == 0
-    });
+    pack_index_into(
+        n,
+        |v| out_deg[v].load(Ordering::Relaxed) == 0 || in_deg[v].load(Ordering::Relaxed) == 0,
+        frontier,
+    );
     // Claim initial frontier.
     frontier.retain(|&v| {
         scc[v as usize]
@@ -82,13 +119,10 @@ pub fn trim(
             .is_ok()
     });
     while !frontier.is_empty() {
-        peeled.fetch_add(frontier.len(), Ordering::Relaxed);
-        let bag = crate::hashbag::HashBag::new(n);
+        peeled += frontier.len();
         {
-            let frontier_ref = &frontier;
-            let bag_ref = &bag;
-            let out_ref = &out_deg;
-            let in_ref = &in_deg;
+            let frontier_ref = &*frontier;
+            let bag_ref = &*bag;
             parallel_for(0, frontier_ref.len(), 64, move |i| {
                 let v = frontier_ref[i];
                 // v leaves: decrement in-degree of out-neighbors and
@@ -97,7 +131,7 @@ pub fn trim(
                     if w == v || scc[w as usize].load(Ordering::Relaxed) != UNSET {
                         continue;
                     }
-                    if in_ref[w as usize].fetch_sub(1, Ordering::Relaxed) == 1
+                    if in_deg[w as usize].fetch_sub(1, Ordering::Relaxed) == 1
                         && scc[w as usize]
                             .compare_exchange(UNSET, w, Ordering::AcqRel, Ordering::Relaxed)
                             .is_ok()
@@ -109,7 +143,7 @@ pub fn trim(
                     if w == v || scc[w as usize].load(Ordering::Relaxed) != UNSET {
                         continue;
                     }
-                    if out_ref[w as usize].fetch_sub(1, Ordering::Relaxed) == 1
+                    if out_deg[w as usize].fetch_sub(1, Ordering::Relaxed) == 1
                         && scc[w as usize]
                             .compare_exchange(UNSET, w, Ordering::AcqRel, Ordering::Relaxed)
                             .is_ok()
@@ -130,25 +164,51 @@ pub fn trim(
                     .collect(),
             );
         }
-        frontier = match mode {
-            TrimMode::Once => Vec::new(),
-            TrimMode::Fixpoint => bag.extract_and_clear(),
-        };
+        match mode {
+            TrimMode::Once => frontier.clear(),
+            TrimMode::Fixpoint => bag.extract_into(frontier),
+        }
     }
-    peeled.load(Ordering::Relaxed)
+    peeled
 }
 
-/// Full decomposition. Returns per-vertex SCC labels (member vertex).
+/// Full decomposition (allocate-per-call wrapper around
+/// [`decompose_ws`]). Returns per-vertex SCC labels (member vertex).
 pub fn decompose(
     g: &Graph,
     gt: Option<&Graph>,
     engine: Engine,
     seed: u64,
-    mut rec: Recorder,
+    rec: Recorder,
 ) -> Vec<u32> {
+    let mut ws = SccWorkspace::new();
+    decompose_ws(g, gt, engine, seed, rec, &mut ws);
+    std::mem::take(&mut ws.labels)
+}
+
+/// Full decomposition out of a reusable workspace. Per-vertex SCC
+/// labels (member vertex) are left in `ws.labels`; a warm workspace
+/// performs zero O(n) allocation, including across the many
+/// reachability sub-queries.
+pub fn decompose_ws(
+    g: &Graph,
+    gt: Option<&Graph>,
+    engine: Engine,
+    seed: u64,
+    mut rec: Recorder,
+    ws: &mut SccWorkspace,
+) {
     let n = g.n();
+    let mut labels = std::mem::take(&mut ws.labels);
+    labels.clear();
+    labels.resize(n, UNSET);
+    let mut sub = std::mem::take(&mut ws.sub);
+    sub.clear();
+    sub.resize(n, 0);
     if n == 0 {
-        return Vec::new();
+        ws.labels = labels;
+        ws.sub = sub;
+        return;
     }
     let gt_owned;
     let gt = match gt {
@@ -158,106 +218,151 @@ pub fn decompose(
             &gt_owned
         }
     };
-    let scc: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNSET)).collect();
-    let mut sub: Vec<u64> = vec![0; n];
+    {
+        let scc: &[AtomicU32] = as_atomic_u32(&mut labels);
 
-    trim(g, gt, &scc, TrimMode::Once, rec.as_deref_mut());
+        trim_ws(
+            g,
+            gt,
+            scc,
+            TrimMode::Once,
+            rec.as_deref_mut(),
+            &mut ws.deg_out,
+            &mut ws.deg_in,
+            &mut ws.bag,
+            &mut ws.frontier,
+        );
 
-    // Random pivot order.
-    let mut perm: Vec<V> = (0..n as V).collect();
-    Rng::new(seed).shuffle(&mut perm);
-    let mut cursor = 0usize;
-    let mut batch = 1usize;
+        // Random pivot order.
+        let mut perm = std::mem::take(&mut ws.perm);
+        perm.clear();
+        perm.extend(0..n as V);
+        Rng::new(seed).shuffle(&mut perm);
+        let mut cursor = 0usize;
+        let mut batch = 1usize;
 
-    while cursor < n {
-        // Next `batch` active pivots in permutation order.
-        let mut pivots: Vec<V> = Vec::with_capacity(batch);
-        while cursor < n && pivots.len() < batch {
-            let v = perm[cursor];
-            cursor += 1;
-            if scc[v as usize].load(Ordering::Relaxed) == UNSET {
-                pivots.push(v);
-            }
-        }
-        if pivots.is_empty() {
-            break;
-        }
-        let ctx = ReachCtx {
-            scc: &scc,
-            sub: &sub,
-        };
-        let (fwd, bwd) = match engine {
-            Engine::Rounds => (
-                bfs_multi_reach(g, &pivots, &ctx, rec.as_deref_mut()),
-                bfs_multi_reach(gt, &pivots, &ctx, rec.as_deref_mut()),
-            ),
-            Engine::Vgc(tau) => (
-                vgc_multi_reach(g, &pivots, &ctx, tau, rec.as_deref_mut()),
-                vgc_multi_reach(gt, &pivots, &ctx, tau, rec.as_deref_mut()),
-            ),
-        };
-        // Assign SCCs / refine subproblems.
-        {
-            let sub_at = crate::parallel::atomic::as_atomic_u64(&mut sub);
-            let pivots_ref = &pivots;
-            let scc_ref = &scc;
-            let fwd_ref = &fwd;
-            let bwd_ref = &bwd;
-            parallel_for(0, n, 2048, move |v| {
-                if scc_ref[v].load(Ordering::Relaxed) != UNSET {
-                    return;
-                }
-                let (f, b) = (fwd_ref[v], bwd_ref[v]);
-                let common = f & b;
-                if common != 0 {
-                    let pivot = pivots_ref[common.trailing_zeros() as usize];
-                    scc_ref[v].store(pivot, Ordering::Relaxed);
-                } else if f != 0 || b != 0 {
-                    let old = sub_at[v].load(Ordering::Relaxed);
-                    sub_at[v].store(mix(old, f, b), Ordering::Relaxed);
-                }
-            });
-        }
-        // Partition-refinement shortcut: an active vertex alone in its
-        // subproblem can share an SCC with no other active vertex, so
-        // it is a singleton SCC. This keeps the 64-bit-mask batching
-        // efficient on DAG-like regions (unique (f,b) signatures
-        // separate fast), playing the role of BGSS's unbounded prefix
-        // doubling.
-        {
-            let mut sub_count: std::collections::HashMap<u64, u32> =
-                std::collections::HashMap::new();
-            for v in 0..n {
-                if scc[v].load(Ordering::Relaxed) == UNSET {
-                    *sub_count.entry(sub[v]).or_insert(0) += 1;
+        while cursor < n {
+            // Next `batch` active pivots in permutation order.
+            let mut pivots: Vec<V> = Vec::with_capacity(batch);
+            while cursor < n && pivots.len() < batch {
+                let v = perm[cursor];
+                cursor += 1;
+                if scc[v as usize].load(Ordering::Relaxed) == UNSET {
+                    pivots.push(v);
                 }
             }
-            let sub_ref = &sub;
-            let sub_count_ref = &sub_count;
-            let scc_ref = &scc;
-            parallel_for(0, n, 2048, move |v| {
-                if scc_ref[v].load(Ordering::Relaxed) == UNSET
-                    && sub_count_ref[&sub_ref[v]] == 1
-                {
-                    scc_ref[v].store(v as u32, Ordering::Relaxed);
+            if pivots.is_empty() {
+                break;
+            }
+            let ctx = ReachCtx {
+                scc,
+                sub: &sub,
+            };
+            match engine {
+                Engine::Rounds => {
+                    bfs_multi_reach_ws(
+                        g,
+                        &pivots,
+                        &ctx,
+                        rec.as_deref_mut(),
+                        &mut ws.fwd,
+                        &mut ws.pending,
+                        &mut ws.bag,
+                        &mut ws.frontier,
+                    );
+                    bfs_multi_reach_ws(
+                        gt,
+                        &pivots,
+                        &ctx,
+                        rec.as_deref_mut(),
+                        &mut ws.bwd,
+                        &mut ws.pending,
+                        &mut ws.bag,
+                        &mut ws.frontier,
+                    );
                 }
-            });
+                Engine::Vgc(tau) => {
+                    vgc_multi_reach_ws(
+                        g,
+                        &pivots,
+                        &ctx,
+                        tau,
+                        rec.as_deref_mut(),
+                        &mut ws.fwd,
+                        &mut ws.pending,
+                        &mut ws.bag,
+                        &mut ws.frontier,
+                    );
+                    vgc_multi_reach_ws(
+                        gt,
+                        &pivots,
+                        &ctx,
+                        tau,
+                        rec.as_deref_mut(),
+                        &mut ws.bwd,
+                        &mut ws.pending,
+                        &mut ws.bag,
+                        &mut ws.frontier,
+                    );
+                }
+            }
+            // Assign SCCs / refine subproblems.
+            {
+                let sub_at = crate::parallel::atomic::as_atomic_u64(&mut sub);
+                let pivots_ref = &pivots;
+                let fwd_ref = &ws.fwd;
+                let bwd_ref = &ws.bwd;
+                parallel_for(0, n, 2048, move |v| {
+                    if scc[v].load(Ordering::Relaxed) != UNSET {
+                        return;
+                    }
+                    let (f, b) = (fwd_ref.get(v), bwd_ref.get(v));
+                    let common = f & b;
+                    if common != 0 {
+                        let pivot = pivots_ref[common.trailing_zeros() as usize];
+                        scc[v].store(pivot, Ordering::Relaxed);
+                    } else if f != 0 || b != 0 {
+                        let old = sub_at[v].load(Ordering::Relaxed);
+                        sub_at[v].store(mix(old, f, b), Ordering::Relaxed);
+                    }
+                });
+            }
+            // Partition-refinement shortcut: an active vertex alone in
+            // its subproblem can share an SCC with no other active
+            // vertex, so it is a singleton SCC. This keeps the
+            // 64-bit-mask batching efficient on DAG-like regions
+            // (unique (f,b) signatures separate fast), playing the role
+            // of BGSS's unbounded prefix doubling.
+            {
+                let sub_count = &mut ws.sub_count;
+                sub_count.clear();
+                for v in 0..n {
+                    if scc[v].load(Ordering::Relaxed) == UNSET {
+                        *sub_count.entry(sub[v]).or_insert(0) += 1;
+                    }
+                }
+                let sub_ref = &sub;
+                let sub_count_ref = &*sub_count;
+                parallel_for(0, n, 2048, move |v| {
+                    if scc[v].load(Ordering::Relaxed) == UNSET && sub_count_ref[&sub_ref[v]] == 1
+                    {
+                        scc[v].store(v as u32, Ordering::Relaxed);
+                    }
+                });
+            }
+            batch = (batch * 4).min(MAX_BATCH);
         }
-        batch = (batch * 4).min(MAX_BATCH);
+        ws.perm = perm;
     }
     // Safety net: any vertex still unassigned (shouldn't happen since
     // every vertex appears in the permutation) becomes a singleton.
-    scc.into_iter()
-        .enumerate()
-        .map(|(v, a)| {
-            let x = a.into_inner();
-            if x == UNSET {
-                v as u32
-            } else {
-                x
-            }
-        })
-        .collect()
+    for (v, l) in labels.iter_mut().enumerate() {
+        if *l == UNSET {
+            *l = v as u32;
+        }
+    }
+    ws.labels = labels;
+    ws.sub = sub;
 }
 
 #[cfg(test)]
@@ -309,5 +414,16 @@ mod tests {
         assert!(labels.iter().all(|&l| l == labels[0]));
         let labels = decompose(&g, None, Engine::Vgc(8), 2, None);
         assert!(labels.iter().all(|&l| l == labels[0]));
+    }
+
+    #[test]
+    fn warm_workspace_decompose_matches_fresh() {
+        let g = gen::web(9, 7, 4);
+        let mut ws = SccWorkspace::new();
+        for seed in [1u64, 2, 3] {
+            decompose_ws(&g, None, Engine::Vgc(32), seed, None, &mut ws);
+            let fresh = decompose(&g, None, Engine::Vgc(32), seed, None);
+            assert_eq!(ws.labels(), &fresh[..], "seed {seed}");
+        }
     }
 }

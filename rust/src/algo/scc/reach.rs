@@ -14,13 +14,21 @@
 //! propagation that adds bits to `masks[w]` enqueues `w` iff `w` is
 //! not already pending; a task clears the flag *before* reading the
 //! mask, so late arrivals always re-enqueue.
+//!
+//! Both engines come in `_ws` form taking epoch-stamped mask/flag
+//! arrays plus a reusable bag: one SCC decomposition issues two
+//! reachability calls per pivot batch, and with a warm
+//! [`crate::algo::SccWorkspace`] none of them allocates O(n) state —
+//! previously every call reallocated `masks`, `pending` and a fresh
+//! bag per round.
 
 use crate::graph::Graph;
 use crate::hashbag::HashBag;
 use crate::parallel::vgc::local_search;
+use crate::parallel::workspace::{StampedU32, StampedU64};
 use crate::sim::trace::{Recorder, RoundSlots, TaskCost};
 use crate::V;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, Ordering};
 
 /// Sentinel: vertex not yet assigned to an SCC (still active).
 pub const UNSET: u32 = u32::MAX;
@@ -45,51 +53,92 @@ impl ReachCtx<'_> {
     }
 }
 
-fn seed_masks(n: usize, seeds: &[V], ctx: &ReachCtx) -> (Vec<AtomicU64>, Vec<AtomicU32>, Vec<V>) {
+/// Rebind the workspace pieces for a new search and seed the frontier.
+fn seed_masks_ws(
+    n: usize,
+    seeds: &[V],
+    ctx: &ReachCtx,
+    masks: &mut StampedU64,
+    pending: &mut StampedU32,
+    bag: &mut HashBag,
+    frontier: &mut Vec<V>,
+) {
     assert!(seeds.len() <= 64, "at most 64 sources per call");
-    let masks: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-    let pending: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-    let mut frontier = Vec::with_capacity(seeds.len());
+    masks.ensure_len(n);
+    masks.advance_epoch();
+    pending.ensure_len(n);
+    pending.reset(0);
+    bag.reset(n);
+    frontier.clear();
     for (i, &s) in seeds.iter().enumerate() {
         if ctx.active(s) {
-            masks[s as usize].fetch_or(1 << i, Ordering::Relaxed);
-            if pending[s as usize].swap(1, Ordering::Relaxed) == 0 {
+            masks.fetch_or(s as usize, 1 << i);
+            if pending.swap(s as usize, 1) == 0 {
                 frontier.push(s);
             }
         }
     }
-    (masks, pending, frontier)
 }
 
-/// Round-synchronous multi-source reachability (baseline engine).
-pub fn bfs_multi_reach(g: &Graph, seeds: &[V], ctx: &ReachCtx, mut rec: Recorder) -> Vec<u64> {
+/// Round-synchronous multi-source reachability (allocate-per-call
+/// wrapper around [`bfs_multi_reach_ws`]).
+pub fn bfs_multi_reach(g: &Graph, seeds: &[V], ctx: &ReachCtx, rec: Recorder) -> Vec<u64> {
+    let mut masks = StampedU64::new(0);
+    let mut pending = StampedU32::new(0);
+    let mut bag = HashBag::default();
+    let mut frontier = Vec::new();
+    bfs_multi_reach_ws(
+        g,
+        seeds,
+        ctx,
+        rec,
+        &mut masks,
+        &mut pending,
+        &mut bag,
+        &mut frontier,
+    );
+    masks.export(g.n())
+}
+
+/// Round-synchronous multi-source reachability into a reusable
+/// workspace: results are left in `masks` (read via
+/// [`StampedU64::get`]); a warm workspace allocates no O(n) state.
+#[allow(clippy::too_many_arguments)]
+pub fn bfs_multi_reach_ws(
+    g: &Graph,
+    seeds: &[V],
+    ctx: &ReachCtx,
+    mut rec: Recorder,
+    masks: &mut StampedU64,
+    pending: &mut StampedU32,
+    bag: &mut HashBag,
+    frontier: &mut Vec<V>,
+) {
     let n = g.n();
-    let (masks, pending, mut frontier) = seed_masks(n, seeds, ctx);
+    seed_masks_ws(n, seeds, ctx, masks, pending, bag, frontier);
+    let masks = &*masks;
+    let pending = &*pending;
+    let bag = &*bag;
     while !frontier.is_empty() {
-        let bag = HashBag::new(n);
         let ntasks = frontier.len();
         let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
         let record = rec.is_some();
         {
-            let frontier_ref = &frontier;
-            let masks_ref = &masks;
-            let pending_ref = &pending;
-            let bag_ref = &bag;
+            let frontier_ref = &*frontier;
             let slots_ref = &slots;
             crate::parallel::parallel_for(0, ntasks, 16, move |i| {
                 let v = frontier_ref[i];
-                pending_ref[v as usize].store(0, Ordering::Relaxed);
-                let mv = masks_ref[v as usize].load(Ordering::Relaxed);
+                pending.store(v as usize, 0);
+                let mv = masks.get(v as usize);
                 let mut edges = 0u64;
                 for &w in g.neighbors(v) {
                     edges += 1;
                     if !ctx.active(w) || !ctx.same_sub(v, w) {
                         continue;
                     }
-                    let old = masks_ref[w as usize].fetch_or(mv, Ordering::Relaxed);
-                    if old | mv != old && pending_ref[w as usize].swap(1, Ordering::Relaxed) == 0
-                    {
-                        bag_ref.insert(w);
+                    let old = masks.fetch_or(w as usize, mv);
+                    if old | mv != old && pending.swap(w as usize, 1) == 0 {
+                        bag.insert(w);
                     }
                 }
                 if record {
@@ -100,35 +149,66 @@ pub fn bfs_multi_reach(g: &Graph, seeds: &[V], ctx: &ReachCtx, mut rec: Recorder
         if let Some(trace) = rec.as_deref_mut() {
             trace.push_round(slots.into_round());
         }
-        frontier = bag.extract_and_clear();
+        bag.extract_into(frontier);
     }
-    masks.into_iter().map(|m| m.into_inner()).collect()
 }
 
 /// Seeds-per-task for the VGC engine.
 const SEEDS_PER_TASK: usize = 4;
 
-/// VGC multi-source reachability: the PASGAL engine.
+/// VGC multi-source reachability (allocate-per-call wrapper around
+/// [`vgc_multi_reach_ws`]).
 pub fn vgc_multi_reach(
     g: &Graph,
     seeds: &[V],
     ctx: &ReachCtx,
     tau: usize,
-    mut rec: Recorder,
+    rec: Recorder,
 ) -> Vec<u64> {
+    let mut masks = StampedU64::new(0);
+    let mut pending = StampedU32::new(0);
+    let mut bag = HashBag::default();
+    let mut frontier = Vec::new();
+    vgc_multi_reach_ws(
+        g,
+        seeds,
+        ctx,
+        tau,
+        rec,
+        &mut masks,
+        &mut pending,
+        &mut bag,
+        &mut frontier,
+    );
+    masks.export(g.n())
+}
+
+/// VGC multi-source reachability into a reusable workspace: the PASGAL
+/// engine, allocation-free when warm.
+#[allow(clippy::too_many_arguments)]
+pub fn vgc_multi_reach_ws(
+    g: &Graph,
+    seeds: &[V],
+    ctx: &ReachCtx,
+    tau: usize,
+    mut rec: Recorder,
+    masks: &mut StampedU64,
+    pending: &mut StampedU32,
+    bag: &mut HashBag,
+    frontier: &mut Vec<V>,
+) {
     let n = g.n();
     let tau = tau.max(1);
-    let (masks, pending, mut frontier) = seed_masks(n, seeds, ctx);
+    seed_masks_ws(n, seeds, ctx, masks, pending, bag, frontier);
+    let masks = &*masks;
+    let pending = &*pending;
+    let bag = &*bag;
     while !frontier.is_empty() {
-        let bag = HashBag::new(n);
         let ntasks = frontier.len().div_ceil(SEEDS_PER_TASK);
         let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
         let record = rec.is_some();
         {
-            let frontier_ref = &frontier;
-            let masks_ref = &masks;
-            let pending_ref = &pending;
-            let bag_ref = &bag;
+            let frontier_ref = &*frontier;
             let slots_ref = &slots;
             crate::parallel::ops::parallel_for_chunks(
                 0,
@@ -138,18 +218,16 @@ pub fn vgc_multi_reach(
                     let mut stack: Vec<u32> = Vec::with_capacity(64);
                     stack.extend(range.map(|i| frontier_ref[i]));
                     let stats = local_search(&mut stack, tau, |v, stack| {
-                        pending_ref[v as usize].store(0, Ordering::Relaxed);
-                        let mv = masks_ref[v as usize].load(Ordering::Relaxed);
+                        pending.store(v as usize, 0);
+                        let mv = masks.get(v as usize);
                         let mut edges = 0usize;
                         for &w in g.neighbors(v) {
                             edges += 1;
                             if !ctx.active(w) || !ctx.same_sub(v, w) {
                                 continue;
                             }
-                            let old = masks_ref[w as usize].fetch_or(mv, Ordering::Relaxed);
-                            if old | mv != old
-                                && pending_ref[w as usize].swap(1, Ordering::Relaxed) == 0
-                            {
+                            let old = masks.fetch_or(w as usize, mv);
+                            if old | mv != old && pending.swap(w as usize, 1) == 0 {
                                 // Claimed: expand within this search
                                 // (any order is fine for reachability).
                                 stack.push(w);
@@ -159,7 +237,7 @@ pub fn vgc_multi_reach(
                     });
                     // Budget exhausted: the leftovers become frontier.
                     for &w in &stack {
-                        bag_ref.insert(w);
+                        bag.insert(w);
                     }
                     if record {
                         slots_ref.set(ti, stats.into());
@@ -170,9 +248,8 @@ pub fn vgc_multi_reach(
         if let Some(trace) = rec.as_deref_mut() {
             trace.push_round(slots.into_round());
         }
-        frontier = bag.extract_and_clear();
+        bag.extract_into(frontier);
     }
-    masks.into_iter().map(|m| m.into_inner()).collect()
 }
 
 #[cfg(test)]
@@ -288,5 +365,35 @@ mod tests {
             t_vgc.num_rounds(),
             t_bfs.num_rounds()
         );
+    }
+
+    #[test]
+    fn warm_workspace_reuse_across_calls_is_exact() {
+        let g = gen::web(8, 5, 3);
+        let (scc, sub) = fresh_ctx(g.n());
+        let ctx = ReachCtx {
+            scc: &scc,
+            sub: &sub,
+        };
+        let mut masks = StampedU64::new(0);
+        let mut pending = StampedU32::new(0);
+        let mut bag = HashBag::default();
+        let mut frontier = Vec::new();
+        for round in 0..5u32 {
+            let seeds: Vec<V> = (0..8).map(|i| (i * 7 + round) % g.n() as u32).collect();
+            vgc_multi_reach_ws(
+                &g,
+                &seeds,
+                &ctx,
+                16,
+                None,
+                &mut masks,
+                &mut pending,
+                &mut bag,
+                &mut frontier,
+            );
+            let fresh = vgc_multi_reach(&g, &seeds, &ctx, 16, None);
+            assert_eq!(masks.export(g.n()), fresh, "round {round}");
+        }
     }
 }

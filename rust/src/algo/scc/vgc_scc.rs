@@ -4,13 +4,29 @@
 //! need BFS order, so the relaxed visit order costs nothing and buys
 //! back all the round-synchronization overhead — the paper's §2.1.
 
-use super::decomp::{decompose, Engine};
+use super::decomp::{decompose, decompose_ws, Engine};
+use crate::algo::workspace::SccWorkspace;
 use crate::graph::Graph;
 use crate::sim::trace::Recorder;
 
 /// Per-vertex SCC labels with VGC budget `tau`.
 pub fn vgc_scc(g: &Graph, gt: Option<&Graph>, tau: usize, seed: u64, rec: Recorder) -> Vec<u32> {
     decompose(g, gt, Engine::Vgc(tau), seed, rec)
+}
+
+/// [`vgc_scc`] out of a reusable workspace: labels are left in
+/// `ws.labels`, and a warm workspace performs zero O(n) allocation —
+/// including across the many reachability sub-queries one
+/// decomposition issues.
+pub fn vgc_scc_ws(
+    g: &Graph,
+    gt: Option<&Graph>,
+    tau: usize,
+    seed: u64,
+    rec: Recorder,
+    ws: &mut SccWorkspace,
+) {
+    decompose_ws(g, gt, Engine::Vgc(tau), seed, rec, ws)
 }
 
 #[cfg(test)]

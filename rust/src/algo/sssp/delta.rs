@@ -6,40 +6,55 @@
 //! rounds). Each inner iteration is a synchronized round — on
 //! large-diameter weighted graphs the bucket chain is long and the
 //! round count grows accordingly.
+//!
+//! Per-query state (distances, the bucket bags, the staging bag) lives
+//! in a reusable [`SsspWorkspace`]: [`delta_stepping_ws`] resets it in
+//! O(1) via epoch stamps and bag rebinding; [`delta_stepping`] is the
+//! allocate-per-call wrapper. The default Δ (mean edge weight) comes
+//! from the graph's memoized [`crate::graph::WeightStats`].
 
+use crate::algo::workspace::SsspWorkspace;
 use crate::graph::Graph;
 use crate::hashbag::HashBag;
-use crate::parallel::atomic::{load_f32, write_min_f32};
 use crate::parallel::parallel_for;
 use crate::sim::trace::{Recorder, TaskCost};
 use crate::{INF, V};
-use std::sync::atomic::AtomicU32;
 
 /// Shortest distances from `src`. `delta` defaults to the mean edge
-/// weight (a standard heuristic).
-pub fn delta_stepping(g: &Graph, src: V, delta: Option<f32>, mut rec: Recorder) -> Vec<f32> {
+/// weight (a standard heuristic). Allocate-per-call wrapper around
+/// [`delta_stepping_ws`].
+pub fn delta_stepping(g: &Graph, src: V, delta: Option<f32>, rec: Recorder) -> Vec<f32> {
+    let mut ws = SsspWorkspace::new();
+    delta_stepping_ws(g, src, delta, rec, &mut ws);
+    ws.dist.export_f32(g.n())
+}
+
+/// Shortest distances from `src`, computed in a reusable workspace and
+/// left in `ws.dist` as f32 bits.
+pub fn delta_stepping_ws(
+    g: &Graph,
+    src: V,
+    delta: Option<f32>,
+    mut rec: Recorder,
+    ws: &mut SsspWorkspace,
+) {
     let n = g.n();
+    ws.dist.ensure_len(n);
+    ws.dist.reset(INF.to_bits());
     if n == 0 {
-        return Vec::new();
+        return;
     }
-    let delta = delta.unwrap_or_else(|| {
-        match &g.weights {
-            Some(ws) if !ws.is_empty() => {
-                (ws.iter().sum::<f32>() / ws.len() as f32).max(1e-6)
-            }
-            _ => 1.0,
-        }
-    });
-    let mut dist_bits = vec![INF.to_bits(); n];
-    let dist: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(unsafe {
-        // Reinterpret u32 bits storage (same layout as the helper used
-        // elsewhere; write_min_f32 operates on bits).
-        std::mem::transmute::<&mut [u32], &mut [u32]>(&mut dist_bits)
-    });
-    write_min_f32(&dist[src as usize], 0.0);
+    ws.bag.reset(n);
+    for bucket in ws.buckets.iter_mut() {
+        bucket.reset(n);
+    }
+    let delta = delta.unwrap_or_else(|| g.weight_stats().mean.max(1e-6));
+    let dist = &ws.dist;
+    let staged = &ws.bag;
+    dist.store_f32(src as usize, 0.0);
 
     let bucket_of = |d: f32| -> usize { (d / delta) as usize };
-    let mut buckets: Vec<HashBag> = Vec::new();
+    let mut buckets = std::mem::take(&mut ws.buckets);
     let ensure = |buckets: &mut Vec<HashBag>, i: usize, n: usize| {
         while buckets.len() <= i {
             buckets.push(HashBag::new(n));
@@ -48,17 +63,21 @@ pub fn delta_stepping(g: &Graph, src: V, delta: Option<f32>, mut rec: Recorder) 
     ensure(&mut buckets, 0, n);
     buckets[0].insert(src);
 
+    let mut frontier = std::mem::take(&mut ws.pending);
+    let mut work = std::mem::take(&mut ws.work);
+    let mut staged_buf = std::mem::take(&mut ws.staged_buf);
+
     let mut i = 0usize;
     while i < buckets.len() {
         loop {
-            let frontier: Vec<V> = buckets[i].extract_and_clear();
+            buckets[i].extract_into(&mut frontier);
             if frontier.is_empty() {
                 break;
             }
             // Split: current-bucket vertices vs deferred.
-            let mut work: Vec<V> = Vec::with_capacity(frontier.len());
+            work.clear();
             for &v in &frontier {
-                let d = load_f32(&dist[v as usize]);
+                let d = dist.get_f32(v as usize);
                 let b = bucket_of(d);
                 if b < i {
                     continue; // settled in an earlier bucket: stale
@@ -73,26 +92,24 @@ pub fn delta_stepping(g: &Graph, src: V, delta: Option<f32>, mut rec: Recorder) 
                 break;
             }
             // One synchronized relaxation round over `work`.
-            let max_new_bucket =
-                std::sync::atomic::AtomicUsize::new(i);
+            let max_new_bucket = std::sync::atomic::AtomicUsize::new(i);
             {
                 // Collect insertions first (buckets can't grow during
-                // the parallel phase), staged through one overflow bag.
-                let staged = HashBag::new(n);
+                // the parallel phase), staged through one reused
+                // overflow bag.
                 let work_ref = &work;
-                let staged_ref = &staged;
                 let max_ref = &max_new_bucket;
                 parallel_for(0, work_ref.len(), 32, move |k| {
                     let v = work_ref[k];
-                    let dv = load_f32(&dist[v as usize]);
-                    let ws = g.weights.as_ref().map(|_| g.weights_of(v));
+                    let dv = dist.get_f32(v as usize);
+                    let ws_edge = g.weights.as_ref().map(|_| g.weights_of(v));
                     for (j, &u) in g.neighbors(v).iter().enumerate() {
-                        let w = ws.map_or(1.0, |ws| ws[j]);
+                        let w = ws_edge.map_or(1.0, |ws_edge| ws_edge[j]);
                         let nd = dv + w;
-                        if write_min_f32(&dist[u as usize], nd) {
+                        if dist.write_min_f32(u as usize, nd) {
                             let b = bucket_of(nd);
                             max_ref.fetch_max(b, std::sync::atomic::Ordering::Relaxed);
-                            staged_ref.insert(u);
+                            staged.insert(u);
                         }
                     }
                 });
@@ -109,15 +126,20 @@ pub fn delta_stepping(g: &Graph, src: V, delta: Option<f32>, mut rec: Recorder) 
                 // Distribute staged updates into their buckets.
                 let hi = max_new_bucket.load(std::sync::atomic::Ordering::Relaxed);
                 ensure(&mut buckets, hi, n);
-                for u in staged.extract_and_clear() {
-                    let b = bucket_of(load_f32(&dist[u as usize]));
+                staged.extract_into(&mut staged_buf);
+                for &u in &staged_buf {
+                    let b = bucket_of(dist.get_f32(u as usize));
                     buckets[b.max(i)].insert(u);
                 }
             }
         }
         i += 1;
     }
-    dist_bits.into_iter().map(f32::from_bits).collect()
+
+    ws.buckets = buckets;
+    ws.pending = frontier;
+    ws.work = work;
+    ws.staged_buf = staged_buf;
 }
 
 #[cfg(test)]
@@ -153,6 +175,23 @@ mod tests {
         let got = delta_stepping(&g, 0, Some(1e9), None);
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() <= 1e-3 * b.max(1.0) || (*a >= INF && *b >= INF));
+        }
+    }
+
+    #[test]
+    fn warm_workspace_reuse_matches_fresh_calls() {
+        let g = gen::road(8, 10, 4);
+        let mut ws = SsspWorkspace::new();
+        for src in [0u32, 11, 40, 0] {
+            delta_stepping_ws(&g, src, None, None, &mut ws);
+            let got = ws.dist.export_f32(g.n());
+            let want = dijkstra(&g, src);
+            for (a, b) in got.iter().zip(&want) {
+                assert!(
+                    (a - b).abs() <= 1e-3 * b.max(1.0) || (*a >= INF && *b >= INF),
+                    "src={src}"
+                );
+            }
         }
     }
 }

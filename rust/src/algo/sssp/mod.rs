@@ -15,9 +15,9 @@ pub mod delta;
 pub mod dijkstra;
 pub mod rho;
 
-pub use delta::delta_stepping;
+pub use delta::{delta_stepping, delta_stepping_ws};
 pub use dijkstra::dijkstra;
-pub use rho::rho_stepping;
+pub use rho::{rho_stepping, rho_stepping_ws};
 
 #[cfg(test)]
 mod cross_tests {

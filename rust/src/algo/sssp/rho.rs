@@ -7,13 +7,19 @@
 //! τ-budget VGC local searches (relaxations need no strict priority
 //! order — write_min fixes any overshoot), and defers the rest. Far
 //! fewer synchronized rounds than Δ-stepping's bucket chain.
+//!
+//! Per-query state (distances, pending flags, settled marks, the
+//! pending bag) lives in a reusable [`SsspWorkspace`]:
+//! [`rho_stepping_ws`] resets it in O(1) via epoch stamps;
+//! [`rho_stepping`] is the allocate-per-call wrapper. The mean edge
+//! weight that sizes the admission window comes from the graph's
+//! memoized [`crate::graph::WeightStats`] (one parallel reduction per
+//! graph) instead of a serial O(m) scan per query.
 
+use crate::algo::workspace::SsspWorkspace;
 use crate::graph::Graph;
-use crate::hashbag::HashBag;
-use crate::parallel::atomic::{load_f32, write_min_f32};
 use crate::sim::trace::{Recorder, RoundSlots};
 use crate::{INF, V};
-use std::sync::atomic::{AtomicU32, Ordering};
 
 /// Vertices admitted per round (the ρ parameter of [11]).
 const RHO: usize = 1 << 10;
@@ -21,35 +27,48 @@ const RHO: usize = 1 << 10;
 /// Seeds per local-search task.
 const SEEDS: usize = 4;
 
-/// Shortest distances from `src` with VGC budget `tau`.
-pub fn rho_stepping(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<f32> {
+/// Shortest distances from `src` with VGC budget `tau`
+/// (allocate-per-call wrapper around [`rho_stepping_ws`]).
+pub fn rho_stepping(g: &Graph, src: V, tau: usize, rec: Recorder) -> Vec<f32> {
+    let mut ws = SsspWorkspace::new();
+    rho_stepping_ws(g, src, tau, rec, &mut ws);
+    ws.dist.export_f32(g.n())
+}
+
+/// Shortest distances from `src` with VGC budget `tau`, computed in a
+/// reusable workspace. Results are left in `ws.dist` as f32 bits (read
+/// with [`crate::parallel::StampedU32::get_f32`] or export them); a
+/// warm workspace performs no O(n)/O(m) allocation.
+pub fn rho_stepping_ws(g: &Graph, src: V, tau: usize, mut rec: Recorder, ws: &mut SsspWorkspace) {
     let n = g.n();
+    ws.dist.ensure_len(n);
+    ws.dist.reset(INF.to_bits());
+    ws.flags.ensure_len(n);
+    ws.flags.reset(0);
+    ws.settled.ensure_len(n);
+    ws.settled.reset(INF.to_bits());
     if n == 0 {
-        return Vec::new();
+        return;
     }
+    ws.bag.reset(n);
     let tau = tau.max(1);
-    let mut dist_bits = vec![INF.to_bits(); n];
-    let dist: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(&mut dist_bits);
-    write_min_f32(&dist[src as usize], 0.0);
-    let pending_flag: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-    pending_flag[src as usize].store(1, Ordering::Relaxed);
+    let dist = &ws.dist;
+    let flag = &ws.flags;
     // settled[v] = distance (as bits) v was last *expanded* with; a
     // vertex re-expands only after a strict improvement. Without this
     // qualify step, in-round corrections re-relax whole neighborhoods
     // quadratically (measured 100x work amplification on road meshes
     // — see EXPERIMENTS.md §Perf).
-    let settled: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(INF.to_bits())).collect();
+    let settled = &ws.settled;
+    let bag = &ws.bag;
+    dist.store_f32(src as usize, 0.0);
+    flag.store(src as usize, 1);
 
-    let mut pending: Vec<V> = vec![src];
-    let bag = HashBag::new(n);
     // Mean edge weight: the admission window is measured in units of
-    // it (see below).
-    let mean_w = match &g.weights {
-        Some(ws) if !ws.is_empty() => {
-            (ws.iter().sum::<f32>() / ws.len() as f32).max(1e-6)
-        }
-        _ => 1.0,
-    };
+    // it. Memoized on the graph — computed once by a parallel
+    // reduction, not per query (the old serial O(m) scan dominated
+    // repeated small traversals).
+    let mean_w = g.weight_stats().mean.max(1e-6);
     // Distance width of one round's admitted slice. Admitting an
     // unbounded slice makes the relaxation Bellman-Ford-like: distances
     // get corrected O(width/min_w) times each (measured 100x work
@@ -59,15 +78,23 @@ pub fn rho_stepping(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<f32
     // in EXPERIMENTS.md §Perf).
     let width = 16.0 * mean_w;
 
+    let mut pending = std::mem::take(&mut ws.pending);
+    pending.clear();
+    pending.push(src);
+    let mut work = std::mem::take(&mut ws.work);
+    let mut sample = std::mem::take(&mut ws.sample);
+
     while !pending.is_empty() {
         // Threshold: the smaller of (a) the ~RHO-th smallest pending
         // distance and (b) min pending distance + the width cap.
         let stride = (pending.len() / 1024).max(1);
-        let mut sample: Vec<f32> = pending
-            .iter()
-            .step_by(stride)
-            .map(|&v| load_f32(&dist[v as usize]))
-            .collect();
+        sample.clear();
+        sample.extend(
+            pending
+                .iter()
+                .step_by(stride)
+                .map(|&v| dist.get_f32(v as usize)),
+        );
         sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
         // Count bound only binds above RHO pending; the width bound
         // always applies (and always leaves room to chain forward).
@@ -80,9 +107,9 @@ pub fn rho_stepping(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<f32
         let theta = by_count.min(sample[0] + width);
 
         // Partition: admitted now, deferred back to the bag.
-        let mut work: Vec<V> = Vec::new();
+        work.clear();
         for &v in &pending {
-            if load_f32(&dist[v as usize]) <= theta {
+            if dist.get_f32(v as usize) <= theta {
                 work.push(v);
             } else {
                 bag.insert(v); // still pending (flag stays 1)
@@ -91,7 +118,7 @@ pub fn rho_stepping(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<f32
         if work.is_empty() {
             // θ below every pending distance can't happen (θ is a
             // pending distance or INF), but guard against fp quirks.
-            work = pending.clone();
+            work.extend_from_slice(&pending);
         }
 
         // VGC local searches over the admitted set.
@@ -100,9 +127,6 @@ pub fn rho_stepping(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<f32
         let record = rec.is_some();
         {
             let work_ref = &work;
-            let bag_ref = &bag;
-            let flag_ref = &pending_flag;
-            let settled_ref = &settled;
             crate::parallel::ops::parallel_for_chunks(0, work_ref.len(), SEEDS, |ti, range| {
                 // FIFO local search (discovery order): keeps the walk
                 // close to distance order within the admitted slice,
@@ -116,43 +140,36 @@ pub fn rho_stepping(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<f32
                     let v = queue[head];
                     head += 1;
                     stats.vertices += 1;
-                    flag_ref[v as usize].store(0, Ordering::Relaxed);
-                    let dv = load_f32(&dist[v as usize]);
+                    flag.store(v as usize, 0);
+                    let dv = dist.get_f32(v as usize);
                     // Qualify: expand only on strict improvement since
                     // the last expansion (one winner per value).
-                    let set = settled_ref[v as usize].load(Ordering::Relaxed);
+                    let set = settled.get(v as usize);
                     if dv.to_bits() >= set
-                        || settled_ref[v as usize]
-                            .compare_exchange(
-                                set,
-                                dv.to_bits(),
-                                Ordering::AcqRel,
-                                Ordering::Relaxed,
-                            )
-                            .is_err()
+                        || !settled.compare_exchange(v as usize, set, dv.to_bits())
                     {
                         continue;
                     }
-                    let ws = g.weights.as_ref().map(|_| g.weights_of(v));
+                    let ws_edge = g.weights.as_ref().map(|_| g.weights_of(v));
                     for (j, &u) in g.neighbors(v).iter().enumerate() {
                         stats.edges += 1;
-                        let w = ws.map_or(1.0, |ws| ws[j]);
+                        let w = ws_edge.map_or(1.0, |ws_edge| ws_edge[j]);
                         let nd = dv + w;
-                        if write_min_f32(&dist[u as usize], nd)
-                            && flag_ref[u as usize].swap(1, Ordering::Relaxed) == 0
+                        if dist.write_min_f32(u as usize, nd)
+                            && flag.swap(u as usize, 1) == 0
                         {
                             if nd <= theta {
                                 // Near: keep walking inside this task.
                                 queue.push(u);
                             } else {
-                                bag_ref.insert(u);
+                                bag.insert(u);
                             }
                         }
                     }
                 }
                 // Budget exhausted: leftovers stay pending.
                 for &u in &queue[head..] {
-                    bag_ref.insert(u);
+                    bag.insert(u);
                 }
                 if record {
                     slots.set(ti, stats.into());
@@ -162,11 +179,14 @@ pub fn rho_stepping(g: &Graph, src: V, tau: usize, mut rec: Recorder) -> Vec<f32
         if let Some(trace) = rec.as_deref_mut() {
             trace.push_round(slots.into_round());
         }
-        pending = bag.extract_and_clear();
+        bag.extract_into(&mut pending);
         // Dedupe: flag==0 entries were already processed this round.
-        pending.retain(|&v| pending_flag[v as usize].load(Ordering::Relaxed) == 1);
+        pending.retain(|&v| flag.get(v as usize) == 1);
     }
-    dist_bits.into_iter().map(f32::from_bits).collect()
+
+    ws.pending = pending;
+    ws.work = work;
+    ws.sample = sample;
 }
 
 #[cfg(test)]
@@ -214,5 +234,15 @@ mod tests {
             t_rho.num_rounds(),
             t_delta.num_rounds()
         );
+    }
+
+    #[test]
+    fn warm_workspace_reuse_matches_fresh_calls() {
+        let g = gen::road(9, 12, 3);
+        let mut ws = SsspWorkspace::new();
+        for src in [0u32, 17, 50, 0] {
+            rho_stepping_ws(&g, src, 64, None, &mut ws);
+            close(&ws.dist.export_f32(g.n()), &dijkstra(&g, src));
+        }
     }
 }

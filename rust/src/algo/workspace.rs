@@ -1,0 +1,189 @@
+//! Reusable per-query workspaces — the zero-allocation query engine.
+//!
+//! Every PASGAL algorithm has two entry points: the classic
+//! allocate-per-call function (`vgc_bfs`, `rho_stepping`, ...) and a
+//! `_ws` variant taking one of the workspace structs below. The `_ws`
+//! variants own no O(n) state of their own: distances, marks, pending
+//! flags and reachability masks live in epoch-stamped arrays
+//! ([`StampedU32`] / [`StampedU64`]) whose logical reset is O(1), and
+//! frontier containers ([`HashBag`]) are rebound with
+//! [`HashBag::reset`] instead of reallocated. After the first query
+//! warms a workspace, subsequent queries on same-sized (or smaller)
+//! graphs perform **zero O(n)/O(m) allocations** — the remaining
+//! per-round scratch is O(frontier), which is part of the traversal
+//! work itself.
+//!
+//! A serving process holds one [`QueryWorkspace`] per worker (see
+//! [`crate::coordinator::Coordinator`], which checks workspaces out of
+//! a pool per request); the classic entry points stay available for
+//! one-shot callers and are thin wrappers that allocate a fresh
+//! workspace and delegate.
+//!
+//! Reusing one workspace across *different* graphs is safe: every
+//! `_ws` entry advances the epochs of the arrays it uses before
+//! touching them, so values from the previous query — same graph or
+//! not — can never leak into the next one. See
+//! [`crate::parallel::workspace`] for the stamping scheme, including
+//! epoch wraparound.
+
+use crate::algo::cc::UnionFind;
+use crate::hashbag::HashBag;
+use crate::parallel::workspace::{StampedU32, StampedU64};
+use crate::V;
+use std::collections::HashMap;
+
+/// Scratch state for the BFS family (`vgc_bfs_ws`, `diropt_bfs_ws`).
+#[derive(Default)]
+pub struct BfsWorkspace {
+    /// Hop distances (output; read via [`StampedU32::get`] /
+    /// [`StampedU32::export_into`] after a query).
+    pub dist: StampedU32,
+    /// Per-algorithm vertex marks: "expanded at distance" for VGC BFS,
+    /// level-stamped frontier flags for direction-optimizing BFS.
+    pub aux: StampedU32,
+    /// The 2^i-distance frontier bags of VGC BFS.
+    pub bags: Vec<HashBag>,
+    /// Current frontier (reused across rounds and queries).
+    pub frontier: Vec<V>,
+    /// Next frontier / candidate buffer.
+    pub next: Vec<V>,
+    /// Bag-drain scratch for multi-bag gathers.
+    pub gather: Vec<V>,
+    /// Frontier-degree prefix sums (sparse edge-map rounds).
+    pub offs: Vec<usize>,
+    /// Edge-map output buffer (sparse rounds).
+    pub edge_buf: Vec<u32>,
+}
+
+impl BfsWorkspace {
+    /// Fresh (cold) workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Make sure `count` bags exist, each able to hold `cap` values,
+    /// and clear them. Warm calls allocate nothing.
+    pub fn prepare_bags(&mut self, count: usize, cap: usize) {
+        for bag in self.bags.iter_mut() {
+            bag.reset(cap);
+        }
+        while self.bags.len() < count {
+            self.bags.push(HashBag::new(cap));
+        }
+    }
+}
+
+/// Scratch state for the SSSP family (`rho_stepping_ws`,
+/// `delta_stepping_ws`).
+#[derive(Default)]
+pub struct SsspWorkspace {
+    /// Tentative distances as f32 bits (output).
+    pub dist: StampedU32,
+    /// Pending-vertex flags (ρ-stepping worklist).
+    pub flags: StampedU32,
+    /// Last-expanded distances (ρ-stepping qualify step).
+    pub settled: StampedU32,
+    /// Pending bag (ρ) / staging bag (Δ relaxation rounds).
+    pub bag: HashBag,
+    /// Δ-stepping distance buckets (grown on demand, kept warm).
+    pub buckets: Vec<HashBag>,
+    /// Pending/frontier vertex buffer.
+    pub pending: Vec<V>,
+    /// Admitted-work buffer.
+    pub work: Vec<V>,
+    /// Threshold-sampling scratch.
+    pub sample: Vec<f32>,
+    /// Staged-update drain buffer (Δ-stepping).
+    pub staged_buf: Vec<V>,
+}
+
+impl SsspWorkspace {
+    /// Fresh (cold) workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Scratch state for SCC decomposition and its multi-source
+/// reachability sub-queries — the heaviest internal reuse win: one
+/// decomposition issues two reachability searches per pivot batch, and
+/// every one of them used to reallocate O(n) masks.
+#[derive(Default)]
+pub struct SccWorkspace {
+    /// Forward-reachability masks for the current pivot batch.
+    pub fwd: StampedU64,
+    /// Backward-reachability masks.
+    pub bwd: StampedU64,
+    /// Pending-vertex flags shared by the reachability searches.
+    pub pending: StampedU32,
+    /// Frontier bag shared by trim and the reachability searches.
+    pub bag: HashBag,
+    /// Frontier buffer.
+    pub frontier: Vec<V>,
+    /// Per-vertex SCC labels (output of `decompose_ws`).
+    pub labels: Vec<u32>,
+    /// Subproblem labels.
+    pub sub: Vec<u64>,
+    /// Pivot permutation buffer.
+    pub perm: Vec<V>,
+    /// Active out-degrees (trim scratch).
+    pub deg_out: Vec<u32>,
+    /// Active in-degrees (trim scratch).
+    pub deg_in: Vec<u32>,
+    /// Subproblem-size histogram (singleton refinement).
+    pub sub_count: HashMap<u64, u32>,
+}
+
+impl SccWorkspace {
+    /// Fresh (cold) workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// SCC labels of the last `decompose_ws` run.
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+}
+
+/// Scratch state for connectivity queries.
+#[derive(Default)]
+pub struct CcWorkspace {
+    /// Reusable union-find (reset per query, storage kept).
+    pub uf: UnionFind,
+    /// Component labels (output).
+    pub labels: Vec<u32>,
+}
+
+impl CcWorkspace {
+    /// Fresh (cold) workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Everything one serving worker needs to answer any query with zero
+/// O(n) allocation after warm-up. Hold one per worker; never share one
+/// across concurrent queries (the `&mut` receiver enforces this).
+#[derive(Default)]
+pub struct QueryWorkspace {
+    /// BFS-family scratch.
+    pub bfs: BfsWorkspace,
+    /// SSSP-family scratch.
+    pub sssp: SsspWorkspace,
+    /// SCC/reachability scratch.
+    pub scc: SccWorkspace,
+    /// Connectivity scratch.
+    pub cc: CcWorkspace,
+    /// Reused u32 export buffer (distances, labels).
+    pub out_u32: Vec<u32>,
+    /// Reused f32 export buffer (SSSP distances).
+    pub out_f32: Vec<f32>,
+}
+
+impl QueryWorkspace {
+    /// Fresh (cold) workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}

@@ -7,10 +7,10 @@
 //! convention, and executing the AOT-compiled closure module — the
 //! TPU-shaped analog of a VGC local search (DESIGN.md §3).
 
+use crate::error::Result;
 use crate::graph::Graph;
 use crate::runtime::{DenseTile, TileExecutor};
 use crate::{INF, V};
-use anyhow::Result;
 
 /// A vertex block extracted from a graph plus its dense tile.
 pub struct DenseBlock {

@@ -1,15 +1,18 @@
 //! L3 analysis-job coordinator: the serving layer around the library.
 //!
 //! A [`Coordinator`] owns loaded graphs (with lazily materialized
-//! transposes/symmetrizations), the worker pool, an optional PJRT
-//! [`crate::runtime::DenseEngine`] for dense-block queries, and a
-//! metrics registry. Clients submit [`job::JobRequest`]s; the server
-//! loop batches requests *by graph* (amortizing cache warmth the way
-//! an inference router batches by model), executes them on the pool,
-//! and reports per-job latency plus queue/throughput metrics.
+//! transposes/symmetrizations), the worker pool, a pool of warm
+//! [`crate::algo::QueryWorkspace`]s (the zero-allocation query
+//! engine), an optional [`crate::runtime::DenseEngine`] for
+//! dense-block queries, and a metrics registry. Clients submit
+//! [`job::JobRequest`]s; the server loop batches requests *by graph*
+//! (amortizing cache warmth the way an inference router batches by
+//! model), executes them on the pool through the workspace-carrying
+//! algorithm entry points, and reports per-job latency plus
+//! queue/throughput metrics.
 //!
-//! Python never appears here: the dense path executes AOT-compiled
-//! HLO artifacts through PJRT.
+//! Python never appears here: the dense path executes the AOT
+//! artifact inventory through the in-tree engine.
 
 pub mod dense;
 pub mod job;

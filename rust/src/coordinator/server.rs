@@ -1,33 +1,43 @@
 //! The coordinator server: graph registry, per-graph batching, job
-//! execution, and a channel-based serving loop.
+//! execution, a per-worker [`QueryWorkspace`] pool, and a
+//! channel-based serving loop.
+//!
+//! The workspace pool is what makes the serving path a
+//! *zero-allocation query engine*: each request checks a warm
+//! [`QueryWorkspace`] out of the pool, answers through the `_ws`
+//! algorithm entry points (epoch-stamped scratch, reused hash bags —
+//! see [`crate::algo::workspace`]), and returns it. After each
+//! workspace has served one query per graph size, steady-state queries
+//! perform no O(n)/O(m) allocation at all.
 
 use super::dense::DenseBlock;
 use super::job::{AlgoKind, JobOutput, JobRequest, JobResult};
 use super::metrics::Metrics;
+use crate::algo::workspace::QueryWorkspace;
 use crate::algo::{bcc, bfs, scc, sssp, UNREACHED};
+use crate::bail;
+use crate::error::{Context, Result};
 use crate::graph::Graph;
 use crate::runtime::EngineHandle;
 use crate::{INF, V};
-use anyhow::{bail, Context, Result};
-use once_cell::sync::OnceCell;
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 /// A registered graph with lazily materialized derived views.
 pub struct LoadedGraph {
     pub graph: Arc<Graph>,
-    transpose: OnceCell<Arc<Graph>>,
-    symmetrized: OnceCell<Arc<Graph>>,
+    transpose: OnceLock<Arc<Graph>>,
+    symmetrized: OnceLock<Arc<Graph>>,
 }
 
 impl LoadedGraph {
     pub fn new(graph: Graph) -> Self {
         LoadedGraph {
             graph: Arc::new(graph),
-            transpose: OnceCell::new(),
-            symmetrized: OnceCell::new(),
+            transpose: OnceLock::new(),
+            symmetrized: OnceLock::new(),
         }
     }
 
@@ -54,6 +64,10 @@ impl LoadedGraph {
 pub struct Coordinator {
     graphs: Mutex<HashMap<String, Arc<LoadedGraph>>>,
     engine: Option<EngineHandle>,
+    /// Warm per-worker query workspaces: checked out per request,
+    /// returned after, so the steady-state serving path performs zero
+    /// O(n) allocation (see module docs).
+    workspaces: Mutex<Vec<QueryWorkspace>>,
     pub metrics: Metrics,
 }
 
@@ -69,17 +83,36 @@ impl Coordinator {
         Coordinator {
             graphs: Mutex::new(HashMap::new()),
             engine: None,
+            workspaces: Mutex::new(Vec::new()),
             metrics: Metrics::new(),
         }
     }
 
-    /// Coordinator with the PJRT dense engine attached.
+    /// Coordinator with the dense engine attached.
     pub fn with_engine(engine: EngineHandle) -> Self {
         Coordinator {
             graphs: Mutex::new(HashMap::new()),
             engine: Some(engine),
+            workspaces: Mutex::new(Vec::new()),
             metrics: Metrics::new(),
         }
+    }
+
+    /// Check a workspace out of the pool (fresh if none is warm).
+    fn checkout_workspace(&self) -> QueryWorkspace {
+        self.workspaces
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| {
+                self.metrics.bump("workspaces_created", 1);
+                QueryWorkspace::new()
+            })
+    }
+
+    /// Return a workspace to the pool for the next request.
+    fn checkin_workspace(&self, ws: QueryWorkspace) {
+        self.workspaces.lock().unwrap().push(ws);
     }
 
     /// Register a graph under `name` (replaces any previous one).
@@ -115,15 +148,51 @@ impl Coordinator {
             bail!("source {} out of range (n={})", req.source, g.n());
         }
 
+        // Answer out of a warm workspace: the steady-state query path
+        // performs zero O(n)/O(m) allocation (epoch-stamped scratch,
+        // reused bags and export buffers).
+        let mut ws = self.checkout_workspace();
         let exec_start = Instant::now();
-        let output = match req.algo {
-            AlgoKind::BfsVgc { tau } => summarize_bfs(&bfs::vgc_bfs(g, req.source, tau, None)),
+        let output = self.run_algo(req, &lg, &mut ws);
+        let exec = exec_start.elapsed();
+        self.checkin_workspace(ws);
+        let output = output?;
+        let latency = submitted.elapsed();
+        self.metrics.bump("jobs_executed", 1);
+        self.metrics.observe(&format!("exec/{}", req.algo.label()), exec);
+        Ok(JobResult {
+            id: req.id,
+            algo: req.algo.label(),
+            output,
+            exec,
+            latency,
+        })
+    }
+
+    /// Dispatch one request through the workspace-carrying algorithm
+    /// entry points.
+    fn run_algo(
+        &self,
+        req: &JobRequest,
+        lg: &LoadedGraph,
+        ws: &mut QueryWorkspace,
+    ) -> Result<JobOutput> {
+        let g = &*lg.graph;
+        Ok(match req.algo {
+            AlgoKind::BfsVgc { tau } => {
+                bfs::vgc_bfs_ws(g, req.source, tau, None, &mut ws.bfs);
+                ws.bfs.dist.export_into(g.n(), &mut ws.out_u32);
+                summarize_bfs(&ws.out_u32)
+            }
             AlgoKind::BfsFrontier => summarize_bfs(&bfs::frontier_bfs(g, req.source, None)),
             AlgoKind::BfsDirOpt => {
-                summarize_bfs(&bfs::diropt_bfs(g, Some(lg.transpose()), req.source, None))
+                bfs::diropt_bfs_ws(g, Some(lg.transpose()), req.source, None, &mut ws.bfs);
+                ws.bfs.dist.export_into(g.n(), &mut ws.out_u32);
+                summarize_bfs(&ws.out_u32)
             }
             AlgoKind::SccVgc { tau } => {
-                summarize_scc(&scc::vgc_scc(g, Some(lg.transpose()), tau, 42, None))
+                scc::vgc_scc_ws(g, Some(lg.transpose()), tau, 42, None, &mut ws.scc);
+                summarize_scc(ws.scc.labels())
             }
             AlgoKind::SccMultistep => {
                 summarize_scc(&scc::multistep_scc(g, Some(lg.transpose()), None))
@@ -136,10 +205,14 @@ impl Coordinator {
                 }
             }
             AlgoKind::SsspRho { tau } => {
-                summarize_sssp(&sssp::rho_stepping(g, req.source, tau, None))
+                sssp::rho_stepping_ws(g, req.source, tau, None, &mut ws.sssp);
+                ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
+                summarize_sssp(&ws.out_f32)
             }
             AlgoKind::SsspDelta => {
-                summarize_sssp(&sssp::delta_stepping(g, req.source, None, None))
+                sssp::delta_stepping_ws(g, req.source, None, None, &mut ws.sssp);
+                ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
+                summarize_sssp(&ws.out_f32)
             }
             AlgoKind::DenseClosure { block } => {
                 let engine = self
@@ -162,17 +235,6 @@ impl Coordinator {
                     finite_pairs: finite,
                 }
             }
-        };
-        let exec = exec_start.elapsed();
-        let latency = submitted.elapsed();
-        self.metrics.bump("jobs_executed", 1);
-        self.metrics.observe(&format!("exec/{}", req.algo.label()), exec);
-        Ok(JobResult {
-            id: req.id,
-            algo: req.algo.label(),
-            output,
-            exec,
-            latency,
         })
     }
 
@@ -399,6 +461,54 @@ mod tests {
         }
         assert_eq!(c.metrics.counter("jobs_executed"), 6);
         assert!(c.metrics.summary("latency").unwrap().count == 6);
+    }
+
+    #[test]
+    fn workspace_pool_reuses_one_workspace_for_serial_queries() {
+        let c = coord_with_graphs();
+        for i in 0..12u64 {
+            let algo = match i % 4 {
+                0 => AlgoKind::BfsVgc { tau: 64 },
+                1 => AlgoKind::SsspRho { tau: 64 },
+                2 => AlgoKind::SccVgc { tau: 64 },
+                _ => AlgoKind::SsspDelta,
+            };
+            c.execute(&JobRequest {
+                id: i,
+                graph: if i % 2 == 0 { "road" } else { "social" }.into(),
+                algo,
+                source: (i % 3) as V,
+            })
+            .unwrap();
+        }
+        // Serial queries always find the previously checked-in
+        // workspace: exactly one is ever created.
+        assert_eq!(c.metrics.counter("workspaces_created"), 1);
+        assert_eq!(c.workspaces.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn workspace_and_fresh_paths_agree() {
+        let c = coord_with_graphs();
+        let mk = |algo| JobRequest {
+            id: 0,
+            graph: "road".into(),
+            algo,
+            source: 5,
+        };
+        // Run everything twice: the second pass uses warm workspaces
+        // and must produce identical summaries.
+        for algo in [
+            AlgoKind::BfsVgc { tau: 64 },
+            AlgoKind::BfsDirOpt,
+            AlgoKind::SccVgc { tau: 64 },
+            AlgoKind::SsspRho { tau: 64 },
+            AlgoKind::SsspDelta,
+        ] {
+            let cold = c.execute(&mk(algo)).unwrap();
+            let warm = c.execute(&mk(algo)).unwrap();
+            assert_eq!(cold.output, warm.output, "{:?}", algo);
+        }
     }
 
     #[test]

@@ -5,8 +5,33 @@
 //! lists is parallel (sort by source, then offsets by binary search
 //! per block); transpose reuses construction.
 
-use crate::parallel::{parallel_for, parallel_sort_by_key, scan_inplace};
+use crate::parallel::{parallel_for, parallel_reduce, parallel_sort_by_key, scan_inplace};
 use crate::{V, W};
+use std::sync::OnceLock;
+
+/// Edge-weight summary, computed once per graph and memoized (the
+/// stepping SSSP algorithms size their admission windows in units of
+/// the mean weight — a serial O(m) scan per *query* would dominate
+/// small traversals).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WeightStats {
+    /// Mean edge weight (1.0 for unweighted graphs).
+    pub mean: W,
+    /// Minimum edge weight (1.0 for unweighted graphs).
+    pub min: W,
+    /// Maximum edge weight (1.0 for unweighted graphs).
+    pub max: W,
+}
+
+impl Default for WeightStats {
+    fn default() -> Self {
+        WeightStats {
+            mean: 1.0,
+            min: 1.0,
+            max: 1.0,
+        }
+    }
+}
 
 /// CSR graph. Vertices are `0..n` as `u32`; edges are stored as
 /// per-source slices of `targets` (and `weights` when present).
@@ -20,9 +45,35 @@ pub struct Graph {
     pub weights: Option<Vec<W>>,
     /// Whether the edge set is symmetric (undirected view).
     pub symmetric: bool,
+    /// Memoized weight statistics (filled on first use; cloning a
+    /// graph keeps the cache, mutating `weights` directly requires a
+    /// fresh `Graph`).
+    weight_stats: OnceLock<WeightStats>,
 }
 
 impl Graph {
+    /// Mean/min/max edge weight, computed once per graph by a parallel
+    /// reduction and memoized. Unweighted graphs report unit weights.
+    pub fn weight_stats(&self) -> WeightStats {
+        *self.weight_stats.get_or_init(|| match &self.weights {
+            Some(ws) if !ws.is_empty() => {
+                let (sum, min, max) = parallel_reduce(
+                    0,
+                    ws.len(),
+                    4096,
+                    (0.0f64, W::INFINITY, W::NEG_INFINITY),
+                    |i| (ws[i] as f64, ws[i], ws[i]),
+                    |a, b| (a.0 + b.0, a.1.min(b.1), a.2.max(b.2)),
+                );
+                WeightStats {
+                    mean: (sum / ws.len() as f64) as W,
+                    min,
+                    max,
+                }
+            }
+            _ => WeightStats::default(),
+        })
+    }
     /// Number of vertices.
     #[inline]
     pub fn n(&self) -> usize {
@@ -118,6 +169,7 @@ impl Graph {
             targets,
             weights: Some(weights),
             symmetric: false,
+            weight_stats: OnceLock::new(),
         }
     }
 
@@ -155,6 +207,7 @@ impl Graph {
             targets,
             weights,
             symmetric: self.symmetric,
+            weight_stats: OnceLock::new(),
         }
     }
 
@@ -202,10 +255,39 @@ impl Graph {
             .collect()
     }
 
+    /// Assemble a graph from prebuilt CSR arrays (used by the IO
+    /// readers). The caller is responsible for validity; run
+    /// [`Graph::validate`] afterwards on untrusted input.
+    pub fn from_raw_parts(
+        offsets: Vec<u64>,
+        targets: Vec<V>,
+        weights: Option<Vec<W>>,
+        symmetric: bool,
+    ) -> Graph {
+        Graph {
+            offsets,
+            targets,
+            weights,
+            symmetric,
+            weight_stats: OnceLock::new(),
+        }
+    }
+
+    /// Replace the edge weights, invalidating the memoized
+    /// [`WeightStats`] (the cache would silently go stale otherwise).
+    pub fn set_weights(&mut self, weights: Option<Vec<W>>) {
+        if let Some(w) = &weights {
+            assert_eq!(w.len(), self.m(), "weights length mismatch");
+        }
+        self.weights = weights;
+        self.weight_stats = OnceLock::new();
+    }
+
     /// Attach unit weights (for SSSP on unweighted inputs).
     pub fn with_unit_weights(mut self) -> Graph {
         if self.weights.is_none() {
-            self.weights = Some(vec![1.0; self.m()]);
+            let m = self.m();
+            self.set_weights(Some(vec![1.0; m]));
         }
         self
     }
@@ -304,6 +386,51 @@ mod tests {
         let g = Graph::from_weighted_edges(3, &[(0, 1, 2.5), (1, 2, 0.5)], false);
         assert_eq!(g.weights_of(0), &[2.5]);
         assert_eq!(g.weights_of(1), &[0.5]);
+    }
+
+    #[test]
+    fn weight_stats_memoized_and_correct() {
+        let g = Graph::from_weighted_edges(3, &[(0, 1, 2.0), (1, 2, 6.0), (2, 0, 1.0)], false);
+        let s = g.weight_stats();
+        assert!((s.mean - 3.0).abs() < 1e-5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 6.0);
+        // Second call returns the memoized value.
+        assert_eq!(g.weight_stats(), s);
+        // Unweighted graphs report unit weights.
+        let u = Graph::from_edges(3, &[(0, 1)], false);
+        assert_eq!(u.weight_stats(), WeightStats::default());
+    }
+
+    #[test]
+    fn weight_stats_matches_serial_on_large_input() {
+        let mut rng = Rng::new(5);
+        let edges: Vec<(V, V, crate::W)> = (0..50_000)
+            .map(|_| {
+                (
+                    rng.below(1000) as V,
+                    rng.below(1000) as V,
+                    1.0 + rng.below(99) as crate::W,
+                )
+            })
+            .collect();
+        let g = Graph::from_weighted_edges(1000, &edges, false);
+        let s = g.weight_stats();
+        let ws = g.weights.as_ref().unwrap();
+        let serial_mean = ws.iter().map(|&w| w as f64).sum::<f64>() / ws.len() as f64;
+        assert!((s.mean as f64 - serial_mean).abs() < 1e-3);
+        assert_eq!(s.min, ws.iter().copied().fold(f32::INFINITY, f32::min));
+        assert_eq!(s.max, ws.iter().copied().fold(f32::NEG_INFINITY, f32::max));
+    }
+
+    #[test]
+    fn set_weights_invalidates_stats_cache() {
+        let mut g = Graph::from_weighted_edges(2, &[(0, 1, 4.0)], false);
+        assert_eq!(g.weight_stats().mean, 4.0);
+        g.set_weights(Some(vec![10.0]));
+        assert_eq!(g.weight_stats().mean, 10.0);
+        g.set_weights(None);
+        assert_eq!(g.weight_stats(), WeightStats::default());
     }
 
     #[test]

@@ -342,7 +342,8 @@ pub fn traces(layers: usize, width: usize, seed: u64) -> Graph {
 pub fn with_random_weights(g: &Graph, seed: u64) -> Graph {
     let mut g = g.clone();
     let mut rng = Rng::new(seed);
-    g.weights = Some((0..g.m()).map(|_| 1.0 + rng.below(100) as W).collect());
+    let ws = (0..g.m()).map(|_| 1.0 + rng.below(100) as W).collect();
+    g.set_weights(Some(ws));
     g
 }
 

@@ -8,8 +8,9 @@
 //!   cache generated suite graphs between bench runs.
 
 use super::csr::Graph;
+use crate::bail;
+use crate::error::{Context, Error, Result};
 use crate::{V, W};
-use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
@@ -94,13 +95,8 @@ pub fn read_adj(path: &Path) -> Result<Graph> {
     } else {
         None
     };
-    let g = Graph {
-        offsets,
-        targets,
-        weights,
-        symmetric: false,
-    };
-    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let g = Graph::from_raw_parts(offsets, targets, weights, false);
+    g.validate().map_err(Error::msg)?;
     Ok(g)
 }
 
@@ -172,13 +168,8 @@ pub fn read_bin(path: &Path) -> Result<Graph> {
     } else {
         None
     };
-    let g = Graph {
-        offsets,
-        targets,
-        weights,
-        symmetric: flags & FLAG_SYMMETRIC != 0,
-    };
-    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let g = Graph::from_raw_parts(offsets, targets, weights, flags & FLAG_SYMMETRIC != 0);
+    g.validate().map_err(Error::msg)?;
     Ok(g)
 }
 

@@ -18,5 +18,5 @@ pub mod gen;
 pub mod io;
 pub mod stats;
 
-pub use csr::Graph;
+pub use csr::{Graph, WeightStats};
 pub use gen::{suite, Category, Scale, SuiteEntry};

@@ -125,6 +125,64 @@ impl HashBag {
         }
     }
 
+    /// Rebind the bag for a new query needing capacity `max_elems`:
+    /// grows the chunk ladder if the target outgrew it (keeping every
+    /// already-allocated slot array) and clears any leftover contents.
+    /// A warm bag whose capacity already covers `max_elems` performs
+    /// zero allocation here — the workspace-reuse contract.
+    pub fn reset(&mut self, max_elems: usize) {
+        let mut covered: usize = self.chunks.iter().map(|c| c.cap).sum();
+        // The last chunk of the ladder is headroom (see `new`); count
+        // capacity the way `new` does, excluding it, so `reset(k)` and
+        // `new(k)` build identical ladders.
+        if let Some(last) = self.chunks.last() {
+            covered -= last.cap;
+        }
+        let mut next_cap = self
+            .chunks
+            .last()
+            .map(|c| c.cap * 2)
+            .unwrap_or(MIN_CHUNK);
+        let mut grew = false;
+        while covered * LOAD_PCT / 100 < max_elems.max(1) {
+            if !grew {
+                // Repurpose the old headroom chunk as a counted one.
+                if let Some(last) = self.chunks.last() {
+                    covered += last.cap;
+                    grew = true;
+                    continue;
+                }
+            }
+            self.chunks.push(Chunk::new(next_cap));
+            covered += next_cap;
+            next_cap *= 2;
+            grew = true;
+        }
+        if grew {
+            self.chunks.push(Chunk::new(next_cap));
+        }
+        self.clear_for_reuse();
+    }
+
+    /// Clear all contents in O(touched slots) without releasing any
+    /// slot storage (exclusive access, so plain stores suffice).
+    pub fn clear_for_reuse(&mut self) {
+        for chunk in &mut self.chunks {
+            if *chunk.count.get_mut() == 0 {
+                continue;
+            }
+            if let Some(slots) = chunk.slots.get_mut().unwrap().as_deref_mut() {
+                for s in slots {
+                    *s.get_mut() = EMPTY;
+                }
+            }
+            *chunk.count.get_mut() = 0;
+        }
+        self.overflow.get_mut().unwrap().clear();
+        *self.overflow_len.get_mut() = 0;
+        *self.active.get_mut() = 0;
+    }
+
     /// Insert a value (thread-safe). Falls back to the mutex-guarded
     /// overflow vector if every chunk saturates (cold path).
     pub fn insert(&self, v: u32) {
@@ -188,8 +246,16 @@ impl HashBag {
     /// next round. Cost is O(capacity of touched chunks), i.e.
     /// O(frontier), not O(n).
     pub fn extract_and_clear(&self) -> Vec<u32> {
-        let hi = (self.active.load(Ordering::Acquire) + 1).min(self.chunks.len());
         let mut out = Vec::new();
+        self.extract_into(&mut out);
+        out
+    }
+
+    /// [`Self::extract_and_clear`] into a caller-owned buffer (cleared
+    /// first), so frontier loops reuse one allocation across rounds.
+    pub fn extract_into(&self, out: &mut Vec<u32>) {
+        out.clear();
+        let hi = (self.active.load(Ordering::Acquire) + 1).min(self.chunks.len());
         for chunk in &self.chunks[..hi] {
             let Some(slots) = chunk.get() else { continue };
             if chunk.count.load(Ordering::Relaxed) == 0 {
@@ -216,7 +282,14 @@ impl HashBag {
             self.overflow_len.store(0, Ordering::Relaxed);
         }
         self.active.store(0, Ordering::Release);
-        out
+    }
+}
+
+impl Default for HashBag {
+    /// Minimal bag (grow later with [`HashBag::reset`]); lets
+    /// workspaces derive `Default`.
+    fn default() -> Self {
+        HashBag::new(0)
     }
 }
 
@@ -300,6 +373,57 @@ mod tests {
         bag.insert(2);
         let allocated = bag.chunks.iter().filter(|c| c.get().is_some()).count();
         assert_eq!(allocated, 1, "small frontier must not allocate big chunks");
+    }
+
+    #[test]
+    fn reset_reuses_and_grows() {
+        let mut bag = HashBag::new(100);
+        let small_chunks = bag.chunks.len();
+        for v in 0..50u32 {
+            bag.insert(v);
+        }
+        // Reset without growth: same ladder, contents gone.
+        bag.reset(100);
+        assert_eq!(bag.chunks.len(), small_chunks);
+        assert!(bag.is_empty());
+        assert!(bag.extract_and_clear().is_empty());
+        // Reset with growth: ladder extends, bag still works.
+        let n = MIN_CHUNK * 4;
+        bag.reset(n);
+        assert!(bag.chunks.len() > small_chunks);
+        assert_eq!(bag.chunks.len(), HashBag::new(n).chunks.len());
+        for v in 0..n as u32 {
+            bag.insert(v);
+        }
+        let mut out = bag.extract_and_clear();
+        out.sort();
+        assert_eq!(out, (0..n as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clear_for_reuse_discards_contents() {
+        let mut bag = HashBag::new(1000);
+        for v in 0..100u32 {
+            bag.insert(v);
+        }
+        bag.clear_for_reuse();
+        assert!(bag.is_empty());
+        bag.insert(7);
+        assert_eq!(bag.extract_and_clear(), vec![7]);
+    }
+
+    #[test]
+    fn extract_into_reuses_buffer() {
+        let bag = HashBag::new(100);
+        let mut buf = Vec::new();
+        bag.insert(3);
+        bag.extract_into(&mut buf);
+        assert_eq!(buf, vec![3]);
+        bag.insert(4);
+        bag.insert(5);
+        bag.extract_into(&mut buf);
+        buf.sort();
+        assert_eq!(buf, vec![4, 5]);
     }
 
     #[test]

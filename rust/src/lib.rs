@@ -10,8 +10,8 @@
 //!   generators and I/O ([`graph`]), the paper's algorithms and all
 //!   published baselines ([`algo`]), a deterministic virtual-multicore
 //!   simulator for scalability studies ([`sim`]), an analysis-job
-//!   coordinator ([`coordinator`]), and a PJRT runtime that executes
-//!   AOT-compiled dense kernels ([`runtime`]).
+//!   coordinator ([`coordinator`]), and a dense-kernel runtime that
+//!   executes the AOT-lowered kernel inventory ([`runtime`]).
 //! * **L2/L1 (build time)** — JAX + Pallas tropical-semiring kernels,
 //!   lowered once to `artifacts/*.hlo.txt` by `make artifacts`; Python
 //!   never runs on the request path.
@@ -21,12 +21,52 @@
 //! of BFS ([`algo::bfs`]), SCC ([`algo::scc`]) and SSSP
 //! ([`algo::sssp`]); BCC uses the FAST-BCC algorithm ([`algo::bcc`]).
 //!
+//! ## Query serving & workspaces
+//!
+//! Serving many queries over a fixed graph is dominated not by the
+//! traversal but by per-query setup: allocating and zeroing O(n)
+//! distance/visited arrays and O(n+m) frontier bags before the first
+//! edge is scanned. This crate removes that cost with **epoch-stamped
+//! workspaces**:
+//!
+//! * Every per-vertex scratch array is a [`parallel::StampedU32`] /
+//!   [`parallel::StampedU64`]: each slot carries the epoch it was last
+//!   written in and reads as a default value unless its stamp equals
+//!   the array's current epoch. "Clearing" the array for the next
+//!   query is a single epoch increment — O(1), no sweep, no
+//!   allocation. (Epochs are never reused without a hard reset, so
+//!   wraparound — once every ~4 billion queries — is safe; see
+//!   [`parallel::workspace`].)
+//! * Frontier [`hashbag::HashBag`]s are rebound per query with
+//!   [`hashbag::HashBag::reset`] instead of reallocated; their lazily
+//!   allocated chunk storage survives across queries.
+//! * Graph-constant quantities (the mean edge weight that sizes
+//!   ρ-/Δ-stepping admission windows) are computed once per graph by a
+//!   parallel reduction and memoized
+//!   ([`graph::Graph::weight_stats`]).
+//!
+//! Each algorithm family has a workspace struct
+//! ([`algo::BfsWorkspace`], [`algo::SsspWorkspace`],
+//! [`algo::SccWorkspace`], [`algo::CcWorkspace`]) bundled into one
+//! [`algo::QueryWorkspace`]; algorithms expose `_ws` entry points
+//! (`vgc_bfs_ws`, `rho_stepping_ws`, `vgc_scc_ws`, ...) next to the
+//! classic allocate-per-call wrappers. **Hold one `QueryWorkspace` per
+//! worker** — a workspace is exclusive to one in-flight query (the
+//! `&mut` receiver enforces it), and after warm-up every query runs
+//! with zero O(n)/O(m) allocation. The [`coordinator`] does exactly
+//! this: requests check a workspace out of a pool and return it after
+//! answering. SCC benefits doubly: one decomposition issues two
+//! reachability sub-queries per pivot batch, all sharing the same
+//! stamped mask arrays. `benches/ablation_workspace.rs` measures the
+//! cold-vs-warm gap.
+//!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod algo;
 pub mod bench;
 pub mod coordinator;
+pub mod error;
 pub mod graph;
 pub mod hashbag;
 pub mod parallel;

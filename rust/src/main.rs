@@ -11,8 +11,9 @@
 //! pasgal calibrate
 //! ```
 
-use anyhow::{bail, Context, Result};
 use pasgal::algo::{bcc, bfs, scc, sssp};
+use pasgal::bail;
+use pasgal::error::{Context, Error, Result};
 use pasgal::bench::suite as bsuite;
 use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
 use pasgal::graph::gen::{suite_entry, Scale};
@@ -95,7 +96,7 @@ fn main() {
         }
         other => {
             print_usage();
-            Err(anyhow::anyhow!("unknown command {other:?}"))
+            Err(Error::msg(format!("unknown command {other:?}")))
         }
     };
     if let Err(e) = result {

@@ -17,6 +17,9 @@
 //!   advance many hops, hiding scheduling overhead (§2.1 of the
 //!   paper).
 //! * [`atomic`] — lock-free min/CAS helpers used by the algorithms.
+//! * [`workspace`] — epoch-stamped scratch arrays ([`StampedU32`] /
+//!   [`StampedU64`]): O(1) logical reset so per-query state can be
+//!   reused across queries with zero O(n) allocation after warm-up.
 //!
 //! Thread count comes from `PASGAL_THREADS` or
 //! `std::thread::available_parallelism`.
@@ -29,11 +32,13 @@ pub mod ops;
 pub mod pool;
 pub mod sort;
 pub mod vgc;
+pub mod workspace;
 
-pub use ops::{pack, pack_index, parallel_for, parallel_reduce, scan_inplace};
+pub use ops::{pack, pack_index, pack_index_into, pack_into, parallel_for, parallel_reduce, scan_inplace};
 pub use pool::{join, num_threads, with_pool, Pool, Scope};
 pub use sort::parallel_sort_by_key;
 pub use vgc::LocalSearch;
+pub use workspace::{StampedU32, StampedU64};
 
 /// Default horizontal granularity (iterations per leaf task) for
 /// `parallel_for` when the caller has no better estimate.

@@ -179,10 +179,23 @@ where
     T: Copy + Send + Sync,
     F: Fn(usize) -> bool + Sync,
 {
+    let mut out = Vec::new();
+    pack_into(input, keep, &mut out);
+    out
+}
+
+/// [`pack`] into a caller-owned buffer (cleared first), so hot loops
+/// can reuse one allocation across rounds.
+pub fn pack_into<T, F>(input: &[T], keep: F, out: &mut Vec<T>)
+where
+    T: Copy + Send + Sync,
+    F: Fn(usize) -> bool + Sync,
+{
     let n = input.len();
     let mut counts = count_blocks(n, &keep);
     let total = scan_inplace(&mut counts);
-    let mut out: Vec<T> = Vec::with_capacity(total);
+    out.clear();
+    out.reserve(total);
     {
         let op = SendPtr(out.as_mut_ptr());
         let block = pack_block_size(n);
@@ -201,7 +214,6 @@ where
         });
     }
     unsafe { out.set_len(total) };
-    out
 }
 
 /// Indices `i in 0..n` with `keep(i)`, in order.
@@ -209,9 +221,20 @@ pub fn pack_index<F>(n: usize, keep: F) -> Vec<u32>
 where
     F: Fn(usize) -> bool + Sync,
 {
+    let mut out = Vec::new();
+    pack_index_into(n, keep, &mut out);
+    out
+}
+
+/// [`pack_index`] into a caller-owned buffer (cleared first).
+pub fn pack_index_into<F>(n: usize, keep: F, out: &mut Vec<u32>)
+where
+    F: Fn(usize) -> bool + Sync,
+{
     let mut counts = count_blocks(n, &keep);
     let total = scan_inplace(&mut counts);
-    let mut out: Vec<u32> = Vec::with_capacity(total);
+    out.clear();
+    out.reserve(total);
     {
         let op = SendPtr(out.as_mut_ptr());
         let block = pack_block_size(n);
@@ -230,7 +253,6 @@ where
         });
     }
     unsafe { out.set_len(total) };
-    out
 }
 
 fn pack_block_size(n: usize) -> usize {

@@ -15,11 +15,10 @@
 use super::deque::{Deque, Steal};
 use super::job::{HeapJob, JobRef, StackJob};
 use super::latch::{CountLatch, Latch, LockLatch, SpinLatch};
-use once_cell::sync::OnceCell;
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 thread_local! {
@@ -51,7 +50,7 @@ pub struct Pool {
 /// Thread count: `PASGAL_THREADS` env override, else
 /// `available_parallelism`.
 pub fn num_threads() -> usize {
-    static N: OnceCell<usize> = OnceCell::new();
+    static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
         std::env::var("PASGAL_THREADS")
             .ok()
@@ -65,7 +64,7 @@ pub fn num_threads() -> usize {
     })
 }
 
-static GLOBAL: OnceCell<Pool> = OnceCell::new();
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
 
 /// The process-wide pool (created on first use with [`num_threads`]).
 pub fn global() -> &'static Pool {

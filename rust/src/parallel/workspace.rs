@@ -1,0 +1,567 @@
+//! Epoch-stamped scratch arrays — O(1) logical reset for reusable
+//! per-query state.
+//!
+//! Every PASGAL traversal keeps O(n) per-vertex scratch (tentative
+//! distances, expanded/settled marks, pending flags, reachability
+//! masks). Allocating and initializing those arrays per query costs
+//! O(n) before the first edge is scanned — which swamps the traversal
+//! itself on repeated queries over the same graph (and inside SCC,
+//! which issues many reachability sub-queries per decomposition).
+//!
+//! The fix is the classic epoch-stamp trick: each slot carries the
+//! epoch it was last written in, and a slot only *counts* when its
+//! stamp equals the array's current epoch — otherwise it reads as the
+//! array's default value. "Clearing" is then a single epoch increment
+//! ([`StampedU32::advance_epoch`]), not an O(n) sweep. Storage is
+//! allocated once and grows monotonically ([`StampedU32::ensure_len`]),
+//! so a warm workspace performs zero O(n) allocation per query.
+//!
+//! Two variants:
+//!
+//! * [`StampedU32`] — 32-bit payload packed with its 32-bit stamp into
+//!   one `AtomicU64`, so every read-modify-write (write-min, CAS,
+//!   swap) is a single lock-free CAS. Used for distances (hop counts
+//!   or f32 bits via the order-preserving bit trick), visited marks
+//!   and pending flags.
+//! * [`StampedU64`] — 64-bit payload (SCC reachability masks) with a
+//!   separate stamp word and a per-slot first-touch handshake: the
+//!   first writer of an epoch claims the slot by CASing the stamp to a
+//!   transient BUSY value, installs its bits, then publishes the valid
+//!   stamp. Readers treat non-current stamps as the default.
+//!
+//! Epoch wraparound: epochs are never reused without a hard reset.
+//! When the epoch counter exhausts its range (once every ~4 billion
+//! resets), `advance_epoch` falls back to one O(n) sweep that
+//! invalidates every slot, then restarts from epoch 1 — correctness
+//! never depends on a stale stamp "accidentally" matching.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Epoch-stamped array of `u32` slots (stamp and value packed in one
+/// `AtomicU64`: high 32 bits = stamp, low 32 bits = value).
+pub struct StampedU32 {
+    slots: Vec<AtomicU64>,
+    /// Current epoch; slot i is live iff its stamp equals this. Starts
+    /// at 1 so the zeroed initial slots are stale.
+    epoch: u32,
+    /// Logical value of a stale slot.
+    default: u32,
+}
+
+impl Default for StampedU32 {
+    /// Empty array with default value 0 (re-target with
+    /// [`StampedU32::reset`]).
+    fn default() -> Self {
+        StampedU32::new(0)
+    }
+}
+
+impl StampedU32 {
+    /// Empty array reading `default` everywhere.
+    pub fn new(default: u32) -> StampedU32 {
+        StampedU32 {
+            slots: Vec::new(),
+            epoch: 1,
+            default,
+        }
+    }
+
+    /// Array of `n` slots reading `default` everywhere.
+    pub fn with_len(default: u32, n: usize) -> StampedU32 {
+        let mut s = StampedU32::new(default);
+        s.ensure_len(n);
+        s
+    }
+
+    #[inline]
+    fn pack(&self, v: u32) -> u64 {
+        ((self.epoch as u64) << 32) | v as u64
+    }
+
+    #[inline]
+    fn decode(&self, packed: u64) -> u32 {
+        if (packed >> 32) as u32 == self.epoch {
+            packed as u32
+        } else {
+            self.default
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when no slots are allocated.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Default value returned by stale slots.
+    pub fn default_value(&self) -> u32 {
+        self.default
+    }
+
+    /// Grow to at least `n` slots (new slots read as default). Never
+    /// shrinks, so a warm workspace never reallocates for a graph it
+    /// has already seen.
+    pub fn ensure_len(&mut self, n: usize) {
+        if self.slots.len() < n {
+            self.slots.resize_with(n, || AtomicU64::new(0));
+        }
+    }
+
+    /// O(1) logical clear: every slot reads as default afterwards.
+    pub fn advance_epoch(&mut self) {
+        if self.epoch == u32::MAX {
+            // Wraparound: one O(n) hard reset every 2^32-1 clears.
+            for s in self.slots.iter_mut() {
+                *s.get_mut() = 0; // stamp 0 is never a live epoch
+            }
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+        }
+    }
+
+    /// O(1) clear *and* change the default stale value (one array can
+    /// serve algorithms wanting different sentinels).
+    pub fn reset(&mut self, default: u32) {
+        self.default = default;
+        self.advance_epoch();
+    }
+
+    /// Test hook: jump the epoch counter (exercises wraparound).
+    pub fn set_epoch_for_test(&mut self, epoch: u32) {
+        self.epoch = epoch.max(1);
+    }
+
+    /// Logical value of slot `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        self.decode(self.slots[i].load(Ordering::Relaxed))
+    }
+
+    /// Unconditional store.
+    #[inline]
+    pub fn store(&self, i: usize, v: u32) {
+        self.slots[i].store(self.pack(v), Ordering::Relaxed);
+    }
+
+    /// Atomic `slot = min(slot, v)`; true iff `v` strictly improved
+    /// the logical value (mirrors
+    /// [`crate::parallel::atomic::write_min_u32`]).
+    #[inline]
+    pub fn write_min(&self, i: usize, v: u32) -> bool {
+        let slot = &self.slots[i];
+        let mut p = slot.load(Ordering::Relaxed);
+        loop {
+            if v >= self.decode(p) {
+                return false;
+            }
+            match slot.compare_exchange_weak(
+                p,
+                self.pack(v),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => p = seen,
+            }
+        }
+    }
+
+    /// Atomic swap; returns the previous logical value.
+    #[inline]
+    pub fn swap(&self, i: usize, v: u32) -> u32 {
+        let slot = &self.slots[i];
+        let mut p = slot.load(Ordering::Relaxed);
+        loop {
+            match slot.compare_exchange_weak(
+                p,
+                self.pack(v),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return self.decode(p),
+                Err(seen) => p = seen,
+            }
+        }
+    }
+
+    /// Atomic compare-exchange on the logical value: true iff the slot
+    /// logically held `expect` and now holds `new` (exactly one caller
+    /// wins per value, like a CAS on a plain atomic).
+    #[inline]
+    pub fn compare_exchange(&self, i: usize, expect: u32, new: u32) -> bool {
+        let slot = &self.slots[i];
+        let mut p = slot.load(Ordering::Relaxed);
+        loop {
+            if self.decode(p) != expect {
+                return false;
+            }
+            match slot.compare_exchange_weak(
+                p,
+                self.pack(new),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => p = seen,
+            }
+        }
+    }
+
+    /// Logical f32 value (slots store non-negative f32 bits).
+    #[inline]
+    pub fn get_f32(&self, i: usize) -> f32 {
+        f32::from_bits(self.get(i))
+    }
+
+    /// Store an f32 by bits.
+    #[inline]
+    pub fn store_f32(&self, i: usize, v: f32) {
+        self.store(i, v.to_bits());
+    }
+
+    /// Atomic f32 min via the order-preserving bit trick (non-negative
+    /// floats only, like [`crate::parallel::atomic::write_min_f32`]).
+    #[inline]
+    pub fn write_min_f32(&self, i: usize, v: f32) -> bool {
+        debug_assert!(v >= 0.0, "bit-trick min requires non-negative floats");
+        self.write_min(i, v.to_bits())
+    }
+
+    /// Copy the first `n` logical values into `out` (reusing its
+    /// storage).
+    pub fn export_into(&self, n: usize, out: &mut Vec<u32>) {
+        assert!(n <= self.slots.len(), "export past allocated length");
+        out.clear();
+        out.extend((0..n).map(|i| self.get(i)));
+    }
+
+    /// First `n` logical values as a fresh vector.
+    pub fn export(&self, n: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.export_into(n, &mut out);
+        out
+    }
+
+    /// First `n` logical values reinterpreted as f32 into `out`.
+    pub fn export_f32_into(&self, n: usize, out: &mut Vec<f32>) {
+        assert!(n <= self.slots.len(), "export past allocated length");
+        out.clear();
+        out.extend((0..n).map(|i| self.get_f32(i)));
+    }
+
+    /// First `n` logical f32 values as a fresh vector.
+    pub fn export_f32(&self, n: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.export_f32_into(n, &mut out);
+        out
+    }
+}
+
+/// Epoch values for [`StampedU64`] stop here so the valid/busy stamp
+/// pair `epoch << 1 | {0, 1}` always fits in a u32.
+const MAX_EPOCH_U64: u32 = u32::MAX >> 1;
+
+/// Epoch-stamped array of `u64` slots (separate stamp word; used for
+/// the 64-bit reachability masks of multi-source SCC searches).
+///
+/// Mutation is `fetch_or` only — exactly what the reachability engines
+/// need — which keeps the two-word protocol simple: the first writer
+/// of an epoch claims the slot (stamp -> BUSY), installs its bits over
+/// the stale value, then publishes stamp = valid. Concurrent writers
+/// spin for the handful of cycles the handshake takes; readers treat
+/// BUSY/stale stamps as "no bits yet".
+pub struct StampedU64 {
+    stamps: Vec<AtomicU32>,
+    vals: Vec<AtomicU64>,
+    epoch: u32,
+    default: u64,
+}
+
+impl Default for StampedU64 {
+    /// Empty array with default value 0.
+    fn default() -> Self {
+        StampedU64::new(0)
+    }
+}
+
+impl StampedU64 {
+    /// Empty array reading `default` everywhere.
+    pub fn new(default: u64) -> StampedU64 {
+        StampedU64 {
+            stamps: Vec::new(),
+            vals: Vec::new(),
+            epoch: 1,
+            default,
+        }
+    }
+
+    /// Array of `n` slots reading `default` everywhere.
+    pub fn with_len(default: u64, n: usize) -> StampedU64 {
+        let mut s = StampedU64::new(default);
+        s.ensure_len(n);
+        s
+    }
+
+    #[inline]
+    fn valid_stamp(&self) -> u32 {
+        self.epoch << 1
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.stamps.len()
+    }
+
+    /// True when no slots are allocated.
+    pub fn is_empty(&self) -> bool {
+        self.stamps.is_empty()
+    }
+
+    /// Grow to at least `n` slots (new slots read as default).
+    pub fn ensure_len(&mut self, n: usize) {
+        if self.stamps.len() < n {
+            self.stamps.resize_with(n, || AtomicU32::new(0));
+            self.vals.resize_with(n, || AtomicU64::new(0));
+        }
+    }
+
+    /// O(1) logical clear.
+    pub fn advance_epoch(&mut self) {
+        if self.epoch == MAX_EPOCH_U64 {
+            for s in self.stamps.iter_mut() {
+                *s.get_mut() = 0; // stamp 0 belongs to epoch 0: never live
+            }
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+        }
+    }
+
+    /// Test hook: jump the epoch counter (exercises wraparound).
+    pub fn set_epoch_for_test(&mut self, epoch: u32) {
+        self.epoch = epoch.clamp(1, MAX_EPOCH_U64);
+    }
+
+    /// Logical value of slot `i`. A slot mid-handshake (BUSY) reads as
+    /// default: its first `fetch_or` has not linearized yet.
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        if self.stamps[i].load(Ordering::Acquire) == self.valid_stamp() {
+            self.vals[i].load(Ordering::Relaxed)
+        } else {
+            self.default
+        }
+    }
+
+    /// Atomic `slot |= bits` on the logical value; returns the
+    /// previous logical value (so callers can test `old | bits != old`
+    /// exactly as with a plain `AtomicU64::fetch_or`).
+    #[inline]
+    pub fn fetch_or(&self, i: usize, bits: u64) -> u64 {
+        let valid = self.valid_stamp();
+        let busy = valid | 1;
+        let stamp = &self.stamps[i];
+        loop {
+            let s = stamp.load(Ordering::Acquire);
+            if s == valid {
+                return self.vals[i].fetch_or(bits, Ordering::AcqRel);
+            }
+            if s == busy {
+                // Another thread is installing the epoch's first bits;
+                // it finishes in two stores.
+                std::hint::spin_loop();
+                continue;
+            }
+            // Stale slot: race to become this epoch's first writer.
+            if stamp
+                .compare_exchange(s, busy, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.vals[i].store(self.default | bits, Ordering::Relaxed);
+                stamp.store(valid, Ordering::Release);
+                return self.default;
+            }
+        }
+    }
+
+    /// Copy the first `n` logical values into `out`.
+    pub fn export_into(&self, n: usize, out: &mut Vec<u64>) {
+        assert!(n <= self.stamps.len(), "export past allocated length");
+        out.clear();
+        out.extend((0..n).map(|i| self.get(i)));
+    }
+
+    /// First `n` logical values as a fresh vector.
+    pub fn export(&self, n: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.export_into(n, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::parallel_for;
+
+    #[test]
+    fn stale_slots_read_default() {
+        let s = StampedU32::with_len(99, 8);
+        for i in 0..8 {
+            assert_eq!(s.get(i), 99);
+        }
+    }
+
+    #[test]
+    fn store_then_advance_clears() {
+        let mut s = StampedU32::with_len(7, 4);
+        s.store(2, 42);
+        assert_eq!(s.get(2), 42);
+        s.advance_epoch();
+        assert_eq!(s.get(2), 7);
+    }
+
+    #[test]
+    fn write_min_semantics_match_plain_atomic() {
+        let s = StampedU32::with_len(u32::MAX, 2);
+        assert!(s.write_min(0, 10));
+        assert!(!s.write_min(0, 10));
+        assert!(!s.write_min(0, 11));
+        assert!(s.write_min(0, 3));
+        assert_eq!(s.get(0), 3);
+    }
+
+    #[test]
+    fn compare_exchange_wins_once() {
+        let s = StampedU32::with_len(0, 1);
+        assert!(s.compare_exchange(0, 0, 5));
+        assert!(!s.compare_exchange(0, 0, 6));
+        assert!(s.compare_exchange(0, 5, 6));
+        assert_eq!(s.get(0), 6);
+    }
+
+    #[test]
+    fn swap_returns_logical_old() {
+        let mut s = StampedU32::with_len(0, 1);
+        assert_eq!(s.swap(0, 1), 0);
+        assert_eq!(s.swap(0, 2), 1);
+        s.advance_epoch();
+        assert_eq!(s.swap(0, 9), 0, "stale slot swaps from default");
+    }
+
+    #[test]
+    fn reset_changes_default() {
+        let mut s = StampedU32::with_len(0, 2);
+        s.store(0, 123);
+        s.reset(u32::MAX);
+        assert_eq!(s.get(0), u32::MAX);
+        assert_eq!(s.get(1), u32::MAX);
+    }
+
+    #[test]
+    fn f32_min_via_bits() {
+        let s = StampedU32::with_len(crate::INF.to_bits(), 1);
+        assert!((s.get_f32(0) - crate::INF).abs() < 1.0);
+        assert!(s.write_min_f32(0, 2.5));
+        assert!(!s.write_min_f32(0, 3.0));
+        assert_eq!(s.get_f32(0), 2.5);
+    }
+
+    #[test]
+    fn wraparound_hard_resets() {
+        let mut s = StampedU32::with_len(5, 3);
+        s.set_epoch_for_test(u32::MAX - 1);
+        s.store(1, 77);
+        assert_eq!(s.get(1), 77);
+        s.advance_epoch(); // now at MAX
+        assert_eq!(s.get(1), 5);
+        s.store(1, 88);
+        s.advance_epoch(); // wraps: hard reset to epoch 1
+        assert_eq!(s.get(1), 5, "values from the MAX epoch must not leak");
+        s.store(2, 9);
+        assert_eq!(s.get(2), 9);
+    }
+
+    #[test]
+    fn u64_fetch_or_accumulates_and_clears() {
+        let mut s = StampedU64::with_len(0, 4);
+        assert_eq!(s.fetch_or(0, 0b01), 0);
+        assert_eq!(s.fetch_or(0, 0b10), 0b01);
+        assert_eq!(s.get(0), 0b11);
+        assert_eq!(s.get(1), 0);
+        s.advance_epoch();
+        assert_eq!(s.get(0), 0);
+        assert_eq!(s.fetch_or(0, 0b100), 0);
+        assert_eq!(s.get(0), 0b100);
+    }
+
+    #[test]
+    fn u64_wraparound_hard_resets() {
+        let mut s = StampedU64::with_len(0, 2);
+        s.set_epoch_for_test(MAX_EPOCH_U64 - 1);
+        s.fetch_or(0, 7);
+        s.advance_epoch();
+        assert_eq!(s.get(0), 0);
+        s.fetch_or(0, 3);
+        s.advance_epoch(); // wraps
+        assert_eq!(s.get(0), 0);
+        s.fetch_or(1, 1);
+        assert_eq!(s.get(1), 1);
+    }
+
+    #[test]
+    fn concurrent_write_min_settles_at_min() {
+        let s = StampedU32::with_len(u32::MAX, 1024);
+        parallel_for(0, 64 * 1024, 64, |k| {
+            let i = k % 1024;
+            s.write_min(i, ((k * 2654435761) % 100_000) as u32 + 1);
+        });
+        // Every slot ended at some written value, never default.
+        for i in 0..1024 {
+            assert!(s.get(i) < u32::MAX);
+        }
+    }
+
+    #[test]
+    fn concurrent_fetch_or_loses_no_bits() {
+        let mut s = StampedU64::with_len(0, 256);
+        for round in 0..3 {
+            s.advance_epoch();
+            parallel_for(0, 64 * 256, 32, |k| {
+                let i = k % 256;
+                let bit = (k / 256) % 64;
+                s.fetch_or(i, 1u64 << bit);
+            });
+            for i in 0..256 {
+                assert_eq!(s.get(i), u64::MAX, "round {round} slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn export_roundtrips() {
+        let s = StampedU32::with_len(1, 5);
+        s.store(3, 9);
+        assert_eq!(s.export(5), vec![1, 1, 1, 9, 1]);
+        let mut u = StampedU64::with_len(0, 3);
+        u.fetch_or(1, 6);
+        assert_eq!(u.export(3), vec![0, 6, 0]);
+        u.advance_epoch();
+        assert_eq!(u.export(3), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn ensure_len_grows_with_stale_slots() {
+        let mut s = StampedU32::with_len(4, 2);
+        s.store(0, 1);
+        s.ensure_len(10);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.get(0), 1, "existing live slots survive growth");
+        assert_eq!(s.get(9), 4);
+    }
+}

@@ -63,29 +63,46 @@ impl DenseTile {
 /// rounds of `d[u] <- min(d[u], min_v w(v->u) + d[v])` over a
 /// multi-source panel `dist[v * s + j]` (row-major, s sources).
 pub fn relax_ref(tile: &DenseTile, dist: &[f32], sources: usize, hops: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    let mut tmp = Vec::new();
+    relax_ref_into(tile, dist, sources, hops, &mut out, &mut tmp);
+    out
+}
+
+/// [`relax_ref`] into caller-owned buffers: the result lands in `out`,
+/// `tmp` is the double-buffer temporary. Warm calls allocate nothing.
+pub fn relax_ref_into(
+    tile: &DenseTile,
+    dist: &[f32],
+    sources: usize,
+    hops: usize,
+    out: &mut Vec<f32>,
+    tmp: &mut Vec<f32>,
+) {
     let t = tile.t;
     assert_eq!(dist.len(), t * sources, "panel must be t*s");
-    let mut d = dist.to_vec();
-    let mut next = vec![0.0f32; d.len()];
+    out.clear();
+    out.extend_from_slice(dist);
+    tmp.clear();
+    tmp.resize(dist.len(), 0.0);
     for _ in 0..hops {
         for u in 0..t {
             for j in 0..sources {
-                let mut best = d[u * sources + j];
+                let mut best = out[u * sources + j];
                 for v in 0..t {
                     let w = tile.w[u * t + v];
                     if w < INF {
-                        let cand = w + d[v * sources + j];
+                        let cand = w + out[v * sources + j];
                         if cand < best {
                             best = cand;
                         }
                     }
                 }
-                next[u * sources + j] = best;
+                tmp[u * sources + j] = best;
             }
         }
-        std::mem::swap(&mut d, &mut next);
+        std::mem::swap(out, tmp);
     }
-    d
 }
 
 /// Pure-Rust reference of the L2 `tile_closure` graph: all-pairs
@@ -93,8 +110,17 @@ pub fn relax_ref(tile: &DenseTile, dist: &[f32], sources: usize, hops: usize) ->
 /// convention; output `c[u*t+v]` = shortest distance `v -> u`,
 /// matching the artifact's output layout).
 pub fn closure_ref(tile: &DenseTile) -> Vec<f32> {
+    let mut out = Vec::new();
+    closure_ref_into(tile, &mut out);
+    out
+}
+
+/// [`closure_ref`] into a caller-owned buffer (reused storage).
+pub fn closure_ref_into(tile: &DenseTile, out: &mut Vec<f32>) {
     let t = tile.t;
-    let mut d = tile.w.clone();
+    out.clear();
+    out.extend_from_slice(&tile.w);
+    let d = out;
     for i in 0..t {
         if d[i * t + i] > 0.0 {
             d[i * t + i] = 0.0;
@@ -114,7 +140,6 @@ pub fn closure_ref(tile: &DenseTile) -> Vec<f32> {
             }
         }
     }
-    d
 }
 
 #[cfg(test)]

@@ -1,17 +1,32 @@
-//! The compile-once / execute-many PJRT engine.
+//! The compile-once / execute-many dense engine.
 //!
-//! One [`DenseEngine`] owns a PJRT CPU client plus every executable
-//! described by the artifact manifest. Loading compiles each HLO-text
-//! module exactly once; the coordinator then calls [`DenseEngine::relax`]
-//! / [`DenseEngine::closure`] from its hot path with plain `f32`
-//! slices. All Literal packing/unpacking is contained here.
+//! One [`DenseEngine`] owns every kernel configuration described by
+//! the artifact manifest. Loading parses the manifest exactly once;
+//! the coordinator then calls [`DenseEngine::relax`] /
+//! [`DenseEngine::closure`] from its hot path with plain `f32` slices.
+//!
+//! The execution backend is the portable in-tree interpreter
+//! ([`relax_ref`] / [`closure_ref`] in [`super::dense`]): the offline
+//! crate set has no PJRT bindings, so the AOT `.hlo.txt` artifacts are
+//! treated as the *specification* of each module (tile size, sources,
+//! hops — recorded in `manifest.txt` by `python/compile/aot.py`) and
+//! the tropical-semiring semantics are executed by the reference
+//! kernels the PJRT path is unit-tested against. The API shape —
+//! manifest-driven spec discovery, execute-many calls, execution
+//! counting — is exactly what a PJRT-backed engine exposes, so
+//! swapping the backend is a link-time concern, not an API change.
+//!
+//! For repeated dense queries, [`DenseScratch`] + the `_with` entry
+//! points reuse the output/temporary panels across calls (the dense
+//! analog of the sparse [`crate::algo::QueryWorkspace`]).
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
-use super::dense::DenseTile;
+use super::dense::{closure_ref_into, relax_ref_into, DenseTile};
 use super::manifest::{ArtifactKind, Manifest};
 
 /// The static configuration of one compiled relax module.
@@ -25,69 +40,66 @@ pub struct RelaxSpec {
     pub hops: usize,
 }
 
-struct RelaxExec {
-    spec: RelaxSpec,
-    exe: xla::PjRtLoadedExecutable,
+/// Reusable panel buffers for the dense execute-many path: hold one
+/// per worker and pass it to [`DenseEngine::relax_with`] /
+/// [`DenseEngine::closure_with`] to answer repeated dense queries with
+/// zero per-call allocation after warm-up.
+#[derive(Default)]
+pub struct DenseScratch {
+    /// Output panel of the last call.
+    pub out: Vec<f32>,
+    /// Double-buffer temporary for the relaxation sweep.
+    tmp: Vec<f32>,
 }
 
-struct ClosureExec {
-    tile: usize,
-    exe: xla::PjRtLoadedExecutable,
+impl DenseScratch {
+    /// Fresh (cold) scratch.
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
-/// PJRT engine holding all compiled dense kernels.
+/// Dense engine holding all kernel configurations from the manifest.
 pub struct DenseEngine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    relax: Vec<RelaxExec>,
-    closure: Vec<ClosureExec>,
+    relax: Vec<RelaxSpec>,
+    closure: Vec<usize>,
     /// Total kernel executions (for coordinator metrics).
     executions: AtomicU64,
 }
 
 impl DenseEngine {
-    /// Load every artifact under `dir` (usually `artifacts/`), compiling
-    /// each module once on a fresh PJRT CPU client.
+    /// Load every artifact described under `dir` (usually
+    /// `artifacts/`), registering each module configuration once.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
         Self::from_manifest(&manifest)
     }
 
-    /// Compile all modules listed in an already-parsed manifest.
+    /// Register all modules listed in an already-parsed manifest.
     pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let mut relax = Vec::new();
         let mut closure = Vec::new();
         for art in &manifest.artifacts {
-            let proto = xla::HloModuleProto::from_text_file(
-                art.path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parsing HLO text {:?}", art.path))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", art.name))?;
             match art.kind {
-                ArtifactKind::Relax => relax.push(RelaxExec {
-                    spec: RelaxSpec {
+                ArtifactKind::Relax => {
+                    if art.sources == 0 || art.hops == 0 {
+                        bail!("relax artifact {} missing sources/hops", art.name);
+                    }
+                    relax.push(RelaxSpec {
                         tile: art.tile,
                         sources: art.sources,
                         hops: art.hops,
-                    },
-                    exe,
-                }),
-                ArtifactKind::Closure => closure.push(ClosureExec {
-                    tile: art.tile,
-                    exe,
-                }),
+                    });
+                }
+                ArtifactKind::Closure => closure.push(art.tile),
             }
         }
         // Largest tiles first so `best_relax` prefers doing more work
         // per launch when several configurations fit.
-        relax.sort_by(|a, b| (b.spec.tile, b.spec.hops).cmp(&(a.spec.tile, a.spec.hops)));
-        closure.sort_by(|a, b| b.tile.cmp(&a.tile));
+        relax.sort_by(|a, b| (b.tile, b.hops).cmp(&(a.tile, a.hops)));
+        closure.sort_by(|a, b| b.cmp(a));
+        closure.dedup();
         Ok(DenseEngine {
-            client,
             relax,
             closure,
             executions: AtomicU64::new(0),
@@ -96,12 +108,12 @@ impl DenseEngine {
 
     /// Specs of all loaded relax modules (largest tile/hops first).
     pub fn relax_specs(&self) -> Vec<RelaxSpec> {
-        self.relax.iter().map(|r| r.spec).collect()
+        self.relax.clone()
     }
 
     /// Tile sizes of all loaded closure modules (largest first).
     pub fn closure_tiles(&self) -> Vec<usize> {
-        self.closure.iter().map(|c| c.tile).collect()
+        self.closure.clone()
     }
 
     /// Number of kernel executions so far.
@@ -113,10 +125,24 @@ impl DenseEngine {
     /// of tropical relaxation of the `dist` panel (row-major
     /// `tile × sources`) over `tile`. Returns the relaxed panel.
     pub fn relax(&self, spec: RelaxSpec, tile: &DenseTile, dist: &[f32]) -> Result<Vec<f32>> {
-        let entry = self
-            .relax
+        let mut scratch = DenseScratch::new();
+        self.relax_with(spec, tile, dist, &mut scratch)?;
+        Ok(std::mem::take(&mut scratch.out))
+    }
+
+    /// [`Self::relax`] into reusable scratch: the result is left in
+    /// `scratch.out` (also returned as a slice); warm calls allocate
+    /// nothing.
+    pub fn relax_with<'a>(
+        &self,
+        spec: RelaxSpec,
+        tile: &DenseTile,
+        dist: &[f32],
+        scratch: &'a mut DenseScratch,
+    ) -> Result<&'a [f32]> {
+        self.relax
             .iter()
-            .find(|r| r.spec == spec)
+            .find(|s| **s == spec)
             .with_context(|| format!("no relax artifact for {spec:?}"))?;
         if tile.size() != spec.tile {
             bail!("tile size {} != artifact tile {}", tile.size(), spec.tile);
@@ -128,15 +154,16 @@ impl DenseEngine {
                 spec.tile * spec.sources
             );
         }
-        let t = spec.tile as i64;
-        let s = spec.sources as i64;
-        let adj_lit = xla::Literal::vec1(tile.raw()).reshape(&[t, t])?;
-        let dist_lit = xla::Literal::vec1(dist).reshape(&[t, s])?;
-        let out = entry.exe.execute::<xla::Literal>(&[adj_lit, dist_lit])?[0][0]
-            .to_literal_sync()?;
+        relax_ref_into(
+            tile,
+            dist,
+            spec.sources,
+            spec.hops,
+            &mut scratch.out,
+            &mut scratch.tmp,
+        );
         self.executions.fetch_add(1, Ordering::Relaxed);
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+        Ok(&scratch.out)
     }
 
     /// Pick the best loaded relax spec for a block of `block_size`
@@ -144,7 +171,7 @@ impl DenseEngine {
     pub fn best_relax(&self, block_size: usize) -> Option<RelaxSpec> {
         self.relax
             .iter()
-            .map(|r| r.spec)
+            .copied()
             .filter(|s| s.tile >= block_size)
             .min_by_key(|s| s.tile)
     }
@@ -152,17 +179,25 @@ impl DenseEngine {
     /// Run the closure module for `tile.size()`: all-pairs shortest
     /// distances within the tile (output `c[u*t+v]` = dist `v -> u`).
     pub fn closure(&self, tile: &DenseTile) -> Result<Vec<f32>> {
+        let mut scratch = DenseScratch::new();
+        self.closure_with(tile, &mut scratch)?;
+        Ok(std::mem::take(&mut scratch.out))
+    }
+
+    /// [`Self::closure`] into reusable scratch (result in
+    /// `scratch.out`; warm calls allocate nothing).
+    pub fn closure_with<'a>(
+        &self,
+        tile: &DenseTile,
+        scratch: &'a mut DenseScratch,
+    ) -> Result<&'a [f32]> {
         let t = tile.size();
-        let entry = self
-            .closure
-            .iter()
-            .find(|c| c.tile == t)
-            .with_context(|| format!("no closure artifact for tile {t}"))?;
-        let ti = t as i64;
-        let adj_lit = xla::Literal::vec1(tile.raw()).reshape(&[ti, ti])?;
-        let out = entry.exe.execute::<xla::Literal>(&[adj_lit])?[0][0].to_literal_sync()?;
+        if !self.closure.contains(&t) {
+            bail!("no closure artifact for tile {t}");
+        }
+        closure_ref_into(tile, &mut scratch.out);
         self.executions.fetch_add(1, Ordering::Relaxed);
-        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+        Ok(&scratch.out)
     }
 }
 
@@ -177,7 +212,7 @@ mod tests {
     }
 
     fn engine() -> DenseEngine {
-        DenseEngine::load(&artifacts_dir()).expect("run `make artifacts` before cargo test")
+        DenseEngine::load(&artifacts_dir()).expect("artifacts/manifest.txt must be present")
     }
 
     fn random_tile(t: usize, seed: u64, density: f64) -> DenseTile {
@@ -221,7 +256,7 @@ mod tests {
             for (i, (g, w)) in got.iter().zip(&want).enumerate() {
                 assert!(
                     (g - w).abs() <= 1e-3 * w.abs().max(1.0),
-                    "spec {spec:?} idx {i}: pjrt={g} ref={w}"
+                    "spec {spec:?} idx {i}: engine={g} ref={w}"
                 );
             }
         }
@@ -240,7 +275,7 @@ mod tests {
                 } else {
                     (g - w).abs() <= 1e-3 * w.abs().max(1.0)
                 };
-                assert!(close, "tile {t} idx {i}: pjrt={g} ref={w}");
+                assert!(close, "tile {t} idx {i}: engine={g} ref={w}");
             }
         }
     }
@@ -274,5 +309,29 @@ mod tests {
         let before = e.executions();
         e.relax(spec, &tile, &dist).unwrap();
         assert_eq!(e.executions(), before + 1);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_calls() {
+        let e = engine();
+        let mut scratch = DenseScratch::new();
+        for t in e.closure_tiles() {
+            let tile = random_tile(t, 100 + t as u64, 0.1);
+            let warm = e.closure_with(&tile, &mut scratch).unwrap().to_vec();
+            let fresh = e.closure(&tile).unwrap();
+            assert_eq!(warm, fresh, "tile {t}");
+        }
+        let spec = e.relax_specs()[0];
+        let tile = random_tile(spec.tile, 9, 0.1);
+        let mut dist = vec![INF; spec.tile * spec.sources];
+        dist[0] = 0.0;
+        let warm = e.relax_with(spec, &tile, &dist, &mut scratch).unwrap().to_vec();
+        let fresh = e.relax(spec, &tile, &dist).unwrap();
+        assert_eq!(warm, fresh);
+    }
+
+    #[test]
+    fn load_fails_on_missing_dir() {
+        assert!(DenseEngine::load(Path::new("/nonexistent")).is_err());
     }
 }

@@ -1,14 +1,16 @@
-//! Thread-safe handle to the PJRT engine.
+//! Thread-safe handle to the dense engine.
 //!
-//! The `xla` crate's client/executable types are `!Send` (Rc-based
-//! internals), so the engine gets a dedicated executor thread — the
-//! same shape a GPU worker takes in an inference server. The
+//! The engine gets a dedicated executor thread — the same shape a GPU
+//! worker takes in an inference server, and the shape a PJRT backend
+//! (whose client types are typically `!Send`) would require. The
 //! [`EngineHandle`] is `Send + Sync` and can live inside the
-//! coordinator; calls are synchronous RPCs over channels.
+//! coordinator; calls are synchronous RPCs over channels. The executor
+//! thread owns a private [`super::DenseScratch`], so repeated dense
+//! queries reuse their panel buffers.
 
 use super::dense::DenseTile;
-use super::engine::{DenseEngine, RelaxSpec};
-use anyhow::{Context, Result};
+use super::engine::{DenseEngine, DenseScratch, RelaxSpec};
+use crate::error::{Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};
 
@@ -55,6 +57,7 @@ impl EngineHandle {
                         return;
                     }
                 };
+                let mut scratch = DenseScratch::new();
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
                         Cmd::Relax {
@@ -63,10 +66,18 @@ impl EngineHandle {
                             dist,
                             reply,
                         } => {
-                            let _ = reply.send(engine.relax(spec, &tile, &dist));
+                            let _ = reply.send(
+                                engine
+                                    .relax_with(spec, &tile, &dist, &mut scratch)
+                                    .map(|out| out.to_vec()),
+                            );
                         }
                         Cmd::Closure { tile, reply } => {
-                            let _ = reply.send(engine.closure(&tile));
+                            let _ = reply.send(
+                                engine
+                                    .closure_with(&tile, &mut scratch)
+                                    .map(|out| out.to_vec()),
+                            );
                         }
                         Cmd::Info { reply } => {
                             let _ = reply.send((

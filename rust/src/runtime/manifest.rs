@@ -4,7 +4,8 @@
 //! blank line between records) because the offline crate set has no
 //! serde/JSON; see `python/compile/aot.py::main` for the writer.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// What a compiled artifact computes.

@@ -1,22 +1,22 @@
-//! PJRT runtime: load and execute the AOT-compiled dense kernels.
+//! Dense-kernel runtime: load and execute the AOT-lowered dense
+//! kernel configurations.
 //!
 //! `make artifacts` lowers the L2 JAX graphs (which call the L1 Pallas
-//! tropical-semiring kernels) to HLO *text* under `artifacts/`. This
-//! module loads that text with [`xla::HloModuleProto::from_text_file`],
-//! compiles each module once on the PJRT CPU client, and exposes a
-//! typed execute-many API to the coordinator's hot path. Python never
-//! runs here.
-//!
-//! Artifact inventory comes from `artifacts/manifest.txt`, a line-based
-//! `key value` format (see `python/compile/aot.py`).
+//! tropical-semiring kernels) to HLO *text* under `artifacts/`, plus a
+//! `manifest.txt` inventory (see `python/compile/aot.py`). This module
+//! loads the manifest and exposes a typed execute-many API to the
+//! coordinator's hot path; execution runs on the portable in-tree
+//! interpreter (see [`engine`] — the offline crate set has no PJRT
+//! bindings, so the reference kernels that unit-test the PJRT path
+//! also serve as its stand-in backend). Python never runs here.
 
 mod dense;
 mod engine;
 mod handle;
 mod manifest;
 
-pub use dense::{closure_ref, relax_ref, DenseTile};
-pub use engine::{DenseEngine, RelaxSpec};
+pub use dense::{closure_ref, closure_ref_into, relax_ref, relax_ref_into, DenseTile};
+pub use engine::{DenseEngine, DenseScratch, RelaxSpec};
 pub use handle::EngineHandle;
 pub use manifest::{Artifact, ArtifactKind, Manifest};
 
@@ -28,13 +28,13 @@ pub const INF: f32 = crate::INF;
 /// (e.g. [`crate::coordinator::DenseBlock`]) are agnostic.
 pub trait TileExecutor {
     /// All-pairs closure of one tile (output `c[u*t+v]` = dist v->u).
-    fn closure_exec(&self, tile: &DenseTile) -> anyhow::Result<Vec<f32>>;
+    fn closure_exec(&self, tile: &DenseTile) -> crate::error::Result<Vec<f32>>;
     /// Tile sizes with a compiled closure module.
     fn closure_sizes(&self) -> Vec<usize>;
 }
 
 impl TileExecutor for DenseEngine {
-    fn closure_exec(&self, tile: &DenseTile) -> anyhow::Result<Vec<f32>> {
+    fn closure_exec(&self, tile: &DenseTile) -> crate::error::Result<Vec<f32>> {
         self.closure(tile)
     }
     fn closure_sizes(&self) -> Vec<usize> {
@@ -43,7 +43,7 @@ impl TileExecutor for DenseEngine {
 }
 
 impl TileExecutor for EngineHandle {
-    fn closure_exec(&self, tile: &DenseTile) -> anyhow::Result<Vec<f32>> {
+    fn closure_exec(&self, tile: &DenseTile) -> crate::error::Result<Vec<f32>> {
         self.closure(tile)
     }
     fn closure_sizes(&self) -> Vec<usize> {

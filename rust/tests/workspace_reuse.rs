@@ -1,0 +1,173 @@
+//! Workspace-reuse correctness: reusing ONE `QueryWorkspace` across
+//! many random queries on fixed graphs must be bit-identical to fresh
+//! allocate-per-call runs — including across epoch wraparound, where
+//! the stamped arrays fall back to a hard reset.
+//!
+//! (All the algorithms here are deterministic: BFS/SCC by
+//! construction, and the stepping SSSPs converge to the unique
+//! min-plus fixpoint over f32 path sums regardless of relaxation
+//! order, so exact equality is the right assertion.)
+
+use pasgal::algo::scc::reach::{vgc_multi_reach, vgc_multi_reach_ws, ReachCtx, UNSET};
+use pasgal::algo::{bfs, scc, sssp, QueryWorkspace};
+use pasgal::graph::{gen, Graph};
+use pasgal::prop::Rng;
+use std::sync::atomic::AtomicU32;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One random query through the shared workspace, checked bit-for-bit
+/// against the allocate-per-call path.
+fn random_query(rng: &mut Rng, g: &Graph, gt: &Graph, wg: &Graph, ws: &mut QueryWorkspace) {
+    let n = g.n();
+    let wn = wg.n();
+    let src = rng.below(n as u64) as u32;
+    let wsrc = rng.below(wn as u64) as u32;
+    let tau = *rng.pick(&[1usize, 8, 64, 512]);
+    match rng.range(0, 5) {
+        0 => {
+            bfs::vgc_bfs_ws(g, src, tau, None, &mut ws.bfs);
+            assert_eq!(
+                ws.bfs.dist.export(n),
+                bfs::vgc_bfs(g, src, tau, None),
+                "vgc_bfs src={src} tau={tau}"
+            );
+        }
+        1 => {
+            bfs::diropt_bfs_ws(g, Some(gt), src, None, &mut ws.bfs);
+            assert_eq!(
+                ws.bfs.dist.export(n),
+                bfs::diropt_bfs(g, Some(gt), src, None),
+                "diropt src={src}"
+            );
+        }
+        2 => {
+            sssp::rho_stepping_ws(wg, wsrc, tau, None, &mut ws.sssp);
+            assert_eq!(
+                bits(&ws.sssp.dist.export_f32(wn)),
+                bits(&sssp::rho_stepping(wg, wsrc, tau, None)),
+                "rho src={wsrc} tau={tau}"
+            );
+        }
+        3 => {
+            sssp::delta_stepping_ws(wg, wsrc, None, None, &mut ws.sssp);
+            assert_eq!(
+                bits(&ws.sssp.dist.export_f32(wn)),
+                bits(&sssp::delta_stepping(wg, wsrc, None, None)),
+                "delta src={wsrc}"
+            );
+        }
+        _ => {
+            let seed = rng.u64();
+            scc::vgc_scc_ws(g, Some(gt), tau, seed, None, &mut ws.scc);
+            assert_eq!(
+                ws.scc.labels(),
+                &scc::vgc_scc(g, Some(gt), tau, seed, None)[..],
+                "scc seed={seed} tau={tau}"
+            );
+        }
+    }
+}
+
+#[test]
+fn one_workspace_many_random_queries_bit_identical() {
+    let g = gen::web(9, 6, 0xAB);
+    let gt = g.transpose();
+    let wg = gen::road(12, 18, 0xCD);
+    let mut ws = QueryWorkspace::new();
+    let mut rng = Rng::new(0x517);
+    for _ in 0..40 {
+        random_query(&mut rng, &g, &gt, &wg, &mut ws);
+    }
+}
+
+#[test]
+fn reuse_across_different_graphs_never_leaks() {
+    // Alternate between graphs of different sizes through one
+    // workspace; every answer must match a fresh run.
+    let graphs = [
+        gen::web(8, 5, 1),
+        gen::grid(9, 31),
+        gen::social(7, 6, 2).symmetrize(),
+    ];
+    let transposes: Vec<_> = graphs.iter().map(|g| g.transpose()).collect();
+    let mut ws = QueryWorkspace::new();
+    let mut rng = Rng::new(0x9E7);
+    for round in 0..24 {
+        let i = rng.range(0, graphs.len());
+        let (g, gt) = (&graphs[i], &transposes[i]);
+        let src = rng.below(g.n() as u64) as u32;
+        bfs::vgc_bfs_ws(g, src, 32, None, &mut ws.bfs);
+        assert_eq!(
+            ws.bfs.dist.export(g.n()),
+            bfs::seq_bfs(g, src),
+            "round {round} graph {i} src {src}"
+        );
+        scc::vgc_scc_ws(g, Some(gt), 16, 7, None, &mut ws.scc);
+        assert_eq!(
+            scc::canonicalize(ws.scc.labels()),
+            scc::canonicalize(&scc::tarjan_scc(g)),
+            "round {round} graph {i}"
+        );
+    }
+}
+
+#[test]
+fn epoch_wraparound_is_invisible_to_queries() {
+    let g = gen::web(8, 6, 0xEE);
+    let gt = g.transpose();
+    let wg = gen::road(10, 13, 0xEF);
+    let mut ws = QueryWorkspace::new();
+    // Park every stamped array right below its wraparound point; the
+    // next few queries advance the epochs across it (each query
+    // advances each array at least once).
+    ws.bfs.dist.set_epoch_for_test(u32::MAX - 3);
+    ws.bfs.aux.set_epoch_for_test(u32::MAX - 2);
+    ws.sssp.dist.set_epoch_for_test(u32::MAX - 3);
+    ws.sssp.flags.set_epoch_for_test(u32::MAX - 2);
+    ws.sssp.settled.set_epoch_for_test(u32::MAX - 1);
+    ws.scc.pending.set_epoch_for_test(u32::MAX - 4);
+    ws.scc.fwd.set_epoch_for_test((u32::MAX >> 1) - 2);
+    ws.scc.bwd.set_epoch_for_test((u32::MAX >> 1) - 2);
+    let mut rng = Rng::new(0x3AA);
+    for _ in 0..16 {
+        random_query(&mut rng, &g, &gt, &wg, &mut ws);
+    }
+}
+
+#[test]
+fn reach_workspace_variant_matches_wrapper() {
+    let g = gen::web(9, 5, 0x44);
+    let scc_state: Vec<AtomicU32> = (0..g.n()).map(|_| AtomicU32::new(UNSET)).collect();
+    let sub = vec![0u64; g.n()];
+    let ctx = ReachCtx {
+        scc: &scc_state,
+        sub: &sub,
+    };
+    let mut ws = QueryWorkspace::new();
+    let mut rng = Rng::new(0x88);
+    for round in 0..10 {
+        let seeds: Vec<u32> = (0..rng.range(1, 64))
+            .map(|_| rng.below(g.n() as u64) as u32)
+            .collect();
+        let tau = *rng.pick(&[1usize, 16, 1024]);
+        vgc_multi_reach_ws(
+            &g,
+            &seeds,
+            &ctx,
+            tau,
+            None,
+            &mut ws.scc.fwd,
+            &mut ws.scc.pending,
+            &mut ws.scc.bag,
+            &mut ws.scc.frontier,
+        );
+        assert_eq!(
+            ws.scc.fwd.export(g.n()),
+            vgc_multi_reach(&g, &seeds, &ctx, tau, None),
+            "round {round}"
+        );
+    }
+}
