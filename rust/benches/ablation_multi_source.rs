@@ -1,0 +1,194 @@
+//! Ablation A4: batched k-source traversal vs k solo queries — the
+//! multi-source fusion win.
+//!
+//! A batched walk pays the frontier rounds and edge scans **once** for
+//! up to 64 sources (each edge scan relaxes every expanding lane),
+//! where k solo queries pay them k times. This bench counts both —
+//! frontier rounds and edge scans from the execution traces — and
+//! asserts the batched 64-source BFS does strictly fewer
+//! rounds × edge-scans than 64 solo queries, so CI smoke keeps the
+//! claim honest. Wall-clock speedups are reported alongside.
+//!
+//! Graphs: a road mesh (large diameter — the per-round overhead case
+//! PASGAL targets) and a uniform random digraph (low diameter).
+//! Override the mesh side with `PASGAL_MULTI_BENCH_SIDE` (default 256;
+//! CI smoke uses a tiny value) and reps with
+//! `PASGAL_MULTI_BENCH_REPS`.
+
+use pasgal::algo::multi::{multi_bfs_vgc_ws, multi_rho_ws};
+use pasgal::algo::workspace::{BfsWorkspace, MultiBfsWorkspace, MultiSsspWorkspace, SsspWorkspace};
+use pasgal::algo::{bfs, sssp};
+use pasgal::bench::{bench, fmt_duration, Table};
+use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
+use pasgal::graph::{gen, Graph};
+use pasgal::sim::AlgoTrace;
+use pasgal::V;
+
+const TAU: usize = 512;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn seeds_for(g: &Graph, k: usize) -> Vec<V> {
+    let n = g.n() as u64;
+    (0..k as u64).map(|i| ((i * 999_983 + 7) % n) as V).collect()
+}
+
+/// (rounds, edge scans) of k solo VGC-BFS queries.
+fn solo_bfs_cost(g: &Graph, seeds: &[V], ws: &mut BfsWorkspace) -> (usize, u64) {
+    let mut rounds = 0usize;
+    let mut edges = 0u64;
+    for &s in seeds {
+        let mut t = AlgoTrace::new();
+        bfs::vgc_bfs_ws(g, s, TAU, Some(&mut t), ws);
+        rounds += t.num_rounds();
+        edges += t.total().edges;
+    }
+    (rounds, edges)
+}
+
+/// (rounds, edge scans) of one batched walk over the same seeds.
+fn batched_bfs_cost(g: &Graph, seeds: &[V], ws: &mut MultiBfsWorkspace) -> (usize, u64) {
+    let mut t = AlgoTrace::new();
+    multi_bfs_vgc_ws(g, seeds, TAU, Some(&mut t), ws);
+    (t.num_rounds(), t.total().edges)
+}
+
+fn main() {
+    let side = env_usize("PASGAL_MULTI_BENCH_SIDE", 256);
+    let reps = env_usize("PASGAL_MULTI_BENCH_REPS", 3);
+    let n = side * side;
+    let graphs = [
+        ("road", gen::road(side, side, 0xB0)),
+        ("random", gen::random_graph(n, 4 * n, 0xB1)),
+    ];
+    println!(
+        "multi-source ablation: side = {side} (n = {n}), tau = {TAU}, reps = {reps}"
+    );
+
+    let mut t = Table::new(&[
+        "graph",
+        "k",
+        "rounds solo/batched",
+        "edge-scans solo/batched",
+        "time solo",
+        "time batched",
+        "speedup",
+    ]);
+    let mut all_pass = true;
+
+    for (name, g) in &graphs {
+        let mut solo_ws = BfsWorkspace::new();
+        let mut multi_ws = MultiBfsWorkspace::new();
+        for k in [4usize, 16, 64] {
+            let seeds = seeds_for(g, k);
+            let (s_rounds, s_edges) = solo_bfs_cost(g, &seeds, &mut solo_ws);
+            let (b_rounds, b_edges) = batched_bfs_cost(g, &seeds, &mut multi_ws);
+            let solo_time = bench(reps, || {
+                let mut reached = 0usize;
+                for &s in &seeds {
+                    bfs::vgc_bfs_ws(g, s, TAU, None, &mut solo_ws);
+                    reached += ws_dist_len(&solo_ws);
+                }
+                reached
+            });
+            let batched_time = bench(reps, || {
+                multi_bfs_vgc_ws(g, &seeds, TAU, None, &mut multi_ws);
+                multi_ws.dist.len()
+            });
+            let speedup =
+                solo_time.mean.as_secs_f64() / batched_time.mean.as_secs_f64().max(1e-12);
+            t.row(vec![
+                name.to_string(),
+                k.to_string(),
+                format!("{s_rounds}/{b_rounds}"),
+                format!("{s_edges}/{b_edges}"),
+                fmt_duration(solo_time.mean),
+                fmt_duration(batched_time.mean),
+                format!("{speedup:.2}x"),
+            ]);
+            if k == 64 {
+                let ok = (b_rounds as u128) * (b_edges as u128)
+                    < (s_rounds as u128) * (s_edges as u128);
+                println!(
+                    "{name} k=64: batched rounds x edge-scans = {} vs solo {} -> {}",
+                    (b_rounds as u128) * (b_edges as u128),
+                    (s_rounds as u128) * (s_edges as u128),
+                    if ok { "PASS" } else { "FAIL" }
+                );
+                all_pass &= ok;
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    // SSSP: same story through the shared-bucket batched rho-stepping.
+    {
+        let g = &graphs[0].1;
+        let seeds = seeds_for(g, 16);
+        let mut solo_ws = SsspWorkspace::new();
+        let mut multi_ws = MultiSsspWorkspace::new();
+        let solo_time = bench(reps, || {
+            for &s in &seeds {
+                sssp::rho_stepping_ws(g, s, TAU, None, &mut solo_ws);
+            }
+            seeds.len()
+        });
+        let batched_time = bench(reps, || {
+            multi_rho_ws(g, &seeds, TAU, None, &mut multi_ws);
+            multi_ws.dist.len()
+        });
+        println!(
+            "sssp-rho road k=16: solo {} batched {} ({:.2}x)",
+            fmt_duration(solo_time.mean),
+            fmt_duration(batched_time.mean),
+            solo_time.mean.as_secs_f64() / batched_time.mean.as_secs_f64().max(1e-12)
+        );
+    }
+
+    // End to end: coordinator fusion on a 64-query batch.
+    {
+        let c = Coordinator::new();
+        c.load_graph("road", gen::road(side, side, 0xB2));
+        let reqs: Vec<JobRequest> = seeds_for(&c.graph("road").unwrap().graph, 64)
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| JobRequest {
+                id: i as u64,
+                graph: "road".into(),
+                algo: AlgoKind::BfsVgc { tau: TAU },
+                source: s,
+            })
+            .collect();
+        let fused_time = bench(reps, || {
+            c.run_batch(&reqs).iter().filter(|r| r.is_ok()).count()
+        });
+        let solo = Coordinator::new();
+        solo.load_graph("road", gen::road(side, side, 0xB2));
+        let solo_time = bench(reps, || {
+            reqs.iter().filter(|r| solo.execute(r).is_ok()).count()
+        });
+        println!(
+            "coordinator 64-query batch: unfused {} fused {} ({:.2}x); fused fraction {:.2}; counters: {:?}",
+            fmt_duration(solo_time.mean),
+            fmt_duration(fused_time.mean),
+            solo_time.mean.as_secs_f64() / fused_time.mean.as_secs_f64().max(1e-12),
+            c.metrics.fused_fraction(),
+            c.metrics.counter_names()
+        );
+    }
+
+    assert!(
+        all_pass,
+        "batched 64-source BFS must do strictly fewer rounds x edge-scans than 64 solo queries"
+    );
+    println!("multi-source ablation: all assertions passed");
+}
+
+fn ws_dist_len(ws: &BfsWorkspace) -> usize {
+    ws.dist.len()
+}

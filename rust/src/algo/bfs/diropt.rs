@@ -15,6 +15,11 @@
 //! and edge-map buffers) lives in a reusable [`BfsWorkspace`]:
 //! [`diropt_bfs_ws`] resets it in O(1) via epoch stamps;
 //! [`diropt_bfs`] is the allocate-per-call wrapper.
+//!
+//! The batched variant [`crate::algo::multi::multi_bfs_diropt_ws`]
+//! runs the same level-synchronous switch for up to 64 sources at
+//! once; its bottom-up step tests a whole 64-lane frontier mask word
+//! per in-neighbor instead of one flag.
 
 use crate::algo::workspace::BfsWorkspace;
 use crate::algo::UNREACHED;

@@ -5,11 +5,16 @@
 //! neighbors with a CAS and packing them into the next frontier.
 //! Exactly O(D) rounds with a global barrier each — the behaviour
 //! whose large-diameter cost PASGAL attacks.
+//!
+//! Round scratch is ping-ponged, not reallocated: two frontier buffers
+//! swap each round and the edge-map offset/output buffers are reused,
+//! so the baseline's per-round cost in benches is its O(D) barriers —
+//! the thing under study — not allocator noise.
 
 use crate::algo::UNREACHED;
 use crate::graph::Graph;
 use crate::parallel::atomic::claim;
-use crate::parallel::{pack, parallel_for};
+use crate::parallel::{pack_into, parallel_for};
 use crate::sim::trace::{Recorder, TaskCost};
 use crate::V;
 use std::sync::atomic::AtomicU32;
@@ -23,15 +28,22 @@ pub fn frontier_bfs(g: &Graph, src: V, mut rec: Recorder) -> Vec<u32> {
     }
     dist[src as usize] = 0;
     let dist_at: &[AtomicU32] = crate::parallel::atomic::as_atomic_u32(&mut dist);
+    // Ping-pong frontier buffers + reusable edge-map scratch (see
+    // module docs): nothing below allocates per round once warm.
     let mut frontier = vec![src];
+    let mut next: Vec<V> = Vec::new();
+    let mut offs: Vec<usize> = Vec::new();
+    let mut out: Vec<u32> = Vec::new();
     let mut level: u32 = 0;
 
     while !frontier.is_empty() {
         // Sparse edge map: exclusive scan of frontier degrees gives
         // each vertex a disjoint slice of the output buffer.
-        let mut offs: Vec<usize> = frontier.iter().map(|&v| g.degree(v)).collect();
+        offs.clear();
+        offs.extend(frontier.iter().map(|&v| g.degree(v)));
         let total = crate::parallel::scan_inplace(&mut offs);
-        let mut out: Vec<u32> = vec![UNREACHED; total];
+        out.clear();
+        out.resize(total, UNREACHED);
         {
             let op = crate::parallel::ops::SendPtr(out.as_mut_ptr());
             let frontier_ref = &frontier;
@@ -59,7 +71,8 @@ pub fn frontier_bfs(g: &Graph, src: V, mut rec: Recorder) -> Vec<u32> {
                     .collect(),
             );
         }
-        frontier = pack(&out, |i| out[i] != UNREACHED);
+        pack_into(&out, |i| out[i] != UNREACHED, &mut next);
+        std::mem::swap(&mut frontier, &mut next);
         level += 1;
     }
     dist

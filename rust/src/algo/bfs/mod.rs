@@ -12,7 +12,9 @@
 //!
 //! All return hop distances (`UNREACHED` = not reachable) and agree
 //! with `seq_bfs` on every graph — enforced by the cross-validation
-//! tests at the bottom.
+//! tests at the bottom, which also pin the batched multi-source
+//! engines ([`crate::algo::multi`]) to these single-source results:
+//! a width-k batch must be bit-identical to k solo runs.
 
 pub mod diropt;
 pub mod frontier;
@@ -43,6 +45,11 @@ mod cross_tests {
         // τ=1 degenerates to plain frontier processing; still correct.
         let v1 = vgc_bfs(g, src, 1, None);
         assert_eq!(v1, want, "vgc_bfs tau=1 mismatch");
+        // Batched engines at width 1 must match the solo runs exactly.
+        let mv = crate::algo::multi::multi_bfs_vgc(g, &[src], 64, None);
+        assert_eq!(mv[0], want, "multi_bfs_vgc width-1 mismatch");
+        let md = crate::algo::multi::multi_bfs_diropt(g, None, &[src], None);
+        assert_eq!(md[0], want, "multi_bfs_diropt width-1 mismatch");
     }
 
     #[test]
@@ -76,6 +83,22 @@ mod cross_tests {
             let src = rng.below(n as u64) as V;
             check_all(&g, src);
         });
+    }
+
+    #[test]
+    fn batched_widths_match_repeated_solo_queries() {
+        // The batching contract on this module's engines: a width-k
+        // batch is bit-identical to k solo queries.
+        let g = gen::bubbles(10, 6, 2);
+        let seeds: Vec<V> = (0..17).map(|i| (i * 5) % g.n() as u32).collect();
+        let gt = g.transpose();
+        let vgc = crate::algo::multi::multi_bfs_vgc(&g, &seeds, 32, None);
+        let dir = crate::algo::multi::multi_bfs_diropt(&g, Some(&gt), &seeds, None);
+        for (lane, &s) in seeds.iter().enumerate() {
+            let want = seq_bfs(&g, s);
+            assert_eq!(vgc[lane], want, "vgc lane {lane}");
+            assert_eq!(dir[lane], want, "diropt lane {lane}");
+        }
     }
 
     #[test]

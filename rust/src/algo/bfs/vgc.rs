@@ -21,6 +21,11 @@
 //! O(1) via epoch stamps and performs zero O(n)/O(m) allocation once
 //! the workspace is warm; [`vgc_bfs`] is the allocate-per-call wrapper.
 //!
+//! Serving many sources over one graph? The batched variant
+//! [`crate::algo::multi::multi_bfs_vgc_ws`] runs this τ-budget loop
+//! over lane-striped distances, answering up to 64 sources per walk
+//! with per-lane results bit-identical to this engine's.
+//!
 //! [`local_search`]: crate::parallel::vgc::local_search
 
 use crate::algo::workspace::BfsWorkspace;

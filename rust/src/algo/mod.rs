@@ -12,16 +12,26 @@
 //! Every parallel implementation optionally records an execution
 //! trace ([`crate::sim::AlgoTrace`]) for the virtual-multicore
 //! scalability studies (Fig. 1 / Fig. 2).
+//!
+//! On top of the single-source algorithms, [`multi`] hosts the batched
+//! multi-source traversal engine: up to 64 BFS/SSSP/reachability
+//! sources answered by one frontier walk (lane-striped distances, one
+//! 64-bit source mask per vertex), which the coordinator uses to fuse
+//! same-graph, same-algorithm requests.
 
 pub mod bcc;
 pub mod bfs;
 pub mod cc;
 pub mod kcore;
+pub mod multi;
 pub mod scc;
 pub mod sssp;
 pub mod workspace;
 
-pub use workspace::{BfsWorkspace, CcWorkspace, QueryWorkspace, SccWorkspace, SsspWorkspace};
+pub use workspace::{
+    BfsWorkspace, CcWorkspace, MultiBfsWorkspace, MultiSsspWorkspace, QueryWorkspace,
+    SccWorkspace, SsspWorkspace,
+};
 
 /// Distance sentinel for unreached vertices in hop-distance outputs.
 pub const UNREACHED: u32 = u32::MAX;

@@ -1,0 +1,506 @@
+//! Batched multi-source BFS: up to 64 sources answered by one frontier
+//! walk.
+//!
+//! The `vgc_multi_reach` bit-mask technique generalized to per-source
+//! distances. State lives in a [`MultiBfsWorkspace`]:
+//!
+//! * `dist[v * lanes + lane]` — lane-striped hop distances. The lane
+//!   count is the *actual* batch width, so a 4-source batch pays 4
+//!   lanes of storage and export, not 64.
+//! * `masks[v]` — one [`StampedU64`] word of "active sources" per
+//!   vertex: the lanes whose distance at `v` ever improved. The word
+//!   is monotone (`fetch_or` only); per-lane *expanded-at* marks
+//!   qualify re-expansion exactly (one winner per improved value), so
+//!   stale mask bits cost one load, never an edge scan.
+//!
+//! Two engines, mirroring the single-source pair:
+//!
+//! * [`multi_bfs_vgc_ws`] — the VGC τ-budget worklist loop: each
+//!   scheduled task runs a FIFO local search that relaxes *all* of a
+//!   vertex's expanding lanes against each scanned edge, so one
+//!   neighbor-list traversal pays for up to 64 logical BFS steps.
+//!   Discoveries more than a hop-window ahead of the round's level are
+//!   deferred (the same "don't visit unready vertices" rule as
+//!   `vgc_bfs`, collapsed to one window instead of 2^i buckets — the
+//!   per-lane qualification already bounds re-visits exactly).
+//! * [`multi_bfs_diropt_ws`] — level-synchronous direction-optimizing
+//!   walk: top-down rounds claim `(vertex, lane)` pairs with a CAS;
+//!   bottom-up rounds test the whole frontier mask *word* of each
+//!   in-neighbor against the vertex's unvisited lanes — not one bit —
+//!   so a dense round completes up to 64 BFS levels per vertex scan.
+//!   Level synchrony makes every first discovery final: no
+//!   corrections, bit-identical to per-source `diropt_bfs`.
+//!
+//! Both leave results in the workspace; demultiplex per lane with
+//! [`MultiBfsWorkspace::export_lane_into`] (a parallel strided copy).
+//!
+//! [`StampedU64`]: crate::parallel::StampedU64
+
+use super::mask::{for_each_lane, full_mask, reset_mask_state, MaskFrontier, MAX_LANES};
+use crate::algo::workspace::MultiBfsWorkspace;
+use crate::algo::UNREACHED;
+use crate::graph::Graph;
+use crate::parallel::{pack_index_into, pack_into, parallel_for};
+use crate::sim::trace::{Recorder, RoundSlots, TaskCost};
+use crate::V;
+
+/// Seeds per local-search task (VGC engine).
+const SEEDS: usize = 4;
+
+/// Hop window of the VGC engine: discoveries within `cur + WINDOW`
+/// keep expanding inside the task; farther ones are deferred until the
+/// wavefront approaches (cf. `vgc_bfs`).
+const WINDOW: u32 = 64;
+
+/// GAPBS direction-switch thresholds (diropt engine).
+const ALPHA: usize = 15;
+const BETA: usize = 18;
+
+/// Validate a batch and return its lane count.
+fn check_batch(g: &Graph, seeds: &[V]) -> usize {
+    let lanes = seeds.len();
+    assert!(
+        (1..=MAX_LANES).contains(&lanes),
+        "batch width must be 1..=64, got {lanes}"
+    );
+    for &s in seeds {
+        assert!((s as usize) < g.n(), "source {s} out of range (n={})", g.n());
+    }
+    lanes
+}
+
+/// Hop distances from every seed (allocate-per-call wrapper around
+/// [`multi_bfs_vgc_ws`]): `result[lane][v]` = distance from
+/// `seeds[lane]` to `v`.
+pub fn multi_bfs_vgc(g: &Graph, seeds: &[V], tau: usize, rec: Recorder) -> Vec<Vec<u32>> {
+    let mut ws = MultiBfsWorkspace::new();
+    multi_bfs_vgc_ws(g, seeds, tau, rec, &mut ws);
+    ws.export_all(g.n())
+}
+
+/// Batched VGC BFS into a reusable workspace: one τ-budget frontier
+/// walk answers all `seeds` (≤ 64). Per-lane results are left
+/// lane-striped in `ws.dist`; a warm workspace performs no O(n·lanes)
+/// allocation.
+pub fn multi_bfs_vgc_ws(
+    g: &Graph,
+    seeds: &[V],
+    tau: usize,
+    mut rec: Recorder,
+    ws: &mut MultiBfsWorkspace,
+) {
+    let lanes = check_batch(g, seeds);
+    let n = g.n();
+    let tau = tau.max(1);
+    ws.lanes = lanes;
+    ws.dist.ensure_len(n * lanes);
+    ws.dist.reset(UNREACHED);
+    ws.expanded.ensure_len(n * lanes);
+    ws.expanded.reset(UNREACHED);
+    reset_mask_state(n, &mut ws.masks, &mut ws.pending, &mut ws.bag);
+
+    let dist = &ws.dist;
+    let expanded = &ws.expanded;
+    let mf = MaskFrontier {
+        masks: &ws.masks,
+        pending: &ws.pending,
+        bag: &ws.bag,
+    };
+
+    let mut frontier = std::mem::take(&mut ws.frontier);
+    frontier.clear();
+    for (i, &s) in seeds.iter().enumerate() {
+        dist.store(s as usize * lanes + i, 0);
+        if mf.mark_pending(s, 1u64 << i) {
+            frontier.push(s);
+        }
+    }
+
+    let mut work = std::mem::take(&mut ws.next);
+    // Reused per-round cache of each frontier vertex's pending
+    // distance (the lane scan is paid once, not twice).
+    let mut dmins = std::mem::take(&mut ws.offs);
+
+    while !frontier.is_empty() {
+        // Re-align the hop window to the smallest unexpanded distance
+        // still pending (lanes run at different phases; the minimum is
+        // the wavefront).
+        dmins.clear();
+        let mut cur = UNREACHED;
+        for &v in &frontier {
+            let mut dmin = UNREACHED;
+            for_each_lane(mf.mask(v), |lane| {
+                let idx = v as usize * lanes + lane;
+                let d = dist.get(idx);
+                if d < expanded.get(idx) && d < dmin {
+                    dmin = d;
+                }
+            });
+            dmins.push(dmin as usize);
+            if dmin < cur {
+                cur = dmin;
+            }
+        }
+        // Admit the within-window slice; defer unready (far-ahead)
+        // vertices so overshooting claims are corrected before they
+        // are expanded — vgc_bfs's bucket rule, one window at a time.
+        // Stale entries are admitted: processing them is how their
+        // pending flag clears.
+        work.clear();
+        for (&v, &dmin) in frontier.iter().zip(&dmins) {
+            let d = dmin as u32;
+            if d == UNREACHED || d.saturating_sub(cur) <= WINDOW {
+                work.push(v);
+            } else {
+                mf.defer(v);
+            }
+        }
+        let ntasks = work.len().div_ceil(SEEDS);
+        let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
+        let record = rec.is_some();
+        {
+            let frontier_ref = &work;
+            let slots_ref = &slots;
+            crate::parallel::ops::parallel_for_chunks(
+                0,
+                work.len(),
+                SEEDS,
+                move |ti, range| {
+                    // FIFO local search (discovery order) to bound
+                    // overshoot, as in vgc_bfs.
+                    let mut queue: Vec<V> = Vec::with_capacity(64);
+                    queue.extend(range.map(|i| frontier_ref[i]));
+                    let mut head = 0usize;
+                    let mut exp: Vec<(usize, u32)> = Vec::with_capacity(lanes);
+                    let mut stats = crate::parallel::vgc::SearchStats::default();
+                    while head < queue.len() && (stats.vertices as usize) < tau {
+                        let v = queue[head];
+                        head += 1;
+                        stats.vertices += 1;
+                        let mv = mf.begin(v);
+                        // Qualify each touched lane: expand only on a
+                        // strict improvement since its last expansion
+                        // (one winner per value).
+                        exp.clear();
+                        for_each_lane(mv, |lane| {
+                            let idx = v as usize * lanes + lane;
+                            let d = dist.get(idx);
+                            let e = expanded.get(idx);
+                            if d < e && expanded.compare_exchange(idx, e, d) {
+                                exp.push((lane, d + 1));
+                            }
+                        });
+                        if exp.is_empty() {
+                            continue;
+                        }
+                        // One neighbor-list traversal relaxes every
+                        // expanding lane: the batched-walk payoff.
+                        for &w in g.neighbors(v) {
+                            stats.edges += 1;
+                            let mut bits = 0u64;
+                            let mut best = UNREACHED;
+                            for &(lane, nd) in &exp {
+                                if dist.write_min(w as usize * lanes + lane, nd) {
+                                    bits |= 1u64 << lane;
+                                    if nd < best {
+                                        best = nd;
+                                    }
+                                }
+                            }
+                            if bits != 0 && mf.mark_pending(w, bits) {
+                                if best.saturating_sub(cur) <= WINDOW {
+                                    queue.push(w);
+                                } else {
+                                    mf.defer(w);
+                                }
+                            }
+                        }
+                    }
+                    // Budget exhausted: leftovers stay pending.
+                    for &w in &queue[head..] {
+                        mf.defer(w);
+                    }
+                    if record {
+                        slots_ref.set(ti, stats.into());
+                    }
+                },
+            );
+        }
+        if let Some(trace) = rec.as_deref_mut() {
+            trace.push_round(slots.into_round());
+        }
+        mf.drain_into(&mut frontier);
+    }
+
+    ws.frontier = frontier;
+    ws.next = work;
+    ws.offs = dmins;
+}
+
+/// Hop distances from every seed (allocate-per-call wrapper around
+/// [`multi_bfs_diropt_ws`]).
+pub fn multi_bfs_diropt(
+    g: &Graph,
+    gt: Option<&Graph>,
+    seeds: &[V],
+    rec: Recorder,
+) -> Vec<Vec<u32>> {
+    let mut ws = MultiBfsWorkspace::new();
+    multi_bfs_diropt_ws(g, gt, seeds, rec, &mut ws);
+    ws.export_all(g.n())
+}
+
+/// Batched direction-optimizing BFS into a reusable workspace:
+/// level-synchronous, so every claim is final. `gt` supplies
+/// in-neighbors for the bottom-up rounds (pass `Some(&g)` for
+/// symmetric graphs); without it the walk stays top-down (still
+/// correct). The bottom-up step tests each in-neighbor's whole
+/// frontier mask word against the vertex's unvisited lanes.
+pub fn multi_bfs_diropt_ws(
+    g: &Graph,
+    gt: Option<&Graph>,
+    seeds: &[V],
+    mut rec: Recorder,
+    ws: &mut MultiBfsWorkspace,
+) {
+    let lanes = check_batch(g, seeds);
+    let n = g.n();
+    let m = g.m();
+    ws.lanes = lanes;
+    ws.dist.ensure_len(n * lanes);
+    ws.dist.reset(UNREACHED);
+    ws.masks.ensure_len(n);
+    ws.masks.advance_epoch();
+    let mut cur_mask = std::mem::take(&mut ws.cur_mask);
+    cur_mask.ensure_len(n);
+    cur_mask.advance_epoch();
+    let mut next_mask = std::mem::take(&mut ws.next_mask);
+    next_mask.ensure_len(n);
+    // (next_mask's epoch advances at the top of every round.)
+    let gt = gt.or(if g.symmetric { Some(g) } else { None });
+    let full = full_mask(lanes);
+    let dist = &ws.dist;
+    // Accumulated visited lanes per vertex; the bottom-up filter.
+    let visited = &ws.masks;
+
+    let mut frontier = std::mem::take(&mut ws.frontier);
+    let mut next = std::mem::take(&mut ws.next);
+    let mut offs = std::mem::take(&mut ws.offs);
+    let mut out = std::mem::take(&mut ws.edge_buf);
+    frontier.clear();
+    for (i, &s) in seeds.iter().enumerate() {
+        dist.store(s as usize * lanes + i, 0);
+        if visited.fetch_or(s as usize, 1u64 << i) == 0 {
+            frontier.push(s);
+        }
+        cur_mask.fetch_or(s as usize, 1u64 << i);
+    }
+
+    let mut level: u32 = 0;
+    while !frontier.is_empty() {
+        let frontier_edges: usize = frontier.iter().map(|&v| g.degree(v)).sum();
+        let dense = gt.is_some() && frontier_edges > m / ALPHA && frontier.len() > n / (BETA * 4);
+        next_mask.advance_epoch();
+
+        if dense {
+            let gt = gt.unwrap();
+            // Bottom-up: every vertex with unvisited lanes looks back,
+            // absorbing whole frontier mask words.
+            let nchunks = n.div_ceil(1024);
+            let slots = RoundSlots::new(nchunks);
+            {
+                let cur = &cur_mask;
+                let nxt = &next_mask;
+                crate::parallel::ops::parallel_for_chunks(0, n, 1024, |ci, range| {
+                    let mut scanned = 0u64;
+                    let mut seen = 0u64;
+                    for v in range {
+                        let mut rem = full & !visited.get(v);
+                        if rem == 0 {
+                            continue;
+                        }
+                        seen += 1;
+                        for &u in gt.neighbors(v as V) {
+                            scanned += 1;
+                            let add = cur.get(u as usize) & rem;
+                            if add != 0 {
+                                for_each_lane(add, |lane| {
+                                    dist.store(v * lanes + lane, level + 1);
+                                });
+                                visited.fetch_or(v, add);
+                                nxt.fetch_or(v, add);
+                                rem &= !add;
+                                if rem == 0 {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    slots.set(
+                        ci,
+                        TaskCost {
+                            vertices: seen,
+                            edges: scanned,
+                        },
+                    );
+                });
+            }
+            if let Some(trace) = rec.as_deref_mut() {
+                trace.push_round(slots.into_round());
+            }
+            pack_index_into(n, |v| next_mask.get(v) != 0, &mut next);
+            std::mem::swap(&mut frontier, &mut next);
+        } else {
+            // Top-down sparse round: claim (vertex, lane) pairs by CAS.
+            offs.clear();
+            offs.extend(frontier.iter().map(|&v| g.degree(v)));
+            let total = crate::parallel::scan_inplace(&mut offs);
+            out.clear();
+            out.resize(total, UNREACHED);
+            {
+                let op = crate::parallel::ops::SendPtr(out.as_mut_ptr());
+                let frontier_ref = &frontier;
+                let offs_ref = &offs;
+                let cur = &cur_mask;
+                let nxt = &next_mask;
+                parallel_for(0, frontier_ref.len(), 64, move |i| {
+                    let v = frontier_ref[i];
+                    let mv = cur.get(v as usize);
+                    let base = offs_ref[i];
+                    for (j, &w) in g.neighbors(v).iter().enumerate() {
+                        let mut bits = 0u64;
+                        for_each_lane(mv, |lane| {
+                            if dist.compare_exchange(
+                                w as usize * lanes + lane,
+                                UNREACHED,
+                                level + 1,
+                            ) {
+                                bits |= 1u64 << lane;
+                            }
+                        });
+                        if bits != 0 {
+                            visited.fetch_or(w as usize, bits);
+                            // Exactly one edge sees the word go 0 -> x
+                            // this level: it owns w's frontier slot.
+                            if nxt.fetch_or(w as usize, bits) == 0 {
+                                unsafe { *op.add(base + j) = w };
+                            }
+                        }
+                    }
+                });
+            }
+            if let Some(trace) = rec.as_deref_mut() {
+                trace.push_round(
+                    frontier
+                        .iter()
+                        .map(|&v| TaskCost {
+                            vertices: 1,
+                            edges: g.degree(v) as u64,
+                        })
+                        .collect(),
+                );
+            }
+            pack_into(&out, |i| out[i] != UNREACHED, &mut next);
+            std::mem::swap(&mut frontier, &mut next);
+        }
+        std::mem::swap(&mut cur_mask, &mut next_mask);
+        level += 1;
+    }
+
+    ws.cur_mask = cur_mask;
+    ws.next_mask = next_mask;
+    ws.frontier = frontier;
+    ws.next = next;
+    ws.offs = offs;
+    ws.edge_buf = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::bfs::seq_bfs;
+    use crate::graph::gen;
+
+    fn check_lanes(g: &Graph, seeds: &[V], got: &[Vec<u32>], tag: &str) {
+        assert_eq!(got.len(), seeds.len(), "{tag}: lane count");
+        for (lane, &s) in seeds.iter().enumerate() {
+            assert_eq!(got[lane], seq_bfs(g, s), "{tag}: lane {lane} seed {s}");
+        }
+    }
+
+    #[test]
+    fn vgc_engine_matches_seq_per_lane() {
+        let g = gen::grid(11, 13);
+        let seeds: Vec<V> = vec![0, 7, 100, 42];
+        for tau in [1usize, 16, 1 << 20] {
+            let got = multi_bfs_vgc(&g, &seeds, tau, None);
+            check_lanes(&g, &seeds, &got, &format!("tau={tau}"));
+        }
+    }
+
+    #[test]
+    fn vgc_engine_full_width_64() {
+        let g = gen::web(8, 5, 2);
+        let seeds: Vec<V> = (0..64).map(|i| (i * 11) % g.n() as u32).collect();
+        let got = multi_bfs_vgc(&g, &seeds, 64, None);
+        check_lanes(&g, &seeds, &got, "width 64");
+    }
+
+    #[test]
+    fn vgc_engine_duplicate_and_unreachable_seeds() {
+        let g = gen::path(50); // directed: nothing reaches backwards
+        let seeds: Vec<V> = vec![49, 0, 49];
+        let got = multi_bfs_vgc(&g, &seeds, 8, None);
+        check_lanes(&g, &seeds, &got, "dup seeds");
+        assert_eq!(got[0][0], UNREACHED);
+        assert_eq!(got[1][49], 49);
+    }
+
+    #[test]
+    fn vgc_batched_chain_still_collapses_rounds() {
+        let g = gen::path(2048);
+        let seeds: Vec<V> = vec![0, 1, 512];
+        let mut t = crate::sim::AlgoTrace::new();
+        let got = multi_bfs_vgc(&g, &seeds, 512, Some(&mut t));
+        check_lanes(&g, &seeds, &got, "chain");
+        assert!(
+            t.num_rounds() < 200,
+            "batched VGC must keep rounds << D, got {}",
+            t.num_rounds()
+        );
+    }
+
+    #[test]
+    fn diropt_engine_matches_seq_per_lane() {
+        // Dense enough to trigger bottom-up mask-word rounds.
+        let g = gen::social(10, 24, 5).symmetrize();
+        let seeds: Vec<V> = (0..32).map(|i| (i * 17) % g.n() as u32).collect();
+        let got = multi_bfs_diropt(&g, Some(&g), &seeds, None);
+        check_lanes(&g, &seeds, &got, "social");
+    }
+
+    #[test]
+    fn diropt_directed_with_transpose_and_without() {
+        let g = gen::web(9, 8, 4);
+        let gt = g.transpose();
+        let seeds: Vec<V> = vec![1, 3, 5, 7, 11];
+        let got = multi_bfs_diropt(&g, Some(&gt), &seeds, None);
+        check_lanes(&g, &seeds, &got, "with transpose");
+        let got = multi_bfs_diropt(&g, None, &seeds, None);
+        check_lanes(&g, &seeds, &got, "top-down only");
+    }
+
+    #[test]
+    fn warm_workspace_reuse_across_widths() {
+        let g = gen::grid(9, 17);
+        let mut ws = MultiBfsWorkspace::new();
+        // Shrinking then growing widths: stale lanes must never leak.
+        for &w in &[5usize, 1, 3, 5] {
+            let seeds: Vec<V> = (0..w as u32).map(|i| i * 29 % g.n() as u32).collect();
+            multi_bfs_vgc_ws(&g, &seeds, 32, None, &mut ws);
+            check_lanes(&g, &seeds, &ws.export_all(g.n()), &format!("vgc w={w}"));
+            multi_bfs_diropt_ws(&g, Some(&g), &seeds, None, &mut ws);
+            check_lanes(&g, &seeds, &ws.export_all(g.n()), &format!("diropt w={w}"));
+        }
+    }
+}

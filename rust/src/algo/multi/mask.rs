@@ -1,0 +1,205 @@
+//! The shared mask-frontier engine: per-vertex 64-lane worklist state.
+//!
+//! Every batched traversal in PASGAL — multi-source reachability (the
+//! SCC inner engine), batched multi-source BFS and batched ρ-stepping
+//! SSSP — keeps the same three pieces of per-vertex state:
+//!
+//! * a 64-bit **lane mask** per vertex ([`StampedU64`]) recording which
+//!   of the batch's sources (lanes) have touched it,
+//! * a **pending flag** per vertex ([`StampedU32`]) deduplicating the
+//!   worklist (a vertex is enqueued at most once until processed), and
+//! * a deferred-work [`HashBag`] drained into the frontier between
+//!   rounds.
+//!
+//! [`MaskFrontier`] bundles the three behind the classic worklist
+//! protocol: a task *begins* a vertex by clearing its pending flag
+//! **before** reading the mask — so bits arriving after the read
+//! re-enqueue the vertex — and writers add bits and enqueue the target
+//! iff its flag flips 0 → 1. This loop previously lived, twice, in
+//! `algo::scc::reach`; reachability, BFS and SSSP now all drive it.
+//!
+//! Two propagation flavours, because the two families define
+//! "progress" differently:
+//!
+//! * [`MaskFrontier::spread`] — reachability style: the mask *is* the
+//!   whole state, so only a bit that was absent counts as progress.
+//! * [`MaskFrontier::mark_pending`] — distance style: progress was
+//!   already established by a `write_min` on a lane-striped distance
+//!   array; the mask is just a filter of ever-touched lanes (it only
+//!   grows; the per-lane "expanded at" qualification makes re-visits
+//!   of settled lanes cheap no-ops).
+
+use crate::hashbag::HashBag;
+use crate::parallel::workspace::{StampedU32, StampedU64};
+use crate::V;
+
+/// Most lanes a batch can carry (one bit per source in the mask word).
+pub const MAX_LANES: usize = 64;
+
+/// All-ones mask over the first `lanes` lanes.
+#[inline]
+pub fn full_mask(lanes: usize) -> u64 {
+    if lanes >= MAX_LANES {
+        u64::MAX
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
+/// Call `f(lane)` for each set bit of `m`, lowest first.
+#[inline]
+pub fn for_each_lane(mut m: u64, mut f: impl FnMut(usize)) {
+    while m != 0 {
+        let lane = m.trailing_zeros() as usize;
+        m &= m - 1;
+        f(lane);
+    }
+}
+
+/// Rebind the three mask-frontier arrays for a new query over `n`
+/// vertices: O(1) epoch bumps plus a bag rebind — zero O(n) allocation
+/// once warm.
+pub fn reset_mask_state(
+    n: usize,
+    masks: &mut StampedU64,
+    pending: &mut StampedU32,
+    bag: &mut HashBag,
+) {
+    masks.ensure_len(n);
+    masks.advance_epoch();
+    pending.ensure_len(n);
+    pending.reset(0);
+    bag.reset(n);
+}
+
+/// Borrowed view over the three mask-frontier arrays (see module
+/// docs). `Copy`, so parallel tasks capture it by value.
+#[derive(Clone, Copy)]
+pub struct MaskFrontier<'a> {
+    /// Per-vertex lane bits (monotone within a query: `fetch_or` only).
+    pub masks: &'a StampedU64,
+    /// Per-vertex pending flag (worklist dedup).
+    pub pending: &'a StampedU32,
+    /// Deferred vertices, drained into the frontier between rounds.
+    pub bag: &'a HashBag,
+}
+
+impl MaskFrontier<'_> {
+    /// Claim `v` for processing: clear its pending flag — *before*
+    /// reading the mask, so bits landing after the read re-enqueue `v`
+    /// — and return its lane bits.
+    #[inline]
+    pub fn begin(&self, v: V) -> u64 {
+        self.pending.store(v as usize, 0);
+        self.masks.get(v as usize)
+    }
+
+    /// Current lane bits of `v` (no pending-flag handshake).
+    #[inline]
+    pub fn mask(&self, v: V) -> u64 {
+        self.masks.get(v as usize)
+    }
+
+    /// True while `v` sits in the worklist (frontier, a task-local
+    /// queue, or the bag).
+    #[inline]
+    pub fn is_pending(&self, v: V) -> bool {
+        self.pending.get(v as usize) == 1
+    }
+
+    /// Reachability-style propagation: `masks[w] |= bits`; true iff
+    /// the bits changed the mask *and* `w` newly became pending (the
+    /// caller decides task-local queue vs deferred bag).
+    #[inline]
+    pub fn spread(&self, w: V, bits: u64) -> bool {
+        let old = self.masks.fetch_or(w as usize, bits);
+        old | bits != old && self.pending.swap(w as usize, 1) == 0
+    }
+
+    /// Distance-style propagation: the caller already established
+    /// progress (a `write_min` improved some lane); record the touched
+    /// lanes and return true iff `w` newly became pending.
+    #[inline]
+    pub fn mark_pending(&self, w: V, bits: u64) -> bool {
+        self.masks.fetch_or(w as usize, bits);
+        self.pending.swap(w as usize, 1) == 0
+    }
+
+    /// Defer `w` to the between-rounds bag (its pending flag stays up).
+    #[inline]
+    pub fn defer(&self, w: V) {
+        self.bag.insert(w);
+    }
+
+    /// Drain the deferred bag into `frontier` for the next round.
+    pub fn drain_into(&self, frontier: &mut Vec<V>) {
+        self.bag.extract_into(frontier);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_mask_widths() {
+        assert_eq!(full_mask(1), 1);
+        assert_eq!(full_mask(3), 0b111);
+        assert_eq!(full_mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn for_each_lane_visits_set_bits_in_order() {
+        let mut seen = Vec::new();
+        for_each_lane(0b1010_0001, |l| seen.push(l));
+        assert_eq!(seen, vec![0, 5, 7]);
+        for_each_lane(0, |_| panic!("no bits"));
+        let mut hi = Vec::new();
+        for_each_lane(1u64 << 63, |l| hi.push(l));
+        assert_eq!(hi, vec![63]);
+    }
+
+    #[test]
+    fn spread_requires_new_bits_mark_pending_does_not() {
+        let mut masks = StampedU64::new(0);
+        let mut pending = StampedU32::new(0);
+        let mut bag = HashBag::default();
+        reset_mask_state(8, &mut masks, &mut pending, &mut bag);
+        let mf = MaskFrontier {
+            masks: &masks,
+            pending: &pending,
+            bag: &bag,
+        };
+        assert!(mf.spread(3, 0b01), "first bit enqueues");
+        assert!(!mf.spread(3, 0b01), "same bit is not progress");
+        assert!(!mf.spread(3, 0b10), "new bit but already pending");
+        assert_eq!(mf.begin(3), 0b11);
+        assert!(!mf.is_pending(3));
+        // Distance-style: re-marking an existing lane still enqueues
+        // (the caller saw a write_min succeed).
+        assert!(mf.mark_pending(3, 0b01));
+        assert!(!mf.mark_pending(3, 0b01), "already pending again");
+        assert!(mf.is_pending(3));
+    }
+
+    #[test]
+    fn defer_and_drain_roundtrip() {
+        let mut masks = StampedU64::new(0);
+        let mut pending = StampedU32::new(0);
+        let mut bag = HashBag::default();
+        reset_mask_state(16, &mut masks, &mut pending, &mut bag);
+        let mf = MaskFrontier {
+            masks: &masks,
+            pending: &pending,
+            bag: &bag,
+        };
+        for v in [1u32, 5, 9] {
+            assert!(mf.spread(v, 1));
+            mf.defer(v);
+        }
+        let mut frontier = Vec::new();
+        mf.drain_into(&mut frontier);
+        frontier.sort();
+        assert_eq!(frontier, vec![1, 5, 9]);
+    }
+}

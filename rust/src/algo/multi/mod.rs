@@ -1,0 +1,39 @@
+//! `algo::multi` — the batched multi-source traversal engine: answer
+//! up to 64 BFS/SSSP/reachability sources with **one** frontier walk.
+//!
+//! PASGAL's subject is per-round scheduling overhead; a serving
+//! workload pays that overhead *per query* when it issues many
+//! single-source traversals over the same graph. The SCC engine
+//! already amortizes it with 64-bit reachability masks
+//! (`vgc_multi_reach`); this module makes the technique a first-class
+//! query path:
+//!
+//! * [`mask`] — the shared mask-frontier worklist engine (one 64-bit
+//!   lane mask + one pending flag per vertex + a deferred bag), the
+//!   loop that reachability, BFS and SSSP all drive.
+//! * [`reach`] — multi-source reachability, the SCC inner engine
+//!   (moved here from `algo::scc::reach`, which re-exports it).
+//! * [`bfs`] — batched BFS: lane-striped hop distances, in VGC
+//!   τ-budget and direction-optimizing (mask-word bottom-up) flavours.
+//! * [`sssp`] — batched ρ-stepping: lane-striped `f32` distances with
+//!   per-lane `write_min`, one θ-threshold bucket structure shared by
+//!   the whole batch.
+//!
+//! The lane count always equals the actual batch width, so a 4-source
+//! batch pays 4 lanes of storage, relaxation and export — not 64. The
+//! serving layer ([`crate::coordinator::Coordinator::run_batch`])
+//! fuses same-graph, same-algorithm requests into these engines and
+//! demultiplexes per-lane results back into per-request responses: k
+//! traversals for one walk's scheduling cost.
+
+pub mod bfs;
+pub mod mask;
+pub mod reach;
+pub mod sssp;
+
+pub use bfs::{multi_bfs_diropt, multi_bfs_diropt_ws, multi_bfs_vgc, multi_bfs_vgc_ws};
+pub use mask::{for_each_lane, full_mask, reset_mask_state, MaskFrontier, MAX_LANES};
+pub use reach::{
+    bfs_multi_reach, bfs_multi_reach_ws, vgc_multi_reach, vgc_multi_reach_ws, ReachCtx, UNSET,
+};
+pub use sssp::{multi_rho, multi_rho_ws};

@@ -1,0 +1,313 @@
+//! Batched multi-source ρ-stepping SSSP: up to 64 sources relaxed by
+//! one bucketed frontier walk.
+//!
+//! Lane-striped `f32` tentative distances (`dist[v * lanes + lane]`,
+//! stored as order-preserving bits in a [`StampedU32`]) with per-lane
+//! `write_min`; one pending bag, one pending flag array and one
+//! threshold/sample structure shared across every lane, so the
+//! frontier walk, the θ sampling and the edge scan are paid once per
+//! batch instead of once per source.
+//!
+//! The round structure is `rho_stepping`'s: sample the pending
+//! distances (a vertex's pending distance is the minimum over its
+//! *unsettled* lanes), pick a threshold θ admitting ~ρ vertices capped
+//! by a mean-weight window, expand the admitted slice with τ-budget
+//! VGC local searches, defer the rest. Per-lane settled marks qualify
+//! re-expansion (strict improvement since the last expansion — one
+//! winner per value), exactly as in the single-source engine, so the
+//! batch converges to the same least fixpoint as 64 solo runs:
+//! per-lane results are **bit-identical** to `rho_stepping_ws`.
+//!
+//! [`StampedU32`]: crate::parallel::StampedU32
+
+use super::mask::{for_each_lane, reset_mask_state, MaskFrontier, MAX_LANES};
+use crate::algo::workspace::MultiSsspWorkspace;
+use crate::graph::Graph;
+use crate::sim::trace::{Recorder, RoundSlots};
+use crate::{INF, V};
+
+/// Vertices admitted per round (the ρ parameter).
+const RHO: usize = 1 << 10;
+
+/// Seeds per local-search task.
+const SEEDS: usize = 4;
+
+/// Shortest distances from every seed (allocate-per-call wrapper
+/// around [`multi_rho_ws`]): `result[lane][v]` = distance from
+/// `seeds[lane]` to `v`.
+pub fn multi_rho(g: &Graph, seeds: &[V], tau: usize, rec: Recorder) -> Vec<Vec<f32>> {
+    let mut ws = MultiSsspWorkspace::new();
+    multi_rho_ws(g, seeds, tau, rec, &mut ws);
+    ws.export_all(g.n())
+}
+
+/// Batched ρ-stepping into a reusable workspace: one θ-thresholded
+/// frontier walk answers all `seeds` (≤ 64). Per-lane results are left
+/// lane-striped in `ws.dist` as f32 bits; a warm workspace performs no
+/// O(n·lanes) allocation.
+pub fn multi_rho_ws(
+    g: &Graph,
+    seeds: &[V],
+    tau: usize,
+    mut rec: Recorder,
+    ws: &mut MultiSsspWorkspace,
+) {
+    let lanes = seeds.len();
+    assert!(
+        (1..=MAX_LANES).contains(&lanes),
+        "batch width must be 1..=64, got {lanes}"
+    );
+    let n = g.n();
+    for &s in seeds {
+        assert!((s as usize) < n, "source {s} out of range (n={n})");
+    }
+    let tau = tau.max(1);
+    ws.lanes = lanes;
+    ws.dist.ensure_len(n * lanes);
+    ws.dist.reset(INF.to_bits());
+    ws.settled.ensure_len(n * lanes);
+    ws.settled.reset(INF.to_bits());
+    reset_mask_state(n, &mut ws.masks, &mut ws.flags, &mut ws.bag);
+
+    let dist = &ws.dist;
+    // settled[v*L+lane] = bits of the distance that lane was last
+    // *expanded* with; a lane re-expands only after a strict
+    // improvement (same qualify step as rho_stepping — without it,
+    // in-round corrections re-relax whole neighborhoods).
+    let settled = &ws.settled;
+    let mf = MaskFrontier {
+        masks: &ws.masks,
+        pending: &ws.flags,
+        bag: &ws.bag,
+    };
+
+    // Admission window in units of the memoized mean edge weight (one
+    // parallel reduction per graph, shared by every query and lane).
+    let mean_w = g.weight_stats().mean.max(1e-6);
+    let width = 16.0 * mean_w;
+
+    let mut pending = std::mem::take(&mut ws.pending);
+    pending.clear();
+    for (i, &s) in seeds.iter().enumerate() {
+        dist.store_f32(s as usize * lanes + i, 0.0);
+        if mf.mark_pending(s, 1u64 << i) {
+            pending.push(s);
+        }
+    }
+    let mut work = std::mem::take(&mut ws.work);
+    let mut sample = std::mem::take(&mut ws.sample);
+
+    // Pending distance of a vertex: min over its unsettled lanes.
+    let pending_min = |v: V| {
+        let mut best = INF;
+        for_each_lane(mf.mask(v), |lane| {
+            let idx = v as usize * lanes + lane;
+            let db = dist.get(idx);
+            if db < settled.get(idx) {
+                let d = f32::from_bits(db);
+                if d < best {
+                    best = d;
+                }
+            }
+        });
+        best
+    };
+
+    while !pending.is_empty() {
+        // Threshold: the smaller of (a) the ~RHO-th smallest pending
+        // distance and (b) min pending distance + the width cap —
+        // one sample pass shared by all lanes.
+        let stride = (pending.len() / 1024).max(1);
+        sample.clear();
+        sample.extend(pending.iter().step_by(stride).map(|&v| pending_min(v)));
+        sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let by_count = if pending.len() <= RHO {
+            INF
+        } else {
+            let idx = (RHO * sample.len() / pending.len()).min(sample.len() - 1);
+            sample[idx]
+        };
+        let theta = by_count.min(sample[0] + width);
+
+        // Partition: admitted now, deferred back to the bag.
+        work.clear();
+        for &v in &pending {
+            if pending_min(v) <= theta {
+                work.push(v);
+            } else {
+                mf.defer(v); // still pending (flag stays 1)
+            }
+        }
+        if work.is_empty() {
+            // θ below every pending distance can't happen (θ is a
+            // pending distance or INF), but guard against fp quirks.
+            work.extend_from_slice(&pending);
+        }
+
+        // VGC local searches over the admitted set; one edge scan
+        // relaxes every expanding lane.
+        let ntasks = work.len().div_ceil(SEEDS);
+        let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
+        let record = rec.is_some();
+        {
+            let work_ref = &work;
+            crate::parallel::ops::parallel_for_chunks(0, work_ref.len(), SEEDS, |ti, range| {
+                // FIFO local search (discovery order), as in
+                // rho_stepping.
+                let mut queue: Vec<V> = Vec::with_capacity(64);
+                queue.extend(range.map(|i| work_ref[i]));
+                let mut head = 0usize;
+                let mut exp: Vec<(usize, f32)> = Vec::with_capacity(lanes);
+                let mut stats = crate::parallel::vgc::SearchStats::default();
+                while head < queue.len() && (stats.vertices as usize) < tau {
+                    let v = queue[head];
+                    head += 1;
+                    stats.vertices += 1;
+                    let mv = mf.begin(v);
+                    // Qualify each touched lane: expand only on a
+                    // strict improvement since its last expansion.
+                    exp.clear();
+                    for_each_lane(mv, |lane| {
+                        let idx = v as usize * lanes + lane;
+                        let db = dist.get(idx);
+                        let set = settled.get(idx);
+                        if db < set && settled.compare_exchange(idx, set, db) {
+                            exp.push((lane, f32::from_bits(db)));
+                        }
+                    });
+                    if exp.is_empty() {
+                        continue;
+                    }
+                    let ws_edge = g.weights.as_ref().map(|_| g.weights_of(v));
+                    for (j, &u) in g.neighbors(v).iter().enumerate() {
+                        stats.edges += 1;
+                        let w = ws_edge.map_or(1.0, |we| we[j]);
+                        let mut bits = 0u64;
+                        let mut best = INF;
+                        for &(lane, dv) in &exp {
+                            let nd = dv + w;
+                            if dist.write_min_f32(u as usize * lanes + lane, nd) {
+                                bits |= 1u64 << lane;
+                                if nd < best {
+                                    best = nd;
+                                }
+                            }
+                        }
+                        if bits != 0 && mf.mark_pending(u, bits) {
+                            if best <= theta {
+                                // Near: keep walking inside this task.
+                                queue.push(u);
+                            } else {
+                                mf.defer(u);
+                            }
+                        }
+                    }
+                }
+                // Budget exhausted: leftovers stay pending.
+                for &u in &queue[head..] {
+                    mf.defer(u);
+                }
+                if record {
+                    slots.set(ti, stats.into());
+                }
+            });
+        }
+        if let Some(trace) = rec.as_deref_mut() {
+            trace.push_round(slots.into_round());
+        }
+        mf.drain_into(&mut pending);
+        // Dedupe: flag==0 entries were already processed this round.
+        pending.retain(|&v| mf.is_pending(v));
+    }
+
+    ws.pending = pending;
+    ws.work = work;
+    ws.sample = sample;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sssp::{dijkstra, rho_stepping};
+    use crate::graph::gen;
+
+    fn close(got: &[f32], want: &[f32], tag: &str) {
+        for (v, (a, b)) in got.iter().zip(want).enumerate() {
+            let ok = if *b >= INF {
+                *a >= INF
+            } else {
+                (a - b).abs() <= 1e-3 * b.max(1.0)
+            };
+            assert!(ok, "{tag}: vertex {v}: got {a} want {b}");
+        }
+    }
+
+    #[test]
+    fn lanes_match_dijkstra_on_knn() {
+        let g = gen::knn_points(300, 5, 9);
+        let seeds: Vec<V> = vec![0, 7, 150];
+        let got = multi_rho(&g, &seeds, 64, None);
+        for (lane, &s) in seeds.iter().enumerate() {
+            close(&got[lane], &dijkstra(&g, s), &format!("lane {lane}"));
+        }
+    }
+
+    #[test]
+    fn lanes_bit_identical_to_solo_rho() {
+        let g = gen::road(8, 11, 5);
+        for width in [1usize, 3, 16] {
+            let seeds: Vec<V> = (0..width as u32).map(|i| i * 13 % g.n() as u32).collect();
+            let got = multi_rho(&g, &seeds, 64, None);
+            for (lane, &s) in seeds.iter().enumerate() {
+                assert_eq!(
+                    got[lane],
+                    rho_stepping(&g, s, 64, None),
+                    "width {width} lane {lane}: batched must hit the same fixpoint"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unweighted_graph_defaults_to_unit_weights() {
+        let g = gen::grid(7, 9);
+        let seeds: Vec<V> = vec![0, 31];
+        let got = multi_rho(&g, &seeds, 16, None);
+        for (lane, &s) in seeds.iter().enumerate() {
+            let bfs = crate::algo::bfs::seq_bfs(&g, s);
+            for v in 0..g.n() {
+                if bfs[v] == u32::MAX {
+                    assert!(got[lane][v] >= INF);
+                } else {
+                    assert_eq!(got[lane][v], bfs[v] as f32, "lane {lane} vertex {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn various_tau_all_correct_at_width_64() {
+        let g = gen::road(7, 9, 2);
+        let seeds: Vec<V> = (0..64).map(|i| i % g.n() as u32).collect();
+        for tau in [1usize, 8, 1 << 20] {
+            let got = multi_rho(&g, &seeds, tau, None);
+            for (lane, &s) in seeds.iter().enumerate() {
+                close(&got[lane], &dijkstra(&g, s), &format!("tau {tau} lane {lane}"));
+            }
+        }
+    }
+
+    #[test]
+    fn warm_workspace_reuse_across_widths() {
+        let g = gen::road(9, 8, 4);
+        let mut ws = MultiSsspWorkspace::new();
+        for &width in &[8usize, 1, 3] {
+            let seeds: Vec<V> = (0..width as u32).map(|i| i * 7 % g.n() as u32).collect();
+            multi_rho_ws(&g, &seeds, 32, None, &mut ws);
+            let got = ws.export_all(g.n());
+            for (lane, &s) in seeds.iter().enumerate() {
+                assert_eq!(got[lane], rho_stepping(&g, s, 32, None), "w={width} lane={lane}");
+            }
+        }
+    }
+}

@@ -1,399 +1,14 @@
 //! Multi-source reachability — the inner engine of parallel SCC.
 //!
-//! Up to 64 sources per call, one bit each: `masks[v]` accumulates the
-//! set of sources that reach `v` (within v's subproblem). Two engines
-//! share the same monotone worklist semantics:
-//!
-//! * [`bfs_multi_reach`] — round-synchronous frontier propagation
-//!   (what GBBS/Multistep do): O(D) barriers per call.
-//! * [`vgc_multi_reach`] — PASGAL's engine [24]: τ-budget local
-//!   searches over hash bags. Reachability needs no BFS order, so the
-//!   relaxed visit order is free — this is the paper's core insight.
-//!
-//! Re-scheduling uses the classic pending-flag worklist pattern: a
-//! propagation that adds bits to `masks[w]` enqueues `w` iff `w` is
-//! not already pending; a task clears the flag *before* reading the
-//! mask, so late arrivals always re-enqueue.
-//!
-//! Both engines come in `_ws` form taking epoch-stamped mask/flag
-//! arrays plus a reusable bag: one SCC decomposition issues two
-//! reachability calls per pivot batch, and with a warm
-//! [`crate::algo::SccWorkspace`] none of them allocates O(n) state —
-//! previously every call reallocated `masks`, `pending` and a fresh
-//! bag per round.
+//! The engines moved to [`crate::algo::multi::reach`] when batching
+//! became a first-class query path: the mask-frontier worklist loop
+//! they pioneered (64-bit source masks, pending-flag dedup, deferred
+//! bag) now also drives batched multi-source BFS and SSSP, so it lives
+//! in [`crate::algo::multi`] as shared machinery
+//! ([`crate::algo::multi::mask::MaskFrontier`]). This module
+//! re-exports everything so SCC-side call sites and downstream users
+//! keep their paths.
 
-use crate::graph::Graph;
-use crate::hashbag::HashBag;
-use crate::parallel::vgc::local_search;
-use crate::parallel::workspace::{StampedU32, StampedU64};
-use crate::sim::trace::{Recorder, RoundSlots, TaskCost};
-use crate::V;
-use std::sync::atomic::{AtomicU32, Ordering};
-
-/// Sentinel: vertex not yet assigned to an SCC (still active).
-pub const UNSET: u32 = u32::MAX;
-
-/// Shared context: assignment state + subproblem labels. Propagation
-/// only crosses edge (u, v) when both are active and in the same
-/// subproblem.
-pub struct ReachCtx<'a> {
-    pub scc: &'a [AtomicU32],
-    pub sub: &'a [u64],
-}
-
-impl ReachCtx<'_> {
-    #[inline]
-    fn active(&self, v: u32) -> bool {
-        self.scc[v as usize].load(Ordering::Relaxed) == UNSET
-    }
-
-    #[inline]
-    fn same_sub(&self, u: u32, v: u32) -> bool {
-        self.sub[u as usize] == self.sub[v as usize]
-    }
-}
-
-/// Rebind the workspace pieces for a new search and seed the frontier.
-fn seed_masks_ws(
-    n: usize,
-    seeds: &[V],
-    ctx: &ReachCtx,
-    masks: &mut StampedU64,
-    pending: &mut StampedU32,
-    bag: &mut HashBag,
-    frontier: &mut Vec<V>,
-) {
-    assert!(seeds.len() <= 64, "at most 64 sources per call");
-    masks.ensure_len(n);
-    masks.advance_epoch();
-    pending.ensure_len(n);
-    pending.reset(0);
-    bag.reset(n);
-    frontier.clear();
-    for (i, &s) in seeds.iter().enumerate() {
-        if ctx.active(s) {
-            masks.fetch_or(s as usize, 1 << i);
-            if pending.swap(s as usize, 1) == 0 {
-                frontier.push(s);
-            }
-        }
-    }
-}
-
-/// Round-synchronous multi-source reachability (allocate-per-call
-/// wrapper around [`bfs_multi_reach_ws`]).
-pub fn bfs_multi_reach(g: &Graph, seeds: &[V], ctx: &ReachCtx, rec: Recorder) -> Vec<u64> {
-    let mut masks = StampedU64::new(0);
-    let mut pending = StampedU32::new(0);
-    let mut bag = HashBag::default();
-    let mut frontier = Vec::new();
-    bfs_multi_reach_ws(
-        g,
-        seeds,
-        ctx,
-        rec,
-        &mut masks,
-        &mut pending,
-        &mut bag,
-        &mut frontier,
-    );
-    masks.export(g.n())
-}
-
-/// Round-synchronous multi-source reachability into a reusable
-/// workspace: results are left in `masks` (read via
-/// [`StampedU64::get`]); a warm workspace allocates no O(n) state.
-#[allow(clippy::too_many_arguments)]
-pub fn bfs_multi_reach_ws(
-    g: &Graph,
-    seeds: &[V],
-    ctx: &ReachCtx,
-    mut rec: Recorder,
-    masks: &mut StampedU64,
-    pending: &mut StampedU32,
-    bag: &mut HashBag,
-    frontier: &mut Vec<V>,
-) {
-    let n = g.n();
-    seed_masks_ws(n, seeds, ctx, masks, pending, bag, frontier);
-    let masks = &*masks;
-    let pending = &*pending;
-    let bag = &*bag;
-    while !frontier.is_empty() {
-        let ntasks = frontier.len();
-        let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
-        let record = rec.is_some();
-        {
-            let frontier_ref = &*frontier;
-            let slots_ref = &slots;
-            crate::parallel::parallel_for(0, ntasks, 16, move |i| {
-                let v = frontier_ref[i];
-                pending.store(v as usize, 0);
-                let mv = masks.get(v as usize);
-                let mut edges = 0u64;
-                for &w in g.neighbors(v) {
-                    edges += 1;
-                    if !ctx.active(w) || !ctx.same_sub(v, w) {
-                        continue;
-                    }
-                    let old = masks.fetch_or(w as usize, mv);
-                    if old | mv != old && pending.swap(w as usize, 1) == 0 {
-                        bag.insert(w);
-                    }
-                }
-                if record {
-                    slots_ref.set(i, TaskCost { vertices: 1, edges });
-                }
-            });
-        }
-        if let Some(trace) = rec.as_deref_mut() {
-            trace.push_round(slots.into_round());
-        }
-        bag.extract_into(frontier);
-    }
-}
-
-/// Seeds-per-task for the VGC engine.
-const SEEDS_PER_TASK: usize = 4;
-
-/// VGC multi-source reachability (allocate-per-call wrapper around
-/// [`vgc_multi_reach_ws`]).
-pub fn vgc_multi_reach(
-    g: &Graph,
-    seeds: &[V],
-    ctx: &ReachCtx,
-    tau: usize,
-    rec: Recorder,
-) -> Vec<u64> {
-    let mut masks = StampedU64::new(0);
-    let mut pending = StampedU32::new(0);
-    let mut bag = HashBag::default();
-    let mut frontier = Vec::new();
-    vgc_multi_reach_ws(
-        g,
-        seeds,
-        ctx,
-        tau,
-        rec,
-        &mut masks,
-        &mut pending,
-        &mut bag,
-        &mut frontier,
-    );
-    masks.export(g.n())
-}
-
-/// VGC multi-source reachability into a reusable workspace: the PASGAL
-/// engine, allocation-free when warm.
-#[allow(clippy::too_many_arguments)]
-pub fn vgc_multi_reach_ws(
-    g: &Graph,
-    seeds: &[V],
-    ctx: &ReachCtx,
-    tau: usize,
-    mut rec: Recorder,
-    masks: &mut StampedU64,
-    pending: &mut StampedU32,
-    bag: &mut HashBag,
-    frontier: &mut Vec<V>,
-) {
-    let n = g.n();
-    let tau = tau.max(1);
-    seed_masks_ws(n, seeds, ctx, masks, pending, bag, frontier);
-    let masks = &*masks;
-    let pending = &*pending;
-    let bag = &*bag;
-    while !frontier.is_empty() {
-        let ntasks = frontier.len().div_ceil(SEEDS_PER_TASK);
-        let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
-        let record = rec.is_some();
-        {
-            let frontier_ref = &*frontier;
-            let slots_ref = &slots;
-            crate::parallel::ops::parallel_for_chunks(
-                0,
-                frontier_ref.len(),
-                SEEDS_PER_TASK,
-                move |ti, range| {
-                    let mut stack: Vec<u32> = Vec::with_capacity(64);
-                    stack.extend(range.map(|i| frontier_ref[i]));
-                    let stats = local_search(&mut stack, tau, |v, stack| {
-                        pending.store(v as usize, 0);
-                        let mv = masks.get(v as usize);
-                        let mut edges = 0usize;
-                        for &w in g.neighbors(v) {
-                            edges += 1;
-                            if !ctx.active(w) || !ctx.same_sub(v, w) {
-                                continue;
-                            }
-                            let old = masks.fetch_or(w as usize, mv);
-                            if old | mv != old && pending.swap(w as usize, 1) == 0 {
-                                // Claimed: expand within this search
-                                // (any order is fine for reachability).
-                                stack.push(w);
-                            }
-                        }
-                        edges
-                    });
-                    // Budget exhausted: the leftovers become frontier.
-                    for &w in &stack {
-                        bag.insert(w);
-                    }
-                    if record {
-                        slots_ref.set(ti, stats.into());
-                    }
-                },
-            );
-        }
-        if let Some(trace) = rec.as_deref_mut() {
-            trace.push_round(slots.into_round());
-        }
-        bag.extract_into(frontier);
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::graph::gen;
-
-    fn fresh_ctx(n: usize) -> (Vec<AtomicU32>, Vec<u64>) {
-        ((0..n).map(|_| AtomicU32::new(UNSET)).collect(), vec![0; n])
-    }
-
-    /// Sequential reference: single-source reachability.
-    fn seq_reach(g: &Graph, s: V) -> Vec<bool> {
-        let mut seen = vec![false; g.n()];
-        let mut stack = vec![s];
-        seen[s as usize] = true;
-        while let Some(u) = stack.pop() {
-            for &w in g.neighbors(u) {
-                if !seen[w as usize] {
-                    seen[w as usize] = true;
-                    stack.push(w);
-                }
-            }
-        }
-        seen
-    }
-
-    fn check_engines(g: &Graph, seeds: &[V]) {
-        let (scc, sub) = fresh_ctx(g.n());
-        let ctx = ReachCtx {
-            scc: &scc,
-            sub: &sub,
-        };
-        let bfs = bfs_multi_reach(g, seeds, &ctx, None);
-        for tau in [1usize, 8, 1 << 20] {
-            let vgc = vgc_multi_reach(g, seeds, &ctx, tau, None);
-            assert_eq!(bfs, vgc, "engines disagree at tau={tau}");
-        }
-        // Against the sequential oracle, bit by bit.
-        for (i, &s) in seeds.iter().enumerate() {
-            let want = seq_reach(g, s);
-            for v in 0..g.n() {
-                assert_eq!(
-                    bfs[v] & (1 << i) != 0,
-                    want[v],
-                    "seed {s} vertex {v} mismatch"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn single_source_on_shapes() {
-        check_engines(&gen::path(100), &[0]);
-        check_engines(&gen::path(100), &[99]);
-        check_engines(&gen::cycle(64), &[5]);
-        check_engines(&gen::grid(8, 9), &[0]);
-    }
-
-    #[test]
-    fn multi_source_bits_are_independent() {
-        let g = gen::web(9, 6, 1);
-        let seeds: Vec<V> = (0..32).map(|i| (i * 13) % g.n() as u32).collect();
-        check_engines(&g, &seeds);
-    }
-
-    #[test]
-    fn subproblem_labels_block_propagation() {
-        // Path 0->1->2->3 with a sub boundary between 1 and 2.
-        let g = gen::path(4);
-        let (scc, mut sub) = fresh_ctx(4);
-        sub[2] = 7;
-        sub[3] = 7;
-        let ctx = ReachCtx {
-            scc: &scc,
-            sub: &sub,
-        };
-        let m = bfs_multi_reach(&g, &[0], &ctx, None);
-        assert_eq!(m, vec![1, 1, 0, 0]);
-        let v = vgc_multi_reach(&g, &[0], &ctx, 4, None);
-        assert_eq!(v, vec![1, 1, 0, 0]);
-    }
-
-    #[test]
-    fn assigned_vertices_block_propagation() {
-        let g = gen::path(4);
-        let (scc, sub) = fresh_ctx(4);
-        scc[2].store(9, Ordering::Relaxed); // vertex 2 already assigned
-        let ctx = ReachCtx {
-            scc: &scc,
-            sub: &sub,
-        };
-        let m = bfs_multi_reach(&g, &[0], &ctx, None);
-        assert_eq!(m, vec![1, 1, 0, 0]);
-    }
-
-    #[test]
-    fn vgc_uses_fewer_rounds_on_chain() {
-        let g = gen::path(2048);
-        let (scc, sub) = fresh_ctx(g.n());
-        let ctx = ReachCtx {
-            scc: &scc,
-            sub: &sub,
-        };
-        let mut t_bfs = crate::sim::AlgoTrace::new();
-        let _ = bfs_multi_reach(&g, &[0], &ctx, Some(&mut t_bfs));
-        let mut t_vgc = crate::sim::AlgoTrace::new();
-        let _ = vgc_multi_reach(&g, &[0], &ctx, 256, Some(&mut t_vgc));
-        assert!(t_bfs.num_rounds() >= 2047, "BFS rounds = D");
-        assert!(
-            t_vgc.num_rounds() * 16 < t_bfs.num_rounds(),
-            "VGC must collapse rounds: {} vs {}",
-            t_vgc.num_rounds(),
-            t_bfs.num_rounds()
-        );
-    }
-
-    #[test]
-    fn warm_workspace_reuse_across_calls_is_exact() {
-        let g = gen::web(8, 5, 3);
-        let (scc, sub) = fresh_ctx(g.n());
-        let ctx = ReachCtx {
-            scc: &scc,
-            sub: &sub,
-        };
-        let mut masks = StampedU64::new(0);
-        let mut pending = StampedU32::new(0);
-        let mut bag = HashBag::default();
-        let mut frontier = Vec::new();
-        for round in 0..5u32 {
-            let seeds: Vec<V> = (0..8).map(|i| (i * 7 + round) % g.n() as u32).collect();
-            vgc_multi_reach_ws(
-                &g,
-                &seeds,
-                &ctx,
-                16,
-                None,
-                &mut masks,
-                &mut pending,
-                &mut bag,
-                &mut frontier,
-            );
-            let fresh = vgc_multi_reach(&g, &seeds, &ctx, 16, None);
-            assert_eq!(masks.export(g.n()), fresh, "round {round}");
-        }
-    }
-}
+pub use crate::algo::multi::reach::{
+    bfs_multi_reach, bfs_multi_reach_ws, vgc_multi_reach, vgc_multi_reach_ws, ReachCtx, UNSET,
+};

@@ -15,6 +15,11 @@
 //! weight that sizes the admission window comes from the graph's
 //! memoized [`crate::graph::WeightStats`] (one parallel reduction per
 //! graph) instead of a serial O(m) scan per query.
+//!
+//! The batched variant [`crate::algo::multi::multi_rho_ws`] shares one
+//! θ-threshold/bucket structure across up to 64 sources (lane-striped
+//! distances, one walk per batch) and converges to the same least
+//! fixpoint: per-lane results are bit-identical to this engine's.
 
 use crate::algo::workspace::SsspWorkspace;
 use crate::graph::Graph;

@@ -73,6 +73,119 @@ impl BfsWorkspace {
     }
 }
 
+/// Scratch state for batched multi-source BFS
+/// ([`crate::algo::multi::multi_bfs_vgc_ws`],
+/// [`crate::algo::multi::multi_bfs_diropt_ws`]): lane-striped
+/// distances plus one 64-bit source-mask word per vertex. The lane
+/// count tracks the *actual* batch width of the last query (`lanes`),
+/// so a 4-source batch pays 4 lanes of storage and export, not 64.
+#[derive(Default)]
+pub struct MultiBfsWorkspace {
+    /// Lane-striped hop distances: `dist[v * lanes + lane]` (output;
+    /// demultiplex with [`MultiBfsWorkspace::export_lane_into`]).
+    pub dist: StampedU32,
+    /// Lane-striped "expanded at distance" marks (VGC engine
+    /// re-expansion qualification).
+    pub expanded: StampedU32,
+    /// Active-source mask per vertex: lanes whose distance ever
+    /// improved (VGC engine) / visited lanes (diropt engine).
+    pub masks: StampedU64,
+    /// Current-level frontier masks (diropt engine).
+    pub cur_mask: StampedU64,
+    /// Next-level frontier masks (ping-ponged with `cur_mask`).
+    pub next_mask: StampedU64,
+    /// Pending-vertex worklist flags (VGC engine).
+    pub pending: StampedU32,
+    /// Deferred-work bag (VGC engine).
+    pub bag: HashBag,
+    /// Frontier buffer.
+    pub frontier: Vec<V>,
+    /// Next-frontier / admitted-work buffer.
+    pub next: Vec<V>,
+    /// Frontier-degree prefix sums (diropt sparse rounds).
+    pub offs: Vec<usize>,
+    /// Edge-map output buffer (diropt sparse rounds).
+    pub edge_buf: Vec<u32>,
+    /// Batch width of the last query (the lane stride of `dist`).
+    pub lanes: usize,
+}
+
+impl MultiBfsWorkspace {
+    /// Fresh (cold) workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distances of one lane from the last query into `out` (parallel
+    /// strided export — the coordinator's demultiplex path).
+    pub fn export_lane_into(&self, lane: usize, n: usize, out: &mut Vec<u32>) {
+        assert!(lane < self.lanes, "lane {lane} out of range ({})", self.lanes);
+        self.dist.export_strided_into(lane, self.lanes, n, out);
+    }
+
+    /// Per-lane distance vectors of the last query.
+    pub fn export_all(&self, n: usize) -> Vec<Vec<u32>> {
+        (0..self.lanes)
+            .map(|lane| {
+                let mut out = Vec::new();
+                self.export_lane_into(lane, n, &mut out);
+                out
+            })
+            .collect()
+    }
+}
+
+/// Scratch state for batched multi-source ρ-stepping
+/// ([`crate::algo::multi::multi_rho_ws`]): lane-striped f32 distances,
+/// one shared threshold/bucket structure across lanes.
+#[derive(Default)]
+pub struct MultiSsspWorkspace {
+    /// Lane-striped tentative distances as f32 bits (output;
+    /// demultiplex with [`MultiSsspWorkspace::export_lane_into`]).
+    pub dist: StampedU32,
+    /// Lane-striped last-expanded distances (qualify step).
+    pub settled: StampedU32,
+    /// Active-source mask per vertex.
+    pub masks: StampedU64,
+    /// Pending-vertex worklist flags.
+    pub flags: StampedU32,
+    /// Pending bag shared by every lane.
+    pub bag: HashBag,
+    /// Pending-vertex buffer.
+    pub pending: Vec<V>,
+    /// Admitted-work buffer.
+    pub work: Vec<V>,
+    /// Threshold-sampling scratch (shared across lanes).
+    pub sample: Vec<f32>,
+    /// Batch width of the last query (the lane stride of `dist`).
+    pub lanes: usize,
+}
+
+impl MultiSsspWorkspace {
+    /// Fresh (cold) workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distances of one lane from the last query into `out` (parallel
+    /// strided export).
+    pub fn export_lane_into(&self, lane: usize, n: usize, out: &mut Vec<f32>) {
+        assert!(lane < self.lanes, "lane {lane} out of range ({})", self.lanes);
+        self.dist.export_f32_strided_into(lane, self.lanes, n, out);
+    }
+
+    /// Per-lane distance vectors of the last query.
+    pub fn export_all(&self, n: usize) -> Vec<Vec<f32>> {
+        (0..self.lanes)
+            .map(|lane| {
+                let mut out = Vec::new();
+                self.export_lane_into(lane, n, &mut out);
+                out
+            })
+            .collect()
+    }
+}
+
 /// Scratch state for the SSSP family (`rho_stepping_ws`,
 /// `delta_stepping_ws`).
 #[derive(Default)]
@@ -175,6 +288,10 @@ pub struct QueryWorkspace {
     pub scc: SccWorkspace,
     /// Connectivity scratch.
     pub cc: CcWorkspace,
+    /// Batched multi-source BFS scratch (coordinator fusion).
+    pub multi_bfs: MultiBfsWorkspace,
+    /// Batched multi-source SSSP scratch (coordinator fusion).
+    pub multi_sssp: MultiSsspWorkspace,
     /// Reused u32 export buffer (distances, labels).
     pub out_u32: Vec<u32>,
     /// Reused f32 export buffer (SSSP distances).

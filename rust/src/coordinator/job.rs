@@ -4,7 +4,7 @@ use crate::V;
 use std::time::Duration;
 
 /// Which analysis to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AlgoKind {
     /// PASGAL VGC BFS (τ from the request).
     BfsVgc { tau: usize },
@@ -54,6 +54,28 @@ impl AlgoKind {
             AlgoKind::SsspRho { .. } => "sssp-rho",
             AlgoKind::SsspDelta => "sssp-delta",
             AlgoKind::DenseClosure { .. } => "dense-closure",
+        }
+    }
+
+    /// True for algorithms with a batched multi-source engine: the
+    /// coordinator fuses same-graph groups of these into one frontier
+    /// walk (see [`crate::algo::multi`]). Parameterized variants only
+    /// fuse within the same parameter value — the derived `Eq`/`Hash`
+    /// grouping key guarantees that.
+    pub fn fusable(&self) -> bool {
+        matches!(
+            self,
+            AlgoKind::BfsVgc { .. } | AlgoKind::BfsDirOpt | AlgoKind::SsspRho { .. }
+        )
+    }
+
+    /// Deterministic tiebreak for batch scheduling order among kinds
+    /// sharing a label (e.g. two `BfsVgc` τ values).
+    pub(crate) fn param(&self) -> usize {
+        match self {
+            AlgoKind::BfsVgc { tau } | AlgoKind::SccVgc { tau } | AlgoKind::SsspRho { tau } => *tau,
+            AlgoKind::DenseClosure { block } => *block,
+            _ => 0,
         }
     }
 }
@@ -118,6 +140,17 @@ mod tests {
             assert_eq!(k.label(), s);
         }
         assert!(AlgoKind::parse("nope", 1).is_none());
+    }
+
+    #[test]
+    fn fusable_covers_exactly_the_multi_source_engines() {
+        assert!(AlgoKind::BfsVgc { tau: 64 }.fusable());
+        assert!(AlgoKind::BfsDirOpt.fusable());
+        assert!(AlgoKind::SsspRho { tau: 64 }.fusable());
+        assert!(!AlgoKind::BfsFrontier.fusable());
+        assert!(!AlgoKind::SsspDelta.fusable());
+        assert!(!AlgoKind::SccVgc { tau: 64 }.fusable());
+        assert!(!AlgoKind::Bcc.fusable());
     }
 
     #[test]

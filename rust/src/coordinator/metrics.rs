@@ -85,6 +85,27 @@ impl Metrics {
         names.sort();
         names
     }
+
+    /// All counter names (sorted) — e.g. to report the
+    /// `queries_fused` / `queries_solo` split after a serving run.
+    pub fn counter_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.counters.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Fraction of batch queries routed to the fused multi-source path
+    /// (errors included on both sides; 0.0 when no batch queries ran
+    /// yet).
+    pub fn fused_fraction(&self) -> f64 {
+        let fused = self.counter("queries_fused") as f64;
+        let solo = self.counter("queries_solo") as f64;
+        if fused + solo == 0.0 {
+            0.0
+        } else {
+            fused / (fused + solo)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +138,19 @@ mod tests {
     #[test]
     fn summary_of_unknown_is_none() {
         assert!(Metrics::new().summary("nope").is_none());
+    }
+
+    #[test]
+    fn counter_names_and_fused_fraction() {
+        let m = Metrics::new();
+        assert_eq!(m.fused_fraction(), 0.0);
+        m.bump("queries_fused", 3);
+        m.bump("queries_solo", 1);
+        assert!((m.fused_fraction() - 0.75).abs() < 1e-12);
+        assert_eq!(
+            m.counter_names(),
+            vec!["queries_fused".to_string(), "queries_solo".to_string()]
+        );
     }
 
     #[test]

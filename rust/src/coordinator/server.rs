@@ -1,6 +1,6 @@
-//! The coordinator server: graph registry, per-graph batching, job
-//! execution, a per-worker [`QueryWorkspace`] pool, and a
-//! channel-based serving loop.
+//! The coordinator server: graph registry, per-graph batching,
+//! multi-source query fusion, job execution, a per-worker
+//! [`QueryWorkspace`] pool, and a channel-based serving loop.
 //!
 //! The workspace pool is what makes the serving path a
 //! *zero-allocation query engine*: each request checks a warm
@@ -9,14 +9,24 @@
 //! see [`crate::algo::workspace`]), and returns it. After each
 //! workspace has served one query per graph size, steady-state queries
 //! perform no O(n)/O(m) allocation at all.
+//!
+//! On top of that, [`Coordinator::run_batch`] **fuses** queries:
+//! requests are grouped by (graph, algorithm) — same-graph batching
+//! for cache warmth, as before — and groups whose algorithm has a
+//! batched multi-source engine ([`AlgoKind::fusable`]) run through
+//! [`crate::algo::multi`] in chunks of up to 64 sources per frontier
+//! walk. Per-lane results are demultiplexed (a parallel strided
+//! export) back into per-request [`JobResult`]s in submission order;
+//! fusion is invisible to clients except in the `queries_fused` /
+//! `queries_solo` metrics and the latency column.
 
 use super::dense::DenseBlock;
 use super::job::{AlgoKind, JobOutput, JobRequest, JobResult};
 use super::metrics::Metrics;
 use crate::algo::workspace::QueryWorkspace;
-use crate::algo::{bcc, bfs, scc, sssp, UNREACHED};
+use crate::algo::{bcc, bfs, multi, scc, sssp, UNREACHED};
 use crate::bail;
-use crate::error::{Context, Result};
+use crate::error::{Context, Error, Result};
 use crate::graph::Graph;
 use crate::runtime::EngineHandle;
 use crate::{INF, V};
@@ -24,6 +34,10 @@ use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
+
+/// Most sources per fused frontier walk (one mask bit each — see
+/// [`crate::algo::multi`]).
+const MAX_FUSE: usize = crate::algo::multi::MAX_LANES;
 
 /// A registered graph with lazily materialized derived views.
 pub struct LoadedGraph {
@@ -238,31 +252,143 @@ impl Coordinator {
         })
     }
 
-    /// Run a batch: requests grouped by graph (cache-warm batching),
-    /// results returned in submission order. Latencies include the
-    /// in-batch queueing delay.
+    /// Run a batch: requests grouped by (graph, algorithm) —
+    /// same-graph batching for cache warmth, same-algorithm grouping
+    /// for multi-source fusion — results returned in submission order.
+    /// Groups of ≥ 2 fusable requests ([`AlgoKind::fusable`]) are
+    /// answered by one batched frontier walk per ≤ 64 sources;
+    /// everything else runs solo through [`Coordinator::execute`].
+    /// Latencies include the in-batch queueing delay.
     pub fn run_batch(&self, reqs: &[JobRequest]) -> Vec<Result<JobResult>> {
         let t0 = Instant::now();
-        // Group indices by graph, preserving order within groups.
-        let mut groups: HashMap<&str, Vec<usize>> = HashMap::new();
+        // Group indices by (graph, algo), preserving order within
+        // groups. The derived AlgoKind equality keys parameterized
+        // variants by their parameter, so e.g. two BfsVgc τ values
+        // never fuse together.
+        let mut groups: HashMap<(&str, AlgoKind), Vec<usize>> = HashMap::new();
         for (i, r) in reqs.iter().enumerate() {
-            groups.entry(r.graph.as_str()).or_default().push(i);
+            groups.entry((r.graph.as_str(), r.algo)).or_default().push(i);
         }
-        let mut order: Vec<&str> = groups.keys().copied().collect();
-        order.sort();
+        let mut order: Vec<(&str, AlgoKind)> = groups.keys().copied().collect();
+        order.sort_by_key(|&(name, algo)| (name, algo.label(), algo.param()));
         let mut results: Vec<Option<Result<JobResult>>> = (0..reqs.len()).map(|_| None).collect();
-        for name in order {
-            for &i in &groups[name] {
-                let mut res = self.execute(&reqs[i]);
-                if let Ok(r) = res.as_mut() {
-                    r.latency = t0.elapsed(); // include batch queueing
-                    self.metrics.observe("latency", r.latency);
+        for key in order {
+            let idxs = &groups[&key];
+            if key.1.fusable() && idxs.len() >= 2 {
+                self.run_fused_group(reqs, idxs, &mut results);
+            } else {
+                for &i in idxs {
+                    self.metrics.bump("queries_solo", 1);
+                    results[i] = Some(self.execute(&reqs[i]));
                 }
-                results[i] = Some(res);
             }
         }
         self.metrics.bump("batches", 1);
-        results.into_iter().map(|r| r.unwrap()).collect()
+        results
+            .into_iter()
+            .map(|r| {
+                let mut res = r.expect("every request answered");
+                if let Ok(jr) = res.as_mut() {
+                    jr.latency = t0.elapsed(); // include batch queueing
+                    self.metrics.observe("latency", jr.latency);
+                }
+                res
+            })
+            .collect()
+    }
+
+    /// Answer one (graph, algorithm) group of fusable requests with
+    /// batched multi-source walks (≤ [`MAX_FUSE`] sources each) and
+    /// demultiplex per-lane results back into the slots of `results`.
+    fn run_fused_group(
+        &self,
+        reqs: &[JobRequest],
+        idxs: &[usize],
+        results: &mut [Option<Result<JobResult>>],
+    ) {
+        let req0 = &reqs[idxs[0]];
+        let algo = req0.algo;
+        // queries_fused counts every request *routed* to the fused
+        // path (errors included), so queries_fused + queries_solo
+        // always equals the batch size and fused_fraction stays exact.
+        let Some(lg) = self.graph(&req0.graph) else {
+            for &i in idxs {
+                self.metrics.bump("queries_fused", 1);
+                results[i] = Some(Err(Error::msg(format!(
+                    "unknown graph {:?}",
+                    reqs[i].graph
+                ))));
+            }
+            return;
+        };
+        let g = &*lg.graph;
+        let n = g.n();
+        // Out-of-range sources fail individually; the rest still fuse.
+        let mut valid: Vec<usize> = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            if (reqs[i].source as usize) >= n {
+                self.metrics.bump("queries_fused", 1);
+                results[i] = Some(Err(Error::msg(format!(
+                    "source {} out of range (n={n})",
+                    reqs[i].source
+                ))));
+            } else {
+                valid.push(i);
+            }
+        }
+        for chunk in valid.chunks(MAX_FUSE) {
+            let seeds: Vec<V> = chunk.iter().map(|&i| reqs[i].source).collect();
+            let lanes = seeds.len();
+            let mut ws = self.checkout_workspace();
+            let exec_start = Instant::now();
+            match algo {
+                AlgoKind::BfsVgc { tau } => {
+                    multi::multi_bfs_vgc_ws(g, &seeds, tau, None, &mut ws.multi_bfs)
+                }
+                AlgoKind::BfsDirOpt => multi::multi_bfs_diropt_ws(
+                    g,
+                    Some(lg.transpose()),
+                    &seeds,
+                    None,
+                    &mut ws.multi_bfs,
+                ),
+                AlgoKind::SsspRho { tau } => {
+                    multi::multi_rho_ws(g, &seeds, tau, None, &mut ws.multi_sssp)
+                }
+                other => unreachable!("non-fusable algo {other:?} in fused group"),
+            }
+            // The walk is shared: each fused request's exec is the
+            // whole walk's time (vs. k walks unfused).
+            let exec = exec_start.elapsed();
+            for (lane, &i) in chunk.iter().enumerate() {
+                let output = match algo {
+                    AlgoKind::SsspRho { .. } => {
+                        ws.multi_sssp.export_lane_into(lane, n, &mut ws.out_f32);
+                        summarize_sssp(&ws.out_f32)
+                    }
+                    _ => {
+                        ws.multi_bfs.export_lane_into(lane, n, &mut ws.out_u32);
+                        summarize_bfs(&ws.out_u32)
+                    }
+                };
+                self.metrics.bump("jobs_executed", 1);
+                self.metrics.bump("queries_fused", 1);
+                self.metrics
+                    .observe(&format!("exec/{}", algo.label()), exec);
+                results[i] = Some(Ok(JobResult {
+                    id: reqs[i].id,
+                    algo: algo.label(),
+                    output,
+                    exec,
+                    // Placeholder: run_batch stamps every Ok result
+                    // with the batch-relative latency.
+                    latency: exec,
+                }));
+            }
+            self.metrics.bump("fused_walks", 1);
+            self.metrics.bump("fused_lanes", lanes as u64);
+            self.checkin_workspace(ws);
+        }
     }
 
     /// Serving loop: drain the request channel, batch what is
@@ -509,6 +635,119 @@ mod tests {
             let warm = c.execute(&mk(algo)).unwrap();
             assert_eq!(cold.output, warm.output, "{:?}", algo);
         }
+    }
+
+    #[test]
+    fn fused_batch_matches_unfused_execution() {
+        let c = coord_with_graphs();
+        let reference = coord_with_graphs();
+        let mut reqs = Vec::new();
+        for i in 0..24u64 {
+            let algo = match i % 4 {
+                0 => AlgoKind::BfsVgc { tau: 64 },
+                1 => AlgoKind::SsspRho { tau: 64 },
+                2 => AlgoKind::BfsDirOpt,
+                _ => AlgoKind::BfsFrontier, // not fusable: solo path
+            };
+            reqs.push(JobRequest {
+                id: i,
+                graph: if i % 2 == 0 { "road" } else { "social" }.into(),
+                algo,
+                source: (i % 7) as crate::V,
+            });
+        }
+        let fused = c.run_batch(&reqs);
+        for (i, r) in fused.iter().enumerate() {
+            let r = r.as_ref().unwrap();
+            assert_eq!(r.id, i as u64, "submission order");
+            let want = reference.execute(&reqs[i]).unwrap();
+            assert_eq!(r.output, want.output, "request {i}");
+        }
+        // 18 fusable (3 groups of 6), 6 solo frontier-BFS.
+        assert_eq!(c.metrics.counter("queries_fused"), 18);
+        assert_eq!(c.metrics.counter("queries_solo"), 6);
+        assert_eq!(c.metrics.counter("fused_walks"), 3);
+        assert_eq!(c.metrics.counter("jobs_executed"), 24);
+    }
+
+    #[test]
+    fn fusion_splits_walks_at_64_lanes() {
+        let c = coord_with_graphs();
+        let reqs: Vec<JobRequest> = (0..70)
+            .map(|i| JobRequest {
+                id: i,
+                graph: "road".into(),
+                algo: AlgoKind::BfsVgc { tau: 64 },
+                source: (i % 50) as crate::V,
+            })
+            .collect();
+        let out = c.run_batch(&reqs);
+        assert!(out.iter().all(|r| r.is_ok()));
+        assert_eq!(c.metrics.counter("fused_walks"), 2, "70 = 64 + 6 lanes");
+        assert_eq!(c.metrics.counter("queries_fused"), 70);
+        assert_eq!(c.metrics.counter("fused_lanes"), 70);
+    }
+
+    #[test]
+    fn fused_group_reports_bad_sources_individually() {
+        let c = coord_with_graphs();
+        let mut reqs: Vec<JobRequest> = (0..4)
+            .map(|i| JobRequest {
+                id: i,
+                graph: "road".into(),
+                algo: AlgoKind::SsspRho { tau: 32 },
+                source: i as crate::V,
+            })
+            .collect();
+        reqs.push(JobRequest {
+            id: 4,
+            graph: "road".into(),
+            algo: AlgoKind::SsspRho { tau: 32 },
+            source: u32::MAX - 1,
+        });
+        reqs.push(JobRequest {
+            id: 5,
+            graph: "missing".into(),
+            algo: AlgoKind::BfsVgc { tau: 32 },
+            source: 0,
+        });
+        reqs.push(JobRequest {
+            id: 6,
+            graph: "missing".into(),
+            algo: AlgoKind::BfsVgc { tau: 32 },
+            source: 1,
+        });
+        let out = c.run_batch(&reqs);
+        for r in &out[..4] {
+            assert!(r.is_ok());
+        }
+        assert!(out[4].as_ref().unwrap_err().to_string().contains("out of range"));
+        assert!(out[5].as_ref().unwrap_err().to_string().contains("unknown graph"));
+        assert!(out[6].is_err());
+        // queries_fused counts routed requests, errors included: the 5
+        // SsspRho (one bad source) + the 2 unknown-graph BfsVgc.
+        assert_eq!(c.metrics.counter("queries_fused"), 7);
+        assert_eq!(c.metrics.counter("fused_lanes"), 4, "only valid sources ran");
+    }
+
+    #[test]
+    fn different_tau_groups_do_not_fuse_together() {
+        let c = coord_with_graphs();
+        let reqs: Vec<JobRequest> = (0..4)
+            .map(|i| JobRequest {
+                id: i,
+                graph: "road".into(),
+                algo: AlgoKind::BfsVgc {
+                    tau: if i % 2 == 0 { 16 } else { 64 },
+                },
+                source: i as crate::V,
+            })
+            .collect();
+        let out = c.run_batch(&reqs);
+        assert!(out.iter().all(|r| r.is_ok()));
+        // Two groups of two, each fused separately.
+        assert_eq!(c.metrics.counter("fused_walks"), 2);
+        assert_eq!(c.metrics.counter("queries_fused"), 4);
     }
 
     #[test]

@@ -60,6 +60,40 @@
 //! stamped mask arrays. `benches/ablation_workspace.rs` measures the
 //! cold-vs-warm gap.
 //!
+//! ## Batched multi-source traversal & query fusion
+//!
+//! Serving workloads repeat the *same walk* for many sources: k BFS
+//! queries on one graph pay the per-round scheduling overhead k times
+//! — the overhead PASGAL exists to amortize. [`algo::multi`] answers
+//! up to 64 sources with **one** frontier walk, generalizing the SCC
+//! engine's 64-bit reachability masks to per-source distances:
+//!
+//! * **Lane-striped layout** — distances live at
+//!   `dist[v * lanes + lane]` in one epoch-stamped array, one lane per
+//!   source. The lane count is the *actual* batch width (a 4-source
+//!   batch pays 4 lanes of storage, relaxation and export, not 64),
+//!   and each vertex carries one [`parallel::StampedU64`] word of
+//!   "active sources" so engines touch only lanes that ever improved.
+//! * **One edge scan, many relaxations** — the VGC BFS engine
+//!   ([`algo::multi::multi_bfs_vgc_ws`]) relaxes every expanding lane
+//!   against each scanned neighbor; the direction-optimizing engine
+//!   ([`algo::multi::multi_bfs_diropt_ws`]) tests whole mask words in
+//!   its bottom-up step; batched ρ-stepping
+//!   ([`algo::multi::multi_rho_ws`]) shares one θ-threshold bucket
+//!   structure across all lanes. Per-lane results are bit-identical
+//!   to the single-source `_ws` runs.
+//!
+//! **Fusion kicks in at the serving layer**: when a
+//! [`coordinator::Coordinator::run_batch`] batch contains ≥ 2 requests
+//! for the same graph and same algorithm (and the algorithm has a
+//! batched engine — VGC BFS, direction-optimizing BFS, ρ-stepping),
+//! the coordinator runs one multi-source walk per ≤ 64 sources and
+//! demultiplexes per-lane results (a parallel strided export) back
+//! into per-request responses, in submission order. The
+//! `queries_fused` / `queries_solo` metrics report the split;
+//! `benches/ablation_multi_source.rs` checks the batched walk does
+//! strictly fewer rounds × edge scans than solo queries.
+//!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 

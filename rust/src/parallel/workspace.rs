@@ -35,7 +35,16 @@
 //! invalidates every slot, then restarts from epoch 1 — correctness
 //! never depends on a stale stamp "accidentally" matching.
 
+use super::ops::{parallel_for, SendPtr};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Export cutover: below this many elements a serial copy beats the
+/// fork-join round trip (exports used to be serial O(n) always —
+/// visible at 100M vertices, see ROADMAP).
+const PAR_EXPORT_MIN: usize = 1 << 14;
+
+/// Leaf size of the parallel export loop.
+const PAR_EXPORT_GRAIN: usize = 1 << 12;
 
 /// Epoch-stamped array of `u32` slots (stamp and value packed in one
 /// `AtomicU64`: high 32 bits = stamp, low 32 bits = value).
@@ -233,11 +242,39 @@ impl StampedU32 {
     }
 
     /// Copy the first `n` logical values into `out` (reusing its
-    /// storage).
+    /// storage). Parallel above [`PAR_EXPORT_MIN`] elements.
     pub fn export_into(&self, n: usize, out: &mut Vec<u32>) {
-        assert!(n <= self.slots.len(), "export past allocated length");
+        self.export_strided_into(0, 1, n, out);
+    }
+
+    /// Copy `n` logical values at indices `start, start + stride, ...`
+    /// into `out` — the demultiplex primitive for lane-striped
+    /// multi-source layouts (`dist[v * lanes + lane]`): lane `l` of a
+    /// width-`L` batch exports with `start = l, stride = L`. Parallel
+    /// above [`PAR_EXPORT_MIN`] elements.
+    pub fn export_strided_into(&self, start: usize, stride: usize, n: usize, out: &mut Vec<u32>) {
+        let stride = stride.max(1);
         out.clear();
-        out.extend((0..n).map(|i| self.get(i)));
+        if n == 0 {
+            return;
+        }
+        assert!(
+            start + (n - 1) * stride < self.slots.len(),
+            "export past allocated length"
+        );
+        out.reserve(n);
+        let op = SendPtr(out.as_mut_ptr());
+        if n < PAR_EXPORT_MIN {
+            for i in 0..n {
+                unsafe { *op.add(i) = self.get(start + i * stride) };
+            }
+        } else {
+            parallel_for(0, n, PAR_EXPORT_GRAIN, move |i| unsafe {
+                *op.add(i) = self.get(start + i * stride);
+            });
+        }
+        // Every index in 0..n was written exactly once above.
+        unsafe { out.set_len(n) };
     }
 
     /// First `n` logical values as a fresh vector.
@@ -249,9 +286,38 @@ impl StampedU32 {
 
     /// First `n` logical values reinterpreted as f32 into `out`.
     pub fn export_f32_into(&self, n: usize, out: &mut Vec<f32>) {
-        assert!(n <= self.slots.len(), "export past allocated length");
+        self.export_f32_strided_into(0, 1, n, out);
+    }
+
+    /// Strided f32 export (see [`StampedU32::export_strided_into`]).
+    pub fn export_f32_strided_into(
+        &self,
+        start: usize,
+        stride: usize,
+        n: usize,
+        out: &mut Vec<f32>,
+    ) {
+        let stride = stride.max(1);
         out.clear();
-        out.extend((0..n).map(|i| self.get_f32(i)));
+        if n == 0 {
+            return;
+        }
+        assert!(
+            start + (n - 1) * stride < self.slots.len(),
+            "export past allocated length"
+        );
+        out.reserve(n);
+        let op = SendPtr(out.as_mut_ptr());
+        if n < PAR_EXPORT_MIN {
+            for i in 0..n {
+                unsafe { *op.add(i) = self.get_f32(start + i * stride) };
+            }
+        } else {
+            parallel_for(0, n, PAR_EXPORT_GRAIN, move |i| unsafe {
+                *op.add(i) = self.get_f32(start + i * stride);
+            });
+        }
+        unsafe { out.set_len(n) };
     }
 
     /// First `n` logical f32 values as a fresh vector.
@@ -389,11 +455,26 @@ impl StampedU64 {
         }
     }
 
-    /// Copy the first `n` logical values into `out`.
+    /// Copy the first `n` logical values into `out`. Parallel above
+    /// [`PAR_EXPORT_MIN`] elements.
     pub fn export_into(&self, n: usize, out: &mut Vec<u64>) {
         assert!(n <= self.stamps.len(), "export past allocated length");
         out.clear();
-        out.extend((0..n).map(|i| self.get(i)));
+        if n == 0 {
+            return;
+        }
+        out.reserve(n);
+        let op = SendPtr(out.as_mut_ptr());
+        if n < PAR_EXPORT_MIN {
+            for i in 0..n {
+                unsafe { *op.add(i) = self.get(i) };
+            }
+        } else {
+            parallel_for(0, n, PAR_EXPORT_GRAIN, move |i| unsafe {
+                *op.add(i) = self.get(i);
+            });
+        }
+        unsafe { out.set_len(n) };
     }
 
     /// First `n` logical values as a fresh vector.
@@ -553,6 +634,66 @@ mod tests {
         assert_eq!(u.export(3), vec![0, 6, 0]);
         u.advance_epoch();
         assert_eq!(u.export(3), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn parallel_export_matches_serial_gets() {
+        // Big enough to take the parallel path in all three exports.
+        let n = PAR_EXPORT_MIN + 123;
+        let s = StampedU32::with_len(7, n);
+        for i in (0..n).step_by(3) {
+            s.store(i, (i % 1000) as u32);
+        }
+        let out = s.export(n);
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, s.get(i), "index {i}");
+        }
+        let mut u = StampedU64::with_len(0, n);
+        for i in (0..n).step_by(5) {
+            u.fetch_or(i, (i as u64) | 1);
+        }
+        let big = u.export(n);
+        for (i, &x) in big.iter().enumerate() {
+            assert_eq!(x, u.get(i), "u64 index {i}");
+        }
+        u.advance_epoch();
+        assert!(u.export(n).iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn strided_export_demuxes_lanes() {
+        // 3-lane striped layout over 5 "vertices".
+        let lanes = 3usize;
+        let n = 5usize;
+        let s = StampedU32::with_len(u32::MAX, n * lanes);
+        for v in 0..n {
+            for l in 0..lanes {
+                s.store(v * lanes + l, (10 * v + l) as u32);
+            }
+        }
+        let mut out = Vec::new();
+        for l in 0..lanes {
+            s.export_strided_into(l, lanes, n, &mut out);
+            let want: Vec<u32> = (0..n).map(|v| (10 * v + l) as u32).collect();
+            assert_eq!(out, want, "lane {l}");
+        }
+        // f32 flavour.
+        let f = StampedU32::with_len(crate::INF.to_bits(), 2 * 2);
+        f.store_f32(1, 2.5); // vertex 0, lane 1
+        f.store_f32(3, 4.5); // vertex 1, lane 1
+        let mut fout = Vec::new();
+        f.export_f32_strided_into(1, 2, 2, &mut fout);
+        assert_eq!(fout, vec![2.5, 4.5]);
+        f.export_f32_strided_into(0, 2, 2, &mut fout);
+        assert!(fout.iter().all(|&x| x >= crate::INF));
+    }
+
+    #[test]
+    fn export_zero_len_is_empty() {
+        let s = StampedU32::new(0);
+        let mut out = vec![1, 2, 3];
+        s.export_into(0, &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

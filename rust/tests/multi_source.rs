@@ -1,0 +1,207 @@
+//! Batched multi-source traversal: per-lane results must be
+//! bit-identical to per-source runs on every graph shape — directed,
+//! undirected, disconnected, long chains — at batch widths 1, 3 and
+//! 64, and coordinator fusion must be invisible to clients (identical
+//! `JobResult`s, submission order preserved).
+
+use pasgal::algo::multi::{
+    multi_bfs_diropt, multi_bfs_vgc, multi_bfs_vgc_ws, multi_rho, multi_rho_ws,
+};
+use pasgal::algo::workspace::{MultiBfsWorkspace, MultiSsspWorkspace};
+use pasgal::algo::{bfs, sssp};
+use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
+use pasgal::graph::{gen, Graph};
+use pasgal::V;
+
+fn seeds_for(g: &Graph, width: usize, salt: u64) -> Vec<V> {
+    let n = g.n() as u64;
+    (0..width as u64)
+        .map(|i| ((i * 2654435761 + salt) % n) as V)
+        .collect()
+}
+
+/// Both BFS engines, every width: per-lane equality with solo runs.
+fn check_bfs(g: &Graph, widths: &[usize], tau: usize) {
+    let gt = g.transpose();
+    for &width in widths {
+        let seeds = seeds_for(g, width, 17 + width as u64);
+        let batched = multi_bfs_vgc(g, &seeds, tau, None);
+        for (lane, &s) in seeds.iter().enumerate() {
+            assert_eq!(
+                batched[lane],
+                bfs::vgc_bfs(g, s, tau, None),
+                "vgc width={width} lane={lane} seed={s}"
+            );
+        }
+        let batched = multi_bfs_diropt(g, Some(&gt), &seeds, None);
+        for (lane, &s) in seeds.iter().enumerate() {
+            assert_eq!(
+                batched[lane],
+                bfs::seq_bfs(g, s),
+                "diropt width={width} lane={lane} seed={s}"
+            );
+        }
+    }
+}
+
+fn check_sssp(g: &Graph, widths: &[usize], tau: usize) {
+    for &width in widths {
+        let seeds = seeds_for(g, width, 5 + width as u64);
+        let batched = multi_rho(g, &seeds, tau, None);
+        for (lane, &s) in seeds.iter().enumerate() {
+            assert_eq!(
+                batched[lane],
+                sssp::rho_stepping(g, s, tau, None),
+                "rho width={width} lane={lane} seed={s}: \
+                 batched must converge to the same fixpoint bits"
+            );
+        }
+    }
+}
+
+#[test]
+fn bfs_widths_1_3_64_on_directed_random() {
+    check_bfs(&gen::web(9, 6, 3), &[1, 3, 64], 64);
+}
+
+#[test]
+fn bfs_widths_1_3_64_on_undirected_grid() {
+    check_bfs(&gen::grid(13, 17).symmetrize(), &[1, 3, 64], 32);
+}
+
+#[test]
+fn bfs_on_long_chain() {
+    // Directed path: lanes at the tail see almost nothing, lanes at
+    // the head walk the whole diameter.
+    check_bfs(&gen::path(2048), &[1, 3], 256);
+}
+
+#[test]
+fn bfs_on_disconnected_components() {
+    // Two directed chains with no cross edges: lanes seeded in one
+    // component must report UNREACHED everywhere in the other.
+    let mut edges = Vec::new();
+    for i in 0..99u32 {
+        edges.push((i, i + 1));
+    }
+    for i in 100..199u32 {
+        edges.push((i, i + 1));
+    }
+    let g = Graph::from_edges(200, &edges, true);
+    check_bfs(&g, &[1, 3, 64], 16);
+    let d = multi_bfs_vgc(&g, &[0, 150], 16, None);
+    assert_eq!(d[0][150], u32::MAX, "component A lane must not leak into B");
+    assert_eq!(d[1][0], u32::MAX, "component B lane must not leak into A");
+    assert_eq!(d[1][199], 49);
+}
+
+#[test]
+fn sssp_widths_1_3_64_on_weighted_road() {
+    check_sssp(&gen::road(9, 11, 3), &[1, 3, 64], 64);
+}
+
+#[test]
+fn sssp_on_chain_and_disconnected() {
+    check_sssp(&gen::path(600).with_unit_weights(), &[1, 3], 128);
+    let mut edges = Vec::new();
+    for i in 0..49u32 {
+        edges.push((i, i + 1, 1.5f32));
+    }
+    for i in 50..99u32 {
+        edges.push((i, i + 1, 2.5f32));
+    }
+    let g = Graph::from_weighted_edges(100, &edges, true);
+    check_sssp(&g, &[1, 3, 64], 32);
+}
+
+#[test]
+fn warm_multi_workspaces_survive_width_and_graph_changes() {
+    let big = gen::grid(20, 30).symmetrize();
+    let small = gen::road(6, 7, 9);
+    let mut bws = MultiBfsWorkspace::new();
+    let mut sws = MultiSsspWorkspace::new();
+    // Shrinking widths and a smaller graph: stale lanes and stale
+    // vertices beyond n must never leak into later queries.
+    for (g, width) in [(&big, 64usize), (&big, 3), (&small, 5), (&small, 1)] {
+        let seeds = seeds_for(g, width, width as u64);
+        multi_bfs_vgc_ws(g, &seeds, 64, None, &mut bws);
+        let got = bws.export_all(g.n());
+        for (lane, &s) in seeds.iter().enumerate() {
+            assert_eq!(got[lane], bfs::vgc_bfs(g, s, 64, None), "bfs lane {lane}");
+        }
+        multi_rho_ws(g, &seeds, 64, None, &mut sws);
+        let got = sws.export_all(g.n());
+        for (lane, &s) in seeds.iter().enumerate() {
+            assert_eq!(
+                got[lane],
+                sssp::rho_stepping(g, s, 64, None),
+                "sssp lane {lane}"
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_fusion_matches_solo_and_preserves_order() {
+    let fused = Coordinator::new();
+    let solo = Coordinator::new();
+    for c in [&fused, &solo] {
+        c.load_graph("road", gen::road(8, 12, 1));
+        c.load_graph("soc", gen::social(9, 8, 2));
+    }
+    let mut reqs = Vec::new();
+    for i in 0..20u64 {
+        let algo = match i % 4 {
+            0 => AlgoKind::BfsVgc { tau: 64 },
+            1 => AlgoKind::SsspRho { tau: 64 },
+            2 => AlgoKind::BfsDirOpt,
+            _ => AlgoKind::BfsFrontier, // stays on the solo path
+        };
+        reqs.push(JobRequest {
+            id: i,
+            graph: if i % 2 == 0 { "road" } else { "soc" }.into(),
+            algo,
+            source: (i % 7) as V,
+        });
+    }
+    let batched = fused.run_batch(&reqs);
+    assert_eq!(batched.len(), reqs.len());
+    for (i, r) in batched.iter().enumerate() {
+        let r = r.as_ref().unwrap();
+        assert_eq!(r.id, i as u64, "results must come back in submission order");
+        let want = solo.execute(&reqs[i]).unwrap();
+        assert_eq!(r.output, want.output, "request {i}: fusion must be invisible");
+        assert_eq!(r.algo, want.algo);
+    }
+    assert_eq!(fused.metrics.counter("queries_fused"), 15);
+    assert_eq!(fused.metrics.counter("queries_solo"), 5);
+    assert!(fused.metrics.fused_fraction() > 0.7);
+}
+
+#[test]
+fn serve_loop_fuses_and_answers_everything() {
+    use std::sync::Arc;
+    let c = Arc::new(Coordinator::new());
+    c.load_graph("g", gen::road(10, 10, 4));
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (res_tx, res_rx) = std::sync::mpsc::channel();
+    let server = {
+        let c = Arc::clone(&c);
+        std::thread::spawn(move || c.serve(req_rx, res_tx, 32))
+    };
+    for i in 0..30u64 {
+        req_tx
+            .send(JobRequest {
+                id: i,
+                graph: "g".into(),
+                algo: AlgoKind::BfsVgc { tau: 64 },
+                source: (i % 11) as V,
+            })
+            .unwrap();
+    }
+    drop(req_tx);
+    let mut got: Vec<u64> = res_rx.iter().map(|r| r.id).collect();
+    server.join().unwrap();
+    got.sort();
+    assert_eq!(got, (0..30).collect::<Vec<_>>());
+}
