@@ -18,20 +18,13 @@
 use pasgal::algo::multi::{multi_bfs_vgc_ws, multi_rho_ws};
 use pasgal::algo::workspace::{BfsWorkspace, MultiBfsWorkspace, MultiSsspWorkspace, SsspWorkspace};
 use pasgal::algo::{bfs, sssp};
-use pasgal::bench::{bench, fmt_duration, Table};
+use pasgal::bench::{bench, env_usize, fmt_duration, Table};
 use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
 use pasgal::graph::{gen, Graph};
 use pasgal::sim::AlgoTrace;
 use pasgal::V;
 
 const TAU: usize = 512;
-
-fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name)
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(default)
-}
 
 fn seeds_for(g: &Graph, k: usize) -> Vec<V> {
     let n = g.n() as u64;

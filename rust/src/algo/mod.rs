@@ -30,7 +30,7 @@ pub mod workspace;
 
 pub use workspace::{
     BfsWorkspace, CcWorkspace, MultiBfsWorkspace, MultiSsspWorkspace, QueryWorkspace,
-    SccWorkspace, SsspWorkspace,
+    SccWorkspace, SsspWorkspace, WorkspacePool,
 };
 
 /// Distance sentinel for unreached vertices in hop-distance outputs.

@@ -36,10 +36,13 @@
 //!
 //! [`StampedU64`]: crate::parallel::StampedU64
 
-use super::mask::{for_each_lane, full_mask, reset_mask_state, MaskFrontier, MAX_LANES};
+use super::mask::{
+    for_each_lane, full_mask, lane_fifo_search, reset_mask_state, MaskFrontier, MAX_LANES,
+};
 use crate::algo::workspace::MultiBfsWorkspace;
 use crate::algo::UNREACHED;
 use crate::graph::Graph;
+use crate::parallel::vgc::SearchStats;
 use crate::parallel::{pack_index_into, pack_into, parallel_for};
 use crate::sim::trace::{Recorder, RoundSlots, TaskCost};
 use crate::V;
@@ -158,74 +161,42 @@ pub fn multi_bfs_vgc_ws(
         let ntasks = work.len().div_ceil(SEEDS);
         let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
         let record = rec.is_some();
-        {
-            let frontier_ref = &work;
-            let slots_ref = &slots;
-            crate::parallel::ops::parallel_for_chunks(
-                0,
-                work.len(),
-                SEEDS,
-                move |ti, range| {
-                    // FIFO local search (discovery order) to bound
-                    // overshoot, as in vgc_bfs.
-                    let mut queue: Vec<V> = Vec::with_capacity(64);
-                    queue.extend(range.map(|i| frontier_ref[i]));
-                    let mut head = 0usize;
-                    let mut exp: Vec<(usize, u32)> = Vec::with_capacity(lanes);
-                    let mut stats = crate::parallel::vgc::SearchStats::default();
-                    while head < queue.len() && (stats.vertices as usize) < tau {
-                        let v = queue[head];
-                        head += 1;
-                        stats.vertices += 1;
-                        let mv = mf.begin(v);
-                        // Qualify each touched lane: expand only on a
-                        // strict improvement since its last expansion
-                        // (one winner per value).
-                        exp.clear();
-                        for_each_lane(mv, |lane| {
-                            let idx = v as usize * lanes + lane;
-                            let d = dist.get(idx);
-                            let e = expanded.get(idx);
-                            if d < e && expanded.compare_exchange(idx, e, d) {
-                                exp.push((lane, d + 1));
-                            }
-                        });
-                        if exp.is_empty() {
-                            continue;
-                        }
-                        // One neighbor-list traversal relaxes every
-                        // expanding lane: the batched-walk payoff.
-                        for &w in g.neighbors(v) {
-                            stats.edges += 1;
-                            let mut bits = 0u64;
-                            let mut best = UNREACHED;
-                            for &(lane, nd) in &exp {
-                                if dist.write_min(w as usize * lanes + lane, nd) {
-                                    bits |= 1u64 << lane;
-                                    if nd < best {
-                                        best = nd;
-                                    }
-                                }
-                            }
-                            if bits != 0 && mf.mark_pending(w, bits) {
-                                if best.saturating_sub(cur) <= WINDOW {
-                                    queue.push(w);
-                                } else {
-                                    mf.defer(w);
-                                }
-                            }
+        // Qualify each touched lane: expand only on a strict
+        // improvement since its last expansion (one winner per value).
+        let qualify = |v: V, mv: u64, exp: &mut Vec<(usize, u32)>| {
+            for_each_lane(mv, |lane| {
+                let idx = v as usize * lanes + lane;
+                let d = dist.get(idx);
+                let e = expanded.get(idx);
+                if d < e && expanded.compare_exchange(idx, e, d) {
+                    exp.push((lane, d + 1));
+                }
+            });
+        };
+        // One neighbor-list traversal relaxes every expanding lane:
+        // the batched-walk payoff.
+        let scan = |v: V,
+                    exp: &[(usize, u32)],
+                    stats: &mut SearchStats,
+                    enqueue: &mut dyn FnMut(V, bool)| {
+            for &w in g.neighbors(v) {
+                stats.edges += 1;
+                let mut bits = 0u64;
+                let mut best = UNREACHED;
+                for &(lane, nd) in exp {
+                    if dist.write_min(w as usize * lanes + lane, nd) {
+                        bits |= 1u64 << lane;
+                        if nd < best {
+                            best = nd;
                         }
                     }
-                    // Budget exhausted: leftovers stay pending.
-                    for &w in &queue[head..] {
-                        mf.defer(w);
-                    }
-                    if record {
-                        slots_ref.set(ti, stats.into());
-                    }
-                },
-            );
-        }
+                }
+                if bits != 0 && mf.mark_pending(w, bits) {
+                    enqueue(w, best.saturating_sub(cur) <= WINDOW);
+                }
+            }
+        };
+        lane_fifo_search(&work, tau, SEEDS, mf, &slots, record, &qualify, &scan);
         if let Some(trace) = rec.as_deref_mut() {
             trace.push_round(slots.into_round());
         }

@@ -30,7 +30,10 @@
 //!   of settled lanes cheap no-ops).
 
 use crate::hashbag::HashBag;
+use crate::parallel::ops::parallel_for_chunks;
+use crate::parallel::vgc::SearchStats;
 use crate::parallel::workspace::{StampedU32, StampedU64};
+use crate::sim::trace::RoundSlots;
 use crate::V;
 
 /// Most lanes a batch can carry (one bit per source in the mask word).
@@ -135,6 +138,82 @@ impl MaskFrontier<'_> {
     pub fn drain_into(&self, frontier: &mut Vec<V>) {
         self.bag.extract_into(frontier);
     }
+}
+
+/// One round of τ-budget, lane-qualified FIFO local searches — the
+/// worklist protocol shared by batched VGC BFS
+/// ([`crate::algo::multi::multi_bfs_vgc_ws`]) and batched ρ-stepping
+/// ([`crate::algo::multi::multi_rho_ws`]), parameterized over the lane
+/// payload `P` (the value a qualified lane propagates: `u32` hop
+/// distances for BFS, `f32` tentative distances for SSSP).
+///
+/// `work` is split into chunks of `seeds_per_task` admitted vertices;
+/// each parallel task runs one FIFO local search (discovery order, to
+/// bound overshoot) with a τ vertex budget:
+///
+/// 1. *Claim* the next vertex `v` ([`MaskFrontier::begin`]: clear its
+///    pending flag before reading its mask, so late-arriving bits
+///    re-enqueue it).
+/// 2. *Qualify* each touched lane via `qualify(v, mask, &mut exp)` —
+///    the caller CASes its per-lane expanded/settled mark and pushes
+///    `(lane, payload)` for lanes with a strict improvement to
+///    propagate (one winner per improved value).
+/// 3. *Scan* `v`'s neighbor list **once** for all expanding lanes via
+///    `scan(v, &exp, stats, enqueue)` — the caller relaxes every lane
+///    against each edge and calls `enqueue(w, near)` for each
+///    newly-pending discovery; `near` decides task-local FIFO
+///    (keep walking) vs deferred bag (next round).
+/// 4. On budget exhaustion, leftover queued vertices are deferred (the
+///    round ends; they stay pending).
+///
+/// Task costs land in `slots` (when `record`) for the virtual-multicore
+/// simulator.
+#[allow(clippy::too_many_arguments)]
+pub fn lane_fifo_search<P: Copy>(
+    work: &[V],
+    tau: usize,
+    seeds_per_task: usize,
+    mf: MaskFrontier<'_>,
+    slots: &RoundSlots,
+    record: bool,
+    qualify: &(impl Fn(V, u64, &mut Vec<(usize, P)>) + Sync),
+    scan: &(impl Fn(V, &[(usize, P)], &mut SearchStats, &mut dyn FnMut(V, bool)) + Sync),
+) {
+    parallel_for_chunks(0, work.len(), seeds_per_task.max(1), |ti, range| {
+        // FIFO local search (discovery order) to bound overshoot, as
+        // in vgc_bfs / rho_stepping.
+        let mut queue: Vec<V> = Vec::with_capacity(64);
+        queue.extend(range.map(|i| work[i]));
+        let mut head = 0usize;
+        let mut exp: Vec<(usize, P)> = Vec::with_capacity(MAX_LANES);
+        let mut stats = SearchStats::default();
+        while head < queue.len() && (stats.vertices as usize) < tau {
+            let v = queue[head];
+            head += 1;
+            stats.vertices += 1;
+            let mv = mf.begin(v);
+            exp.clear();
+            qualify(v, mv, &mut exp);
+            if exp.is_empty() {
+                continue;
+            }
+            scan(v, &exp, &mut stats, &mut |w, near| {
+                if near {
+                    // Near the wavefront: keep walking in this task.
+                    queue.push(w);
+                } else {
+                    mf.defer(w);
+                }
+            });
+        }
+        // Budget exhausted: leftovers stay pending.
+        for &w in &queue[head..] {
+            mf.defer(w);
+        }
+        if record {
+            slots.set(ti, stats.into());
+        }
+    });
 }
 
 #[cfg(test)]

@@ -32,7 +32,9 @@ pub mod reach;
 pub mod sssp;
 
 pub use bfs::{multi_bfs_diropt, multi_bfs_diropt_ws, multi_bfs_vgc, multi_bfs_vgc_ws};
-pub use mask::{for_each_lane, full_mask, reset_mask_state, MaskFrontier, MAX_LANES};
+pub use mask::{
+    for_each_lane, full_mask, lane_fifo_search, reset_mask_state, MaskFrontier, MAX_LANES,
+};
 pub use reach::{
     bfs_multi_reach, bfs_multi_reach_ws, vgc_multi_reach, vgc_multi_reach_ws, ReachCtx, UNSET,
 };

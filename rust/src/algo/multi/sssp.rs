@@ -20,9 +20,10 @@
 //!
 //! [`StampedU32`]: crate::parallel::StampedU32
 
-use super::mask::{for_each_lane, reset_mask_state, MaskFrontier, MAX_LANES};
+use super::mask::{for_each_lane, lane_fifo_search, reset_mask_state, MaskFrontier, MAX_LANES};
 use crate::algo::workspace::MultiSsspWorkspace;
 use crate::graph::Graph;
+use crate::parallel::vgc::SearchStats;
 use crate::sim::trace::{Recorder, RoundSlots};
 use crate::{INF, V};
 
@@ -145,73 +146,49 @@ pub fn multi_rho_ws(
         }
 
         // VGC local searches over the admitted set; one edge scan
-        // relaxes every expanding lane.
+        // relaxes every expanding lane. The FIFO qualify/mark-pending/
+        // defer protocol is the shared lane_fifo_search engine.
         let ntasks = work.len().div_ceil(SEEDS);
         let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
         let record = rec.is_some();
-        {
-            let work_ref = &work;
-            crate::parallel::ops::parallel_for_chunks(0, work_ref.len(), SEEDS, |ti, range| {
-                // FIFO local search (discovery order), as in
-                // rho_stepping.
-                let mut queue: Vec<V> = Vec::with_capacity(64);
-                queue.extend(range.map(|i| work_ref[i]));
-                let mut head = 0usize;
-                let mut exp: Vec<(usize, f32)> = Vec::with_capacity(lanes);
-                let mut stats = crate::parallel::vgc::SearchStats::default();
-                while head < queue.len() && (stats.vertices as usize) < tau {
-                    let v = queue[head];
-                    head += 1;
-                    stats.vertices += 1;
-                    let mv = mf.begin(v);
-                    // Qualify each touched lane: expand only on a
-                    // strict improvement since its last expansion.
-                    exp.clear();
-                    for_each_lane(mv, |lane| {
-                        let idx = v as usize * lanes + lane;
-                        let db = dist.get(idx);
-                        let set = settled.get(idx);
-                        if db < set && settled.compare_exchange(idx, set, db) {
-                            exp.push((lane, f32::from_bits(db)));
-                        }
-                    });
-                    if exp.is_empty() {
-                        continue;
-                    }
-                    let ws_edge = g.weights.as_ref().map(|_| g.weights_of(v));
-                    for (j, &u) in g.neighbors(v).iter().enumerate() {
-                        stats.edges += 1;
-                        let w = ws_edge.map_or(1.0, |we| we[j]);
-                        let mut bits = 0u64;
-                        let mut best = INF;
-                        for &(lane, dv) in &exp {
-                            let nd = dv + w;
-                            if dist.write_min_f32(u as usize * lanes + lane, nd) {
-                                bits |= 1u64 << lane;
-                                if nd < best {
-                                    best = nd;
-                                }
-                            }
-                        }
-                        if bits != 0 && mf.mark_pending(u, bits) {
-                            if best <= theta {
-                                // Near: keep walking inside this task.
-                                queue.push(u);
-                            } else {
-                                mf.defer(u);
-                            }
-                        }
-                    }
-                }
-                // Budget exhausted: leftovers stay pending.
-                for &u in &queue[head..] {
-                    mf.defer(u);
-                }
-                if record {
-                    slots.set(ti, stats.into());
+        // Qualify each touched lane: expand only on a strict
+        // improvement since its last expansion.
+        let qualify = |v: V, mv: u64, exp: &mut Vec<(usize, f32)>| {
+            for_each_lane(mv, |lane| {
+                let idx = v as usize * lanes + lane;
+                let db = dist.get(idx);
+                let set = settled.get(idx);
+                if db < set && settled.compare_exchange(idx, set, db) {
+                    exp.push((lane, f32::from_bits(db)));
                 }
             });
-        }
+        };
+        let scan = |v: V,
+                    exp: &[(usize, f32)],
+                    stats: &mut SearchStats,
+                    enqueue: &mut dyn FnMut(V, bool)| {
+            let ws_edge = g.weights.as_ref().map(|_| g.weights_of(v));
+            for (j, &u) in g.neighbors(v).iter().enumerate() {
+                stats.edges += 1;
+                let w = ws_edge.map_or(1.0, |we| we[j]);
+                let mut bits = 0u64;
+                let mut best = INF;
+                for &(lane, dv) in exp {
+                    let nd = dv + w;
+                    if dist.write_min_f32(u as usize * lanes + lane, nd) {
+                        bits |= 1u64 << lane;
+                        if nd < best {
+                            best = nd;
+                        }
+                    }
+                }
+                if bits != 0 && mf.mark_pending(u, bits) {
+                    // Near the threshold: keep walking in this task.
+                    enqueue(u, best <= theta);
+                }
+            }
+        };
+        lane_fifo_search(&work, tau, SEEDS, mf, &slots, record, &qualify, &scan);
         if let Some(trace) = rec.as_deref_mut() {
             trace.push_round(slots.into_round());
         }

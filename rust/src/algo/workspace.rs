@@ -304,3 +304,41 @@ impl QueryWorkspace {
         Self::default()
     }
 }
+
+/// A plain-`Vec` pool of warm [`QueryWorkspace`]s — deliberately not
+/// a concurrent structure. Each shard worker of the serving subsystem
+/// owns one outright (checkout/checkin without any lock — half of
+/// what makes the shard hot path Mutex-free); the coordinator's
+/// shared pool wraps one in a `Mutex` for its single-threaded serve
+/// loop and ad-hoc callers.
+#[derive(Default)]
+pub struct WorkspacePool {
+    slots: Vec<QueryWorkspace>,
+}
+
+impl WorkspacePool {
+    /// Empty pool (every checkout until the first checkin is cold).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop a warm workspace, or build a cold one if the pool is empty.
+    pub fn checkout(&mut self) -> QueryWorkspace {
+        self.slots.pop().unwrap_or_default()
+    }
+
+    /// Return a workspace for the next request.
+    pub fn checkin(&mut self, ws: QueryWorkspace) {
+        self.slots.push(ws);
+    }
+
+    /// Number of idle workspaces.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when a checkout would build a cold workspace.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}

@@ -9,6 +9,15 @@ pub mod suite;
 
 use std::time::{Duration, Instant};
 
+/// Parse a `usize` bench knob from the environment (the ablation
+/// benches use these for CI smoke-sized overrides).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Wall-clock one call.
 pub fn time_once<R>(f: impl FnOnce() -> R) -> (R, Duration) {
     let t0 = Instant::now();

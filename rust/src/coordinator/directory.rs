@@ -1,0 +1,259 @@
+//! Read-mostly graph registry: versioned, `Arc`-swapped snapshots.
+//!
+//! The serving hot path must not contend on a registry lock: a shard
+//! worker answers thousands of queries between registry mutations, and
+//! PR 2's profile showed the two global Mutex hops (registry +
+//! workspace pool) as the remaining shared state per request. The
+//! [`GraphDirectory`] splits the two roles:
+//!
+//! * **Writers** ([`GraphDirectory::publish`], i.e. `load_graph`) take
+//!   the writer Mutex, clone the current map (cheap: the values are
+//!   `Arc<LoadedGraph>`), insert, swap in the new `Arc` snapshot and
+//!   bump the version counter.
+//! * **Readers** hold a [`SnapshotCache`]: the `Arc` of the last
+//!   published map plus the version it was published at. Checking
+//!   freshness is one atomic load; the Mutex is touched only when the
+//!   version actually moved (a registry mutation — the control path,
+//!   not the request path). Steady-state lookups are plain `HashMap`
+//!   gets on a worker-local `Arc` — **zero locks**.
+//!
+//! Within one dispatched batch the snapshot is immutable by
+//! construction: a shard refreshes once per dispatch, so every request
+//! in the batch resolves graphs against the same registry state.
+
+use crate::graph::Graph;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A registered graph with lazily materialized derived views.
+pub struct LoadedGraph {
+    pub graph: Arc<Graph>,
+    transpose: OnceLock<Arc<Graph>>,
+    symmetrized: OnceLock<Arc<Graph>>,
+}
+
+impl LoadedGraph {
+    pub fn new(graph: Graph) -> Self {
+        LoadedGraph {
+            graph: Arc::new(graph),
+            transpose: OnceLock::new(),
+            symmetrized: OnceLock::new(),
+        }
+    }
+
+    /// Transpose, computed once on first use.
+    pub fn transpose(&self) -> &Graph {
+        if self.graph.symmetric {
+            return &self.graph;
+        }
+        self.transpose
+            .get_or_init(|| Arc::new(self.graph.transpose()))
+    }
+
+    /// Symmetrized view (identity for already-symmetric graphs).
+    pub fn symmetrized(&self) -> &Graph {
+        if self.graph.symmetric {
+            return &self.graph;
+        }
+        self.symmetrized
+            .get_or_init(|| Arc::new(self.graph.symmetrize()))
+    }
+}
+
+/// One published registry state: name → loaded graph.
+pub type GraphMap = HashMap<String, Arc<LoadedGraph>>;
+
+/// The snapshot-published graph registry (see module docs).
+pub struct GraphDirectory {
+    published: Mutex<Arc<GraphMap>>,
+    version: AtomicU64,
+}
+
+impl Default for GraphDirectory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GraphDirectory {
+    pub fn new() -> Self {
+        GraphDirectory {
+            published: Mutex::new(Arc::new(HashMap::new())),
+            version: AtomicU64::new(0),
+        }
+    }
+
+    /// Register `graph` under `name` (replacing any previous one) by
+    /// publishing a new snapshot. Existing snapshots held by readers
+    /// stay valid and keep answering with the old state until they
+    /// refresh.
+    pub fn publish(&self, name: &str, graph: Graph) {
+        let mut slot = self.published.lock().unwrap();
+        let mut map: GraphMap = (**slot).clone();
+        map.insert(name.to_string(), Arc::new(LoadedGraph::new(graph)));
+        *slot = Arc::new(map);
+        // The bump is observed after the Mutex has the new Arc: a
+        // reader that sees the new version and then locks is
+        // guaranteed the new map (the lock fully orders it).
+        self.version.fetch_add(1, Ordering::Release);
+    }
+
+    /// Current registry version (bumped by every [`publish`]).
+    ///
+    /// [`publish`]: GraphDirectory::publish
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// The latest published snapshot (takes the writer Mutex — use a
+    /// [`SnapshotCache`] on hot paths).
+    pub fn snapshot(&self) -> Arc<GraphMap> {
+        self.published.lock().unwrap().clone()
+    }
+
+    /// One-shot lookup (takes the writer Mutex — convenience for
+    /// non-serving callers).
+    pub fn lookup(&self, name: &str) -> Option<Arc<LoadedGraph>> {
+        self.snapshot().get(name).cloned()
+    }
+
+    /// Number of registered graphs.
+    pub fn len(&self) -> usize {
+        self.snapshot().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A reader's cached registry snapshot: lookups are lock-free; the
+/// directory Mutex is touched only when the version counter moved.
+pub struct SnapshotCache {
+    map: Arc<GraphMap>,
+    version: u64,
+}
+
+impl Default for SnapshotCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotCache {
+    /// Empty cache; the first [`refresh`] always fetches a snapshot.
+    ///
+    /// [`refresh`]: SnapshotCache::refresh
+    pub fn new() -> Self {
+        SnapshotCache {
+            map: Arc::new(HashMap::new()),
+            // Sentinel: never equals a real version, so the first
+            // refresh against any directory fetches.
+            version: u64::MAX,
+        }
+    }
+
+    /// Re-fetch the snapshot if the directory moved since the last
+    /// refresh. Returns true iff a new snapshot was fetched (callers
+    /// count these as `registry_snapshots`). Costs one atomic load
+    /// when nothing changed.
+    pub fn refresh(&mut self, dir: &GraphDirectory) -> bool {
+        let v = dir.version();
+        if v == self.version {
+            return false;
+        }
+        self.map = dir.snapshot();
+        self.version = v;
+        true
+    }
+
+    /// Lock-free lookup in the cached snapshot (no staleness check —
+    /// call [`refresh`] at batch boundaries).
+    ///
+    /// [`refresh`]: SnapshotCache::refresh
+    pub fn cached(&self, name: &str) -> Option<Arc<LoadedGraph>> {
+        self.map.get(name).cloned()
+    }
+
+    /// Refresh, then look up: the convenience path for callers without
+    /// a batch boundary.
+    pub fn get(&mut self, dir: &GraphDirectory, name: &str) -> Option<Arc<LoadedGraph>> {
+        self.refresh(dir);
+        self.cached(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn publish_bumps_version_and_replaces() {
+        let dir = GraphDirectory::new();
+        assert_eq!(dir.version(), 0);
+        assert!(dir.lookup("g").is_none());
+        dir.publish("g", gen::grid(3, 3));
+        assert_eq!(dir.version(), 1);
+        assert_eq!(dir.lookup("g").unwrap().graph.n(), 9);
+        dir.publish("g", gen::grid(4, 4));
+        assert_eq!(dir.version(), 2);
+        assert_eq!(dir.lookup("g").unwrap().graph.n(), 16);
+        assert_eq!(dir.len(), 1);
+    }
+
+    #[test]
+    fn cache_refreshes_only_on_version_change() {
+        let dir = GraphDirectory::new();
+        dir.publish("a", gen::grid(2, 2));
+        let mut cache = SnapshotCache::new();
+        assert!(cache.refresh(&dir), "first refresh fetches");
+        assert!(!cache.refresh(&dir), "no change, no fetch");
+        assert!(cache.cached("a").is_some());
+        assert!(cache.cached("b").is_none());
+        dir.publish("b", gen::grid(2, 3));
+        assert!(cache.cached("b").is_none(), "stale until refreshed");
+        assert!(cache.refresh(&dir));
+        assert_eq!(cache.cached("b").unwrap().graph.n(), 6);
+    }
+
+    #[test]
+    fn old_snapshots_survive_republication() {
+        let dir = GraphDirectory::new();
+        dir.publish("g", gen::grid(3, 3));
+        let mut cache = SnapshotCache::new();
+        cache.refresh(&dir);
+        let old = cache.cached("g").unwrap();
+        dir.publish("g", gen::grid(5, 5));
+        // The reader's snapshot still answers with the old graph.
+        assert_eq!(old.graph.n(), 9);
+        assert_eq!(cache.cached("g").unwrap().graph.n(), 9);
+        cache.refresh(&dir);
+        assert_eq!(cache.cached("g").unwrap().graph.n(), 25);
+    }
+
+    #[test]
+    fn concurrent_publish_and_cached_reads() {
+        let dir = Arc::new(GraphDirectory::new());
+        dir.publish("g", gen::grid(3, 3));
+        std::thread::scope(|s| {
+            let d = Arc::clone(&dir);
+            s.spawn(move || {
+                for i in 0..20 {
+                    d.publish("g", gen::grid(3 + (i % 3), 3));
+                }
+            });
+            for _ in 0..4 {
+                let d = Arc::clone(&dir);
+                s.spawn(move || {
+                    let mut cache = SnapshotCache::new();
+                    for _ in 0..200 {
+                        let lg = cache.get(&d, "g").expect("g always registered");
+                        assert!(lg.graph.n() >= 9);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -91,6 +91,23 @@ pub struct JobRequest {
     pub source: V,
 }
 
+impl JobRequest {
+    /// Stable FNV-1a hash of the graph name: the shard-router key.
+    /// Same name ⇒ same hash ⇒ same shard, which is what guarantees a
+    /// shard's fusion window sees every request that could fuse with
+    /// it (and keeps one graph's derived views hot in one worker).
+    pub fn route_hash(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x1_0000_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for &b in self.graph.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+}
+
 /// Compact algorithm output (the full vectors stay with the caller
 /// when run through the library API; the server reports summaries).
 #[derive(Debug, Clone, PartialEq)]
@@ -105,6 +122,11 @@ pub enum JobOutput {
     Sssp { reached: usize, radius: f32 },
     /// (block size, #finite pairwise distances).
     Dense { block: usize, finite_pairs: usize },
+    /// The request failed (unknown graph, out-of-range source, no
+    /// dense engine, ...): the serving loops answer *every* accepted
+    /// request, so failures come back on the result channel with the
+    /// request's id instead of vanishing into a log line.
+    Failed { error: String },
 }
 
 /// A finished job.
@@ -151,6 +173,44 @@ mod tests {
         assert!(!AlgoKind::SsspDelta.fusable());
         assert!(!AlgoKind::SccVgc { tau: 64 }.fusable());
         assert!(!AlgoKind::Bcc.fusable());
+    }
+
+    #[test]
+    fn route_hash_keys_on_graph_name_only() {
+        let a = JobRequest {
+            id: 1,
+            graph: "road".into(),
+            algo: AlgoKind::BfsVgc { tau: 8 },
+            source: 0,
+        };
+        let b = JobRequest {
+            id: 2,
+            graph: "road".into(),
+            algo: AlgoKind::Bcc,
+            source: 77,
+        };
+        let c = JobRequest {
+            id: 1,
+            graph: "social".into(),
+            algo: AlgoKind::BfsVgc { tau: 8 },
+            source: 0,
+        };
+        assert_eq!(a.route_hash(), b.route_hash(), "same graph, same shard");
+        assert_ne!(a.route_hash(), c.route_hash(), "FNV separates these names");
+        // Distinct names spread across a small shard count.
+        let shards: std::collections::HashSet<u64> = ["g0", "g1", "g2", "g3", "g4", "g5"]
+            .iter()
+            .map(|g| {
+                let r = JobRequest {
+                    id: 0,
+                    graph: g.to_string(),
+                    algo: AlgoKind::Bcc,
+                    source: 0,
+                };
+                r.route_hash() % 4
+            })
+            .collect();
+        assert!(shards.len() >= 2, "six names must not all collide mod 4");
     }
 
     #[test]

@@ -28,8 +28,17 @@ impl Metrics {
         Self::default()
     }
 
-    /// Increment a named counter.
+    /// Increment a named counter. Warm counters (every bump after the
+    /// first for a given name) take the fast path: no allocation, one
+    /// uncontended lock and an atomic add — this runs several times
+    /// per request on the serving hot path.
     pub fn bump(&self, name: &str, by: u64) {
+        let map = self.counters.lock().unwrap();
+        if let Some(c) = map.get(name) {
+            c.fetch_add(by, Ordering::Relaxed);
+            return;
+        }
+        drop(map);
         let mut map = self.counters.lock().unwrap();
         map.entry(name.to_string())
             .or_insert_with(|| AtomicU64::new(0))
@@ -94,6 +103,38 @@ impl Metrics {
         names
     }
 
+    /// Fold another registry into this one: counters add, latency
+    /// series concatenate. The shard server uses this to aggregate
+    /// each worker's shard-local registry into the coordinator's
+    /// global one — per-shard counters (`shard_dispatches`,
+    /// `window_waits`, `window_timeouts`, `registry_snapshots`, ...)
+    /// sum across shards. Both sides' values are snapshotted before
+    /// writing, so merging is safe while either registry is still
+    /// being written to (merging a registry into itself doubles it —
+    /// don't).
+    pub fn merge(&self, other: &Metrics) {
+        let counters: Vec<(String, u64)> = {
+            let theirs = other.counters.lock().unwrap();
+            theirs
+                .iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect()
+        };
+        for (name, v) in counters {
+            if v > 0 {
+                self.bump(&name, v);
+            }
+        }
+        let series: Vec<(String, Vec<f64>)> = {
+            let theirs = other.series.lock().unwrap();
+            theirs.iter().map(|(k, xs)| (k.clone(), xs.clone())).collect()
+        };
+        let mut mine = self.series.lock().unwrap();
+        for (name, xs) in series {
+            mine.entry(name).or_default().extend(xs);
+        }
+    }
+
     /// Fraction of batch queries routed to the fused multi-source path
     /// (errors included on both sides; 0.0 when no batch queries ran
     /// yet).
@@ -151,6 +192,29 @@ mod tests {
             m.counter_names(),
             vec!["queries_fused".to_string(), "queries_solo".to_string()]
         );
+    }
+
+    #[test]
+    fn merge_sums_counters_and_concatenates_series() {
+        let global = Metrics::new();
+        global.bump("jobs_executed", 2);
+        global.observe("latency", Duration::from_millis(1));
+        let shard_a = Metrics::new();
+        shard_a.bump("jobs_executed", 3);
+        shard_a.bump("shard_dispatches", 1);
+        shard_a.observe("latency", Duration::from_millis(2));
+        let shard_b = Metrics::new();
+        shard_b.bump("jobs_executed", 5);
+        shard_b.bump("window_timeouts", 4);
+        global.merge(&shard_a);
+        global.merge(&shard_b);
+        assert_eq!(global.counter("jobs_executed"), 10);
+        assert_eq!(global.counter("shard_dispatches"), 1);
+        assert_eq!(global.counter("window_timeouts"), 4);
+        assert_eq!(global.summary("latency").unwrap().count, 2);
+        // Sources are untouched.
+        assert_eq!(shard_a.counter("jobs_executed"), 3);
+        assert_eq!(shard_b.counter("jobs_executed"), 5);
     }
 
     #[test]

@@ -1,25 +1,41 @@
 //! L3 analysis-job coordinator: the serving layer around the library.
 //!
-//! A [`Coordinator`] owns loaded graphs (with lazily materialized
-//! transposes/symmetrizations), the worker pool, a pool of warm
+//! A [`Coordinator`] owns the graph registry (snapshot-published
+//! [`directory::GraphDirectory`] with lazily materialized
+//! transposes/symmetrizations), a pool of warm
 //! [`crate::algo::QueryWorkspace`]s (the zero-allocation query
 //! engine), an optional [`crate::runtime::DenseEngine`] for
 //! dense-block queries, and a metrics registry. Clients submit
-//! [`job::JobRequest`]s; the server loop batches requests *by graph*
+//! [`job::JobRequest`]s; serving batches requests *by graph*
 //! (amortizing cache warmth the way an inference router batches by
-//! model), executes them on the pool through the workspace-carrying
-//! algorithm entry points, and reports per-job latency plus
-//! queue/throughput metrics.
+//! model), executes them through the workspace-carrying algorithm
+//! entry points, and reports per-job latency plus queue/throughput
+//! metrics.
+//!
+//! Two serving front ends share one execution core:
+//!
+//! * [`Coordinator::serve`] / [`Coordinator::serve_windowed`] — the
+//!   single-threaded channel loop.
+//! * [`shard::ShardServer`] — the sharded multi-worker subsystem: a
+//!   router hashes each request's graph name to one of N shard
+//!   workers, each owning a lock-free hot path (shard-local workspace
+//!   pool, shard-local metrics, cached registry snapshot) and a
+//!   fusion-window admission queue that accumulates fusable
+//!   same-(graph, algo, τ) requests before dispatching a batch.
 //!
 //! Python never appears here: the dense path executes the AOT
 //! artifact inventory through the in-tree engine.
 
 pub mod dense;
+pub mod directory;
 pub mod job;
 pub mod metrics;
 pub mod server;
+pub mod shard;
 
 pub use dense::DenseBlock;
+pub use directory::{GraphDirectory, GraphMap, LoadedGraph, SnapshotCache};
 pub use job::{AlgoKind, JobOutput, JobRequest, JobResult};
 pub use metrics::{Metrics, Summary};
-pub use server::{workload, Coordinator, LoadedGraph};
+pub use server::{workload, Coordinator};
+pub use shard::{ShardConfig, ShardServer};

@@ -10,78 +10,56 @@
 //! workspace has served one query per graph size, steady-state queries
 //! perform no O(n)/O(m) allocation at all.
 //!
-//! On top of that, [`Coordinator::run_batch`] **fuses** queries:
-//! requests are grouped by (graph, algorithm) — same-graph batching
-//! for cache warmth, as before — and groups whose algorithm has a
-//! batched multi-source engine ([`AlgoKind::fusable`]) run through
+//! On top of that, [`ExecCore::run_batch_from`] **fuses** queries:
+//! requests
+//! are grouped by (graph, algorithm) — same-graph batching for cache
+//! warmth, as before — and groups whose algorithm has a batched
+//! multi-source engine ([`AlgoKind::fusable`]) run through
 //! [`crate::algo::multi`] in chunks of up to 64 sources per frontier
 //! walk. Per-lane results are demultiplexed (a parallel strided
 //! export) back into per-request [`JobResult`]s in submission order;
 //! fusion is invisible to clients except in the `queries_fused` /
 //! `queries_solo` metrics and the latency column.
+//!
+//! Execution itself lives in [`ExecCore`], which owns **no** shared
+//! state: it borrows an engine and a metrics registry and is handed a
+//! workspace and a graph-lookup function per call. [`Coordinator`]
+//! drives it with the global Mutex-guarded pool and registry; the
+//! sharded server ([`super::shard`]) drives the same core with
+//! shard-local pools and lock-free registry snapshots, so both paths
+//! execute — and meter — queries identically.
 
 use super::dense::DenseBlock;
+use super::directory::{GraphDirectory, LoadedGraph};
 use super::job::{AlgoKind, JobOutput, JobRequest, JobResult};
 use super::metrics::Metrics;
-use crate::algo::workspace::QueryWorkspace;
+use super::shard::admit_batch;
+use crate::algo::workspace::{QueryWorkspace, WorkspacePool};
 use crate::algo::{bcc, bfs, multi, scc, sssp, UNREACHED};
 use crate::bail;
 use crate::error::{Context, Error, Result};
-use crate::graph::Graph;
 use crate::runtime::EngineHandle;
 use crate::{INF, V};
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Most sources per fused frontier walk (one mask bit each — see
 /// [`crate::algo::multi`]).
-const MAX_FUSE: usize = crate::algo::multi::MAX_LANES;
-
-/// A registered graph with lazily materialized derived views.
-pub struct LoadedGraph {
-    pub graph: Arc<Graph>,
-    transpose: OnceLock<Arc<Graph>>,
-    symmetrized: OnceLock<Arc<Graph>>,
-}
-
-impl LoadedGraph {
-    pub fn new(graph: Graph) -> Self {
-        LoadedGraph {
-            graph: Arc::new(graph),
-            transpose: OnceLock::new(),
-            symmetrized: OnceLock::new(),
-        }
-    }
-
-    /// Transpose, computed once on first use.
-    pub fn transpose(&self) -> &Graph {
-        if self.graph.symmetric {
-            return &self.graph;
-        }
-        self.transpose
-            .get_or_init(|| Arc::new(self.graph.transpose()))
-    }
-
-    /// Symmetrized view (identity for already-symmetric graphs).
-    pub fn symmetrized(&self) -> &Graph {
-        if self.graph.symmetric {
-            return &self.graph;
-        }
-        self.symmetrized
-            .get_or_init(|| Arc::new(self.graph.symmetrize()))
-    }
-}
+pub(crate) const MAX_FUSE: usize = crate::algo::multi::MAX_LANES;
 
 /// The analysis-job coordinator.
 pub struct Coordinator {
-    graphs: Mutex<HashMap<String, Arc<LoadedGraph>>>,
+    /// Snapshot-published graph registry; shard workers read it
+    /// through lock-free [`super::directory::SnapshotCache`]s.
+    pub(crate) directory: GraphDirectory,
     engine: Option<EngineHandle>,
     /// Warm per-worker query workspaces: checked out per request,
     /// returned after, so the steady-state serving path performs zero
-    /// O(n) allocation (see module docs).
-    workspaces: Mutex<Vec<QueryWorkspace>>,
+    /// O(n) allocation (see module docs). Shard workers bypass this
+    /// Mutex entirely with pools of their own.
+    workspaces: Mutex<WorkspacePool>,
     pub metrics: Metrics,
 }
 
@@ -95,9 +73,9 @@ impl Coordinator {
     /// Coordinator without a dense engine (sparse algorithms only).
     pub fn new() -> Self {
         Coordinator {
-            graphs: Mutex::new(HashMap::new()),
+            directory: GraphDirectory::new(),
             engine: None,
-            workspaces: Mutex::new(Vec::new()),
+            workspaces: Mutex::new(WorkspacePool::new()),
             metrics: Metrics::new(),
         }
     }
@@ -105,50 +83,158 @@ impl Coordinator {
     /// Coordinator with the dense engine attached.
     pub fn with_engine(engine: EngineHandle) -> Self {
         Coordinator {
-            graphs: Mutex::new(HashMap::new()),
+            directory: GraphDirectory::new(),
             engine: Some(engine),
-            workspaces: Mutex::new(Vec::new()),
+            workspaces: Mutex::new(WorkspacePool::new()),
             metrics: Metrics::new(),
+        }
+    }
+
+    /// The graph registry (shard workers cache snapshots of it).
+    pub fn directory(&self) -> &GraphDirectory {
+        &self.directory
+    }
+
+    /// The dense engine, if one is attached.
+    pub(crate) fn engine(&self) -> Option<&EngineHandle> {
+        self.engine.as_ref()
+    }
+
+    /// The execution core bound to this coordinator's engine and
+    /// global metrics.
+    pub(crate) fn core(&self) -> ExecCore<'_> {
+        ExecCore {
+            engine: self.engine.as_ref(),
+            metrics: &self.metrics,
         }
     }
 
     /// Check a workspace out of the pool (fresh if none is warm).
     fn checkout_workspace(&self) -> QueryWorkspace {
-        self.workspaces
-            .lock()
-            .unwrap()
-            .pop()
-            .unwrap_or_else(|| {
-                self.metrics.bump("workspaces_created", 1);
-                QueryWorkspace::new()
-            })
+        let mut pool = self.workspaces.lock().unwrap();
+        if pool.is_empty() {
+            self.metrics.bump("workspaces_created", 1);
+        }
+        pool.checkout()
     }
 
     /// Return a workspace to the pool for the next request.
     fn checkin_workspace(&self, ws: QueryWorkspace) {
-        self.workspaces.lock().unwrap().push(ws);
+        self.workspaces.lock().unwrap().checkin(ws);
     }
 
-    /// Register a graph under `name` (replaces any previous one).
-    pub fn load_graph(&self, name: &str, graph: Graph) {
-        self.graphs
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), Arc::new(LoadedGraph::new(graph)));
+    /// Number of idle workspaces in the global pool (tests/metrics).
+    pub fn idle_workspaces(&self) -> usize {
+        self.workspaces.lock().unwrap().len()
+    }
+
+    /// Register a graph under `name` (replaces any previous one) by
+    /// publishing a new registry snapshot.
+    pub fn load_graph(&self, name: &str, graph: crate::graph::Graph) {
+        self.directory.publish(name, graph);
         self.metrics.bump("graphs_loaded", 1);
     }
 
     /// Fetch a registered graph.
     pub fn graph(&self, name: &str) -> Option<Arc<LoadedGraph>> {
-        self.graphs.lock().unwrap().get(name).cloned()
+        self.directory.lookup(name)
     }
 
     /// Execute one request immediately (no queueing).
     pub fn execute(&self, req: &JobRequest) -> Result<JobResult> {
+        let mut ws = self.checkout_workspace();
+        let res = self.core().execute_one(req, self.graph(&req.graph), &mut ws);
+        self.checkin_workspace(ws);
+        res
+    }
+
+    /// Run a batch: requests grouped by (graph, algorithm) —
+    /// same-graph batching for cache warmth, same-algorithm grouping
+    /// for multi-source fusion — results returned in submission order.
+    /// See [`ExecCore::run_batch_from`].
+    pub fn run_batch(&self, reqs: &[JobRequest]) -> Vec<Result<JobResult>> {
+        self.run_batch_from(Instant::now(), reqs)
+    }
+
+    /// [`Coordinator::run_batch`] with an explicit latency epoch: the
+    /// serving loops pass the head request's arrival time so reported
+    /// latencies include the fusion-window wait.
+    fn run_batch_from(&self, t0: Instant, reqs: &[JobRequest]) -> Vec<Result<JobResult>> {
+        let mut ws = self.checkout_workspace();
+        let out = self
+            .core()
+            .run_batch_from(t0, reqs, |name| self.graph(name), &mut ws);
+        self.checkin_workspace(ws);
+        out
+    }
+
+    /// Serving loop: drain the request channel, batch what is
+    /// immediately available (up to `max_batch`), execute, respond.
+    /// Returns when the request channel closes. Equivalent to
+    /// [`Coordinator::serve_windowed`] with a zero fusion window.
+    pub fn serve(&self, rx: Receiver<JobRequest>, tx: Sender<JobResult>, max_batch: usize) {
+        self.serve_windowed(rx, tx, max_batch, Duration::ZERO);
+    }
+
+    /// Serving loop with a fusion-window admission queue: when the
+    /// head request is fusable and `window` is nonzero, wait up to the
+    /// window deadline draining the channel to accumulate same-(graph,
+    /// algo, τ) lanes before dispatching; non-fusable heads fall
+    /// through immediately (see [`super::shard::admit_batch`]).
+    ///
+    /// **Shutdown invariant:** when the request channel closes
+    /// mid-window, requests already drained into the current batch are
+    /// still executed and answered — closing the channel never drops
+    /// accepted work. Failures are answered too, as
+    /// [`JobOutput::Failed`] results carrying the request id.
+    pub fn serve_windowed(
+        &self,
+        rx: Receiver<JobRequest>,
+        tx: Sender<JobResult>,
+        max_batch: usize,
+        window: Duration,
+    ) {
+        let max_batch = max_batch.max(1);
+        loop {
+            // Block for the first request.
+            let Ok(first) = rx.recv() else { return };
+            // Latency epoch: the head request is waiting from here on,
+            // so the fusion-window wait counts toward its latency.
+            let t0 = Instant::now();
+            let mut batch = vec![first];
+            admit_batch(&rx, &mut batch, max_batch, window, &self.metrics);
+            self.metrics.bump("batched_requests", batch.len() as u64);
+            let results = self.run_batch_from(t0, &batch);
+            for (req, res) in batch.iter().zip(results) {
+                let jr = answer(req, res, t0, &self.metrics);
+                if tx.send(jr).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// The request-execution core: algorithm dispatch, batching and
+/// fusion, decoupled from any particular workspace pool or registry.
+/// Holds no shared state of its own — callers hand it a workspace and
+/// a graph-lookup function, so the shard hot path runs it without
+/// taking a single Mutex.
+pub(crate) struct ExecCore<'a> {
+    pub engine: Option<&'a EngineHandle>,
+    pub metrics: &'a Metrics,
+}
+
+impl ExecCore<'_> {
+    /// Execute one request against an already-resolved graph.
+    pub(crate) fn execute_one(
+        &self,
+        req: &JobRequest,
+        lg: Option<Arc<LoadedGraph>>,
+        ws: &mut QueryWorkspace,
+    ) -> Result<JobResult> {
         let submitted = Instant::now();
-        let lg = self
-            .graph(&req.graph)
-            .with_context(|| format!("unknown graph {:?}", req.graph))?;
+        let lg = lg.with_context(|| format!("unknown graph {:?}", req.graph))?;
         let g = &*lg.graph;
         if matches!(
             req.algo,
@@ -162,18 +248,16 @@ impl Coordinator {
             bail!("source {} out of range (n={})", req.source, g.n());
         }
 
-        // Answer out of a warm workspace: the steady-state query path
-        // performs zero O(n)/O(m) allocation (epoch-stamped scratch,
-        // reused bags and export buffers).
-        let mut ws = self.checkout_workspace();
+        // Answer out of the caller's warm workspace: the steady-state
+        // query path performs zero O(n)/O(m) allocation (epoch-stamped
+        // scratch, reused bags and export buffers).
         let exec_start = Instant::now();
-        let output = self.run_algo(req, &lg, &mut ws);
+        let output = self.run_algo(req, &lg, ws)?;
         let exec = exec_start.elapsed();
-        self.checkin_workspace(ws);
-        let output = output?;
         let latency = submitted.elapsed();
         self.metrics.bump("jobs_executed", 1);
-        self.metrics.observe(&format!("exec/{}", req.algo.label()), exec);
+        self.metrics
+            .observe(&format!("exec/{}", req.algo.label()), exec);
         Ok(JobResult {
             id: req.id,
             algo: req.algo.label(),
@@ -231,7 +315,6 @@ impl Coordinator {
             AlgoKind::DenseClosure { block } => {
                 let engine = self
                     .engine
-                    .as_ref()
                     .context("no dense engine attached (run `make artifacts`)")?;
                 let tile = engine
                     .closure_tiles()
@@ -252,15 +335,22 @@ impl Coordinator {
         })
     }
 
-    /// Run a batch: requests grouped by (graph, algorithm) —
-    /// same-graph batching for cache warmth, same-algorithm grouping
-    /// for multi-source fusion — results returned in submission order.
-    /// Groups of ≥ 2 fusable requests ([`AlgoKind::fusable`]) are
-    /// answered by one batched frontier walk per ≤ 64 sources;
-    /// everything else runs solo through [`Coordinator::execute`].
-    /// Latencies include the in-batch queueing delay.
-    pub fn run_batch(&self, reqs: &[JobRequest]) -> Vec<Result<JobResult>> {
-        let t0 = Instant::now();
+    /// Run a batch against `lookup`: requests grouped by (graph,
+    /// algorithm), groups of ≥ 2 fusable requests
+    /// ([`AlgoKind::fusable`]) answered by one batched frontier walk
+    /// per ≤ 64 sources, everything else run solo — results in
+    /// submission order. Latencies are measured from `t0`: the
+    /// serving loops pass the head request's arrival time, so the
+    /// fusion-window wait and in-batch queueing delay are both
+    /// included. The whole batch shares the one `ws` (batch execution
+    /// is serial on the calling worker).
+    pub(crate) fn run_batch_from(
+        &self,
+        t0: Instant,
+        reqs: &[JobRequest],
+        lookup: impl Fn(&str) -> Option<Arc<LoadedGraph>>,
+        ws: &mut QueryWorkspace,
+    ) -> Vec<Result<JobResult>> {
         // Group indices by (graph, algo), preserving order within
         // groups. The derived AlgoKind equality keys parameterized
         // variants by their parameter, so e.g. two BfsVgc τ values
@@ -275,11 +365,12 @@ impl Coordinator {
         for key in order {
             let idxs = &groups[&key];
             if key.1.fusable() && idxs.len() >= 2 {
-                self.run_fused_group(reqs, idxs, &mut results);
+                let lg = lookup(&reqs[idxs[0]].graph);
+                self.run_fused_group(reqs, idxs, lg, ws, &mut results);
             } else {
                 for &i in idxs {
                     self.metrics.bump("queries_solo", 1);
-                    results[i] = Some(self.execute(&reqs[i]));
+                    results[i] = Some(self.execute_one(&reqs[i], lookup(&reqs[i].graph), ws));
                 }
             }
         }
@@ -304,14 +395,15 @@ impl Coordinator {
         &self,
         reqs: &[JobRequest],
         idxs: &[usize],
+        lg: Option<Arc<LoadedGraph>>,
+        ws: &mut QueryWorkspace,
         results: &mut [Option<Result<JobResult>>],
     ) {
-        let req0 = &reqs[idxs[0]];
-        let algo = req0.algo;
+        let algo = reqs[idxs[0]].algo;
         // queries_fused counts every request *routed* to the fused
         // path (errors included), so queries_fused + queries_solo
         // always equals the batch size and fused_fraction stays exact.
-        let Some(lg) = self.graph(&req0.graph) else {
+        let Some(lg) = lg else {
             for &i in idxs {
                 self.metrics.bump("queries_fused", 1);
                 results[i] = Some(Err(Error::msg(format!(
@@ -339,7 +431,6 @@ impl Coordinator {
         for chunk in valid.chunks(MAX_FUSE) {
             let seeds: Vec<V> = chunk.iter().map(|&i| reqs[i].source).collect();
             let lanes = seeds.len();
-            let mut ws = self.checkout_workspace();
             let exec_start = Instant::now();
             match algo {
                 AlgoKind::BfsVgc { tau } => {
@@ -387,37 +478,37 @@ impl Coordinator {
             }
             self.metrics.bump("fused_walks", 1);
             self.metrics.bump("fused_lanes", lanes as u64);
-            self.checkin_workspace(ws);
         }
     }
+}
 
-    /// Serving loop: drain the request channel, batch what is
-    /// immediately available (up to `max_batch`), execute, respond.
-    /// Returns when the request channel closes.
-    pub fn serve(&self, rx: Receiver<JobRequest>, tx: Sender<JobResult>, max_batch: usize) {
-        loop {
-            // Block for the first request.
-            let Ok(first) = rx.recv() else { return };
-            let mut batch = vec![first];
-            while batch.len() < max_batch {
-                match rx.try_recv() {
-                    Ok(r) => batch.push(r),
-                    Err(_) => break,
-                }
-            }
-            self.metrics.bump("batched_requests", batch.len() as u64);
-            for res in self.run_batch(&batch) {
-                match res {
-                    Ok(r) => {
-                        if tx.send(r).is_err() {
-                            return;
-                        }
-                    }
-                    Err(e) => {
-                        self.metrics.bump("errors", 1);
-                        eprintln!("coordinator: job failed: {e:#}");
-                    }
-                }
+/// Turn one batch slot into the response sent to the client: failures
+/// become [`JobOutput::Failed`] results carrying the request's id (and
+/// bump the `errors` counter), so every accepted request is answered
+/// and clients correlating responses by id never hang on an error.
+pub(crate) fn answer(
+    req: &JobRequest,
+    res: Result<JobResult>,
+    t0: Instant,
+    metrics: &Metrics,
+) -> JobResult {
+    match res {
+        Ok(r) => r,
+        Err(e) => {
+            metrics.bump("errors", 1);
+            let latency = t0.elapsed();
+            // Failures count toward the latency series too — a
+            // half-failing workload must not report the percentiles
+            // of its successes only.
+            metrics.observe("latency", latency);
+            JobResult {
+                id: req.id,
+                algo: req.algo.label(),
+                output: JobOutput::Failed {
+                    error: format!("{e:#}"),
+                },
+                exec: Duration::ZERO,
+                latency,
             }
         }
     }
@@ -610,7 +701,7 @@ mod tests {
         // Serial queries always find the previously checked-in
         // workspace: exactly one is ever created.
         assert_eq!(c.metrics.counter("workspaces_created"), 1);
-        assert_eq!(c.workspaces.lock().unwrap().len(), 1);
+        assert_eq!(c.idle_workspaces(), 1);
     }
 
     #[test]
@@ -774,6 +865,47 @@ mod tests {
         server.join().unwrap();
         got.sort();
         assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serve_windowed_answers_requests_queued_before_shutdown() {
+        // Regression: the request channel closes while the fusion
+        // window is still draining — everything already queued must be
+        // executed and answered, and the server must return promptly
+        // instead of sleeping out the window.
+        let c = Arc::new(coord_with_graphs());
+        let (req_tx, req_rx) = std::sync::mpsc::channel();
+        let (res_tx, res_rx) = std::sync::mpsc::channel();
+        for i in 0..5u64 {
+            req_tx
+                .send(JobRequest {
+                    id: i,
+                    graph: "road".into(),
+                    algo: AlgoKind::BfsVgc { tau: 64 },
+                    source: (i % 5) as V,
+                })
+                .unwrap();
+        }
+        // Close before the server even starts: the head recv succeeds
+        // (messages are buffered) and the window hits Disconnected.
+        drop(req_tx);
+        let t0 = Instant::now();
+        let server = {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                c.serve_windowed(req_rx, res_tx, 64, Duration::from_secs(30))
+            })
+        };
+        let mut got: Vec<u64> = res_rx.iter().map(|r| r.id).collect();
+        server.join().unwrap();
+        got.sort();
+        assert_eq!(got, (0..5).collect::<Vec<_>>(), "no request dropped");
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "shutdown must not sleep out the fusion window"
+        );
+        // All five fused into one walk by the window admission.
+        assert_eq!(c.metrics.counter("queries_fused"), 5);
     }
 
     #[test]

@@ -1,0 +1,363 @@
+//! `coordinator::shard` — the sharded multi-worker serving subsystem.
+//!
+//! One serving thread pulling one channel through two global Mutexes
+//! caps delivered throughput long before the kernels do, and it only
+//! ever fuses requests that happen to be queued at the same instant.
+//! This module turns the library into a multi-threaded server:
+//!
+//! ```text
+//!             requests                    results
+//!                │                           ▲
+//!                ▼                           │
+//!            ┌────────┐   hash(graph)   ┌────┴────┐
+//!            │ router │ ───────────────▶│ shard i │──┐
+//!            └────────┘                 └─────────┘  │ fusion window
+//!                                       │ snapshot │ │ → run_batch
+//!                                       │ ws pool  │ │ → demux
+//!                                       │ metrics  │◀┘
+//!                                       └──────────┘   × N workers
+//! ```
+//!
+//! * **Router** — [`ShardServer::serve`] hashes each request's graph
+//!   name ([`JobRequest::route_hash`], FNV-1a) and forwards it to one
+//!   of N shard workers. Same graph ⇒ same shard, so every request
+//!   that *could* fuse is visible to one fusion window, and each
+//!   graph's derived views (transpose, symmetrization) and warm
+//!   workspace arrays stay hot in one worker's cache.
+//! * **Shard worker** — owns everything it touches per request, so
+//!   the hot path takes **zero shared Mutex locks** (the shard-local
+//!   [`Metrics`] registry locks only its own, uncontended Mutex): a
+//!   plain-`Vec` [`WorkspacePool`], shard-local metrics (merged
+//!   into the coordinator's global registry when serving ends), and a
+//!   [`SnapshotCache`] of the graph registry refreshed only when the
+//!   [`GraphDirectory`] version counter moves (one atomic load per
+//!   dispatch; `load_graph` publishes new snapshots without ever
+//!   blocking request execution).
+//! * **Fusion-window admission** ([`admit_batch`]) — when the head
+//!   request is fusable and the window is nonzero, the worker keeps
+//!   draining its inbox until the window deadline, the batch cap, or
+//!   64 same-(graph, algo, τ) lanes accumulate — then dispatches one
+//!   [`ExecCore::run_batch_from`], which fuses the group into batched
+//!   multi-source walks and demultiplexes per-lane results in
+//!   submission order. Non-fusable heads fall through immediately
+//!   (they only pick up what is already queued). When the request
+//!   channel closes mid-window, the partial batch still executes:
+//!   accepted work is never dropped. Every accepted request is also
+//!   *answered* — failures come back on the result channel as
+//!   [`Failed`](super::job::JobOutput::Failed) outputs carrying the
+//!   request id (with the `errors` counter bumped), so clients
+//!   correlating responses by id never hang on an error.
+//!
+//! Per-shard counters: `shard_dispatches`, `window_waits`,
+//! `window_timeouts`, `registry_snapshots`, `graph_seen/<name>`, plus
+//! everything [`ExecCore`] meters (`queries_fused`, `jobs_executed`,
+//! ...). [`Metrics::merge`] folds them into the global registry;
+//! [`ShardServer::serve`] also returns the per-shard registries so
+//! callers can inspect placement and balance.
+//!
+//! [`ExecCore`]: super::server::ExecCore
+//! [`ExecCore::run_batch_from`]: super::server::ExecCore::run_batch_from
+//! [`GraphDirectory`]: super::directory::GraphDirectory
+
+use super::directory::SnapshotCache;
+use super::job::{JobRequest, JobResult};
+use super::metrics::Metrics;
+use super::server::{answer, Coordinator, ExecCore, MAX_FUSE};
+use crate::algo::workspace::WorkspacePool;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for the sharded server.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Number of shard workers (default: the worker-pool width).
+    pub shards: usize,
+    /// Fusion-window deadline: how long a shard waits for more
+    /// fusable requests before dispatching (default 200µs; zero
+    /// disables waiting entirely).
+    pub fusion_window: Duration,
+    /// Most requests admitted into one dispatched batch.
+    pub max_batch: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: crate::parallel::num_threads(),
+            fusion_window: Duration::from_micros(200),
+            max_batch: 64,
+        }
+    }
+}
+
+/// The sharded serving front end over a [`Coordinator`]'s registry,
+/// engine and metrics (see module docs).
+pub struct ShardServer {
+    coord: Arc<Coordinator>,
+    config: ShardConfig,
+}
+
+impl ShardServer {
+    pub fn new(coord: Arc<Coordinator>, config: ShardConfig) -> Self {
+        ShardServer { coord, config }
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &ShardConfig {
+        &self.config
+    }
+
+    /// Serve until the request channel closes: route every request to
+    /// its graph's shard, run N shard workers with fusion-window
+    /// admission, and answer on `tx` (shards interleave, so results
+    /// are unordered across graphs; per-shard they follow dispatch
+    /// order). Returns the per-shard metrics registries after merging
+    /// each into the coordinator's global metrics.
+    pub fn serve(&self, rx: Receiver<JobRequest>, tx: Sender<JobResult>) -> Vec<Metrics> {
+        let n = self.config.shards.max(1);
+        let coord = &*self.coord;
+        let config = &self.config;
+        let per_shard: Vec<Metrics> = std::thread::scope(|s| {
+            let mut inboxes = Vec::with_capacity(n);
+            let mut workers = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (shard_tx, shard_rx) = std::sync::mpsc::channel::<JobRequest>();
+                let res_tx = tx.clone();
+                inboxes.push(shard_tx);
+                workers.push(s.spawn(move || {
+                    let metrics = Metrics::new();
+                    shard_loop(coord, config, shard_rx, res_tx, &metrics);
+                    metrics
+                }));
+            }
+            // The workers hold clones; dropping ours lets the result
+            // channel close when the last shard finishes.
+            drop(tx);
+            // The router: one hash per request, no locks held.
+            for req in rx {
+                let shard = (req.route_hash() % n as u64) as usize;
+                if inboxes[shard].send(req).is_err() {
+                    break; // shard died (results receiver hung up)
+                }
+            }
+            drop(inboxes);
+            workers
+                .into_iter()
+                .map(|w| w.join().expect("shard worker panicked"))
+                .collect()
+        });
+        for m in &per_shard {
+            self.coord.metrics.merge(m);
+        }
+        per_shard
+    }
+}
+
+/// One shard worker: fusion-window admission over its inbox, batch
+/// execution against shard-local state, results answered in dispatch
+/// order. Exits when the inbox closes (after draining it) or when the
+/// result channel hangs up.
+fn shard_loop(
+    coord: &Coordinator,
+    config: &ShardConfig,
+    rx: Receiver<JobRequest>,
+    tx: Sender<JobResult>,
+    metrics: &Metrics,
+) {
+    let mut cache = SnapshotCache::new();
+    let mut pool = WorkspacePool::new();
+    let core = ExecCore {
+        engine: coord.engine(),
+        metrics,
+    };
+    let max_batch = config.max_batch.max(1);
+    while let Ok(first) = rx.recv() {
+        // Latency epoch: the head request waits from here on, so the
+        // fusion-window wait counts toward reported latency.
+        let t0 = Instant::now();
+        let mut batch = vec![first];
+        admit_batch(&rx, &mut batch, max_batch, config.fusion_window, metrics);
+        metrics.bump("shard_dispatches", 1);
+        // One freshness check per dispatch (an atomic load; the
+        // registry Mutex only on an actual publish), so the whole
+        // batch resolves graphs against one immutable snapshot and
+        // request execution stays lock-free.
+        if cache.refresh(coord.directory()) {
+            metrics.bump("registry_snapshots", 1);
+        }
+        // Placement counters (`graph_seen/<name>`), once per distinct
+        // *registered* graph per dispatch: bounded metric cardinality
+        // (client-supplied names that resolve to nothing get no
+        // counter) and O(distinct graphs), not O(requests), metric
+        // work per batch.
+        let mut seen: Vec<(&str, u64)> = Vec::new();
+        for r in &batch {
+            if let Some(entry) = seen.iter_mut().find(|(g, _)| *g == r.graph.as_str()) {
+                entry.1 += 1;
+            } else if cache.cached(&r.graph).is_some() {
+                seen.push((r.graph.as_str(), 1));
+            }
+        }
+        for (g, count) in seen {
+            metrics.bump(&format!("graph_seen/{g}"), count);
+        }
+        if pool.is_empty() {
+            metrics.bump("workspaces_created", 1);
+        }
+        let mut ws = pool.checkout();
+        let results = core.run_batch_from(t0, &batch, |name| cache.cached(name), &mut ws);
+        pool.checkin(ws);
+        for (req, res) in batch.iter().zip(results) {
+            let jr = answer(req, res, t0, metrics);
+            if tx.send(jr).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Fusion-window admission: grow `batch` (which already holds the
+/// just-received head request) from `rx`.
+///
+/// * Fusable head and a nonzero `window`: block-drain the channel up
+///   to the window deadline, stopping early at `max_batch` requests or
+///   once [`MAX_FUSE`] requests share the head's (graph, algo, τ) key
+///   — a full fused walk is ready, waiting longer buys nothing.
+/// * Otherwise: fall through immediately, picking up only what is
+///   already queued (the pre-window behavior).
+///
+/// If the channel disconnects mid-window, the drained batch is left
+/// intact for the caller to execute — shutdown never drops accepted
+/// requests.
+pub(crate) fn admit_batch(
+    rx: &Receiver<JobRequest>,
+    batch: &mut Vec<JobRequest>,
+    max_batch: usize,
+    window: Duration,
+    metrics: &Metrics,
+) {
+    // A window can only open when there is capacity to admit into
+    // (max_batch > 1) — otherwise window_waits would count waits that
+    // never happen (e.g. the unbatched max_batch=1 baseline).
+    if !window.is_zero() && max_batch > 1 && batch[0].algo.fusable() {
+        metrics.bump("window_waits", 1);
+        let deadline = Instant::now() + window;
+        let head_algo = batch[0].algo;
+        let head_graph = batch[0].graph.clone();
+        let mut same_key = 1usize;
+        while batch.len() < max_batch && same_key < MAX_FUSE {
+            let now = Instant::now();
+            if now >= deadline {
+                metrics.bump("window_timeouts", 1);
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => {
+                    if r.algo == head_algo && r.graph == head_graph {
+                        same_key += 1;
+                    }
+                    batch.push(r);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    metrics.bump("window_timeouts", 1);
+                    break;
+                }
+                // Senders gone and the buffer is empty: dispatch what
+                // we have (the caller still executes this batch).
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    } else {
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AlgoKind;
+    use crate::V;
+
+    fn req(id: u64, graph: &str, algo: AlgoKind) -> JobRequest {
+        JobRequest {
+            id,
+            graph: graph.into(),
+            algo,
+            source: (id % 3) as V,
+        }
+    }
+
+    #[test]
+    fn admit_batch_without_window_takes_only_whats_queued() {
+        let m = Metrics::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..3u64 {
+            tx.send(req(i, "g", AlgoKind::BfsVgc { tau: 8 })).unwrap();
+        }
+        let mut batch = vec![req(99, "g", AlgoKind::BfsVgc { tau: 8 })];
+        admit_batch(&rx, &mut batch, 64, Duration::ZERO, &m);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(m.counter("window_waits"), 0);
+        drop(tx);
+    }
+
+    #[test]
+    fn admit_batch_nonfusable_head_falls_through() {
+        let m = Metrics::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        tx.send(req(1, "g", AlgoKind::Bcc)).unwrap();
+        let mut batch = vec![req(0, "g", AlgoKind::Bcc)];
+        let t0 = Instant::now();
+        admit_batch(&rx, &mut batch, 64, Duration::from_secs(10), &m);
+        assert!(t0.elapsed() < Duration::from_secs(5), "no window wait");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(m.counter("window_waits"), 0);
+        drop(tx);
+    }
+
+    #[test]
+    fn admit_batch_window_stops_at_full_fused_walk() {
+        let m = Metrics::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        // 70 same-key requests pre-queued: the window must dispatch at
+        // 64 same-key lanes without waiting out a long deadline.
+        for i in 0..70u64 {
+            tx.send(req(i, "g", AlgoKind::SsspRho { tau: 8 })).unwrap();
+        }
+        let mut batch = vec![req(99, "g", AlgoKind::SsspRho { tau: 8 })];
+        let t0 = Instant::now();
+        admit_batch(&rx, &mut batch, 1 << 20, Duration::from_secs(10), &m);
+        assert!(t0.elapsed() < Duration::from_secs(5), "early dispatch");
+        assert_eq!(batch.len(), MAX_FUSE, "stops at 64 same-key lanes");
+        assert_eq!(m.counter("window_waits"), 1);
+        assert_eq!(m.counter("window_timeouts"), 0);
+        drop(tx);
+    }
+
+    #[test]
+    fn admit_batch_times_out_and_survives_disconnect() {
+        let m = Metrics::new();
+        let (tx, rx) = std::sync::mpsc::channel::<JobRequest>();
+        tx.send(req(1, "g", AlgoKind::BfsVgc { tau: 8 })).unwrap();
+        let mut batch = vec![req(0, "g", AlgoKind::BfsVgc { tau: 8 })];
+        admit_batch(&rx, &mut batch, 64, Duration::from_millis(5), &m);
+        assert_eq!(batch.len(), 2, "drained the queued request");
+        assert_eq!(m.counter("window_timeouts"), 1, "then timed out");
+        // Disconnected mid-window: batch stays intact, returns fast.
+        drop(tx);
+        let (tx2, rx2) = std::sync::mpsc::channel::<JobRequest>();
+        tx2.send(req(2, "g", AlgoKind::BfsVgc { tau: 8 })).unwrap();
+        drop(tx2);
+        let mut batch2 = vec![req(0, "g", AlgoKind::BfsVgc { tau: 8 })];
+        let t0 = Instant::now();
+        admit_batch(&rx2, &mut batch2, 64, Duration::from_secs(10), &m);
+        assert_eq!(batch2.len(), 2, "buffered request drained after close");
+        assert!(t0.elapsed() < Duration::from_secs(5), "no deadline sleep");
+    }
+}

@@ -94,6 +94,49 @@
 //! `benches/ablation_multi_source.rs` checks the batched walk does
 //! strictly fewer rounds × edge scans than solo queries.
 //!
+//! ## Serving architecture
+//!
+//! Under concurrent load, delivered throughput is set by the serving
+//! layer's scheduling, not just kernel speed. The sharded server
+//! ([`coordinator::ShardServer`]) runs the pipeline
+//!
+//! ```text
+//! router → shard worker → fusion window → run_batch → demux
+//! ```
+//!
+//! * **Router** — hashes each request's graph name (stable FNV-1a,
+//!   [`coordinator::JobRequest::route_hash`]) to one of N shard
+//!   workers. Same graph ⇒ same shard: every request that could fuse
+//!   is visible to one fusion window, and a graph's derived views and
+//!   warm workspace arrays stay hot in one worker's cache.
+//! * **Shard worker** — owns its hot path outright, so steady-state
+//!   request execution takes **zero shared Mutex locks**: a
+//!   plain-`Vec` [`algo::WorkspacePool`], shard-local metrics (merged
+//!   into the global registry via [`coordinator::Metrics::merge`]
+//!   when serving ends), and a lock-free registry view (next bullet).
+//! * **Registry snapshots** — `load_graph` publishes immutable
+//!   `Arc`-swapped snapshots of the [`coordinator::GraphDirectory`]
+//!   under a writer Mutex and bumps a version counter; each shard
+//!   holds a [`coordinator::SnapshotCache`] it refreshes only when
+//!   the version moves (one atomic load per dispatch). Each
+//!   dispatched batch resolves every graph against one immutable
+//!   snapshot.
+//! * **Fusion window** — on a fusable head request the worker keeps
+//!   draining its inbox up to a deadline (default 200µs), the batch
+//!   cap, or 64 accumulated same-(graph, algo, τ) lanes, then
+//!   dispatches; non-fusable heads fall through immediately. Closing
+//!   the request channel mid-window never drops accepted work. The
+//!   `shard_dispatches` / `window_waits` / `window_timeouts` /
+//!   `registry_snapshots` counters expose the admission behavior.
+//! * **Demux** — the batch runs through the same execution core as
+//!   the single-threaded loop ([`coordinator::Coordinator::serve`]),
+//!   so fused per-lane results come back in submission order and are
+//!   bit-identical to solo execution.
+//!
+//! `benches/ablation_serve_shards.rs` measures 1-shard-no-window vs
+//! N-shard-windowed throughput on a mixed two-graph workload and
+//! asserts `fused_fraction` rises once a window is in play.
+//!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 

@@ -6,7 +6,7 @@
 //! pasgal gen    --name LJ --scale small --out lj.bin
 //! pasgal stats  --suite [--scale tiny] | --graph path.bin
 //! pasgal run    --algo bfs-vgc --graph path.bin --source 0 [--tau 512] [--p 192]
-//! pasgal serve  --demo [--requests 64]
+//! pasgal serve  --demo [--requests 64] [--shards N] [--fusion-window-us 200]
 //! pasgal table1|table3|table4|table5|sssp|fig1|fig2   [--scale tiny]
 //! pasgal calibrate
 //! ```
@@ -15,7 +15,7 @@ use pasgal::algo::{bcc, bfs, scc, sssp};
 use pasgal::bail;
 use pasgal::error::{Context, Error, Result};
 use pasgal::bench::suite as bsuite;
-use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
+use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest, ShardConfig, ShardServer};
 use pasgal::graph::gen::{suite_entry, Scale};
 use pasgal::graph::{io, stats};
 use pasgal::sim::{makespan, AlgoTrace, CostModel};
@@ -121,7 +121,9 @@ USAGE: pasgal <command> [--key value ...]
   run       --algo <bfs-vgc|bfs-frontier|bfs-diropt|scc-vgc|scc-multistep|
                     bcc-fast|sssp-rho|sssp-delta> --graph g.bin
             [--source 0] [--tau 512] [--p 192]  (report simulated speedup)
-  serve     --demo [--requests 64]   coordinator demo over a workload trace
+  serve     --demo [--requests 64]   sharded serving demo over a workload trace
+            [--shards N]             shard workers (default: pool width)
+            [--fusion-window-us U]   fusion-window deadline (default 200, 0 = off)
   table1 | table3 | table4 | table5 | sssp | fig1 | fig2   [--scale tiny]
   calibrate                          measure + print the sim cost model
 "
@@ -265,12 +267,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for r in &mut reqs {
         r.source %= 4000; // clamp into the smallest loaded graph
     }
+    let config = ShardConfig {
+        shards: args.num("shards", parallel::num_threads()),
+        fusion_window: std::time::Duration::from_micros(args.num("fusion-window-us", 200)),
+        max_batch: 64,
+    };
+    println!(
+        "sharded serving: {} shards, fusion window {:?}",
+        config.shards.max(1),
+        config.fusion_window
+    );
     let (req_tx, req_rx) = std::sync::mpsc::channel::<JobRequest>();
     let (res_tx, res_rx) = std::sync::mpsc::channel();
     let coord = std::sync::Arc::new(coord);
     let server = {
         let coord = std::sync::Arc::clone(&coord);
-        std::thread::spawn(move || coord.serve(req_rx, res_tx, 16))
+        std::thread::spawn(move || ShardServer::new(coord, config).serve(req_rx, res_tx))
     };
     let t0 = std::time::Instant::now();
     for r in reqs {
@@ -290,13 +302,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
-    server.join().unwrap();
+    let per_shard = server.join().unwrap();
     let wall = t0.elapsed();
     println!(
         "served {done} jobs in {:.2}s ({:.1} jobs/s, threads={})",
         wall.as_secs_f64(),
         done as f64 / wall.as_secs_f64(),
         parallel::num_threads()
+    );
+    let dispatches: Vec<u64> = per_shard
+        .iter()
+        .map(|m| m.counter("shard_dispatches"))
+        .collect();
+    println!(
+        "  shard dispatches: {dispatches:?}; fused fraction {:.2} \
+         (fused {} / solo {}); window waits {} timeouts {}; registry snapshots {}",
+        coord.metrics.fused_fraction(),
+        coord.metrics.counter("queries_fused"),
+        coord.metrics.counter("queries_solo"),
+        coord.metrics.counter("window_waits"),
+        coord.metrics.counter("window_timeouts"),
+        coord.metrics.counter("registry_snapshots"),
     );
     for name in coord.metrics.series_names() {
         if let Some(s) = coord.metrics.summary(&name) {

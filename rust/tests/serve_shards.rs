@@ -1,0 +1,331 @@
+//! Integration tests for the sharded serving subsystem
+//! (`coordinator::shard`): router affinity, cross-shard metrics
+//! aggregation, fusion-window batching equivalence, and shutdown
+//! draining.
+
+use pasgal::coordinator::{
+    AlgoKind, Coordinator, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
+};
+use pasgal::graph::gen;
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pasgal::V;
+
+fn req(id: u64, graph: &str, algo: AlgoKind, source: V) -> JobRequest {
+    JobRequest {
+        id,
+        graph: graph.into(),
+        algo,
+        source,
+    }
+}
+
+/// Run `reqs` through a `ShardServer` (all requests queued before the
+/// router starts) and return (per-shard metrics, results by id).
+fn serve_all(
+    coord: &Arc<Coordinator>,
+    config: ShardConfig,
+    reqs: &[JobRequest],
+) -> (Vec<pasgal::coordinator::Metrics>, HashMap<u64, JobResult>) {
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    for r in reqs {
+        req_tx.send(r.clone()).unwrap();
+    }
+    drop(req_tx);
+    let per_shard = ShardServer::new(Arc::clone(coord), config).serve(req_rx, res_tx);
+    let results: HashMap<u64, JobResult> = res_rx.iter().map(|r| (r.id, r)).collect();
+    (per_shard, results)
+}
+
+#[test]
+fn same_graph_requests_land_on_one_shard() {
+    let coord = Arc::new(Coordinator::new());
+    for (i, name) in ["g0", "g1", "g2", "g3"].iter().enumerate() {
+        coord.load_graph(name, gen::road(6, 6, i as u64 + 1));
+    }
+    let reqs: Vec<JobRequest> = (0..40u64)
+        .map(|i| {
+            req(
+                i,
+                ["g0", "g1", "g2", "g3"][(i % 4) as usize],
+                AlgoKind::BfsVgc { tau: 64 },
+                (i % 5) as V,
+            )
+        })
+        .collect();
+    let (per_shard, results) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 3,
+            fusion_window: Duration::from_millis(5),
+            max_batch: 64,
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 40, "every request answered");
+    assert_eq!(per_shard.len(), 3);
+    for g in ["g0", "g1", "g2", "g3"] {
+        let key = format!("graph_seen/{g}");
+        let owners = per_shard.iter().filter(|m| m.counter(&key) > 0).count();
+        assert_eq!(owners, 1, "graph {g} must be observed by exactly one shard");
+        let total: u64 = per_shard.iter().map(|m| m.counter(&key)).sum();
+        assert_eq!(total, 10, "graph {g} request count");
+    }
+}
+
+#[test]
+fn per_shard_metrics_sum_to_global_counters() {
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("road", gen::road(8, 12, 1));
+    coord.load_graph("social", gen::social(9, 8, 2));
+    let reqs: Vec<JobRequest> = (0..24u64)
+        .map(|i| {
+            let algo = if i % 2 == 0 {
+                AlgoKind::BfsVgc { tau: 64 }
+            } else {
+                AlgoKind::SsspRho { tau: 64 }
+            };
+            req(
+                i,
+                if i % 2 == 0 { "road" } else { "social" },
+                algo,
+                (i % 7) as V,
+            )
+        })
+        .collect();
+    let (per_shard, results) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::from_millis(5),
+            max_batch: 64,
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 24);
+
+    // Cross-shard aggregation: per-shard counters sum to the merged
+    // global value, for execution counters and shard plumbing alike.
+    for name in [
+        "jobs_executed",
+        "shard_dispatches",
+        "queries_fused",
+        "queries_solo",
+        "registry_snapshots",
+        "window_waits",
+    ] {
+        let sharded: u64 = per_shard.iter().map(|m| m.counter(name)).sum();
+        assert_eq!(
+            coord.metrics.counter(name),
+            sharded,
+            "global {name} must equal the per-shard sum"
+        );
+    }
+    assert_eq!(coord.metrics.counter("jobs_executed"), 24);
+    // Each shard that dispatched work fetched exactly one registry
+    // snapshot (the registry never changed mid-serve).
+    let active = per_shard
+        .iter()
+        .filter(|m| m.counter("shard_dispatches") > 0)
+        .count() as u64;
+    assert!(active >= 1);
+    assert_eq!(coord.metrics.counter("registry_snapshots"), active);
+    // Merged latency series cover every request.
+    assert_eq!(coord.metrics.summary("latency").unwrap().count, 24);
+}
+
+#[test]
+fn windowed_fusion_is_bit_identical_to_solo_execution() {
+    let mk_coord = || {
+        let c = Coordinator::new();
+        c.load_graph("road", gen::road(8, 12, 1));
+        c.load_graph("social", gen::social(9, 8, 2));
+        c
+    };
+    let coord = Arc::new(mk_coord());
+    let reference = mk_coord();
+    let reqs: Vec<JobRequest> = (0..48u64)
+        .map(|i| {
+            let algo = match i % 3 {
+                0 => AlgoKind::BfsVgc { tau: 64 },
+                1 => AlgoKind::SsspRho { tau: 64 },
+                _ => AlgoKind::BfsDirOpt,
+            };
+            req(
+                i,
+                if i % 2 == 0 { "road" } else { "social" },
+                algo,
+                (i % 7) as V,
+            )
+        })
+        .collect();
+    let (_, results) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::from_millis(10),
+            max_batch: 64,
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 48);
+    for r in &reqs {
+        let got = &results[&r.id];
+        let want = reference.execute(r).unwrap();
+        assert_eq!(got.output, want.output, "request {} ({:?})", r.id, r.algo);
+    }
+    // The window saw the queued same-(graph, algo, τ) requests and
+    // fused them: fusion must actually have happened, invisibly.
+    assert!(
+        coord.metrics.counter("queries_fused") > 0,
+        "nonzero window on same-graph streams must fuse"
+    );
+    assert!(coord.metrics.counter("fused_walks") > 0);
+    assert!(coord.metrics.fused_fraction() > 0.0);
+}
+
+#[test]
+fn non_fusable_requests_fall_through_the_window() {
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("road", gen::road(6, 6, 3));
+    // An absurd window: if non-fusable heads waited it out, this test
+    // would take minutes. They must dispatch immediately.
+    let reqs: Vec<JobRequest> = (0..6u64)
+        .map(|i| req(i, "road", AlgoKind::Bcc, 0))
+        .collect();
+    let t0 = Instant::now();
+    let (per_shard, results) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::from_secs(30),
+            max_batch: 4,
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 6);
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "non-fusable requests must not wait for the fusion window"
+    );
+    let waits: u64 = per_shard.iter().map(|m| m.counter("window_waits")).sum();
+    assert_eq!(waits, 0, "no window opened for non-fusable kinds");
+}
+
+#[test]
+fn shard_shutdown_answers_everything_queued() {
+    // Close the request channel before serving starts: every buffered
+    // request must still be routed, executed and answered, without
+    // sleeping out the (large) fusion window.
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("road", gen::road(8, 8, 9));
+    let reqs: Vec<JobRequest> = (0..9u64)
+        .map(|i| req(i, "road", AlgoKind::SsspRho { tau: 64 }, (i % 4) as V))
+        .collect();
+    let t0 = Instant::now();
+    let (_, results) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::from_secs(30),
+            max_batch: 64,
+        },
+        &reqs,
+    );
+    let mut ids: Vec<u64> = results.keys().copied().collect();
+    ids.sort();
+    assert_eq!(ids, (0..9).collect::<Vec<_>>(), "no request dropped");
+    assert!(t0.elapsed() < Duration::from_secs(20), "prompt shutdown");
+    for r in results.values() {
+        assert!(matches!(r.output, JobOutput::Sssp { reached, .. } if reached > 0));
+    }
+}
+
+#[test]
+fn failed_requests_are_answered_with_their_ids() {
+    // A client correlating responses by id must get an answer for
+    // every accepted request — including failures (unknown graph,
+    // out-of-range source inside a fused group).
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("road", gen::road(6, 6, 5));
+    let reqs = vec![
+        req(0, "road", AlgoKind::BfsVgc { tau: 64 }, 1),
+        req(1, "ghost", AlgoKind::BfsVgc { tau: 64 }, 0),
+        req(2, "road", AlgoKind::BfsVgc { tau: 64 }, u32::MAX - 1),
+    ];
+    let (per_shard, results) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::from_millis(5),
+            max_batch: 64,
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 3, "failures answered, not dropped");
+    assert!(matches!(results[&0].output, JobOutput::Bfs { .. }));
+    match &results[&1].output {
+        JobOutput::Failed { error } => assert!(error.contains("unknown graph")),
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    match &results[&2].output {
+        JobOutput::Failed { error } => assert!(error.contains("out of range")),
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    let errors: u64 = per_shard.iter().map(|m| m.counter("errors")).sum();
+    assert_eq!(errors, 2);
+    // Failures count toward the merged latency series (1 Ok + 2 Failed).
+    assert_eq!(coord.metrics.summary("latency").unwrap().count, 3);
+    // Unregistered names get no placement counter (bounded metric
+    // cardinality); registered ones do.
+    let ghost: u64 = per_shard.iter().map(|m| m.counter("graph_seen/ghost")).sum();
+    assert_eq!(ghost, 0);
+    let road: u64 = per_shard.iter().map(|m| m.counter("graph_seen/road")).sum();
+    assert_eq!(road, 2);
+}
+
+#[test]
+fn graphs_published_mid_serve_become_visible() {
+    // A graph loaded while the server is running is picked up by the
+    // next snapshot refresh — without restarting anything.
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("a", gen::road(6, 6, 1));
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    let server = {
+        let coord = Arc::clone(&coord);
+        std::thread::spawn(move || {
+            ShardServer::new(
+                coord,
+                ShardConfig {
+                    shards: 2,
+                    fusion_window: Duration::ZERO,
+                    max_batch: 8,
+                },
+            )
+            .serve(req_rx, res_tx)
+        })
+    };
+    req_tx
+        .send(req(0, "a", AlgoKind::BfsVgc { tau: 64 }, 0))
+        .unwrap();
+    let first = res_rx.recv().unwrap();
+    assert_eq!(first.id, 0);
+    // Publish a new graph mid-serve, then query it.
+    coord.load_graph("b", gen::road(7, 7, 2));
+    req_tx
+        .send(req(1, "b", AlgoKind::BfsVgc { tau: 64 }, 0))
+        .unwrap();
+    let second = res_rx.recv().unwrap();
+    assert_eq!(second.id, 1);
+    assert!(matches!(second.output, JobOutput::Bfs { reached, .. } if reached > 1));
+    drop(req_tx);
+    server.join().unwrap();
+    // At least two snapshot refreshes happened on shard(s) serving
+    // both publishes.
+    assert!(coord.metrics.counter("registry_snapshots") >= 2);
+}
