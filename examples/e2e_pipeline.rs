@@ -60,6 +60,9 @@ fn main() -> pasgal::error::Result<()> {
         AlgoKind::SccVgc { tau: 512 },
         AlgoKind::Bcc,
         AlgoKind::DenseClosure { block: 64 },
+        // Registry-opened algorithms: served like any built-in.
+        AlgoKind::Cc,
+        AlgoKind::Kcore,
     ];
     let mut reqs = pasgal::coordinator::workload(&["road", "social"], &algos, 96, 0xE2E);
     for r in &mut reqs {

@@ -18,15 +18,16 @@
 //! `PASGAL_SHARD_BENCH_SHARDS` (default: min(pool width, 4)).
 
 use pasgal::bench::env_usize;
-use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest, ShardConfig, ShardServer};
+use pasgal::coordinator::{AlgoKind, Coordinator, JobOutput, JobRequest, ShardConfig, ShardServer};
 use pasgal::graph::gen;
 use pasgal::V;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Mixed two-graph workload: fusable BFS/SSSP streams plus a
-/// non-fusable kind, round-robin over the graphs.
+/// Mixed two-graph workload: fusable BFS/SSSP streams plus
+/// non-fusable kinds — including a registry-opened `cc` query, so the
+/// CI smoke proves connectivity serves through the sharded pipeline.
 fn workload(requests: usize) -> Vec<JobRequest> {
     (0..requests as u64)
         .map(|i| {
@@ -34,7 +35,17 @@ fn workload(requests: usize) -> Vec<JobRequest> {
                 0 | 4 => AlgoKind::BfsVgc { tau: 512 },
                 1 | 5 => AlgoKind::SsspRho { tau: 512 },
                 2 | 6 => AlgoKind::BfsDirOpt,
-                3 => AlgoKind::BfsFrontier, // non-fusable
+                // The non-fusable slot alternates the frontier
+                // baseline with the registry-opened cc, keeping the
+                // fusable share of the mix at 7/8 (comparable with
+                // the pre-registry runs of this bench).
+                3 => {
+                    if (i / 8) % 2 == 0 {
+                        AlgoKind::BfsFrontier
+                    } else {
+                        AlgoKind::Cc
+                    }
+                }
                 _ => AlgoKind::BfsVgc { tau: 512 },
             };
             JobRequest {
@@ -51,6 +62,7 @@ struct RunStats {
     jobs_per_sec: f64,
     fused_fraction: f64,
     queries_fused: u64,
+    cc_answered: usize,
     dispatches: Vec<u64>,
 }
 
@@ -66,13 +78,21 @@ fn run_config(side: usize, reqs: &[JobRequest], config: ShardConfig) -> RunStats
     drop(req_tx);
     let t0 = Instant::now();
     let per_shard = ShardServer::new(Arc::clone(&coord), config).serve(req_rx, res_tx);
-    let done = res_rx.iter().count();
+    let mut done = 0usize;
+    let mut cc_answered = 0usize;
+    for r in res_rx.iter() {
+        done += 1;
+        if matches!(r.output, JobOutput::Cc { .. }) {
+            cc_answered += 1;
+        }
+    }
     let wall = t0.elapsed();
     assert_eq!(done, reqs.len(), "every request answered");
     RunStats {
         jobs_per_sec: done as f64 / wall.as_secs_f64().max(1e-12),
         fused_fraction: coord.metrics.fused_fraction(),
         queries_fused: coord.metrics.counter("queries_fused"),
+        cc_answered,
         dispatches: per_shard
             .iter()
             .map(|m| m.counter("shard_dispatches"))
@@ -129,7 +149,13 @@ fn main() {
     );
 
     // The claims CI keeps honest: a window fuses same-graph streams
-    // (the solo pipeline cannot), and nothing is lost on either path.
+    // (the solo pipeline cannot), nothing is lost on either path, and
+    // the registry-opened `cc` spec answers through the sharded
+    // server like any built-in.
+    assert!(
+        requests < 16 || (solo.cc_answered > 0 && sharded.cc_answered > 0),
+        "cc queries must be served on both configurations"
+    );
     assert_eq!(solo.queries_fused, 0, "batch cap 1 must never fuse");
     assert!(
         sharded.queries_fused > 0,

@@ -1,0 +1,368 @@
+//! Per-algorithm engine implementations behind the [`AlgoSpec`]
+//! registry entries — the code that used to be copy-pasted match arms
+//! in `coordinator::server` (solo execution, fused demux) and
+//! `main.rs` (traced single runs). One algorithm = one block of
+//! functions here + one registry line in [`super::registry`].
+//!
+//! Solo engines answer out of the caller's warm [`QueryWorkspace`]
+//! through the `_ws` entry points, so the steady-state serving path
+//! keeps its zero-O(n)-allocation property. Batch engines run one
+//! fused ≤ 64-lane multi-source walk ([`crate::algo::multi`]) and
+//! demultiplex per-lane summaries with the parallel strided exports.
+//! Traced engines use the classic allocate-per-call entry points and
+//! record an [`AlgoTrace`] — they exist for the CLI `run` /
+//! virtual-multicore measurement path, not for serving.
+//!
+//! [`AlgoSpec`]: super::AlgoSpec
+
+use super::{BatchEngine, EngineCtx, Params, QueryOutput};
+use crate::algo::workspace::QueryWorkspace;
+use crate::algo::{bcc, bfs, cc, kcore, multi, scc, sssp, UNREACHED};
+use crate::coordinator::dense::DenseBlock;
+use crate::coordinator::directory::LoadedGraph;
+use crate::error::{Context, Result};
+use crate::sim::AlgoTrace;
+use crate::{INF, V};
+use std::collections::HashMap;
+
+// ---------------------------------------------------------------
+// Output summarizers (shared by solo and batch demux paths).
+// ---------------------------------------------------------------
+
+fn summarize_bfs(dist: &[u32]) -> QueryOutput {
+    let mut reached = 0usize;
+    let mut ecc = 0u32;
+    for &d in dist {
+        if d != UNREACHED {
+            reached += 1;
+            ecc = ecc.max(d);
+        }
+    }
+    QueryOutput::Bfs { reached, ecc }
+}
+
+fn summarize_sssp(dist: &[f32]) -> QueryOutput {
+    let mut reached = 0usize;
+    let mut radius = 0.0f32;
+    for &d in dist {
+        if d < INF {
+            reached += 1;
+            radius = radius.max(d);
+        }
+    }
+    QueryOutput::Sssp { reached, radius }
+}
+
+/// Shared by SCC and CC summaries: (#distinct labels, largest class).
+fn label_histogram(labels: &[u32]) -> (usize, usize) {
+    let mut counts: HashMap<u32, usize> = HashMap::new();
+    for &l in labels {
+        *counts.entry(l).or_insert(0) += 1;
+    }
+    (counts.len(), counts.values().copied().max().unwrap_or(0))
+}
+
+fn summarize_scc(labels: &[u32]) -> QueryOutput {
+    let (count, largest) = label_histogram(labels);
+    QueryOutput::Scc { count, largest }
+}
+
+fn summarize_cc(labels: &[u32]) -> QueryOutput {
+    let (components, largest) = label_histogram(labels);
+    QueryOutput::Cc {
+        components,
+        largest,
+    }
+}
+
+fn summarize_kcore(core: &[u32]) -> QueryOutput {
+    let degeneracy = core.iter().copied().max().unwrap_or(0);
+    let in_max_core = core.iter().filter(|&&c| c == degeneracy).count();
+    QueryOutput::Kcore {
+        degeneracy,
+        in_max_core,
+    }
+}
+
+// ---------------------------------------------------------------
+// Parsers: keep the knobs the algorithm understands, zero the rest.
+// ---------------------------------------------------------------
+
+pub(super) fn parse_none(_args: &super::ParseArgs) -> Params {
+    Params::NONE
+}
+
+pub(super) fn parse_tau(args: &super::ParseArgs) -> Params {
+    Params::tau(args.tau)
+}
+
+pub(super) fn parse_block(args: &super::ParseArgs) -> Params {
+    Params::block(args.block)
+}
+
+// ---------------------------------------------------------------
+// BFS family.
+// ---------------------------------------------------------------
+
+pub(super) fn bfs_vgc_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    p: Params,
+    src: V,
+    ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    let g = &*lg.graph;
+    bfs::vgc_bfs_ws(g, src, p.tau, None, &mut ws.bfs);
+    ws.bfs.dist.export_into(g.n(), &mut ws.out_u32);
+    Ok(summarize_bfs(&ws.out_u32))
+}
+
+pub(super) fn bfs_vgc_traced(lg: &LoadedGraph, p: Params, src: V, trace: &mut AlgoTrace) {
+    bfs::vgc_bfs(&lg.graph, src, p.tau, Some(trace));
+}
+
+pub(super) fn bfs_vgc_batch_run(lg: &LoadedGraph, p: Params, seeds: &[V], ws: &mut QueryWorkspace) {
+    multi::multi_bfs_vgc_ws(&lg.graph, seeds, p.tau, None, &mut ws.multi_bfs);
+}
+
+pub(super) fn bfs_batch_demux(ws: &mut QueryWorkspace, lane: usize, n: usize) -> QueryOutput {
+    ws.multi_bfs.export_lane_into(lane, n, &mut ws.out_u32);
+    summarize_bfs(&ws.out_u32)
+}
+
+pub(super) static BFS_VGC_BATCH: BatchEngine = BatchEngine {
+    run: bfs_vgc_batch_run,
+    demux: bfs_batch_demux,
+};
+
+pub(super) fn bfs_frontier_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    _p: Params,
+    src: V,
+    _ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    Ok(summarize_bfs(&bfs::frontier_bfs(&lg.graph, src, None)))
+}
+
+pub(super) fn bfs_frontier_traced(lg: &LoadedGraph, _p: Params, src: V, trace: &mut AlgoTrace) {
+    bfs::frontier_bfs(&lg.graph, src, Some(trace));
+}
+
+pub(super) fn bfs_diropt_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    _p: Params,
+    src: V,
+    ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    let g = &*lg.graph;
+    bfs::diropt_bfs_ws(g, Some(lg.transpose()), src, None, &mut ws.bfs);
+    ws.bfs.dist.export_into(g.n(), &mut ws.out_u32);
+    Ok(summarize_bfs(&ws.out_u32))
+}
+
+pub(super) fn bfs_diropt_traced(lg: &LoadedGraph, _p: Params, src: V, trace: &mut AlgoTrace) {
+    bfs::diropt_bfs(&lg.graph, Some(lg.transpose()), src, Some(trace));
+}
+
+pub(super) fn bfs_diropt_batch_run(
+    lg: &LoadedGraph,
+    _p: Params,
+    seeds: &[V],
+    ws: &mut QueryWorkspace,
+) {
+    multi::multi_bfs_diropt_ws(&lg.graph, Some(lg.transpose()), seeds, None, &mut ws.multi_bfs);
+}
+
+pub(super) static BFS_DIROPT_BATCH: BatchEngine = BatchEngine {
+    run: bfs_diropt_batch_run,
+    demux: bfs_batch_demux,
+};
+
+// ---------------------------------------------------------------
+// SCC family.
+// ---------------------------------------------------------------
+
+pub(super) fn scc_vgc_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    p: Params,
+    _src: V,
+    ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    scc::vgc_scc_ws(&lg.graph, Some(lg.transpose()), p.tau, 42, None, &mut ws.scc);
+    Ok(summarize_scc(ws.scc.labels()))
+}
+
+pub(super) fn scc_vgc_traced(lg: &LoadedGraph, p: Params, _src: V, trace: &mut AlgoTrace) {
+    scc::vgc_scc(&lg.graph, Some(lg.transpose()), p.tau, 42, Some(trace));
+}
+
+pub(super) fn scc_multistep_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    _p: Params,
+    _src: V,
+    _ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    Ok(summarize_scc(&scc::multistep_scc(
+        &lg.graph,
+        Some(lg.transpose()),
+        None,
+    )))
+}
+
+pub(super) fn scc_multistep_traced(lg: &LoadedGraph, _p: Params, _src: V, trace: &mut AlgoTrace) {
+    scc::multistep_scc(&lg.graph, Some(lg.transpose()), Some(trace));
+}
+
+// ---------------------------------------------------------------
+// BCC.
+// ---------------------------------------------------------------
+
+pub(super) fn bcc_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    _p: Params,
+    _src: V,
+    _ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    let r = bcc::fast_bcc(lg.symmetrized(), None);
+    Ok(QueryOutput::Bcc {
+        blocks: r.n_bcc,
+        articulation: r.articulation.iter().filter(|&&a| a).count(),
+    })
+}
+
+pub(super) fn bcc_traced(lg: &LoadedGraph, _p: Params, _src: V, trace: &mut AlgoTrace) {
+    bcc::fast_bcc(lg.symmetrized(), Some(trace));
+}
+
+// ---------------------------------------------------------------
+// SSSP family.
+// ---------------------------------------------------------------
+
+pub(super) fn sssp_rho_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    p: Params,
+    src: V,
+    ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    let g = &*lg.graph;
+    sssp::rho_stepping_ws(g, src, p.tau, None, &mut ws.sssp);
+    ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
+    Ok(summarize_sssp(&ws.out_f32))
+}
+
+pub(super) fn sssp_rho_traced(lg: &LoadedGraph, p: Params, src: V, trace: &mut AlgoTrace) {
+    sssp::rho_stepping(&lg.graph, src, p.tau, Some(trace));
+}
+
+pub(super) fn sssp_rho_batch_run(
+    lg: &LoadedGraph,
+    p: Params,
+    seeds: &[V],
+    ws: &mut QueryWorkspace,
+) {
+    multi::multi_rho_ws(&lg.graph, seeds, p.tau, None, &mut ws.multi_sssp);
+}
+
+pub(super) fn sssp_batch_demux(ws: &mut QueryWorkspace, lane: usize, n: usize) -> QueryOutput {
+    ws.multi_sssp.export_lane_into(lane, n, &mut ws.out_f32);
+    summarize_sssp(&ws.out_f32)
+}
+
+pub(super) static SSSP_RHO_BATCH: BatchEngine = BatchEngine {
+    run: sssp_rho_batch_run,
+    demux: sssp_batch_demux,
+};
+
+pub(super) fn sssp_delta_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    _p: Params,
+    src: V,
+    ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    let g = &*lg.graph;
+    sssp::delta_stepping_ws(g, src, None, None, &mut ws.sssp);
+    ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
+    Ok(summarize_sssp(&ws.out_f32))
+}
+
+pub(super) fn sssp_delta_traced(lg: &LoadedGraph, _p: Params, src: V, trace: &mut AlgoTrace) {
+    sssp::delta_stepping(&lg.graph, src, None, Some(trace));
+}
+
+// ---------------------------------------------------------------
+// Connectivity (opened for serving by the registry).
+// ---------------------------------------------------------------
+
+pub(super) fn cc_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    _p: Params,
+    _src: V,
+    ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    // `connected_components` treats every edge as bidirectional, so
+    // the raw graph works for directed inputs too — no symmetrized
+    // view needs materializing.
+    let labels = cc::connected_components_ws(&lg.graph, &mut ws.cc);
+    Ok(summarize_cc(labels))
+}
+
+// ---------------------------------------------------------------
+// k-core (opened for serving by the registry).
+// ---------------------------------------------------------------
+
+pub(super) fn kcore_solo(
+    _cx: &EngineCtx,
+    lg: &LoadedGraph,
+    _p: Params,
+    _src: V,
+    _ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    // Peeling requires a symmetric view; the coreness arrays are
+    // allocated per call (k-core has no workspace yet — see ROADMAP).
+    let core = kcore::par_kcore(lg.symmetrized(), None);
+    Ok(summarize_kcore(&core))
+}
+
+pub(super) fn kcore_traced(lg: &LoadedGraph, _p: Params, _src: V, trace: &mut AlgoTrace) {
+    kcore::par_kcore(lg.symmetrized(), Some(trace));
+}
+
+// ---------------------------------------------------------------
+// Dense-block closure (PJRT engine path).
+// ---------------------------------------------------------------
+
+pub(super) fn dense_closure_solo(
+    cx: &EngineCtx,
+    lg: &LoadedGraph,
+    p: Params,
+    _src: V,
+    _ws: &mut QueryWorkspace,
+) -> Result<QueryOutput> {
+    let g = &*lg.graph;
+    let engine = cx
+        .engine
+        .context("no dense engine attached (run `make artifacts`)")?;
+    let tile = engine
+        .closure_tiles()
+        .into_iter()
+        .filter(|&t| t >= p.block.min(g.n()))
+        .min()
+        .context("no closure artifact large enough")?;
+    let k = p.block.min(g.n()).min(tile);
+    let vs = DenseBlock::top_degree_block(g, k);
+    let db = DenseBlock::extract(g, &vs, tile);
+    let closure = db.closure(engine)?;
+    let finite = closure.iter().filter(|&&d| d < INF).count();
+    Ok(QueryOutput::Dense {
+        block: k,
+        finite_pairs: finite,
+    })
+}

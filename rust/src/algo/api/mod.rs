@@ -1,0 +1,312 @@
+//! `algo::api` — the open Query API: one registry entry per
+//! algorithm, one dispatch path for every front end.
+//!
+//! PASGAL's value is a *library* of interchangeable parallel
+//! algorithms. Before this module the serving layer hard-coded a
+//! closed `AlgoKind` enum whose dispatch logic was copy-pasted across
+//! five match sites (solo execution, batch fusion + demux, the fusion
+//! window's grouping key, CLI parsing, labels) — so algorithms that
+//! already lived in `algo/` (connectivity, k-core) could not be served
+//! at all. Following GBBS's uniform-interface design, this module
+//! inverts that: every algorithm is described **once**, by a static
+//! [`AlgoSpec`], and every front end (the coordinator's [`ExecCore`],
+//! the sharded server's fusion window, the CLI, the bench harness)
+//! dispatches through the [`registry`].
+//!
+//! * [`Query`] — one request: a graph name, a `&'static AlgoSpec`, a
+//!   source vertex, and parsed [`Params`]. Built by
+//!   [`Query::new`] from an algorithm name (label or alias) via
+//!   registry lookup.
+//! * [`AlgoSpec`] — the registry entry: `label`, `aliases`,
+//!   `parse` (CLI/request params → [`Params`]), a **solo engine**
+//!   (answers one query against a [`LoadedGraph`] + [`QueryWorkspace`],
+//!   returns a typed [`QueryOutput`]), an optional **batch engine**
+//!   (the ≤ 64-lane fused multi-source walk + per-lane demux), and an
+//!   optional **traced engine** (single run recording an
+//!   [`AlgoTrace`] for the virtual-multicore studies — the CLI `run`
+//!   path).
+//! * [`registry`] — the static `AlgoRegistry`: an array of
+//!   `&'static AlgoSpec` (zero dependencies, no allocation), lookup by
+//!   label or alias ([`find`]), iteration ([`all`]).
+//!
+//! **Registering an algorithm touches one module**: implement its
+//! engine functions in [`engines`], add one `AlgoSpec` line to
+//! [`registry::REGISTRY`], and it is servable everywhere — CLI,
+//! single-threaded serve loop, sharded server, workload generator,
+//! tests. (Requests travelling the channel serving path are encoded as
+//! the deprecated [`AlgoKind`] shim, which delegates every method back
+//! here; see `coordinator::job`.) CC and k-core entered the registry
+//! exactly this way.
+//!
+//! [`ExecCore`]: crate::coordinator::server
+//! [`AlgoKind`]: crate::coordinator::AlgoKind
+//! [`LoadedGraph`]: crate::coordinator::LoadedGraph
+//! [`QueryWorkspace`]: crate::algo::QueryWorkspace
+//! [`AlgoTrace`]: crate::sim::AlgoTrace
+
+pub mod engines;
+pub mod registry;
+
+pub use registry::{all, find};
+
+use crate::algo::workspace::QueryWorkspace;
+use crate::coordinator::directory::LoadedGraph;
+use crate::error::{Error, Result};
+use crate::runtime::EngineHandle;
+use crate::sim::AlgoTrace;
+use crate::V;
+
+/// Parsed per-query algorithm parameters. One flat POD so the batch
+/// grouping key `(graph, spec id, Params)` stays `Copy + Eq + Hash`:
+/// two queries fuse only when *every* parameter matches. Specs zero
+/// the fields they ignore (via their [`AlgoSpec::parse`]), so e.g.
+/// all `bcc-fast` queries share one group regardless of the CLI τ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct Params {
+    /// VGC local-search budget τ (BFS-VGC, SCC-VGC, ρ-stepping).
+    pub tau: usize,
+    /// Dense-block edge length (dense-closure).
+    pub block: usize,
+}
+
+impl Params {
+    /// No parameters (algorithms whose behavior has no knobs).
+    pub const NONE: Params = Params { tau: 0, block: 0 };
+
+    /// τ only.
+    pub const fn tau(tau: usize) -> Params {
+        Params { tau, block: 0 }
+    }
+
+    /// Block size only.
+    pub const fn block(block: usize) -> Params {
+        Params { tau: 0, block }
+    }
+}
+
+/// Raw parameter values as supplied by a caller (CLI flags, request
+/// fields) before a spec's [`AlgoSpec::parse`] keeps the ones it
+/// understands and zeroes the rest.
+#[derive(Debug, Clone, Copy)]
+pub struct ParseArgs {
+    /// `--tau` (default 512, the paper's setting).
+    pub tau: usize,
+    /// `--block` (default 64 — previously hard-coded in
+    /// `AlgoKind::parse`, now threaded through like τ).
+    pub block: usize,
+}
+
+impl Default for ParseArgs {
+    fn default() -> Self {
+        ParseArgs {
+            tau: 512,
+            block: 64,
+        }
+    }
+}
+
+/// Execution-environment context handed to solo engines: everything a
+/// spec may need beyond the graph and its workspace. Today that is
+/// the optional dense engine; future backends slot in here without
+/// touching any engine signature.
+pub struct EngineCtx<'a> {
+    /// The AOT dense-kernel engine, when one is attached.
+    pub engine: Option<&'a EngineHandle>,
+}
+
+/// Compact typed algorithm output (the full vectors stay with the
+/// caller when run through the library API; the serving layer reports
+/// summaries).
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryOutput {
+    /// (#reached, max distance) for BFS.
+    Bfs { reached: usize, ecc: u32 },
+    /// (#components, largest component size) for SCC.
+    Scc { count: usize, largest: usize },
+    /// (#blocks, #articulation points).
+    Bcc { blocks: usize, articulation: usize },
+    /// (#reached, max finite distance).
+    Sssp { reached: usize, radius: f32 },
+    /// (#connected components, largest component size).
+    Cc { components: usize, largest: usize },
+    /// (degeneracy = max coreness, #vertices in the max core).
+    Kcore { degeneracy: u32, in_max_core: usize },
+    /// (block size, #finite pairwise distances).
+    Dense { block: usize, finite_pairs: usize },
+    /// The request failed (unknown graph, out-of-range source, no
+    /// dense engine, ...): the serving loops answer *every* accepted
+    /// request, so failures come back on the result channel with the
+    /// request's id instead of vanishing into a log line.
+    Failed { error: String },
+}
+
+/// A solo engine: answer one query against a loaded graph out of the
+/// caller's warm workspace.
+pub type SoloFn =
+    fn(&EngineCtx, &LoadedGraph, Params, V, &mut QueryWorkspace) -> Result<QueryOutput>;
+
+/// A traced engine: run once recording an execution trace for the
+/// virtual-multicore scalability studies (the CLI `run` path). Uses
+/// the classic allocate-per-call entry points — tracing is a
+/// measurement mode, not a serving mode.
+pub type TracedFn = fn(&LoadedGraph, Params, V, &mut AlgoTrace);
+
+/// The batched multi-source engine of a fusable algorithm: `run` one
+/// fused frontier walk over ≤ 64 seed lanes, then `demux` each lane
+/// into a typed output (a parallel strided export out of the
+/// workspace). Replaces the old `AlgoKind::fusable` + hard-coded
+/// match arms in the coordinator.
+pub struct BatchEngine {
+    /// One fused walk over all `seeds` (≤ [`crate::algo::multi::MAX_LANES`]).
+    pub run: fn(&LoadedGraph, Params, &[V], &mut QueryWorkspace),
+    /// Summarize one lane of the walk just run (`lane < seeds.len()`,
+    /// `n` = vertex count of the graph walked).
+    pub demux: fn(&mut QueryWorkspace, usize, usize) -> QueryOutput,
+}
+
+/// Which derived graph views an algorithm's engines read. Callers use
+/// this to materialize exactly the views a timed run will touch
+/// *before* timing starts — and nothing more.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Views {
+    /// Reads [`LoadedGraph::transpose`].
+    pub transpose: bool,
+    /// Reads [`LoadedGraph::symmetrized`].
+    pub symmetrized: bool,
+}
+
+impl Views {
+    /// Only the graph itself.
+    pub const NONE: Views = Views {
+        transpose: false,
+        symmetrized: false,
+    };
+    /// The transpose (backward edges).
+    pub const TRANSPOSE: Views = Views {
+        transpose: true,
+        symmetrized: false,
+    };
+    /// The symmetrized view (undirected algorithms on directed input).
+    pub const SYMMETRIZED: Views = Views {
+        transpose: false,
+        symmetrized: true,
+    };
+}
+
+/// One registry entry: everything the system needs to parse, label,
+/// dispatch, fuse and trace an algorithm. Declared `static` so specs
+/// are `'static` and a query can hold `&'static AlgoSpec` with no
+/// lifetime plumbing and no allocation.
+pub struct AlgoSpec {
+    /// Dense stable id — the registry index; the fusion grouping key
+    /// is `(graph, id, Params)`.
+    pub id: u16,
+    /// Canonical name; unique across the registry (metrics keys,
+    /// CLI, `JobResult::algo` all use it).
+    pub label: &'static str,
+    /// Alternate names accepted by [`find`] (e.g. `"bfs"` for
+    /// `"bfs-vgc"`).
+    pub aliases: &'static [&'static str],
+    /// True when the query's `source` must be a vertex of the graph
+    /// (traversal algorithms); whole-graph analyses ignore it.
+    pub needs_source: bool,
+    /// True when the solo engine consults the AOT dense engine
+    /// ([`EngineCtx::engine`]); callers only pay engine startup for
+    /// specs that read it.
+    pub needs_engine: bool,
+    /// The derived graph views the engines read (see [`Views`]).
+    pub views: Views,
+    /// Keep the parameters this algorithm understands, zero the rest
+    /// (so the fusion grouping key never splits on irrelevant knobs).
+    pub parse: fn(&ParseArgs) -> Params,
+    /// The solo engine.
+    pub solo: SoloFn,
+    /// The batched multi-source engine, for algorithms that have one.
+    pub batch: Option<&'static BatchEngine>,
+    /// The trace-recording single-run engine (CLI `run` / sim).
+    pub traced: Option<TracedFn>,
+}
+
+impl AlgoSpec {
+    /// True when this spec has a batched multi-source engine — the
+    /// coordinator fuses same-`(graph, id, Params)` groups of these
+    /// into shared frontier walks.
+    pub fn fusable(&self) -> bool {
+        self.batch.is_some()
+    }
+
+    /// Does `name` name this spec (label or alias)?
+    pub fn answers_to(&self, name: &str) -> bool {
+        self.label == name || self.aliases.contains(&name)
+    }
+
+    /// Materialize exactly the derived views this spec's engines
+    /// read, so a timed run afterwards measures the algorithm and
+    /// not one-off view construction.
+    pub fn prewarm(&self, lg: &LoadedGraph) {
+        if self.views.transpose {
+            lg.transpose();
+        }
+        if self.views.symmetrized {
+            lg.symmetrized();
+        }
+    }
+}
+
+impl PartialEq for AlgoSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.id == other.id
+    }
+}
+
+impl Eq for AlgoSpec {}
+
+impl std::fmt::Debug for AlgoSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlgoSpec")
+            .field("id", &self.id)
+            .field("label", &self.label)
+            .field("fusable", &self.fusable())
+            .finish()
+    }
+}
+
+/// One analysis request against the open API: which graph, which
+/// registered algorithm, which source, which parameters. The
+/// serving-layer [`JobRequest`](crate::coordinator::JobRequest)
+/// encodes the same information for the channel protocol; `Query` is
+/// the library-level type — it addresses *any* registered spec, shim
+/// encoding or not (see [`crate::coordinator::Coordinator::run_query`]).
+#[derive(Debug, Clone)]
+pub struct Query {
+    /// Name of a graph registered with the coordinator.
+    pub graph: String,
+    /// The registry entry to dispatch through.
+    pub algo: &'static AlgoSpec,
+    /// Source vertex (ignored when `algo.needs_source` is false).
+    pub source: V,
+    /// Parsed parameters (what [`AlgoSpec::parse`] kept).
+    pub params: Params,
+}
+
+impl Query {
+    /// Build a query by registry lookup: `algo` may be a label or any
+    /// alias; `args` carries the raw parameter values, of which the
+    /// spec keeps the ones it understands.
+    pub fn new(graph: impl Into<String>, algo: &str, args: &ParseArgs) -> Result<Query> {
+        let spec = find(algo)
+            .ok_or_else(|| Error::msg(format!("unknown algorithm {algo:?} (not in the registry)")))?;
+        Ok(Query {
+            graph: graph.into(),
+            algo: spec,
+            source: 0,
+            params: (spec.parse)(args),
+        })
+    }
+
+    /// Set the source vertex (builder style).
+    pub fn with_source(mut self, source: V) -> Query {
+        self.source = source;
+        self
+    }
+}

@@ -1,0 +1,284 @@
+//! The static `AlgoRegistry`: one [`AlgoSpec`] per served algorithm,
+//! zero dependencies, zero allocation — the single source of truth
+//! for labels, aliases, parameter parsing, solo/batch/traced dispatch
+//! and fusability. Every front end (coordinator execution, fusion
+//! windows, CLI, bench harness) resolves algorithms here.
+//!
+//! Adding an algorithm: implement its engines in [`super::engines`],
+//! append one `AlgoSpec` static + one [`REGISTRY`] line (its `id` is
+//! its registry index), and — only if it must travel the channel
+//! serving protocol through the deprecated `AlgoKind` shim — one
+//! variant arm in `coordinator::job`. The registry-completeness tests
+//! below (and `tests/multi_source.rs`, which iterates every batch
+//! engine) enforce the invariants so a new line cannot silently break
+//! dispatch.
+
+use super::engines as e;
+use super::{AlgoSpec, Views};
+
+/// PASGAL VGC BFS (τ-budget local searches over hash-bag frontiers).
+pub static BFS_VGC: AlgoSpec = AlgoSpec {
+    id: 0,
+    label: "bfs-vgc",
+    aliases: &["bfs"],
+    needs_source: true,
+    needs_engine: false,
+    views: Views::NONE,
+    parse: e::parse_tau,
+    solo: e::bfs_vgc_solo,
+    batch: Some(&e::BFS_VGC_BATCH),
+    traced: Some(e::bfs_vgc_traced),
+};
+
+/// GBBS-like frontier BFS (round-synchronous baseline).
+pub static BFS_FRONTIER: AlgoSpec = AlgoSpec {
+    id: 1,
+    label: "bfs-frontier",
+    aliases: &[],
+    needs_source: true,
+    needs_engine: false,
+    views: Views::NONE,
+    parse: e::parse_none,
+    solo: e::bfs_frontier_solo,
+    batch: None,
+    traced: Some(e::bfs_frontier_traced),
+};
+
+/// Direction-optimizing BFS (GAPBS-like baseline).
+pub static BFS_DIROPT: AlgoSpec = AlgoSpec {
+    id: 2,
+    label: "bfs-diropt",
+    aliases: &[],
+    needs_source: true,
+    needs_engine: false,
+    views: Views::TRANSPOSE,
+    parse: e::parse_none,
+    solo: e::bfs_diropt_solo,
+    batch: Some(&e::BFS_DIROPT_BATCH),
+    traced: Some(e::bfs_diropt_traced),
+};
+
+/// PASGAL VGC SCC.
+pub static SCC_VGC: AlgoSpec = AlgoSpec {
+    id: 3,
+    label: "scc-vgc",
+    aliases: &["scc"],
+    needs_source: false,
+    needs_engine: false,
+    views: Views::TRANSPOSE,
+    parse: e::parse_tau,
+    solo: e::scc_vgc_solo,
+    batch: None,
+    traced: Some(e::scc_vgc_traced),
+};
+
+/// Multistep SCC (trim + FW-BW + coloring baseline).
+pub static SCC_MULTISTEP: AlgoSpec = AlgoSpec {
+    id: 4,
+    label: "scc-multistep",
+    aliases: &[],
+    needs_source: false,
+    needs_engine: false,
+    views: Views::TRANSPOSE,
+    parse: e::parse_none,
+    solo: e::scc_multistep_solo,
+    batch: None,
+    traced: Some(e::scc_multistep_traced),
+};
+
+/// FAST-BCC.
+pub static BCC_FAST: AlgoSpec = AlgoSpec {
+    id: 5,
+    label: "bcc-fast",
+    aliases: &["bcc"],
+    needs_source: false,
+    needs_engine: false,
+    views: Views::SYMMETRIZED,
+    parse: e::parse_none,
+    solo: e::bcc_solo,
+    batch: None,
+    traced: Some(e::bcc_traced),
+};
+
+/// ρ-stepping SSSP with VGC.
+pub static SSSP_RHO: AlgoSpec = AlgoSpec {
+    id: 6,
+    label: "sssp-rho",
+    aliases: &["sssp"],
+    needs_source: true,
+    needs_engine: false,
+    views: Views::NONE,
+    parse: e::parse_tau,
+    solo: e::sssp_rho_solo,
+    batch: Some(&e::SSSP_RHO_BATCH),
+    traced: Some(e::sssp_rho_traced),
+};
+
+/// Δ-stepping SSSP (baseline).
+pub static SSSP_DELTA: AlgoSpec = AlgoSpec {
+    id: 7,
+    label: "sssp-delta",
+    aliases: &[],
+    needs_source: true,
+    needs_engine: false,
+    views: Views::NONE,
+    parse: e::parse_none,
+    solo: e::sssp_delta_solo,
+    batch: None,
+    traced: Some(e::sssp_delta_traced),
+};
+
+/// Dense-block closure on the AOT engine (the L1/L2 path).
+pub static DENSE_CLOSURE: AlgoSpec = AlgoSpec {
+    id: 8,
+    label: "dense-closure",
+    aliases: &["dense"],
+    needs_source: false,
+    needs_engine: true,
+    views: Views::NONE,
+    parse: e::parse_block,
+    solo: e::dense_closure_solo,
+    batch: None,
+    traced: None,
+};
+
+/// Parallel connectivity (hook/compress union-find).
+pub static CC: AlgoSpec = AlgoSpec {
+    id: 9,
+    label: "cc",
+    aliases: &["connectivity", "components"],
+    needs_source: false,
+    needs_engine: false,
+    views: Views::NONE,
+    parse: e::parse_none,
+    solo: e::cc_solo,
+    batch: None,
+    traced: None,
+};
+
+/// k-core decomposition (parallel peeling over hash bags).
+pub static KCORE: AlgoSpec = AlgoSpec {
+    id: 10,
+    label: "kcore",
+    aliases: &["k-core", "coreness"],
+    needs_source: false,
+    needs_engine: false,
+    views: Views::SYMMETRIZED,
+    parse: e::parse_none,
+    solo: e::kcore_solo,
+    batch: None,
+    traced: Some(e::kcore_traced),
+};
+
+/// Every registered algorithm, indexed by [`AlgoSpec::id`].
+pub static REGISTRY: [&AlgoSpec; 11] = [
+    &BFS_VGC,
+    &BFS_FRONTIER,
+    &BFS_DIROPT,
+    &SCC_VGC,
+    &SCC_MULTISTEP,
+    &BCC_FAST,
+    &SSSP_RHO,
+    &SSSP_DELTA,
+    &DENSE_CLOSURE,
+    &CC,
+    &KCORE,
+];
+
+/// All registered specs, in id order.
+pub fn all() -> &'static [&'static AlgoSpec] {
+    &REGISTRY
+}
+
+/// Look an algorithm up by label or alias.
+pub fn find(name: &str) -> Option<&'static AlgoSpec> {
+    REGISTRY.iter().copied().find(|s| s.answers_to(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::api::ParseArgs;
+    use std::collections::HashSet;
+
+    #[test]
+    fn ids_are_registry_indices() {
+        for (i, spec) in REGISTRY.iter().enumerate() {
+            assert_eq!(spec.id as usize, i, "{} id out of order", spec.label);
+        }
+    }
+
+    #[test]
+    fn labels_are_unique_and_self_resolving() {
+        let mut seen = HashSet::new();
+        for spec in all() {
+            assert!(seen.insert(spec.label), "duplicate label {}", spec.label);
+            let found = find(spec.label).expect("label resolves");
+            assert!(std::ptr::eq(found, *spec), "{} resolves to itself", spec.label);
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_and_never_shadow() {
+        let mut names: HashSet<&str> = all().iter().map(|s| s.label).collect();
+        for spec in all() {
+            for &alias in spec.aliases {
+                assert!(
+                    names.insert(alias),
+                    "alias {alias:?} collides with another name"
+                );
+                let found = find(alias).expect("alias resolves");
+                assert!(
+                    std::ptr::eq(found, *spec),
+                    "alias {alias:?} must resolve to {}",
+                    spec.label
+                );
+            }
+        }
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn parse_keeps_only_understood_params() {
+        let args = ParseArgs { tau: 77, block: 33 };
+        assert_eq!((BFS_VGC.parse)(&args).tau, 77);
+        assert_eq!((BFS_VGC.parse)(&args).block, 0, "τ specs ignore block");
+        assert_eq!((DENSE_CLOSURE.parse)(&args).block, 33);
+        assert_eq!((DENSE_CLOSURE.parse)(&args).tau, 0, "block specs ignore τ");
+        for spec in [&BCC_FAST, &CC, &KCORE, &BFS_FRONTIER] {
+            assert_eq!(
+                (spec.parse)(&args),
+                crate::algo::api::Params::NONE,
+                "{} has no knobs",
+                spec.label
+            );
+        }
+    }
+
+    #[test]
+    fn only_dense_closure_needs_the_aot_engine() {
+        for spec in all() {
+            assert_eq!(
+                spec.needs_engine,
+                spec.label == "dense-closure",
+                "{} needs_engine flag",
+                spec.label
+            );
+        }
+    }
+
+    #[test]
+    fn fusable_specs_all_carry_batch_engines() {
+        let fusable: Vec<&str> = all()
+            .iter()
+            .filter(|s| s.fusable())
+            .map(|s| s.label)
+            .collect();
+        assert_eq!(fusable, ["bfs-vgc", "bfs-diropt", "sssp-rho"]);
+        // Fusable algorithms relax per-source state, so they must
+        // validate sources.
+        for spec in all().iter().filter(|s| s.fusable()) {
+            assert!(spec.needs_source, "{} fusable but sourceless", spec.label);
+        }
+    }
+}

@@ -18,7 +18,14 @@
 //! sources answered by one frontier walk (lane-striped distances, one
 //! 64-bit source mask per vertex), which the coordinator uses to fuse
 //! same-graph, same-algorithm requests.
+//!
+//! [`api`] is the open Query API over all of the above: one static
+//! [`api::AlgoSpec`] registry entry per algorithm (label, aliases,
+//! parameter parsing, solo/batch/traced engines), so every front end
+//! — coordinator, sharded server, CLI, benches — dispatches through
+//! one table instead of per-algorithm match arms.
 
+pub mod api;
 pub mod bcc;
 pub mod bfs;
 pub mod cc;
@@ -28,6 +35,7 @@ pub mod scc;
 pub mod sssp;
 pub mod workspace;
 
+pub use api::{AlgoSpec, Params, ParseArgs, Query, QueryOutput};
 pub use workspace::{
     BfsWorkspace, CcWorkspace, MultiBfsWorkspace, MultiSsspWorkspace, QueryWorkspace,
     SccWorkspace, SsspWorkspace, WorkspacePool,

@@ -1,9 +1,27 @@
-//! Job types for the coordinator.
+//! Job types for the coordinator's channel serving protocol.
+//!
+//! The algorithm registry ([`crate::algo::api`]) is the source of
+//! truth for labels, aliases, parameters, fusability and dispatch;
+//! [`AlgoKind`] survives only as a **deprecated thin shim** — a
+//! `Copy + Eq + Hash` encoding of `(spec, params)` that keeps existing
+//! callers, tests and benches compiling while they migrate to
+//! [`Query`](crate::algo::api::Query). Every method delegates to the
+//! registry; the only per-algorithm knowledge left in this file is the
+//! variant ↔ spec mapping itself (checked exhaustively against the
+//! registry by the round-trip test below).
 
+use crate::algo::api::{self, AlgoSpec, Params, ParseArgs};
 use crate::V;
 use std::time::Duration;
 
-/// Which analysis to run.
+pub use crate::algo::api::QueryOutput as JobOutput;
+
+/// Which analysis to run — **deprecated shim**: an enum encoding of
+/// `(&'static AlgoSpec, Params)` for the channel protocol and for
+/// pre-registry callers. New code should address algorithms through
+/// [`crate::algo::api::Query`] / registry lookup instead; this enum
+/// only exists so `(graph, algo)` stays a cheap `Copy + Eq + Hash`
+/// message field.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AlgoKind {
     /// PASGAL VGC BFS (τ from the request).
@@ -25,58 +43,95 @@ pub enum AlgoKind {
     /// Dense-block closure on the PJRT engine: all-pairs distances
     /// within a extracted dense subgraph (the L1/L2 path).
     DenseClosure { block: usize },
+    /// Parallel connectivity (union-find).
+    Cc,
+    /// k-core decomposition (parallel peeling).
+    Kcore,
 }
 
 impl AlgoKind {
-    pub fn parse(s: &str, tau: usize) -> Option<AlgoKind> {
-        Some(match s {
-            "bfs" | "bfs-vgc" => AlgoKind::BfsVgc { tau },
+    /// The registry entry this shim variant encodes.
+    pub fn spec(&self) -> &'static AlgoSpec {
+        use crate::algo::api::registry as r;
+        match self {
+            AlgoKind::BfsVgc { .. } => &r::BFS_VGC,
+            AlgoKind::BfsFrontier => &r::BFS_FRONTIER,
+            AlgoKind::BfsDirOpt => &r::BFS_DIROPT,
+            AlgoKind::SccVgc { .. } => &r::SCC_VGC,
+            AlgoKind::SccMultistep => &r::SCC_MULTISTEP,
+            AlgoKind::Bcc => &r::BCC_FAST,
+            AlgoKind::SsspRho { .. } => &r::SSSP_RHO,
+            AlgoKind::SsspDelta => &r::SSSP_DELTA,
+            AlgoKind::DenseClosure { .. } => &r::DENSE_CLOSURE,
+            AlgoKind::Cc => &r::CC,
+            AlgoKind::Kcore => &r::KCORE,
+        }
+    }
+
+    /// The parameters this shim variant encodes.
+    pub fn params(&self) -> Params {
+        match *self {
+            AlgoKind::BfsVgc { tau }
+            | AlgoKind::SccVgc { tau }
+            | AlgoKind::SsspRho { tau } => Params::tau(tau),
+            AlgoKind::DenseClosure { block } => Params::block(block),
+            _ => Params::NONE,
+        }
+    }
+
+    /// Encode a registry spec + parameters as a shim variant. `None`
+    /// for specs without an enum encoding (none today; a future
+    /// registry entry may opt out of the shim and be reachable through
+    /// [`crate::algo::api::Query`] only).
+    pub fn from_spec(spec: &'static AlgoSpec, p: Params) -> Option<AlgoKind> {
+        Some(match spec.label {
+            "bfs-vgc" => AlgoKind::BfsVgc { tau: p.tau },
             "bfs-frontier" => AlgoKind::BfsFrontier,
             "bfs-diropt" => AlgoKind::BfsDirOpt,
-            "scc" | "scc-vgc" => AlgoKind::SccVgc { tau },
+            "scc-vgc" => AlgoKind::SccVgc { tau: p.tau },
             "scc-multistep" => AlgoKind::SccMultistep,
-            "bcc" | "bcc-fast" => AlgoKind::Bcc,
-            "sssp" | "sssp-rho" => AlgoKind::SsspRho { tau },
+            "bcc-fast" => AlgoKind::Bcc,
+            "sssp-rho" => AlgoKind::SsspRho { tau: p.tau },
             "sssp-delta" => AlgoKind::SsspDelta,
-            "dense-closure" => AlgoKind::DenseClosure { block: 64 },
+            "dense-closure" => AlgoKind::DenseClosure { block: p.block },
+            "cc" => AlgoKind::Cc,
+            "kcore" => AlgoKind::Kcore,
             _ => return None,
         })
     }
 
-    pub fn label(&self) -> &'static str {
-        match self {
-            AlgoKind::BfsVgc { .. } => "bfs-vgc",
-            AlgoKind::BfsFrontier => "bfs-frontier",
-            AlgoKind::BfsDirOpt => "bfs-diropt",
-            AlgoKind::SccVgc { .. } => "scc-vgc",
-            AlgoKind::SccMultistep => "scc-multistep",
-            AlgoKind::Bcc => "bcc-fast",
-            AlgoKind::SsspRho { .. } => "sssp-rho",
-            AlgoKind::SsspDelta => "sssp-delta",
-            AlgoKind::DenseClosure { .. } => "dense-closure",
-        }
+    /// Registry-backed parse with every raw parameter threaded through
+    /// (`--tau` *and* `--block`): label or alias → shim variant.
+    pub fn parse_with(s: &str, args: &ParseArgs) -> Option<AlgoKind> {
+        let spec = api::find(s)?;
+        AlgoKind::from_spec(spec, (spec.parse)(args))
     }
 
-    /// True for algorithms with a batched multi-source engine: the
-    /// coordinator fuses same-graph groups of these into one frontier
-    /// walk (see [`crate::algo::multi`]). Parameterized variants only
-    /// fuse within the same parameter value — the derived `Eq`/`Hash`
-    /// grouping key guarantees that.
-    pub fn fusable(&self) -> bool {
-        matches!(
-            self,
-            AlgoKind::BfsVgc { .. } | AlgoKind::BfsDirOpt | AlgoKind::SsspRho { .. }
+    /// Pre-registry parse signature (τ only; block takes its default).
+    /// Prefer [`AlgoKind::parse_with`] or
+    /// [`crate::algo::api::Query::new`].
+    pub fn parse(s: &str, tau: usize) -> Option<AlgoKind> {
+        AlgoKind::parse_with(
+            s,
+            &ParseArgs {
+                tau,
+                ..ParseArgs::default()
+            },
         )
     }
 
-    /// Deterministic tiebreak for batch scheduling order among kinds
-    /// sharing a label (e.g. two `BfsVgc` τ values).
-    pub(crate) fn param(&self) -> usize {
-        match self {
-            AlgoKind::BfsVgc { tau } | AlgoKind::SccVgc { tau } | AlgoKind::SsspRho { tau } => *tau,
-            AlgoKind::DenseClosure { block } => *block,
-            _ => 0,
-        }
+    /// Canonical registry label.
+    pub fn label(&self) -> &'static str {
+        self.spec().label
+    }
+
+    /// True for algorithms with a batched multi-source engine
+    /// (delegates to [`AlgoSpec::fusable`]): the coordinator fuses
+    /// same-graph groups of these into one frontier walk. Parameterized
+    /// variants only fuse within the same parameter value — the
+    /// `(graph, spec id, Params)` grouping key guarantees that.
+    pub fn fusable(&self) -> bool {
+        self.spec().fusable()
     }
 }
 
@@ -106,27 +161,19 @@ impl JobRequest {
         }
         h
     }
-}
 
-/// Compact algorithm output (the full vectors stay with the caller
-/// when run through the library API; the server reports summaries).
-#[derive(Debug, Clone, PartialEq)]
-pub enum JobOutput {
-    /// (#reached, max distance) for BFS.
-    Bfs { reached: usize, ecc: u32 },
-    /// (#components, largest component size).
-    Scc { count: usize, largest: usize },
-    /// (#blocks, #articulation points).
-    Bcc { blocks: usize, articulation: usize },
-    /// (#reached, max finite distance).
-    Sssp { reached: usize, radius: f32 },
-    /// (block size, #finite pairwise distances).
-    Dense { block: usize, finite_pairs: usize },
-    /// The request failed (unknown graph, out-of-range source, no
-    /// dense engine, ...): the serving loops answer *every* accepted
-    /// request, so failures come back on the result channel with the
-    /// request's id instead of vanishing into a log line.
-    Failed { error: String },
+    /// Encode a [`Query`](crate::algo::api::Query) for the channel
+    /// protocol. `None` when the query's spec has no [`AlgoKind`]
+    /// shim encoding (such specs are served through
+    /// [`crate::coordinator::Coordinator::run_query`] instead).
+    pub fn from_query(id: u64, q: &crate::algo::api::Query) -> Option<JobRequest> {
+        Some(JobRequest {
+            id,
+            graph: q.graph.clone(),
+            algo: AlgoKind::from_spec(q.algo, q.params)?,
+            source: q.source,
+        })
+    }
 }
 
 /// A finished job.
@@ -157,11 +204,49 @@ mod tests {
             "sssp-rho",
             "sssp-delta",
             "dense-closure",
+            "cc",
+            "kcore",
         ] {
             let k = AlgoKind::parse(s, 512).unwrap();
             assert_eq!(k.label(), s);
         }
         assert!(AlgoKind::parse("nope", 1).is_none());
+    }
+
+    #[test]
+    fn every_registered_spec_roundtrips_through_the_shim() {
+        // Registry-completeness: label → parse → label round-trips,
+        // the shim points back at the exact spec, and aliases resolve
+        // to the same variant. Iterates the registry, not a hand-kept
+        // list, so adding a spec without a shim arm fails here.
+        let args = ParseArgs { tau: 77, block: 48 };
+        for spec in api::all() {
+            let k = AlgoKind::parse_with(spec.label, &args)
+                .unwrap_or_else(|| panic!("{} has no AlgoKind shim", spec.label));
+            assert_eq!(k.label(), spec.label, "label round-trip");
+            assert!(std::ptr::eq(k.spec(), *spec), "shim points at its spec");
+            assert_eq!(k.params(), (spec.parse)(&args), "params survive encoding");
+            assert_eq!(k.fusable(), spec.fusable());
+            for alias in spec.aliases {
+                assert_eq!(
+                    AlgoKind::parse_with(alias, &args),
+                    Some(k),
+                    "alias {alias:?} must encode identically"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parse_threads_block_size_through() {
+        // Regression: `--block` used to be hard-coded to 64 in parse.
+        let k = AlgoKind::parse_with("dense-closure", &ParseArgs { tau: 512, block: 96 });
+        assert_eq!(k, Some(AlgoKind::DenseClosure { block: 96 }));
+        // The τ-only signature keeps the old default.
+        assert_eq!(
+            AlgoKind::parse("dense-closure", 512),
+            Some(AlgoKind::DenseClosure { block: 64 })
+        );
     }
 
     #[test]
@@ -173,6 +258,8 @@ mod tests {
         assert!(!AlgoKind::SsspDelta.fusable());
         assert!(!AlgoKind::SccVgc { tau: 64 }.fusable());
         assert!(!AlgoKind::Bcc.fusable());
+        assert!(!AlgoKind::Cc.fusable());
+        assert!(!AlgoKind::Kcore.fusable());
     }
 
     #[test]
@@ -218,5 +305,23 @@ mod tests {
         assert_eq!(AlgoKind::parse("bfs", 7), Some(AlgoKind::BfsVgc { tau: 7 }));
         assert_eq!(AlgoKind::parse("scc", 9), Some(AlgoKind::SccVgc { tau: 9 }));
         assert_eq!(AlgoKind::parse("bcc", 1), Some(AlgoKind::Bcc));
+        assert_eq!(AlgoKind::parse("connectivity", 1), Some(AlgoKind::Cc));
+        assert_eq!(AlgoKind::parse("k-core", 1), Some(AlgoKind::Kcore));
+    }
+
+    #[test]
+    fn request_encodes_query() {
+        let q = crate::algo::api::Query::new(
+            "road",
+            "sssp",
+            &ParseArgs { tau: 31, block: 64 },
+        )
+        .unwrap()
+        .with_source(5);
+        let r = JobRequest::from_query(9, &q).unwrap();
+        assert_eq!(r.id, 9);
+        assert_eq!(r.graph, "road");
+        assert_eq!(r.source, 5);
+        assert_eq!(r.algo, AlgoKind::SsspRho { tau: 31 });
     }
 }

@@ -12,6 +12,12 @@
 //! entry points, and reports per-job latency plus queue/throughput
 //! metrics.
 //!
+//! Algorithm dispatch is table-driven: every path here resolves
+//! requests through the algorithm registry ([`crate::algo::api`]) —
+//! one [`crate::algo::api::AlgoSpec`] per algorithm — so registering
+//! an algorithm makes it servable everywhere at once. [`job::AlgoKind`]
+//! survives only as the deprecated wire encoding of (spec, params).
+//!
 //! Two serving front ends share one execution core:
 //!
 //! * [`Coordinator::serve`] / [`Coordinator::serve_windowed`] — the
@@ -33,6 +39,7 @@ pub mod metrics;
 pub mod server;
 pub mod shard;
 
+pub use crate::algo::api::{AlgoSpec, Params, ParseArgs, Query, QueryOutput};
 pub use dense::DenseBlock;
 pub use directory::{GraphDirectory, GraphMap, LoadedGraph, SnapshotCache};
 pub use job::{AlgoKind, JobOutput, JobRequest, JobResult};

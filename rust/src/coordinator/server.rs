@@ -10,15 +10,20 @@
 //! workspace has served one query per graph size, steady-state queries
 //! perform no O(n)/O(m) allocation at all.
 //!
+//! **Dispatch is table-driven**: execution resolves each request's
+//! [`AlgoSpec`] out of the algorithm registry ([`crate::algo::api`])
+//! and calls the spec's engines — there are no per-algorithm match
+//! arms here. Registering an algorithm (one registry line) makes it
+//! servable through every path in this file.
+//!
 //! On top of that, [`ExecCore::run_batch_from`] **fuses** queries:
-//! requests
-//! are grouped by (graph, algorithm) — same-graph batching for cache
-//! warmth, as before — and groups whose algorithm has a batched
-//! multi-source engine ([`AlgoKind::fusable`]) run through
-//! [`crate::algo::multi`] in chunks of up to 64 sources per frontier
-//! walk. Per-lane results are demultiplexed (a parallel strided
-//! export) back into per-request [`JobResult`]s in submission order;
-//! fusion is invisible to clients except in the `queries_fused` /
+//! requests are grouped by `(graph, spec id, params)` — same-graph
+//! batching for cache warmth, as before — and groups whose spec has a
+//! batched multi-source engine ([`AlgoSpec::fusable`]) run through its
+//! [`BatchEngine`] in chunks of up to 64 sources per frontier walk.
+//! Per-lane results are demultiplexed (a parallel strided export)
+//! back into per-request [`JobResult`]s in submission order; fusion is
+//! invisible to clients except in the `queries_fused` /
 //! `queries_solo` metrics and the latency column.
 //!
 //! Execution itself lives in [`ExecCore`], which owns **no** shared
@@ -28,18 +33,19 @@
 //! sharded server ([`super::shard`]) drives the same core with
 //! shard-local pools and lock-free registry snapshots, so both paths
 //! execute — and meter — queries identically.
+//!
+//! [`BatchEngine`]: crate::algo::api::BatchEngine
 
-use super::dense::DenseBlock;
 use super::directory::{GraphDirectory, LoadedGraph};
-use super::job::{AlgoKind, JobOutput, JobRequest, JobResult};
+use super::job::{JobOutput, JobRequest, JobResult};
 use super::metrics::Metrics;
 use super::shard::admit_batch;
+use crate::algo::api::{AlgoSpec, EngineCtx, Params, Query};
 use crate::algo::workspace::{QueryWorkspace, WorkspacePool};
-use crate::algo::{bcc, bfs, multi, scc, sssp, UNREACHED};
 use crate::bail;
 use crate::error::{Context, Error, Result};
 use crate::runtime::EngineHandle;
-use crate::{INF, V};
+use crate::V;
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -123,6 +129,16 @@ impl Coordinator {
         self.workspaces.lock().unwrap().checkin(ws);
     }
 
+    /// Run `f` with a pooled workspace checked out for its duration —
+    /// the one checkout/execute/checkin pattern every ad-hoc execution
+    /// path shares.
+    fn with_workspace<R>(&self, f: impl FnOnce(&mut QueryWorkspace) -> R) -> R {
+        let mut ws = self.checkout_workspace();
+        let out = f(&mut ws);
+        self.checkin_workspace(ws);
+        out
+    }
+
     /// Number of idle workspaces in the global pool (tests/metrics).
     pub fn idle_workspaces(&self) -> usize {
         self.workspaces.lock().unwrap().len()
@@ -142,15 +158,36 @@ impl Coordinator {
 
     /// Execute one request immediately (no queueing).
     pub fn execute(&self, req: &JobRequest) -> Result<JobResult> {
-        let mut ws = self.checkout_workspace();
-        let res = self.core().execute_one(req, self.graph(&req.graph), &mut ws);
-        self.checkin_workspace(ws);
-        res
+        self.with_workspace(|ws| self.core().execute_one(req, self.graph(&req.graph), ws))
     }
 
-    /// Run a batch: requests grouped by (graph, algorithm) —
-    /// same-graph batching for cache warmth, same-algorithm grouping
-    /// for multi-source fusion — results returned in submission order.
+    /// Execute one [`Query`] from the open API immediately. This is
+    /// the fully registry-native path: it dispatches on the query's
+    /// `&'static AlgoSpec` directly, so it serves *any* registered
+    /// spec — including future ones with no [`AlgoKind`] shim
+    /// encoding for the channel protocol. A [`Query`] carries no
+    /// request id (ids belong to the channel protocol), so the
+    /// returned [`JobResult::id`] is always 0 — correlate by call
+    /// site.
+    ///
+    /// [`AlgoKind`]: super::job::AlgoKind
+    pub fn run_query(&self, q: &Query) -> Result<JobResult> {
+        self.with_workspace(|ws| {
+            self.core().execute_resolved(
+                0,
+                &q.graph,
+                q.algo,
+                q.params,
+                q.source,
+                self.graph(&q.graph),
+                ws,
+            )
+        })
+    }
+
+    /// Run a batch: requests grouped by (graph, algorithm, params) —
+    /// same-graph batching for cache warmth, same-spec grouping for
+    /// multi-source fusion — results returned in submission order.
     /// See [`ExecCore::run_batch_from`].
     pub fn run_batch(&self, reqs: &[JobRequest]) -> Vec<Result<JobResult>> {
         self.run_batch_from(Instant::now(), reqs)
@@ -160,12 +197,7 @@ impl Coordinator {
     /// serving loops pass the head request's arrival time so reported
     /// latencies include the fusion-window wait.
     fn run_batch_from(&self, t0: Instant, reqs: &[JobRequest]) -> Vec<Result<JobResult>> {
-        let mut ws = self.checkout_workspace();
-        let out = self
-            .core()
-            .run_batch_from(t0, reqs, |name| self.graph(name), &mut ws);
-        self.checkin_workspace(ws);
-        out
+        self.with_workspace(|ws| self.core().run_batch_from(t0, reqs, |name| self.graph(name), ws))
     }
 
     /// Serving loop: drain the request channel, batch what is
@@ -179,7 +211,7 @@ impl Coordinator {
     /// Serving loop with a fusion-window admission queue: when the
     /// head request is fusable and `window` is nonzero, wait up to the
     /// window deadline draining the channel to accumulate same-(graph,
-    /// algo, τ) lanes before dispatching; non-fusable heads fall
+    /// spec, params) lanes before dispatching; non-fusable heads fall
     /// through immediately (see [`super::shard::admit_batch`]).
     ///
     /// **Shutdown invariant:** when the request channel closes
@@ -215,7 +247,7 @@ impl Coordinator {
     }
 }
 
-/// The request-execution core: algorithm dispatch, batching and
+/// The request-execution core: registry dispatch, batching and
 /// fusion, decoupled from any particular workspace pool or registry.
 /// Holds no shared state of its own — callers hand it a workspace and
 /// a graph-lookup function, so the shard hot path runs it without
@@ -233,117 +265,77 @@ impl ExecCore<'_> {
         lg: Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
     ) -> Result<JobResult> {
-        let submitted = Instant::now();
-        let lg = lg.with_context(|| format!("unknown graph {:?}", req.graph))?;
-        let g = &*lg.graph;
-        if matches!(
-            req.algo,
-            AlgoKind::BfsVgc { .. }
-                | AlgoKind::BfsFrontier
-                | AlgoKind::BfsDirOpt
-                | AlgoKind::SsspRho { .. }
-                | AlgoKind::SsspDelta
-        ) && (req.source as usize) >= g.n()
-        {
-            bail!("source {} out of range (n={})", req.source, g.n());
-        }
+        self.execute_resolved(
+            req.id,
+            &req.graph,
+            req.algo.spec(),
+            req.algo.params(),
+            req.source,
+            lg,
+            ws,
+        )
+    }
 
+    /// The shared solo execution path: every request — shim-encoded
+    /// [`JobRequest`] or registry-native [`Query`] — resolves to
+    /// `(spec, params, source)` and runs the spec's solo engine out of
+    /// the caller's warm workspace.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_resolved(
+        &self,
+        id: u64,
+        graph: &str,
+        spec: &'static AlgoSpec,
+        params: Params,
+        source: V,
+        lg: Option<Arc<LoadedGraph>>,
+        ws: &mut QueryWorkspace,
+    ) -> Result<JobResult> {
+        let submitted = Instant::now();
+        let lg = lg.with_context(|| format!("unknown graph {graph:?}"))?;
         // Answer out of the caller's warm workspace: the steady-state
         // query path performs zero O(n)/O(m) allocation (epoch-stamped
         // scratch, reused bags and export buffers).
         let exec_start = Instant::now();
-        let output = self.run_algo(req, &lg, ws)?;
+        let output = self.run_spec(spec, params, source, &lg, ws)?;
         let exec = exec_start.elapsed();
         let latency = submitted.elapsed();
         self.metrics.bump("jobs_executed", 1);
-        self.metrics
-            .observe(&format!("exec/{}", req.algo.label()), exec);
+        self.metrics.observe(&format!("exec/{}", spec.label), exec);
         Ok(JobResult {
-            id: req.id,
-            algo: req.algo.label(),
+            id,
+            algo: spec.label,
             output,
             exec,
             latency,
         })
     }
 
-    /// Dispatch one request through the workspace-carrying algorithm
-    /// entry points.
-    fn run_algo(
+    /// Validate and dispatch one query through its spec's solo engine.
+    fn run_spec(
         &self,
-        req: &JobRequest,
+        spec: &'static AlgoSpec,
+        params: Params,
+        source: V,
         lg: &LoadedGraph,
         ws: &mut QueryWorkspace,
     ) -> Result<JobOutput> {
         let g = &*lg.graph;
-        Ok(match req.algo {
-            AlgoKind::BfsVgc { tau } => {
-                bfs::vgc_bfs_ws(g, req.source, tau, None, &mut ws.bfs);
-                ws.bfs.dist.export_into(g.n(), &mut ws.out_u32);
-                summarize_bfs(&ws.out_u32)
-            }
-            AlgoKind::BfsFrontier => summarize_bfs(&bfs::frontier_bfs(g, req.source, None)),
-            AlgoKind::BfsDirOpt => {
-                bfs::diropt_bfs_ws(g, Some(lg.transpose()), req.source, None, &mut ws.bfs);
-                ws.bfs.dist.export_into(g.n(), &mut ws.out_u32);
-                summarize_bfs(&ws.out_u32)
-            }
-            AlgoKind::SccVgc { tau } => {
-                scc::vgc_scc_ws(g, Some(lg.transpose()), tau, 42, None, &mut ws.scc);
-                summarize_scc(ws.scc.labels())
-            }
-            AlgoKind::SccMultistep => {
-                summarize_scc(&scc::multistep_scc(g, Some(lg.transpose()), None))
-            }
-            AlgoKind::Bcc => {
-                let r = bcc::fast_bcc(lg.symmetrized(), None);
-                JobOutput::Bcc {
-                    blocks: r.n_bcc,
-                    articulation: r.articulation.iter().filter(|&&a| a).count(),
-                }
-            }
-            AlgoKind::SsspRho { tau } => {
-                sssp::rho_stepping_ws(g, req.source, tau, None, &mut ws.sssp);
-                ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
-                summarize_sssp(&ws.out_f32)
-            }
-            AlgoKind::SsspDelta => {
-                sssp::delta_stepping_ws(g, req.source, None, None, &mut ws.sssp);
-                ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
-                summarize_sssp(&ws.out_f32)
-            }
-            AlgoKind::DenseClosure { block } => {
-                let engine = self
-                    .engine
-                    .context("no dense engine attached (run `make artifacts`)")?;
-                let tile = engine
-                    .closure_tiles()
-                    .into_iter()
-                    .filter(|&t| t >= block.min(g.n()))
-                    .min()
-                    .context("no closure artifact large enough")?;
-                let k = block.min(g.n()).min(tile);
-                let vs = DenseBlock::top_degree_block(g, k);
-                let db = DenseBlock::extract(g, &vs, tile);
-                let closure = db.closure(engine)?;
-                let finite = closure.iter().filter(|&&d| d < INF).count();
-                JobOutput::Dense {
-                    block: k,
-                    finite_pairs: finite,
-                }
-            }
-        })
+        if spec.needs_source && (source as usize) >= g.n() {
+            bail!("source {} out of range (n={})", source, g.n());
+        }
+        (spec.solo)(&EngineCtx { engine: self.engine }, lg, params, source, ws)
     }
 
-    /// Run a batch against `lookup`: requests grouped by (graph,
-    /// algorithm), groups of ≥ 2 fusable requests
-    /// ([`AlgoKind::fusable`]) answered by one batched frontier walk
-    /// per ≤ 64 sources, everything else run solo — results in
-    /// submission order. Latencies are measured from `t0`: the
-    /// serving loops pass the head request's arrival time, so the
-    /// fusion-window wait and in-batch queueing delay are both
-    /// included. The whole batch shares the one `ws` (batch execution
-    /// is serial on the calling worker).
+    /// Run a batch against `lookup`: requests grouped by `(graph,
+    /// spec id, params)`, groups of ≥ 2 requests whose spec has a
+    /// [`BatchEngine`](crate::algo::api::BatchEngine) answered by one
+    /// batched frontier walk per ≤ 64 sources, everything else run
+    /// solo — results in submission order. Latencies are measured
+    /// from `t0`: the serving loops pass the head request's arrival
+    /// time, so the fusion-window wait and in-batch queueing delay are
+    /// both included. The whole batch shares the one `ws` (batch
+    /// execution is serial on the calling worker).
     pub(crate) fn run_batch_from(
         &self,
         t0: Instant,
@@ -351,22 +343,27 @@ impl ExecCore<'_> {
         lookup: impl Fn(&str) -> Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
     ) -> Vec<Result<JobResult>> {
-        // Group indices by (graph, algo), preserving order within
-        // groups. The derived AlgoKind equality keys parameterized
-        // variants by their parameter, so e.g. two BfsVgc τ values
-        // never fuse together.
-        let mut groups: HashMap<(&str, AlgoKind), Vec<usize>> = HashMap::new();
+        // Group indices by the registry key (graph, spec id, params),
+        // preserving order within groups. Params is part of the key,
+        // so e.g. two BfsVgc τ values never fuse together.
+        let mut groups: HashMap<(&str, u16, Params), Vec<usize>> = HashMap::new();
         for (i, r) in reqs.iter().enumerate() {
-            groups.entry((r.graph.as_str(), r.algo)).or_default().push(i);
+            groups
+                .entry((r.graph.as_str(), r.algo.spec().id, r.algo.params()))
+                .or_default()
+                .push(i);
         }
-        let mut order: Vec<(&str, AlgoKind)> = groups.keys().copied().collect();
-        order.sort_by_key(|&(name, algo)| (name, algo.label(), algo.param()));
+        // Deterministic batch schedule: graph name, then registry id,
+        // then params.
+        let mut order: Vec<(&str, u16, Params)> = groups.keys().copied().collect();
+        order.sort_unstable();
         let mut results: Vec<Option<Result<JobResult>>> = (0..reqs.len()).map(|_| None).collect();
         for key in order {
             let idxs = &groups[&key];
-            if key.1.fusable() && idxs.len() >= 2 {
+            let spec = reqs[idxs[0]].algo.spec();
+            if spec.fusable() && idxs.len() >= 2 {
                 let lg = lookup(&reqs[idxs[0]].graph);
-                self.run_fused_group(reqs, idxs, lg, ws, &mut results);
+                self.run_fused_group(reqs, idxs, spec, key.2, lg, ws, &mut results);
             } else {
                 for &i in idxs {
                     self.metrics.bump("queries_solo", 1);
@@ -388,18 +385,22 @@ impl ExecCore<'_> {
             .collect()
     }
 
-    /// Answer one (graph, algorithm) group of fusable requests with
-    /// batched multi-source walks (≤ [`MAX_FUSE`] sources each) and
-    /// demultiplex per-lane results back into the slots of `results`.
+    /// Answer one (graph, spec, params) group of fusable requests with
+    /// the spec's batched multi-source engine (≤ [`MAX_FUSE`] sources
+    /// per walk) and demultiplex per-lane results back into the slots
+    /// of `results`.
+    #[allow(clippy::too_many_arguments)]
     fn run_fused_group(
         &self,
         reqs: &[JobRequest],
         idxs: &[usize],
+        spec: &'static AlgoSpec,
+        params: Params,
         lg: Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
         results: &mut [Option<Result<JobResult>>],
     ) {
-        let algo = reqs[idxs[0]].algo;
+        let be = spec.batch.expect("fused group requires a batch engine");
         // queries_fused counts every request *routed* to the fused
         // path (errors included), so queries_fused + queries_solo
         // always equals the batch size and fused_fraction stays exact.
@@ -413,8 +414,7 @@ impl ExecCore<'_> {
             }
             return;
         };
-        let g = &*lg.graph;
-        let n = g.n();
+        let n = lg.graph.n();
         // Out-of-range sources fail individually; the rest still fuse.
         let mut valid: Vec<usize> = Vec::with_capacity(idxs.len());
         for &i in idxs {
@@ -432,43 +432,18 @@ impl ExecCore<'_> {
             let seeds: Vec<V> = chunk.iter().map(|&i| reqs[i].source).collect();
             let lanes = seeds.len();
             let exec_start = Instant::now();
-            match algo {
-                AlgoKind::BfsVgc { tau } => {
-                    multi::multi_bfs_vgc_ws(g, &seeds, tau, None, &mut ws.multi_bfs)
-                }
-                AlgoKind::BfsDirOpt => multi::multi_bfs_diropt_ws(
-                    g,
-                    Some(lg.transpose()),
-                    &seeds,
-                    None,
-                    &mut ws.multi_bfs,
-                ),
-                AlgoKind::SsspRho { tau } => {
-                    multi::multi_rho_ws(g, &seeds, tau, None, &mut ws.multi_sssp)
-                }
-                other => unreachable!("non-fusable algo {other:?} in fused group"),
-            }
+            (be.run)(&lg, params, &seeds, ws);
             // The walk is shared: each fused request's exec is the
             // whole walk's time (vs. k walks unfused).
             let exec = exec_start.elapsed();
             for (lane, &i) in chunk.iter().enumerate() {
-                let output = match algo {
-                    AlgoKind::SsspRho { .. } => {
-                        ws.multi_sssp.export_lane_into(lane, n, &mut ws.out_f32);
-                        summarize_sssp(&ws.out_f32)
-                    }
-                    _ => {
-                        ws.multi_bfs.export_lane_into(lane, n, &mut ws.out_u32);
-                        summarize_bfs(&ws.out_u32)
-                    }
-                };
+                let output = (be.demux)(ws, lane, n);
                 self.metrics.bump("jobs_executed", 1);
                 self.metrics.bump("queries_fused", 1);
-                self.metrics
-                    .observe(&format!("exec/{}", algo.label()), exec);
+                self.metrics.observe(&format!("exec/{}", spec.label), exec);
                 results[i] = Some(Ok(JobResult {
                     id: reqs[i].id,
-                    algo: algo.label(),
+                    algo: spec.label,
                     output,
                     exec,
                     // Placeholder: run_batch stamps every Ok result
@@ -514,43 +489,13 @@ pub(crate) fn answer(
     }
 }
 
-fn summarize_bfs(dist: &[u32]) -> JobOutput {
-    let mut reached = 0usize;
-    let mut ecc = 0u32;
-    for &d in dist {
-        if d != UNREACHED {
-            reached += 1;
-            ecc = ecc.max(d);
-        }
-    }
-    JobOutput::Bfs { reached, ecc }
-}
-
-fn summarize_scc(labels: &[u32]) -> JobOutput {
-    let mut counts: HashMap<u32, usize> = HashMap::new();
-    for &l in labels {
-        *counts.entry(l).or_insert(0) += 1;
-    }
-    JobOutput::Scc {
-        count: counts.len(),
-        largest: counts.values().copied().max().unwrap_or(0),
-    }
-}
-
-fn summarize_sssp(dist: &[f32]) -> JobOutput {
-    let mut reached = 0usize;
-    let mut radius = 0.0f32;
-    for &d in dist {
-        if d < INF {
-            reached += 1;
-            radius = radius.max(d);
-        }
-    }
-    JobOutput::Sssp { reached, radius }
-}
-
 /// Convenience: build requests for a synthetic workload trace.
-pub fn workload(graphs: &[&str], algos: &[AlgoKind], queries: usize, seed: u64) -> Vec<JobRequest> {
+pub fn workload(
+    graphs: &[&str],
+    algos: &[super::job::AlgoKind],
+    queries: usize,
+    seed: u64,
+) -> Vec<JobRequest> {
     let mut rng = crate::prop::Rng::new(seed);
     (0..queries as u64)
         .map(|id| JobRequest {
@@ -565,6 +510,8 @@ pub fn workload(graphs: &[&str], algos: &[AlgoKind], queries: usize, seed: u64) 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algo::api::ParseArgs;
+    use crate::coordinator::job::AlgoKind;
     use crate::graph::gen;
 
     fn coord_with_graphs() -> Coordinator {
@@ -603,6 +550,71 @@ mod tests {
             }
             other => panic!("wrong output {other:?}"),
         }
+    }
+
+    #[test]
+    fn execute_registry_opened_cc_and_kcore() {
+        // The algorithms the registry opened for serving: CC and
+        // k-core answer through the same workspace path as everything
+        // else.
+        let c = coord_with_graphs();
+        let r = c
+            .execute(&JobRequest {
+                id: 1,
+                graph: "road".into(),
+                algo: AlgoKind::Cc,
+                source: 0,
+            })
+            .unwrap();
+        assert_eq!(r.algo, "cc");
+        match r.output {
+            JobOutput::Cc { components, largest } => {
+                assert!(components >= 1 && largest >= 1);
+            }
+            other => panic!("wrong output {other:?}"),
+        }
+        let r = c
+            .execute(&JobRequest {
+                id: 2,
+                graph: "social".into(),
+                algo: AlgoKind::Kcore,
+                source: 0,
+            })
+            .unwrap();
+        assert_eq!(r.algo, "kcore");
+        match r.output {
+            JobOutput::Kcore {
+                degeneracy,
+                in_max_core,
+            } => {
+                assert!(degeneracy >= 1 && in_max_core >= 1);
+            }
+            other => panic!("wrong output {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_query_matches_shim_execution() {
+        // The registry-native Query path and the AlgoKind shim path
+        // must answer identically.
+        let c = coord_with_graphs();
+        let q = Query::new("road", "bfs", &ParseArgs { tau: 64, block: 64 })
+            .unwrap()
+            .with_source(3);
+        let via_query = c.run_query(&q).unwrap();
+        let via_shim = c
+            .execute(&JobRequest {
+                id: 0,
+                graph: "road".into(),
+                algo: AlgoKind::BfsVgc { tau: 64 },
+                source: 3,
+            })
+            .unwrap();
+        assert_eq!(via_query.output, via_shim.output);
+        assert_eq!(via_query.algo, via_shim.algo);
+        // Unknown graphs fail the same way.
+        let q = Query::new("ghost", "cc", &ParseArgs::default()).unwrap();
+        assert!(c.run_query(&q).is_err());
     }
 
     #[test]
@@ -721,6 +733,8 @@ mod tests {
             AlgoKind::SccVgc { tau: 64 },
             AlgoKind::SsspRho { tau: 64 },
             AlgoKind::SsspDelta,
+            AlgoKind::Cc,
+            AlgoKind::Kcore,
         ] {
             let cold = c.execute(&mk(algo)).unwrap();
             let warm = c.execute(&mk(algo)).unwrap();

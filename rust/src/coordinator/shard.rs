@@ -34,9 +34,10 @@
 //!   dispatch; `load_graph` publishes new snapshots without ever
 //!   blocking request execution).
 //! * **Fusion-window admission** ([`admit_batch`]) — when the head
-//!   request is fusable and the window is nonzero, the worker keeps
-//!   draining its inbox until the window deadline, the batch cap, or
-//!   64 same-(graph, algo, τ) lanes accumulate — then dispatches one
+//!   request's registry spec has a batch engine and the window is
+//!   nonzero, the worker keeps draining its inbox until the window
+//!   deadline, the batch cap, or 64 same-(graph, spec id, params)
+//!   lanes accumulate — then dispatches one
 //!   [`ExecCore::run_batch_from`], which fuses the group into batched
 //!   multi-source walks and demultiplexes per-lane results in
 //!   submission order. Non-fusable heads fall through immediately
@@ -220,10 +221,12 @@ fn shard_loop(
 /// Fusion-window admission: grow `batch` (which already holds the
 /// just-received head request) from `rx`.
 ///
-/// * Fusable head and a nonzero `window`: block-drain the channel up
-///   to the window deadline, stopping early at `max_batch` requests or
-///   once [`MAX_FUSE`] requests share the head's (graph, algo, τ) key
-///   — a full fused walk is ready, waiting longer buys nothing.
+/// * Fusable head (its registry spec has a batch engine) and a
+///   nonzero `window`: block-drain the channel up to the window
+///   deadline, stopping early at `max_batch` requests or once
+///   [`MAX_FUSE`] requests share the head's `(graph, spec id,
+///   params)` registry key — a full fused walk is ready, waiting
+///   longer buys nothing.
 /// * Otherwise: fall through immediately, picking up only what is
 ///   already queued (the pre-window behavior).
 ///
@@ -243,7 +246,11 @@ pub(crate) fn admit_batch(
     if !window.is_zero() && max_batch > 1 && batch[0].algo.fusable() {
         metrics.bump("window_waits", 1);
         let deadline = Instant::now() + window;
-        let head_algo = batch[0].algo;
+        // The grouping key run_batch fuses on: registry spec id +
+        // parsed params (+ the graph name) — AlgoKind is only the
+        // wire encoding.
+        let head_spec = batch[0].algo.spec().id;
+        let head_params = batch[0].algo.params();
         let head_graph = batch[0].graph.clone();
         let mut same_key = 1usize;
         while batch.len() < max_batch && same_key < MAX_FUSE {
@@ -254,7 +261,10 @@ pub(crate) fn admit_batch(
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(r) => {
-                    if r.algo == head_algo && r.graph == head_graph {
+                    if r.algo.spec().id == head_spec
+                        && r.algo.params() == head_params
+                        && r.graph == head_graph
+                    {
                         same_key += 1;
                     }
                     batch.push(r);

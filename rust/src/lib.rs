@@ -137,6 +137,36 @@
 //! N-shard-windowed throughput on a mixed two-graph workload and
 //! asserts `fused_fraction` rises once a window is in play.
 //!
+//! ## Query API — the open algorithm registry
+//!
+//! Every servable algorithm is described **once**, by a static
+//! [`algo::api::AlgoSpec`] in the registry
+//! ([`algo::api::registry`]): label + aliases, parameter parsing
+//! ([`algo::api::ParseArgs`] → [`algo::api::Params`]), a solo engine
+//! (one query against a [`coordinator::LoadedGraph`] +
+//! [`algo::QueryWorkspace`] → typed [`algo::api::QueryOutput`]), an
+//! optional batch engine (the ≤ 64-lane fused walk + per-lane demux),
+//! and an optional traced engine (CLI `run` / simulator). A request
+//! is a [`algo::api::Query`]`{ graph, algo: &'static AlgoSpec,
+//! source, params }`; every front end — [`coordinator::Coordinator`]
+//! execution and batching, the sharded server's fusion-window
+//! grouping key `(graph, spec id, params)`, the CLI, the workload
+//! generator, the bench harness — dispatches through the registry
+//! instead of per-algorithm match arms.
+//!
+//! **Registering an algorithm is one module touch**: implement its
+//! engine functions in `algo/api/engines.rs`, add one `AlgoSpec`
+//! line to `algo/api/registry.rs`, and it is parseable, servable
+//! (solo loop *and* sharded), metered and covered by the
+//! registry-completeness tests. Connectivity (`cc`) and k-core
+//! (`kcore`) were opened for serving exactly this way — try
+//! `pasgal run --algo cc --graph g.bin` or a `serve --demo` trace.
+//! The old closed `AlgoKind` enum survives only as a deprecated
+//! `Copy + Eq + Hash` wire encoding of `(spec, params)` for the
+//! channel protocol ([`coordinator::AlgoKind`] delegates every method
+//! to the registry); prefer [`algo::api::Query`] +
+//! [`coordinator::Coordinator::run_query`] in new code.
+//!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 

@@ -11,11 +11,12 @@
 //! pasgal calibrate
 //! ```
 
-use pasgal::algo::{bcc, bfs, scc, sssp};
+use pasgal::algo::api::{self, EngineCtx, ParseArgs};
+use pasgal::algo::QueryWorkspace;
 use pasgal::bail;
 use pasgal::error::{Context, Error, Result};
 use pasgal::bench::suite as bsuite;
-use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest, ShardConfig, ShardServer};
+use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest, LoadedGraph, ShardConfig, ShardServer};
 use pasgal::graph::gen::{suite_entry, Scale};
 use pasgal::graph::{io, stats};
 use pasgal::sim::{makespan, AlgoTrace, CostModel};
@@ -118,12 +119,16 @@ USAGE: pasgal <command> [--key value ...]
 
   gen       --name <LJ|TW|AF|REC|...> [--scale tiny|small|medium] --out g.bin
   stats     --suite [--scale tiny]  |  --graph g.bin
-  run       --algo <bfs-vgc|bfs-frontier|bfs-diropt|scc-vgc|scc-multistep|
-                    bcc-fast|sssp-rho|sssp-delta> --graph g.bin
-            [--source 0] [--tau 512] [--p 192]  (report simulated speedup)
+  run       --algo <any registered label/alias, e.g. bfs-vgc|bfs-frontier|
+                    bfs-diropt|scc-vgc|scc-multistep|bcc-fast|sssp-rho|
+                    sssp-delta|cc|kcore|dense-closure> --graph g.bin
+            [--source 0] [--tau 512] [--block 64] [--p 192]
+            (report simulated speedup; algorithms resolve through the
+             algo::api registry)
   serve     --demo [--requests 64]   sharded serving demo over a workload trace
             [--shards N]             shard workers (default: pool width)
             [--fusion-window-us U]   fusion-window deadline (default 200, 0 = off)
+            [--tau 512] [--block 64] algorithm parameters for the demo mix
   table1 | table3 | table4 | table5 | sssp | fig1 | fig2   [--scale tiny]
   calibrate                          measure + print the sim cost model
 "
@@ -170,62 +175,73 @@ fn cmd_run(args: &Args) -> Result<()> {
     let path = PathBuf::from(args.get("graph").context("--graph required")?);
     let g = io::read_graph(&path)?;
     let src: V = args.num("source", 0);
-    let tau: usize = args.num("tau", 512);
+    let parse_args = ParseArgs {
+        tau: args.num("tau", 512),
+        block: args.num("block", 64),
+    };
     let p: usize = args.num("p", bsuite::SIM_P);
     let model = CostModel::default();
     let mut trace = AlgoTrace::new();
 
-    let (label, t1core) = match algo {
-        "bfs-vgc" => {
-            let (_, d) = pasgal::bench::time_once(|| bfs::vgc_bfs(&g, src, tau, Some(&mut trace)));
-            ("bfs-vgc", d)
+    // One registry lookup replaces the old per-algorithm match: any
+    // registered spec (label or alias) runs here, CC and k-core
+    // included.
+    let spec = api::find(algo)
+        .with_context(|| format!("unknown algo {algo:?} (see `pasgal help`)"))?;
+    let params = (spec.parse)(&parse_args);
+    let (n, m) = (g.n(), g.m());
+    if spec.needs_source && (src as usize) >= n {
+        bail!("source {src} out of range (n={n})");
+    }
+    let lg = LoadedGraph::new(g);
+    // Materialize exactly the derived views this spec's engines read
+    // (spec.views) before timing starts, so t1core measures the
+    // algorithm, not one-off view construction.
+    spec.prewarm(&lg);
+    let t1core = match spec.traced {
+        // Preferred: the trace-recording single run feeding the
+        // virtual-multicore simulator.
+        Some(traced) => pasgal::bench::time_once(|| traced(&lg, params, src, &mut trace)).1,
+        // Specs without a traced engine (e.g. cc, dense-closure)
+        // still run — through their solo engine, minus the sim trace.
+        None => {
+            let mut ws = QueryWorkspace::new();
+            // Specs that consult the AOT dense engine get one, loaded
+            // the same way `serve` loads it; everything else skips
+            // engine startup entirely.
+            let engine = if spec.needs_engine {
+                let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+                match pasgal::runtime::EngineHandle::spawn(artifacts) {
+                    Ok(engine) => Some(engine),
+                    Err(e) => {
+                        eprintln!("pasgal: dense engine unavailable: {e:#}");
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            let cx = EngineCtx {
+                engine: engine.as_ref(),
+            };
+            let (out, d) =
+                pasgal::bench::time_once(|| (spec.solo)(&cx, &lg, params, src, &mut ws));
+            println!(
+                "{}: n={n} m={m} t1core={d:?} output={:?} (no traced engine; sim skipped)",
+                spec.label,
+                out?
+            );
+            return Ok(());
         }
-        "bfs-frontier" => {
-            let (_, d) =
-                pasgal::bench::time_once(|| bfs::frontier_bfs(&g, src, Some(&mut trace)));
-            ("bfs-frontier", d)
-        }
-        "bfs-diropt" => {
-            let gt = if g.symmetric { None } else { Some(g.transpose()) };
-            let (_, d) = pasgal::bench::time_once(|| {
-                bfs::diropt_bfs(&g, gt.as_ref().or(Some(&g)), src, Some(&mut trace))
-            });
-            ("bfs-diropt", d)
-        }
-        "scc-vgc" => {
-            let (_, d) =
-                pasgal::bench::time_once(|| scc::vgc_scc(&g, None, tau, 42, Some(&mut trace)));
-            ("scc-vgc", d)
-        }
-        "scc-multistep" => {
-            let (_, d) =
-                pasgal::bench::time_once(|| scc::multistep_scc(&g, None, Some(&mut trace)));
-            ("scc-multistep", d)
-        }
-        "bcc-fast" => {
-            let sym = if g.symmetric { g.clone() } else { g.symmetrize() };
-            let (_, d) = pasgal::bench::time_once(|| bcc::fast_bcc(&sym, Some(&mut trace)));
-            ("bcc-fast", d)
-        }
-        "sssp-rho" => {
-            let (_, d) =
-                pasgal::bench::time_once(|| sssp::rho_stepping(&g, src, tau, Some(&mut trace)));
-            ("sssp-rho", d)
-        }
-        "sssp-delta" => {
-            let (_, d) =
-                pasgal::bench::time_once(|| sssp::delta_stepping(&g, src, None, Some(&mut trace)));
-            ("sssp-delta", d)
-        }
-        other => bail!("unknown algo {other:?} (see `pasgal help`)"),
     };
 
     let sim_ns = makespan(&trace, &model, p);
-    let seq_ns = model.seq_time(g.n() as u64, g.m() as u64);
+    let seq_ns = model.seq_time(n as u64, m as u64);
     println!(
-        "{label}: n={} m={} rounds={} t1core={:?} sim{p}={:.3}ms speedup_vs_seq_model={:.2}x",
-        g.n(),
-        g.m(),
+        "{}: n={} m={} rounds={} t1core={:?} sim{p}={:.3}ms speedup_vs_seq_model={:.2}x",
+        spec.label,
+        n,
+        m,
         trace.num_rounds(),
         t1core,
         sim_ns / 1e6,
@@ -256,13 +272,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     coord.load_graph("social", pasgal::graph::gen::social(12, 14, 0x17));
     println!("loaded graphs: road (large-diameter), social (small-diameter)");
 
-    let algos = [
-        AlgoKind::BfsVgc { tau: 512 },
-        AlgoKind::SsspRho { tau: 512 },
-        AlgoKind::SccVgc { tau: 512 },
-        AlgoKind::Bcc,
-        AlgoKind::DenseClosure { block: 64 },
-    ];
+    // The demo mix is named, not hard-coded: every entry resolves
+    // through the algorithm registry (so `cc` and `kcore` serve like
+    // everything else), with --tau/--block threaded into the parse.
+    let parse_args = ParseArgs {
+        tau: args.num("tau", 512),
+        block: args.num("block", 64),
+    };
+    let algos: Vec<AlgoKind> = ["bfs", "sssp", "scc", "bcc", "dense-closure", "cc", "kcore"]
+        .iter()
+        .map(|name| {
+            AlgoKind::parse_with(name, &parse_args)
+                .with_context(|| format!("{name:?} missing from the registry"))
+        })
+        .collect::<Result<_>>()?;
     let mut reqs = pasgal::coordinator::workload(&["road", "social"], &algos, requests, 7);
     for r in &mut reqs {
         r.source %= 4000; // clamp into the smallest loaded graph

@@ -8,7 +8,7 @@ use pasgal::algo::multi::{
     multi_bfs_diropt, multi_bfs_vgc, multi_bfs_vgc_ws, multi_rho, multi_rho_ws,
 };
 use pasgal::algo::workspace::{MultiBfsWorkspace, MultiSsspWorkspace};
-use pasgal::algo::{bfs, sssp};
+use pasgal::algo::{api, bfs, sssp};
 use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
 use pasgal::graph::{gen, Graph};
 use pasgal::V;
@@ -139,6 +139,58 @@ fn warm_multi_workspaces_survive_width_and_graph_changes() {
             );
         }
     }
+}
+
+#[test]
+fn every_registry_batch_engine_is_bit_identical_solo_vs_fused() {
+    // Registry-completeness for fusion: iterate the registry — not a
+    // hand-kept list — and, for every spec with a BatchEngine, prove
+    // a 3-lane fused run on a chain graph answers bit-identically to
+    // three solo queries. A new fusable spec is covered the moment
+    // its registry line lands.
+    let fused = Coordinator::new();
+    let solo = Coordinator::new();
+    // A directed weighted chain: head lanes walk the whole diameter,
+    // tail lanes see almost nothing — the skew that shakes out lane
+    // cross-talk.
+    let g = gen::path(400).with_unit_weights();
+    for c in [&fused, &solo] {
+        c.load_graph("chain", g.clone());
+    }
+    let mut next_id = 0u64;
+    let mut fusable_specs = 0u64;
+    for spec in api::all().iter().filter(|s| s.fusable()) {
+        fusable_specs += 1;
+        let algo = AlgoKind::parse(spec.label, 32)
+            .unwrap_or_else(|| panic!("{} must have a shim encoding", spec.label));
+        let reqs: Vec<JobRequest> = [3u32, 199, 397]
+            .iter()
+            .map(|&source| {
+                next_id += 1;
+                JobRequest {
+                    id: next_id,
+                    graph: "chain".into(),
+                    algo,
+                    source,
+                }
+            })
+            .collect();
+        let batched = fused.run_batch(&reqs);
+        for (i, r) in batched.iter().enumerate() {
+            let got = r.as_ref().unwrap();
+            let want = solo.execute(&reqs[i]).unwrap();
+            assert_eq!(
+                got.output, want.output,
+                "{} lane {i}: fused must equal solo",
+                spec.label
+            );
+        }
+    }
+    assert!(fusable_specs >= 3, "registry lost its batch engines?");
+    // Each 3-lane group dispatched exactly one fused walk.
+    assert_eq!(fused.metrics.counter("fused_walks"), fusable_specs);
+    assert_eq!(fused.metrics.counter("queries_fused"), 3 * fusable_specs);
+    assert_eq!(solo.metrics.counter("queries_fused"), 0);
 }
 
 #[test]

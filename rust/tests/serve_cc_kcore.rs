@@ -1,0 +1,265 @@
+//! End-to-end serving coverage for the registry-opened algorithms:
+//! `cc` and `kcore` must be servable through `Coordinator::serve` and
+//! the sharded `ShardServer` with correct summaries (checked against
+//! the library algorithms on graphs with known structure), resolve
+//! from the CLI-facing labels/aliases, and — being non-fusable — fall
+//! through the fusion window immediately instead of waiting it out.
+
+use pasgal::algo::api::{ParseArgs, Query};
+use pasgal::algo::{cc, kcore};
+use pasgal::coordinator::{
+    AlgoKind, Coordinator, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
+};
+use pasgal::graph::{gen, Graph};
+use pasgal::V;
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Two directed triangles plus an isolated vertex: 3 connected
+/// components (treating edges bidirectionally), largest of size 3.
+fn two_triangles() -> Graph {
+    Graph::from_edges(
+        7,
+        &[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)],
+        true,
+    )
+}
+
+/// K4 on {0,1,2,3} plus tail 3-4-5 (symmetrized): coreness
+/// [3,3,3,3,1,1] — degeneracy 3, four vertices in the max core.
+fn clique_with_tail() -> Graph {
+    let mut edges = vec![(3u32, 4u32), (4, 5)];
+    for u in 0..4u32 {
+        for v in (u + 1)..4 {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(6, &edges, true).symmetrize()
+}
+
+fn req(id: u64, graph: &str, algo: AlgoKind, source: V) -> JobRequest {
+    JobRequest {
+        id,
+        graph: graph.into(),
+        algo,
+        source,
+    }
+}
+
+fn serve_all(
+    coord: &Arc<Coordinator>,
+    config: ShardConfig,
+    reqs: &[JobRequest],
+) -> HashMap<u64, JobResult> {
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    for r in reqs {
+        req_tx.send(r.clone()).unwrap();
+    }
+    drop(req_tx);
+    ShardServer::new(Arc::clone(coord), config).serve(req_rx, res_tx);
+    res_rx.iter().map(|r| (r.id, r)).collect()
+}
+
+#[test]
+fn solo_execution_reports_correct_summaries() {
+    let c = Coordinator::new();
+    c.load_graph("tri", two_triangles());
+    c.load_graph("clique", clique_with_tail());
+
+    let r = c.execute(&req(0, "tri", AlgoKind::Cc, 0)).unwrap();
+    assert_eq!(r.algo, "cc");
+    assert_eq!(
+        r.output,
+        JobOutput::Cc {
+            components: 3,
+            largest: 3
+        }
+    );
+    // Cross-check against the library algorithm.
+    let labels = cc::connected_components(&two_triangles());
+    assert_eq!(cc::component_count(&labels), 3);
+
+    let r = c.execute(&req(1, "clique", AlgoKind::Kcore, 0)).unwrap();
+    assert_eq!(r.algo, "kcore");
+    assert_eq!(
+        r.output,
+        JobOutput::Kcore {
+            degeneracy: 3,
+            in_max_core: 4
+        }
+    );
+    // Cross-check against the sequential oracle.
+    assert_eq!(kcore::seq_kcore(&clique_with_tail()), vec![3, 3, 3, 3, 1, 1]);
+}
+
+#[test]
+fn query_api_serves_cc_and_kcore_by_label_and_alias() {
+    let c = Coordinator::new();
+    c.load_graph("tri", two_triangles());
+    c.load_graph("clique", clique_with_tail());
+    for name in ["cc", "connectivity", "components"] {
+        let out = c
+            .run_query(&Query::new("tri", name, &ParseArgs::default()).unwrap())
+            .unwrap();
+        assert_eq!(
+            out.output,
+            JobOutput::Cc {
+                components: 3,
+                largest: 3
+            },
+            "alias {name:?}"
+        );
+    }
+    for name in ["kcore", "k-core", "coreness"] {
+        let out = c
+            .run_query(&Query::new("clique", name, &ParseArgs::default()).unwrap())
+            .unwrap();
+        assert_eq!(
+            out.output,
+            JobOutput::Kcore {
+                degeneracy: 3,
+                in_max_core: 4
+            },
+            "alias {name:?}"
+        );
+    }
+}
+
+#[test]
+fn single_threaded_serve_loop_answers_cc_and_kcore() {
+    let c = Arc::new(Coordinator::new());
+    c.load_graph("tri", two_triangles());
+    c.load_graph("clique", clique_with_tail());
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    let server = {
+        let c = Arc::clone(&c);
+        std::thread::spawn(move || c.serve(req_rx, res_tx, 8))
+    };
+    for i in 0..6u64 {
+        let r = if i % 2 == 0 {
+            req(i, "tri", AlgoKind::Cc, 0)
+        } else {
+            req(i, "clique", AlgoKind::Kcore, 0)
+        };
+        req_tx.send(r).unwrap();
+    }
+    drop(req_tx);
+    let results: HashMap<u64, JobResult> = res_rx.iter().map(|r| (r.id, r)).collect();
+    server.join().unwrap();
+    assert_eq!(results.len(), 6);
+    for (id, r) in &results {
+        if id % 2 == 0 {
+            assert_eq!(
+                r.output,
+                JobOutput::Cc {
+                    components: 3,
+                    largest: 3
+                }
+            );
+        } else {
+            assert_eq!(
+                r.output,
+                JobOutput::Kcore {
+                    degeneracy: 3,
+                    in_max_core: 4
+                }
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_server_answers_cc_and_kcore_with_correct_summaries() {
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("tri", two_triangles());
+    coord.load_graph("clique", clique_with_tail());
+    coord.load_graph("road", gen::road(8, 8, 5));
+    // A mixed stream: registry-opened kinds interleaved with fusable
+    // BFS so the window machinery is actually in play.
+    let reqs: Vec<JobRequest> = (0..18u64)
+        .map(|i| match i % 3 {
+            0 => req(i, "tri", AlgoKind::Cc, 0),
+            1 => req(i, "clique", AlgoKind::Kcore, 0),
+            _ => req(i, "road", AlgoKind::BfsVgc { tau: 64 }, (i % 5) as V),
+        })
+        .collect();
+    let results = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::from_millis(5),
+            max_batch: 64,
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 18, "every request answered");
+    for i in (0..18u64).step_by(3) {
+        assert_eq!(
+            results[&i].output,
+            JobOutput::Cc {
+                components: 3,
+                largest: 3
+            },
+            "request {i}"
+        );
+        assert_eq!(
+            results[&(i + 1)].output,
+            JobOutput::Kcore {
+                degeneracy: 3,
+                in_max_core: 4
+            },
+            "request {}",
+            i + 1
+        );
+        assert!(
+            matches!(results[&(i + 2)].output, JobOutput::Bfs { reached, .. } if reached > 1),
+            "request {}",
+            i + 2
+        );
+    }
+    assert_eq!(coord.metrics.counter("jobs_executed"), 18);
+}
+
+#[test]
+fn non_fusable_new_specs_fall_through_the_window_immediately() {
+    // An absurd 30s fusion window: if the registry marked cc/kcore
+    // fusable (or the window failed to check the spec), this test
+    // would sleep for minutes. Non-fusable heads must dispatch at
+    // once, with no window ever opening.
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("tri", two_triangles());
+    coord.load_graph("clique", clique_with_tail());
+    let reqs: Vec<JobRequest> = (0..8u64)
+        .map(|i| {
+            if i % 2 == 0 {
+                req(i, "tri", AlgoKind::Cc, 0)
+            } else {
+                req(i, "clique", AlgoKind::Kcore, 0)
+            }
+        })
+        .collect();
+    let t0 = Instant::now();
+    let results = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::from_secs(30),
+            max_batch: 4,
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 8);
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "non-fusable specs must not wait for the fusion window"
+    );
+    assert_eq!(
+        coord.metrics.counter("window_waits"),
+        0,
+        "no window opens for specs without a batch engine"
+    );
+}
