@@ -18,9 +18,10 @@
 //! make artifacts && cargo run --release --example e2e_pipeline
 //! ```
 
+use pasgal::algo::api::{self, ParseArgs, Query};
 use pasgal::algo::{bfs, scc};
 use pasgal::bench::fmt_duration;
-use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
+use pasgal::coordinator::{Coordinator, JobRequest};
 use pasgal::graph::gen;
 use pasgal::runtime::EngineHandle;
 use pasgal::sim::{makespan, AlgoTrace, CostModel};
@@ -54,16 +55,30 @@ fn main() -> pasgal::error::Result<()> {
     coord.load_graph("social", social);
 
     // --- Serve a mixed workload trace ------------------------------------
-    let algos = [
-        AlgoKind::BfsVgc { tau: 512 },
-        AlgoKind::SsspRho { tau: 512 },
-        AlgoKind::SccVgc { tau: 512 },
-        AlgoKind::Bcc,
-        AlgoKind::DenseClosure { block: 64 },
+    // Registry-native requests end to end: every algorithm resolves
+    // by name (label or alias) through algo::api, and a JobRequest on
+    // the wire is a Query plus a request id — no per-algorithm enum
+    // anywhere in the pipeline.
+    let parse_args = ParseArgs { tau: 512, block: 64 };
+    let q = Query::new("road", "cc", &parse_args)?;
+    let direct = coord.run_query(&q)?;
+    println!("registry-native query: cc(road) -> {:?}", direct.output);
+    let algos: Vec<_> = [
+        "bfs-vgc",
+        "sssp-rho",
+        "scc-vgc",
+        "bcc-fast",
+        "dense-closure",
         // Registry-opened algorithms: served like any built-in.
-        AlgoKind::Cc,
-        AlgoKind::Kcore,
-    ];
+        "cc",
+        "kcore",
+    ]
+    .iter()
+    .map(|name| {
+        let spec = api::find(name).expect("demo mix names registered algorithms");
+        (spec, (spec.parse)(&parse_args))
+    })
+    .collect();
     let mut reqs = pasgal::coordinator::workload(&["road", "social"], &algos, 96, 0xE2E);
     for r in &mut reqs {
         r.source %= n_social.min(road.n()) as u32;
@@ -95,6 +110,13 @@ fn main() -> pasgal::error::Result<()> {
         "\nserved {served}/{total} jobs in {} -> {:.1} jobs/s ({dense_jobs} through the PJRT dense path)",
         fmt_duration(wall),
         served as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "result cache: hit rate {:.2} (hits {} / misses {}) on the duplicate \
+         whole-graph analyses",
+        coord.metrics.cache_hit_rate(),
+        coord.metrics.counter("cache_hits"),
+        coord.metrics.counter("cache_misses"),
     );
     for name in coord.metrics.series_names() {
         if let Some(s) = coord.metrics.summary(&name) {
@@ -145,6 +167,11 @@ fn main() -> pasgal::error::Result<()> {
         b / v
     );
     assert!(served == total, "all jobs must be served");
+    assert!(
+        coord.metrics.counter("cache_hits") > 0,
+        "a 96-request mix over 14 (graph, algo) keys must repeat \
+         whole-graph analyses — the result cache must hit"
+    );
     assert!(
         tr_vgc.num_rounds() * 4 < tr_frontier.num_rounds(),
         "VGC must collapse rounds on the large-diameter graph"

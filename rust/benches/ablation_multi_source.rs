@@ -15,11 +15,12 @@
 //! CI smoke uses a tiny value) and reps with
 //! `PASGAL_MULTI_BENCH_REPS`.
 
+use pasgal::algo::api::ParseArgs;
 use pasgal::algo::multi::{multi_bfs_vgc_ws, multi_rho_ws};
 use pasgal::algo::workspace::{BfsWorkspace, MultiBfsWorkspace, MultiSsspWorkspace, SsspWorkspace};
 use pasgal::algo::{bfs, sssp};
 use pasgal::bench::{bench, env_usize, fmt_duration, Table};
-use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
+use pasgal::coordinator::{Coordinator, JobRequest};
 use pasgal::graph::{gen, Graph};
 use pasgal::sim::AlgoTrace;
 use pasgal::V;
@@ -150,11 +151,10 @@ fn main() {
         let reqs: Vec<JobRequest> = seeds_for(&c.graph("road").unwrap().graph, 64)
             .iter()
             .enumerate()
-            .map(|(i, &s)| JobRequest {
-                id: i as u64,
-                graph: "road".into(),
-                algo: AlgoKind::BfsVgc { tau: TAU },
-                source: s,
+            .map(|(i, &s)| {
+                JobRequest::parse(i as u64, "road", "bfs-vgc", &ParseArgs { tau: TAU, block: 64 })
+                    .expect("bfs-vgc registered")
+                    .with_source(s)
             })
             .collect();
         let fused_time = bench(reps, || {

@@ -17,8 +17,9 @@
 //! `PASGAL_SHARD_BENCH_REQS` (default 192), and the shard count with
 //! `PASGAL_SHARD_BENCH_SHARDS` (default: min(pool width, 4)).
 
+use pasgal::algo::api::ParseArgs;
 use pasgal::bench::env_usize;
-use pasgal::coordinator::{AlgoKind, Coordinator, JobOutput, JobRequest, ShardConfig, ShardServer};
+use pasgal::coordinator::{Coordinator, JobOutput, JobRequest, ShardConfig, ShardServer};
 use pasgal::graph::gen;
 use pasgal::V;
 use std::sync::mpsc::channel;
@@ -29,31 +30,29 @@ use std::time::{Duration, Instant};
 /// non-fusable kinds — including a registry-opened `cc` query, so the
 /// CI smoke proves connectivity serves through the sharded pipeline.
 fn workload(requests: usize) -> Vec<JobRequest> {
+    let args = ParseArgs { tau: 512, block: 64 };
     (0..requests as u64)
         .map(|i| {
             let algo = match i % 8 {
-                0 | 4 => AlgoKind::BfsVgc { tau: 512 },
-                1 | 5 => AlgoKind::SsspRho { tau: 512 },
-                2 | 6 => AlgoKind::BfsDirOpt,
+                0 | 4 => "bfs-vgc",
+                1 | 5 => "sssp-rho",
+                2 | 6 => "bfs-diropt",
                 // The non-fusable slot alternates the frontier
                 // baseline with the registry-opened cc, keeping the
                 // fusable share of the mix at 7/8 (comparable with
                 // the pre-registry runs of this bench).
                 3 => {
                     if (i / 8) % 2 == 0 {
-                        AlgoKind::BfsFrontier
+                        "bfs-frontier"
                     } else {
-                        AlgoKind::Cc
+                        "cc"
                     }
                 }
-                _ => AlgoKind::BfsVgc { tau: 512 },
+                _ => "bfs-vgc",
             };
-            JobRequest {
-                id: i,
-                graph: if i % 2 == 0 { "road" } else { "social" }.to_string(),
-                algo,
-                source: (i % 29) as V,
-            }
+            JobRequest::parse(i, if i % 2 == 0 { "road" } else { "social" }, algo, &args)
+                .expect("bench mix names registered algorithms")
+                .with_source((i % 29) as V)
         })
         .collect()
 }

@@ -323,12 +323,13 @@ pub(super) fn kcore_solo(
     lg: &LoadedGraph,
     _p: Params,
     _src: V,
-    _ws: &mut QueryWorkspace,
+    ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
-    // Peeling requires a symmetric view; the coreness arrays are
-    // allocated per call (k-core has no workspace yet — see ROADMAP).
-    let core = kcore::par_kcore(lg.symmetrized(), None);
-    Ok(summarize_kcore(&core))
+    // Peeling requires a symmetric view; degree/core live in the
+    // stamped workspace, so serving k-core is zero-allocation once
+    // warm like the rest.
+    let core = kcore::par_kcore_ws(lg.symmetrized(), None, &mut ws.kcore);
+    Ok(summarize_kcore(core))
 }
 
 pub(super) fn kcore_traced(lg: &LoadedGraph, _p: Params, _src: V, trace: &mut AlgoTrace) {

@@ -3,7 +3,7 @@
 //!
 //! PASGAL's value is a *library* of interchangeable parallel
 //! algorithms. Before this module the serving layer hard-coded a
-//! closed `AlgoKind` enum whose dispatch logic was copy-pasted across
+//! closed per-algorithm enum whose dispatch logic was copy-pasted across
 //! five match sites (solo execution, batch fusion + demux, the fusion
 //! window's grouping key, CLI parsing, labels) — so algorithms that
 //! already lived in `algo/` (connectivity, k-core) could not be served
@@ -33,13 +33,20 @@
 //! engine functions in [`engines`], add one `AlgoSpec` line to
 //! [`registry::REGISTRY`], and it is servable everywhere — CLI,
 //! single-threaded serve loop, sharded server, workload generator,
-//! tests. (Requests travelling the channel serving path are encoded as
-//! the deprecated [`AlgoKind`] shim, which delegates every method back
-//! here; see `coordinator::job`.) CC and k-core entered the registry
+//! tests. The channel serving protocol is registry-native too: a
+//! [`JobRequest`](crate::coordinator::JobRequest) carries its
+//! `&'static AlgoSpec` and parsed [`Params`] directly (no closed
+//! per-algorithm wire enum survives). CC and k-core entered the registry
 //! exactly this way.
 //!
+//! Specs whose output depends only on the graph — no source vertex,
+//! no external engine — declare [`AlgoSpec::cacheable`]: the serving
+//! layer answers repeated queries for them out of a versioned
+//! [`ResultCache`](crate::coordinator::ResultCache) keyed on
+//! `(graph version, spec id, Params)`, invalidated automatically when
+//! `load_graph` republishes the graph.
+//!
 //! [`ExecCore`]: crate::coordinator::server
-//! [`AlgoKind`]: crate::coordinator::AlgoKind
 //! [`LoadedGraph`]: crate::coordinator::LoadedGraph
 //! [`QueryWorkspace`]: crate::algo::QueryWorkspace
 //! [`AlgoTrace`]: crate::sim::AlgoTrace
@@ -92,7 +99,7 @@ pub struct ParseArgs {
     /// `--tau` (default 512, the paper's setting).
     pub tau: usize,
     /// `--block` (default 64 — previously hard-coded in
-    /// `AlgoKind::parse`, now threaded through like τ).
+    /// the old wire-enum parse, now threaded through like τ).
     pub block: usize,
 }
 
@@ -154,7 +161,7 @@ pub type TracedFn = fn(&LoadedGraph, Params, V, &mut AlgoTrace);
 /// The batched multi-source engine of a fusable algorithm: `run` one
 /// fused frontier walk over ≤ 64 seed lanes, then `demux` each lane
 /// into a typed output (a parallel strided export out of the
-/// workspace). Replaces the old `AlgoKind::fusable` + hard-coded
+/// workspace). Replaces the old per-algorithm fusability table + hard-coded
 /// match arms in the coordinator.
 pub struct BatchEngine {
     /// One fused walk over all `seeds` (≤ [`crate::algo::multi::MAX_LANES`]).
@@ -214,6 +221,13 @@ pub struct AlgoSpec {
     /// ([`EngineCtx::engine`]); callers only pay engine startup for
     /// specs that read it.
     pub needs_engine: bool,
+    /// True when the output is fully determined by `(graph, Params)` —
+    /// a whole-graph analysis reading no source vertex and no external
+    /// engine — so the serving layer may answer repeated queries from
+    /// the versioned result cache
+    /// ([`crate::coordinator::ResultCache`]). Source-parameterized
+    /// traversals must leave this false.
+    pub cacheable: bool,
     /// The derived graph views the engines read (see [`Views`]).
     pub views: Views,
     /// Keep the parameters this algorithm understands, zero the rest
@@ -273,10 +287,11 @@ impl std::fmt::Debug for AlgoSpec {
 
 /// One analysis request against the open API: which graph, which
 /// registered algorithm, which source, which parameters. The
-/// serving-layer [`JobRequest`](crate::coordinator::JobRequest)
-/// encodes the same information for the channel protocol; `Query` is
-/// the library-level type — it addresses *any* registered spec, shim
-/// encoding or not (see [`crate::coordinator::Coordinator::run_query`]).
+/// serving-layer [`JobRequest`](crate::coordinator::JobRequest) is
+/// the same information plus a request id for the channel protocol
+/// ([`JobRequest::from_query`](crate::coordinator::JobRequest::from_query)
+/// converts losslessly); `Query` is the library-level type (see
+/// [`crate::coordinator::Coordinator::run_query`]).
 #[derive(Debug, Clone)]
 pub struct Query {
     /// Name of a graph registered with the coordinator.

@@ -6,11 +6,12 @@
 //!
 //! Adding an algorithm: implement its engines in [`super::engines`],
 //! append one `AlgoSpec` static + one [`REGISTRY`] line (its `id` is
-//! its registry index), and — only if it must travel the channel
-//! serving protocol through the deprecated `AlgoKind` shim — one
-//! variant arm in `coordinator::job`. The registry-completeness tests
-//! below (and `tests/multi_source.rs`, which iterates every batch
-//! engine) enforce the invariants so a new line cannot silently break
+//! its registry index) — nothing else. The channel serving protocol
+//! is registry-native (`JobRequest` carries `&'static AlgoSpec` +
+//! `Params` directly), so there is no per-algorithm table anywhere
+//! else to keep in sync. The registry-completeness tests below (and
+//! `tests/multi_source.rs`, which iterates every batch engine)
+//! enforce the invariants so a new line cannot silently break
 //! dispatch.
 
 use super::engines as e;
@@ -23,6 +24,7 @@ pub static BFS_VGC: AlgoSpec = AlgoSpec {
     aliases: &["bfs"],
     needs_source: true,
     needs_engine: false,
+    cacheable: false,
     views: Views::NONE,
     parse: e::parse_tau,
     solo: e::bfs_vgc_solo,
@@ -37,6 +39,7 @@ pub static BFS_FRONTIER: AlgoSpec = AlgoSpec {
     aliases: &[],
     needs_source: true,
     needs_engine: false,
+    cacheable: false,
     views: Views::NONE,
     parse: e::parse_none,
     solo: e::bfs_frontier_solo,
@@ -51,6 +54,7 @@ pub static BFS_DIROPT: AlgoSpec = AlgoSpec {
     aliases: &[],
     needs_source: true,
     needs_engine: false,
+    cacheable: false,
     views: Views::TRANSPOSE,
     parse: e::parse_none,
     solo: e::bfs_diropt_solo,
@@ -65,6 +69,7 @@ pub static SCC_VGC: AlgoSpec = AlgoSpec {
     aliases: &["scc"],
     needs_source: false,
     needs_engine: false,
+    cacheable: true,
     views: Views::TRANSPOSE,
     parse: e::parse_tau,
     solo: e::scc_vgc_solo,
@@ -79,6 +84,7 @@ pub static SCC_MULTISTEP: AlgoSpec = AlgoSpec {
     aliases: &[],
     needs_source: false,
     needs_engine: false,
+    cacheable: true,
     views: Views::TRANSPOSE,
     parse: e::parse_none,
     solo: e::scc_multistep_solo,
@@ -93,6 +99,7 @@ pub static BCC_FAST: AlgoSpec = AlgoSpec {
     aliases: &["bcc"],
     needs_source: false,
     needs_engine: false,
+    cacheable: true,
     views: Views::SYMMETRIZED,
     parse: e::parse_none,
     solo: e::bcc_solo,
@@ -107,6 +114,7 @@ pub static SSSP_RHO: AlgoSpec = AlgoSpec {
     aliases: &["sssp"],
     needs_source: true,
     needs_engine: false,
+    cacheable: false,
     views: Views::NONE,
     parse: e::parse_tau,
     solo: e::sssp_rho_solo,
@@ -121,6 +129,7 @@ pub static SSSP_DELTA: AlgoSpec = AlgoSpec {
     aliases: &[],
     needs_source: true,
     needs_engine: false,
+    cacheable: false,
     views: Views::NONE,
     parse: e::parse_none,
     solo: e::sssp_delta_solo,
@@ -135,6 +144,7 @@ pub static DENSE_CLOSURE: AlgoSpec = AlgoSpec {
     aliases: &["dense"],
     needs_source: false,
     needs_engine: true,
+    cacheable: false,
     views: Views::NONE,
     parse: e::parse_block,
     solo: e::dense_closure_solo,
@@ -149,6 +159,7 @@ pub static CC: AlgoSpec = AlgoSpec {
     aliases: &["connectivity", "components"],
     needs_source: false,
     needs_engine: false,
+    cacheable: true,
     views: Views::NONE,
     parse: e::parse_none,
     solo: e::cc_solo,
@@ -163,6 +174,7 @@ pub static KCORE: AlgoSpec = AlgoSpec {
     aliases: &["k-core", "coreness"],
     needs_source: false,
     needs_engine: false,
+    cacheable: true,
     views: Views::SYMMETRIZED,
     parse: e::parse_none,
     solo: e::kcore_solo,
@@ -264,6 +276,29 @@ mod tests {
                 "{} needs_engine flag",
                 spec.label
             );
+        }
+    }
+
+    #[test]
+    fn cacheable_covers_exactly_the_whole_graph_analyses() {
+        let cacheable: Vec<&str> = all()
+            .iter()
+            .filter(|s| s.cacheable)
+            .map(|s| s.label)
+            .collect();
+        assert_eq!(
+            cacheable,
+            ["scc-vgc", "scc-multistep", "bcc-fast", "cc", "kcore"]
+        );
+        for spec in all() {
+            if spec.cacheable {
+                // A cached output must be fully determined by
+                // (graph version, spec id, Params): no source vertex,
+                // no external engine, no batched (per-source) path.
+                assert!(!spec.needs_source, "{} caches but reads a source", spec.label);
+                assert!(!spec.needs_engine, "{} caches but reads the engine", spec.label);
+                assert!(!spec.fusable(), "{} caches but has a batch engine", spec.label);
+            }
         }
     }
 

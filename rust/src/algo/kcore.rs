@@ -11,12 +11,12 @@
 //! (Matula–Beck / Batagelj–Zaveršnik) as the oracle and a parallel
 //! peeler over hash bags.
 
+use crate::algo::workspace::KcoreWorkspace;
 use crate::graph::Graph;
-use crate::hashbag::HashBag;
-use crate::parallel::{pack_index, parallel_for};
+use crate::parallel::workspace::StampedU32;
+use crate::parallel::{pack_index_into, parallel_for};
 use crate::sim::trace::{Recorder, TaskCost};
 use crate::V;
-use std::sync::atomic::{AtomicU32, Ordering};
 
 /// Sequential O(n + m) bucket peeling (the oracle). Input must be
 /// symmetric; self-loops are ignored.
@@ -81,61 +81,86 @@ pub fn seq_kcore(g: &Graph) -> Vec<u32> {
 /// Parallel peeling with hash-bag frontiers: peel all vertices of
 /// degree <= k simultaneously, round by round, incrementing k when the
 /// k-frontier drains. Records one trace round per peel wave.
-pub fn par_kcore(g: &Graph, mut rec: Recorder) -> Vec<u32> {
+///
+/// Allocate-per-call wrapper over [`par_kcore_ws`].
+pub fn par_kcore(g: &Graph, rec: Recorder) -> Vec<u32> {
+    let mut ws = KcoreWorkspace::new();
+    par_kcore_ws(g, rec, &mut ws);
+    std::mem::take(&mut ws.out)
+}
+
+/// Atomic `deg[i] -= 1` on the stamped array, returning the previous
+/// logical value (a CAS loop on the logical value — equivalent to
+/// `fetch_sub` on a plain atomic). Never called on a slot holding 0:
+/// total decrements of a vertex are bounded by its seeded degree (one
+/// per incident peeled neighbor), but guard anyway so a stray call
+/// cannot underflow or spin.
+#[inline]
+fn deg_sub_one(deg: &StampedU32, i: usize) -> u32 {
+    loop {
+        let d = deg.get(i);
+        if d == 0 || deg.compare_exchange(i, d, d - 1) {
+            return d;
+        }
+    }
+}
+
+/// [`par_kcore`] out of a reusable workspace: coreness is left in
+/// `ws.out` (also returned as a slice). The stamped degree/core
+/// arrays clear in O(1); a warm workspace performs zero O(n)
+/// allocation — the per-query O(n) work is one parallel degree-seeding
+/// pass, matching the other `_ws` entry points.
+pub fn par_kcore_ws<'a>(g: &Graph, mut rec: Recorder, ws: &'a mut KcoreWorkspace) -> &'a [u32] {
     let n = g.n();
     if n == 0 {
-        return Vec::new();
+        ws.out.clear();
+        return &ws.out;
     }
-    let deg: Vec<AtomicU32> = (0..n as V)
-        .map(|v| {
-            AtomicU32::new(g.neighbors(v).iter().filter(|&&w| w != v).count() as u32)
-        })
-        .collect();
-    let core: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+    // Rebind the stamped arrays (O(1) logical clear), then seed live
+    // degrees in one parallel pass. `core` reads u32::MAX (unpeeled)
+    // everywhere until a claim CAS installs a coreness.
+    ws.deg.reset(0);
+    ws.deg.ensure_len(n);
+    ws.core.reset(u32::MAX);
+    ws.core.ensure_len(n);
+    ws.bag.reset(n);
+    let deg = &ws.deg;
+    let core = &ws.core;
+    parallel_for(0, n, 256, |v| {
+        let v32 = v as V;
+        deg.store(v, g.neighbors(v32).iter().filter(|&&w| w != v32).count() as u32);
+    });
     let mut remaining = n;
     let mut k = 0u32;
     while remaining > 0 {
         // Frontier: unpeeled vertices with degree <= k.
-        let mut frontier: Vec<V> = pack_index(n, |v| {
-            core[v].load(Ordering::Relaxed) == u32::MAX
-                && deg[v].load(Ordering::Relaxed) <= k
-        });
+        pack_index_into(
+            n,
+            |v| core.get(v) == u32::MAX && deg.get(v) <= k,
+            &mut ws.frontier,
+        );
         // Claim them (avoids double peeling across waves).
-        frontier.retain(|&v| {
-            core[v as usize]
-                .compare_exchange(u32::MAX, k, Ordering::AcqRel, Ordering::Relaxed)
-                .is_ok()
-        });
-        if frontier.is_empty() {
+        ws.frontier
+            .retain(|&v| core.compare_exchange(v as usize, u32::MAX, k));
+        if ws.frontier.is_empty() {
             k += 1;
             continue;
         }
-        while !frontier.is_empty() {
-            remaining -= frontier.len();
-            let bag = HashBag::new(n);
+        while !ws.frontier.is_empty() {
+            remaining -= ws.frontier.len();
             {
-                let frontier_ref = &frontier;
-                let bag_ref = &bag;
-                let deg_ref = &deg;
-                let core_ref = &core;
+                let frontier_ref = &ws.frontier;
+                let bag_ref = &ws.bag;
                 parallel_for(0, frontier_ref.len(), 64, move |i| {
                     let v = frontier_ref[i];
                     for &w in g.neighbors(v) {
-                        if w == v || core_ref[w as usize].load(Ordering::Relaxed) != u32::MAX
-                        {
+                        if w == v || core.get(w as usize) != u32::MAX {
                             continue;
                         }
                         // Decrement; if w sinks to <= k, peel it now.
-                        let old = deg_ref[w as usize].fetch_sub(1, Ordering::Relaxed);
+                        let old = deg_sub_one(deg, w as usize);
                         if old.saturating_sub(1) <= k
-                            && core_ref[w as usize]
-                                .compare_exchange(
-                                    u32::MAX,
-                                    k,
-                                    Ordering::AcqRel,
-                                    Ordering::Relaxed,
-                                )
-                                .is_ok()
+                            && core.compare_exchange(w as usize, u32::MAX, k)
                         {
                             bag_ref.insert(w);
                         }
@@ -144,7 +169,7 @@ pub fn par_kcore(g: &Graph, mut rec: Recorder) -> Vec<u32> {
             }
             if let Some(trace) = rec.as_deref_mut() {
                 trace.push_round(
-                    frontier
+                    ws.frontier
                         .iter()
                         .map(|&v| TaskCost {
                             vertices: 1,
@@ -153,11 +178,12 @@ pub fn par_kcore(g: &Graph, mut rec: Recorder) -> Vec<u32> {
                         .collect(),
                 );
             }
-            frontier = bag.extract_and_clear();
+            ws.bag.extract_into(&mut ws.frontier);
         }
         k += 1;
     }
-    core.into_iter().map(|c| c.into_inner()).collect()
+    ws.core.export_into(n, &mut ws.out);
+    &ws.out
 }
 
 #[cfg(test)]
@@ -211,6 +237,29 @@ mod tests {
         ] {
             assert_eq!(par_kcore(&g, None), seq_kcore(&g), "mismatch");
         }
+    }
+
+    #[test]
+    fn warm_workspace_reuse_matches_seq_across_graphs() {
+        // One workspace across shrinking and growing graphs: stale
+        // degrees/coreness from a previous query must never leak —
+        // the stamped arrays clear logically, the seeding pass only
+        // writes live vertices.
+        let mut ws = KcoreWorkspace::new();
+        for g in [
+            gen::grid(9, 11).symmetrize(),
+            gen::bubbles(6, 5, 2),
+            gen::grid(2, 3).symmetrize(),
+            gen::social(9, 8, 4).symmetrize(),
+        ] {
+            assert_eq!(par_kcore_ws(&g, None, &mut ws), &seq_kcore(&g)[..]);
+        }
+        // Same graph twice in a row: warm run bit-identical to cold.
+        let g = gen::road(9, 9, 7).symmetrize();
+        let cold = par_kcore_ws(&g, None, &mut ws).to_vec();
+        let warm = par_kcore_ws(&g, None, &mut ws).to_vec();
+        assert_eq!(cold, warm);
+        assert_eq!(warm, seq_kcore(&g));
     }
 
     /// Definition-level oracle: core[v] >= k iff v survives

@@ -37,8 +37,8 @@ pub mod workspace;
 
 pub use api::{AlgoSpec, Params, ParseArgs, Query, QueryOutput};
 pub use workspace::{
-    BfsWorkspace, CcWorkspace, MultiBfsWorkspace, MultiSsspWorkspace, QueryWorkspace,
-    SccWorkspace, SsspWorkspace, WorkspacePool,
+    BfsWorkspace, CcWorkspace, KcoreWorkspace, MultiBfsWorkspace, MultiSsspWorkspace,
+    QueryWorkspace, SccWorkspace, SsspWorkspace, WorkspacePool,
 };
 
 /// Distance sentinel for unreached vertices in hop-distance outputs.

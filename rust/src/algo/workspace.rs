@@ -259,6 +259,35 @@ impl SccWorkspace {
     }
 }
 
+/// Scratch state for k-core decomposition (`par_kcore_ws`): live
+/// degrees and coreness in epoch-stamped arrays (O(1) logical clear;
+/// the only O(n) work per query is one parallel pass seeding the
+/// degrees), a reused peel bag and frontier buffer, and the exported
+/// coreness vector.
+#[derive(Default)]
+pub struct KcoreWorkspace {
+    /// Live degree of each unpeeled vertex (seeded per query, then
+    /// decremented concurrently as neighbors peel).
+    pub deg: StampedU32,
+    /// Coreness once peeled; `u32::MAX` (the stale default) while the
+    /// vertex is still unpeeled — the claim CAS runs on this array.
+    pub core: StampedU32,
+    /// Next-wave peel bag (reused across waves and queries).
+    pub bag: HashBag,
+    /// Current peel frontier.
+    pub frontier: Vec<V>,
+    /// Exported coreness of the last query (`par_kcore_ws` returns a
+    /// slice of this).
+    pub out: Vec<u32>,
+}
+
+impl KcoreWorkspace {
+    /// Fresh (cold) workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Scratch state for connectivity queries.
 #[derive(Default)]
 pub struct CcWorkspace {
@@ -288,6 +317,8 @@ pub struct QueryWorkspace {
     pub scc: SccWorkspace,
     /// Connectivity scratch.
     pub cc: CcWorkspace,
+    /// k-core peeling scratch.
+    pub kcore: KcoreWorkspace,
     /// Batched multi-source BFS scratch (coordinator fusion).
     pub multi_bfs: MultiBfsWorkspace,
     /// Batched multi-source SSSP scratch (coordinator fusion).

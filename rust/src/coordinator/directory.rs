@@ -21,6 +21,7 @@
 //! construction: a shard refreshes once per dispatch, so every request
 //! in the batch resolves graphs against the same registry state.
 
+use crate::algo::api::{Params, QueryOutput};
 use crate::graph::Graph;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,14 +30,28 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// A registered graph with lazily materialized derived views.
 pub struct LoadedGraph {
     pub graph: Arc<Graph>,
+    /// The directory version this graph was published at — the
+    /// freshness guard of the [`ResultCache`]: a cached whole-graph
+    /// output is valid iff its recorded version equals the version of
+    /// the `LoadedGraph` the request resolved to, so republishing a
+    /// name invalidates every cached result for it with no explicit
+    /// eviction traffic. 0 for graphs built outside a directory.
+    pub version: u64,
     transpose: OnceLock<Arc<Graph>>,
     symmetrized: OnceLock<Arc<Graph>>,
 }
 
 impl LoadedGraph {
     pub fn new(graph: Graph) -> Self {
+        LoadedGraph::with_version(graph, 0)
+    }
+
+    /// A loaded graph stamped with the directory version it was
+    /// published at (see [`GraphDirectory::publish`]).
+    pub fn with_version(graph: Graph, version: u64) -> Self {
         LoadedGraph {
             graph: Arc::new(graph),
+            version,
             transpose: OnceLock::new(),
             symmetrized: OnceLock::new(),
         }
@@ -87,16 +102,20 @@ impl GraphDirectory {
     /// Register `graph` under `name` (replacing any previous one) by
     /// publishing a new snapshot. Existing snapshots held by readers
     /// stay valid and keep answering with the old state until they
-    /// refresh.
+    /// refresh. The published [`LoadedGraph`] is stamped with the new
+    /// directory version — distinct per publish (the writer Mutex
+    /// serializes them), so result-cache entries for the replaced
+    /// graph can never match again.
     pub fn publish(&self, name: &str, graph: Graph) {
         let mut slot = self.published.lock().unwrap();
+        let v = self.version.load(Ordering::Relaxed) + 1;
         let mut map: GraphMap = (**slot).clone();
-        map.insert(name.to_string(), Arc::new(LoadedGraph::new(graph)));
+        map.insert(name.to_string(), Arc::new(LoadedGraph::with_version(graph, v)));
         *slot = Arc::new(map);
         // The bump is observed after the Mutex has the new Arc: a
         // reader that sees the new version and then locks is
         // guaranteed the new map (the lock fully orders it).
-        self.version.fetch_add(1, Ordering::Release);
+        self.version.store(v, Ordering::Release);
     }
 
     /// Current registry version (bumped by every [`publish`]).
@@ -184,6 +203,81 @@ impl SnapshotCache {
     }
 }
 
+/// Per-worker cache of whole-graph analysis outputs — the
+/// registry-level result cache. Specs that declare
+/// [`cacheable`](crate::algo::api::AlgoSpec::cacheable) (SCC summary,
+/// CC, k-core, BCC: outputs fully determined by `(graph, Params)`)
+/// are answered from here when the same query repeats against an
+/// unchanged graph; source-parameterized traversals never enter.
+///
+/// Keyed `(graph name, spec id, Params)`; each entry records the
+/// [`LoadedGraph::version`] it was computed against, and a lookup
+/// only hits when that version equals the version of the graph the
+/// request resolved to — so invalidation falls out of
+/// [`GraphDirectory::publish`] bumping the version, with no eviction
+/// protocol. Like [`crate::algo::workspace::WorkspacePool`], this is
+/// deliberately not a concurrent structure: each shard worker owns
+/// one outright (zero locks on the hot path); the coordinator's
+/// shared instance sits behind a Mutex next to its workspace pool.
+#[derive(Default)]
+pub struct ResultCache {
+    entries: HashMap<String, GraphResults>,
+}
+
+/// One graph's cached outputs, keyed `(spec id, params)`; each slot
+/// records the publish version it was computed at.
+type GraphResults = HashMap<(u16, Params), (u64, Arc<QueryOutput>)>;
+
+impl ResultCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The cached output for `(graph, spec, params)` computed at
+    /// exactly `version`, if any. A version mismatch (the graph was
+    /// republished since) is a miss; the stale entry stays until the
+    /// fresh recompute overwrites it.
+    pub fn lookup(
+        &self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        version: u64,
+    ) -> Option<Arc<QueryOutput>> {
+        let (v, out) = self.entries.get(graph)?.get(&(spec, params))?;
+        (*v == version).then(|| Arc::clone(out))
+    }
+
+    /// Record `output` as the answer for `(graph, spec, params)` at
+    /// `version`, replacing any entry from an older publish.
+    pub fn insert(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        version: u64,
+        output: Arc<QueryOutput>,
+    ) {
+        self.entries
+            .entry(graph.to_string())
+            .or_default()
+            .insert((spec, params), (version, output));
+    }
+
+    /// Number of cached entries (stale ones included until
+    /// overwritten) — bounded by #graphs × #cacheable specs × #param
+    /// settings, not by query volume.
+    pub fn len(&self) -> usize {
+        self.entries.values().map(|m| m.len()).sum()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +325,51 @@ mod tests {
         assert_eq!(cache.cached("g").unwrap().graph.n(), 9);
         cache.refresh(&dir);
         assert_eq!(cache.cached("g").unwrap().graph.n(), 25);
+    }
+
+    #[test]
+    fn published_graphs_carry_distinct_versions() {
+        let dir = GraphDirectory::new();
+        dir.publish("a", gen::grid(2, 2));
+        dir.publish("b", gen::grid(2, 3));
+        let va = dir.lookup("a").unwrap().version;
+        let vb = dir.lookup("b").unwrap().version;
+        assert_ne!(va, vb);
+        dir.publish("a", gen::grid(3, 3));
+        let va2 = dir.lookup("a").unwrap().version;
+        assert!(va2 > va, "republish must move the graph's version");
+        assert_eq!(va2, dir.version(), "latest publish owns the counter");
+        // Graphs built outside a directory are version 0 — never a
+        // live published version.
+        assert_eq!(LoadedGraph::new(gen::grid(2, 2)).version, 0);
+    }
+
+    #[test]
+    fn result_cache_hits_only_on_matching_version() {
+        let mut cache = ResultCache::new();
+        let p = Params::NONE;
+        assert!(cache.lookup("g", 9, p, 1).is_none());
+        let out = Arc::new(QueryOutput::Cc {
+            components: 3,
+            largest: 5,
+        });
+        cache.insert("g", 9, p, 1, Arc::clone(&out));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(*cache.lookup("g", 9, p, 1).unwrap(), *out);
+        // Version moved (republish): stale entry is a miss...
+        assert!(cache.lookup("g", 9, p, 2).is_none());
+        // ...until the fresh recompute overwrites it in place.
+        let out2 = Arc::new(QueryOutput::Cc {
+            components: 1,
+            largest: 9,
+        });
+        cache.insert("g", 9, p, 2, Arc::clone(&out2));
+        assert_eq!(cache.len(), 1, "replaced, not accumulated");
+        assert_eq!(*cache.lookup("g", 9, p, 2).unwrap(), *out2);
+        // Other keys never collide: different spec, params, or graph.
+        assert!(cache.lookup("g", 10, p, 2).is_none());
+        assert!(cache.lookup("g", 9, Params::tau(8), 2).is_none());
+        assert!(cache.lookup("h", 9, p, 2).is_none());
     }
 
     #[test]

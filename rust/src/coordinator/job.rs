@@ -1,156 +1,92 @@
 //! Job types for the coordinator's channel serving protocol.
 //!
-//! The algorithm registry ([`crate::algo::api`]) is the source of
-//! truth for labels, aliases, parameters, fusability and dispatch;
-//! [`AlgoKind`] survives only as a **deprecated thin shim** — a
-//! `Copy + Eq + Hash` encoding of `(spec, params)` that keeps existing
-//! callers, tests and benches compiling while they migrate to
-//! [`Query`](crate::algo::api::Query). Every method delegates to the
-//! registry; the only per-algorithm knowledge left in this file is the
-//! variant ↔ spec mapping itself (checked exhaustively against the
-//! registry by the round-trip test below).
+//! The protocol is **registry-native**: a [`JobRequest`] carries its
+//! `&'static AlgoSpec` and parsed [`Params`] directly — the same
+//! `(spec id, Params)` pair every other layer dispatches and groups
+//! on — plus the graph name, source vertex and a request id for
+//! response correlation. There is no per-algorithm table in this file
+//! (the deprecated per-algorithm wire enum, the last one, is gone): any spec
+//! added to [`crate::algo::api::registry`] travels the channel
+//! protocol with no further registration, and
+//! [`JobRequest::from_query`] converts the library-level
+//! [`Query`] losslessly.
 
-use crate::algo::api::{self, AlgoSpec, Params, ParseArgs};
+use crate::algo::api::{AlgoSpec, Params, ParseArgs, Query};
 use crate::V;
 use std::time::Duration;
 
 pub use crate::algo::api::QueryOutput as JobOutput;
 
-/// Which analysis to run — **deprecated shim**: an enum encoding of
-/// `(&'static AlgoSpec, Params)` for the channel protocol and for
-/// pre-registry callers. New code should address algorithms through
-/// [`crate::algo::api::Query`] / registry lookup instead; this enum
-/// only exists so `(graph, algo)` stays a cheap `Copy + Eq + Hash`
-/// message field.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum AlgoKind {
-    /// PASGAL VGC BFS (τ from the request).
-    BfsVgc { tau: usize },
-    /// GBBS-like frontier BFS (baseline).
-    BfsFrontier,
-    /// Direction-optimizing BFS (baseline).
-    BfsDirOpt,
-    /// PASGAL VGC SCC.
-    SccVgc { tau: usize },
-    /// Multistep SCC (baseline).
-    SccMultistep,
-    /// FAST-BCC.
-    Bcc,
-    /// ρ-stepping SSSP with VGC.
-    SsspRho { tau: usize },
-    /// Δ-stepping SSSP (baseline).
-    SsspDelta,
-    /// Dense-block closure on the PJRT engine: all-pairs distances
-    /// within a extracted dense subgraph (the L1/L2 path).
-    DenseClosure { block: usize },
-    /// Parallel connectivity (union-find).
-    Cc,
-    /// k-core decomposition (parallel peeling).
-    Kcore,
-}
-
-impl AlgoKind {
-    /// The registry entry this shim variant encodes.
-    pub fn spec(&self) -> &'static AlgoSpec {
-        use crate::algo::api::registry as r;
-        match self {
-            AlgoKind::BfsVgc { .. } => &r::BFS_VGC,
-            AlgoKind::BfsFrontier => &r::BFS_FRONTIER,
-            AlgoKind::BfsDirOpt => &r::BFS_DIROPT,
-            AlgoKind::SccVgc { .. } => &r::SCC_VGC,
-            AlgoKind::SccMultistep => &r::SCC_MULTISTEP,
-            AlgoKind::Bcc => &r::BCC_FAST,
-            AlgoKind::SsspRho { .. } => &r::SSSP_RHO,
-            AlgoKind::SsspDelta => &r::SSSP_DELTA,
-            AlgoKind::DenseClosure { .. } => &r::DENSE_CLOSURE,
-            AlgoKind::Cc => &r::CC,
-            AlgoKind::Kcore => &r::KCORE,
-        }
-    }
-
-    /// The parameters this shim variant encodes.
-    pub fn params(&self) -> Params {
-        match *self {
-            AlgoKind::BfsVgc { tau }
-            | AlgoKind::SccVgc { tau }
-            | AlgoKind::SsspRho { tau } => Params::tau(tau),
-            AlgoKind::DenseClosure { block } => Params::block(block),
-            _ => Params::NONE,
-        }
-    }
-
-    /// Encode a registry spec + parameters as a shim variant. `None`
-    /// for specs without an enum encoding (none today; a future
-    /// registry entry may opt out of the shim and be reachable through
-    /// [`crate::algo::api::Query`] only).
-    pub fn from_spec(spec: &'static AlgoSpec, p: Params) -> Option<AlgoKind> {
-        Some(match spec.label {
-            "bfs-vgc" => AlgoKind::BfsVgc { tau: p.tau },
-            "bfs-frontier" => AlgoKind::BfsFrontier,
-            "bfs-diropt" => AlgoKind::BfsDirOpt,
-            "scc-vgc" => AlgoKind::SccVgc { tau: p.tau },
-            "scc-multistep" => AlgoKind::SccMultistep,
-            "bcc-fast" => AlgoKind::Bcc,
-            "sssp-rho" => AlgoKind::SsspRho { tau: p.tau },
-            "sssp-delta" => AlgoKind::SsspDelta,
-            "dense-closure" => AlgoKind::DenseClosure { block: p.block },
-            "cc" => AlgoKind::Cc,
-            "kcore" => AlgoKind::Kcore,
-            _ => return None,
-        })
-    }
-
-    /// Registry-backed parse with every raw parameter threaded through
-    /// (`--tau` *and* `--block`): label or alias → shim variant.
-    pub fn parse_with(s: &str, args: &ParseArgs) -> Option<AlgoKind> {
-        let spec = api::find(s)?;
-        AlgoKind::from_spec(spec, (spec.parse)(args))
-    }
-
-    /// Pre-registry parse signature (τ only; block takes its default).
-    /// Prefer [`AlgoKind::parse_with`] or
-    /// [`crate::algo::api::Query::new`].
-    pub fn parse(s: &str, tau: usize) -> Option<AlgoKind> {
-        AlgoKind::parse_with(
-            s,
-            &ParseArgs {
-                tau,
-                ..ParseArgs::default()
-            },
-        )
-    }
-
-    /// Canonical registry label.
-    pub fn label(&self) -> &'static str {
-        self.spec().label
-    }
-
-    /// True for algorithms with a batched multi-source engine
-    /// (delegates to [`AlgoSpec::fusable`]): the coordinator fuses
-    /// same-graph groups of these into one frontier walk. Parameterized
-    /// variants only fuse within the same parameter value — the
-    /// `(graph, spec id, Params)` grouping key guarantees that.
-    pub fn fusable(&self) -> bool {
-        self.spec().fusable()
-    }
-}
-
-/// One analysis request.
+/// One analysis request on the channel serving protocol: a
+/// registry-native [`Query`] plus the request id clients correlate
+/// responses by.
 #[derive(Debug, Clone)]
 pub struct JobRequest {
     pub id: u64,
     /// Name of a graph previously loaded into the coordinator.
     pub graph: String,
-    pub algo: AlgoKind,
-    /// Source vertex for traversal queries.
+    /// The registry entry to dispatch through.
+    pub algo: &'static AlgoSpec,
+    /// Parsed parameters (what [`AlgoSpec::parse`] kept; part of the
+    /// fusion grouping key and the result-cache key).
+    pub params: Params,
+    /// Source vertex for traversal queries (ignored when
+    /// `algo.needs_source` is false).
     pub source: V,
 }
 
 impl JobRequest {
+    /// Build a request by registry lookup: `algo` may be a label or
+    /// any alias; `args` carries the raw parameter values, of which
+    /// the spec keeps the ones it understands. Source starts at 0 —
+    /// chain [`JobRequest::with_source`]. `None` for names not in the
+    /// registry. (Delegates to [`Query::new`] so the lookup/parse
+    /// logic lives once.)
+    pub fn parse(
+        id: u64,
+        graph: impl Into<String>,
+        algo: &str,
+        args: &ParseArgs,
+    ) -> Option<JobRequest> {
+        let q = Query::new(graph, algo, args).ok()?;
+        Some(JobRequest {
+            id,
+            graph: q.graph,
+            algo: q.algo,
+            params: q.params,
+            source: q.source,
+        })
+    }
+
+    /// Set the source vertex (builder style).
+    pub fn with_source(mut self, source: V) -> JobRequest {
+        self.source = source;
+        self
+    }
+
+    /// Encode a [`Query`] for the channel protocol. Lossless and
+    /// infallible: the wire type *is* the registry type now.
+    pub fn from_query(id: u64, q: &Query) -> JobRequest {
+        JobRequest {
+            id,
+            graph: q.graph.clone(),
+            algo: q.algo,
+            params: q.params,
+            source: q.source,
+        }
+    }
+
+    /// The non-graph half of the batch grouping key: requests fuse
+    /// (and whole-graph results cache) per `(graph, spec id, Params)`.
+    pub fn group_key(&self) -> (u16, Params) {
+        (self.algo.id, self.params)
+    }
+
     /// Stable FNV-1a hash of the graph name: the shard-router key.
     /// Same name ⇒ same hash ⇒ same shard, which is what guarantees a
     /// shard's fusion window sees every request that could fuse with
-    /// it (and keeps one graph's derived views hot in one worker).
+    /// it (and keeps one graph's derived views, warm workspaces and
+    /// cached whole-graph results hot in one worker).
     pub fn route_hash(&self) -> u64 {
         const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
         const FNV_PRIME: u64 = 0x1_0000_0000_01b3;
@@ -161,19 +97,6 @@ impl JobRequest {
         }
         h
     }
-
-    /// Encode a [`Query`](crate::algo::api::Query) for the channel
-    /// protocol. `None` when the query's spec has no [`AlgoKind`]
-    /// shim encoding (such specs are served through
-    /// [`crate::coordinator::Coordinator::run_query`] instead).
-    pub fn from_query(id: u64, q: &crate::algo::api::Query) -> Option<JobRequest> {
-        Some(JobRequest {
-            id,
-            graph: q.graph.clone(),
-            algo: AlgoKind::from_spec(q.algo, q.params)?,
-            source: q.source,
-        })
-    }
 }
 
 /// A finished job.
@@ -182,7 +105,7 @@ pub struct JobResult {
     pub id: u64,
     pub algo: &'static str,
     pub output: JobOutput,
-    /// Pure execution time.
+    /// Pure execution time (zero for result-cache hits).
     pub exec: Duration,
     /// Queue + execution (request-to-response) latency.
     pub latency: Duration,
@@ -191,137 +114,94 @@ pub struct JobResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algo::api;
+    use crate::algo::api::registry as r;
 
-    #[test]
-    fn parse_roundtrips_labels() {
-        for s in [
-            "bfs-vgc",
-            "bfs-frontier",
-            "bfs-diropt",
-            "scc-vgc",
-            "scc-multistep",
-            "bcc-fast",
-            "sssp-rho",
-            "sssp-delta",
-            "dense-closure",
-            "cc",
-            "kcore",
-        ] {
-            let k = AlgoKind::parse(s, 512).unwrap();
-            assert_eq!(k.label(), s);
-        }
-        assert!(AlgoKind::parse("nope", 1).is_none());
+    fn req(id: u64, graph: &str, algo: &str) -> JobRequest {
+        JobRequest::parse(id, graph, algo, &ParseArgs::default()).unwrap()
     }
 
     #[test]
-    fn every_registered_spec_roundtrips_through_the_shim() {
-        // Registry-completeness: label → parse → label round-trips,
-        // the shim points back at the exact spec, and aliases resolve
-        // to the same variant. Iterates the registry, not a hand-kept
-        // list, so adding a spec without a shim arm fails here.
+    fn every_registered_spec_travels_the_wire() {
+        // Registry-completeness: every spec — and every alias — builds
+        // a request that points at the exact spec with the exact
+        // parsed params. Iterates the registry, not a hand-kept list,
+        // so a new registry line is wire-servable by construction.
         let args = ParseArgs { tau: 77, block: 48 };
         for spec in api::all() {
-            let k = AlgoKind::parse_with(spec.label, &args)
-                .unwrap_or_else(|| panic!("{} has no AlgoKind shim", spec.label));
-            assert_eq!(k.label(), spec.label, "label round-trip");
-            assert!(std::ptr::eq(k.spec(), *spec), "shim points at its spec");
-            assert_eq!(k.params(), (spec.parse)(&args), "params survive encoding");
-            assert_eq!(k.fusable(), spec.fusable());
+            let jr = JobRequest::parse(1, "g", spec.label, &args)
+                .unwrap_or_else(|| panic!("{} must parse", spec.label));
+            assert!(std::ptr::eq(jr.algo, *spec), "request points at its spec");
+            assert_eq!(jr.params, (spec.parse)(&args), "params survive parse");
+            assert_eq!(jr.group_key(), (spec.id, (spec.parse)(&args)));
             for alias in spec.aliases {
-                assert_eq!(
-                    AlgoKind::parse_with(alias, &args),
-                    Some(k),
-                    "alias {alias:?} must encode identically"
+                let ja = JobRequest::parse(1, "g", alias, &args).unwrap();
+                assert!(
+                    std::ptr::eq(ja.algo, *spec),
+                    "alias {alias:?} must resolve identically"
                 );
+                assert_eq!(ja.group_key(), jr.group_key());
             }
         }
+        assert!(JobRequest::parse(0, "g", "nope", &args).is_none());
     }
 
     #[test]
     fn parse_threads_block_size_through() {
         // Regression: `--block` used to be hard-coded to 64 in parse.
-        let k = AlgoKind::parse_with("dense-closure", &ParseArgs { tau: 512, block: 96 });
-        assert_eq!(k, Some(AlgoKind::DenseClosure { block: 96 }));
-        // The τ-only signature keeps the old default.
-        assert_eq!(
-            AlgoKind::parse("dense-closure", 512),
-            Some(AlgoKind::DenseClosure { block: 64 })
-        );
+        let jr = JobRequest::parse(0, "g", "dense-closure", &ParseArgs { tau: 512, block: 96 })
+            .unwrap();
+        assert_eq!(jr.params.block, 96);
+        assert_eq!(jr.params.tau, 0, "block specs ignore τ");
     }
 
     #[test]
-    fn fusable_covers_exactly_the_multi_source_engines() {
-        assert!(AlgoKind::BfsVgc { tau: 64 }.fusable());
-        assert!(AlgoKind::BfsDirOpt.fusable());
-        assert!(AlgoKind::SsspRho { tau: 64 }.fusable());
-        assert!(!AlgoKind::BfsFrontier.fusable());
-        assert!(!AlgoKind::SsspDelta.fusable());
-        assert!(!AlgoKind::SccVgc { tau: 64 }.fusable());
-        assert!(!AlgoKind::Bcc.fusable());
-        assert!(!AlgoKind::Cc.fusable());
-        assert!(!AlgoKind::Kcore.fusable());
+    fn params_split_groups_but_irrelevant_knobs_do_not() {
+        let a = JobRequest::parse(0, "g", "bfs", &ParseArgs { tau: 16, block: 64 }).unwrap();
+        let b = JobRequest::parse(1, "g", "bfs", &ParseArgs { tau: 64, block: 64 }).unwrap();
+        assert_ne!(a.group_key(), b.group_key(), "different τ never fuses");
+        // bcc ignores τ entirely: one group regardless of the CLI τ.
+        let c = JobRequest::parse(2, "g", "bcc", &ParseArgs { tau: 16, block: 64 }).unwrap();
+        let d = JobRequest::parse(3, "g", "bcc", &ParseArgs { tau: 64, block: 1 }).unwrap();
+        assert_eq!(c.group_key(), d.group_key());
     }
 
     #[test]
     fn route_hash_keys_on_graph_name_only() {
-        let a = JobRequest {
-            id: 1,
-            graph: "road".into(),
-            algo: AlgoKind::BfsVgc { tau: 8 },
-            source: 0,
-        };
-        let b = JobRequest {
-            id: 2,
-            graph: "road".into(),
-            algo: AlgoKind::Bcc,
-            source: 77,
-        };
-        let c = JobRequest {
-            id: 1,
-            graph: "social".into(),
-            algo: AlgoKind::BfsVgc { tau: 8 },
-            source: 0,
-        };
+        let a = req(1, "road", "bfs").with_source(0);
+        let b = req(2, "road", "bcc").with_source(77);
+        let c = req(1, "social", "bfs");
         assert_eq!(a.route_hash(), b.route_hash(), "same graph, same shard");
         assert_ne!(a.route_hash(), c.route_hash(), "FNV separates these names");
         // Distinct names spread across a small shard count.
         let shards: std::collections::HashSet<u64> = ["g0", "g1", "g2", "g3", "g4", "g5"]
             .iter()
-            .map(|g| {
-                let r = JobRequest {
-                    id: 0,
-                    graph: g.to_string(),
-                    algo: AlgoKind::Bcc,
-                    source: 0,
-                };
-                r.route_hash() % 4
-            })
+            .map(|g| req(0, g, "bcc").route_hash() % 4)
             .collect();
         assert!(shards.len() >= 2, "six names must not all collide mod 4");
     }
 
     #[test]
-    fn aliases_accepted() {
-        assert_eq!(AlgoKind::parse("bfs", 7), Some(AlgoKind::BfsVgc { tau: 7 }));
-        assert_eq!(AlgoKind::parse("scc", 9), Some(AlgoKind::SccVgc { tau: 9 }));
-        assert_eq!(AlgoKind::parse("bcc", 1), Some(AlgoKind::Bcc));
-        assert_eq!(AlgoKind::parse("connectivity", 1), Some(AlgoKind::Cc));
-        assert_eq!(AlgoKind::parse("k-core", 1), Some(AlgoKind::Kcore));
+    fn fusable_covers_exactly_the_multi_source_engines() {
+        assert!(r::BFS_VGC.fusable());
+        assert!(r::BFS_DIROPT.fusable());
+        assert!(r::SSSP_RHO.fusable());
+        for spec in [&r::BFS_FRONTIER, &r::SSSP_DELTA, &r::SCC_VGC, &r::BCC_FAST, &r::CC, &r::KCORE]
+        {
+            assert!(!spec.fusable(), "{} must stay solo", spec.label);
+        }
     }
 
     #[test]
     fn request_encodes_query() {
-        let q = crate::algo::api::Query::new(
-            "road",
-            "sssp",
-            &ParseArgs { tau: 31, block: 64 },
-        )
-        .unwrap()
-        .with_source(5);
-        let r = JobRequest::from_query(9, &q).unwrap();
-        assert_eq!(r.id, 9);
-        assert_eq!(r.graph, "road");
-        assert_eq!(r.source, 5);
-        assert_eq!(r.algo, AlgoKind::SsspRho { tau: 31 });
+        let q = Query::new("road", "sssp", &ParseArgs { tau: 31, block: 64 })
+            .unwrap()
+            .with_source(5);
+        let jr = JobRequest::from_query(9, &q);
+        assert_eq!(jr.id, 9);
+        assert_eq!(jr.graph, "road");
+        assert_eq!(jr.source, 5);
+        assert!(std::ptr::eq(jr.algo, &r::SSSP_RHO));
+        assert_eq!(jr.params, Params::tau(31));
     }
 }

@@ -147,6 +147,21 @@ impl Metrics {
             fused / (fused + solo)
         }
     }
+
+    /// Fraction of cacheable (whole-graph) queries answered from the
+    /// result cache (0.0 when none ran yet). `cache_hits` and
+    /// `cache_misses` merge across shards like every other counter,
+    /// so this is meaningful on both a shard-local and the aggregated
+    /// global registry.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits = self.counter("cache_hits") as f64;
+        let misses = self.counter("cache_misses") as f64;
+        if hits + misses == 0.0 {
+            0.0
+        } else {
+            hits / (hits + misses)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -179,6 +194,16 @@ mod tests {
     #[test]
     fn summary_of_unknown_is_none() {
         assert!(Metrics::new().summary("nope").is_none());
+    }
+
+    #[test]
+    fn cache_hit_rate_tracks_the_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        m.bump("cache_misses", 1);
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        m.bump("cache_hits", 3);
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

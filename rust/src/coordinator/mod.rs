@@ -15,8 +15,11 @@
 //! Algorithm dispatch is table-driven: every path here resolves
 //! requests through the algorithm registry ([`crate::algo::api`]) —
 //! one [`crate::algo::api::AlgoSpec`] per algorithm — so registering
-//! an algorithm makes it servable everywhere at once. [`job::AlgoKind`]
-//! survives only as the deprecated wire encoding of (spec, params).
+//! an algorithm makes it servable everywhere at once. The channel
+//! protocol is registry-native: a [`job::JobRequest`] *is* a
+//! [`crate::algo::api::Query`] plus a request id (no per-algorithm
+//! wire enum survives). Whole-graph analyses additionally answer
+//! repeated queries from a versioned [`directory::ResultCache`].
 //!
 //! Two serving front ends share one execution core:
 //!
@@ -41,8 +44,8 @@ pub mod shard;
 
 pub use crate::algo::api::{AlgoSpec, Params, ParseArgs, Query, QueryOutput};
 pub use dense::DenseBlock;
-pub use directory::{GraphDirectory, GraphMap, LoadedGraph, SnapshotCache};
-pub use job::{AlgoKind, JobOutput, JobRequest, JobResult};
+pub use directory::{GraphDirectory, GraphMap, LoadedGraph, ResultCache, SnapshotCache};
+pub use job::{JobOutput, JobRequest, JobResult};
 pub use metrics::{Metrics, Summary};
 pub use server::{workload, Coordinator};
 pub use shard::{ShardConfig, ShardServer};

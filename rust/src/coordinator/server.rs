@@ -26,17 +26,28 @@
 //! invisible to clients except in the `queries_fused` /
 //! `queries_solo` metrics and the latency column.
 //!
+//! Whole-graph analyses are **cached**: specs declaring
+//! [`AlgoSpec::cacheable`] (SCC summary, CC, k-core, BCC — outputs
+//! fully determined by `(graph, Params)`) consult a
+//! [`ResultCache`] keyed `(graph name, spec id, Params)` and guarded
+//! by the resolved graph's publish version, so a repeated query on an
+//! unchanged graph is answered for free (`cache_hits` /
+//! `cache_misses` count the split) and `load_graph` republishing
+//! invalidates by version mismatch alone. Source-parameterized
+//! traversals never enter the cache.
+//!
 //! Execution itself lives in [`ExecCore`], which owns **no** shared
 //! state: it borrows an engine and a metrics registry and is handed a
-//! workspace and a graph-lookup function per call. [`Coordinator`]
-//! drives it with the global Mutex-guarded pool and registry; the
-//! sharded server ([`super::shard`]) drives the same core with
-//! shard-local pools and lock-free registry snapshots, so both paths
-//! execute — and meter — queries identically.
+//! workspace, a result cache and a graph-lookup function per call.
+//! [`Coordinator`] drives it with the global Mutex-guarded pool,
+//! cache and registry; the sharded server ([`super::shard`]) drives
+//! the same core with shard-local pools, shard-local caches and
+//! lock-free registry snapshots, so both paths execute — and meter —
+//! queries identically.
 //!
 //! [`BatchEngine`]: crate::algo::api::BatchEngine
 
-use super::directory::{GraphDirectory, LoadedGraph};
+use super::directory::{GraphDirectory, LoadedGraph, ResultCache};
 use super::job::{JobOutput, JobRequest, JobResult};
 use super::metrics::Metrics;
 use super::shard::admit_batch;
@@ -66,6 +77,12 @@ pub struct Coordinator {
     /// O(n) allocation (see module docs). Shard workers bypass this
     /// Mutex entirely with pools of their own.
     workspaces: Mutex<WorkspacePool>,
+    /// Whole-graph result cache for [`cacheable`] specs, guarded by
+    /// the graph's publish version. Shard workers bypass this Mutex
+    /// too, with caches of their own.
+    ///
+    /// [`cacheable`]: crate::algo::api::AlgoSpec::cacheable
+    results: Mutex<ResultCache>,
     pub metrics: Metrics,
 }
 
@@ -82,6 +99,7 @@ impl Coordinator {
             directory: GraphDirectory::new(),
             engine: None,
             workspaces: Mutex::new(WorkspacePool::new()),
+            results: Mutex::new(ResultCache::new()),
             metrics: Metrics::new(),
         }
     }
@@ -92,6 +110,7 @@ impl Coordinator {
             directory: GraphDirectory::new(),
             engine: Some(engine),
             workspaces: Mutex::new(WorkspacePool::new()),
+            results: Mutex::new(ResultCache::new()),
             metrics: Metrics::new(),
         }
     }
@@ -131,7 +150,10 @@ impl Coordinator {
 
     /// Run `f` with a pooled workspace checked out for its duration —
     /// the one checkout/execute/checkin pattern every ad-hoc execution
-    /// path shares.
+    /// path shares. The result cache is *not* locked here: execution
+    /// takes a [`CacheHandle`] that locks the shared cache only around
+    /// the individual lookup/insert, so concurrent callers sharing an
+    /// `Arc<Coordinator>` still execute engines in parallel.
     fn with_workspace<R>(&self, f: impl FnOnce(&mut QueryWorkspace) -> R) -> R {
         let mut ws = self.checkout_workspace();
         let out = f(&mut ws);
@@ -142,6 +164,12 @@ impl Coordinator {
     /// Number of idle workspaces in the global pool (tests/metrics).
     pub fn idle_workspaces(&self) -> usize {
         self.workspaces.lock().unwrap().len()
+    }
+
+    /// Number of entries in the shared result cache (tests/metrics;
+    /// shard workers keep caches of their own, not counted here).
+    pub fn cached_results(&self) -> usize {
+        self.results.lock().unwrap().len()
     }
 
     /// Register a graph under `name` (replaces any previous one) by
@@ -158,19 +186,21 @@ impl Coordinator {
 
     /// Execute one request immediately (no queueing).
     pub fn execute(&self, req: &JobRequest) -> Result<JobResult> {
-        self.with_workspace(|ws| self.core().execute_one(req, self.graph(&req.graph), ws))
+        self.with_workspace(|ws| {
+            self.core().execute_one(
+                req,
+                self.graph(&req.graph),
+                ws,
+                &mut CacheHandle::Shared(&self.results),
+            )
+        })
     }
 
-    /// Execute one [`Query`] from the open API immediately. This is
-    /// the fully registry-native path: it dispatches on the query's
-    /// `&'static AlgoSpec` directly, so it serves *any* registered
-    /// spec — including future ones with no [`AlgoKind`] shim
-    /// encoding for the channel protocol. A [`Query`] carries no
-    /// request id (ids belong to the channel protocol), so the
-    /// returned [`JobResult::id`] is always 0 — correlate by call
-    /// site.
-    ///
-    /// [`AlgoKind`]: super::job::AlgoKind
+    /// Execute one [`Query`] from the open API immediately — the same
+    /// registry-native dispatch as the channel protocol (a
+    /// [`JobRequest`] is a `Query` plus a request id). A [`Query`]
+    /// carries no request id, so the returned [`JobResult::id`] is
+    /// always 0 — correlate by call site.
     pub fn run_query(&self, q: &Query) -> Result<JobResult> {
         self.with_workspace(|ws| {
             self.core().execute_resolved(
@@ -181,6 +211,7 @@ impl Coordinator {
                 q.source,
                 self.graph(&q.graph),
                 ws,
+                &mut CacheHandle::Shared(&self.results),
             )
         })
     }
@@ -197,7 +228,15 @@ impl Coordinator {
     /// serving loops pass the head request's arrival time so reported
     /// latencies include the fusion-window wait.
     fn run_batch_from(&self, t0: Instant, reqs: &[JobRequest]) -> Vec<Result<JobResult>> {
-        self.with_workspace(|ws| self.core().run_batch_from(t0, reqs, |name| self.graph(name), ws))
+        self.with_workspace(|ws| {
+            self.core().run_batch_from(
+                t0,
+                reqs,
+                |name| self.graph(name),
+                ws,
+                &mut CacheHandle::Shared(&self.results),
+            )
+        })
     }
 
     /// Serving loop: drain the request channel, batch what is
@@ -247,11 +286,53 @@ impl Coordinator {
     }
 }
 
+/// How an execution path reaches its [`ResultCache`]: shard workers
+/// own one outright (zero locks on the hot path); the coordinator's
+/// ad-hoc paths share one behind a Mutex that is taken only around
+/// the individual lookup/insert — never across an engine run, so
+/// concurrent callers sharing an `Arc<Coordinator>` still compute in
+/// parallel. (With the shared handle, two concurrent misses on the
+/// same key may both compute and race the insert; cacheable outputs
+/// are deterministic, so last-write-wins is correct.)
+pub(crate) enum CacheHandle<'a> {
+    Owned(&'a mut ResultCache),
+    Shared(&'a Mutex<ResultCache>),
+}
+
+impl CacheHandle<'_> {
+    fn lookup(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        version: u64,
+    ) -> Option<Arc<JobOutput>> {
+        match self {
+            CacheHandle::Owned(c) => c.lookup(graph, spec, params, version),
+            CacheHandle::Shared(m) => m.lock().unwrap().lookup(graph, spec, params, version),
+        }
+    }
+
+    fn insert(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        version: u64,
+        output: Arc<JobOutput>,
+    ) {
+        match self {
+            CacheHandle::Owned(c) => c.insert(graph, spec, params, version, output),
+            CacheHandle::Shared(m) => m.lock().unwrap().insert(graph, spec, params, version, output),
+        }
+    }
+}
+
 /// The request-execution core: registry dispatch, batching and
 /// fusion, decoupled from any particular workspace pool or registry.
-/// Holds no shared state of its own — callers hand it a workspace and
-/// a graph-lookup function, so the shard hot path runs it without
-/// taking a single Mutex.
+/// Holds no shared state of its own — callers hand it a workspace, a
+/// cache handle and a graph-lookup function, so the shard hot path
+/// runs it without taking a single Mutex.
 pub(crate) struct ExecCore<'a> {
     pub engine: Option<&'a EngineHandle>,
     pub metrics: &'a Metrics,
@@ -264,22 +345,29 @@ impl ExecCore<'_> {
         req: &JobRequest,
         lg: Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
+        cache: &mut CacheHandle<'_>,
     ) -> Result<JobResult> {
         self.execute_resolved(
             req.id,
             &req.graph,
-            req.algo.spec(),
-            req.algo.params(),
+            req.algo,
+            req.params,
             req.source,
             lg,
             ws,
+            cache,
         )
     }
 
-    /// The shared solo execution path: every request — shim-encoded
-    /// [`JobRequest`] or registry-native [`Query`] — resolves to
-    /// `(spec, params, source)` and runs the spec's solo engine out of
-    /// the caller's warm workspace.
+    /// The shared solo execution path: every request — channel
+    /// [`JobRequest`] or library [`Query`] — resolves to `(spec,
+    /// params, source)` and runs the spec's solo engine out of the
+    /// caller's warm workspace. Cacheable specs (whole-graph
+    /// analyses) first consult the caller's [`ResultCache`] keyed on
+    /// the resolved graph's publish version: a hit answers with the
+    /// stored output (bit-identical — it *is* the stored output),
+    /// `exec` zero and `cache_hits` bumped; a miss computes, stores,
+    /// and bumps `cache_misses`.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn execute_resolved(
         &self,
@@ -290,15 +378,36 @@ impl ExecCore<'_> {
         source: V,
         lg: Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
+        cache: &mut CacheHandle<'_>,
     ) -> Result<JobResult> {
         let submitted = Instant::now();
         let lg = lg.with_context(|| format!("unknown graph {graph:?}"))?;
+        if spec.cacheable {
+            if let Some(hit) = cache.lookup(graph, spec.id, params, lg.version) {
+                // Served for free: no engine ran, so `exec` is zero
+                // and no `exec/<label>` sample is recorded — the
+                // series keeps measuring real computes.
+                self.metrics.bump("cache_hits", 1);
+                self.metrics.bump("jobs_executed", 1);
+                return Ok(JobResult {
+                    id,
+                    algo: spec.label,
+                    output: (*hit).clone(),
+                    exec: Duration::ZERO,
+                    latency: submitted.elapsed(),
+                });
+            }
+            self.metrics.bump("cache_misses", 1);
+        }
         // Answer out of the caller's warm workspace: the steady-state
         // query path performs zero O(n)/O(m) allocation (epoch-stamped
         // scratch, reused bags and export buffers).
         let exec_start = Instant::now();
         let output = self.run_spec(spec, params, source, &lg, ws)?;
         let exec = exec_start.elapsed();
+        if spec.cacheable {
+            cache.insert(graph, spec.id, params, lg.version, Arc::new(output.clone()));
+        }
         let latency = submitted.elapsed();
         self.metrics.bump("jobs_executed", 1);
         self.metrics.observe(&format!("exec/{}", spec.label), exec);
@@ -342,14 +451,16 @@ impl ExecCore<'_> {
         reqs: &[JobRequest],
         lookup: impl Fn(&str) -> Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
+        cache: &mut CacheHandle<'_>,
     ) -> Vec<Result<JobResult>> {
         // Group indices by the registry key (graph, spec id, params),
         // preserving order within groups. Params is part of the key,
-        // so e.g. two BfsVgc τ values never fuse together.
+        // so e.g. two bfs-vgc τ values never fuse together.
         let mut groups: HashMap<(&str, u16, Params), Vec<usize>> = HashMap::new();
         for (i, r) in reqs.iter().enumerate() {
+            let (id, params) = r.group_key();
             groups
-                .entry((r.graph.as_str(), r.algo.spec().id, r.algo.params()))
+                .entry((r.graph.as_str(), id, params))
                 .or_default()
                 .push(i);
         }
@@ -360,14 +471,17 @@ impl ExecCore<'_> {
         let mut results: Vec<Option<Result<JobResult>>> = (0..reqs.len()).map(|_| None).collect();
         for key in order {
             let idxs = &groups[&key];
-            let spec = reqs[idxs[0]].algo.spec();
+            let spec = reqs[idxs[0]].algo;
             if spec.fusable() && idxs.len() >= 2 {
                 let lg = lookup(&reqs[idxs[0]].graph);
                 self.run_fused_group(reqs, idxs, spec, key.2, lg, ws, &mut results);
             } else {
+                // Solo path — duplicate cacheable requests within one
+                // batch hit the cache the first of them just filled.
                 for &i in idxs {
                     self.metrics.bump("queries_solo", 1);
-                    results[i] = Some(self.execute_one(&reqs[i], lookup(&reqs[i].graph), ws));
+                    results[i] =
+                        Some(self.execute_one(&reqs[i], lookup(&reqs[i].graph), ws, cache));
                 }
             }
         }
@@ -478,7 +592,7 @@ pub(crate) fn answer(
             metrics.observe("latency", latency);
             JobResult {
                 id: req.id,
-                algo: req.algo.label(),
+                algo: req.algo.label,
                 output: JobOutput::Failed {
                     error: format!("{e:#}"),
                 },
@@ -489,20 +603,27 @@ pub(crate) fn answer(
     }
 }
 
-/// Convenience: build requests for a synthetic workload trace.
+/// Convenience: build requests for a synthetic workload trace. Each
+/// algorithm in the mix is a registry spec plus its parsed
+/// parameters — resolve names with [`crate::algo::api::find`] or
+/// build the pairs directly from `registry` statics.
 pub fn workload(
     graphs: &[&str],
-    algos: &[super::job::AlgoKind],
+    algos: &[(&'static AlgoSpec, Params)],
     queries: usize,
     seed: u64,
 ) -> Vec<JobRequest> {
     let mut rng = crate::prop::Rng::new(seed);
     (0..queries as u64)
-        .map(|id| JobRequest {
-            id,
-            graph: graphs[rng.range(0, graphs.len())].to_string(),
-            algo: *rng.pick(algos),
-            source: rng.below(1 << 14) as V, // clamped by caller's graphs
+        .map(|id| {
+            let (spec, params) = *rng.pick(algos);
+            JobRequest {
+                id,
+                graph: graphs[rng.range(0, graphs.len())].to_string(),
+                algo: spec,
+                params,
+                source: rng.below(1 << 14) as V, // clamped by caller's graphs
+            }
         })
         .collect()
 }
@@ -510,8 +631,7 @@ pub fn workload(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::api::ParseArgs;
-    use crate::coordinator::job::AlgoKind;
+    use crate::algo::api::{registry as reg, ParseArgs};
     use crate::graph::gen;
 
     fn coord_with_graphs() -> Coordinator {
@@ -521,29 +641,22 @@ mod tests {
         c
     }
 
+    /// Registry-native request with an explicit τ (block stays 64).
+    fn req(id: u64, graph: &str, algo: &str, tau: usize, source: V) -> JobRequest {
+        JobRequest::parse(id, graph, algo, &ParseArgs { tau, block: 64 })
+            .unwrap()
+            .with_source(source)
+    }
+
     #[test]
     fn execute_bfs_and_scc() {
         let c = coord_with_graphs();
-        let r = c
-            .execute(&JobRequest {
-                id: 1,
-                graph: "road".into(),
-                algo: AlgoKind::BfsVgc { tau: 64 },
-                source: 0,
-            })
-            .unwrap();
+        let r = c.execute(&req(1, "road", "bfs-vgc", 64, 0)).unwrap();
         match r.output {
             JobOutput::Bfs { reached, .. } => assert!(reached > 1),
             other => panic!("wrong output {other:?}"),
         }
-        let r = c
-            .execute(&JobRequest {
-                id: 2,
-                graph: "social".into(),
-                algo: AlgoKind::SccVgc { tau: 64 },
-                source: 0,
-            })
-            .unwrap();
+        let r = c.execute(&req(2, "social", "scc-vgc", 64, 0)).unwrap();
         match r.output {
             JobOutput::Scc { count, largest } => {
                 assert!(count >= 1 && largest >= 1);
@@ -558,14 +671,7 @@ mod tests {
         // k-core answer through the same workspace path as everything
         // else.
         let c = coord_with_graphs();
-        let r = c
-            .execute(&JobRequest {
-                id: 1,
-                graph: "road".into(),
-                algo: AlgoKind::Cc,
-                source: 0,
-            })
-            .unwrap();
+        let r = c.execute(&req(1, "road", "cc", 64, 0)).unwrap();
         assert_eq!(r.algo, "cc");
         match r.output {
             JobOutput::Cc { components, largest } => {
@@ -573,14 +679,7 @@ mod tests {
             }
             other => panic!("wrong output {other:?}"),
         }
-        let r = c
-            .execute(&JobRequest {
-                id: 2,
-                graph: "social".into(),
-                algo: AlgoKind::Kcore,
-                source: 0,
-            })
-            .unwrap();
+        let r = c.execute(&req(2, "social", "kcore", 64, 0)).unwrap();
         assert_eq!(r.algo, "kcore");
         match r.output {
             JobOutput::Kcore {
@@ -594,24 +693,18 @@ mod tests {
     }
 
     #[test]
-    fn run_query_matches_shim_execution() {
-        // The registry-native Query path and the AlgoKind shim path
-        // must answer identically.
+    fn run_query_matches_channel_execution() {
+        // The library Query path and the channel JobRequest path are
+        // one dispatch path: identical answers.
         let c = coord_with_graphs();
         let q = Query::new("road", "bfs", &ParseArgs { tau: 64, block: 64 })
             .unwrap()
             .with_source(3);
         let via_query = c.run_query(&q).unwrap();
-        let via_shim = c
-            .execute(&JobRequest {
-                id: 0,
-                graph: "road".into(),
-                algo: AlgoKind::BfsVgc { tau: 64 },
-                source: 3,
-            })
-            .unwrap();
-        assert_eq!(via_query.output, via_shim.output);
-        assert_eq!(via_query.algo, via_shim.algo);
+        let via_channel = c.execute(&JobRequest::from_query(7, &q)).unwrap();
+        assert_eq!(via_query.output, via_channel.output);
+        assert_eq!(via_query.algo, via_channel.algo);
+        assert_eq!(via_channel.id, 7);
         // Unknown graphs fail the same way.
         let q = Query::new("ghost", "cc", &ParseArgs::default()).unwrap();
         assert!(c.run_query(&q).is_err());
@@ -620,40 +713,22 @@ mod tests {
     #[test]
     fn unknown_graph_and_bad_source_error() {
         let c = coord_with_graphs();
+        assert!(c.execute(&req(1, "nope", "bfs-frontier", 64, 0)).is_err());
         assert!(c
-            .execute(&JobRequest {
-                id: 1,
-                graph: "nope".into(),
-                algo: AlgoKind::BfsFrontier,
-                source: 0,
-            })
-            .is_err());
-        assert!(c
-            .execute(&JobRequest {
-                id: 2,
-                graph: "road".into(),
-                algo: AlgoKind::BfsFrontier,
-                source: u32::MAX - 1,
-            })
+            .execute(&req(2, "road", "bfs-frontier", 64, u32::MAX - 1))
             .is_err());
     }
 
     #[test]
     fn variants_agree_through_the_server() {
         let c = coord_with_graphs();
-        let mk = |algo| JobRequest {
-            id: 0,
-            graph: "road".into(),
-            algo,
-            source: 3,
-        };
-        let a = c.execute(&mk(AlgoKind::BfsVgc { tau: 32 })).unwrap();
-        let b = c.execute(&mk(AlgoKind::BfsFrontier)).unwrap();
-        let d = c.execute(&mk(AlgoKind::BfsDirOpt)).unwrap();
+        let a = c.execute(&req(0, "road", "bfs-vgc", 32, 3)).unwrap();
+        let b = c.execute(&req(0, "road", "bfs-frontier", 32, 3)).unwrap();
+        let d = c.execute(&req(0, "road", "bfs-diropt", 32, 3)).unwrap();
         assert_eq!(a.output, b.output);
         assert_eq!(b.output, d.output);
-        let x = c.execute(&mk(AlgoKind::SsspRho { tau: 32 })).unwrap();
-        let y = c.execute(&mk(AlgoKind::SsspDelta)).unwrap();
+        let x = c.execute(&req(0, "road", "sssp-rho", 32, 3)).unwrap();
+        let y = c.execute(&req(0, "road", "sssp-delta", 32, 3)).unwrap();
         match (&x.output, &y.output) {
             (
                 JobOutput::Sssp {
@@ -676,11 +751,14 @@ mod tests {
     fn batch_returns_in_submission_order_and_observes_metrics() {
         let c = coord_with_graphs();
         let reqs: Vec<JobRequest> = (0..6)
-            .map(|i| JobRequest {
-                id: i,
-                graph: if i % 2 == 0 { "road" } else { "social" }.into(),
-                algo: AlgoKind::BfsVgc { tau: 64 },
-                source: (i % 3) as V,
+            .map(|i| {
+                req(
+                    i,
+                    if i % 2 == 0 { "road" } else { "social" },
+                    "bfs-vgc",
+                    64,
+                    (i % 3) as V,
+                )
             })
             .collect();
         let out = c.run_batch(&reqs);
@@ -697,17 +775,18 @@ mod tests {
         let c = coord_with_graphs();
         for i in 0..12u64 {
             let algo = match i % 4 {
-                0 => AlgoKind::BfsVgc { tau: 64 },
-                1 => AlgoKind::SsspRho { tau: 64 },
-                2 => AlgoKind::SccVgc { tau: 64 },
-                _ => AlgoKind::SsspDelta,
+                0 => "bfs-vgc",
+                1 => "sssp-rho",
+                2 => "scc-vgc",
+                _ => "sssp-delta",
             };
-            c.execute(&JobRequest {
-                id: i,
-                graph: if i % 2 == 0 { "road" } else { "social" }.into(),
+            c.execute(&req(
+                i,
+                if i % 2 == 0 { "road" } else { "social" },
                 algo,
-                source: (i % 3) as V,
-            })
+                64,
+                (i % 3) as V,
+            ))
             .unwrap();
         }
         // Serial queries always find the previously checked-in
@@ -719,27 +798,77 @@ mod tests {
     #[test]
     fn workspace_and_fresh_paths_agree() {
         let c = coord_with_graphs();
-        let mk = |algo| JobRequest {
-            id: 0,
-            graph: "road".into(),
-            algo,
-            source: 5,
-        };
         // Run everything twice: the second pass uses warm workspaces
-        // and must produce identical summaries.
+        // (or, for cacheable specs, the result cache) and must produce
+        // identical summaries.
         for algo in [
-            AlgoKind::BfsVgc { tau: 64 },
-            AlgoKind::BfsDirOpt,
-            AlgoKind::SccVgc { tau: 64 },
-            AlgoKind::SsspRho { tau: 64 },
-            AlgoKind::SsspDelta,
-            AlgoKind::Cc,
-            AlgoKind::Kcore,
+            "bfs-vgc",
+            "bfs-diropt",
+            "scc-vgc",
+            "sssp-rho",
+            "sssp-delta",
+            "cc",
+            "kcore",
         ] {
-            let cold = c.execute(&mk(algo)).unwrap();
-            let warm = c.execute(&mk(algo)).unwrap();
-            assert_eq!(cold.output, warm.output, "{:?}", algo);
+            let cold = c.execute(&req(0, "road", algo, 64, 5)).unwrap();
+            let warm = c.execute(&req(0, "road", algo, 64, 5)).unwrap();
+            assert_eq!(cold.output, warm.output, "{algo}");
         }
+    }
+
+    #[test]
+    fn whole_graph_duplicates_hit_the_result_cache() {
+        let c = coord_with_graphs();
+        let first = c.execute(&req(0, "road", "cc", 64, 0)).unwrap();
+        assert_eq!(c.metrics.counter("cache_misses"), 1);
+        assert_eq!(c.metrics.counter("cache_hits"), 0);
+        for i in 1..4u64 {
+            let dup = c.execute(&req(i, "road", "cc", 64, 0)).unwrap();
+            assert_eq!(dup.output, first.output, "bit-identical from cache");
+            assert_eq!(dup.exec, Duration::ZERO, "no engine ran");
+        }
+        assert_eq!(c.metrics.counter("cache_hits"), 3);
+        assert_eq!(c.metrics.counter("cache_misses"), 1);
+        assert_eq!(c.cached_results(), 1);
+        // A traversal on the same graph never touches the cache.
+        c.execute(&req(9, "road", "bfs-vgc", 64, 0)).unwrap();
+        c.execute(&req(10, "road", "bfs-vgc", 64, 0)).unwrap();
+        assert_eq!(c.metrics.counter("cache_hits"), 3);
+        assert_eq!(c.metrics.counter("cache_misses"), 1);
+        assert_eq!(c.cached_results(), 1);
+    }
+
+    #[test]
+    fn republish_invalidates_cached_results() {
+        let c = Coordinator::new();
+        c.load_graph("g", gen::grid(3, 3).symmetrize());
+        let small = c.execute(&req(0, "g", "cc", 64, 0)).unwrap();
+        assert_eq!(
+            small.output,
+            JobOutput::Cc {
+                components: 1,
+                largest: 9
+            }
+        );
+        c.execute(&req(1, "g", "cc", 64, 0)).unwrap();
+        assert_eq!(c.metrics.counter("cache_hits"), 1);
+        // Republish under the same name: the version moves, so the
+        // next query must recompute against the new graph.
+        c.load_graph("g", gen::grid(4, 4).symmetrize());
+        let big = c.execute(&req(2, "g", "cc", 64, 0)).unwrap();
+        assert_eq!(
+            big.output,
+            JobOutput::Cc {
+                components: 1,
+                largest: 16
+            },
+            "must not answer with the replaced graph's output"
+        );
+        assert_eq!(c.metrics.counter("cache_hits"), 1);
+        assert_eq!(c.metrics.counter("cache_misses"), 2);
+        // And the fresh entry serves the next duplicate.
+        c.execute(&req(3, "g", "cc", 64, 0)).unwrap();
+        assert_eq!(c.metrics.counter("cache_hits"), 2);
     }
 
     #[test]
@@ -749,17 +878,18 @@ mod tests {
         let mut reqs = Vec::new();
         for i in 0..24u64 {
             let algo = match i % 4 {
-                0 => AlgoKind::BfsVgc { tau: 64 },
-                1 => AlgoKind::SsspRho { tau: 64 },
-                2 => AlgoKind::BfsDirOpt,
-                _ => AlgoKind::BfsFrontier, // not fusable: solo path
+                0 => "bfs-vgc",
+                1 => "sssp-rho",
+                2 => "bfs-diropt",
+                _ => "bfs-frontier", // not fusable: solo path
             };
-            reqs.push(JobRequest {
-                id: i,
-                graph: if i % 2 == 0 { "road" } else { "social" }.into(),
+            reqs.push(req(
+                i,
+                if i % 2 == 0 { "road" } else { "social" },
                 algo,
-                source: (i % 7) as crate::V,
-            });
+                64,
+                (i % 7) as V,
+            ));
         }
         let fused = c.run_batch(&reqs);
         for (i, r) in fused.iter().enumerate() {
@@ -779,12 +909,7 @@ mod tests {
     fn fusion_splits_walks_at_64_lanes() {
         let c = coord_with_graphs();
         let reqs: Vec<JobRequest> = (0..70)
-            .map(|i| JobRequest {
-                id: i,
-                graph: "road".into(),
-                algo: AlgoKind::BfsVgc { tau: 64 },
-                source: (i % 50) as crate::V,
-            })
+            .map(|i| req(i, "road", "bfs-vgc", 64, (i % 50) as V))
             .collect();
         let out = c.run_batch(&reqs);
         assert!(out.iter().all(|r| r.is_ok()));
@@ -797,31 +922,11 @@ mod tests {
     fn fused_group_reports_bad_sources_individually() {
         let c = coord_with_graphs();
         let mut reqs: Vec<JobRequest> = (0..4)
-            .map(|i| JobRequest {
-                id: i,
-                graph: "road".into(),
-                algo: AlgoKind::SsspRho { tau: 32 },
-                source: i as crate::V,
-            })
+            .map(|i| req(i, "road", "sssp-rho", 32, i as V))
             .collect();
-        reqs.push(JobRequest {
-            id: 4,
-            graph: "road".into(),
-            algo: AlgoKind::SsspRho { tau: 32 },
-            source: u32::MAX - 1,
-        });
-        reqs.push(JobRequest {
-            id: 5,
-            graph: "missing".into(),
-            algo: AlgoKind::BfsVgc { tau: 32 },
-            source: 0,
-        });
-        reqs.push(JobRequest {
-            id: 6,
-            graph: "missing".into(),
-            algo: AlgoKind::BfsVgc { tau: 32 },
-            source: 1,
-        });
+        reqs.push(req(4, "road", "sssp-rho", 32, u32::MAX - 1));
+        reqs.push(req(5, "missing", "bfs-vgc", 32, 0));
+        reqs.push(req(6, "missing", "bfs-vgc", 32, 1));
         let out = c.run_batch(&reqs);
         for r in &out[..4] {
             assert!(r.is_ok());
@@ -830,7 +935,7 @@ mod tests {
         assert!(out[5].as_ref().unwrap_err().to_string().contains("unknown graph"));
         assert!(out[6].is_err());
         // queries_fused counts routed requests, errors included: the 5
-        // SsspRho (one bad source) + the 2 unknown-graph BfsVgc.
+        // sssp-rho (one bad source) + the 2 unknown-graph bfs-vgc.
         assert_eq!(c.metrics.counter("queries_fused"), 7);
         assert_eq!(c.metrics.counter("fused_lanes"), 4, "only valid sources ran");
     }
@@ -839,13 +944,14 @@ mod tests {
     fn different_tau_groups_do_not_fuse_together() {
         let c = coord_with_graphs();
         let reqs: Vec<JobRequest> = (0..4)
-            .map(|i| JobRequest {
-                id: i,
-                graph: "road".into(),
-                algo: AlgoKind::BfsVgc {
-                    tau: if i % 2 == 0 { 16 } else { 64 },
-                },
-                source: i as crate::V,
+            .map(|i| {
+                req(
+                    i,
+                    "road",
+                    "bfs-vgc",
+                    if i % 2 == 0 { 16 } else { 64 },
+                    i as V,
+                )
             })
             .collect();
         let out = c.run_batch(&reqs);
@@ -866,12 +972,7 @@ mod tests {
         };
         for i in 0..10u64 {
             req_tx
-                .send(JobRequest {
-                    id: i,
-                    graph: "road".into(),
-                    algo: AlgoKind::SsspRho { tau: 64 },
-                    source: (i % 5) as V,
-                })
+                .send(req(i, "road", "sssp-rho", 64, (i % 5) as V))
                 .unwrap();
         }
         drop(req_tx);
@@ -892,12 +993,7 @@ mod tests {
         let (res_tx, res_rx) = std::sync::mpsc::channel();
         for i in 0..5u64 {
             req_tx
-                .send(JobRequest {
-                    id: i,
-                    graph: "road".into(),
-                    algo: AlgoKind::BfsVgc { tau: 64 },
-                    source: (i % 5) as V,
-                })
+                .send(req(i, "road", "bfs-vgc", 64, (i % 5) as V))
                 .unwrap();
         }
         // Close before the server even starts: the head recv succeeds
@@ -924,12 +1020,14 @@ mod tests {
 
     #[test]
     fn workload_generator_is_deterministic() {
-        let a = workload(&["g1", "g2"], &[AlgoKind::BfsFrontier], 20, 7);
-        let b = workload(&["g1", "g2"], &[AlgoKind::BfsFrontier], 20, 7);
+        let mix = [(&reg::BFS_FRONTIER, Params::NONE)];
+        let a = workload(&["g1", "g2"], &mix, 20, 7);
+        let b = workload(&["g1", "g2"], &mix, 20, 7);
         assert_eq!(a.len(), 20);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.graph, y.graph);
             assert_eq!(x.source, y.source);
+            assert!(std::ptr::eq(x.algo, y.algo));
         }
     }
 }

@@ -27,12 +27,16 @@
 //! * **Shard worker** — owns everything it touches per request, so
 //!   the hot path takes **zero shared Mutex locks** (the shard-local
 //!   [`Metrics`] registry locks only its own, uncontended Mutex): a
-//!   plain-`Vec` [`WorkspacePool`], shard-local metrics (merged
-//!   into the coordinator's global registry when serving ends), and a
-//!   [`SnapshotCache`] of the graph registry refreshed only when the
-//!   [`GraphDirectory`] version counter moves (one atomic load per
-//!   dispatch; `load_graph` publishes new snapshots without ever
-//!   blocking request execution).
+//!   plain-`Vec` [`WorkspacePool`], a shard-local [`ResultCache`]
+//!   answering repeated whole-graph analyses (SCC/CC/k-core/BCC) for
+//!   free — valid because the router pins a graph to one shard, so
+//!   that shard's cache sees every request that could hit — shard-
+//!   local metrics (merged into the coordinator's global registry
+//!   when serving ends), and a [`SnapshotCache`] of the graph
+//!   registry refreshed only when the [`GraphDirectory`] version
+//!   counter moves (one atomic load per dispatch; `load_graph`
+//!   publishes new snapshots without ever blocking request execution,
+//!   and its version bump is what invalidates cached results).
 //! * **Fusion-window admission** ([`admit_batch`]) — when the head
 //!   request's registry spec has a batch engine and the window is
 //!   nonzero, the worker keeps draining its inbox until the window
@@ -60,10 +64,10 @@
 //! [`ExecCore::run_batch_from`]: super::server::ExecCore::run_batch_from
 //! [`GraphDirectory`]: super::directory::GraphDirectory
 
-use super::directory::SnapshotCache;
+use super::directory::{ResultCache, SnapshotCache};
 use super::job::{JobRequest, JobResult};
 use super::metrics::Metrics;
-use super::server::{answer, Coordinator, ExecCore, MAX_FUSE};
+use super::server::{answer, CacheHandle, Coordinator, ExecCore, MAX_FUSE};
 use crate::algo::workspace::WorkspacePool;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
@@ -168,6 +172,10 @@ fn shard_loop(
 ) {
     let mut cache = SnapshotCache::new();
     let mut pool = WorkspacePool::new();
+    // Shard-local result cache: graph→shard affinity means every
+    // duplicate whole-graph query for a graph lands here, so a
+    // worker-owned (lock-free) cache sees the full hit rate.
+    let mut results_cache = ResultCache::new();
     let core = ExecCore {
         engine: coord.engine(),
         metrics,
@@ -207,7 +215,13 @@ fn shard_loop(
             metrics.bump("workspaces_created", 1);
         }
         let mut ws = pool.checkout();
-        let results = core.run_batch_from(t0, &batch, |name| cache.cached(name), &mut ws);
+        let results = core.run_batch_from(
+            t0,
+            &batch,
+            |name| cache.cached(name),
+            &mut ws,
+            &mut CacheHandle::Owned(&mut results_cache),
+        );
         pool.checkin(ws);
         for (req, res) in batch.iter().zip(results) {
             let jr = answer(req, res, t0, metrics);
@@ -247,10 +261,9 @@ pub(crate) fn admit_batch(
         metrics.bump("window_waits", 1);
         let deadline = Instant::now() + window;
         // The grouping key run_batch fuses on: registry spec id +
-        // parsed params (+ the graph name) — AlgoKind is only the
-        // wire encoding.
-        let head_spec = batch[0].algo.spec().id;
-        let head_params = batch[0].algo.params();
+        // parsed params (+ the graph name) — exactly what the wire
+        // request carries.
+        let head_key = batch[0].group_key();
         let head_graph = batch[0].graph.clone();
         let mut same_key = 1usize;
         while batch.len() < max_batch && same_key < MAX_FUSE {
@@ -261,10 +274,7 @@ pub(crate) fn admit_batch(
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(r) => {
-                    if r.algo.spec().id == head_spec
-                        && r.algo.params() == head_params
-                        && r.graph == head_graph
-                    {
+                    if r.group_key() == head_key && r.graph == head_graph {
                         same_key += 1;
                     }
                     batch.push(r);
@@ -291,16 +301,13 @@ pub(crate) fn admit_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::AlgoKind;
+    use crate::algo::api::ParseArgs;
     use crate::V;
 
-    fn req(id: u64, graph: &str, algo: AlgoKind) -> JobRequest {
-        JobRequest {
-            id,
-            graph: graph.into(),
-            algo,
-            source: (id % 3) as V,
-        }
+    fn req(id: u64, graph: &str, algo: &str, tau: usize) -> JobRequest {
+        JobRequest::parse(id, graph, algo, &ParseArgs { tau, block: 64 })
+            .unwrap()
+            .with_source((id % 3) as V)
     }
 
     #[test]
@@ -308,9 +315,9 @@ mod tests {
         let m = Metrics::new();
         let (tx, rx) = std::sync::mpsc::channel();
         for i in 0..3u64 {
-            tx.send(req(i, "g", AlgoKind::BfsVgc { tau: 8 })).unwrap();
+            tx.send(req(i, "g", "bfs-vgc", 8)).unwrap();
         }
-        let mut batch = vec![req(99, "g", AlgoKind::BfsVgc { tau: 8 })];
+        let mut batch = vec![req(99, "g", "bfs-vgc", 8)];
         admit_batch(&rx, &mut batch, 64, Duration::ZERO, &m);
         assert_eq!(batch.len(), 4);
         assert_eq!(m.counter("window_waits"), 0);
@@ -321,8 +328,8 @@ mod tests {
     fn admit_batch_nonfusable_head_falls_through() {
         let m = Metrics::new();
         let (tx, rx) = std::sync::mpsc::channel();
-        tx.send(req(1, "g", AlgoKind::Bcc)).unwrap();
-        let mut batch = vec![req(0, "g", AlgoKind::Bcc)];
+        tx.send(req(1, "g", "bcc-fast", 8)).unwrap();
+        let mut batch = vec![req(0, "g", "bcc-fast", 8)];
         let t0 = Instant::now();
         admit_batch(&rx, &mut batch, 64, Duration::from_secs(10), &m);
         assert!(t0.elapsed() < Duration::from_secs(5), "no window wait");
@@ -338,9 +345,9 @@ mod tests {
         // 70 same-key requests pre-queued: the window must dispatch at
         // 64 same-key lanes without waiting out a long deadline.
         for i in 0..70u64 {
-            tx.send(req(i, "g", AlgoKind::SsspRho { tau: 8 })).unwrap();
+            tx.send(req(i, "g", "sssp-rho", 8)).unwrap();
         }
-        let mut batch = vec![req(99, "g", AlgoKind::SsspRho { tau: 8 })];
+        let mut batch = vec![req(99, "g", "sssp-rho", 8)];
         let t0 = Instant::now();
         admit_batch(&rx, &mut batch, 1 << 20, Duration::from_secs(10), &m);
         assert!(t0.elapsed() < Duration::from_secs(5), "early dispatch");
@@ -354,20 +361,37 @@ mod tests {
     fn admit_batch_times_out_and_survives_disconnect() {
         let m = Metrics::new();
         let (tx, rx) = std::sync::mpsc::channel::<JobRequest>();
-        tx.send(req(1, "g", AlgoKind::BfsVgc { tau: 8 })).unwrap();
-        let mut batch = vec![req(0, "g", AlgoKind::BfsVgc { tau: 8 })];
+        tx.send(req(1, "g", "bfs-vgc", 8)).unwrap();
+        let mut batch = vec![req(0, "g", "bfs-vgc", 8)];
         admit_batch(&rx, &mut batch, 64, Duration::from_millis(5), &m);
         assert_eq!(batch.len(), 2, "drained the queued request");
         assert_eq!(m.counter("window_timeouts"), 1, "then timed out");
         // Disconnected mid-window: batch stays intact, returns fast.
         drop(tx);
         let (tx2, rx2) = std::sync::mpsc::channel::<JobRequest>();
-        tx2.send(req(2, "g", AlgoKind::BfsVgc { tau: 8 })).unwrap();
+        tx2.send(req(2, "g", "bfs-vgc", 8)).unwrap();
         drop(tx2);
-        let mut batch2 = vec![req(0, "g", AlgoKind::BfsVgc { tau: 8 })];
+        let mut batch2 = vec![req(0, "g", "bfs-vgc", 8)];
         let t0 = Instant::now();
         admit_batch(&rx2, &mut batch2, 64, Duration::from_secs(10), &m);
         assert_eq!(batch2.len(), 2, "buffered request drained after close");
         assert!(t0.elapsed() < Duration::from_secs(5), "no deadline sleep");
+    }
+
+    #[test]
+    fn different_params_do_not_count_toward_the_same_key_cap() {
+        // Same graph + spec but a different τ: admitted into the batch
+        // (run_batch groups them separately) without counting toward
+        // the head's 64-lane same-key cap.
+        let m = Metrics::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..4u64 {
+            tx.send(req(i, "g", "bfs-vgc", if i % 2 == 0 { 8 } else { 32 }))
+                .unwrap();
+        }
+        drop(tx);
+        let mut batch = vec![req(99, "g", "bfs-vgc", 8)];
+        admit_batch(&rx, &mut batch, 64, Duration::from_secs(10), &m);
+        assert_eq!(batch.len(), 5, "all queued requests admitted");
     }
 }

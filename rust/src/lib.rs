@@ -47,10 +47,11 @@
 //!
 //! Each algorithm family has a workspace struct
 //! ([`algo::BfsWorkspace`], [`algo::SsspWorkspace`],
-//! [`algo::SccWorkspace`], [`algo::CcWorkspace`]) bundled into one
+//! [`algo::SccWorkspace`], [`algo::CcWorkspace`],
+//! [`algo::KcoreWorkspace`]) bundled into one
 //! [`algo::QueryWorkspace`]; algorithms expose `_ws` entry points
-//! (`vgc_bfs_ws`, `rho_stepping_ws`, `vgc_scc_ws`, ...) next to the
-//! classic allocate-per-call wrappers. **Hold one `QueryWorkspace` per
+//! (`vgc_bfs_ws`, `rho_stepping_ws`, `vgc_scc_ws`, `par_kcore_ws`,
+//! ...) next to the classic allocate-per-call wrappers. **Hold one `QueryWorkspace` per
 //! worker** — a workspace is exclusive to one in-flight query (the
 //! `&mut` receiver enforces it), and after warm-up every query runs
 //! with zero O(n)/O(m) allocation. The [`coordinator`] does exactly
@@ -123,19 +124,34 @@
 //!   snapshot.
 //! * **Fusion window** — on a fusable head request the worker keeps
 //!   draining its inbox up to a deadline (default 200µs), the batch
-//!   cap, or 64 accumulated same-(graph, algo, τ) lanes, then
+//!   cap, or 64 accumulated same-(graph, spec id, params) lanes, then
 //!   dispatches; non-fusable heads fall through immediately. Closing
 //!   the request channel mid-window never drops accepted work. The
 //!   `shard_dispatches` / `window_waits` / `window_timeouts` /
 //!   `registry_snapshots` counters expose the admission behavior.
+//! * **Result cache** — whole-graph analyses (SCC summary, CC,
+//!   k-core, BCC: specs declaring [`algo::api::AlgoSpec::cacheable`])
+//!   are answered from a shard-local [`coordinator::ResultCache`]
+//!   when the same query repeats against an unchanged graph. Entries
+//!   are keyed `(graph name, spec id, params)` and guarded by the
+//!   [`coordinator::LoadedGraph`]'s publish version, so `load_graph`
+//!   republishing invalidates by version comparison alone — no
+//!   eviction protocol, no TTLs. Graph→shard affinity means the
+//!   owning shard's cache sees every duplicate; `cache_hits` /
+//!   `cache_misses` merge across shards like every other counter.
+//!   Source-parameterized traversals (BFS/SSSP) never enter.
 //! * **Demux** — the batch runs through the same execution core as
 //!   the single-threaded loop ([`coordinator::Coordinator::serve`]),
 //!   so fused per-lane results come back in submission order and are
-//!   bit-identical to solo execution.
+//!   bit-identical to solo execution (and cache hits return the
+//!   stored output itself — bit-identical by construction).
 //!
 //! `benches/ablation_serve_shards.rs` measures 1-shard-no-window vs
 //! N-shard-windowed throughput on a mixed two-graph workload and
-//! asserts `fused_fraction` rises once a window is in play.
+//! asserts `fused_fraction` rises once a window is in play;
+//! `benches/ablation_result_cache.rs` asserts a duplicate-heavy
+//! workload hits the cache and answers duplicates below fresh-compute
+//! latency.
 //!
 //! ## Query API — the open algorithm registry
 //!
@@ -146,26 +162,30 @@
 //! (one query against a [`coordinator::LoadedGraph`] +
 //! [`algo::QueryWorkspace`] → typed [`algo::api::QueryOutput`]), an
 //! optional batch engine (the ≤ 64-lane fused walk + per-lane demux),
-//! and an optional traced engine (CLI `run` / simulator). A request
-//! is a [`algo::api::Query`]`{ graph, algo: &'static AlgoSpec,
-//! source, params }`; every front end — [`coordinator::Coordinator`]
+//! an optional traced engine (CLI `run` / simulator), and the
+//! `cacheable` flag feeding the result cache. A request is a
+//! [`algo::api::Query`]`{ graph, algo: &'static AlgoSpec, source,
+//! params }` — and that *is* the wire type: the channel protocol's
+//! [`coordinator::JobRequest`] carries the same
+//! `&'static AlgoSpec` + parsed `Params` plus a request id
+//! ([`coordinator::JobRequest::from_query`] converts losslessly, and
+//! [`coordinator::JobRequest::parse`] builds one straight from a
+//! label or alias). Every front end — [`coordinator::Coordinator`]
 //! execution and batching, the sharded server's fusion-window
 //! grouping key `(graph, spec id, params)`, the CLI, the workload
-//! generator, the bench harness — dispatches through the registry
-//! instead of per-algorithm match arms.
+//! generator, the bench harness — dispatches through the registry;
+//! there are no per-algorithm match arms and no per-algorithm wire
+//! enum anywhere (the deprecated wire-enum shim, the last closed
+//! table, is deleted).
 //!
 //! **Registering an algorithm is one module touch**: implement its
 //! engine functions in `algo/api/engines.rs`, add one `AlgoSpec`
 //! line to `algo/api/registry.rs`, and it is parseable, servable
-//! (solo loop *and* sharded), metered and covered by the
+//! (solo loop *and* sharded, channel protocol included), metered,
+//! cached if it declares so, and covered by the
 //! registry-completeness tests. Connectivity (`cc`) and k-core
 //! (`kcore`) were opened for serving exactly this way — try
 //! `pasgal run --algo cc --graph g.bin` or a `serve --demo` trace.
-//! The old closed `AlgoKind` enum survives only as a deprecated
-//! `Copy + Eq + Hash` wire encoding of `(spec, params)` for the
-//! channel protocol ([`coordinator::AlgoKind`] delegates every method
-//! to the registry); prefer [`algo::api::Query`] +
-//! [`coordinator::Coordinator::run_query`] in new code.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.

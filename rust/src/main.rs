@@ -16,7 +16,9 @@ use pasgal::algo::QueryWorkspace;
 use pasgal::bail;
 use pasgal::error::{Context, Error, Result};
 use pasgal::bench::suite as bsuite;
-use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest, LoadedGraph, ShardConfig, ShardServer};
+use pasgal::coordinator::{
+    AlgoSpec, Coordinator, JobRequest, LoadedGraph, Params, ShardConfig, ShardServer,
+};
 use pasgal::graph::gen::{suite_entry, Scale};
 use pasgal::graph::{io, stats};
 use pasgal::sim::{makespan, AlgoTrace, CostModel};
@@ -279,13 +281,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tau: args.num("tau", 512),
         block: args.num("block", 64),
     };
-    let algos: Vec<AlgoKind> = ["bfs", "sssp", "scc", "bcc", "dense-closure", "cc", "kcore"]
-        .iter()
-        .map(|name| {
-            AlgoKind::parse_with(name, &parse_args)
-                .with_context(|| format!("{name:?} missing from the registry"))
-        })
-        .collect::<Result<_>>()?;
+    let algos: Vec<(&'static AlgoSpec, Params)> =
+        ["bfs", "sssp", "scc", "bcc", "dense-closure", "cc", "kcore"]
+            .iter()
+            .map(|name| {
+                let spec = api::find(name)
+                    .with_context(|| format!("{name:?} missing from the registry"))?;
+                Ok((spec, (spec.parse)(&parse_args)))
+            })
+            .collect::<Result<_>>()?;
     let mut reqs = pasgal::coordinator::workload(&["road", "social"], &algos, requests, 7);
     for r in &mut reqs {
         r.source %= 4000; // clamp into the smallest loaded graph
@@ -346,6 +350,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.metrics.counter("window_waits"),
         coord.metrics.counter("window_timeouts"),
         coord.metrics.counter("registry_snapshots"),
+    );
+    println!(
+        "  result cache: hit rate {:.2} (hits {} / misses {}) — duplicate \
+         whole-graph analyses (scc/cc/kcore/bcc) answered for free",
+        coord.metrics.cache_hit_rate(),
+        coord.metrics.counter("cache_hits"),
+        coord.metrics.counter("cache_misses"),
     );
     for name in coord.metrics.series_names() {
         if let Some(s) = coord.metrics.summary(&name) {

@@ -2,8 +2,9 @@
 //! cross module boundaries (generators -> IO -> algorithms ->
 //! coordinator -> PJRT runtime -> simulator).
 
+use pasgal::algo::api::ParseArgs;
 use pasgal::algo::{bcc, bfs, cc, kcore, scc, sssp};
-use pasgal::coordinator::{AlgoKind, Coordinator, JobOutput, JobRequest};
+use pasgal::coordinator::{Coordinator, JobOutput, JobRequest};
 use pasgal::graph::{gen, io, stats};
 use pasgal::sim::{makespan, AlgoTrace, CostModel};
 use std::path::PathBuf;
@@ -60,24 +61,26 @@ fn coordinator_full_workload_with_pjrt_engine() {
     };
     let coord = Coordinator::with_engine(engine);
     coord.load_graph("g", gen::road(15, 30, 5));
+    // Registry-native requests: every algorithm addressed by label,
+    // τ/block threaded through the spec's parse.
+    let args = ParseArgs { tau: 64, block: 32 };
     let reqs: Vec<JobRequest> = [
-        AlgoKind::BfsVgc { tau: 64 },
-        AlgoKind::BfsFrontier,
-        AlgoKind::BfsDirOpt,
-        AlgoKind::SccVgc { tau: 64 },
-        AlgoKind::SccMultistep,
-        AlgoKind::Bcc,
-        AlgoKind::SsspRho { tau: 64 },
-        AlgoKind::SsspDelta,
-        AlgoKind::DenseClosure { block: 32 },
+        "bfs-vgc",
+        "bfs-frontier",
+        "bfs-diropt",
+        "scc-vgc",
+        "scc-multistep",
+        "bcc-fast",
+        "sssp-rho",
+        "sssp-delta",
+        "dense-closure",
     ]
     .into_iter()
     .enumerate()
-    .map(|(i, algo)| JobRequest {
-        id: i as u64,
-        graph: "g".into(),
-        algo,
-        source: 3,
+    .map(|(i, algo)| {
+        JobRequest::parse(i as u64, "g", algo, &args)
+            .unwrap()
+            .with_source(3)
     })
     .collect();
     let results = coord.run_batch(&reqs);

@@ -8,8 +8,9 @@ use pasgal::algo::multi::{
     multi_bfs_diropt, multi_bfs_vgc, multi_bfs_vgc_ws, multi_rho, multi_rho_ws,
 };
 use pasgal::algo::workspace::{MultiBfsWorkspace, MultiSsspWorkspace};
+use pasgal::algo::api::ParseArgs;
 use pasgal::algo::{api, bfs, sssp};
-use pasgal::coordinator::{AlgoKind, Coordinator, JobRequest};
+use pasgal::coordinator::{Coordinator, JobRequest};
 use pasgal::graph::{gen, Graph};
 use pasgal::V;
 
@@ -161,18 +162,14 @@ fn every_registry_batch_engine_is_bit_identical_solo_vs_fused() {
     let mut fusable_specs = 0u64;
     for spec in api::all().iter().filter(|s| s.fusable()) {
         fusable_specs += 1;
-        let algo = AlgoKind::parse(spec.label, 32)
-            .unwrap_or_else(|| panic!("{} must have a shim encoding", spec.label));
+        let args = ParseArgs { tau: 32, block: 64 };
         let reqs: Vec<JobRequest> = [3u32, 199, 397]
             .iter()
             .map(|&source| {
                 next_id += 1;
-                JobRequest {
-                    id: next_id,
-                    graph: "chain".into(),
-                    algo,
-                    source,
-                }
+                JobRequest::parse(next_id, "chain", spec.label, &args)
+                    .unwrap_or_else(|| panic!("{} must parse from its label", spec.label))
+                    .with_source(source)
             })
             .collect();
         let batched = fused.run_batch(&reqs);
@@ -204,17 +201,21 @@ fn coordinator_fusion_matches_solo_and_preserves_order() {
     let mut reqs = Vec::new();
     for i in 0..20u64 {
         let algo = match i % 4 {
-            0 => AlgoKind::BfsVgc { tau: 64 },
-            1 => AlgoKind::SsspRho { tau: 64 },
-            2 => AlgoKind::BfsDirOpt,
-            _ => AlgoKind::BfsFrontier, // stays on the solo path
+            0 => "bfs-vgc",
+            1 => "sssp-rho",
+            2 => "bfs-diropt",
+            _ => "bfs-frontier", // stays on the solo path
         };
-        reqs.push(JobRequest {
-            id: i,
-            graph: if i % 2 == 0 { "road" } else { "soc" }.into(),
-            algo,
-            source: (i % 7) as V,
-        });
+        reqs.push(
+            JobRequest::parse(
+                i,
+                if i % 2 == 0 { "road" } else { "soc" },
+                algo,
+                &ParseArgs { tau: 64, block: 64 },
+            )
+            .unwrap()
+            .with_source((i % 7) as V),
+        );
     }
     let batched = fused.run_batch(&reqs);
     assert_eq!(batched.len(), reqs.len());
@@ -243,12 +244,11 @@ fn serve_loop_fuses_and_answers_everything() {
     };
     for i in 0..30u64 {
         req_tx
-            .send(JobRequest {
-                id: i,
-                graph: "g".into(),
-                algo: AlgoKind::BfsVgc { tau: 64 },
-                source: (i % 11) as V,
-            })
+            .send(
+                JobRequest::parse(i, "g", "bfs-vgc", &ParseArgs { tau: 64, block: 64 })
+                    .unwrap()
+                    .with_source((i % 11) as V),
+            )
             .unwrap();
     }
     drop(req_tx);

@@ -1,0 +1,194 @@
+//! Cache semantics of the versioned whole-graph result cache
+//! (`coordinator::ResultCache`): duplicate CC/k-core requests hit
+//! (counter-asserted), republishing a graph via `load_graph`
+//! invalidates, source-parameterized BFS/SSSP never caches, and
+//! cached vs fresh outputs are bit-identical — solo, in-batch, and
+//! across the sharded server.
+
+use pasgal::algo::api::ParseArgs;
+use pasgal::coordinator::{
+    Coordinator, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
+};
+use pasgal::graph::{gen, Graph};
+use pasgal::V;
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn req(id: u64, graph: &str, algo: &str, source: V) -> JobRequest {
+    JobRequest::parse(id, graph, algo, &ParseArgs::default())
+        .unwrap()
+        .with_source(source)
+}
+
+/// Two directed triangles plus an isolated vertex: 3 connected
+/// components, largest of size 3; coreness 2 on the triangles.
+fn two_triangles() -> Graph {
+    Graph::from_edges(
+        7,
+        &[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)],
+        true,
+    )
+}
+
+#[test]
+fn duplicate_cc_and_kcore_requests_hit_the_cache() {
+    let c = Coordinator::new();
+    c.load_graph("tri", two_triangles());
+    let cc_first = c.execute(&req(0, "tri", "cc", 0)).unwrap();
+    let kc_first = c.execute(&req(1, "tri", "kcore", 0)).unwrap();
+    assert_eq!(c.metrics.counter("cache_misses"), 2);
+    assert_eq!(c.metrics.counter("cache_hits"), 0);
+    for i in 0..3u64 {
+        let cc_dup = c.execute(&req(10 + i, "tri", "cc", 0)).unwrap();
+        let kc_dup = c.execute(&req(20 + i, "tri", "kcore", 0)).unwrap();
+        assert_eq!(cc_dup.output, cc_first.output, "cc bit-identical");
+        assert_eq!(kc_dup.output, kc_first.output, "kcore bit-identical");
+        assert_eq!(cc_dup.exec, Duration::ZERO, "hit runs no engine");
+    }
+    assert_eq!(c.metrics.counter("cache_hits"), 6);
+    assert_eq!(c.metrics.counter("cache_misses"), 2);
+    assert_eq!(c.cached_results(), 2);
+    // Aliases address the same cache entry: "connectivity" is "cc".
+    c.execute(&req(30, "tri", "connectivity", 0)).unwrap();
+    assert_eq!(c.metrics.counter("cache_hits"), 7);
+    assert_eq!(c.cached_results(), 2, "no duplicate entry per alias");
+}
+
+#[test]
+fn republishing_via_load_graph_invalidates() {
+    let c = Coordinator::new();
+    c.load_graph("g", gen::grid(3, 3).symmetrize());
+    let small = c.execute(&req(0, "g", "cc", 0)).unwrap();
+    assert_eq!(
+        small.output,
+        JobOutput::Cc {
+            components: 1,
+            largest: 9
+        }
+    );
+    c.execute(&req(1, "g", "cc", 0)).unwrap();
+    assert_eq!(c.metrics.counter("cache_hits"), 1);
+    // Republish the name with a different graph: version moves, the
+    // stale entry must never answer again.
+    c.load_graph("g", gen::grid(4, 4).symmetrize());
+    let big = c.execute(&req(2, "g", "cc", 0)).unwrap();
+    assert_eq!(
+        big.output,
+        JobOutput::Cc {
+            components: 1,
+            largest: 16
+        },
+        "post-republish answer must reflect the new graph"
+    );
+    assert_eq!(c.metrics.counter("cache_misses"), 2, "republish forced a recompute");
+    // The recompute re-primed the cache for the new version.
+    let again = c.execute(&req(3, "g", "cc", 0)).unwrap();
+    assert_eq!(again.output, big.output);
+    assert_eq!(c.metrics.counter("cache_hits"), 2);
+    // Other graphs' entries are untouched by the republish.
+    c.load_graph("h", two_triangles());
+    c.execute(&req(4, "h", "kcore", 0)).unwrap();
+    c.load_graph("g", gen::grid(2, 2).symmetrize());
+    c.execute(&req(5, "h", "kcore", 0)).unwrap();
+    assert_eq!(
+        c.metrics.counter("cache_hits"),
+        3,
+        "republishing g must not invalidate h"
+    );
+}
+
+#[test]
+fn source_parameterized_traversals_never_cache() {
+    let c = Coordinator::new();
+    c.load_graph("road", gen::road(8, 8, 3));
+    for algo in ["bfs-vgc", "bfs-frontier", "bfs-diropt", "sssp-rho", "sssp-delta"] {
+        // Same source twice: even a textually identical traversal
+        // request recomputes (its output depends on `source`, which
+        // is not part of the cache key by design).
+        c.execute(&req(0, "road", algo, 2)).unwrap();
+        c.execute(&req(1, "road", algo, 2)).unwrap();
+    }
+    assert_eq!(c.metrics.counter("cache_hits"), 0);
+    assert_eq!(c.metrics.counter("cache_misses"), 0);
+    assert_eq!(c.cached_results(), 0);
+}
+
+#[test]
+fn duplicates_within_one_batch_hit_the_cache() {
+    let c = Coordinator::new();
+    c.load_graph("tri", two_triangles());
+    let reqs: Vec<JobRequest> = (0..5).map(|i| req(i, "tri", "cc", 0)).collect();
+    let out = c.run_batch(&reqs);
+    assert_eq!(out.len(), 5);
+    let first = out[0].as_ref().unwrap().output.clone();
+    for r in &out {
+        assert_eq!(r.as_ref().unwrap().output, first);
+    }
+    // The first request in the batch filled the entry; the other four
+    // were answered from it.
+    assert_eq!(c.metrics.counter("cache_misses"), 1);
+    assert_eq!(c.metrics.counter("cache_hits"), 4);
+}
+
+#[test]
+fn cached_and_fresh_outputs_are_bit_identical_across_shards() {
+    // Duplicate-heavy mix over two graphs through the sharded server:
+    // every response (cache hit or fresh compute, whichever shard
+    // served it) must equal a fresh reference execution, and the
+    // merged counters must show real cache traffic.
+    let coord = Arc::new(Coordinator::new());
+    let reference = Coordinator::new();
+    for c in [&*coord, &reference] {
+        c.load_graph("tri", two_triangles());
+        c.load_graph("road", gen::road(7, 7, 9));
+    }
+    let reqs: Vec<JobRequest> = (0..36u64)
+        .map(|i| {
+            let graph = if i % 2 == 0 { "tri" } else { "road" };
+            let algo = match i % 3 {
+                0 => "cc",
+                1 => "kcore",
+                _ => "scc-vgc",
+            };
+            req(i, graph, algo, 0)
+        })
+        .collect();
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    for r in &reqs {
+        req_tx.send(r.clone()).unwrap();
+    }
+    drop(req_tx);
+    let per_shard = ShardServer::new(
+        Arc::clone(&coord),
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::from_millis(2),
+            max_batch: 16,
+        },
+    )
+    .serve(req_rx, res_tx);
+    let results: HashMap<u64, JobResult> = res_rx.iter().map(|r| (r.id, r)).collect();
+    assert_eq!(results.len(), 36, "every request answered");
+    for r in &reqs {
+        let want = reference.execute(r).unwrap();
+        assert_eq!(
+            results[&r.id].output, want.output,
+            "request {} ({}) must be bit-identical cached or fresh",
+            r.id, r.algo.label
+        );
+    }
+    // 6 distinct (graph, algo) keys across 36 requests: at most one
+    // miss per key per owning shard, everything else hits.
+    let hits: u64 = per_shard.iter().map(|m| m.counter("cache_hits")).sum();
+    let misses: u64 = per_shard.iter().map(|m| m.counter("cache_misses")).sum();
+    assert_eq!(hits + misses, 36, "every whole-graph query consulted the cache");
+    assert_eq!(misses, 6, "one compute per (graph, algo) key");
+    assert_eq!(hits, 30, "the rest served for free");
+    // Counters merge into the global registry like the shard metrics.
+    assert_eq!(coord.metrics.counter("cache_hits"), hits);
+    assert_eq!(coord.metrics.counter("cache_misses"), misses);
+    assert!(coord.metrics.cache_hit_rate() > 0.8);
+}

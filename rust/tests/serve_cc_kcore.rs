@@ -8,7 +8,7 @@
 use pasgal::algo::api::{ParseArgs, Query};
 use pasgal::algo::{cc, kcore};
 use pasgal::coordinator::{
-    AlgoKind, Coordinator, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
+    Coordinator, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
 };
 use pasgal::graph::{gen, Graph};
 use pasgal::V;
@@ -39,13 +39,10 @@ fn clique_with_tail() -> Graph {
     Graph::from_edges(6, &edges, true).symmetrize()
 }
 
-fn req(id: u64, graph: &str, algo: AlgoKind, source: V) -> JobRequest {
-    JobRequest {
-        id,
-        graph: graph.into(),
-        algo,
-        source,
-    }
+fn req(id: u64, graph: &str, algo: &str, source: V) -> JobRequest {
+    JobRequest::parse(id, graph, algo, &ParseArgs::default())
+        .unwrap()
+        .with_source(source)
 }
 
 fn serve_all(
@@ -69,7 +66,7 @@ fn solo_execution_reports_correct_summaries() {
     c.load_graph("tri", two_triangles());
     c.load_graph("clique", clique_with_tail());
 
-    let r = c.execute(&req(0, "tri", AlgoKind::Cc, 0)).unwrap();
+    let r = c.execute(&req(0, "tri", "cc", 0)).unwrap();
     assert_eq!(r.algo, "cc");
     assert_eq!(
         r.output,
@@ -82,7 +79,7 @@ fn solo_execution_reports_correct_summaries() {
     let labels = cc::connected_components(&two_triangles());
     assert_eq!(cc::component_count(&labels), 3);
 
-    let r = c.execute(&req(1, "clique", AlgoKind::Kcore, 0)).unwrap();
+    let r = c.execute(&req(1, "clique", "kcore", 0)).unwrap();
     assert_eq!(r.algo, "kcore");
     assert_eq!(
         r.output,
@@ -141,9 +138,9 @@ fn single_threaded_serve_loop_answers_cc_and_kcore() {
     };
     for i in 0..6u64 {
         let r = if i % 2 == 0 {
-            req(i, "tri", AlgoKind::Cc, 0)
+            req(i, "tri", "cc", 0)
         } else {
-            req(i, "clique", AlgoKind::Kcore, 0)
+            req(i, "clique", "kcore", 0)
         };
         req_tx.send(r).unwrap();
     }
@@ -182,9 +179,9 @@ fn shard_server_answers_cc_and_kcore_with_correct_summaries() {
     // BFS so the window machinery is actually in play.
     let reqs: Vec<JobRequest> = (0..18u64)
         .map(|i| match i % 3 {
-            0 => req(i, "tri", AlgoKind::Cc, 0),
-            1 => req(i, "clique", AlgoKind::Kcore, 0),
-            _ => req(i, "road", AlgoKind::BfsVgc { tau: 64 }, (i % 5) as V),
+            0 => req(i, "tri", "cc", 0),
+            1 => req(i, "clique", "kcore", 0),
+            _ => req(i, "road", "bfs-vgc", (i % 5) as V),
         })
         .collect();
     let results = serve_all(
@@ -236,9 +233,9 @@ fn non_fusable_new_specs_fall_through_the_window_immediately() {
     let reqs: Vec<JobRequest> = (0..8u64)
         .map(|i| {
             if i % 2 == 0 {
-                req(i, "tri", AlgoKind::Cc, 0)
+                req(i, "tri", "cc", 0)
             } else {
-                req(i, "clique", AlgoKind::Kcore, 0)
+                req(i, "clique", "kcore", 0)
             }
         })
         .collect();

@@ -3,8 +3,9 @@
 //! aggregation, fusion-window batching equivalence, and shutdown
 //! draining.
 
+use pasgal::algo::api::ParseArgs;
 use pasgal::coordinator::{
-    AlgoKind, Coordinator, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
+    Coordinator, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
 };
 use pasgal::graph::gen;
 use std::collections::HashMap;
@@ -14,13 +15,11 @@ use std::time::{Duration, Instant};
 
 use pasgal::V;
 
-fn req(id: u64, graph: &str, algo: AlgoKind, source: V) -> JobRequest {
-    JobRequest {
-        id,
-        graph: graph.into(),
-        algo,
-        source,
-    }
+/// Registry-native request (label or alias, τ 64, block 64).
+fn req(id: u64, graph: &str, algo: &str, source: V) -> JobRequest {
+    JobRequest::parse(id, graph, algo, &ParseArgs { tau: 64, block: 64 })
+        .unwrap()
+        .with_source(source)
 }
 
 /// Run `reqs` through a `ShardServer` (all requests queued before the
@@ -52,7 +51,7 @@ fn same_graph_requests_land_on_one_shard() {
             req(
                 i,
                 ["g0", "g1", "g2", "g3"][(i % 4) as usize],
-                AlgoKind::BfsVgc { tau: 64 },
+                "bfs-vgc",
                 (i % 5) as V,
             )
         })
@@ -85,9 +84,9 @@ fn per_shard_metrics_sum_to_global_counters() {
     let reqs: Vec<JobRequest> = (0..24u64)
         .map(|i| {
             let algo = if i % 2 == 0 {
-                AlgoKind::BfsVgc { tau: 64 }
+                "bfs-vgc"
             } else {
-                AlgoKind::SsspRho { tau: 64 }
+                "sssp-rho"
             };
             req(
                 i,
@@ -151,9 +150,9 @@ fn windowed_fusion_is_bit_identical_to_solo_execution() {
     let reqs: Vec<JobRequest> = (0..48u64)
         .map(|i| {
             let algo = match i % 3 {
-                0 => AlgoKind::BfsVgc { tau: 64 },
-                1 => AlgoKind::SsspRho { tau: 64 },
-                _ => AlgoKind::BfsDirOpt,
+                0 => "bfs-vgc",
+                1 => "sssp-rho",
+                _ => "bfs-diropt",
             };
             req(
                 i,
@@ -195,7 +194,7 @@ fn non_fusable_requests_fall_through_the_window() {
     // An absurd window: if non-fusable heads waited it out, this test
     // would take minutes. They must dispatch immediately.
     let reqs: Vec<JobRequest> = (0..6u64)
-        .map(|i| req(i, "road", AlgoKind::Bcc, 0))
+        .map(|i| req(i, "road", "bcc-fast", 0))
         .collect();
     let t0 = Instant::now();
     let (per_shard, results) = serve_all(
@@ -224,7 +223,7 @@ fn shard_shutdown_answers_everything_queued() {
     let coord = Arc::new(Coordinator::new());
     coord.load_graph("road", gen::road(8, 8, 9));
     let reqs: Vec<JobRequest> = (0..9u64)
-        .map(|i| req(i, "road", AlgoKind::SsspRho { tau: 64 }, (i % 4) as V))
+        .map(|i| req(i, "road", "sssp-rho", (i % 4) as V))
         .collect();
     let t0 = Instant::now();
     let (_, results) = serve_all(
@@ -253,9 +252,9 @@ fn failed_requests_are_answered_with_their_ids() {
     let coord = Arc::new(Coordinator::new());
     coord.load_graph("road", gen::road(6, 6, 5));
     let reqs = vec![
-        req(0, "road", AlgoKind::BfsVgc { tau: 64 }, 1),
-        req(1, "ghost", AlgoKind::BfsVgc { tau: 64 }, 0),
-        req(2, "road", AlgoKind::BfsVgc { tau: 64 }, u32::MAX - 1),
+        req(0, "road", "bfs-vgc", 1),
+        req(1, "ghost", "bfs-vgc", 0),
+        req(2, "road", "bfs-vgc", u32::MAX - 1),
     ];
     let (per_shard, results) = serve_all(
         &coord,
@@ -311,14 +310,14 @@ fn graphs_published_mid_serve_become_visible() {
         })
     };
     req_tx
-        .send(req(0, "a", AlgoKind::BfsVgc { tau: 64 }, 0))
+        .send(req(0, "a", "bfs-vgc", 0))
         .unwrap();
     let first = res_rx.recv().unwrap();
     assert_eq!(first.id, 0);
     // Publish a new graph mid-serve, then query it.
     coord.load_graph("b", gen::road(7, 7, 2));
     req_tx
-        .send(req(1, "b", AlgoKind::BfsVgc { tau: 64 }, 0))
+        .send(req(1, "b", "bfs-vgc", 0))
         .unwrap();
     let second = res_rx.recv().unwrap();
     assert_eq!(second.id, 1);
