@@ -120,6 +120,8 @@ fn main() {
             shards: 1,
             fusion_window: Duration::ZERO,
             max_batch: 1, // one request per dispatch: the unbatched pipeline
+            inbox_cap: 0,  // unbounded: this ablation isolates fusion, not shedding
+            ..ShardConfig::default()
         },
     );
     let sharded = run_config(
@@ -129,6 +131,8 @@ fn main() {
             shards,
             fusion_window: Duration::from_micros(200),
             max_batch: 64,
+            inbox_cap: 0,
+            ..ShardConfig::default()
         },
     );
 

@@ -58,6 +58,7 @@ pub use registry::{all, find};
 
 use crate::algo::workspace::QueryWorkspace;
 use crate::coordinator::directory::LoadedGraph;
+use crate::coordinator::faults::FailKind;
 use crate::error::{Error, Result};
 use crate::runtime::EngineHandle;
 use crate::sim::AlgoTrace;
@@ -140,11 +141,15 @@ pub enum QueryOutput {
     Kcore { degeneracy: u32, in_max_core: usize },
     /// (block size, #finite pairwise distances).
     Dense { block: usize, finite_pairs: usize },
-    /// The request failed (unknown graph, out-of-range source, no
-    /// dense engine, ...): the serving loops answer *every* accepted
-    /// request, so failures come back on the result channel with the
-    /// request's id instead of vanishing into a log line.
-    Failed { error: String },
+    /// The request failed (unknown graph, out-of-range source,
+    /// expired deadline, shed under overload, caught engine panic,
+    /// ...): the serving loops answer *every* accepted request, so
+    /// failures come back on the result channel with the request's id
+    /// instead of vanishing into a log line. `kind` is the typed
+    /// failure taxonomy ([`FailKind`]) clients branch on — retry
+    /// later for `Overloaded`, don't bother for `InvalidGraph` — and
+    /// `error` the human-readable detail.
+    Failed { kind: FailKind, error: String },
 }
 
 /// A solo engine: answer one query against a loaded graph out of the

@@ -21,7 +21,10 @@
 //! construction: a shard refreshes once per dispatch, so every request
 //! in the batch resolves graphs against the same registry state.
 
+use super::faults;
+use super::lock_or_recover;
 use crate::algo::api::{Params, QueryOutput};
+use crate::error::Result;
 use crate::graph::Graph;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -107,7 +110,7 @@ impl GraphDirectory {
     /// serializes them), so result-cache entries for the replaced
     /// graph can never match again.
     pub fn publish(&self, name: &str, graph: Graph) {
-        let mut slot = self.published.lock().unwrap();
+        let mut slot = lock_or_recover(&self.published);
         let v = self.version.load(Ordering::Relaxed) + 1;
         let mut map: GraphMap = (**slot).clone();
         map.insert(name.to_string(), Arc::new(LoadedGraph::with_version(graph, v)));
@@ -116,6 +119,25 @@ impl GraphDirectory {
         // reader that sees the new version and then locks is
         // guaranteed the new map (the lock fully orders it).
         self.version.store(v, Ordering::Release);
+    }
+
+    /// [`publish`] with structural validation first: malformed CSR
+    /// bytes (non-monotone offsets, targets ≥ n, a terminal offset
+    /// disagreeing with the edge count, truncated weights) are
+    /// rejected with a typed
+    /// [`FailKind::InvalidGraph`](super::faults::FailKind::InvalidGraph)
+    /// error *before* they can reach an engine and defer the failure
+    /// to an index panic mid-walk. Nothing is published on rejection:
+    /// the directory (and any previously published graph under
+    /// `name`) is untouched.
+    ///
+    /// [`publish`]: GraphDirectory::publish
+    pub fn load_graph(&self, name: &str, graph: Graph) -> Result<()> {
+        if let Err(reason) = graph.validate() {
+            return Err(faults::invalid_graph_error(name, &reason));
+        }
+        self.publish(name, graph);
+        Ok(())
     }
 
     /// Current registry version (bumped by every [`publish`]).
@@ -128,7 +150,7 @@ impl GraphDirectory {
     /// The latest published snapshot (takes the writer Mutex — use a
     /// [`SnapshotCache`] on hot paths).
     pub fn snapshot(&self) -> Arc<GraphMap> {
-        self.published.lock().unwrap().clone()
+        lock_or_recover(&self.published).clone()
     }
 
     /// One-shot lookup (takes the writer Mutex — convenience for
@@ -214,43 +236,95 @@ impl SnapshotCache {
 /// [`LoadedGraph::version`] it was computed against, and a lookup
 /// only hits when that version equals the version of the graph the
 /// request resolved to — so invalidation falls out of
-/// [`GraphDirectory::publish`] bumping the version, with no eviction
-/// protocol. Like [`crate::algo::workspace::WorkspacePool`], this is
-/// deliberately not a concurrent structure: each shard worker owns
-/// one outright (zero locks on the hot path); the coordinator's
-/// shared instance sits behind a Mutex next to its workspace pool.
-#[derive(Default)]
+/// [`GraphDirectory::publish`] bumping the version. A version
+/// mismatch additionally drops the graph's entries **wholesale** (a
+/// republish stales all of them at once), and the cache is
+/// **memory-bounded**: at most `cap` entries total, evicting the
+/// least-recently-used entry past it, so a long-lived server over an
+/// unbounded stream of graph names and param settings can't grow the
+/// cache without limit. Like
+/// [`crate::algo::workspace::WorkspacePool`], this is deliberately
+/// not a concurrent structure: each shard worker owns one outright
+/// (zero locks on the hot path); the coordinator's shared instance
+/// sits behind a Mutex next to its workspace pool.
 pub struct ResultCache {
     entries: HashMap<String, GraphResults>,
+    /// Most entries kept across all graphs (≥ 1).
+    cap: usize,
+    /// Logical clock for LRU ordering: bumped per lookup-hit/insert.
+    tick: u64,
+    /// Total entries across `entries` (maintained incrementally).
+    len: usize,
 }
 
-/// One graph's cached outputs, keyed `(spec id, params)`; each slot
-/// records the publish version it was computed at.
-type GraphResults = HashMap<(u16, Params), (u64, Arc<QueryOutput>)>;
+/// One graph's cached outputs, keyed `(spec id, params)`.
+type GraphResults = HashMap<(u16, Params), CacheSlot>;
+
+/// A cached output: the publish version it was computed at and the
+/// LRU clock of its last use.
+struct CacheSlot {
+    version: u64,
+    used: u64,
+    output: Arc<QueryOutput>,
+}
+
+/// Default [`ResultCache`] capacity: far above any realistic
+/// #graphs × #cacheable-specs × #param-settings working set, small
+/// enough that each `Arc<QueryOutput>` summary stays negligible.
+pub const DEFAULT_RESULT_CACHE_CAP: usize = 512;
+
+impl Default for ResultCache {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_RESULT_CACHE_CAP)
+    }
+}
 
 impl ResultCache {
-    /// Empty cache.
+    /// Empty cache with the default capacity.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Empty cache holding at most `cap` entries (clamped to ≥ 1).
+    pub fn with_capacity(cap: usize) -> Self {
+        ResultCache {
+            entries: HashMap::new(),
+            cap: cap.max(1),
+            tick: 0,
+            len: 0,
+        }
+    }
+
     /// The cached output for `(graph, spec, params)` computed at
     /// exactly `version`, if any. A version mismatch (the graph was
-    /// republished since) is a miss; the stale entry stays until the
-    /// fresh recompute overwrites it.
+    /// republished since) is a miss that also drops *all* of the
+    /// graph's entries — every one of them went stale with the same
+    /// publish, so holding them until individually overwritten would
+    /// only squat capacity. A hit refreshes the entry's LRU clock.
     pub fn lookup(
-        &self,
+        &mut self,
         graph: &str,
         spec: u16,
         params: Params,
         version: u64,
     ) -> Option<Arc<QueryOutput>> {
-        let (v, out) = self.entries.get(graph)?.get(&(spec, params))?;
-        (*v == version).then(|| Arc::clone(out))
+        let slots = self.entries.get_mut(graph)?;
+        let slot = slots.get_mut(&(spec, params))?;
+        if slot.version != version {
+            self.len -= slots.len();
+            self.entries.remove(graph);
+            return None;
+        }
+        self.tick += 1;
+        slot.used = self.tick;
+        Some(Arc::clone(&slot.output))
     }
 
     /// Record `output` as the answer for `(graph, spec, params)` at
-    /// `version`, replacing any entry from an older publish.
+    /// `version`. Entries the graph accumulated at an older publish
+    /// are dropped wholesale first; past capacity, the globally
+    /// least-recently-used entry is evicted. Returns the number of
+    /// LRU evictions (callers meter them as `cache_evictions`).
     pub fn insert(
         &mut self,
         graph: &str,
@@ -258,23 +332,74 @@ impl ResultCache {
         params: Params,
         version: u64,
         output: Arc<QueryOutput>,
-    ) {
-        self.entries
+    ) -> usize {
+        if let Some(slots) = self.entries.get(graph) {
+            if slots.values().any(|s| s.version != version) {
+                self.len -= slots.len();
+                self.entries.remove(graph);
+            }
+        }
+        self.tick += 1;
+        let slot = CacheSlot {
+            version,
+            used: self.tick,
+            output,
+        };
+        let prev = self
+            .entries
             .entry(graph.to_string())
             .or_default()
-            .insert((spec, params), (version, output));
+            .insert((spec, params), slot);
+        if prev.is_none() {
+            self.len += 1;
+        }
+        let mut evicted = 0;
+        while self.len > self.cap {
+            self.evict_lru();
+            evicted += 1;
+        }
+        evicted
     }
 
-    /// Number of cached entries (stale ones included until
-    /// overwritten) — bounded by #graphs × #cacheable specs × #param
-    /// settings, not by query volume.
+    /// Remove the entry with the oldest LRU clock (linear scan: the
+    /// cache is small by construction and eviction is the exceptional
+    /// path, not the steady state).
+    fn evict_lru(&mut self) {
+        let mut victim: Option<(u64, String, (u16, Params))> = None;
+        for (g, slots) in &self.entries {
+            for (k, s) in slots {
+                if victim.as_ref().map_or(true, |(used, _, _)| s.used < *used) {
+                    victim = Some((s.used, g.clone(), *k));
+                }
+            }
+        }
+        if let Some((_, g, k)) = victim {
+            if let Some(slots) = self.entries.get_mut(&g) {
+                if slots.remove(&k).is_some() {
+                    self.len -= 1;
+                }
+                if slots.is_empty() {
+                    self.entries.remove(&g);
+                }
+            }
+        }
+    }
+
+    /// Number of cached entries — bounded by the capacity, and within
+    /// it by #graphs × #cacheable specs × #param settings, never by
+    /// query volume.
     pub fn len(&self) -> usize {
-        self.entries.values().map(|m| m.len()).sum()
+        self.len
+    }
+
+    /// The configured entry capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
     }
 
     /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.len == 0
     }
 }
 
@@ -356,9 +481,11 @@ mod tests {
         cache.insert("g", 9, p, 1, Arc::clone(&out));
         assert_eq!(cache.len(), 1);
         assert_eq!(*cache.lookup("g", 9, p, 1).unwrap(), *out);
-        // Version moved (republish): stale entry is a miss...
+        // Version moved (republish): stale entry is a miss — and the
+        // graph's stale entries are dropped wholesale...
         assert!(cache.lookup("g", 9, p, 2).is_none());
-        // ...until the fresh recompute overwrites it in place.
+        assert_eq!(cache.len(), 0, "republish drops the graph's entries");
+        // ...until the fresh recompute re-primes the key.
         let out2 = Arc::new(QueryOutput::Cc {
             components: 1,
             largest: 9,
@@ -370,6 +497,81 @@ mod tests {
         assert!(cache.lookup("g", 10, p, 2).is_none());
         assert!(cache.lookup("g", 9, Params::tau(8), 2).is_none());
         assert!(cache.lookup("h", 9, p, 2).is_none());
+    }
+
+    #[test]
+    fn result_cache_evicts_lru_past_capacity() {
+        let mut cache = ResultCache::with_capacity(3);
+        assert_eq!(cache.capacity(), 3);
+        let out = Arc::new(QueryOutput::Cc {
+            components: 1,
+            largest: 1,
+        });
+        for (i, g) in ["a", "b", "c"].iter().enumerate() {
+            assert_eq!(cache.insert(g, i as u16, Params::NONE, 1, Arc::clone(&out)), 0);
+        }
+        assert_eq!(cache.len(), 3);
+        // Touch "a": it becomes the most recently used.
+        assert!(cache.lookup("a", 0, Params::NONE, 1).is_some());
+        // A fourth entry evicts the LRU one — "b", not "a".
+        assert_eq!(cache.insert("d", 3, Params::NONE, 1, Arc::clone(&out)), 1);
+        assert_eq!(cache.len(), 3);
+        assert!(cache.lookup("a", 0, Params::NONE, 1).is_some());
+        assert!(cache.lookup("b", 1, Params::NONE, 1).is_none(), "b evicted");
+        assert!(cache.lookup("c", 2, Params::NONE, 1).is_some());
+        assert!(cache.lookup("d", 3, Params::NONE, 1).is_some());
+        // Re-inserting an existing key replaces, never evicts.
+        assert_eq!(cache.insert("d", 3, Params::NONE, 1, Arc::clone(&out)), 0);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn republish_drops_a_graphs_entries_wholesale() {
+        let mut cache = ResultCache::with_capacity(8);
+        let out = Arc::new(QueryOutput::Cc {
+            components: 1,
+            largest: 1,
+        });
+        for spec in 0..3u16 {
+            cache.insert("g", spec, Params::NONE, 1, Arc::clone(&out));
+        }
+        cache.insert("h", 0, Params::NONE, 2, Arc::clone(&out));
+        assert_eq!(cache.len(), 4);
+        // Inserting g at a newer version first drops all three stale
+        // g entries; h is untouched.
+        cache.insert("g", 0, Params::NONE, 5, Arc::clone(&out));
+        assert_eq!(cache.len(), 2, "3 stale g entries dropped, g+h remain");
+        assert!(cache.lookup("h", 0, Params::NONE, 2).is_some());
+        assert!(cache.lookup("g", 0, Params::NONE, 5).is_some());
+        assert!(cache.lookup("g", 1, Params::NONE, 5).is_none());
+    }
+
+    #[test]
+    fn load_graph_rejects_malformed_csr_and_publishes_nothing() {
+        use crate::coordinator::faults::{malformed, FailKind};
+        let dir = GraphDirectory::new();
+        for g in [
+            malformed::non_monotone_offsets(),
+            malformed::target_out_of_range(),
+            malformed::offset_overflow(),
+            malformed::weights_length_mismatch(),
+        ] {
+            let err = dir.load_graph("bad", g).unwrap_err();
+            assert_eq!(
+                FailKind::classify(&err.to_string()),
+                FailKind::InvalidGraph,
+                "typed rejection: {err}"
+            );
+        }
+        assert!(dir.lookup("bad").is_none(), "nothing published");
+        assert_eq!(dir.version(), 0, "no version burned on rejection");
+        // A previously published healthy graph survives a bad
+        // republish attempt under the same name.
+        dir.load_graph("g", gen::grid(3, 3)).unwrap();
+        let v = dir.version();
+        assert!(dir.load_graph("g", malformed::offset_overflow()).is_err());
+        assert_eq!(dir.version(), v);
+        assert_eq!(dir.lookup("g").unwrap().graph.n(), 9);
     }
 
     #[test]

@@ -1,0 +1,502 @@
+//! Fault taxonomy, panic circuit breaker, and the zero-dep
+//! fault-injection harness behind the serving stack's robustness
+//! layer.
+//!
+//! Three concerns live here because they share one vocabulary:
+//!
+//! * **[`FailKind`]** — the typed failure taxonomy every answered
+//!   failure carries ([`QueryOutput::Failed`] has a `kind` field).
+//!   The in-tree error type is string-backed (see [`crate::error`]),
+//!   so the kind travels as a stable message prefix (the `MSG_*`
+//!   constants) and [`FailKind::classify`] recovers it at the answer
+//!   boundary. The robustness-layer errors are constructed here and
+//!   never context-wrapped, so prefix classification is exact.
+//! * **[`PanicBreaker`]** — the per-`(graph, spec)` circuit breaker:
+//!   after [`BREAKER_TRIP`] *consecutive* engine panics on one key,
+//!   identical requests fail fast (no engine run, no workspace churn)
+//!   until the graph is republished — the entry records the publish
+//!   version it tripped at, so a republish resets it with no explicit
+//!   protocol, exactly like the result cache's invalidation.
+//! * **[`FaultPlan`]** — injectable failure points (panic on the
+//!   N-th execution, slow-engine delay) that the execution core fires
+//!   *inside* its `catch_unwind` guard, so chaos tests exercise the
+//!   real isolation path, plus [`malformed`] CSR constructors for
+//!   input-validation tests. Zero dependencies, zero overhead when no
+//!   plan is installed (an `Option` that is `None` in production).
+//!
+//! [`QueryOutput::Failed`]: crate::algo::api::QueryOutput::Failed
+
+use crate::error::Error;
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Once;
+use std::time::Duration;
+
+/// Consecutive engine panics on one `(graph, spec)` key before the
+/// circuit breaker opens (see [`PanicBreaker`]).
+pub const BREAKER_TRIP: u32 = 3;
+
+/// Stable message prefixes — the wire encoding of [`FailKind`] over
+/// the string-backed error type. `classify` matches on these, so the
+/// constructors below are the only places allowed to mint them.
+pub const MSG_DEADLINE: &str = "deadline exceeded";
+pub const MSG_OVERLOAD: &str = "shard overloaded";
+pub const MSG_PANIC: &str = "engine panic";
+pub const MSG_BREAKER: &str = "engine panic breaker open";
+pub const MSG_INVALID: &str = "invalid graph";
+
+/// Typed failure taxonomy for answered requests (see module docs and
+/// the crate-level "Failure semantics" section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailKind {
+    /// The request's deadline budget expired before (or while) it
+    /// could execute; answered without running an engine.
+    DeadlineExceeded,
+    /// The target shard's inbox was at capacity: shed at the router
+    /// instead of queueing unboundedly.
+    Overloaded,
+    /// The engine panicked (caught, worker alive) — or its breaker
+    /// was already open and the request failed fast.
+    EnginePanic,
+    /// The graph bytes failed structural validation at publish time.
+    InvalidGraph,
+    /// Everything else (unknown graph, out-of-range source, ...).
+    Other,
+}
+
+impl FailKind {
+    /// Recover the kind from an error message (see `MSG_*`).
+    /// `MSG_BREAKER` starts with `MSG_PANIC` by construction, so
+    /// breaker fast-fails classify as `EnginePanic` — to a client
+    /// they are the same condition, reported sooner.
+    pub fn classify(msg: &str) -> FailKind {
+        if msg.starts_with(MSG_DEADLINE) {
+            FailKind::DeadlineExceeded
+        } else if msg.starts_with(MSG_OVERLOAD) {
+            FailKind::Overloaded
+        } else if msg.starts_with(MSG_PANIC) {
+            FailKind::EnginePanic
+        } else if msg.starts_with(MSG_INVALID) {
+            FailKind::InvalidGraph
+        } else {
+            FailKind::Other
+        }
+    }
+}
+
+/// The error an expired request is answered with (never executed).
+pub fn deadline_error(graph: &str, algo: &str) -> Error {
+    Error::msg(format!("{MSG_DEADLINE}: {algo} on {graph:?}"))
+}
+
+/// The error a shed request is answered with at the router.
+pub fn overload_error(shard: usize, cap: usize) -> Error {
+    Error::msg(format!("{MSG_OVERLOAD}: shard {shard} inbox at capacity {cap}"))
+}
+
+/// The error a caught engine panic is answered with.
+pub fn panic_error(graph: &str, algo: &str, payload: &(dyn Any + Send)) -> Error {
+    Error::msg(format!(
+        "{MSG_PANIC}: {algo} on {graph:?}: {}",
+        panic_message(payload)
+    ))
+}
+
+/// The fast-fail error while a `(graph, spec)` breaker is open.
+pub fn breaker_error(graph: &str, algo: &str) -> Error {
+    Error::msg(format!(
+        "{MSG_BREAKER}: {algo} on {graph:?} after {BREAKER_TRIP} consecutive panics; republish the graph to reset"
+    ))
+}
+
+/// The typed rejection for graph bytes that fail CSR validation.
+pub fn invalid_graph_error(name: &str, reason: &str) -> Error {
+    Error::msg(format!("{MSG_INVALID} {name:?}: {reason}"))
+}
+
+/// Best-effort extraction of a panic payload's message (`&str` and
+/// `String` payloads — what `panic!` produces — else a placeholder).
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Marker carried by every injected panic payload — lets the panic
+/// hook installed by [`silence_injected_panics`] suppress the noise
+/// of *expected* panics without hiding genuine ones.
+pub const INJECTED_MARKER: &str = "injected engine fault";
+
+/// Install (once) a panic hook that swallows the default "thread
+/// panicked" report for injected faults and forwards everything else
+/// to the previous hook. Chaos tests call this so hundreds of caught,
+/// intentional panics don't bury real failures in stderr.
+pub fn silence_injected_panics() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains(INJECTED_MARKER))
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// What an armed [`FaultPoint`] does when it matches.
+#[derive(Debug, Clone)]
+pub enum FaultKind {
+    /// Panic on matching hits `from .. from + count` (0-based per
+    /// point), mimicking a buggy engine that dies on specific inputs.
+    Panic { from: u64, count: u64 },
+    /// Sleep before executing, mimicking a pathologically slow engine
+    /// (drives the overload/deadline paths without burning CPU).
+    Delay(Duration),
+}
+
+/// One injectable failure point: fires on executions whose graph and
+/// algorithm label match (`None` matches anything).
+pub struct FaultPoint {
+    graph: Option<String>,
+    algo: Option<String>,
+    kind: FaultKind,
+    hits: AtomicU64,
+}
+
+impl FaultPoint {
+    fn matches(&self, graph: &str, algo: &str) -> bool {
+        self.graph.as_deref().map_or(true, |g| g == graph)
+            && self.algo.as_deref().map_or(true, |a| a == algo)
+    }
+}
+
+/// A set of injectable failure points, installed on a coordinator
+/// with [`Coordinator::set_faults`] and consulted by the execution
+/// core *inside* its panic guard. Immutable once installed (interior
+/// hit counters only), so it shares across shard workers as a plain
+/// `Arc` with no locking.
+///
+/// [`Coordinator::set_faults`]: super::Coordinator::set_faults
+#[derive(Default)]
+pub struct FaultPlan {
+    points: Vec<FaultPoint>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Arm a panic on matching executions `from .. from + count`
+    /// (builder style). `None` for graph/algo matches anything.
+    pub fn panic_on(
+        mut self,
+        graph: Option<&str>,
+        algo: Option<&str>,
+        from: u64,
+        count: u64,
+    ) -> Self {
+        self.points.push(FaultPoint {
+            graph: graph.map(str::to_string),
+            algo: algo.map(str::to_string),
+            kind: FaultKind::Panic { from, count },
+            hits: AtomicU64::new(0),
+        });
+        self
+    }
+
+    /// Arm a pre-execution delay on every matching execution.
+    pub fn delay(mut self, graph: Option<&str>, algo: Option<&str>, by: Duration) -> Self {
+        self.points.push(FaultPoint {
+            graph: graph.map(str::to_string),
+            algo: algo.map(str::to_string),
+            kind: FaultKind::Delay(by),
+            hits: AtomicU64::new(0),
+        });
+        self
+    }
+
+    /// Hits recorded by point `idx` (tests verifying a fault fired).
+    pub fn hits(&self, idx: usize) -> u64 {
+        self.points[idx].hits.load(Ordering::Relaxed)
+    }
+
+    /// The hook the execution core fires inside `catch_unwind`, right
+    /// before running an engine: matching points count a hit, sleep,
+    /// or panic per their [`FaultKind`]. No-op for non-matching
+    /// executions; breaker fast-fails never reach here (the engine is
+    /// not executed), so open breakers don't consume panic budgets.
+    pub fn before_execute(&self, graph: &str, algo: &str) {
+        for p in &self.points {
+            if !p.matches(graph, algo) {
+                continue;
+            }
+            let hit = p.hits.fetch_add(1, Ordering::Relaxed);
+            match p.kind {
+                FaultKind::Panic { from, count } => {
+                    if hit >= from && hit - from < count {
+                        panic!("{INJECTED_MARKER}: {algo} on {graph:?} (hit {hit})");
+                    }
+                }
+                FaultKind::Delay(by) => std::thread::sleep(by),
+            }
+        }
+    }
+}
+
+/// Per-`(graph, spec)` panic circuit breaker (see module docs): an
+/// entry counts *consecutive* caught panics at one publish version;
+/// at [`BREAKER_TRIP`] the breaker is open and identical requests
+/// fail fast with [`breaker_error`]. A success closes the entry; a
+/// republish (version mismatch) resets it on the next check. Owned
+/// per shard worker (graph→shard affinity means one worker sees all
+/// relevant traffic) or Mutex-shared on the coordinator's ad-hoc
+/// paths.
+#[derive(Default)]
+pub struct PanicBreaker {
+    threshold: u32,
+    entries: HashMap<String, HashMap<u16, BreakerEntry>>,
+}
+
+struct BreakerEntry {
+    version: u64,
+    consecutive: u32,
+}
+
+impl PanicBreaker {
+    pub fn new() -> Self {
+        Self::with_threshold(BREAKER_TRIP)
+    }
+
+    /// A breaker tripping after `threshold` consecutive panics
+    /// (clamped to ≥ 1; tests use small thresholds).
+    pub fn with_threshold(threshold: u32) -> Self {
+        PanicBreaker {
+            threshold: threshold.max(1),
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Is the breaker open for `(graph, spec)` at `version`? A stale
+    /// entry (the graph was republished since it tripped) is removed
+    /// and reported closed — republishing is the reset protocol.
+    pub fn is_open(&mut self, graph: &str, spec: u16, version: u64) -> bool {
+        let Some(specs) = self.entries.get_mut(graph) else {
+            return false;
+        };
+        let Some(e) = specs.get(&spec) else {
+            return false;
+        };
+        if e.version != version {
+            specs.remove(&spec);
+            if specs.is_empty() {
+                self.entries.remove(graph);
+            }
+            return false;
+        }
+        e.consecutive >= self.threshold
+    }
+
+    /// Record a caught engine panic; returns true iff this panic is
+    /// the one that tripped the breaker open (callers count trips).
+    pub fn record_panic(&mut self, graph: &str, spec: u16, version: u64) -> bool {
+        let e = self
+            .entries
+            .entry(graph.to_string())
+            .or_default()
+            .entry(spec)
+            .or_insert(BreakerEntry {
+                version,
+                consecutive: 0,
+            });
+        if e.version != version {
+            e.version = version;
+            e.consecutive = 0;
+        }
+        e.consecutive += 1;
+        e.consecutive == self.threshold
+    }
+
+    /// Record a successful execution: closes the key's entry (the
+    /// consecutive-panic streak is broken). Cheap no-op while no
+    /// entries exist — the healthy steady state.
+    pub fn record_ok(&mut self, graph: &str, spec: u16) {
+        if self.entries.is_empty() {
+            return;
+        }
+        if let Some(specs) = self.entries.get_mut(graph) {
+            specs.remove(&spec);
+            if specs.is_empty() {
+                self.entries.remove(graph);
+            }
+        }
+    }
+
+    /// Number of currently-open breakers (tests/metrics).
+    pub fn open_count(&self) -> usize {
+        self.entries
+            .values()
+            .flat_map(|m| m.values())
+            .filter(|e| e.consecutive >= self.threshold)
+            .count()
+    }
+}
+
+/// Malformed CSR constructors for input-validation tests: each breaks
+/// exactly one [`Graph::validate`](crate::graph::Graph::validate)
+/// invariant, so `load_graph` must reject it with a typed
+/// [`FailKind::InvalidGraph`] error instead of deferring to an index
+/// panic deep in an engine.
+pub mod malformed {
+    use crate::graph::Graph;
+
+    /// Offsets go backwards (3 then 1): degree computation underflows.
+    pub fn non_monotone_offsets() -> Graph {
+        Graph::from_raw_parts(vec![0, 3, 1, 4], vec![0, 1, 2, 0], None, false)
+    }
+
+    /// An edge target ≥ n: any frontier walk would index out of
+    /// bounds.
+    pub fn target_out_of_range() -> Graph {
+        Graph::from_raw_parts(vec![0, 1, 2], vec![0, 7], None, false)
+    }
+
+    /// The terminal offset claims more edges than the target array
+    /// holds: the last vertex's neighbor slice would read past the
+    /// end.
+    pub fn offset_overflow() -> Graph {
+        Graph::from_raw_parts(vec![0, 1, 5], vec![0, 1], None, false)
+    }
+
+    /// Weights array shorter than the edge count.
+    pub fn weights_length_mismatch() -> Graph {
+        Graph::from_raw_parts(vec![0, 1, 2], vec![1, 0], Some(vec![1.0]), false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_recovers_every_kind() {
+        assert_eq!(
+            FailKind::classify(&deadline_error("g", "cc").to_string()),
+            FailKind::DeadlineExceeded
+        );
+        assert_eq!(
+            FailKind::classify(&overload_error(2, 64).to_string()),
+            FailKind::Overloaded
+        );
+        assert_eq!(
+            FailKind::classify(&breaker_error("g", "cc").to_string()),
+            FailKind::EnginePanic,
+            "breaker fast-fails are the panic condition, reported sooner"
+        );
+        assert_eq!(
+            FailKind::classify(&invalid_graph_error("g", "offsets not monotone").to_string()),
+            FailKind::InvalidGraph
+        );
+        assert_eq!(FailKind::classify("unknown graph \"x\""), FailKind::Other);
+        let payload: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(
+            FailKind::classify(&panic_error("g", "cc", &*payload).to_string()),
+            FailKind::EnginePanic
+        );
+    }
+
+    #[test]
+    fn panic_payload_messages_extracted() {
+        let s: Box<dyn std::any::Any + Send> = Box::new("static str");
+        assert_eq!(panic_message(&*s), "static str");
+        let owned: Box<dyn std::any::Any + Send> = Box::new("owned".to_string());
+        assert_eq!(panic_message(&*owned), "owned");
+        let other: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(&*other), "opaque panic payload");
+    }
+
+    #[test]
+    fn fault_plan_panics_on_exactly_the_armed_window() {
+        silence_injected_panics();
+        let plan = FaultPlan::new().panic_on(Some("bad"), None, 1, 2);
+        // Hit 0: armed from hit 1 — no panic.
+        plan.before_execute("bad", "cc");
+        // Hits 1 and 2 panic; hit 3 is past the window.
+        for expect_panic in [true, true, false] {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                plan.before_execute("bad", "cc")
+            }));
+            assert_eq!(r.is_err(), expect_panic);
+        }
+        assert_eq!(plan.hits(0), 4);
+        // Non-matching graph never fires.
+        plan.before_execute("good", "cc");
+        assert_eq!(plan.hits(0), 4);
+    }
+
+    #[test]
+    fn fault_plan_delay_sleeps_matching_executions() {
+        let plan = FaultPlan::new().delay(Some("slow"), None, Duration::from_millis(5));
+        let t0 = std::time::Instant::now();
+        plan.before_execute("slow", "bfs-vgc");
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        let t1 = std::time::Instant::now();
+        plan.before_execute("fast", "bfs-vgc");
+        assert!(t1.elapsed() < Duration::from_millis(5));
+        assert_eq!(plan.hits(0), 1);
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_panics_only() {
+        let mut b = PanicBreaker::with_threshold(3);
+        assert!(!b.is_open("g", 9, 1));
+        assert!(!b.record_panic("g", 9, 1));
+        assert!(!b.record_panic("g", 9, 1));
+        // A success breaks the streak.
+        b.record_ok("g", 9);
+        assert!(!b.record_panic("g", 9, 1));
+        assert!(!b.record_panic("g", 9, 1));
+        assert!(!b.is_open("g", 9, 1));
+        assert!(b.record_panic("g", 9, 1), "third consecutive trips");
+        assert!(b.is_open("g", 9, 1));
+        assert_eq!(b.open_count(), 1);
+        // Other keys unaffected.
+        assert!(!b.is_open("g", 10, 1));
+        assert!(!b.is_open("h", 9, 1));
+    }
+
+    #[test]
+    fn republish_resets_an_open_breaker() {
+        let mut b = PanicBreaker::with_threshold(2);
+        b.record_panic("g", 9, 1);
+        b.record_panic("g", 9, 1);
+        assert!(b.is_open("g", 9, 1));
+        // The graph was republished at version 2: closed again.
+        assert!(!b.is_open("g", 9, 2));
+        assert_eq!(b.open_count(), 0, "stale entry removed");
+        // And the streak restarts from zero at the new version.
+        assert!(!b.record_panic("g", 9, 2));
+    }
+
+    #[test]
+    fn malformed_graphs_fail_validation_for_distinct_reasons() {
+        for (g, reason) in [
+            (malformed::non_monotone_offsets(), "offsets not monotone"),
+            (malformed::target_out_of_range(), "target out of range"),
+            (malformed::offset_overflow(), "offsets[n] != m"),
+            (malformed::weights_length_mismatch(), "weights length mismatch"),
+        ] {
+            assert_eq!(g.validate().unwrap_err(), reason);
+        }
+    }
+}

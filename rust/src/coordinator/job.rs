@@ -13,7 +13,7 @@
 
 use crate::algo::api::{AlgoSpec, Params, ParseArgs, Query};
 use crate::V;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 pub use crate::algo::api::QueryOutput as JobOutput;
 
@@ -33,6 +33,13 @@ pub struct JobRequest {
     /// Source vertex for traversal queries (ignored when
     /// `algo.needs_source` is false).
     pub source: V,
+    /// Optional deadline: past this instant the request is answered
+    /// [`Failed`](crate::coordinator::faults::FailKind::DeadlineExceeded)
+    /// without executing — checked at the router, at window admission
+    /// (an expired head never opens a fusion window) and again at
+    /// execution (mid-window expiry). `None` (the default) never
+    /// expires.
+    pub deadline: Option<Instant>,
 }
 
 impl JobRequest {
@@ -55,6 +62,7 @@ impl JobRequest {
             algo: q.algo,
             params: q.params,
             source: q.source,
+            deadline: None,
         })
     }
 
@@ -62,6 +70,24 @@ impl JobRequest {
     pub fn with_source(mut self, source: V) -> JobRequest {
         self.source = source;
         self
+    }
+
+    /// Set an absolute deadline (builder style).
+    pub fn with_deadline(mut self, deadline: Instant) -> JobRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set the deadline as a budget from now (builder style) — what
+    /// `--deadline-ms` applies per request.
+    pub fn with_budget(self, budget: Duration) -> JobRequest {
+        self.with_deadline(Instant::now() + budget)
+    }
+
+    /// Has this request's deadline passed? Requests without one never
+    /// expire.
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 
     /// Encode a [`Query`] for the channel protocol. Lossless and
@@ -73,6 +99,7 @@ impl JobRequest {
             algo: q.algo,
             params: q.params,
             source: q.source,
+            deadline: None,
         }
     }
 
@@ -190,6 +217,18 @@ mod tests {
         {
             assert!(!spec.fusable(), "{} must stay solo", spec.label);
         }
+    }
+
+    #[test]
+    fn deadlines_expire_and_default_to_never() {
+        let r = req(0, "g", "bfs");
+        assert!(r.deadline.is_none());
+        assert!(!r.expired(), "no deadline never expires");
+        let r = req(1, "g", "bfs").with_budget(Duration::from_secs(3600));
+        assert!(!r.expired(), "generous budget still live");
+        let r = req(2, "g", "bfs").with_deadline(std::time::Instant::now());
+        assert!(r.expired(), "past deadline expires");
+        assert!(req(3, "g", "bfs").with_budget(Duration::ZERO).expired());
     }
 
     #[test]

@@ -3,6 +3,8 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+use super::lock_or_recover;
 use std::time::Duration;
 
 /// Percentile summary of a sample set.
@@ -33,13 +35,13 @@ impl Metrics {
     /// uncontended lock and an atomic add — this runs several times
     /// per request on the serving hot path.
     pub fn bump(&self, name: &str, by: u64) {
-        let map = self.counters.lock().unwrap();
+        let map = lock_or_recover(&self.counters);
         if let Some(c) = map.get(name) {
             c.fetch_add(by, Ordering::Relaxed);
             return;
         }
         drop(map);
-        let mut map = self.counters.lock().unwrap();
+        let mut map = lock_or_recover(&self.counters);
         map.entry(name.to_string())
             .or_insert_with(|| AtomicU64::new(0))
             .fetch_add(by, Ordering::Relaxed);
@@ -47,9 +49,7 @@ impl Metrics {
 
     /// Current counter value.
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.counters)
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
             .unwrap_or(0)
@@ -57,9 +57,7 @@ impl Metrics {
 
     /// Record a latency observation.
     pub fn observe(&self, name: &str, d: Duration) {
-        self.series
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.series)
             .entry(name.to_string())
             .or_default()
             .push(d.as_secs_f64() * 1e3);
@@ -67,7 +65,7 @@ impl Metrics {
 
     /// Summarize a latency series (None if empty/unknown).
     pub fn summary(&self, name: &str) -> Option<Summary> {
-        let map = self.series.lock().unwrap();
+        let map = lock_or_recover(&self.series);
         let xs = map.get(name)?;
         if xs.is_empty() {
             return None;
@@ -90,7 +88,7 @@ impl Metrics {
 
     /// All series names (sorted).
     pub fn series_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.series.lock().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = lock_or_recover(&self.series).keys().cloned().collect();
         names.sort();
         names
     }
@@ -98,7 +96,7 @@ impl Metrics {
     /// All counter names (sorted) — e.g. to report the
     /// `queries_fused` / `queries_solo` split after a serving run.
     pub fn counter_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.counters.lock().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = lock_or_recover(&self.counters).keys().cloned().collect();
         names.sort();
         names
     }
@@ -114,7 +112,7 @@ impl Metrics {
     /// don't).
     pub fn merge(&self, other: &Metrics) {
         let counters: Vec<(String, u64)> = {
-            let theirs = other.counters.lock().unwrap();
+            let theirs = lock_or_recover(&other.counters);
             theirs
                 .iter()
                 .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
@@ -126,10 +124,10 @@ impl Metrics {
             }
         }
         let series: Vec<(String, Vec<f64>)> = {
-            let theirs = other.series.lock().unwrap();
+            let theirs = lock_or_recover(&other.series);
             theirs.iter().map(|(k, xs)| (k.clone(), xs.clone())).collect()
         };
-        let mut mine = self.series.lock().unwrap();
+        let mut mine = lock_or_recover(&self.series);
         for (name, xs) in series {
             mine.entry(name).or_default().extend(xs);
         }

@@ -32,11 +32,23 @@
 //!   fusion-window admission queue that accumulates fusable
 //!   same-(graph, algo, τ) requests before dispatching a batch.
 //!
+//! The serve path is **fault-tolerant** ([`faults`], and the
+//! crate-level "Failure semantics" section): requests carry optional
+//! deadline budgets and expire with a typed failure instead of
+//! executing; the shard router sheds load past a bounded inbox depth;
+//! engine panics are caught (`catch_unwind`), answered as typed
+//! failures, and counted by a per-`(graph, spec)` circuit breaker
+//! that fails identical requests fast until the graph is republished;
+//! and every coordinator-path Mutex recovers from poisoning
+//! ([`lock_or_recover`]) so one panicked holder can't wedge the pool,
+//! cache or directory.
+//!
 //! Python never appears here: the dense path executes the AOT
 //! artifact inventory through the in-tree engine.
 
 pub mod dense;
 pub mod directory;
+pub mod faults;
 pub mod job;
 pub mod metrics;
 pub mod server;
@@ -45,7 +57,41 @@ pub mod shard;
 pub use crate::algo::api::{AlgoSpec, Params, ParseArgs, Query, QueryOutput};
 pub use dense::DenseBlock;
 pub use directory::{GraphDirectory, GraphMap, LoadedGraph, ResultCache, SnapshotCache};
+pub use faults::{FailKind, FaultPlan, PanicBreaker};
 pub use job::{JobOutput, JobRequest, JobResult};
 pub use metrics::{Metrics, Summary};
 pub use server::{workload, Coordinator};
 pub use shard::{ShardConfig, ShardServer};
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a Mutex, recovering the guard if a previous holder panicked.
+///
+/// Every coordinator-path Mutex (workspace pool, shared result cache,
+/// directory writer, metrics registries, breaker) guards state that
+/// stays structurally valid across a panic: pools and caches are
+/// checked-in-or-absent, the directory swaps complete `Arc`s, metrics
+/// are append-only. Poisoning would turn one panicked holder into a
+/// permanent denial of service for every later request — recovery is
+/// strictly better than cascading the panic.
+pub(crate) fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_or_recover_survives_a_poisoned_mutex() {
+        let m = Mutex::new(5);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("poison the lock");
+        }));
+        assert!(m.is_poisoned());
+        *lock_or_recover(&m) += 1;
+        assert_eq!(*lock_or_recover(&m), 6, "state intact after recovery");
+    }
+}
+

@@ -48,9 +48,11 @@
 //! [`BatchEngine`]: crate::algo::api::BatchEngine
 
 use super::directory::{GraphDirectory, LoadedGraph, ResultCache};
+use super::faults::{self, FailKind, FaultPlan, PanicBreaker};
 use super::job::{JobOutput, JobRequest, JobResult};
+use super::lock_or_recover;
 use super::metrics::Metrics;
-use super::shard::admit_batch;
+use super::shard::{admit_batch, Inbox};
 use crate::algo::api::{AlgoSpec, EngineCtx, Params, Query};
 use crate::algo::workspace::{QueryWorkspace, WorkspacePool};
 use crate::bail;
@@ -58,6 +60,7 @@ use crate::error::{Context, Error, Result};
 use crate::runtime::EngineHandle;
 use crate::V;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -83,6 +86,12 @@ pub struct Coordinator {
     ///
     /// [`cacheable`]: crate::algo::api::AlgoSpec::cacheable
     results: Mutex<ResultCache>,
+    /// Panic circuit breaker for the ad-hoc execution paths (shard
+    /// workers own breakers of their own, like pools and caches).
+    breaker: Mutex<PanicBreaker>,
+    /// Installed fault-injection plan ([`super::faults`]); `None` —
+    /// the production state — costs one `Option` check per execution.
+    faults: Mutex<Option<Arc<FaultPlan>>>,
     pub metrics: Metrics,
 }
 
@@ -100,6 +109,8 @@ impl Coordinator {
             engine: None,
             workspaces: Mutex::new(WorkspacePool::new()),
             results: Mutex::new(ResultCache::new()),
+            breaker: Mutex::new(PanicBreaker::new()),
+            faults: Mutex::new(None),
             metrics: Metrics::new(),
         }
     }
@@ -107,12 +118,28 @@ impl Coordinator {
     /// Coordinator with the dense engine attached.
     pub fn with_engine(engine: EngineHandle) -> Self {
         Coordinator {
-            directory: GraphDirectory::new(),
             engine: Some(engine),
-            workspaces: Mutex::new(WorkspacePool::new()),
-            results: Mutex::new(ResultCache::new()),
-            metrics: Metrics::new(),
+            ..Self::new()
         }
+    }
+
+    /// Install a fault-injection plan ([`super::faults`]): matching
+    /// engine executions panic or stall per the plan, exercising the
+    /// real isolation paths. Install *before* serving starts — shard
+    /// workers snapshot the plan when they spawn.
+    pub fn set_faults(&self, plan: Arc<FaultPlan>) {
+        *lock_or_recover(&self.faults) = Some(plan);
+    }
+
+    /// Remove any installed fault plan (ad-hoc paths pick the removal
+    /// up immediately; running shard workers keep their snapshot).
+    pub fn clear_faults(&self) {
+        *lock_or_recover(&self.faults) = None;
+    }
+
+    /// The currently installed fault plan, if any.
+    pub(crate) fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        lock_or_recover(&self.faults).clone()
     }
 
     /// The graph registry (shard workers cache snapshots of it).
@@ -131,12 +158,23 @@ impl Coordinator {
         ExecCore {
             engine: self.engine.as_ref(),
             metrics: &self.metrics,
+            faults: self.fault_plan(),
+        }
+    }
+
+    /// The Mutex-shared cache and breaker handles the ad-hoc paths
+    /// execute with (shard workers build [`Guards`] over state they
+    /// own outright).
+    fn guards(&self) -> Guards<'_> {
+        Guards {
+            cache: CacheHandle::Shared(&self.results),
+            breaker: BreakerHandle::Shared(&self.breaker),
         }
     }
 
     /// Check a workspace out of the pool (fresh if none is warm).
     fn checkout_workspace(&self) -> QueryWorkspace {
-        let mut pool = self.workspaces.lock().unwrap();
+        let mut pool = lock_or_recover(&self.workspaces);
         if pool.is_empty() {
             self.metrics.bump("workspaces_created", 1);
         }
@@ -145,7 +183,7 @@ impl Coordinator {
 
     /// Return a workspace to the pool for the next request.
     fn checkin_workspace(&self, ws: QueryWorkspace) {
-        self.workspaces.lock().unwrap().checkin(ws);
+        lock_or_recover(&self.workspaces).checkin(ws);
     }
 
     /// Run `f` with a pooled workspace checked out for its duration —
@@ -163,20 +201,35 @@ impl Coordinator {
 
     /// Number of idle workspaces in the global pool (tests/metrics).
     pub fn idle_workspaces(&self) -> usize {
-        self.workspaces.lock().unwrap().len()
+        lock_or_recover(&self.workspaces).len()
     }
 
     /// Number of entries in the shared result cache (tests/metrics;
     /// shard workers keep caches of their own, not counted here).
     pub fn cached_results(&self) -> usize {
-        self.results.lock().unwrap().len()
+        lock_or_recover(&self.results).len()
     }
 
     /// Register a graph under `name` (replaces any previous one) by
-    /// publishing a new registry snapshot.
+    /// publishing a new registry snapshot. Panics on structurally
+    /// invalid CSR — callers with trusted (generated or IO-validated)
+    /// graphs keep the infallible signature; untrusted bytes go
+    /// through [`Coordinator::try_load_graph`].
     pub fn load_graph(&self, name: &str, graph: crate::graph::Graph) {
-        self.directory.publish(name, graph);
+        self.try_load_graph(name, graph)
+            .expect("load_graph: structurally invalid graph");
+    }
+
+    /// [`Coordinator::load_graph`] for untrusted input: validates the
+    /// CSR structure first and rejects malformed graphs with a typed
+    /// [`FailKind::InvalidGraph`] error, publishing nothing (see
+    /// [`GraphDirectory::load_graph`]). Republishing a healthy graph
+    /// also resets any open panic breaker for it — the version moves,
+    /// which is the breaker's reset protocol.
+    pub fn try_load_graph(&self, name: &str, graph: crate::graph::Graph) -> Result<()> {
+        self.directory.load_graph(name, graph)?;
         self.metrics.bump("graphs_loaded", 1);
+        Ok(())
     }
 
     /// Fetch a registered graph.
@@ -184,15 +237,47 @@ impl Coordinator {
         self.directory.lookup(name)
     }
 
+    /// Answer a cacheable request straight from the shared result
+    /// cache — probed *before* any workspace checkout, so duplicate
+    /// ad-hoc whole-graph traffic stops cycling pooled workspaces it
+    /// never touches. `None` (non-cacheable spec, unknown graph, cache
+    /// miss) falls through to the full execution path, which meters
+    /// the miss itself.
+    fn cache_fast_path(
+        &self,
+        id: u64,
+        graph: &str,
+        spec: &'static AlgoSpec,
+        params: Params,
+    ) -> Option<JobResult> {
+        if !spec.cacheable {
+            return None;
+        }
+        let submitted = Instant::now();
+        let lg = self.graph(graph)?;
+        let hit = lock_or_recover(&self.results).lookup(graph, spec.id, params, lg.version)?;
+        self.metrics.bump("cache_hits", 1);
+        self.metrics.bump("cache_fast_path", 1);
+        self.metrics.bump("jobs_executed", 1);
+        Some(JobResult {
+            id,
+            algo: spec.label,
+            output: (*hit).clone(),
+            exec: Duration::ZERO,
+            latency: submitted.elapsed(),
+        })
+    }
+
     /// Execute one request immediately (no queueing).
     pub fn execute(&self, req: &JobRequest) -> Result<JobResult> {
+        if !req.expired() {
+            if let Some(hit) = self.cache_fast_path(req.id, &req.graph, req.algo, req.params) {
+                return Ok(hit);
+            }
+        }
         self.with_workspace(|ws| {
-            self.core().execute_one(
-                req,
-                self.graph(&req.graph),
-                ws,
-                &mut CacheHandle::Shared(&self.results),
-            )
+            self.core()
+                .execute_one(req, self.graph(&req.graph), ws, &mut self.guards())
         })
     }
 
@@ -202,6 +287,9 @@ impl Coordinator {
     /// carries no request id, so the returned [`JobResult::id`] is
     /// always 0 — correlate by call site.
     pub fn run_query(&self, q: &Query) -> Result<JobResult> {
+        if let Some(hit) = self.cache_fast_path(0, &q.graph, q.algo, q.params) {
+            return Ok(hit);
+        }
         self.with_workspace(|ws| {
             self.core().execute_resolved(
                 0,
@@ -211,7 +299,7 @@ impl Coordinator {
                 q.source,
                 self.graph(&q.graph),
                 ws,
-                &mut CacheHandle::Shared(&self.results),
+                &mut self.guards(),
             )
         })
     }
@@ -229,13 +317,8 @@ impl Coordinator {
     /// latencies include the fusion-window wait.
     fn run_batch_from(&self, t0: Instant, reqs: &[JobRequest]) -> Vec<Result<JobResult>> {
         self.with_workspace(|ws| {
-            self.core().run_batch_from(
-                t0,
-                reqs,
-                |name| self.graph(name),
-                ws,
-                &mut CacheHandle::Shared(&self.results),
-            )
+            self.core()
+                .run_batch_from(t0, reqs, |name| self.graph(name), ws, &mut self.guards())
         })
     }
 
@@ -266,14 +349,25 @@ impl Coordinator {
         window: Duration,
     ) {
         let max_batch = max_batch.max(1);
+        let inbox = Inbox::new(&rx);
         loop {
             // Block for the first request.
-            let Ok(first) = rx.recv() else { return };
+            let Ok(first) = inbox.recv() else { return };
             // Latency epoch: the head request is waiting from here on,
             // so the fusion-window wait counts toward its latency.
             let t0 = Instant::now();
+            // An already-expired head never opens a fusion window:
+            // answer it dead and move on to live work.
+            if first.expired() {
+                self.metrics.bump("deadline_exceeded", 1);
+                let err = faults::deadline_error(&first.graph, first.algo.label);
+                if tx.send(answer(&first, Err(err), t0, &self.metrics)).is_err() {
+                    return;
+                }
+                continue;
+            }
             let mut batch = vec![first];
-            admit_batch(&rx, &mut batch, max_batch, window, &self.metrics);
+            admit_batch(&inbox, &mut batch, max_batch, window, &self.metrics);
             self.metrics.bump("batched_requests", batch.len() as u64);
             let results = self.run_batch_from(t0, &batch);
             for (req, res) in batch.iter().zip(results) {
@@ -309,10 +403,11 @@ impl CacheHandle<'_> {
     ) -> Option<Arc<JobOutput>> {
         match self {
             CacheHandle::Owned(c) => c.lookup(graph, spec, params, version),
-            CacheHandle::Shared(m) => m.lock().unwrap().lookup(graph, spec, params, version),
+            CacheHandle::Shared(m) => lock_or_recover(m).lookup(graph, spec, params, version),
         }
     }
 
+    /// Returns the number of LRU evictions the insert forced.
     fn insert(
         &mut self,
         graph: &str,
@@ -320,12 +415,56 @@ impl CacheHandle<'_> {
         params: Params,
         version: u64,
         output: Arc<JobOutput>,
-    ) {
+    ) -> usize {
         match self {
             CacheHandle::Owned(c) => c.insert(graph, spec, params, version, output),
-            CacheHandle::Shared(m) => m.lock().unwrap().insert(graph, spec, params, version, output),
+            CacheHandle::Shared(m) => {
+                lock_or_recover(m).insert(graph, spec, params, version, output)
+            }
         }
     }
+}
+
+/// How an execution path reaches its [`PanicBreaker`] — the same
+/// owned/shared split as [`CacheHandle`], for the same reason: shard
+/// workers own a breaker outright (graph→shard affinity means one
+/// worker sees a graph's full consecutive-panic streak), the ad-hoc
+/// paths share one behind a Mutex taken only around the individual
+/// check/record.
+pub(crate) enum BreakerHandle<'a> {
+    Owned(&'a mut PanicBreaker),
+    Shared(&'a Mutex<PanicBreaker>),
+}
+
+impl BreakerHandle<'_> {
+    fn is_open(&mut self, graph: &str, spec: u16, version: u64) -> bool {
+        match self {
+            BreakerHandle::Owned(b) => b.is_open(graph, spec, version),
+            BreakerHandle::Shared(m) => lock_or_recover(m).is_open(graph, spec, version),
+        }
+    }
+
+    fn record_panic(&mut self, graph: &str, spec: u16, version: u64) -> bool {
+        match self {
+            BreakerHandle::Owned(b) => b.record_panic(graph, spec, version),
+            BreakerHandle::Shared(m) => lock_or_recover(m).record_panic(graph, spec, version),
+        }
+    }
+
+    fn record_ok(&mut self, graph: &str, spec: u16) {
+        match self {
+            BreakerHandle::Owned(b) => b.record_ok(graph, spec),
+            BreakerHandle::Shared(m) => lock_or_recover(m).record_ok(graph, spec),
+        }
+    }
+}
+
+/// The per-call shared-state handles an execution borrows: result
+/// cache + panic breaker. One parameter instead of a growing list on
+/// every `ExecCore` entry point.
+pub(crate) struct Guards<'a> {
+    pub cache: CacheHandle<'a>,
+    pub breaker: BreakerHandle<'a>,
 }
 
 /// The request-execution core: registry dispatch, batching and
@@ -336,17 +475,30 @@ impl CacheHandle<'_> {
 pub(crate) struct ExecCore<'a> {
     pub engine: Option<&'a EngineHandle>,
     pub metrics: &'a Metrics,
+    /// Fault-injection plan, if one is installed on the coordinator
+    /// ([`Coordinator::set_faults`]). Snapshotted at core construction:
+    /// shard workers capture it once at spawn, so install the plan
+    /// *before* serving starts.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl ExecCore<'_> {
-    /// Execute one request against an already-resolved graph.
+    /// Execute one request against an already-resolved graph. Expired
+    /// requests fail typed ([`FailKind::DeadlineExceeded`]) without
+    /// touching the engine — this is the last-line deadline check
+    /// covering mid-window expiry (the router and window admission
+    /// check earlier).
     pub(crate) fn execute_one(
         &self,
         req: &JobRequest,
         lg: Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
-        cache: &mut CacheHandle<'_>,
+        guards: &mut Guards<'_>,
     ) -> Result<JobResult> {
+        if req.expired() {
+            self.metrics.bump("deadline_exceeded", 1);
+            return Err(faults::deadline_error(&req.graph, req.algo.label));
+        }
         self.execute_resolved(
             req.id,
             &req.graph,
@@ -355,7 +507,7 @@ impl ExecCore<'_> {
             req.source,
             lg,
             ws,
-            cache,
+            guards,
         )
     }
 
@@ -378,15 +530,17 @@ impl ExecCore<'_> {
         source: V,
         lg: Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
-        cache: &mut CacheHandle<'_>,
+        guards: &mut Guards<'_>,
     ) -> Result<JobResult> {
         let submitted = Instant::now();
         let lg = lg.with_context(|| format!("unknown graph {graph:?}"))?;
         if spec.cacheable {
-            if let Some(hit) = cache.lookup(graph, spec.id, params, lg.version) {
+            if let Some(hit) = guards.cache.lookup(graph, spec.id, params, lg.version) {
                 // Served for free: no engine ran, so `exec` is zero
                 // and no `exec/<label>` sample is recorded — the
-                // series keeps measuring real computes.
+                // series keeps measuring real computes. A valid cached
+                // result is served even when the breaker is open: the
+                // answer is already known-good.
                 self.metrics.bump("cache_hits", 1);
                 self.metrics.bump("jobs_executed", 1);
                 return Ok(JobResult {
@@ -399,14 +553,37 @@ impl ExecCore<'_> {
             }
             self.metrics.bump("cache_misses", 1);
         }
+        // Circuit breaker: after BREAKER_TRIP consecutive panics on
+        // this (graph, spec) at this version, fail fast instead of
+        // re-running an engine that keeps dying. Republishing the
+        // graph (new version) resets the breaker.
+        if guards.breaker.is_open(graph, spec.id, lg.version) {
+            self.metrics.bump("breaker_open", 1);
+            return Err(faults::breaker_error(graph, spec.label));
+        }
         // Answer out of the caller's warm workspace: the steady-state
         // query path performs zero O(n)/O(m) allocation (epoch-stamped
         // scratch, reused bags and export buffers).
         let exec_start = Instant::now();
-        let output = self.run_spec(spec, params, source, &lg, ws)?;
+        let run = self.run_spec(graph, spec, params, source, &lg, ws);
+        match &run {
+            Ok(_) => guards.breaker.record_ok(graph, spec.id),
+            Err(e) if FailKind::classify(&e.to_string()) == FailKind::EnginePanic => {
+                if guards.breaker.record_panic(graph, spec.id, lg.version) {
+                    self.metrics.bump("breaker_trips", 1);
+                }
+            }
+            Err(_) => {} // plain errors (bad source, …) don't trip the breaker
+        }
+        let output = run?;
         let exec = exec_start.elapsed();
         if spec.cacheable {
-            cache.insert(graph, spec.id, params, lg.version, Arc::new(output.clone()));
+            let evicted = guards
+                .cache
+                .insert(graph, spec.id, params, lg.version, Arc::new(output.clone()));
+            if evicted > 0 {
+                self.metrics.bump("cache_evictions", evicted as u64);
+            }
         }
         let latency = submitted.elapsed();
         self.metrics.bump("jobs_executed", 1);
@@ -420,9 +597,18 @@ impl ExecCore<'_> {
         })
     }
 
-    /// Validate and dispatch one query through its spec's solo engine.
+    /// Validate and dispatch one query through its spec's solo engine,
+    /// with panic isolation: the engine runs inside `catch_unwind`, so
+    /// a panicking engine answers this one request
+    /// [`FailKind::EnginePanic`] instead of killing the serving
+    /// worker. The workspace the panic may have left half-mutated is
+    /// dropped and replaced with a fresh one — corrupt scratch is
+    /// never checked back into a pool. The fault-injection hook fires
+    /// *inside* the guard, so injected panics exercise the real
+    /// isolation path.
     fn run_spec(
         &self,
+        graph: &str,
         spec: &'static AlgoSpec,
         params: Params,
         source: V,
@@ -433,7 +619,21 @@ impl ExecCore<'_> {
         if spec.needs_source && (source as usize) >= g.n() {
             bail!("source {} out of range (n={})", source, g.n());
         }
-        (spec.solo)(&EngineCtx { engine: self.engine }, lg, params, source, ws)
+        let guarded = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = &self.faults {
+                f.before_execute(graph, spec.label);
+            }
+            (spec.solo)(&EngineCtx { engine: self.engine }, lg, params, source, ws)
+        }));
+        match guarded {
+            Ok(res) => res,
+            Err(payload) => {
+                *ws = QueryWorkspace::default();
+                self.metrics.bump("engine_panics", 1);
+                self.metrics.bump("workspaces_dropped", 1);
+                Err(faults::panic_error(graph, spec.label, payload.as_ref()))
+            }
+        }
     }
 
     /// Run a batch against `lookup`: requests grouped by `(graph,
@@ -451,13 +651,24 @@ impl ExecCore<'_> {
         reqs: &[JobRequest],
         lookup: impl Fn(&str) -> Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
-        cache: &mut CacheHandle<'_>,
+        guards: &mut Guards<'_>,
     ) -> Vec<Result<JobResult>> {
+        let mut results: Vec<Option<Result<JobResult>>> = (0..reqs.len()).map(|_| None).collect();
         // Group indices by the registry key (graph, spec id, params),
         // preserving order within groups. Params is part of the key,
-        // so e.g. two bfs-vgc τ values never fuse together.
+        // so e.g. two bfs-vgc τ values never fuse together. Requests
+        // whose deadline already passed are answered dead here and
+        // never grouped — an expired request must not consume a fusion
+        // lane or an engine run (and counts toward neither
+        // queries_solo nor queries_fused: it was never routed to an
+        // execution path).
         let mut groups: HashMap<(&str, u16, Params), Vec<usize>> = HashMap::new();
         for (i, r) in reqs.iter().enumerate() {
+            if r.expired() {
+                self.metrics.bump("deadline_exceeded", 1);
+                results[i] = Some(Err(faults::deadline_error(&r.graph, r.algo.label)));
+                continue;
+            }
             let (id, params) = r.group_key();
             groups
                 .entry((r.graph.as_str(), id, params))
@@ -468,20 +679,19 @@ impl ExecCore<'_> {
         // then params.
         let mut order: Vec<(&str, u16, Params)> = groups.keys().copied().collect();
         order.sort_unstable();
-        let mut results: Vec<Option<Result<JobResult>>> = (0..reqs.len()).map(|_| None).collect();
         for key in order {
             let idxs = &groups[&key];
             let spec = reqs[idxs[0]].algo;
             if spec.fusable() && idxs.len() >= 2 {
                 let lg = lookup(&reqs[idxs[0]].graph);
-                self.run_fused_group(reqs, idxs, spec, key.2, lg, ws, &mut results);
+                self.run_fused_group(reqs, idxs, spec, key.2, lg, ws, guards, &mut results);
             } else {
                 // Solo path — duplicate cacheable requests within one
                 // batch hit the cache the first of them just filled.
                 for &i in idxs {
                     self.metrics.bump("queries_solo", 1);
                     results[i] =
-                        Some(self.execute_one(&reqs[i], lookup(&reqs[i].graph), ws, cache));
+                        Some(self.execute_one(&reqs[i], lookup(&reqs[i].graph), ws, guards));
                 }
             }
         }
@@ -502,7 +712,9 @@ impl ExecCore<'_> {
     /// Answer one (graph, spec, params) group of fusable requests with
     /// the spec's batched multi-source engine (≤ [`MAX_FUSE`] sources
     /// per walk) and demultiplex per-lane results back into the slots
-    /// of `results`.
+    /// of `results`. Each ≤ MAX_FUSE walk runs inside `catch_unwind`:
+    /// a panicking batch engine fails that chunk's requests typed
+    /// ([`FailKind::EnginePanic`]) and the remaining chunks still run.
     #[allow(clippy::too_many_arguments)]
     fn run_fused_group(
         &self,
@@ -512,6 +724,7 @@ impl ExecCore<'_> {
         params: Params,
         lg: Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
+        guards: &mut Guards<'_>,
         results: &mut [Option<Result<JobResult>>],
     ) {
         let be = spec.batch.expect("fused group requires a batch engine");
@@ -528,6 +741,17 @@ impl ExecCore<'_> {
             }
             return;
         };
+        let graph = reqs[idxs[0]].graph.as_str();
+        // Breaker fast-fail covers the whole group: a fused walk is
+        // one engine run, so an open breaker fails all its lanes.
+        if guards.breaker.is_open(graph, spec.id, lg.version) {
+            for &i in idxs {
+                self.metrics.bump("queries_fused", 1);
+                self.metrics.bump("breaker_open", 1);
+                results[i] = Some(Err(faults::breaker_error(graph, spec.label)));
+            }
+            return;
+        }
         let n = lg.graph.n();
         // Out-of-range sources fail individually; the rest still fuse.
         let mut valid: Vec<usize> = Vec::with_capacity(idxs.len());
@@ -546,7 +770,27 @@ impl ExecCore<'_> {
             let seeds: Vec<V> = chunk.iter().map(|&i| reqs[i].source).collect();
             let lanes = seeds.len();
             let exec_start = Instant::now();
-            (be.run)(&lg, params, &seeds, ws);
+            let walked = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(f) = &self.faults {
+                    f.before_execute(graph, spec.label);
+                }
+                (be.run)(&lg, params, &seeds, ws);
+            }));
+            if let Err(payload) = walked {
+                *ws = QueryWorkspace::default();
+                self.metrics.bump("engine_panics", 1);
+                self.metrics.bump("workspaces_dropped", 1);
+                if guards.breaker.record_panic(graph, spec.id, lg.version) {
+                    self.metrics.bump("breaker_trips", 1);
+                }
+                let msg = faults::panic_error(graph, spec.label, payload.as_ref()).to_string();
+                for &i in chunk {
+                    self.metrics.bump("queries_fused", 1);
+                    results[i] = Some(Err(Error::msg(msg.clone())));
+                }
+                continue;
+            }
+            guards.breaker.record_ok(graph, spec.id);
             // The walk is shared: each fused request's exec is the
             // whole walk's time (vs. k walks unfused).
             let exec = exec_start.elapsed();
@@ -590,11 +834,16 @@ pub(crate) fn answer(
             // half-failing workload must not report the percentiles
             // of its successes only.
             metrics.observe("latency", latency);
+            // The typed kind is recovered from the stable message
+            // prefix at this one boundary — robustness errors are
+            // never context-wrapped, so the prefix match is exact.
+            let msg = format!("{e:#}");
             JobResult {
                 id: req.id,
                 algo: req.algo.label,
                 output: JobOutput::Failed {
-                    error: format!("{e:#}"),
+                    kind: FailKind::classify(&msg),
+                    error: msg,
                 },
                 exec: Duration::ZERO,
                 latency,
@@ -623,6 +872,7 @@ pub fn workload(
                 algo: spec,
                 params,
                 source: rng.below(1 << 14) as V, // clamped by caller's graphs
+                deadline: None,
             }
         })
         .collect()
@@ -1016,6 +1266,114 @@ mod tests {
         );
         // All five fused into one walk by the window admission.
         assert_eq!(c.metrics.counter("queries_fused"), 5);
+    }
+
+    #[test]
+    fn cache_fast_path_answers_before_workspace_checkout() {
+        let c = coord_with_graphs();
+        let first = c.execute(&req(0, "road", "cc", 64, 0)).unwrap();
+        assert_eq!(c.metrics.counter("cache_fast_path"), 0, "first compute misses");
+        let created = c.metrics.counter("workspaces_created");
+        for i in 1..4u64 {
+            let dup = c.execute(&req(i, "road", "cc", 64, 0)).unwrap();
+            assert_eq!(dup.output, first.output, "bit-identical from cache");
+            assert_eq!(dup.exec, Duration::ZERO);
+        }
+        assert_eq!(c.metrics.counter("cache_fast_path"), 3);
+        assert_eq!(c.metrics.counter("cache_hits"), 3);
+        assert_eq!(c.metrics.counter("cache_misses"), 1);
+        assert_eq!(
+            c.metrics.counter("workspaces_created"),
+            created,
+            "fast-path hits never touch the workspace pool"
+        );
+        // The Query path shares the fast path.
+        let q = Query::new("road", "cc", &ParseArgs { tau: 64, block: 64 }).unwrap();
+        assert_eq!(c.run_query(&q).unwrap().output, first.output);
+        assert_eq!(c.metrics.counter("cache_fast_path"), 4);
+    }
+
+    #[test]
+    fn expired_requests_in_a_batch_fail_without_executing() {
+        let c = coord_with_graphs();
+        let mut reqs: Vec<JobRequest> = (0..4)
+            .map(|i| req(i, "road", "bfs-vgc", 64, i as V))
+            .collect();
+        reqs[2] = req(2, "road", "bfs-vgc", 64, 2).with_budget(Duration::ZERO);
+        let out = c.run_batch(&reqs);
+        assert!(out[0].is_ok() && out[1].is_ok() && out[3].is_ok());
+        let err = out[2].as_ref().unwrap_err().to_string();
+        assert_eq!(FailKind::classify(&err), FailKind::DeadlineExceeded);
+        assert_eq!(c.metrics.counter("deadline_exceeded"), 1);
+        assert_eq!(c.metrics.counter("jobs_executed"), 3, "the dead request never ran");
+        // The three live requests still fused; the expired one was
+        // never routed to an execution path.
+        assert_eq!(c.metrics.counter("queries_fused"), 3);
+        assert_eq!(c.metrics.counter("queries_solo"), 0);
+    }
+
+    #[test]
+    fn injected_panics_are_isolated_and_answered_typed() {
+        faults::silence_injected_panics();
+        let c = coord_with_graphs();
+        c.set_faults(Arc::new(FaultPlan::new().panic_on(
+            Some("road"),
+            Some("bfs-frontier"),
+            0,
+            1,
+        )));
+        let err = c.execute(&req(0, "road", "bfs-frontier", 64, 0)).unwrap_err();
+        assert_eq!(FailKind::classify(&err.to_string()), FailKind::EnginePanic);
+        assert_eq!(c.metrics.counter("engine_panics"), 1);
+        assert_eq!(c.metrics.counter("workspaces_dropped"), 1);
+        // The one-panic budget is spent: the same request now succeeds,
+        // out of a replacement workspace.
+        let ok = c.execute(&req(1, "road", "bfs-frontier", 64, 0)).unwrap();
+        assert!(matches!(ok.output, JobOutput::Bfs { .. }));
+        // Other specs never saw the fault.
+        c.execute(&req(2, "road", "cc", 64, 0)).unwrap();
+        assert_eq!(c.metrics.counter("engine_panics"), 1);
+    }
+
+    #[test]
+    fn breaker_opens_after_repeated_panics_and_republish_resets() {
+        faults::silence_injected_panics();
+        let c = Coordinator::new();
+        c.load_graph("g", gen::grid(4, 4).symmetrize());
+        c.set_faults(Arc::new(FaultPlan::new().panic_on(
+            Some("g"),
+            Some("bfs-frontier"),
+            0,
+            faults::BREAKER_TRIP as u64,
+        )));
+        for i in 0..faults::BREAKER_TRIP as u64 {
+            let err = c.execute(&req(i, "g", "bfs-frontier", 64, 0)).unwrap_err();
+            assert_eq!(
+                FailKind::classify(&err.to_string()),
+                FailKind::EnginePanic,
+                "attempt {i} panics"
+            );
+        }
+        assert_eq!(c.metrics.counter("breaker_trips"), 1);
+        // Open: identical requests fail fast, classified EnginePanic,
+        // without running (and so without consuming fault-plan hits).
+        let err = c.execute(&req(9, "g", "bfs-frontier", 64, 0)).unwrap_err();
+        assert_eq!(FailKind::classify(&err.to_string()), FailKind::EnginePanic);
+        assert!(err.to_string().contains("breaker"));
+        assert_eq!(c.metrics.counter("breaker_open"), 1);
+        assert_eq!(
+            c.metrics.counter("engine_panics"),
+            faults::BREAKER_TRIP as u64,
+            "fast fail never reached the engine"
+        );
+        // Other (graph, spec) pairs on the same graph are unaffected.
+        c.execute(&req(10, "g", "cc", 64, 0)).unwrap();
+        // Republish resets the breaker; the panic budget is exhausted,
+        // so the spec serves again.
+        c.load_graph("g", gen::grid(4, 4).symmetrize());
+        let ok = c.execute(&req(11, "g", "bfs-frontier", 64, 0)).unwrap();
+        assert!(matches!(ok.output, JobOutput::Bfs { .. }));
+        assert_eq!(c.metrics.counter("breaker_open"), 1, "no further fast fails");
     }
 
     #[test]

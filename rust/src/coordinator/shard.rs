@@ -53,23 +53,52 @@
 //!   request id (with the `errors` counter bumped), so clients
 //!   correlating responses by id never hang on an error.
 //!
+//! The serve path is **fault-tolerant** (see [`super::faults`] and the
+//! crate-level "Failure semantics" section):
+//!
+//! * **Bounded inboxes / load shedding** — the router tracks each
+//!   shard's queue depth with a per-shard atomic gauge ([`Inbox`]
+//!   decrements it on every successful receive). Past
+//!   [`ShardConfig::inbox_cap`] queued requests, new arrivals for that
+//!   shard are *shed*: answered immediately with a typed
+//!   [`Overloaded`](super::faults::FailKind::Overloaded) failure
+//!   (`shed` counter) instead of growing an unbounded queue and
+//!   dragging every queued request's latency with it.
+//! * **Deadlines** — already-expired requests are answered
+//!   [`DeadlineExceeded`](super::faults::FailKind::DeadlineExceeded)
+//!   at the router, and an expired head never opens a fusion window
+//!   (`deadline_exceeded` counter).
+//! * **Panic isolation** — engine panics are caught inside
+//!   [`ExecCore`], answered as typed failures, and counted by a
+//!   worker-owned per-`(graph, spec)` circuit breaker (valid for the
+//!   same graph→shard-affinity reason the result cache is): after
+//!   [`BREAKER_TRIP`](super::faults::BREAKER_TRIP) consecutive panics
+//!   the breaker fails identical requests fast until the graph is
+//!   republished. No shard worker dies; the corrupt workspace is
+//!   dropped, never checked back into the pool.
+//!
 //! Per-shard counters: `shard_dispatches`, `window_waits`,
 //! `window_timeouts`, `registry_snapshots`, `graph_seen/<name>`, plus
 //! everything [`ExecCore`] meters (`queries_fused`, `jobs_executed`,
-//! ...). [`Metrics::merge`] folds them into the global registry;
-//! [`ShardServer::serve`] also returns the per-shard registries so
-//! callers can inspect placement and balance.
+//! `engine_panics`, ...). [`Metrics::merge`] folds them into the
+//! global registry (router-side `shed`/`deadline_exceeded` land in the
+//! global registry directly); [`ShardServer::serve`] also returns the
+//! per-shard registries so callers can inspect placement and balance.
 //!
 //! [`ExecCore`]: super::server::ExecCore
 //! [`ExecCore::run_batch_from`]: super::server::ExecCore::run_batch_from
 //! [`GraphDirectory`]: super::directory::GraphDirectory
 
 use super::directory::{ResultCache, SnapshotCache};
+use super::faults::{self, PanicBreaker};
 use super::job::{JobRequest, JobResult};
 use super::metrics::Metrics;
-use super::server::{answer, CacheHandle, Coordinator, ExecCore, MAX_FUSE};
+use super::server::{
+    answer, BreakerHandle, CacheHandle, Coordinator, ExecCore, Guards, MAX_FUSE,
+};
 use crate::algo::workspace::WorkspacePool;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvError, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -84,6 +113,12 @@ pub struct ShardConfig {
     pub fusion_window: Duration,
     /// Most requests admitted into one dispatched batch.
     pub max_batch: usize,
+    /// Most requests queued per shard before the router sheds new
+    /// arrivals for that shard with a typed
+    /// [`Overloaded`](super::faults::FailKind::Overloaded) failure
+    /// (default 1024; `0` disables shedding — unbounded queues, the
+    /// pre-backpressure behavior).
+    pub inbox_cap: usize,
 }
 
 impl Default for ShardConfig {
@@ -92,7 +127,62 @@ impl Default for ShardConfig {
             shards: crate::parallel::num_threads(),
             fusion_window: Duration::from_micros(200),
             max_batch: 64,
+            inbox_cap: 1024,
         }
+    }
+}
+
+/// A worker's receiving end of a request channel, with an optional
+/// shared depth gauge: every successful receive decrements the gauge
+/// the router increments on send, so `gauge == requests queued but
+/// not yet picked up` and the router's shed decision reads one atomic.
+/// The single-threaded serve loops wrap their receiver with
+/// [`Inbox::new`] (no gauge, zero cost).
+pub(crate) struct Inbox<'a> {
+    rx: &'a Receiver<JobRequest>,
+    depth: Option<&'a AtomicUsize>,
+}
+
+impl<'a> Inbox<'a> {
+    pub(crate) fn new(rx: &'a Receiver<JobRequest>) -> Self {
+        Inbox { rx, depth: None }
+    }
+
+    pub(crate) fn with_depth(rx: &'a Receiver<JobRequest>, depth: &'a AtomicUsize) -> Self {
+        Inbox {
+            rx,
+            depth: Some(depth),
+        }
+    }
+
+    fn took(&self) {
+        if let Some(d) = self.depth {
+            d.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn recv(&self) -> Result<JobRequest, RecvError> {
+        let r = self.rx.recv();
+        if r.is_ok() {
+            self.took();
+        }
+        r
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<JobRequest, RecvTimeoutError> {
+        let r = self.rx.recv_timeout(timeout);
+        if r.is_ok() {
+            self.took();
+        }
+        r
+    }
+
+    fn try_recv(&self) -> Result<JobRequest, TryRecvError> {
+        let r = self.rx.try_recv();
+        if r.is_ok() {
+            self.took();
+        }
+        r
     }
 }
 
@@ -125,27 +215,53 @@ impl ShardServer {
         let config = &self.config;
         let per_shard: Vec<Metrics> = std::thread::scope(|s| {
             let mut inboxes = Vec::with_capacity(n);
+            let mut depths: Vec<Arc<AtomicUsize>> = Vec::with_capacity(n);
             let mut workers = Vec::with_capacity(n);
             for _ in 0..n {
                 let (shard_tx, shard_rx) = std::sync::mpsc::channel::<JobRequest>();
+                let depth = Arc::new(AtomicUsize::new(0));
                 let res_tx = tx.clone();
                 inboxes.push(shard_tx);
+                depths.push(Arc::clone(&depth));
                 workers.push(s.spawn(move || {
                     let metrics = Metrics::new();
-                    shard_loop(coord, config, shard_rx, res_tx, &metrics);
+                    shard_loop(coord, config, shard_rx, &depth, res_tx, &metrics);
                     metrics
                 }));
             }
-            // The workers hold clones; dropping ours lets the result
-            // channel close when the last shard finishes.
-            drop(tx);
-            // The router: one hash per request, no locks held.
+            // The router: one hash (plus one atomic depth load) per
+            // request, no locks held. It answers shed and
+            // already-expired requests itself on its own result-sender
+            // clone — every accepted request is answered exactly once,
+            // shed or not. The workers hold their own clones; the
+            // router's drops after the loop, so the result channel
+            // still closes when the last shard finishes.
+            let cap = config.inbox_cap;
             for req in rx {
+                let t0 = Instant::now();
+                if req.expired() {
+                    coord.metrics.bump("deadline_exceeded", 1);
+                    let err = faults::deadline_error(&req.graph, req.algo.label);
+                    if tx.send(answer(&req, Err(err), t0, &coord.metrics)).is_err() {
+                        break;
+                    }
+                    continue;
+                }
                 let shard = (req.route_hash() % n as u64) as usize;
+                if cap > 0 && depths[shard].load(Ordering::Relaxed) >= cap {
+                    coord.metrics.bump("shed", 1);
+                    let err = faults::overload_error(shard, cap);
+                    if tx.send(answer(&req, Err(err), t0, &coord.metrics)).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                depths[shard].fetch_add(1, Ordering::Relaxed);
                 if inboxes[shard].send(req).is_err() {
                     break; // shard died (results receiver hung up)
                 }
             }
+            drop(tx);
             drop(inboxes);
             workers
                 .into_iter()
@@ -167,6 +283,7 @@ fn shard_loop(
     coord: &Coordinator,
     config: &ShardConfig,
     rx: Receiver<JobRequest>,
+    depth: &AtomicUsize,
     tx: Sender<JobResult>,
     metrics: &Metrics,
 ) {
@@ -176,17 +293,34 @@ fn shard_loop(
     // duplicate whole-graph query for a graph lands here, so a
     // worker-owned (lock-free) cache sees the full hit rate.
     let mut results_cache = ResultCache::new();
+    // Worker-owned panic breaker, valid for the same affinity reason:
+    // this worker sees every request — and so every consecutive
+    // panic — for its graphs.
+    let mut breaker = PanicBreaker::new();
     let core = ExecCore {
         engine: coord.engine(),
         metrics,
+        faults: coord.fault_plan(),
     };
     let max_batch = config.max_batch.max(1);
-    while let Ok(first) = rx.recv() {
+    let inbox = Inbox::with_depth(&rx, depth);
+    while let Ok(first) = inbox.recv() {
         // Latency epoch: the head request waits from here on, so the
         // fusion-window wait counts toward reported latency.
         let t0 = Instant::now();
+        // An already-expired head never opens a fusion window: answer
+        // it dead and move on to live work (the router checks too, but
+        // a request can expire while queued).
+        if first.expired() {
+            metrics.bump("deadline_exceeded", 1);
+            let err = faults::deadline_error(&first.graph, first.algo.label);
+            if tx.send(answer(&first, Err(err), t0, metrics)).is_err() {
+                return;
+            }
+            continue;
+        }
         let mut batch = vec![first];
-        admit_batch(&rx, &mut batch, max_batch, config.fusion_window, metrics);
+        admit_batch(&inbox, &mut batch, max_batch, config.fusion_window, metrics);
         metrics.bump("shard_dispatches", 1);
         // One freshness check per dispatch (an atomic load; the
         // registry Mutex only on an actual publish), so the whole
@@ -220,7 +354,10 @@ fn shard_loop(
             &batch,
             |name| cache.cached(name),
             &mut ws,
-            &mut CacheHandle::Owned(&mut results_cache),
+            &mut Guards {
+                cache: CacheHandle::Owned(&mut results_cache),
+                breaker: BreakerHandle::Owned(&mut breaker),
+            },
         );
         pool.checkin(ws);
         for (req, res) in batch.iter().zip(results) {
@@ -248,7 +385,7 @@ fn shard_loop(
 /// intact for the caller to execute — shutdown never drops accepted
 /// requests.
 pub(crate) fn admit_batch(
-    rx: &Receiver<JobRequest>,
+    rx: &Inbox<'_>,
     batch: &mut Vec<JobRequest>,
     max_batch: usize,
     window: Duration,
@@ -318,7 +455,7 @@ mod tests {
             tx.send(req(i, "g", "bfs-vgc", 8)).unwrap();
         }
         let mut batch = vec![req(99, "g", "bfs-vgc", 8)];
-        admit_batch(&rx, &mut batch, 64, Duration::ZERO, &m);
+        admit_batch(&Inbox::new(&rx), &mut batch, 64, Duration::ZERO, &m);
         assert_eq!(batch.len(), 4);
         assert_eq!(m.counter("window_waits"), 0);
         drop(tx);
@@ -331,7 +468,7 @@ mod tests {
         tx.send(req(1, "g", "bcc-fast", 8)).unwrap();
         let mut batch = vec![req(0, "g", "bcc-fast", 8)];
         let t0 = Instant::now();
-        admit_batch(&rx, &mut batch, 64, Duration::from_secs(10), &m);
+        admit_batch(&Inbox::new(&rx), &mut batch, 64, Duration::from_secs(10), &m);
         assert!(t0.elapsed() < Duration::from_secs(5), "no window wait");
         assert_eq!(batch.len(), 2);
         assert_eq!(m.counter("window_waits"), 0);
@@ -349,7 +486,7 @@ mod tests {
         }
         let mut batch = vec![req(99, "g", "sssp-rho", 8)];
         let t0 = Instant::now();
-        admit_batch(&rx, &mut batch, 1 << 20, Duration::from_secs(10), &m);
+        admit_batch(&Inbox::new(&rx), &mut batch, 1 << 20, Duration::from_secs(10), &m);
         assert!(t0.elapsed() < Duration::from_secs(5), "early dispatch");
         assert_eq!(batch.len(), MAX_FUSE, "stops at 64 same-key lanes");
         assert_eq!(m.counter("window_waits"), 1);
@@ -363,7 +500,7 @@ mod tests {
         let (tx, rx) = std::sync::mpsc::channel::<JobRequest>();
         tx.send(req(1, "g", "bfs-vgc", 8)).unwrap();
         let mut batch = vec![req(0, "g", "bfs-vgc", 8)];
-        admit_batch(&rx, &mut batch, 64, Duration::from_millis(5), &m);
+        admit_batch(&Inbox::new(&rx), &mut batch, 64, Duration::from_millis(5), &m);
         assert_eq!(batch.len(), 2, "drained the queued request");
         assert_eq!(m.counter("window_timeouts"), 1, "then timed out");
         // Disconnected mid-window: batch stays intact, returns fast.
@@ -373,9 +510,35 @@ mod tests {
         drop(tx2);
         let mut batch2 = vec![req(0, "g", "bfs-vgc", 8)];
         let t0 = Instant::now();
-        admit_batch(&rx2, &mut batch2, 64, Duration::from_secs(10), &m);
+        admit_batch(&Inbox::new(&rx2), &mut batch2, 64, Duration::from_secs(10), &m);
         assert_eq!(batch2.len(), 2, "buffered request drained after close");
         assert!(t0.elapsed() < Duration::from_secs(5), "no deadline sleep");
+    }
+
+    #[test]
+    fn inbox_receives_decrement_the_depth_gauge() {
+        // The router increments the gauge per send; every receive path
+        // (blocking, timed, non-blocking) must decrement it, or the
+        // shed decision reads a stale depth forever.
+        let m = Metrics::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let depth = AtomicUsize::new(0);
+        for i in 0..5u64 {
+            tx.send(req(i, "g", "bfs-vgc", 8)).unwrap();
+            depth.fetch_add(1, Ordering::Relaxed);
+        }
+        let inbox = Inbox::with_depth(&rx, &depth);
+        let first = inbox.recv().unwrap();
+        assert_eq!(depth.load(Ordering::Relaxed), 4, "blocking recv decrements");
+        let mut batch = vec![first];
+        admit_batch(&inbox, &mut batch, 64, Duration::from_millis(5), &m);
+        assert_eq!(batch.len(), 5);
+        assert_eq!(
+            depth.load(Ordering::Relaxed),
+            0,
+            "every admission-path receive decrements"
+        );
+        drop(tx);
     }
 
     #[test]
@@ -391,7 +554,7 @@ mod tests {
         }
         drop(tx);
         let mut batch = vec![req(99, "g", "bfs-vgc", 8)];
-        admit_batch(&rx, &mut batch, 64, Duration::from_secs(10), &m);
+        admit_batch(&Inbox::new(&rx), &mut batch, 64, Duration::from_secs(10), &m);
         assert_eq!(batch.len(), 5, "all queued requests admitted");
     }
 }

@@ -153,6 +153,61 @@
 //! workload hits the cache and answers duplicates below fresh-compute
 //! latency.
 //!
+//! ## Failure semantics
+//!
+//! The serving layer's contract is **every accepted request is
+//! answered exactly once** — on success with the algorithm's typed
+//! output, on failure with [`algo::api::QueryOutput::Failed`] carrying
+//! both the message and a machine-matchable
+//! [`coordinator::FailKind`]:
+//!
+//! * **`DeadlineExceeded`** — the request carried a deadline
+//!   ([`coordinator::JobRequest::with_budget`] /
+//!   `with_deadline`; CLI `--deadline-ms`) and it passed before
+//!   execution started. Checked at the shard router, at fusion-window
+//!   admission (an expired head never opens a window), and once more
+//!   at execution for mid-window expiry. Expired requests never touch
+//!   an engine (`deadline_exceeded` counter).
+//! * **`Overloaded`** — the shard router *shed* the request: its
+//!   target shard already had [`coordinator::ShardConfig::inbox_cap`]
+//!   requests queued (per-shard atomic depth gauges; `0` disables the
+//!   bound). Shedding answers immediately at the router instead of
+//!   letting an unbounded queue drag every queued request past its
+//!   deadline (`shed` counter). `benches/ablation_overload.rs`
+//!   measures bounded-vs-unbounded tail latency under oversubmission.
+//! * **`EnginePanic`** — the engine panicked mid-query. Execution
+//!   wraps every engine call (solo and fused) in
+//!   `std::panic::catch_unwind`: the panic is contained to the one
+//!   request, the possibly-corrupt workspace is dropped and replaced —
+//!   never checked back into a pool — and the serving worker keeps
+//!   running (`engine_panics`, `workspaces_dropped`). A
+//!   per-`(graph, spec)` **circuit breaker**
+//!   ([`coordinator::PanicBreaker`]) counts *consecutive* panics; at 3
+//!   it opens and identical requests fail fast (also classified
+//!   `EnginePanic`, `breaker_open` counter) without re-running the
+//!   dying engine. A success closes it; republishing the graph
+//!   (version bump) resets it — the same republish protocol that
+//!   invalidates cached results. Caveat: `catch_unwind` catches
+//!   panics that *unwind to the serving worker*; a panic on a
+//!   fork-join pool thread is isolated only insofar as the pool
+//!   propagates it back to the caller.
+//! * **`InvalidGraph`** — [`coordinator::Coordinator::try_load_graph`]
+//!   rejected a structurally invalid CSR (non-monotone offsets,
+//!   out-of-range targets, wrong offset totals, weight-length
+//!   mismatch) *before* publishing; serving state is untouched and the
+//!   previously published graph, if any, keeps serving.
+//!
+//! Coordinator-path Mutexes (pool, shared cache, directory writer,
+//! metrics, breaker) recover from poisoning
+//! (`PoisonError::into_inner`): each guards state that stays
+//! structurally valid across a panic, and recovery beats turning one
+//! panicked holder into a permanent denial of service.
+//! `coordinator::faults` is the zero-dependency fault-injection
+//! harness (panic-on-Nth-execution, slow-engine delays, malformed
+//! graph bytes) behind `tests/robust_serving.rs`, the chaos test that
+//! holds the exactly-once contract under injected panics, stalls and
+//! overload.
+//!
 //! ## Query API — the open algorithm registry
 //!
 //! Every servable algorithm is described **once**, by a static

@@ -7,6 +7,7 @@
 //! pasgal stats  --suite [--scale tiny] | --graph path.bin
 //! pasgal run    --algo bfs-vgc --graph path.bin --source 0 [--tau 512] [--p 192]
 //! pasgal serve  --demo [--requests 64] [--shards N] [--fusion-window-us 200]
+//!               [--inbox-cap 1024] [--deadline-ms 0]
 //! pasgal table1|table3|table4|table5|sssp|fig1|fig2   [--scale tiny]
 //! pasgal calibrate
 //! ```
@@ -130,6 +131,12 @@ USAGE: pasgal <command> [--key value ...]
   serve     --demo [--requests 64]   sharded serving demo over a workload trace
             [--shards N]             shard workers (default: pool width)
             [--fusion-window-us U]   fusion-window deadline (default 200, 0 = off)
+            [--inbox-cap N]          per-shard queue bound; past it requests are
+                                     shed with a typed Overloaded failure
+                                     (default 1024, 0 = unbounded)
+            [--deadline-ms M]        per-request deadline budget; expired
+                                     requests fail typed without executing
+                                     (default 0 = no deadline)
             [--tau 512] [--block 64] algorithm parameters for the demo mix
   table1 | table3 | table4 | table5 | sssp | fig1 | fig2   [--scale tiny]
   calibrate                          measure + print the sim cost model
@@ -291,18 +298,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
             })
             .collect::<Result<_>>()?;
     let mut reqs = pasgal::coordinator::workload(&["road", "social"], &algos, requests, 7);
+    let deadline_ms: usize = args.num("deadline-ms", 0);
     for r in &mut reqs {
         r.source %= 4000; // clamp into the smallest loaded graph
+        if deadline_ms > 0 {
+            r.deadline =
+                Some(std::time::Instant::now() + std::time::Duration::from_millis(deadline_ms as u64));
+        }
     }
     let config = ShardConfig {
         shards: args.num("shards", parallel::num_threads()),
         fusion_window: std::time::Duration::from_micros(args.num("fusion-window-us", 200)),
         max_batch: 64,
+        inbox_cap: args.num("inbox-cap", 1024),
     };
     println!(
-        "sharded serving: {} shards, fusion window {:?}",
+        "sharded serving: {} shards, fusion window {:?}, inbox cap {} ({}), \
+         deadline {}",
         config.shards.max(1),
-        config.fusion_window
+        config.fusion_window,
+        config.inbox_cap,
+        if config.inbox_cap == 0 { "unbounded" } else { "bounded" },
+        if deadline_ms == 0 {
+            "none".to_string()
+        } else {
+            format!("{deadline_ms}ms")
+        },
     );
     let (req_tx, req_rx) = std::sync::mpsc::channel::<JobRequest>();
     let (res_tx, res_rx) = std::sync::mpsc::channel();
@@ -357,6 +378,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.metrics.cache_hit_rate(),
         coord.metrics.counter("cache_hits"),
         coord.metrics.counter("cache_misses"),
+    );
+    println!(
+        "  fault tolerance: shed {} deadline_exceeded {} engine_panics {} \
+         breaker_open {} (every request answered, typed)",
+        coord.metrics.counter("shed"),
+        coord.metrics.counter("deadline_exceeded"),
+        coord.metrics.counter("engine_panics"),
+        coord.metrics.counter("breaker_open"),
     );
     for name in coord.metrics.series_names() {
         if let Some(s) = coord.metrics.summary(&name) {

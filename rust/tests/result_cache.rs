@@ -167,6 +167,7 @@ fn cached_and_fresh_outputs_are_bit_identical_across_shards() {
             shards: 2,
             fusion_window: Duration::from_millis(2),
             max_batch: 16,
+            ..ShardConfig::default()
         },
     )
     .serve(req_rx, res_tx);

@@ -1,0 +1,277 @@
+//! Fault-tolerance integration tests (`coordinator::faults` + the
+//! serve path): deadlines fail fast without executing, overload sheds
+//! typed failures while answering everything, engine panics are
+//! isolated behind the circuit breaker, malformed graphs are rejected
+//! before publish — and a chaos test that holds the serving contract
+//! (every request answered exactly once, no worker dies, post-chaos
+//! results bit-identical to a fresh coordinator) under injected
+//! panics, stalls and 4× overload at once.
+
+use pasgal::coordinator::faults::{self, malformed};
+use pasgal::coordinator::{
+    Coordinator, FailKind, FaultPlan, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
+};
+use pasgal::algo::api::ParseArgs;
+use pasgal::graph::gen;
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pasgal::V;
+
+/// Registry-native request (label or alias, τ 64, block 64).
+fn req(id: u64, graph: &str, algo: &str, source: V) -> JobRequest {
+    JobRequest::parse(id, graph, algo, &ParseArgs { tau: 64, block: 64 })
+        .unwrap()
+        .with_source(source)
+}
+
+/// Run `reqs` through a `ShardServer` (all requests queued before the
+/// router starts) and return results keyed by id, with a per-id
+/// answer count so duplicated answers are caught, not masked.
+fn serve_all(
+    coord: &Arc<Coordinator>,
+    config: ShardConfig,
+    reqs: &[JobRequest],
+) -> (HashMap<u64, JobResult>, HashMap<u64, usize>) {
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    for r in reqs {
+        req_tx.send(r.clone()).unwrap();
+    }
+    drop(req_tx);
+    // serve() joins every worker (panicking workers would fail the
+    // join), so returning at all proves no shard worker died.
+    ShardServer::new(Arc::clone(coord), config).serve(req_rx, res_tx);
+    let mut results = HashMap::new();
+    let mut counts: HashMap<u64, usize> = HashMap::new();
+    for r in res_rx.iter() {
+        *counts.entry(r.id).or_default() += 1;
+        results.insert(r.id, r);
+    }
+    (results, counts)
+}
+
+fn fail_kind(r: &JobResult) -> Option<FailKind> {
+    match &r.output {
+        JobOutput::Failed { kind, .. } => Some(*kind),
+        _ => None,
+    }
+}
+
+#[test]
+fn expired_requests_fail_fast_without_executing() {
+    faults::silence_injected_panics();
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("road", gen::road(8, 8, 1));
+    // Armed to panic on *every* execution: if a dead request ever
+    // reached an engine, the counters below would show it.
+    coord.set_faults(Arc::new(FaultPlan::new().panic_on(None, None, 0, u64::MAX)));
+    let reqs: Vec<JobRequest> = (0..5u64)
+        .map(|i| req(i, "road", "bfs-vgc", i as V).with_budget(Duration::ZERO))
+        .collect();
+    let (results, counts) = serve_all(&coord, ShardConfig::default(), &reqs);
+    assert_eq!(results.len(), 5, "every dead request still answered");
+    assert!(counts.values().all(|&c| c == 1));
+    for r in results.values() {
+        assert_eq!(fail_kind(r), Some(FailKind::DeadlineExceeded), "id {}", r.id);
+    }
+    assert_eq!(coord.metrics.counter("deadline_exceeded"), 5);
+    assert_eq!(coord.metrics.counter("engine_panics"), 0, "never executed");
+    assert_eq!(coord.metrics.counter("jobs_executed"), 0);
+}
+
+#[test]
+fn overload_sheds_typed_and_answers_every_request() {
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("road", gen::road(8, 8, 1));
+    // Slow every execution so the single shard cannot drain its
+    // backlog while the router is pouring 64 pre-queued requests in.
+    coord.set_faults(Arc::new(FaultPlan::new().delay(
+        None,
+        None,
+        Duration::from_millis(2),
+    )));
+    let reqs: Vec<JobRequest> = (0..64u64)
+        .map(|i| req(i, "road", "bfs-frontier", (i % 5) as V))
+        .collect();
+    let (results, counts) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 1,
+            fusion_window: Duration::ZERO,
+            max_batch: 1,
+            inbox_cap: 4,
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 64, "shed or served, every request answered");
+    assert!(counts.values().all(|&c| c == 1), "exactly once each");
+    let shed = coord.metrics.counter("shed");
+    assert!(shed > 0, "64 pre-queued vs cap 4 must shed");
+    let typed_shed = results
+        .values()
+        .filter(|r| fail_kind(r) == Some(FailKind::Overloaded))
+        .count();
+    assert_eq!(typed_shed as u64, shed, "every shed answer is typed Overloaded");
+    let served = results.values().filter(|r| fail_kind(r).is_none()).count();
+    assert_eq!(served as u64 + shed, 64);
+    assert!(served > 0, "the worker still serves what it admitted");
+}
+
+#[test]
+fn panics_are_isolated_and_the_breaker_resets_on_republish() {
+    faults::silence_injected_panics();
+    let coord = Coordinator::new();
+    coord.load_graph("g", gen::road(8, 8, 3));
+    // Panic budget sized exactly to the breaker threshold: once the
+    // breaker opens, nothing consumes hits, so after the republish the
+    // same spec runs clean.
+    coord.set_faults(Arc::new(FaultPlan::new().panic_on(
+        Some("g"),
+        Some("bfs-frontier"),
+        0,
+        faults::BREAKER_TRIP as u64,
+    )));
+    for i in 0..faults::BREAKER_TRIP as u64 {
+        let err = coord.execute(&req(i, "g", "bfs-frontier", 0)).unwrap_err();
+        assert_eq!(
+            FailKind::classify(&err.to_string()),
+            FailKind::EnginePanic,
+            "panic {i} is typed"
+        );
+    }
+    assert_eq!(coord.metrics.counter("engine_panics"), faults::BREAKER_TRIP as u64);
+    assert_eq!(coord.metrics.counter("breaker_trips"), 1);
+    // Open: fast-fail without executing.
+    let err = coord.execute(&req(7, "g", "bfs-frontier", 0)).unwrap_err();
+    assert!(err.to_string().contains("breaker open"));
+    assert_eq!(coord.metrics.counter("breaker_open"), 1);
+    // Healthy specs on the same graph keep serving throughout.
+    coord.execute(&req(8, "g", "bfs-vgc", 0)).unwrap();
+    // Republish the graph: version moves, breaker resets, spec serves.
+    coord.load_graph("g", gen::road(8, 8, 3));
+    let ok = coord.execute(&req(9, "g", "bfs-frontier", 0)).unwrap();
+    assert!(matches!(ok.output, JobOutput::Bfs { .. }));
+    assert_eq!(
+        coord.metrics.counter("engine_panics"),
+        faults::BREAKER_TRIP as u64,
+        "no further panics after the budget"
+    );
+}
+
+#[test]
+fn malformed_graphs_are_rejected_before_publish() {
+    let coord = Coordinator::new();
+    // A healthy graph under the name, first: a later bad republish
+    // must not disturb it.
+    coord.load_graph("g", gen::road(6, 6, 1));
+    let version_before = coord.graph("g").unwrap().version;
+    let cases: Vec<(&str, pasgal::graph::Graph)> = vec![
+        ("non-monotone offsets", malformed::non_monotone_offsets()),
+        ("target out of range", malformed::target_out_of_range()),
+        ("offset overflow", malformed::offset_overflow()),
+        ("weights length mismatch", malformed::weights_length_mismatch()),
+    ];
+    for (what, g) in cases {
+        let err = coord.try_load_graph("g", g).unwrap_err();
+        assert_eq!(
+            FailKind::classify(&err.to_string()),
+            FailKind::InvalidGraph,
+            "{what} must be typed InvalidGraph"
+        );
+    }
+    let lg = coord.graph("g").expect("healthy graph still published");
+    assert_eq!(lg.version, version_before, "no republish happened");
+    // And the healthy graph still answers.
+    coord.execute(&req(0, "g", "cc", 0)).unwrap();
+    // A fresh valid graph under the same name loads fine afterwards.
+    coord.try_load_graph("g", gen::road(7, 7, 2)).unwrap();
+    assert!(coord.graph("g").unwrap().version > version_before);
+}
+
+/// The chaos test: panics, stalls and overload injected at once, on a
+/// sharded server, with deadline-carrying requests mixed in. The
+/// serving contract must hold: every request answered exactly once,
+/// serve() returns (no worker died), and after the chaos a healthy
+/// graph answers bit-identically to a coordinator that never saw any
+/// of it.
+#[test]
+fn chaos_panics_stalls_and_overload_keep_the_contract() {
+    faults::silence_injected_panics();
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("healthy", gen::road(10, 10, 0xA));
+    coord.load_graph("flaky", gen::road(8, 8, 0xB));
+    coord.load_graph("slow", gen::social(9, 8, 0xC));
+    coord.set_faults(Arc::new(
+        FaultPlan::new()
+            // Every engine run on the flaky graph dies.
+            .panic_on(Some("flaky"), None, 0, u64::MAX)
+            // Every engine run on the slow graph stalls 2ms.
+            .delay(Some("slow"), None, Duration::from_millis(2)),
+    ));
+    let mut reqs: Vec<JobRequest> = Vec::new();
+    // Flaky head: the first executions panic before anything else can
+    // mask them.
+    for i in 0..8u64 {
+        reqs.push(req(i, "flaky", "bfs-frontier", (i % 3) as V));
+    }
+    // Already-dead requests sprinkled at the head of the stream.
+    for i in 8..16u64 {
+        reqs.push(req(i, "healthy", "bfs-vgc", 0).with_budget(Duration::ZERO));
+    }
+    // The overload wave: ~4× more slow-graph work than a cap-8 inbox
+    // holds, plus healthy traffic interleaved.
+    for i in 16..300u64 {
+        let r = match i % 4 {
+            0 => req(i, "slow", "bfs-frontier", (i % 7) as V),
+            1 => req(i, "slow", "sssp-rho", (i % 7) as V),
+            2 => req(i, "healthy", "bfs-vgc", (i % 11) as V),
+            _ => req(i, "flaky", "cc", 0),
+        };
+        reqs.push(r);
+    }
+    let (results, counts) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::from_micros(200),
+            max_batch: 8,
+            inbox_cap: 8,
+        },
+        &reqs,
+    );
+    // Exactly-once: all 300 ids, one answer each.
+    assert_eq!(results.len(), reqs.len(), "every request answered");
+    assert!(
+        counts.values().all(|&c| c == 1),
+        "no request answered twice"
+    );
+    for r in &reqs {
+        assert!(results.contains_key(&r.id), "id {} missing", r.id);
+    }
+    // Each injected failure mode actually fired.
+    assert!(coord.metrics.counter("engine_panics") >= 1, "panics fired");
+    assert!(coord.metrics.counter("shed") >= 1, "overload shed fired");
+    assert!(
+        coord.metrics.counter("deadline_exceeded") >= 1,
+        "deadlines fired"
+    );
+    // Failures carry machine-matchable kinds, not just strings.
+    assert!(results
+        .values()
+        .any(|r| fail_kind(r) == Some(FailKind::EnginePanic)));
+    // Post-chaos: the same coordinator, faults cleared, answers the
+    // healthy graph bit-identically to a coordinator that never saw
+    // any chaos.
+    coord.clear_faults();
+    let fresh = Coordinator::new();
+    fresh.load_graph("healthy", gen::road(10, 10, 0xA));
+    for (i, algo) in ["bfs-vgc", "sssp-rho", "cc", "kcore"].iter().enumerate() {
+        let id = 1000 + i as u64;
+        let after = coord.execute(&req(id, "healthy", algo, 3)).unwrap();
+        let want = fresh.execute(&req(id, "healthy", algo, 3)).unwrap();
+        assert_eq!(after.output, want.output, "{algo} bit-identical post-chaos");
+    }
+}

@@ -190,6 +190,7 @@ fn shard_server_answers_cc_and_kcore_with_correct_summaries() {
             shards: 2,
             fusion_window: Duration::from_millis(5),
             max_batch: 64,
+            ..ShardConfig::default()
         },
         &reqs,
     );
@@ -246,6 +247,7 @@ fn non_fusable_new_specs_fall_through_the_window_immediately() {
             shards: 2,
             fusion_window: Duration::from_secs(30),
             max_batch: 4,
+            ..ShardConfig::default()
         },
         &reqs,
     );

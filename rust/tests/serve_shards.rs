@@ -62,6 +62,7 @@ fn same_graph_requests_land_on_one_shard() {
             shards: 3,
             fusion_window: Duration::from_millis(5),
             max_batch: 64,
+            ..ShardConfig::default()
         },
         &reqs,
     );
@@ -102,6 +103,7 @@ fn per_shard_metrics_sum_to_global_counters() {
             shards: 2,
             fusion_window: Duration::from_millis(5),
             max_batch: 64,
+            ..ShardConfig::default()
         },
         &reqs,
     );
@@ -168,6 +170,7 @@ fn windowed_fusion_is_bit_identical_to_solo_execution() {
             shards: 2,
             fusion_window: Duration::from_millis(10),
             max_batch: 64,
+            ..ShardConfig::default()
         },
         &reqs,
     );
@@ -203,6 +206,7 @@ fn non_fusable_requests_fall_through_the_window() {
             shards: 2,
             fusion_window: Duration::from_secs(30),
             max_batch: 4,
+            ..ShardConfig::default()
         },
         &reqs,
     );
@@ -232,6 +236,7 @@ fn shard_shutdown_answers_everything_queued() {
             shards: 2,
             fusion_window: Duration::from_secs(30),
             max_batch: 64,
+            ..ShardConfig::default()
         },
         &reqs,
     );
@@ -262,17 +267,18 @@ fn failed_requests_are_answered_with_their_ids() {
             shards: 2,
             fusion_window: Duration::from_millis(5),
             max_batch: 64,
+            ..ShardConfig::default()
         },
         &reqs,
     );
     assert_eq!(results.len(), 3, "failures answered, not dropped");
     assert!(matches!(results[&0].output, JobOutput::Bfs { .. }));
     match &results[&1].output {
-        JobOutput::Failed { error } => assert!(error.contains("unknown graph")),
+        JobOutput::Failed { error, .. } => assert!(error.contains("unknown graph")),
         other => panic!("expected Failed, got {other:?}"),
     }
     match &results[&2].output {
-        JobOutput::Failed { error } => assert!(error.contains("out of range")),
+        JobOutput::Failed { error, .. } => assert!(error.contains("out of range")),
         other => panic!("expected Failed, got {other:?}"),
     }
     let errors: u64 = per_shard.iter().map(|m| m.counter("errors")).sum();
@@ -304,6 +310,7 @@ fn graphs_published_mid_serve_become_visible() {
                     shards: 2,
                     fusion_window: Duration::ZERO,
                     max_batch: 8,
+                    ..ShardConfig::default()
                 },
             )
             .serve(req_rx, res_tx)
