@@ -59,6 +59,7 @@ fn run_config(reqs: &[JobRequest], delay: Duration, inbox_cap: usize) -> RunStat
         fusion_window: Duration::ZERO,
         max_batch: 1, // one request per dispatch: queue position is visible
         inbox_cap,
+        ..ShardConfig::default()
     };
     let (req_tx, req_rx) = channel();
     let (res_tx, res_rx) = channel();

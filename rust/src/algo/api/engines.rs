@@ -16,6 +16,7 @@
 //! [`AlgoSpec`]: super::AlgoSpec
 
 use super::{BatchEngine, EngineCtx, Params, QueryOutput};
+use crate::algo::cancel::CancelToken;
 use crate::algo::workspace::QueryWorkspace;
 use crate::algo::{bcc, bfs, cc, kcore, multi, scc, sssp, UNREACHED};
 use crate::coordinator::dense::DenseBlock;
@@ -121,8 +122,14 @@ pub(super) fn bfs_vgc_traced(lg: &LoadedGraph, p: Params, src: V, trace: &mut Al
     bfs::vgc_bfs(&lg.graph, src, p.tau, Some(trace));
 }
 
-pub(super) fn bfs_vgc_batch_run(lg: &LoadedGraph, p: Params, seeds: &[V], ws: &mut QueryWorkspace) {
-    multi::multi_bfs_vgc_ws(&lg.graph, seeds, p.tau, None, &mut ws.multi_bfs);
+pub(super) fn bfs_vgc_batch_run(
+    lg: &LoadedGraph,
+    p: Params,
+    seeds: &[V],
+    ws: &mut QueryWorkspace,
+    cancel: Option<&CancelToken>,
+) {
+    multi::multi_bfs_vgc_ws_cancel(&lg.graph, seeds, p.tau, None, &mut ws.multi_bfs, cancel);
 }
 
 pub(super) fn bfs_batch_demux(ws: &mut QueryWorkspace, lane: usize, n: usize) -> QueryOutput {
@@ -171,8 +178,16 @@ pub(super) fn bfs_diropt_batch_run(
     _p: Params,
     seeds: &[V],
     ws: &mut QueryWorkspace,
+    cancel: Option<&CancelToken>,
 ) {
-    multi::multi_bfs_diropt_ws(&lg.graph, Some(lg.transpose()), seeds, None, &mut ws.multi_bfs);
+    multi::multi_bfs_diropt_ws_cancel(
+        &lg.graph,
+        Some(lg.transpose()),
+        seeds,
+        None,
+        &mut ws.multi_bfs,
+        cancel,
+    );
 }
 
 pub(super) static BFS_DIROPT_BATCH: BatchEngine = BatchEngine {
@@ -191,7 +206,15 @@ pub(super) fn scc_vgc_solo(
     _src: V,
     ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
-    scc::vgc_scc_ws(&lg.graph, Some(lg.transpose()), p.tau, 42, None, &mut ws.scc);
+    scc::vgc_scc_ws_cancel(
+        &lg.graph,
+        Some(lg.transpose()),
+        p.tau,
+        42,
+        None,
+        &mut ws.scc,
+        _cx.cancel,
+    );
     Ok(summarize_scc(ws.scc.labels()))
 }
 
@@ -251,7 +274,7 @@ pub(super) fn sssp_rho_solo(
     ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
     let g = &*lg.graph;
-    sssp::rho_stepping_ws(g, src, p.tau, None, &mut ws.sssp);
+    sssp::rho_stepping_ws_cancel(g, src, p.tau, None, &mut ws.sssp, _cx.cancel);
     ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
     Ok(summarize_sssp(&ws.out_f32))
 }
@@ -265,8 +288,9 @@ pub(super) fn sssp_rho_batch_run(
     p: Params,
     seeds: &[V],
     ws: &mut QueryWorkspace,
+    cancel: Option<&CancelToken>,
 ) {
-    multi::multi_rho_ws(&lg.graph, seeds, p.tau, None, &mut ws.multi_sssp);
+    multi::multi_rho_ws_cancel(&lg.graph, seeds, p.tau, None, &mut ws.multi_sssp, cancel);
 }
 
 pub(super) fn sssp_batch_demux(ws: &mut QueryWorkspace, lane: usize, n: usize) -> QueryOutput {
@@ -287,7 +311,7 @@ pub(super) fn sssp_delta_solo(
     ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
     let g = &*lg.graph;
-    sssp::delta_stepping_ws(g, src, None, None, &mut ws.sssp);
+    sssp::delta_stepping_ws_cancel(g, src, None, None, &mut ws.sssp, _cx.cancel);
     ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
     Ok(summarize_sssp(&ws.out_f32))
 }

@@ -56,6 +56,7 @@ pub mod registry;
 
 pub use registry::{all, find};
 
+use crate::algo::cancel::{Cancel, CancelToken};
 use crate::algo::workspace::QueryWorkspace;
 use crate::coordinator::directory::LoadedGraph;
 use crate::coordinator::faults::FailKind;
@@ -115,11 +116,17 @@ impl Default for ParseArgs {
 
 /// Execution-environment context handed to solo engines: everything a
 /// spec may need beyond the graph and its workspace. Today that is
-/// the optional dense engine; future backends slot in here without
-/// touching any engine signature.
+/// the optional dense engine and the cooperative-cancellation token;
+/// future backends slot in here without touching any engine signature.
 pub struct EngineCtx<'a> {
     /// The AOT dense-kernel engine, when one is attached.
     pub engine: Option<&'a EngineHandle>,
+    /// Cooperative-cancellation token for this query, when the caller
+    /// enforces a deadline or can abandon the query. Engines that
+    /// support cancellation poll it once per frontier round / bucket
+    /// epoch (never per edge) and exit early leaving partial state the
+    /// caller must not summarize. `None` = run to completion.
+    pub cancel: Cancel<'a>,
 }
 
 /// Compact typed algorithm output (the full vectors stay with the
@@ -170,7 +177,10 @@ pub type TracedFn = fn(&LoadedGraph, Params, V, &mut AlgoTrace);
 /// match arms in the coordinator.
 pub struct BatchEngine {
     /// One fused walk over all `seeds` (≤ [`crate::algo::multi::MAX_LANES`]).
-    pub run: fn(&LoadedGraph, Params, &[V], &mut QueryWorkspace),
+    /// The token (armed with the *tightest* lane deadline by the
+    /// serving layer) is polled once per round: a cancelled walk exits
+    /// early and the caller re-walks the still-live lanes.
+    pub run: fn(&LoadedGraph, Params, &[V], &mut QueryWorkspace, Option<&CancelToken>),
     /// Summarize one lane of the walk just run (`lane < seeds.len()`,
     /// `n` = vertex count of the graph walked).
     pub demux: fn(&mut QueryWorkspace, usize, usize) -> QueryOutput,

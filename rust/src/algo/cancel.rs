@@ -1,0 +1,205 @@
+//! Cooperative cancellation: one shared `AtomicU64` per worker.
+//!
+//! A [`CancelToken`] is a deadline-or-flag the serving layer threads
+//! from a request into the engine inner loops. Engines poll it **once
+//! per frontier round / bucket epoch** — never per edge — so the check
+//! costs one atomic load plus (when a deadline is armed) one
+//! monotonic-clock read per round, and an expired or abandoned query
+//! releases its shard within one round instead of running to fixpoint.
+//!
+//! Encoding of the single `AtomicU64`:
+//!
+//! * `0` — inert: never expires (the default, and what `_ws` wrappers
+//!   without a token observe).
+//! * `1` — hard-cancelled: the owner (a shard-worker watchdog, or an
+//!   explicit [`CancelToken::cancel`]) condemned the work. Sticky: a
+//!   [`CancelToken::rearm`] never overwrites it, so a condemned worker
+//!   cannot accidentally resurrect its token for the next request.
+//! * anything else — an absolute deadline, in nanoseconds since a
+//!   process-wide anchor instant (clamped to ≥ 2 so it can never
+//!   collide with the two flag values).
+//!
+//! Engines observe cancellation via [`cancelled`] and must exit their
+//! round loop with `break`, **not** an early `return`: the `_ws` entry
+//! points restore taken workspace buffers after the loop, and skipping
+//! the restores would leak the buffers and leave a pooled
+//! [`crate::algo::QueryWorkspace`] cold (correctness is unaffected —
+//! epoch stamps rebind every array per query — but the zero-allocation
+//! warm path would silently regress). A cancelled engine leaves
+//! partial per-lane state behind; the serving layer never summarizes
+//! it (the post-run token check in `ExecCore::run_spec` turns the
+//! partial result into a typed failure).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Stable message prefix for deadline expiry — `coordinator::faults`
+/// aliases it so `FailKind::classify` recovers the kind from the
+/// message alone.
+pub const MSG_DEADLINE: &str = "deadline exceeded";
+
+/// Stable message prefix for watchdog-condemned (hard-cancelled) work.
+pub const MSG_STALLED: &str = "engine stalled";
+
+const INERT: u64 = 0;
+const CONDEMNED: u64 = 1;
+
+/// Process-wide clock anchor: deadlines are encoded as nanoseconds
+/// since this instant, so one `AtomicU64` holds them.
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process anchor (monotone). Also what the
+/// shard watchdog stamps worker heartbeats with.
+pub fn now_nanos() -> u64 {
+    anchor().elapsed().as_nanos() as u64
+}
+
+fn encode_deadline(deadline: Instant) -> u64 {
+    // Saturates to the anchor for deadlines in the past: encodes as a
+    // tiny (already-expired) value, which is exactly right.
+    (deadline.saturating_duration_since(anchor()).as_nanos() as u64).max(2)
+}
+
+/// Shared deadline-or-flag checked cooperatively by engine loops (see
+/// module docs for the encoding).
+#[derive(Debug, Default)]
+pub struct CancelToken {
+    state: AtomicU64,
+}
+
+impl CancelToken {
+    /// An inert token: never expires until armed or cancelled.
+    pub const fn new() -> Self {
+        CancelToken {
+            state: AtomicU64::new(INERT),
+        }
+    }
+
+    /// A token that expires at `deadline`.
+    pub fn with_deadline(deadline: Instant) -> Self {
+        let t = CancelToken::new();
+        t.rearm(Some(deadline));
+        t
+    }
+
+    /// Hard-cancel: every subsequent [`CancelToken::is_cancelled`] is
+    /// true and no [`CancelToken::rearm`] can undo it. The shard
+    /// watchdog calls this on a condemned worker's token.
+    pub fn cancel(&self) {
+        self.state.store(CONDEMNED, Ordering::Release);
+    }
+
+    /// Re-arm for the next piece of work: set the deadline (`None`
+    /// disarms back to inert). Returns `false` — leaving the token
+    /// untouched — if the token is hard-cancelled, so a condemned
+    /// worker discovers its state on the next dispatch instead of
+    /// resurrecting the token.
+    pub fn rearm(&self, deadline: Option<Instant>) -> bool {
+        let new = deadline.map_or(INERT, encode_deadline);
+        let mut cur = self.state.load(Ordering::Acquire);
+        loop {
+            if cur == CONDEMNED {
+                return false;
+            }
+            match self
+                .state
+                .compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire)
+            {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// True once the deadline passed or the token was hard-cancelled.
+    /// One atomic load; the clock is read only when a deadline is
+    /// armed.
+    pub fn is_cancelled(&self) -> bool {
+        match self.state.load(Ordering::Acquire) {
+            INERT => false,
+            CONDEMNED => true,
+            d => now_nanos() >= d,
+        }
+    }
+
+    /// True only for a hard cancel ([`CancelToken::cancel`]), never
+    /// for mere deadline expiry — what distinguishes
+    /// `Failed { EngineStalled }` from `Failed { DeadlineExceeded }`.
+    pub fn is_hard_cancelled(&self) -> bool {
+        self.state.load(Ordering::Acquire) == CONDEMNED
+    }
+}
+
+/// The optional borrow engines thread through their loops.
+pub type Cancel<'a> = Option<&'a CancelToken>;
+
+/// `true` iff a token is present and cancelled — the once-per-round
+/// check engine loops make. `None` (no token) never cancels, so the
+/// classic `_ws` wrappers cost one branch per round.
+#[inline]
+pub fn cancelled(c: Cancel<'_>) -> bool {
+    match c {
+        Some(t) => t.is_cancelled(),
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn inert_token_never_cancels() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        assert!(!t.is_hard_cancelled());
+        assert!(!cancelled(Some(&t)));
+        assert!(!cancelled(None));
+    }
+
+    #[test]
+    fn deadlines_expire_in_order() {
+        let t = CancelToken::with_deadline(Instant::now() + Duration::from_secs(3600));
+        assert!(!t.is_cancelled(), "distant deadline still live");
+        assert!(t.rearm(Some(Instant::now())), "re-arming a live token works");
+        assert!(t.is_cancelled(), "past deadline is expired");
+        assert!(!t.is_hard_cancelled(), "expiry is not a hard cancel");
+        assert!(t.rearm(None), "disarm works");
+        assert!(!t.is_cancelled(), "disarmed token is inert again");
+    }
+
+    #[test]
+    fn hard_cancel_is_sticky() {
+        let t = CancelToken::new();
+        t.cancel();
+        assert!(t.is_cancelled());
+        assert!(t.is_hard_cancelled());
+        assert!(
+            !t.rearm(Some(Instant::now() + Duration::from_secs(60))),
+            "rearm must refuse to resurrect a condemned token"
+        );
+        assert!(!t.rearm(None));
+        assert!(t.is_hard_cancelled(), "still condemned after rearm attempts");
+    }
+
+    #[test]
+    fn already_past_deadlines_encode_as_expired() {
+        // A deadline before the anchor (or simply in the past) must
+        // read as expired, not wrap into the flag values.
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_secs(5));
+        assert!(t.is_cancelled());
+        assert!(!t.is_hard_cancelled());
+    }
+
+    #[test]
+    fn now_nanos_is_monotone() {
+        let a = now_nanos();
+        let b = now_nanos();
+        assert!(b >= a);
+    }
+}

@@ -24,10 +24,16 @@
 //! parameter parsing, solo/batch/traced engines), so every front end
 //! — coordinator, sharded server, CLI, benches — dispatches through
 //! one table instead of per-algorithm match arms.
+//!
+//! [`cancel`] is the cooperative-cancellation substrate: engines with
+//! `_ws_cancel` entry points poll a shared [`cancel::CancelToken`]
+//! once per frontier round / bucket epoch, so expired or condemned
+//! queries release their worker within one round.
 
 pub mod api;
 pub mod bcc;
 pub mod bfs;
+pub mod cancel;
 pub mod cc;
 pub mod kcore;
 pub mod multi;
@@ -36,6 +42,7 @@ pub mod sssp;
 pub mod workspace;
 
 pub use api::{AlgoSpec, Params, ParseArgs, Query, QueryOutput};
+pub use cancel::{Cancel, CancelToken};
 pub use workspace::{
     BfsWorkspace, CcWorkspace, KcoreWorkspace, MultiBfsWorkspace, MultiSsspWorkspace,
     QueryWorkspace, SccWorkspace, SsspWorkspace, WorkspacePool,

@@ -39,6 +39,7 @@
 use super::mask::{
     for_each_lane, full_mask, lane_fifo_search, reset_mask_state, MaskFrontier, MAX_LANES,
 };
+use crate::algo::cancel::{cancelled, Cancel};
 use crate::algo::workspace::MultiBfsWorkspace;
 use crate::algo::UNREACHED;
 use crate::graph::Graph;
@@ -89,8 +90,23 @@ pub fn multi_bfs_vgc_ws(
     g: &Graph,
     seeds: &[V],
     tau: usize,
+    rec: Recorder,
+    ws: &mut MultiBfsWorkspace,
+) {
+    multi_bfs_vgc_ws_cancel(g, seeds, tau, rec, ws, None);
+}
+
+/// [`multi_bfs_vgc_ws`] with a cooperative-cancellation token: the
+/// round loop polls `cancel` once per frontier round (never per edge)
+/// and exits early — leaving partial lane-striped state the serving
+/// layer must not summarize — when it fires.
+pub fn multi_bfs_vgc_ws_cancel(
+    g: &Graph,
+    seeds: &[V],
+    tau: usize,
     mut rec: Recorder,
     ws: &mut MultiBfsWorkspace,
+    cancel: Cancel<'_>,
 ) {
     let lanes = check_batch(g, seeds);
     let n = g.n();
@@ -125,6 +141,11 @@ pub fn multi_bfs_vgc_ws(
     let mut dmins = std::mem::take(&mut ws.offs);
 
     while !frontier.is_empty() {
+        // Cancellation point: break (never return) so the workspace
+        // restores below still run and the pooled buffers stay warm.
+        if cancelled(cancel) {
+            break;
+        }
         // Re-align the hop window to the smallest unexpanded distance
         // still pending (lanes run at different phases; the minimum is
         // the wavefront).
@@ -231,8 +252,21 @@ pub fn multi_bfs_diropt_ws(
     g: &Graph,
     gt: Option<&Graph>,
     seeds: &[V],
+    rec: Recorder,
+    ws: &mut MultiBfsWorkspace,
+) {
+    multi_bfs_diropt_ws_cancel(g, gt, seeds, rec, ws, None);
+}
+
+/// [`multi_bfs_diropt_ws`] with a cooperative-cancellation token,
+/// polled once per level (see [`multi_bfs_vgc_ws_cancel`]).
+pub fn multi_bfs_diropt_ws_cancel(
+    g: &Graph,
+    gt: Option<&Graph>,
+    seeds: &[V],
     mut rec: Recorder,
     ws: &mut MultiBfsWorkspace,
+    cancel: Cancel<'_>,
 ) {
     let lanes = check_batch(g, seeds);
     let n = g.n();
@@ -269,6 +303,11 @@ pub fn multi_bfs_diropt_ws(
 
     let mut level: u32 = 0;
     while !frontier.is_empty() {
+        // Cancellation point: break, not return — the restores below
+        // must run (see `crate::algo::cancel`).
+        if cancelled(cancel) {
+            break;
+        }
         let frontier_edges: usize = frontier.iter().map(|&v| g.degree(v)).sum();
         let dense = gt.is_some() && frontier_edges > m / ALPHA && frontier.len() > n / (BETA * 4);
         next_mask.advance_epoch();

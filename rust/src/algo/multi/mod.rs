@@ -31,11 +31,14 @@ pub mod mask;
 pub mod reach;
 pub mod sssp;
 
-pub use bfs::{multi_bfs_diropt, multi_bfs_diropt_ws, multi_bfs_vgc, multi_bfs_vgc_ws};
+pub use bfs::{
+    multi_bfs_diropt, multi_bfs_diropt_ws, multi_bfs_diropt_ws_cancel, multi_bfs_vgc,
+    multi_bfs_vgc_ws, multi_bfs_vgc_ws_cancel,
+};
 pub use mask::{
     for_each_lane, full_mask, lane_fifo_search, reset_mask_state, MaskFrontier, MAX_LANES,
 };
 pub use reach::{
     bfs_multi_reach, bfs_multi_reach_ws, vgc_multi_reach, vgc_multi_reach_ws, ReachCtx, UNSET,
 };
-pub use sssp::{multi_rho, multi_rho_ws};
+pub use sssp::{multi_rho, multi_rho_ws, multi_rho_ws_cancel};

@@ -27,6 +27,7 @@
 //! [`super::sssp`].
 
 use super::mask::{reset_mask_state, MaskFrontier, MAX_LANES};
+use crate::algo::cancel::{cancelled, Cancel};
 use crate::graph::Graph;
 use crate::hashbag::HashBag;
 use crate::parallel::vgc::local_search;
@@ -99,6 +100,7 @@ pub fn bfs_multi_reach(g: &Graph, seeds: &[V], ctx: &ReachCtx, rec: Recorder) ->
         &mut pending,
         &mut bag,
         &mut frontier,
+        None,
     );
     masks.export(g.n())
 }
@@ -106,6 +108,10 @@ pub fn bfs_multi_reach(g: &Graph, seeds: &[V], ctx: &ReachCtx, rec: Recorder) ->
 /// Round-synchronous multi-source reachability into a reusable
 /// workspace: results are left in `masks` (read via
 /// [`StampedU64::get`]); a warm workspace allocates no O(n) state.
+///
+/// `cancel` is polled once per frontier round (never per edge): an
+/// expired or condemned query abandons the search within one round,
+/// leaving partial masks the caller must not summarize.
 #[allow(clippy::too_many_arguments)]
 pub fn bfs_multi_reach_ws(
     g: &Graph,
@@ -116,6 +122,7 @@ pub fn bfs_multi_reach_ws(
     pending: &mut StampedU32,
     bag: &mut HashBag,
     frontier: &mut Vec<V>,
+    cancel: Cancel<'_>,
 ) {
     let n = g.n();
     seed_masks_ws(n, seeds, ctx, masks, pending, bag, frontier);
@@ -125,6 +132,9 @@ pub fn bfs_multi_reach_ws(
         bag,
     };
     while !frontier.is_empty() {
+        if cancelled(cancel) {
+            break;
+        }
         let ntasks = frontier.len();
         let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
         let record = rec.is_some();
@@ -182,12 +192,18 @@ pub fn vgc_multi_reach(
         &mut pending,
         &mut bag,
         &mut frontier,
+        None,
     );
     masks.export(g.n())
 }
 
 /// VGC multi-source reachability into a reusable workspace: the PASGAL
 /// engine, allocation-free when warm.
+///
+/// `cancel` is polled once per bag-drain round (never per edge or per
+/// τ-budget task): an expired or condemned query abandons the search
+/// within one round, leaving partial masks the caller must not
+/// summarize.
 #[allow(clippy::too_many_arguments)]
 pub fn vgc_multi_reach_ws(
     g: &Graph,
@@ -199,6 +215,7 @@ pub fn vgc_multi_reach_ws(
     pending: &mut StampedU32,
     bag: &mut HashBag,
     frontier: &mut Vec<V>,
+    cancel: Cancel<'_>,
 ) {
     let n = g.n();
     let tau = tau.max(1);
@@ -209,6 +226,9 @@ pub fn vgc_multi_reach_ws(
         bag,
     };
     while !frontier.is_empty() {
+        if cancelled(cancel) {
+            break;
+        }
         let ntasks = frontier.len().div_ceil(SEEDS_PER_TASK);
         let slots = RoundSlots::new(if rec.is_some() { ntasks } else { 0 });
         let record = rec.is_some();
@@ -394,6 +414,7 @@ mod tests {
                 &mut pending,
                 &mut bag,
                 &mut frontier,
+                None,
             );
             let fresh = vgc_multi_reach(&g, &seeds, &ctx, 16, None);
             assert_eq!(masks.export(g.n()), fresh, "round {round}");

@@ -21,6 +21,7 @@
 //! [`StampedU32`]: crate::parallel::StampedU32
 
 use super::mask::{for_each_lane, lane_fifo_search, reset_mask_state, MaskFrontier, MAX_LANES};
+use crate::algo::cancel::{cancelled, Cancel};
 use crate::algo::workspace::MultiSsspWorkspace;
 use crate::graph::Graph;
 use crate::parallel::vgc::SearchStats;
@@ -50,8 +51,23 @@ pub fn multi_rho_ws(
     g: &Graph,
     seeds: &[V],
     tau: usize,
+    rec: Recorder,
+    ws: &mut MultiSsspWorkspace,
+) {
+    multi_rho_ws_cancel(g, seeds, tau, rec, ws, None);
+}
+
+/// [`multi_rho_ws`] with a cooperative-cancellation token, polled once
+/// per θ-threshold round (never per edge): an expired or condemned
+/// query abandons the walk within one round, leaving partial
+/// lane-striped state the serving layer must not summarize.
+pub fn multi_rho_ws_cancel(
+    g: &Graph,
+    seeds: &[V],
+    tau: usize,
     mut rec: Recorder,
     ws: &mut MultiSsspWorkspace,
+    cancel: Cancel<'_>,
 ) {
     let lanes = seeds.len();
     assert!(
@@ -115,6 +131,11 @@ pub fn multi_rho_ws(
     };
 
     while !pending.is_empty() {
+        // Cancellation point: break (never return) so the workspace
+        // restores below still run and the pooled buffers stay warm.
+        if cancelled(cancel) {
+            break;
+        }
         // Threshold: the smaller of (a) the ~RHO-th smallest pending
         // distance and (b) min pending distance + the width cap —
         // one sample pass shared by all lanes.

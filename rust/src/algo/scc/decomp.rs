@@ -12,6 +12,7 @@
 //! one decomposition stopped reallocating masks entirely.
 
 use super::reach::{bfs_multi_reach_ws, vgc_multi_reach_ws, ReachCtx, UNSET};
+use crate::algo::cancel::{cancelled, Cancel};
 use crate::algo::workspace::SccWorkspace;
 use crate::graph::Graph;
 use crate::hashbag::HashBag;
@@ -70,12 +71,17 @@ pub fn trim(g: &Graph, gt: &Graph, scc: &[AtomicU32], mode: TrimMode, rec: Recor
         &mut deg_in,
         &mut bag,
         &mut frontier,
+        None,
     )
 }
 
 /// Peel trivial SCCs using caller-owned scratch: vertices with zero
 /// active in- or out-degree cannot be in a nontrivial SCC, so they are
 /// their own (singleton) components. Returns #peeled.
+///
+/// `cancel` is polled once per peel round (never per edge): an expired
+/// or condemned query abandons the peel within one round, leaving a
+/// partial assignment the caller must not summarize.
 #[allow(clippy::too_many_arguments)]
 pub fn trim_ws(
     g: &Graph,
@@ -87,6 +93,7 @@ pub fn trim_ws(
     deg_in: &mut Vec<u32>,
     bag: &mut HashBag,
     frontier: &mut Vec<V>,
+    cancel: Cancel<'_>,
 ) -> usize {
     let n = g.n();
     let mut peeled = 0usize;
@@ -119,6 +126,9 @@ pub fn trim_ws(
             .is_ok()
     });
     while !frontier.is_empty() {
+        if cancelled(cancel) {
+            break;
+        }
         peeled += frontier.len();
         {
             let frontier_ref = &*frontier;
@@ -195,8 +205,26 @@ pub fn decompose_ws(
     gt: Option<&Graph>,
     engine: Engine,
     seed: u64,
+    rec: Recorder,
+    ws: &mut SccWorkspace,
+) {
+    decompose_ws_cancel(g, gt, engine, seed, rec, ws, None);
+}
+
+/// [`decompose_ws`] with a cooperative-cancellation token, threaded
+/// into the trim peel, the pivot loop and every reachability
+/// sub-query: an expired or condemned query abandons the decomposition
+/// within one round, leaving partial labels the serving layer must not
+/// summarize. Cancellation always breaks (never returns) so the
+/// workspace restores at the end still run.
+pub fn decompose_ws_cancel(
+    g: &Graph,
+    gt: Option<&Graph>,
+    engine: Engine,
+    seed: u64,
     mut rec: Recorder,
     ws: &mut SccWorkspace,
+    cancel: Cancel<'_>,
 ) {
     let n = g.n();
     let mut labels = std::mem::take(&mut ws.labels);
@@ -231,6 +259,7 @@ pub fn decompose_ws(
             &mut ws.deg_in,
             &mut ws.bag,
             &mut ws.frontier,
+            cancel,
         );
 
         // Random pivot order.
@@ -242,6 +271,11 @@ pub fn decompose_ws(
         let mut batch = 1usize;
 
         while cursor < n {
+            // Cancellation point, once per pivot batch: break (never
+            // return) so the perm/label restores below still run.
+            if cancelled(cancel) {
+                break;
+            }
             // Next `batch` active pivots in permutation order.
             let mut pivots: Vec<V> = Vec::with_capacity(batch);
             while cursor < n && pivots.len() < batch {
@@ -269,6 +303,7 @@ pub fn decompose_ws(
                         &mut ws.pending,
                         &mut ws.bag,
                         &mut ws.frontier,
+                        cancel,
                     );
                     bfs_multi_reach_ws(
                         gt,
@@ -279,6 +314,7 @@ pub fn decompose_ws(
                         &mut ws.pending,
                         &mut ws.bag,
                         &mut ws.frontier,
+                        cancel,
                     );
                 }
                 Engine::Vgc(tau) => {
@@ -292,6 +328,7 @@ pub fn decompose_ws(
                         &mut ws.pending,
                         &mut ws.bag,
                         &mut ws.frontier,
+                        cancel,
                     );
                     vgc_multi_reach_ws(
                         gt,
@@ -303,6 +340,7 @@ pub fn decompose_ws(
                         &mut ws.pending,
                         &mut ws.bag,
                         &mut ws.frontier,
+                        cancel,
                     );
                 }
             }

@@ -26,7 +26,7 @@ pub mod vgc_scc;
 pub use bgss::{bgss_scc, bgss_scc_ws};
 pub use multistep::multistep_scc;
 pub use tarjan::tarjan_scc;
-pub use vgc_scc::{vgc_scc, vgc_scc_ws};
+pub use vgc_scc::{vgc_scc, vgc_scc_ws, vgc_scc_ws_cancel};
 
 /// Normalize an SCC labeling to the partition's canonical form: every
 /// vertex labeled with the *smallest* vertex id in its class. Two

@@ -4,7 +4,8 @@
 //! need BFS order, so the relaxed visit order costs nothing and buys
 //! back all the round-synchronization overhead — the paper's §2.1.
 
-use super::decomp::{decompose, decompose_ws, Engine};
+use super::decomp::{decompose, decompose_ws, decompose_ws_cancel, Engine};
+use crate::algo::cancel::Cancel;
 use crate::algo::workspace::SccWorkspace;
 use crate::graph::Graph;
 use crate::sim::trace::Recorder;
@@ -27,6 +28,22 @@ pub fn vgc_scc_ws(
     ws: &mut SccWorkspace,
 ) {
     decompose_ws(g, gt, Engine::Vgc(tau), seed, rec, ws)
+}
+
+/// [`vgc_scc_ws`] with a cooperative-cancellation token threaded into
+/// the trim peel, pivot loop and reachability sub-queries: an expired
+/// or condemned query abandons the decomposition within one round,
+/// leaving partial labels the serving layer must not summarize.
+pub fn vgc_scc_ws_cancel(
+    g: &Graph,
+    gt: Option<&Graph>,
+    tau: usize,
+    seed: u64,
+    rec: Recorder,
+    ws: &mut SccWorkspace,
+    cancel: Cancel<'_>,
+) {
+    decompose_ws_cancel(g, gt, Engine::Vgc(tau), seed, rec, ws, cancel)
 }
 
 #[cfg(test)]

@@ -13,6 +13,7 @@
 //! allocate-per-call wrapper. The default Δ (mean edge weight) comes
 //! from the graph's memoized [`crate::graph::WeightStats`].
 
+use crate::algo::cancel::{cancelled, Cancel};
 use crate::algo::workspace::SsspWorkspace;
 use crate::graph::Graph;
 use crate::hashbag::HashBag;
@@ -35,8 +36,23 @@ pub fn delta_stepping_ws(
     g: &Graph,
     src: V,
     delta: Option<f32>,
+    rec: Recorder,
+    ws: &mut SsspWorkspace,
+) {
+    delta_stepping_ws_cancel(g, src, delta, rec, ws, None);
+}
+
+/// [`delta_stepping_ws`] with a cooperative-cancellation token, polled
+/// once per bucket relaxation round (never per edge): an expired or
+/// condemned query abandons the bucket chain within one round, leaving
+/// partial distances the serving layer must not summarize.
+pub fn delta_stepping_ws_cancel(
+    g: &Graph,
+    src: V,
+    delta: Option<f32>,
     mut rec: Recorder,
     ws: &mut SsspWorkspace,
+    cancel: Cancel<'_>,
 ) {
     let n = g.n();
     ws.dist.ensure_len(n);
@@ -68,8 +84,14 @@ pub fn delta_stepping_ws(
     let mut staged_buf = std::mem::take(&mut ws.staged_buf);
 
     let mut i = 0usize;
-    while i < buckets.len() {
+    'buckets: while i < buckets.len() {
         loop {
+            // Cancellation point, once per inner relaxation round: a
+            // labeled break (never a return) so the workspace restores
+            // below still run and the pooled buffers stay warm.
+            if cancelled(cancel) {
+                break 'buckets;
+            }
             buckets[i].extract_into(&mut frontier);
             if frontier.is_empty() {
                 break;

@@ -20,9 +20,9 @@ pub mod delta;
 pub mod dijkstra;
 pub mod rho;
 
-pub use delta::{delta_stepping, delta_stepping_ws};
+pub use delta::{delta_stepping, delta_stepping_ws, delta_stepping_ws_cancel};
 pub use dijkstra::dijkstra;
-pub use rho::{rho_stepping, rho_stepping_ws};
+pub use rho::{rho_stepping, rho_stepping_ws, rho_stepping_ws_cancel};
 
 #[cfg(test)]
 mod cross_tests {

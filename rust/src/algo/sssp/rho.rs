@@ -21,6 +21,7 @@
 //! distances, one walk per batch) and converges to the same least
 //! fixpoint: per-lane results are bit-identical to this engine's.
 
+use crate::algo::cancel::{cancelled, Cancel};
 use crate::algo::workspace::SsspWorkspace;
 use crate::graph::Graph;
 use crate::sim::trace::{Recorder, RoundSlots};
@@ -44,7 +45,22 @@ pub fn rho_stepping(g: &Graph, src: V, tau: usize, rec: Recorder) -> Vec<f32> {
 /// reusable workspace. Results are left in `ws.dist` as f32 bits (read
 /// with [`crate::parallel::StampedU32::get_f32`] or export them); a
 /// warm workspace performs no O(n)/O(m) allocation.
-pub fn rho_stepping_ws(g: &Graph, src: V, tau: usize, mut rec: Recorder, ws: &mut SsspWorkspace) {
+pub fn rho_stepping_ws(g: &Graph, src: V, tau: usize, rec: Recorder, ws: &mut SsspWorkspace) {
+    rho_stepping_ws_cancel(g, src, tau, rec, ws, None);
+}
+
+/// [`rho_stepping_ws`] with a cooperative-cancellation token, polled
+/// once per θ-threshold round (never per edge): an expired or
+/// condemned query abandons the walk within one round, leaving partial
+/// distances the serving layer must not summarize.
+pub fn rho_stepping_ws_cancel(
+    g: &Graph,
+    src: V,
+    tau: usize,
+    mut rec: Recorder,
+    ws: &mut SsspWorkspace,
+    cancel: Cancel<'_>,
+) {
     let n = g.n();
     ws.dist.ensure_len(n);
     ws.dist.reset(INF.to_bits());
@@ -90,6 +106,11 @@ pub fn rho_stepping_ws(g: &Graph, src: V, tau: usize, mut rec: Recorder, ws: &mu
     let mut sample = std::mem::take(&mut ws.sample);
 
     while !pending.is_empty() {
+        // Cancellation point: break (never return) so the workspace
+        // restores below still run and the pooled buffers stay warm.
+        if cancelled(cancel) {
+            break;
+        }
         // Threshold: the smaller of (a) the ~RHO-th smallest pending
         // distance and (b) min pending distance + the width cap.
         let stride = (pending.len() / 1024).max(1);

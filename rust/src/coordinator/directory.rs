@@ -26,6 +26,7 @@ use super::lock_or_recover;
 use crate::algo::api::{Params, QueryOutput};
 use crate::error::Result;
 use crate::graph::Graph;
+use crate::V;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -257,8 +258,13 @@ pub struct ResultCache {
     len: usize,
 }
 
-/// One graph's cached outputs, keyed `(spec id, params)`.
-type GraphResults = HashMap<(u16, Params), CacheSlot>;
+/// One graph's cached outputs, keyed `(spec id, params, source)`.
+/// `source` is `None` for whole-graph analyses (the cacheable specs)
+/// and for graph-level negative entries (`Failed{UnknownGraph}`);
+/// `Some(v)` keys per-source negative entries
+/// (`Failed{InvalidSource}`) so a typed rejection for one out-of-range
+/// source never shadows a different, valid source.
+type GraphResults = HashMap<(u16, Params, Option<V>), CacheSlot>;
 
 /// A cached output: the publish version it was computed at and the
 /// LRU clock of its last use.
@@ -308,8 +314,24 @@ impl ResultCache {
         params: Params,
         version: u64,
     ) -> Option<Arc<QueryOutput>> {
+        self.lookup_src(graph, spec, params, None, version)
+    }
+
+    /// [`lookup`](ResultCache::lookup) with an explicit source key —
+    /// the negative-caching path: typed `Failed{InvalidSource}`
+    /// outputs are cached per `(spec, params, Some(source))`, and
+    /// `Failed{UnknownGraph}` per `(spec, params, None)`, under the
+    /// same version guard as positive entries.
+    pub fn lookup_src(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        source: Option<V>,
+        version: u64,
+    ) -> Option<Arc<QueryOutput>> {
         let slots = self.entries.get_mut(graph)?;
-        let slot = slots.get_mut(&(spec, params))?;
+        let slot = slots.get_mut(&(spec, params, source))?;
         if slot.version != version {
             self.len -= slots.len();
             self.entries.remove(graph);
@@ -333,6 +355,20 @@ impl ResultCache {
         version: u64,
         output: Arc<QueryOutput>,
     ) -> usize {
+        self.insert_src(graph, spec, params, None, version, output)
+    }
+
+    /// [`insert`](ResultCache::insert) with an explicit source key
+    /// (see [`lookup_src`](ResultCache::lookup_src)).
+    pub fn insert_src(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        source: Option<V>,
+        version: u64,
+        output: Arc<QueryOutput>,
+    ) -> usize {
         if let Some(slots) = self.entries.get(graph) {
             if slots.values().any(|s| s.version != version) {
                 self.len -= slots.len();
@@ -349,7 +385,7 @@ impl ResultCache {
             .entries
             .entry(graph.to_string())
             .or_default()
-            .insert((spec, params), slot);
+            .insert((spec, params, source), slot);
         if prev.is_none() {
             self.len += 1;
         }
@@ -365,7 +401,7 @@ impl ResultCache {
     /// cache is small by construction and eviction is the exceptional
     /// path, not the steady state).
     fn evict_lru(&mut self) {
-        let mut victim: Option<(u64, String, (u16, Params))> = None;
+        let mut victim: Option<(u64, String, (u16, Params, Option<V>))> = None;
         for (g, slots) in &self.entries {
             for (k, s) in slots {
                 if victim.as_ref().map_or(true, |(used, _, _)| s.used < *used) {
@@ -523,6 +559,30 @@ mod tests {
         // Re-inserting an existing key replaces, never evicts.
         assert_eq!(cache.insert("d", 3, Params::NONE, 1, Arc::clone(&out)), 0);
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn result_cache_source_keyed_entries_do_not_collide() {
+        use crate::coordinator::faults::FailKind;
+        let mut cache = ResultCache::new();
+        let p = Params::NONE;
+        let neg = Arc::new(QueryOutput::Failed {
+            kind: FailKind::InvalidSource,
+            error: "invalid source: 99 out of range (n=9)".into(),
+        });
+        cache.insert_src("g", 4, p, Some(99), 1, Arc::clone(&neg));
+        assert!(cache.lookup_src("g", 4, p, Some(99), 1).is_some());
+        assert!(
+            cache.lookup_src("g", 4, p, Some(3), 1).is_none(),
+            "a negative entry for one source never shadows another"
+        );
+        assert!(
+            cache.lookup("g", 4, p, 1).is_none(),
+            "the None (whole-graph) key is distinct from every source key"
+        );
+        // The version guard applies to negative entries too.
+        assert!(cache.lookup_src("g", 4, p, Some(99), 2).is_none());
+        assert_eq!(cache.len(), 0, "republish dropped the stale negative");
     }
 
     #[test]

@@ -26,12 +26,14 @@
 //!
 //! [`QueryOutput::Failed`]: crate::algo::api::QueryOutput::Failed
 
+use crate::algo::cancel::{cancelled, Cancel};
 use crate::error::Error;
+use crate::V;
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Once;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Consecutive engine panics on one `(graph, spec)` key before the
 /// circuit breaker opens (see [`PanicBreaker`]).
@@ -40,11 +42,16 @@ pub const BREAKER_TRIP: u32 = 3;
 /// Stable message prefixes — the wire encoding of [`FailKind`] over
 /// the string-backed error type. `classify` matches on these, so the
 /// constructors below are the only places allowed to mint them.
-pub const MSG_DEADLINE: &str = "deadline exceeded";
+/// `MSG_DEADLINE` / `MSG_STALLED` are authored in
+/// [`crate::algo::cancel`] (the cancellation substrate owns those two
+/// conditions) and re-exported here so the taxonomy stays one list.
+pub use crate::algo::cancel::{MSG_DEADLINE, MSG_STALLED};
 pub const MSG_OVERLOAD: &str = "shard overloaded";
 pub const MSG_PANIC: &str = "engine panic";
 pub const MSG_BREAKER: &str = "engine panic breaker open";
 pub const MSG_INVALID: &str = "invalid graph";
+pub const MSG_UNKNOWN_GRAPH: &str = "unknown graph";
+pub const MSG_BAD_SOURCE: &str = "invalid source";
 
 /// Typed failure taxonomy for answered requests (see module docs and
 /// the crate-level "Failure semantics" section).
@@ -61,7 +68,15 @@ pub enum FailKind {
     EnginePanic,
     /// The graph bytes failed structural validation at publish time.
     InvalidGraph,
-    /// Everything else (unknown graph, out-of-range source, ...).
+    /// The shard watchdog condemned the worker running this request:
+    /// its engine overran `stall_limit` and was cancelled; the batch
+    /// was answered by the router while a fresh worker respawned.
+    EngineStalled,
+    /// No graph is published under the requested name.
+    UnknownGraph,
+    /// The source vertex is out of range for the resolved graph.
+    InvalidSource,
+    /// Everything else.
     Other,
 }
 
@@ -75,10 +90,16 @@ impl FailKind {
             FailKind::DeadlineExceeded
         } else if msg.starts_with(MSG_OVERLOAD) {
             FailKind::Overloaded
+        } else if msg.starts_with(MSG_STALLED) {
+            FailKind::EngineStalled
         } else if msg.starts_with(MSG_PANIC) {
             FailKind::EnginePanic
         } else if msg.starts_with(MSG_INVALID) {
             FailKind::InvalidGraph
+        } else if msg.starts_with(MSG_UNKNOWN_GRAPH) {
+            FailKind::UnknownGraph
+        } else if msg.starts_with(MSG_BAD_SOURCE) {
+            FailKind::InvalidSource
         } else {
             FailKind::Other
         }
@@ -113,6 +134,25 @@ pub fn breaker_error(graph: &str, algo: &str) -> Error {
 /// The typed rejection for graph bytes that fail CSR validation.
 pub fn invalid_graph_error(name: &str, reason: &str) -> Error {
     Error::msg(format!("{MSG_INVALID} {name:?}: {reason}"))
+}
+
+/// The error a watchdog-condemned (hard-cancelled) request is
+/// answered with: its engine overran `stall_limit` and the worker was
+/// respawned.
+pub fn stalled_error(graph: &str, algo: &str) -> Error {
+    Error::msg(format!(
+        "{MSG_STALLED}: {algo} on {graph:?} cancelled past the stall limit; worker respawned"
+    ))
+}
+
+/// The typed rejection for a graph name nothing is published under.
+pub fn unknown_graph_error(name: &str) -> Error {
+    Error::msg(format!("{MSG_UNKNOWN_GRAPH} {name:?}"))
+}
+
+/// The typed rejection for a source vertex outside the graph.
+pub fn invalid_source_error(source: V, n: usize) -> Error {
+    Error::msg(format!("{MSG_BAD_SOURCE}: {source} out of range (n={n})"))
 }
 
 /// Best-effort extraction of a panic payload's message (`&str` and
@@ -162,6 +202,12 @@ pub enum FaultKind {
     /// Sleep before executing, mimicking a pathologically slow engine
     /// (drives the overload/deadline paths without burning CPU).
     Delay(Duration),
+    /// Park until the dispatch token cancels: an *unbounded* stall.
+    /// A bounded [`FaultKind::Delay`] cannot model a wedged engine
+    /// without racing the watchdog's clock; this one stalls exactly
+    /// until condemned, so the supervision path is testable without
+    /// timing flakes.
+    StallForever,
 }
 
 /// One injectable failure point: fires on executions whose graph and
@@ -226,6 +272,19 @@ impl FaultPlan {
         self
     }
 
+    /// Arm an unbounded, cancellation-interruptible stall on every
+    /// matching execution (the watchdog test hook — see
+    /// [`FaultKind::StallForever`]).
+    pub fn stall_forever(mut self, graph: Option<&str>, algo: Option<&str>) -> Self {
+        self.points.push(FaultPoint {
+            graph: graph.map(str::to_string),
+            algo: algo.map(str::to_string),
+            kind: FaultKind::StallForever,
+            hits: AtomicU64::new(0),
+        });
+        self
+    }
+
     /// Hits recorded by point `idx` (tests verifying a fault fired).
     pub fn hits(&self, idx: usize) -> u64 {
         self.points[idx].hits.load(Ordering::Relaxed)
@@ -233,10 +292,13 @@ impl FaultPlan {
 
     /// The hook the execution core fires inside `catch_unwind`, right
     /// before running an engine: matching points count a hit, sleep,
-    /// or panic per their [`FaultKind`]. No-op for non-matching
+    /// stall, or panic per their [`FaultKind`]. No-op for non-matching
     /// executions; breaker fast-fails never reach here (the engine is
     /// not executed), so open breakers don't consume panic budgets.
-    pub fn before_execute(&self, graph: &str, algo: &str) {
+    /// `cancel` is the dispatch token: an armed
+    /// [`FaultKind::StallForever`] parks until it cancels, exactly
+    /// like a wedged engine loop observing its round check.
+    pub fn before_execute(&self, graph: &str, algo: &str, cancel: Cancel<'_>) {
         for p in &self.points {
             if !p.matches(graph, algo) {
                 continue;
@@ -249,28 +311,60 @@ impl FaultPlan {
                     }
                 }
                 FaultKind::Delay(by) => std::thread::sleep(by),
+                FaultKind::StallForever => {
+                    while !cancelled(cancel) {
+                        std::thread::park_timeout(Duration::from_millis(1));
+                    }
+                }
             }
         }
     }
+}
+
+/// What a breaker check answers for one `(graph, spec, version)` key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Below the trip threshold (or reset by a republish): execute.
+    Closed,
+    /// Tripped and not yet eligible for a probe: fail fast.
+    Open,
+    /// Tripped, cooldown elapsed, and this check is the **one**
+    /// half-open probe admitted: execute; the outcome decides whether
+    /// the breaker closes ([`PanicBreaker::record_ok`]) or re-opens
+    /// with a fresh cooldown ([`PanicBreaker::record_panic`]).
+    Probe,
 }
 
 /// Per-`(graph, spec)` panic circuit breaker (see module docs): an
 /// entry counts *consecutive* caught panics at one publish version;
 /// at [`BREAKER_TRIP`] the breaker is open and identical requests
 /// fail fast with [`breaker_error`]. A success closes the entry; a
-/// republish (version mismatch) resets it on the next check. Owned
-/// per shard worker (graph→shard affinity means one worker sees all
-/// relevant traffic) or Mutex-shared on the coordinator's ad-hoc
+/// republish (version mismatch) resets it on the next check; and with
+/// a cooldown armed ([`PanicBreaker::with_cooldown`]) an open breaker
+/// self-heals: once the cooldown elapses [`PanicBreaker::check`]
+/// admits exactly one half-open probe, which closes the breaker on
+/// success and re-opens it (restarting the cooldown) on failure.
+/// Owned per shard worker (graph→shard affinity means one worker sees
+/// all relevant traffic) or Mutex-shared on the coordinator's ad-hoc
 /// paths.
 #[derive(Default)]
 pub struct PanicBreaker {
     threshold: u32,
+    /// Half-open recovery cooldown; `None` (the default) disables
+    /// probing — an open breaker then resets only on republish.
+    cooldown: Option<Duration>,
     entries: HashMap<String, HashMap<u16, BreakerEntry>>,
 }
 
 struct BreakerEntry {
     version: u64,
     consecutive: u32,
+    /// When the entry last recorded a panic at/past the threshold —
+    /// the instant the cooldown runs from.
+    opened_at: Option<Instant>,
+    /// A half-open probe was admitted and its outcome is pending:
+    /// further checks stay `Open` until `record_ok`/`record_panic`.
+    probing: bool,
 }
 
 impl PanicBreaker {
@@ -283,32 +377,67 @@ impl PanicBreaker {
     pub fn with_threshold(threshold: u32) -> Self {
         PanicBreaker {
             threshold: threshold.max(1),
+            cooldown: None,
             entries: HashMap::new(),
         }
     }
 
-    /// Is the breaker open for `(graph, spec)` at `version`? A stale
-    /// entry (the graph was republished since it tripped) is removed
-    /// and reported closed — republishing is the reset protocol.
-    pub fn is_open(&mut self, graph: &str, spec: u16, version: u64) -> bool {
+    /// Arm half-open recovery: an open breaker admits one probe per
+    /// elapsed `cooldown` (builder style). `Duration::ZERO` disables
+    /// probing — the republish-only behavior.
+    pub fn with_cooldown(mut self, cooldown: Duration) -> Self {
+        self.cooldown = (cooldown > Duration::ZERO).then_some(cooldown);
+        self
+    }
+
+    /// The closed/open/half-open decision for `(graph, spec)` at
+    /// `version` (see [`BreakerState`]). A stale entry (the graph was
+    /// republished since it tripped) is removed and reported closed —
+    /// republishing is still a reset protocol.
+    pub fn check(&mut self, graph: &str, spec: u16, version: u64) -> BreakerState {
         let Some(specs) = self.entries.get_mut(graph) else {
-            return false;
+            return BreakerState::Closed;
         };
-        let Some(e) = specs.get(&spec) else {
-            return false;
+        let Some(e) = specs.get_mut(&spec) else {
+            return BreakerState::Closed;
         };
         if e.version != version {
             specs.remove(&spec);
             if specs.is_empty() {
                 self.entries.remove(graph);
             }
-            return false;
+            return BreakerState::Closed;
         }
-        e.consecutive >= self.threshold
+        if e.consecutive < self.threshold {
+            return BreakerState::Closed;
+        }
+        let Some(cd) = self.cooldown else {
+            return BreakerState::Open;
+        };
+        if e.probing {
+            return BreakerState::Open; // one probe in flight at a time
+        }
+        if e.opened_at.map_or(true, |t| t.elapsed() >= cd) {
+            e.probing = true;
+            BreakerState::Probe
+        } else {
+            BreakerState::Open
+        }
+    }
+
+    /// Is the breaker open for `(graph, spec)` at `version`? The
+    /// pre-half-open compat view: with no cooldown armed it is exactly
+    /// `check(..) == Open`; with one armed it *admits a probe* when
+    /// eligible (reporting closed), so callers that execute on `false`
+    /// still drive the recovery protocol.
+    pub fn is_open(&mut self, graph: &str, spec: u16, version: u64) -> bool {
+        self.check(graph, spec, version) == BreakerState::Open
     }
 
     /// Record a caught engine panic; returns true iff this panic is
-    /// the one that tripped the breaker open (callers count trips).
+    /// the one that tripped the breaker open (callers count trips). A
+    /// failed half-open probe lands here too: the entry re-opens and
+    /// its cooldown restarts.
     pub fn record_panic(&mut self, graph: &str, spec: u16, version: u64) -> bool {
         let e = self
             .entries
@@ -318,28 +447,47 @@ impl PanicBreaker {
             .or_insert(BreakerEntry {
                 version,
                 consecutive: 0,
+                opened_at: None,
+                probing: false,
             });
         if e.version != version {
             e.version = version;
             e.consecutive = 0;
         }
         e.consecutive += 1;
+        e.probing = false;
+        e.opened_at = Some(Instant::now());
         e.consecutive == self.threshold
     }
 
     /// Record a successful execution: closes the key's entry (the
-    /// consecutive-panic streak is broken). Cheap no-op while no
-    /// entries exist — the healthy steady state.
-    pub fn record_ok(&mut self, graph: &str, spec: u16) {
+    /// consecutive-panic streak is broken). Returns true iff the entry
+    /// removed was a *tripped* one — i.e. a half-open probe just
+    /// healed an open breaker (callers count recoveries). Cheap no-op
+    /// while no entries exist — the healthy steady state.
+    pub fn record_ok(&mut self, graph: &str, spec: u16) -> bool {
         if self.entries.is_empty() {
-            return;
+            return false;
         }
+        let mut recovered = false;
         if let Some(specs) = self.entries.get_mut(graph) {
-            specs.remove(&spec);
+            if let Some(e) = specs.remove(&spec) {
+                recovered = e.consecutive >= self.threshold;
+            }
             if specs.is_empty() {
                 self.entries.remove(graph);
             }
         }
+        recovered
+    }
+
+    /// Current consecutive-panic streak for `(graph, spec)` — the
+    /// retry gate reads this to recognize a *first* panic (streak 1).
+    pub fn streak(&self, graph: &str, spec: u16) -> u32 {
+        self.entries
+            .get(graph)
+            .and_then(|m| m.get(&spec))
+            .map_or(0, |e| e.consecutive)
     }
 
     /// Number of currently-open breakers (tests/metrics).
@@ -407,7 +555,18 @@ mod tests {
             FailKind::classify(&invalid_graph_error("g", "offsets not monotone").to_string()),
             FailKind::InvalidGraph
         );
-        assert_eq!(FailKind::classify("unknown graph \"x\""), FailKind::Other);
+        assert_eq!(
+            FailKind::classify(&unknown_graph_error("x").to_string()),
+            FailKind::UnknownGraph
+        );
+        assert_eq!(
+            FailKind::classify(&invalid_source_error(99, 10).to_string()),
+            FailKind::InvalidSource
+        );
+        assert_eq!(
+            FailKind::classify(&stalled_error("g", "cc").to_string()),
+            FailKind::EngineStalled
+        );
         let payload: Box<dyn std::any::Any + Send> = Box::new("boom");
         assert_eq!(
             FailKind::classify(&panic_error("g", "cc", &*payload).to_string()),
@@ -430,17 +589,17 @@ mod tests {
         silence_injected_panics();
         let plan = FaultPlan::new().panic_on(Some("bad"), None, 1, 2);
         // Hit 0: armed from hit 1 — no panic.
-        plan.before_execute("bad", "cc");
+        plan.before_execute("bad", "cc", None);
         // Hits 1 and 2 panic; hit 3 is past the window.
         for expect_panic in [true, true, false] {
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                plan.before_execute("bad", "cc")
+                plan.before_execute("bad", "cc", None)
             }));
             assert_eq!(r.is_err(), expect_panic);
         }
         assert_eq!(plan.hits(0), 4);
         // Non-matching graph never fires.
-        plan.before_execute("good", "cc");
+        plan.before_execute("good", "cc", None);
         assert_eq!(plan.hits(0), 4);
     }
 
@@ -448,11 +607,29 @@ mod tests {
     fn fault_plan_delay_sleeps_matching_executions() {
         let plan = FaultPlan::new().delay(Some("slow"), None, Duration::from_millis(5));
         let t0 = std::time::Instant::now();
-        plan.before_execute("slow", "bfs-vgc");
+        plan.before_execute("slow", "bfs-vgc", None);
         assert!(t0.elapsed() >= Duration::from_millis(5));
         let t1 = std::time::Instant::now();
-        plan.before_execute("fast", "bfs-vgc");
+        plan.before_execute("fast", "bfs-vgc", None);
         assert!(t1.elapsed() < Duration::from_millis(5));
+        assert_eq!(plan.hits(0), 1);
+    }
+
+    #[test]
+    fn stall_forever_parks_until_the_token_cancels() {
+        use crate::algo::cancel::CancelToken;
+        use std::sync::Arc;
+        let plan = Arc::new(FaultPlan::new().stall_forever(Some("wedge"), None));
+        let token = Arc::new(CancelToken::new());
+        // Non-matching executions sail through even with no token.
+        plan.before_execute("fine", "cc", None);
+        let (p, t) = (Arc::clone(&plan), Arc::clone(&token));
+        let stalled = std::thread::spawn(move || p.before_execute("wedge", "cc", Some(&t)));
+        // The stall is unbounded: give it time to park, then condemn.
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(!stalled.is_finished(), "must stall until cancelled");
+        token.cancel();
+        stalled.join().expect("stall returns cleanly once condemned");
         assert_eq!(plan.hits(0), 1);
     }
 
@@ -486,6 +663,44 @@ mod tests {
         assert_eq!(b.open_count(), 0, "stale entry removed");
         // And the streak restarts from zero at the new version.
         assert!(!b.record_panic("g", 9, 2));
+    }
+
+    #[test]
+    fn half_open_probe_admits_exactly_one_and_closes_on_success() {
+        let mut b = PanicBreaker::with_threshold(2).with_cooldown(Duration::from_millis(5));
+        b.record_panic("g", 1, 1);
+        b.record_panic("g", 1, 1);
+        assert_eq!(b.check("g", 1, 1), BreakerState::Open, "cooldown not elapsed");
+        std::thread::sleep(Duration::from_millis(6));
+        assert_eq!(b.check("g", 1, 1), BreakerState::Probe, "cooldown admits one probe");
+        assert_eq!(b.check("g", 1, 1), BreakerState::Open, "only one probe in flight");
+        assert!(b.record_ok("g", 1), "probe success is a recovery");
+        assert_eq!(b.check("g", 1, 1), BreakerState::Closed, "healed without republish");
+        assert!(!b.record_ok("g", 1), "nothing tripped left to recover");
+        assert_eq!(b.streak("g", 1), 0);
+    }
+
+    #[test]
+    fn half_open_probe_failure_reopens_and_restarts_the_cooldown() {
+        let mut b = PanicBreaker::with_threshold(1).with_cooldown(Duration::from_millis(5));
+        b.record_panic("g", 1, 1);
+        std::thread::sleep(Duration::from_millis(6));
+        assert_eq!(b.check("g", 1, 1), BreakerState::Probe);
+        // The probe dies too: re-open, cooldown restarted from now.
+        assert!(!b.record_panic("g", 1, 1), "already tripped — not a new trip");
+        assert_eq!(b.check("g", 1, 1), BreakerState::Open, "fresh cooldown running");
+        assert_eq!(b.streak("g", 1), 2);
+        std::thread::sleep(Duration::from_millis(6));
+        assert_eq!(b.check("g", 1, 1), BreakerState::Probe, "later probes keep coming");
+    }
+
+    #[test]
+    fn without_a_cooldown_an_open_breaker_never_probes() {
+        let mut b = PanicBreaker::with_threshold(1).with_cooldown(Duration::ZERO);
+        b.record_panic("g", 1, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(b.check("g", 1, 1), BreakerState::Open);
+        assert!(b.is_open("g", 1, 1), "republish-only behavior preserved");
     }
 
     #[test]

@@ -48,15 +48,15 @@
 //! [`BatchEngine`]: crate::algo::api::BatchEngine
 
 use super::directory::{GraphDirectory, LoadedGraph, ResultCache};
-use super::faults::{self, FailKind, FaultPlan, PanicBreaker};
+use super::faults::{self, BreakerState, FailKind, FaultPlan, PanicBreaker};
 use super::job::{JobOutput, JobRequest, JobResult};
 use super::lock_or_recover;
 use super::metrics::Metrics;
 use super::shard::{admit_batch, Inbox};
 use crate::algo::api::{AlgoSpec, EngineCtx, Params, Query};
+use crate::algo::cancel::CancelToken;
 use crate::algo::workspace::{QueryWorkspace, WorkspacePool};
-use crate::bail;
-use crate::error::{Context, Error, Result};
+use crate::error::{Error, Result};
 use crate::runtime::EngineHandle;
 use crate::V;
 use std::collections::HashMap;
@@ -159,6 +159,7 @@ impl Coordinator {
             engine: self.engine.as_ref(),
             metrics: &self.metrics,
             faults: self.fault_plan(),
+            cancel: None,
         }
     }
 
@@ -297,6 +298,7 @@ impl Coordinator {
                 q.algo,
                 q.params,
                 q.source,
+                None,
                 self.graph(&q.graph),
                 ws,
                 &mut self.guards(),
@@ -423,6 +425,43 @@ impl CacheHandle<'_> {
             }
         }
     }
+
+    /// Source-keyed lookup — the negative-caching path (typed
+    /// `Failed{UnknownGraph, InvalidSource}` outputs; see
+    /// [`ResultCache::lookup_src`]).
+    fn lookup_src(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        source: Option<V>,
+        version: u64,
+    ) -> Option<Arc<JobOutput>> {
+        match self {
+            CacheHandle::Owned(c) => c.lookup_src(graph, spec, params, source, version),
+            CacheHandle::Shared(m) => {
+                lock_or_recover(m).lookup_src(graph, spec, params, source, version)
+            }
+        }
+    }
+
+    /// Source-keyed insert (see [`ResultCache::insert_src`]).
+    fn insert_src(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        source: Option<V>,
+        version: u64,
+        output: Arc<JobOutput>,
+    ) -> usize {
+        match self {
+            CacheHandle::Owned(c) => c.insert_src(graph, spec, params, source, version, output),
+            CacheHandle::Shared(m) => {
+                lock_or_recover(m).insert_src(graph, spec, params, source, version, output)
+            }
+        }
+    }
 }
 
 /// How an execution path reaches its [`PanicBreaker`] — the same
@@ -437,10 +476,13 @@ pub(crate) enum BreakerHandle<'a> {
 }
 
 impl BreakerHandle<'_> {
-    fn is_open(&mut self, graph: &str, spec: u16, version: u64) -> bool {
+    /// The breaker's admission decision for this execution —
+    /// [`BreakerState::Probe`] additionally *claims* the half-open
+    /// probe slot, so call this exactly once per admission.
+    fn check(&mut self, graph: &str, spec: u16, version: u64) -> BreakerState {
         match self {
-            BreakerHandle::Owned(b) => b.is_open(graph, spec, version),
-            BreakerHandle::Shared(m) => lock_or_recover(m).is_open(graph, spec, version),
+            BreakerHandle::Owned(b) => b.check(graph, spec, version),
+            BreakerHandle::Shared(m) => lock_or_recover(m).check(graph, spec, version),
         }
     }
 
@@ -451,10 +493,22 @@ impl BreakerHandle<'_> {
         }
     }
 
-    fn record_ok(&mut self, graph: &str, spec: u16) {
+    /// Returns true when the success closed a tripped breaker (the
+    /// half-open probe recovered it); callers meter these as
+    /// `breaker_recoveries`.
+    fn record_ok(&mut self, graph: &str, spec: u16) -> bool {
         match self {
             BreakerHandle::Owned(b) => b.record_ok(graph, spec),
             BreakerHandle::Shared(m) => lock_or_recover(m).record_ok(graph, spec),
+        }
+    }
+
+    /// Current consecutive-panic streak (0 when clean) — the
+    /// bounded-retry gate reads it to retry only *first-time* panics.
+    fn streak(&mut self, graph: &str, spec: u16) -> u32 {
+        match self {
+            BreakerHandle::Owned(b) => b.streak(graph, spec),
+            BreakerHandle::Shared(m) => lock_or_recover(m).streak(graph, spec),
         }
     }
 }
@@ -480,6 +534,11 @@ pub(crate) struct ExecCore<'a> {
     /// shard workers capture it once at spawn, so install the plan
     /// *before* serving starts.
     pub faults: Option<Arc<FaultPlan>>,
+    /// The worker-shared cancellation token, when this core runs under
+    /// shard supervision: the router's watchdog condemns it to reclaim
+    /// a stuck worker. `None` (ad-hoc paths) — each execution arms a
+    /// local token carrying only the request deadline.
+    pub cancel: Option<&'a CancelToken>,
 }
 
 impl ExecCore<'_> {
@@ -505,6 +564,7 @@ impl ExecCore<'_> {
             req.algo,
             req.params,
             req.source,
+            req.deadline,
             lg,
             ws,
             guards,
@@ -528,12 +588,78 @@ impl ExecCore<'_> {
         spec: &'static AlgoSpec,
         params: Params,
         source: V,
+        deadline: Option<Instant>,
         lg: Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
         guards: &mut Guards<'_>,
     ) -> Result<JobResult> {
         let submitted = Instant::now();
-        let lg = lg.with_context(|| format!("unknown graph {graph:?}"))?;
+        // Unknown graph: a typed negative entry (keyed at the version-0
+        // sentinel — published graphs always carry version ≥ 1) answers
+        // repeats without re-resolving; the first miss seeds it. The
+        // entry is dropped wholesale the moment a real publish inserts
+        // positive results for the name.
+        let Some(lg) = lg else {
+            if let Some(hit) = guards.cache.lookup_src(graph, spec.id, params, None, 0) {
+                self.metrics.bump("negative_hits", 1);
+                self.metrics.bump("jobs_executed", 1);
+                return Ok(JobResult {
+                    id,
+                    algo: spec.label,
+                    output: (*hit).clone(),
+                    exec: Duration::ZERO,
+                    latency: submitted.elapsed(),
+                });
+            }
+            let err = faults::unknown_graph_error(graph);
+            let msg = format!("{err:#}");
+            guards.cache.insert_src(
+                graph,
+                spec.id,
+                params,
+                None,
+                0,
+                Arc::new(JobOutput::Failed {
+                    kind: FailKind::classify(&msg),
+                    error: msg,
+                }),
+            );
+            return Err(err);
+        };
+        // Out-of-range source: same negative-caching protocol, keyed
+        // per source at the *graph's* publish version — a republish
+        // (possibly with more vertices) invalidates the rejection.
+        if spec.needs_source && (source as usize) >= lg.graph.n() {
+            if let Some(hit) =
+                guards
+                    .cache
+                    .lookup_src(graph, spec.id, params, Some(source), lg.version)
+            {
+                self.metrics.bump("negative_hits", 1);
+                self.metrics.bump("jobs_executed", 1);
+                return Ok(JobResult {
+                    id,
+                    algo: spec.label,
+                    output: (*hit).clone(),
+                    exec: Duration::ZERO,
+                    latency: submitted.elapsed(),
+                });
+            }
+            let err = faults::invalid_source_error(source, lg.graph.n());
+            let msg = format!("{err:#}");
+            guards.cache.insert_src(
+                graph,
+                spec.id,
+                params,
+                Some(source),
+                lg.version,
+                Arc::new(JobOutput::Failed {
+                    kind: FailKind::classify(&msg),
+                    error: msg,
+                }),
+            );
+            return Err(err);
+        }
         if spec.cacheable {
             if let Some(hit) = guards.cache.lookup(graph, spec.id, params, lg.version) {
                 // Served for free: no engine ran, so `exec` is zero
@@ -556,24 +682,53 @@ impl ExecCore<'_> {
         // Circuit breaker: after BREAKER_TRIP consecutive panics on
         // this (graph, spec) at this version, fail fast instead of
         // re-running an engine that keeps dying. Republishing the
-        // graph (new version) resets the breaker.
-        if guards.breaker.is_open(graph, spec.id, lg.version) {
-            self.metrics.bump("breaker_open", 1);
-            return Err(faults::breaker_error(graph, spec.label));
+        // graph (new version) resets the breaker; with a cooldown
+        // configured, an open breaker also goes half-open after it
+        // elapses and admits exactly one probe execution.
+        match guards.breaker.check(graph, spec.id, lg.version) {
+            BreakerState::Open => {
+                self.metrics.bump("breaker_open", 1);
+                return Err(faults::breaker_error(graph, spec.label));
+            }
+            BreakerState::Probe => self.metrics.bump("breaker_probes", 1),
+            BreakerState::Closed => {}
         }
         // Answer out of the caller's warm workspace: the steady-state
         // query path performs zero O(n)/O(m) allocation (epoch-stamped
         // scratch, reused bags and export buffers).
         let exec_start = Instant::now();
-        let run = self.run_spec(graph, spec, params, source, &lg, ws);
-        match &run {
-            Ok(_) => guards.breaker.record_ok(graph, spec.id),
-            Err(e) if FailKind::classify(&e.to_string()) == FailKind::EnginePanic => {
+        let mut run = self.run_spec(graph, spec, params, source, deadline, &lg, ws);
+        if let Err(e) = &run {
+            if FailKind::classify(&e.to_string()) == FailKind::EnginePanic {
                 if guards.breaker.record_panic(graph, spec.id, lg.version) {
                     self.metrics.bump("breaker_trips", 1);
                 }
+                // Bounded retry: a *first-time* panic on this (graph,
+                // spec) may be transient (the panic isolation already
+                // swapped in a fresh workspace), so a solo request
+                // with deadline budget left gets exactly one more
+                // attempt. Streaks ≥ 2 never retry — that's the
+                // breaker's territory — and requests without a
+                // deadline never retry, keeping failure counts exact
+                // for deadline-less workloads.
+                if guards.breaker.streak(graph, spec.id) == 1
+                    && deadline.is_some_and(|d| Instant::now() < d)
+                {
+                    self.metrics.bump("panic_retries", 1);
+                    run = self.run_spec(graph, spec, params, source, deadline, &lg, ws);
+                    if let Err(e2) = &run {
+                        if FailKind::classify(&e2.to_string()) == FailKind::EnginePanic
+                            && guards.breaker.record_panic(graph, spec.id, lg.version)
+                        {
+                            self.metrics.bump("breaker_trips", 1);
+                        }
+                    }
+                }
             }
-            Err(_) => {} // plain errors (bad source, …) don't trip the breaker
+            // Plain errors (deadline, stall, …) don't trip the breaker.
+        }
+        if run.is_ok() && guards.breaker.record_ok(graph, spec.id) {
+            self.metrics.bump("breaker_recoveries", 1);
         }
         let output = run?;
         let exec = exec_start.elapsed();
@@ -612,21 +767,57 @@ impl ExecCore<'_> {
         spec: &'static AlgoSpec,
         params: Params,
         source: V,
+        deadline: Option<Instant>,
         lg: &LoadedGraph,
         ws: &mut QueryWorkspace,
     ) -> Result<JobOutput> {
         let g = &*lg.graph;
         if spec.needs_source && (source as usize) >= g.n() {
-            bail!("source {} out of range (n={})", source, g.n());
+            return Err(faults::invalid_source_error(source, g.n()));
+        }
+        // Arm this execution's cancellation token: the worker-shared
+        // token when the core runs under shard supervision (the
+        // router's watchdog condemns it to reclaim a stuck worker),
+        // else a local one carrying only the request deadline.
+        let local = CancelToken::new();
+        let token = self.cancel.unwrap_or(&local);
+        if !token.rearm(deadline) {
+            // Condemned before the engine even started: the watchdog
+            // already declared this worker stuck.
+            return Err(faults::stalled_error(graph, spec.label));
         }
         let guarded = catch_unwind(AssertUnwindSafe(|| {
             if let Some(f) = &self.faults {
-                f.before_execute(graph, spec.label);
+                f.before_execute(graph, spec.label, Some(token));
             }
-            (spec.solo)(&EngineCtx { engine: self.engine }, lg, params, source, ws)
+            (spec.solo)(
+                &EngineCtx {
+                    engine: self.engine,
+                    cancel: Some(token),
+                },
+                lg,
+                params,
+                source,
+                ws,
+            )
         }));
         match guarded {
-            Ok(res) => res,
+            Ok(res) => {
+                if token.is_hard_cancelled() {
+                    // The watchdog condemned us mid-run; the engine
+                    // exited early with partial workspace state that
+                    // must not be summarized as an answer.
+                    return Err(faults::stalled_error(graph, spec.label));
+                }
+                if res.is_ok() && token.is_cancelled() {
+                    // Deadline expired mid-run: the engine broke out of
+                    // its round loop early, so the "output" would be a
+                    // partial traversal — answer typed dead instead.
+                    self.metrics.bump("deadline_exceeded", 1);
+                    return Err(faults::deadline_error(graph, spec.label));
+                }
+                res
+            }
             Err(payload) => {
                 *ws = QueryWorkspace::default();
                 self.metrics.bump("engine_panics", 1);
@@ -734,23 +925,25 @@ impl ExecCore<'_> {
         let Some(lg) = lg else {
             for &i in idxs {
                 self.metrics.bump("queries_fused", 1);
-                results[i] = Some(Err(Error::msg(format!(
-                    "unknown graph {:?}",
-                    reqs[i].graph
-                ))));
+                results[i] = Some(Err(faults::unknown_graph_error(&reqs[i].graph)));
             }
             return;
         };
         let graph = reqs[idxs[0]].graph.as_str();
         // Breaker fast-fail covers the whole group: a fused walk is
-        // one engine run, so an open breaker fails all its lanes.
-        if guards.breaker.is_open(graph, spec.id, lg.version) {
-            for &i in idxs {
-                self.metrics.bump("queries_fused", 1);
-                self.metrics.bump("breaker_open", 1);
-                results[i] = Some(Err(faults::breaker_error(graph, spec.label)));
+        // one engine run, so an open breaker fails all its lanes (and
+        // a half-open probe admits the whole group as its one probe).
+        match guards.breaker.check(graph, spec.id, lg.version) {
+            BreakerState::Open => {
+                for &i in idxs {
+                    self.metrics.bump("queries_fused", 1);
+                    self.metrics.bump("breaker_open", 1);
+                    results[i] = Some(Err(faults::breaker_error(graph, spec.label)));
+                }
+                return;
             }
-            return;
+            BreakerState::Probe => self.metrics.bump("breaker_probes", 1),
+            BreakerState::Closed => {}
         }
         let n = lg.graph.n();
         // Out-of-range sources fail individually; the rest still fuse.
@@ -758,59 +951,111 @@ impl ExecCore<'_> {
         for &i in idxs {
             if (reqs[i].source as usize) >= n {
                 self.metrics.bump("queries_fused", 1);
-                results[i] = Some(Err(Error::msg(format!(
-                    "source {} out of range (n={n})",
-                    reqs[i].source
-                ))));
+                results[i] = Some(Err(faults::invalid_source_error(reqs[i].source, n)));
             } else {
                 valid.push(i);
             }
         }
         for chunk in valid.chunks(MAX_FUSE) {
-            let seeds: Vec<V> = chunk.iter().map(|&i| reqs[i].source).collect();
-            let lanes = seeds.len();
+            // Re-walk loop: each walk's token carries the *tightest*
+            // live lane deadline. When it expires mid-walk the engine
+            // exits within one round, the expired lanes are answered
+            // dead, and the still-live lanes re-walk — so one
+            // tight-deadline lane can only delay, never fail, its
+            // batchmates. Progress: every re-walk iteration retires at
+            // least the lane whose deadline cancelled the walk.
+            let mut live: Vec<usize> = chunk.to_vec();
             let exec_start = Instant::now();
-            let walked = catch_unwind(AssertUnwindSafe(|| {
-                if let Some(f) = &self.faults {
-                    f.before_execute(graph, spec.label);
+            loop {
+                live.retain(|&i| {
+                    if reqs[i].expired() {
+                        self.metrics.bump("deadline_exceeded", 1);
+                        self.metrics.bump("queries_fused", 1);
+                        results[i] = Some(Err(faults::deadline_error(graph, spec.label)));
+                        false
+                    } else {
+                        true
+                    }
+                });
+                if live.is_empty() {
+                    break;
                 }
-                (be.run)(&lg, params, &seeds, ws);
-            }));
-            if let Err(payload) = walked {
-                *ws = QueryWorkspace::default();
-                self.metrics.bump("engine_panics", 1);
-                self.metrics.bump("workspaces_dropped", 1);
-                if guards.breaker.record_panic(graph, spec.id, lg.version) {
-                    self.metrics.bump("breaker_trips", 1);
+                let seeds: Vec<V> = live.iter().map(|&i| reqs[i].source).collect();
+                let lanes = seeds.len();
+                let tightest = live.iter().filter_map(|&i| reqs[i].deadline).min();
+                let local = CancelToken::new();
+                let token = self.cancel.unwrap_or(&local);
+                if !token.rearm(tightest) {
+                    // Condemned before the walk started: the watchdog
+                    // already declared this worker stuck.
+                    let msg = faults::stalled_error(graph, spec.label).to_string();
+                    for &i in &live {
+                        self.metrics.bump("queries_fused", 1);
+                        results[i] = Some(Err(Error::msg(msg.clone())));
+                    }
+                    break;
                 }
-                let msg = faults::panic_error(graph, spec.label, payload.as_ref()).to_string();
-                for &i in chunk {
-                    self.metrics.bump("queries_fused", 1);
-                    results[i] = Some(Err(Error::msg(msg.clone())));
-                }
-                continue;
-            }
-            guards.breaker.record_ok(graph, spec.id);
-            // The walk is shared: each fused request's exec is the
-            // whole walk's time (vs. k walks unfused).
-            let exec = exec_start.elapsed();
-            for (lane, &i) in chunk.iter().enumerate() {
-                let output = (be.demux)(ws, lane, n);
-                self.metrics.bump("jobs_executed", 1);
-                self.metrics.bump("queries_fused", 1);
-                self.metrics.observe(&format!("exec/{}", spec.label), exec);
-                results[i] = Some(Ok(JobResult {
-                    id: reqs[i].id,
-                    algo: spec.label,
-                    output,
-                    exec,
-                    // Placeholder: run_batch stamps every Ok result
-                    // with the batch-relative latency.
-                    latency: exec,
+                let walked = catch_unwind(AssertUnwindSafe(|| {
+                    if let Some(f) = &self.faults {
+                        f.before_execute(graph, spec.label, Some(token));
+                    }
+                    (be.run)(&lg, params, &seeds, ws, Some(token));
                 }));
+                if let Err(payload) = walked {
+                    *ws = QueryWorkspace::default();
+                    self.metrics.bump("engine_panics", 1);
+                    self.metrics.bump("workspaces_dropped", 1);
+                    if guards.breaker.record_panic(graph, spec.id, lg.version) {
+                        self.metrics.bump("breaker_trips", 1);
+                    }
+                    let msg = faults::panic_error(graph, spec.label, payload.as_ref()).to_string();
+                    for &i in &live {
+                        self.metrics.bump("queries_fused", 1);
+                        results[i] = Some(Err(Error::msg(msg.clone())));
+                    }
+                    break;
+                }
+                if token.is_hard_cancelled() {
+                    let msg = faults::stalled_error(graph, spec.label).to_string();
+                    for &i in &live {
+                        self.metrics.bump("queries_fused", 1);
+                        results[i] = Some(Err(Error::msg(msg.clone())));
+                    }
+                    break;
+                }
+                if token.is_cancelled() {
+                    // The tightest lane deadline expired mid-walk: the
+                    // lane-striped state is partial for *every* lane,
+                    // so nothing is demuxed; expired lanes are retired
+                    // at the top and the rest walk again.
+                    self.metrics.bump("fused_rewalks", 1);
+                    continue;
+                }
+                if guards.breaker.record_ok(graph, spec.id) {
+                    self.metrics.bump("breaker_recoveries", 1);
+                }
+                // The walk is shared: each fused request's exec is the
+                // whole walk's time (vs. k walks unfused).
+                let exec = exec_start.elapsed();
+                for (lane, &i) in live.iter().enumerate() {
+                    let output = (be.demux)(ws, lane, n);
+                    self.metrics.bump("jobs_executed", 1);
+                    self.metrics.bump("queries_fused", 1);
+                    self.metrics.observe(&format!("exec/{}", spec.label), exec);
+                    results[i] = Some(Ok(JobResult {
+                        id: reqs[i].id,
+                        algo: spec.label,
+                        output,
+                        exec,
+                        // Placeholder: run_batch stamps every Ok result
+                        // with the batch-relative latency.
+                        latency: exec,
+                    }));
+                }
+                self.metrics.bump("fused_walks", 1);
+                self.metrics.bump("fused_lanes", lanes as u64);
+                break;
             }
-            self.metrics.bump("fused_walks", 1);
-            self.metrics.bump("fused_lanes", lanes as u64);
         }
     }
 }

@@ -24,19 +24,22 @@
 //!   that *could* fuse is visible to one fusion window, and each
 //!   graph's derived views (transpose, symmetrization) and warm
 //!   workspace arrays stay hot in one worker's cache.
-//! * **Shard worker** — owns everything it touches per request, so
-//!   the hot path takes **zero shared Mutex locks** (the shard-local
-//!   [`Metrics`] registry locks only its own, uncontended Mutex): a
-//!   plain-`Vec` [`WorkspacePool`], a shard-local [`ResultCache`]
-//!   answering repeated whole-graph analyses (SCC/CC/k-core/BCC) for
-//!   free — valid because the router pins a graph to one shard, so
-//!   that shard's cache sees every request that could hit — shard-
-//!   local metrics (merged into the coordinator's global registry
-//!   when serving ends), and a [`SnapshotCache`] of the graph
-//!   registry refreshed only when the [`GraphDirectory`] version
-//!   counter moves (one atomic load per dispatch; `load_graph`
-//!   publishes new snapshots without ever blocking request execution,
-//!   and its version bump is what invalidates cached results).
+//! * **Shard worker** — the hot path takes **no contended Mutex
+//!   locks**: a worker-owned plain-`Vec` [`WorkspacePool`] and
+//!   [`SnapshotCache`] of the graph registry (refreshed only when the
+//!   [`GraphDirectory`] version counter moves — one atomic load per
+//!   dispatch; `load_graph` publishes new snapshots without ever
+//!   blocking request execution, and its version bump is what
+//!   invalidates cached results), plus shard-level state behind
+//!   uncontended Mutexes (only the shard's one live worker takes
+//!   them, never across an engine run): a [`ResultCache`] answering
+//!   repeated whole-graph analyses (SCC/CC/k-core/BCC) for free —
+//!   valid because the router pins a graph to one shard, so that
+//!   shard's cache sees every request that could hit — and the panic
+//!   breaker. Both live in a per-shard `ShardState` rather than in
+//!   the worker so they survive watchdog respawns. Shard-local
+//!   metrics merge into the coordinator's global registry when
+//!   serving ends.
 //! * **Fusion-window admission** ([`admit_batch`]) — when the head
 //!   request's registry spec has a batch engine and the window is
 //!   nonzero, the worker keeps draining its inbox until the window
@@ -70,12 +73,30 @@
 //!   (`deadline_exceeded` counter).
 //! * **Panic isolation** — engine panics are caught inside
 //!   [`ExecCore`], answered as typed failures, and counted by a
-//!   worker-owned per-`(graph, spec)` circuit breaker (valid for the
+//!   shard-level per-`(graph, spec)` circuit breaker (valid for the
 //!   same graph→shard-affinity reason the result cache is): after
 //!   [`BREAKER_TRIP`](super::faults::BREAKER_TRIP) consecutive panics
 //!   the breaker fails identical requests fast until the graph is
-//!   republished. No shard worker dies; the corrupt workspace is
-//!   dropped, never checked back into the pool.
+//!   republished — or, with a nonzero
+//!   [`ShardConfig::breaker_cooldown`], until a half-open probe
+//!   succeeds and closes it again. No shard worker dies; the corrupt
+//!   workspace is dropped, never checked back into the pool.
+//! * **Worker supervision** — every worker shares a [`WorkerShared`]
+//!   slot with the router: before a dispatch runs it publishes
+//!   `(start, batch)` there, and on completion it takes the slot back.
+//!   With a nonzero [`ShardConfig::stall_limit`] the router (no extra
+//!   threads — it patrols between `recv_timeout` ticks) condemns any
+//!   worker whose dispatch has run past the limit: it cancels the
+//!   worker's [`CancelToken`] (engines poll it once per frontier
+//!   round / bucket epoch and bail), answers the stuck batch
+//!   [`EngineStalled`](super::faults::FailKind::EngineStalled)
+//!   (`engine_stalled` per request, `workers_respawned` once), and
+//!   spawns a fresh worker over the *same* inbox so queued requests
+//!   behind the stuck batch are preserved. The condemned worker
+//!   unwinds cooperatively, finds its inflight slot emptied, discards
+//!   its results (every request is answered exactly once) and
+//!   retires; its metrics still merge at join. State machine per
+//!   worker: healthy → stalled (inflight past the limit) → respawned.
 //!
 //! Per-shard counters: `shard_dispatches`, `window_waits`,
 //! `window_timeouts`, `registry_snapshots`, `graph_seen/<name>`, plus
@@ -92,14 +113,17 @@
 use super::directory::{ResultCache, SnapshotCache};
 use super::faults::{self, PanicBreaker};
 use super::job::{JobRequest, JobResult};
+use super::lock_or_recover;
 use super::metrics::Metrics;
 use super::server::{
     answer, BreakerHandle, CacheHandle, Coordinator, ExecCore, Guards, MAX_FUSE,
 };
+use crate::algo::cancel::CancelToken;
 use crate::algo::workspace::WorkspacePool;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvError, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread::{Scope, ScopedJoinHandle};
 use std::time::{Duration, Instant};
 
 /// Tuning knobs for the sharded server.
@@ -119,6 +143,20 @@ pub struct ShardConfig {
     /// (default 1024; `0` disables shedding — unbounded queues, the
     /// pre-backpressure behavior).
     pub inbox_cap: usize,
+    /// How long one dispatched batch may run before the router's
+    /// watchdog declares the worker stalled: cancels its token,
+    /// answers the batch
+    /// [`EngineStalled`](super::faults::FailKind::EngineStalled), and
+    /// respawns a fresh worker over the same inbox (default 30s;
+    /// `Duration::ZERO` disables the watchdog — the CLI exposes this
+    /// as `--stall-limit-ms`).
+    pub stall_limit: Duration,
+    /// Cooldown after which an open panic breaker admits exactly one
+    /// half-open probe; a successful probe closes it, another panic
+    /// re-opens it (default `Duration::ZERO` = breakers stay open
+    /// until the graph is republished — the CLI exposes this as
+    /// `--breaker-cooldown-ms`).
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for ShardConfig {
@@ -128,6 +166,56 @@ impl Default for ShardConfig {
             fusion_window: Duration::from_micros(200),
             max_batch: 64,
             inbox_cap: 1024,
+            stall_limit: Duration::from_secs(30),
+            breaker_cooldown: Duration::ZERO,
+        }
+    }
+}
+
+/// State shared between one shard worker and the router's watchdog.
+///
+/// The worker publishes each dispatch here before any engine code
+/// runs and takes it back when the dispatch completes; the watchdog
+/// takes it instead when the dispatch overruns
+/// [`ShardConfig::stall_limit`]. Whoever *takes* the slot answers the
+/// batch — that handoff is what makes "answered exactly once" hold
+/// across a respawn.
+pub(crate) struct WorkerShared {
+    /// The worker's cooperative-cancellation token, wired into its
+    /// [`ExecCore`]: condemned (hard-cancelled) by the watchdog so
+    /// in-flight engine loops bail at their next round check.
+    token: CancelToken,
+    /// `Some((dispatch start, batch))` while a dispatch is running.
+    inflight: Mutex<Option<(Instant, Vec<JobRequest>)>>,
+}
+
+impl WorkerShared {
+    fn new() -> Self {
+        WorkerShared {
+            token: CancelToken::new(),
+            inflight: Mutex::new(None),
+        }
+    }
+}
+
+/// Per-shard guard state that must **survive worker respawns**: the
+/// result cache (including negative entries) and the panic breaker.
+/// An open breaker has to stay open — and keep its half-open cooldown
+/// clock — across a respawn, or supervision would amnesty a failing
+/// engine every time a neighboring request stalled. Each Mutex is
+/// uncontended in steady state (only the shard's one live worker
+/// takes it, once per cache/breaker touch, never across an engine
+/// run) and recovers from poisoning like every coordinator-path lock.
+struct ShardState {
+    results: Mutex<ResultCache>,
+    breaker: Mutex<PanicBreaker>,
+}
+
+impl ShardState {
+    fn new(config: &ShardConfig) -> Self {
+        ShardState {
+            results: Mutex::new(ResultCache::new()),
+            breaker: Mutex::new(PanicBreaker::new().with_cooldown(config.breaker_cooldown)),
         }
     }
 }
@@ -215,29 +303,72 @@ impl ShardServer {
         let config = &self.config;
         let per_shard: Vec<Metrics> = std::thread::scope(|s| {
             let mut inboxes = Vec::with_capacity(n);
+            // Each shard's receiver sits behind an Arc<Mutex<..>> so a
+            // replacement worker can take over the *same* inbox after
+            // a respawn: requests queued behind a stuck batch are
+            // never dropped. Workers hold the lock only while
+            // receiving/admitting, never across a dispatch.
+            let mut shard_rxs: Vec<Arc<Mutex<Receiver<JobRequest>>>> = Vec::with_capacity(n);
             let mut depths: Vec<Arc<AtomicUsize>> = Vec::with_capacity(n);
-            let mut workers = Vec::with_capacity(n);
+            let mut states: Vec<Arc<ShardState>> = Vec::with_capacity(n);
+            let mut workers: Vec<Arc<WorkerShared>> = Vec::with_capacity(n);
+            let mut handles = Vec::with_capacity(n);
             for _ in 0..n {
                 let (shard_tx, shard_rx) = std::sync::mpsc::channel::<JobRequest>();
+                let shard_rx = Arc::new(Mutex::new(shard_rx));
                 let depth = Arc::new(AtomicUsize::new(0));
-                let res_tx = tx.clone();
+                let state = Arc::new(ShardState::new(config));
+                let shared = Arc::new(WorkerShared::new());
                 inboxes.push(shard_tx);
-                depths.push(Arc::clone(&depth));
-                workers.push(s.spawn(move || {
-                    let metrics = Metrics::new();
-                    shard_loop(coord, config, shard_rx, &depth, res_tx, &metrics);
-                    metrics
-                }));
+                handles.push(spawn_worker(
+                    s,
+                    coord,
+                    config,
+                    Arc::clone(&shard_rx),
+                    Arc::clone(&depth),
+                    tx.clone(),
+                    Arc::clone(&state),
+                    Arc::clone(&shared),
+                ));
+                shard_rxs.push(shard_rx);
+                depths.push(depth);
+                states.push(state);
+                workers.push(shared);
             }
             // The router: one hash (plus one atomic depth load) per
-            // request, no locks held. It answers shed and
-            // already-expired requests itself on its own result-sender
-            // clone — every accepted request is answered exactly once,
-            // shed or not. The workers hold their own clones; the
-            // router's drops after the loop, so the result channel
+            // request, no locks held on the hot path. It answers shed
+            // and already-expired requests itself on its own
+            // result-sender clone — every accepted request is answered
+            // exactly once, shed or not. With a nonzero stall limit it
+            // doubles as the watchdog: between requests (recv_timeout
+            // ticks) it patrols every worker's inflight slot — no new
+            // threads. The workers hold their own sender clones; the
+            // router's drops after the drain, so the result channel
             // still closes when the last shard finishes.
             let cap = config.inbox_cap;
-            for req in rx {
+            let stall = config.stall_limit;
+            let tick = (stall / 4).clamp(Duration::from_millis(1), Duration::from_millis(25));
+            let mut last_patrol = Instant::now();
+            loop {
+                let req = if stall.is_zero() {
+                    match rx.recv() {
+                        Ok(r) => r,
+                        Err(RecvError) => break,
+                    }
+                } else {
+                    match rx.recv_timeout(tick) {
+                        Ok(r) => r,
+                        Err(RecvTimeoutError::Timeout) => {
+                            patrol_workers(
+                                s, coord, config, &shard_rxs, &depths, &states,
+                                &mut workers, &mut handles, &tx,
+                            );
+                            last_patrol = Instant::now();
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                };
                 let t0 = Instant::now();
                 if req.expired() {
                     coord.metrics.bump("deadline_exceeded", 1);
@@ -245,25 +376,51 @@ impl ShardServer {
                     if tx.send(answer(&req, Err(err), t0, &coord.metrics)).is_err() {
                         break;
                     }
-                    continue;
-                }
-                let shard = (req.route_hash() % n as u64) as usize;
-                if cap > 0 && depths[shard].load(Ordering::Relaxed) >= cap {
-                    coord.metrics.bump("shed", 1);
-                    let err = faults::overload_error(shard, cap);
-                    if tx.send(answer(&req, Err(err), t0, &coord.metrics)).is_err() {
-                        break;
+                } else {
+                    let shard = (req.route_hash() % n as u64) as usize;
+                    if cap > 0 && depths[shard].load(Ordering::Relaxed) >= cap {
+                        coord.metrics.bump("shed", 1);
+                        let err = faults::overload_error(shard, cap);
+                        if tx.send(answer(&req, Err(err), t0, &coord.metrics)).is_err() {
+                            break;
+                        }
+                    } else {
+                        depths[shard].fetch_add(1, Ordering::Relaxed);
+                        if inboxes[shard].send(req).is_err() {
+                            break; // shard died (results receiver hung up)
+                        }
                     }
-                    continue;
                 }
-                depths[shard].fetch_add(1, Ordering::Relaxed);
-                if inboxes[shard].send(req).is_err() {
-                    break; // shard died (results receiver hung up)
+                // A steady request flood must not starve the patrol:
+                // check the clock here too, not only on idle ticks.
+                if !stall.is_zero() && last_patrol.elapsed() >= tick {
+                    patrol_workers(
+                        s, coord, config, &shard_rxs, &depths, &states, &mut workers,
+                        &mut handles, &tx,
+                    );
+                    last_patrol = Instant::now();
+                }
+            }
+            drop(inboxes);
+            // Post-disconnect drain: keep patrolling until every
+            // worker (original or replacement) has exited — a worker
+            // stuck when the client hung up would otherwise block the
+            // join forever. Replacements see the closed inbox, drain
+            // whatever is still buffered, and exit.
+            if !stall.is_zero() {
+                while handles.iter().any(|h| !h.is_finished()) {
+                    std::thread::sleep(Duration::from_millis(1));
+                    if last_patrol.elapsed() >= tick {
+                        patrol_workers(
+                            s, coord, config, &shard_rxs, &depths, &states, &mut workers,
+                            &mut handles, &tx,
+                        );
+                        last_patrol = Instant::now();
+                    }
                 }
             }
             drop(tx);
-            drop(inboxes);
-            workers
+            handles
                 .into_iter()
                 .map(|w| w.join().expect("shard worker panicked"))
                 .collect()
@@ -275,36 +432,110 @@ impl ShardServer {
     }
 }
 
+/// Spawn one shard worker over a (possibly already-used) inbox. Its
+/// metrics registry comes back through the join handle so retired and
+/// replacement workers alike merge into the global registry.
+fn spawn_worker<'scope, 'env>(
+    s: &'scope Scope<'scope, 'env>,
+    coord: &'env Coordinator,
+    config: &'env ShardConfig,
+    rx: Arc<Mutex<Receiver<JobRequest>>>,
+    depth: Arc<AtomicUsize>,
+    tx: Sender<JobResult>,
+    state: Arc<ShardState>,
+    shared: Arc<WorkerShared>,
+) -> ScopedJoinHandle<'scope, Metrics> {
+    s.spawn(move || {
+        let metrics = Metrics::new();
+        shard_loop(coord, config, &rx, &depth, tx, &metrics, &state, &shared);
+        metrics
+    })
+}
+
+/// One watchdog sweep (router thread): condemn any worker whose
+/// published dispatch has overrun [`ShardConfig::stall_limit`],
+/// answer its batch [`EngineStalled`](super::faults::FailKind::EngineStalled),
+/// and respawn a fresh worker over the same inbox.
+#[allow(clippy::too_many_arguments)]
+fn patrol_workers<'scope, 'env>(
+    s: &'scope Scope<'scope, 'env>,
+    coord: &'env Coordinator,
+    config: &'env ShardConfig,
+    shard_rxs: &[Arc<Mutex<Receiver<JobRequest>>>],
+    depths: &[Arc<AtomicUsize>],
+    states: &[Arc<ShardState>],
+    workers: &mut [Arc<WorkerShared>],
+    handles: &mut Vec<ScopedJoinHandle<'scope, Metrics>>,
+    tx: &Sender<JobResult>,
+) {
+    let stall = config.stall_limit;
+    for shard in 0..workers.len() {
+        // Taking the slot is the claim to answer this batch: the
+        // condemned worker finds it empty and discards its own
+        // results, so each request is answered exactly once.
+        let stuck = {
+            let mut inflight = lock_or_recover(&workers[shard].inflight);
+            match *inflight {
+                Some((t0, _)) if t0.elapsed() >= stall => inflight.take(),
+                _ => None,
+            }
+        };
+        let Some((t0, reqs)) = stuck else { continue };
+        workers[shard].token.cancel();
+        coord.metrics.bump("workers_respawned", 1);
+        for req in &reqs {
+            coord.metrics.bump("engine_stalled", 1);
+            let err = faults::stalled_error(&req.graph, req.algo.label);
+            let _ = tx.send(answer(req, Err(err), t0, &coord.metrics));
+        }
+        let fresh = Arc::new(WorkerShared::new());
+        workers[shard] = Arc::clone(&fresh);
+        handles.push(spawn_worker(
+            s,
+            coord,
+            config,
+            Arc::clone(&shard_rxs[shard]),
+            Arc::clone(&depths[shard]),
+            tx.clone(),
+            Arc::clone(&states[shard]),
+            fresh,
+        ));
+    }
+}
+
 /// One shard worker: fusion-window admission over its inbox, batch
 /// execution against shard-local state, results answered in dispatch
-/// order. Exits when the inbox closes (after draining it) or when the
-/// result channel hangs up.
+/// order. Exits when the inbox closes (after draining it), when the
+/// result channel hangs up, or when the watchdog takes its inflight
+/// dispatch (it has been replaced — retire without answering).
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
     coord: &Coordinator,
     config: &ShardConfig,
-    rx: Receiver<JobRequest>,
+    rx: &Mutex<Receiver<JobRequest>>,
     depth: &AtomicUsize,
     tx: Sender<JobResult>,
     metrics: &Metrics,
+    state: &ShardState,
+    shared: &WorkerShared,
 ) {
     let mut cache = SnapshotCache::new();
     let mut pool = WorkspacePool::new();
-    // Shard-local result cache: graph→shard affinity means every
-    // duplicate whole-graph query for a graph lands here, so a
-    // worker-owned (lock-free) cache sees the full hit rate.
-    let mut results_cache = ResultCache::new();
-    // Worker-owned panic breaker, valid for the same affinity reason:
-    // this worker sees every request — and so every consecutive
-    // panic — for its graphs.
-    let mut breaker = PanicBreaker::new();
     let core = ExecCore {
         engine: coord.engine(),
         metrics,
         faults: coord.fault_plan(),
+        cancel: Some(&shared.token),
     };
     let max_batch = config.max_batch.max(1);
-    let inbox = Inbox::with_depth(&rx, depth);
-    while let Ok(first) = inbox.recv() {
+    loop {
+        // The inbox lock is held only while receiving and admitting —
+        // never across a dispatch — so a replacement worker can take
+        // over this inbox while a condemned predecessor is still
+        // unwinding.
+        let guard = lock_or_recover(rx);
+        let inbox = Inbox::with_depth(&guard, depth);
+        let Ok(first) = inbox.recv() else { return };
         // Latency epoch: the head request waits from here on, so the
         // fusion-window wait counts toward reported latency.
         let t0 = Instant::now();
@@ -312,6 +543,7 @@ fn shard_loop(
         // it dead and move on to live work (the router checks too, but
         // a request can expire while queued).
         if first.expired() {
+            drop(guard);
             metrics.bump("deadline_exceeded", 1);
             let err = faults::deadline_error(&first.graph, first.algo.label);
             if tx.send(answer(&first, Err(err), t0, metrics)).is_err() {
@@ -321,6 +553,11 @@ fn shard_loop(
         }
         let mut batch = vec![first];
         admit_batch(&inbox, &mut batch, max_batch, config.fusion_window, metrics);
+        drop(guard);
+        // Heartbeat: publish the dispatch to the watchdog before any
+        // engine code runs. The clone is the price of supervision —
+        // the watchdog must be able to answer these requests itself.
+        *lock_or_recover(&shared.inflight) = Some((t0, batch.clone()));
         metrics.bump("shard_dispatches", 1);
         // One freshness check per dispatch (an atomic load; the
         // registry Mutex only on an actual publish), so the whole
@@ -354,11 +591,23 @@ fn shard_loop(
             &batch,
             |name| cache.cached(name),
             &mut ws,
+            // Shard-level handles, not worker-owned: graph→shard
+            // affinity still means this shard's cache/breaker see the
+            // full hit and consecutive-panic streams, and keeping them
+            // in ShardState lets them survive a watchdog respawn.
             &mut Guards {
-                cache: CacheHandle::Owned(&mut results_cache),
-                breaker: BreakerHandle::Owned(&mut breaker),
+                cache: CacheHandle::Shared(&state.results),
+                breaker: BreakerHandle::Shared(&state.breaker),
             },
         );
+        // Reclaim the dispatch. An empty slot means the watchdog
+        // already answered this batch and spawned a replacement over
+        // the inbox: discard these results (every request is answered
+        // exactly once) and retire — the condemned token is sticky, so
+        // this worker could never run another dispatch anyway.
+        if lock_or_recover(&shared.inflight).take().is_none() {
+            return;
+        }
         pool.checkin(ws);
         for (req, res) in batch.iter().zip(results) {
             let jr = answer(req, res, t0, metrics);

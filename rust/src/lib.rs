@@ -187,15 +187,77 @@
 //!   `EnginePanic`, `breaker_open` counter) without re-running the
 //!   dying engine. A success closes it; republishing the graph
 //!   (version bump) resets it — the same republish protocol that
-//!   invalidates cached results. Caveat: `catch_unwind` catches
-//!   panics that *unwind to the serving worker*; a panic on a
-//!   fork-join pool thread is isolated only insofar as the pool
-//!   propagates it back to the caller.
+//!   invalidates cached results. With a nonzero
+//!   [`coordinator::ShardConfig::breaker_cooldown`] (CLI
+//!   `--breaker-cooldown-ms`) an open breaker also *self-heals*: after
+//!   the cooldown it admits exactly one **half-open probe**
+//!   (`breaker_probes`); a successful probe closes it
+//!   (`breaker_recoveries`), another panic re-opens it and restarts
+//!   the cooldown:
+//!
+//!   ```text
+//!              3 consecutive panics
+//!    ┌────────┐ ──────────────────▶ ┌────────┐
+//!    │ CLOSED │                     │  OPEN  │◀─┐
+//!    └────────┘ ◀──┐                └────────┘  │ probe
+//!         ▲        │ probe ok         │ cooldown│ panics
+//!         │        │                  ▼ elapsed │
+//!         │     ┌───────────────────────┐       │
+//!         └─────│ HALF-OPEN (one probe) │───────┘
+//!               └───────────────────────┘
+//!   ```
+//!
+//!   A *first* solo panic (breaker streak 1) with deadline budget
+//!   remaining is also retried **once** on a fresh workspace
+//!   (`panic_retries`) — workspace-corruption panics heal invisibly;
+//!   deterministic panics fail typed and feed the breaker. Caveat:
+//!   `catch_unwind` catches panics that *unwind to the serving
+//!   worker*; a panic on a fork-join pool thread is isolated only
+//!   insofar as the pool propagates it back to the caller.
+//! * **`EngineStalled`** — the router's **watchdog** (no extra
+//!   threads; it patrols between `recv_timeout` ticks) found a shard
+//!   worker whose dispatched batch ran past
+//!   [`coordinator::ShardConfig::stall_limit`] (CLI
+//!   `--stall-limit-ms`, default 30s, `0` disables). The watchdog
+//!   condemns the worker's cancellation token, answers the stuck
+//!   batch `EngineStalled` (`engine_stalled` per request,
+//!   `workers_respawned` once) and spawns a fresh worker over the
+//!   *same* inbox, so queued requests behind the stuck batch survive.
+//!   Per-worker state machine: **healthy** (inflight slot empty or
+//!   young) → **stalled** (slot past the limit; token condemned) →
+//!   **respawned** (replacement owns the inbox; the condemned worker
+//!   unwinds at its next cancellation point, finds its slot taken,
+//!   discards its results and retires). Whoever takes the inflight
+//!   slot answers the batch — that handoff keeps exactly-once.
+//! * **`UnknownGraph`** / **`InvalidSource`** — the request named a
+//!   graph that was never published, or a source vertex `>= n`. Both
+//!   fail typed before any engine runs, and both are **negatively
+//!   cached** in the shard-local result cache under the same version
+//!   guard as positive entries (unknown graphs at a version-0
+//!   sentinel, bad sources at the live graph's version), so a client
+//!   retry loop hammering a bad name costs one registry probe, not
+//!   repeated resolution (`negative_hits`; publishing the graph or a
+//!   new version drops the stale negatives wholesale).
 //! * **`InvalidGraph`** — [`coordinator::Coordinator::try_load_graph`]
 //!   rejected a structurally invalid CSR (non-monotone offsets,
 //!   out-of-range targets, wrong offset totals, weight-length
 //!   mismatch) *before* publishing; serving state is untouched and the
 //!   previously published graph, if any, keeps serving.
+//!
+//! **Cancellation points.** Deadlines and the watchdog act through
+//! one mechanism: a [`algo::cancel::CancelToken`] (a shared
+//! `AtomicU64` holding a deadline or the sticky condemned flag)
+//! threaded from the request through
+//! [`coordinator::ExecCore`] into every long-running engine loop.
+//! Engines poll it **once per frontier round / bucket epoch, never
+//! per edge**: the multi-source BFS/reach round loops, the ρ- and
+//! Δ-stepping bucket loops, and the SCC trim/pivot phases all `break`
+//! (never return) on a cancelled token, so the pooled workspace is
+//! restored and stays reusable — an expired or abandoned query
+//! releases its shard within one round. Fused batches carry the
+//! *tightest* live lane deadline and re-walk surviving lanes when
+//! only some expire (`fused_rewalks`), so one impatient client cannot
+//! fail its batchmates.
 //!
 //! Coordinator-path Mutexes (pool, shared cache, directory writer,
 //! metrics, breaker) recover from poisoning

@@ -7,7 +7,8 @@
 //! pasgal stats  --suite [--scale tiny] | --graph path.bin
 //! pasgal run    --algo bfs-vgc --graph path.bin --source 0 [--tau 512] [--p 192]
 //! pasgal serve  --demo [--requests 64] [--shards N] [--fusion-window-us 200]
-//!               [--inbox-cap 1024] [--deadline-ms 0]
+//!               [--inbox-cap 1024] [--deadline-ms 0] [--stall-limit-ms 30000]
+//!               [--breaker-cooldown-ms 0]
 //! pasgal table1|table3|table4|table5|sssp|fig1|fig2   [--scale tiny]
 //! pasgal calibrate
 //! ```
@@ -137,6 +138,15 @@ USAGE: pasgal <command> [--key value ...]
             [--deadline-ms M]        per-request deadline budget; expired
                                      requests fail typed without executing
                                      (default 0 = no deadline)
+            [--stall-limit-ms M]     watchdog limit: a worker whose dispatch
+                                     runs past it is cancelled, its batch
+                                     answered EngineStalled, and a fresh
+                                     worker respawned over the same inbox
+                                     (default 30000, 0 = no watchdog)
+            [--breaker-cooldown-ms M] open panic breakers admit one half-open
+                                     probe after this cooldown; success
+                                     closes them (default 0 = stay open
+                                     until republish)
             [--tau 512] [--block 64] algorithm parameters for the demo mix
   table1 | table3 | table4 | table5 | sssp | fig1 | fig2   [--scale tiny]
   calibrate                          measure + print the sim cost model
@@ -232,6 +242,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             };
             let cx = EngineCtx {
                 engine: engine.as_ref(),
+                cancel: None,
             };
             let (out, d) =
                 pasgal::bench::time_once(|| (spec.solo)(&cx, &lg, params, src, &mut ws));
@@ -311,10 +322,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fusion_window: std::time::Duration::from_micros(args.num("fusion-window-us", 200)),
         max_batch: 64,
         inbox_cap: args.num("inbox-cap", 1024),
+        stall_limit: std::time::Duration::from_millis(args.num("stall-limit-ms", 30_000)),
+        breaker_cooldown: std::time::Duration::from_millis(args.num("breaker-cooldown-ms", 0)),
     };
     println!(
         "sharded serving: {} shards, fusion window {:?}, inbox cap {} ({}), \
-         deadline {}",
+         deadline {}, stall limit {}, breaker cooldown {}",
         config.shards.max(1),
         config.fusion_window,
         config.inbox_cap,
@@ -323,6 +336,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "none".to_string()
         } else {
             format!("{deadline_ms}ms")
+        },
+        if config.stall_limit.is_zero() {
+            "off (no watchdog)".to_string()
+        } else {
+            format!("{:?}", config.stall_limit)
+        },
+        if config.breaker_cooldown.is_zero() {
+            "off (open until republish)".to_string()
+        } else {
+            format!("{:?}", config.breaker_cooldown)
         },
     );
     let (req_tx, req_rx) = std::sync::mpsc::channel::<JobRequest>();
@@ -386,6 +409,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.metrics.counter("deadline_exceeded"),
         coord.metrics.counter("engine_panics"),
         coord.metrics.counter("breaker_open"),
+    );
+    println!(
+        "  self-healing: engine_stalled {} workers_respawned {} \
+         breaker_probes {} breaker_recoveries {} panic_retries {} \
+         negative_hits {}",
+        coord.metrics.counter("engine_stalled"),
+        coord.metrics.counter("workers_respawned"),
+        coord.metrics.counter("breaker_probes"),
+        coord.metrics.counter("breaker_recoveries"),
+        coord.metrics.counter("panic_retries"),
+        coord.metrics.counter("negative_hits"),
     );
     for name in coord.metrics.series_names() {
         if let Some(s) = coord.metrics.summary(&name) {

@@ -1,0 +1,150 @@
+//! Cooperative-cancellation tests: a condemned [`CancelToken`] aborts
+//! engine walks within one round, a pooled workspace stays fully
+//! reusable after a mid-walk abort (the next query over it is
+//! bit-identical to a fresh-workspace run), and a fused batch with
+//! mixed deadlines answers its live lanes bit-identically to solo
+//! runs while the expired lane fails typed.
+
+use pasgal::algo::api::ParseArgs;
+use pasgal::algo::cancel::CancelToken;
+use pasgal::algo::multi::{multi_bfs_vgc_ws, multi_bfs_vgc_ws_cancel};
+use pasgal::algo::sssp::{
+    delta_stepping_ws, delta_stepping_ws_cancel, rho_stepping_ws, rho_stepping_ws_cancel,
+};
+use pasgal::algo::{MultiBfsWorkspace, SsspWorkspace};
+use pasgal::coordinator::{
+    Coordinator, FailKind, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
+};
+use pasgal::graph::gen;
+use pasgal::V;
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn req(id: u64, graph: &str, algo: &str, source: V) -> JobRequest {
+    JobRequest::parse(id, graph, algo, &ParseArgs { tau: 64, block: 64 })
+        .unwrap()
+        .with_source(source)
+}
+
+#[test]
+fn condemned_token_aborts_multi_bfs_and_workspace_stays_reusable() {
+    let g = gen::road(12, 12, 7);
+    let seeds: Vec<V> = vec![0, 5, 9];
+    let mut fresh = MultiBfsWorkspace::new();
+    multi_bfs_vgc_ws(&g, &seeds, 64, None, &mut fresh);
+    let want = fresh.export_all(g.n());
+    // A pre-condemned token aborts before the first frontier round:
+    // only the seeds themselves are settled.
+    let token = CancelToken::new();
+    token.cancel();
+    let mut ws = MultiBfsWorkspace::new();
+    multi_bfs_vgc_ws_cancel(&g, &seeds, 64, None, &mut ws, Some(&token));
+    assert_ne!(ws.export_all(g.n()), want, "the walk really was cut short");
+    // The workspace a cancelled walk leaves behind must be fully
+    // reusable — this is what lets the serving layer check it back
+    // into the pool instead of dropping it like a panic.
+    multi_bfs_vgc_ws(&g, &seeds, 64, None, &mut ws);
+    assert_eq!(
+        ws.export_all(g.n()),
+        want,
+        "next query over the abandoned workspace is bit-identical to fresh"
+    );
+}
+
+#[test]
+fn condemned_token_aborts_sssp_and_workspace_stays_reusable() {
+    let g = gen::road(10, 14, 3);
+    let token = CancelToken::new();
+    token.cancel();
+    // ρ-stepping: the θ-round loop polls once per round.
+    let mut fresh = SsspWorkspace::new();
+    rho_stepping_ws(&g, 0, 64, None, &mut fresh);
+    let want = fresh.dist.export_f32(g.n());
+    let mut ws = SsspWorkspace::new();
+    rho_stepping_ws_cancel(&g, 0, 64, None, &mut ws, Some(&token));
+    rho_stepping_ws(&g, 0, 64, None, &mut ws);
+    assert_eq!(ws.dist.export_f32(g.n()), want, "rho reuse bit-identical");
+    // Δ-stepping: the bucket chain exits through the labeled break.
+    let mut dfresh = SsspWorkspace::new();
+    delta_stepping_ws(&g, 0, None, None, &mut dfresh);
+    let dwant = dfresh.dist.export_f32(g.n());
+    let mut dws = SsspWorkspace::new();
+    delta_stepping_ws_cancel(&g, 0, None, None, &mut dws, Some(&token));
+    delta_stepping_ws(&g, 0, None, None, &mut dws);
+    assert_eq!(dws.dist.export_f32(g.n()), dwant, "delta reuse bit-identical");
+}
+
+#[test]
+fn deadline_tokens_fire_and_condemned_tokens_refuse_rearm() {
+    let token = CancelToken::with_deadline(Instant::now());
+    assert!(token.is_cancelled(), "a past deadline fires immediately");
+    assert!(
+        !token.is_hard_cancelled(),
+        "a deadline expiry is not condemnation"
+    );
+    assert!(token.rearm(None), "rearm clears a deadline token");
+    assert!(!token.is_cancelled(), "rearmed inert");
+    token.cancel();
+    assert!(token.is_hard_cancelled());
+    assert!(
+        !token.rearm(None),
+        "a condemned token refuses rearm: supervision decisions stick"
+    );
+}
+
+/// Mixed deadlines inside one fused batch: the expired lane is
+/// answered `DeadlineExceeded` without executing, every live lane's
+/// output is bit-identical to a solo run on a coordinator that never
+/// saw a deadline or a batch.
+#[test]
+fn fused_batch_with_mixed_deadlines_matches_solo_for_live_lanes() {
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("g", gen::road(10, 10, 0x5));
+    let solo = Coordinator::new();
+    solo.load_graph("g", gen::road(10, 10, 0x5));
+    let mut reqs: Vec<JobRequest> = (0..6u64)
+        .map(|i| {
+            req(i, "g", "bfs-vgc", (i * 7) as V).with_budget(Duration::from_secs(3600))
+        })
+        .collect();
+    // One lane already expired when the batch forms.
+    reqs.push(req(6, "g", "bfs-vgc", 1).with_budget(Duration::ZERO));
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    for r in &reqs {
+        req_tx.send(r.clone()).unwrap();
+    }
+    drop(req_tx);
+    ShardServer::new(
+        Arc::clone(&coord),
+        ShardConfig {
+            shards: 1,
+            fusion_window: Duration::from_millis(50),
+            max_batch: 64,
+            ..ShardConfig::default()
+        },
+    )
+    .serve(req_rx, res_tx);
+    let results: HashMap<u64, JobResult> = res_rx.iter().map(|r| (r.id, r)).collect();
+    assert_eq!(results.len(), 7, "every lane answered");
+    assert!(
+        matches!(
+            results[&6].output,
+            JobOutput::Failed { kind: FailKind::DeadlineExceeded, .. }
+        ),
+        "the dead lane fails typed without poisoning its batchmates"
+    );
+    for i in 0..6u64 {
+        let want = solo.execute(&req(i, "g", "bfs-vgc", (i * 7) as V)).unwrap();
+        assert_eq!(
+            results[&i].output, want.output,
+            "live lane {i} bit-identical to its solo run"
+        );
+    }
+    assert!(
+        coord.metrics.counter("queries_fused") >= 6,
+        "the live lanes actually went through the fused path"
+    );
+}

@@ -5,7 +5,10 @@
 //! before publish — and a chaos test that holds the serving contract
 //! (every request answered exactly once, no worker dies, post-chaos
 //! results bit-identical to a fresh coordinator) under injected
-//! panics, stalls and 4× overload at once.
+//! panics, stalls and 4× overload at once — plus the self-healing
+//! layer: watchdogged workers respawned over infinite stalls, breaker
+//! recovery through half-open probes, and negative caching of typed
+//! resolution failures.
 
 use pasgal::coordinator::faults::{self, malformed};
 use pasgal::coordinator::{
@@ -103,6 +106,7 @@ fn overload_sheds_typed_and_answers_every_request() {
             fusion_window: Duration::ZERO,
             max_batch: 1,
             inbox_cap: 4,
+            ..ShardConfig::default()
         },
         &reqs,
     );
@@ -239,6 +243,7 @@ fn chaos_panics_stalls_and_overload_keep_the_contract() {
             fusion_window: Duration::from_micros(200),
             max_batch: 8,
             inbox_cap: 8,
+            ..ShardConfig::default()
         },
         &reqs,
     );
@@ -274,4 +279,167 @@ fn chaos_panics_stalls_and_overload_keep_the_contract() {
         let want = fresh.execute(&req(id, "healthy", algo, 3)).unwrap();
         assert_eq!(after.output, want.output, "{algo} bit-identical post-chaos");
     }
+}
+
+/// The self-healing chaos test: one `(graph, spec)` stalls *forever*
+/// (cancellation-interruptible park), another panics exactly to the
+/// breaker threshold, on a 2-shard watchdogged server. Contract:
+/// every request answered exactly once, the stalled dispatches come
+/// back typed `EngineStalled` with the workers respawned over the
+/// same inboxes, and the tripped breaker recovers to closed through a
+/// half-open probe — with **no** republish.
+#[test]
+fn stall_chaos_watchdog_respawns_and_breaker_recovers() {
+    faults::silence_injected_panics();
+    let coord = Arc::new(Coordinator::new());
+    coord.load_graph("healthy", gen::road(10, 10, 0xA));
+    coord.load_graph("flaky", gen::road(8, 8, 0xB));
+    coord.load_graph("stuck", gen::social(9, 8, 0xC));
+    let flaky_version = coord.graph("flaky").unwrap().version;
+    coord.set_faults(Arc::new(
+        FaultPlan::new()
+            // bfs-frontier on flaky panics exactly BREAKER_TRIP times,
+            // then runs clean — so the half-open probe can succeed.
+            .panic_on(
+                Some("flaky"),
+                Some("bfs-frontier"),
+                0,
+                faults::BREAKER_TRIP as u64,
+            )
+            // cc on flaky parks until cancelled: two of these stall
+            // flaky's own shard, so more than the breaker cooldown of
+            // wall-clock provably passes before the probe below.
+            .stall_forever(Some("flaky"), Some("cc"))
+            // And the named stall on a separate graph.
+            .stall_forever(Some("stuck"), Some("bfs-vgc")),
+    ));
+    let mut reqs: Vec<JobRequest> = Vec::new();
+    // ids 0-2: trip the breaker (3 consecutive panics).
+    for i in 0..faults::BREAKER_TRIP as u64 {
+        reqs.push(req(i, "flaky", "bfs-frontier", 0));
+    }
+    // ids 3-4: infinite stalls on flaky's shard. Each resolves only
+    // when the watchdog condemns it at the stall limit, so the probe
+    // below runs >= 2 * stall_limit > cooldown after the trip.
+    reqs.push(req(3, "flaky", "cc", 0));
+    reqs.push(req(4, "flaky", "cc", 0));
+    // id 5: the half-open probe — panic budget exhausted, runs clean.
+    reqs.push(req(5, "flaky", "bfs-frontier", 0));
+    // id 6: infinite stall on the other injected (graph, spec).
+    reqs.push(req(6, "stuck", "bfs-vgc", 0));
+    // Healthy bulk to 300 requests total.
+    for i in 7..300u64 {
+        let algo = if i % 2 == 0 { "bfs-vgc" } else { "sssp-rho" };
+        reqs.push(req(i, "healthy", algo, (i % 11) as V));
+    }
+    let (results, counts) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 2,
+            fusion_window: Duration::ZERO,
+            max_batch: 1, // one request per dispatch: FIFO order per shard
+            inbox_cap: 0,
+            stall_limit: Duration::from_millis(25),
+            breaker_cooldown: Duration::from_millis(40),
+        },
+        &reqs,
+    );
+    // Exactly-once across respawns: the watchdog answers what it
+    // takes, the condemned worker discards what was taken from it.
+    assert_eq!(results.len(), 300, "every request answered");
+    assert!(counts.values().all(|&c| c == 1), "no request answered twice");
+    // Every injected infinite stall was detected, answered typed, and
+    // its worker respawned over the same inbox.
+    for id in [3u64, 4, 6] {
+        assert_eq!(
+            fail_kind(&results[&id]),
+            Some(FailKind::EngineStalled),
+            "id {id} answered EngineStalled"
+        );
+    }
+    assert_eq!(coord.metrics.counter("engine_stalled"), 3);
+    assert!(
+        coord.metrics.counter("workers_respawned") >= 3,
+        "each stalled dispatch respawns its worker"
+    );
+    // The breaker tripped on the panics, then recovered to closed
+    // through a half-open probe — no republish happened.
+    assert!(coord.metrics.counter("breaker_trips") >= 1, "breaker tripped");
+    assert!(coord.metrics.counter("breaker_probes") >= 1, "probe admitted");
+    assert!(
+        coord.metrics.counter("breaker_recoveries") >= 1,
+        "probe success closed the breaker"
+    );
+    assert_eq!(
+        fail_kind(&results[&5]),
+        None,
+        "the probe request itself answered successfully"
+    );
+    assert_eq!(
+        coord.graph("flaky").unwrap().version,
+        flaky_version,
+        "recovery happened without a republish"
+    );
+    // And the healthy bulk served normally throughout.
+    assert!(results
+        .values()
+        .filter(|r| r.id >= 7)
+        .all(|r| fail_kind(r).is_none()));
+}
+
+/// Typed `UnknownGraph` / `InvalidSource` failures are **negatively
+/// cached** under the same version guard as positive entries: the
+/// repeat costs one cache probe (`negative_hits`), and publishing the
+/// graph (or a new version) drops the stale negatives.
+#[test]
+fn unknown_graphs_and_bad_sources_are_negatively_cached() {
+    let coord = Coordinator::new();
+    coord.load_graph("g", gen::road(6, 6, 1));
+    // Unknown graph: the first resolution fails typed...
+    let err = coord.execute(&req(0, "ghost", "bfs-vgc", 0)).unwrap_err();
+    assert_eq!(
+        FailKind::classify(&err.to_string()),
+        FailKind::UnknownGraph,
+        "first miss is typed UnknownGraph"
+    );
+    // ...and the repeat is served from the negative cache.
+    let hit = coord.execute(&req(1, "ghost", "bfs-vgc", 0)).unwrap();
+    assert!(
+        matches!(
+            hit.output,
+            JobOutput::Failed { kind: FailKind::UnknownGraph, .. }
+        ),
+        "repeat served as a cached typed failure"
+    );
+    assert_eq!(coord.metrics.counter("negative_hits"), 1);
+    // Publishing the graph drops the unknown-graph negative: the same
+    // request now executes.
+    coord.load_graph("ghost", gen::road(5, 5, 2));
+    let ok = coord.execute(&req(2, "ghost", "bfs-vgc", 0)).unwrap();
+    assert!(matches!(ok.output, JobOutput::Bfs { .. }));
+    // Bad source on a live graph: same protocol, keyed by source.
+    let err = coord.execute(&req(3, "g", "bfs-vgc", 9999)).unwrap_err();
+    assert_eq!(
+        FailKind::classify(&err.to_string()),
+        FailKind::InvalidSource
+    );
+    let hit = coord.execute(&req(4, "g", "bfs-vgc", 9999)).unwrap();
+    assert!(matches!(
+        hit.output,
+        JobOutput::Failed { kind: FailKind::InvalidSource, .. }
+    ));
+    assert_eq!(coord.metrics.counter("negative_hits"), 2);
+    // A *different* bad source is its own entry: first occurrence is
+    // a miss, not a hit on source 9999's entry.
+    coord.execute(&req(5, "g", "bfs-vgc", 8888)).unwrap_err();
+    assert_eq!(coord.metrics.counter("negative_hits"), 2);
+    // Republishing bumps the version and drops the stale negatives:
+    // the old bad source resolves fresh (still bad, but recomputed).
+    coord.load_graph("g", gen::road(6, 6, 1));
+    coord.execute(&req(6, "g", "bfs-vgc", 9999)).unwrap_err();
+    assert_eq!(
+        coord.metrics.counter("negative_hits"),
+        2,
+        "version guard dropped the stale negative"
+    );
 }
