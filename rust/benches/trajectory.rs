@@ -1,0 +1,44 @@
+//! Serving-trajectory bench: sweep the sharded server over shard
+//! counts × graph classes × every registered algorithm and write the
+//! machine-readable `pasgal-bench-serve/1` document to
+//! `BENCH_serve.json` (override with `PASGAL_TRAJ_OUT`).
+//!
+//! The document is built entirely from `Metrics::snapshot()` — the
+//! same observability surface `pasgal serve --metrics-out` exports —
+//! and is schema-validated here before it is written, so CI fails if
+//! the serving path stops producing a series for any registry
+//! algorithm.
+//!
+//! Sweep knobs (CI smoke shrinks them): `PASGAL_TRAJ_SIDE` (road mesh
+//! side, default 48), `PASGAL_TRAJ_REQS` (requests per
+//! (graph, algorithm) cell, default 6), `PASGAL_TRAJ_SHARDS` (comma
+//! list of shard counts, default `1,2,<pool width>`).
+
+use pasgal::bench::trajectory;
+
+fn main() {
+    let cfg = trajectory::TrajectoryConfig::from_env();
+    println!(
+        "trajectory sweep: side={} reqs/algo={} shards={:?} ({} algorithms)",
+        cfg.side,
+        cfg.reqs_per_algo,
+        cfg.shard_counts,
+        trajectory::swept_specs().len()
+    );
+    let t0 = std::time::Instant::now();
+    let json = trajectory::run(&cfg);
+    if let Err(problems) = trajectory::validate(&json) {
+        for p in &problems {
+            eprintln!("trajectory: schema violation: {p}");
+        }
+        panic!("emitted document failed schema validation");
+    }
+    let out = std::env::var("PASGAL_TRAJ_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    std::fs::write(&out, &json).expect("write BENCH_serve.json");
+    println!(
+        "wrote {out} ({} bytes, schema {}) in {:.2}s",
+        json.len(),
+        trajectory::SCHEMA,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -16,7 +16,6 @@
 //! [`AlgoSpec`]: super::AlgoSpec
 
 use super::{BatchEngine, EngineCtx, Params, QueryOutput};
-use crate::algo::cancel::CancelToken;
 use crate::algo::workspace::QueryWorkspace;
 use crate::algo::{bcc, bfs, cc, kcore, multi, scc, sssp, UNREACHED};
 use crate::coordinator::dense::DenseBlock;
@@ -106,14 +105,14 @@ pub(super) fn parse_block(args: &super::ParseArgs) -> Params {
 // ---------------------------------------------------------------
 
 pub(super) fn bfs_vgc_solo(
-    _cx: &EngineCtx,
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     p: Params,
     src: V,
     ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
     let g = &*lg.graph;
-    bfs::vgc_bfs_ws(g, src, p.tau, None, &mut ws.bfs);
+    bfs::vgc_bfs_ws(g, src, p.tau, cx.recorder().as_deref_mut(), &mut ws.bfs);
     ws.bfs.dist.export_into(g.n(), &mut ws.out_u32);
     Ok(summarize_bfs(&ws.out_u32))
 }
@@ -123,13 +122,20 @@ pub(super) fn bfs_vgc_traced(lg: &LoadedGraph, p: Params, src: V, trace: &mut Al
 }
 
 pub(super) fn bfs_vgc_batch_run(
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     p: Params,
     seeds: &[V],
     ws: &mut QueryWorkspace,
-    cancel: Option<&CancelToken>,
 ) {
-    multi::multi_bfs_vgc_ws_cancel(&lg.graph, seeds, p.tau, None, &mut ws.multi_bfs, cancel);
+    multi::multi_bfs_vgc_ws_cancel(
+        &lg.graph,
+        seeds,
+        p.tau,
+        cx.recorder().as_deref_mut(),
+        &mut ws.multi_bfs,
+        cx.cancel,
+    );
 }
 
 pub(super) fn bfs_batch_demux(ws: &mut QueryWorkspace, lane: usize, n: usize) -> QueryOutput {
@@ -143,13 +149,17 @@ pub(super) static BFS_VGC_BATCH: BatchEngine = BatchEngine {
 };
 
 pub(super) fn bfs_frontier_solo(
-    _cx: &EngineCtx,
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     _p: Params,
     src: V,
     _ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
-    Ok(summarize_bfs(&bfs::frontier_bfs(&lg.graph, src, None)))
+    Ok(summarize_bfs(&bfs::frontier_bfs(
+        &lg.graph,
+        src,
+        cx.recorder().as_deref_mut(),
+    )))
 }
 
 pub(super) fn bfs_frontier_traced(lg: &LoadedGraph, _p: Params, src: V, trace: &mut AlgoTrace) {
@@ -157,14 +167,20 @@ pub(super) fn bfs_frontier_traced(lg: &LoadedGraph, _p: Params, src: V, trace: &
 }
 
 pub(super) fn bfs_diropt_solo(
-    _cx: &EngineCtx,
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     _p: Params,
     src: V,
     ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
     let g = &*lg.graph;
-    bfs::diropt_bfs_ws(g, Some(lg.transpose()), src, None, &mut ws.bfs);
+    bfs::diropt_bfs_ws(
+        g,
+        Some(lg.transpose()),
+        src,
+        cx.recorder().as_deref_mut(),
+        &mut ws.bfs,
+    );
     ws.bfs.dist.export_into(g.n(), &mut ws.out_u32);
     Ok(summarize_bfs(&ws.out_u32))
 }
@@ -174,19 +190,19 @@ pub(super) fn bfs_diropt_traced(lg: &LoadedGraph, _p: Params, src: V, trace: &mu
 }
 
 pub(super) fn bfs_diropt_batch_run(
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     _p: Params,
     seeds: &[V],
     ws: &mut QueryWorkspace,
-    cancel: Option<&CancelToken>,
 ) {
     multi::multi_bfs_diropt_ws_cancel(
         &lg.graph,
         Some(lg.transpose()),
         seeds,
-        None,
+        cx.recorder().as_deref_mut(),
         &mut ws.multi_bfs,
-        cancel,
+        cx.cancel,
     );
 }
 
@@ -200,7 +216,7 @@ pub(super) static BFS_DIROPT_BATCH: BatchEngine = BatchEngine {
 // ---------------------------------------------------------------
 
 pub(super) fn scc_vgc_solo(
-    _cx: &EngineCtx,
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     p: Params,
     _src: V,
@@ -211,9 +227,9 @@ pub(super) fn scc_vgc_solo(
         Some(lg.transpose()),
         p.tau,
         42,
-        None,
+        cx.recorder().as_deref_mut(),
         &mut ws.scc,
-        _cx.cancel,
+        cx.cancel,
     );
     Ok(summarize_scc(ws.scc.labels()))
 }
@@ -223,7 +239,7 @@ pub(super) fn scc_vgc_traced(lg: &LoadedGraph, p: Params, _src: V, trace: &mut A
 }
 
 pub(super) fn scc_multistep_solo(
-    _cx: &EngineCtx,
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     _p: Params,
     _src: V,
@@ -232,7 +248,7 @@ pub(super) fn scc_multistep_solo(
     Ok(summarize_scc(&scc::multistep_scc(
         &lg.graph,
         Some(lg.transpose()),
-        None,
+        cx.recorder().as_deref_mut(),
     )))
 }
 
@@ -245,13 +261,13 @@ pub(super) fn scc_multistep_traced(lg: &LoadedGraph, _p: Params, _src: V, trace:
 // ---------------------------------------------------------------
 
 pub(super) fn bcc_solo(
-    _cx: &EngineCtx,
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     _p: Params,
     _src: V,
     _ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
-    let r = bcc::fast_bcc(lg.symmetrized(), None);
+    let r = bcc::fast_bcc(lg.symmetrized(), cx.recorder().as_deref_mut());
     Ok(QueryOutput::Bcc {
         blocks: r.n_bcc,
         articulation: r.articulation.iter().filter(|&&a| a).count(),
@@ -267,14 +283,14 @@ pub(super) fn bcc_traced(lg: &LoadedGraph, _p: Params, _src: V, trace: &mut Algo
 // ---------------------------------------------------------------
 
 pub(super) fn sssp_rho_solo(
-    _cx: &EngineCtx,
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     p: Params,
     src: V,
     ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
     let g = &*lg.graph;
-    sssp::rho_stepping_ws_cancel(g, src, p.tau, None, &mut ws.sssp, _cx.cancel);
+    sssp::rho_stepping_ws_cancel(g, src, p.tau, cx.recorder().as_deref_mut(), &mut ws.sssp, cx.cancel);
     ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
     Ok(summarize_sssp(&ws.out_f32))
 }
@@ -284,13 +300,20 @@ pub(super) fn sssp_rho_traced(lg: &LoadedGraph, p: Params, src: V, trace: &mut A
 }
 
 pub(super) fn sssp_rho_batch_run(
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     p: Params,
     seeds: &[V],
     ws: &mut QueryWorkspace,
-    cancel: Option<&CancelToken>,
 ) {
-    multi::multi_rho_ws_cancel(&lg.graph, seeds, p.tau, None, &mut ws.multi_sssp, cancel);
+    multi::multi_rho_ws_cancel(
+        &lg.graph,
+        seeds,
+        p.tau,
+        cx.recorder().as_deref_mut(),
+        &mut ws.multi_sssp,
+        cx.cancel,
+    );
 }
 
 pub(super) fn sssp_batch_demux(ws: &mut QueryWorkspace, lane: usize, n: usize) -> QueryOutput {
@@ -304,14 +327,14 @@ pub(super) static SSSP_RHO_BATCH: BatchEngine = BatchEngine {
 };
 
 pub(super) fn sssp_delta_solo(
-    _cx: &EngineCtx,
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     _p: Params,
     src: V,
     ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
     let g = &*lg.graph;
-    sssp::delta_stepping_ws_cancel(g, src, None, None, &mut ws.sssp, _cx.cancel);
+    sssp::delta_stepping_ws_cancel(g, src, None, cx.recorder().as_deref_mut(), &mut ws.sssp, cx.cancel);
     ws.sssp.dist.export_f32_into(g.n(), &mut ws.out_f32);
     Ok(summarize_sssp(&ws.out_f32))
 }
@@ -343,7 +366,7 @@ pub(super) fn cc_solo(
 // ---------------------------------------------------------------
 
 pub(super) fn kcore_solo(
-    _cx: &EngineCtx,
+    cx: &EngineCtx,
     lg: &LoadedGraph,
     _p: Params,
     _src: V,
@@ -352,7 +375,7 @@ pub(super) fn kcore_solo(
     // Peeling requires a symmetric view; degree/core live in the
     // stamped workspace, so serving k-core is zero-allocation once
     // warm like the rest.
-    let core = kcore::par_kcore_ws(lg.symmetrized(), None, &mut ws.kcore);
+    let core = kcore::par_kcore_ws(lg.symmetrized(), cx.recorder().as_deref_mut(), &mut ws.kcore);
     Ok(summarize_kcore(core))
 }
 

@@ -56,7 +56,7 @@ pub mod registry;
 
 pub use registry::{all, find};
 
-use crate::algo::cancel::{Cancel, CancelToken};
+use crate::algo::cancel::Cancel;
 use crate::algo::workspace::QueryWorkspace;
 use crate::coordinator::directory::LoadedGraph;
 use crate::coordinator::faults::FailKind;
@@ -116,8 +116,9 @@ impl Default for ParseArgs {
 
 /// Execution-environment context handed to solo engines: everything a
 /// spec may need beyond the graph and its workspace. Today that is
-/// the optional dense engine and the cooperative-cancellation token;
-/// future backends slot in here without touching any engine signature.
+/// the optional dense engine, the cooperative-cancellation token, and
+/// the optional round-telemetry recorder; future backends slot in
+/// here without touching any engine signature.
 pub struct EngineCtx<'a> {
     /// The AOT dense-kernel engine, when one is attached.
     pub engine: Option<&'a EngineHandle>,
@@ -127,6 +128,25 @@ pub struct EngineCtx<'a> {
     /// epoch (never per edge) and exit early leaving partial state the
     /// caller must not summarize. `None` = run to completion.
     pub cancel: Cancel<'a>,
+    /// Per-round telemetry side-channel (the `Cancel`-style optional
+    /// plumbing, for observability): when set, engines that support
+    /// round recording push their [`AlgoTrace`] here and the serving
+    /// layer distills it into
+    /// [`EngineTelemetry`](crate::coordinator::trace::EngineTelemetry)
+    /// on the traced result. A `RefCell` because the context is shared
+    /// by `&` while the recorder needs `&mut`; engines borrow it only
+    /// for the duration of their run. `None` (production default)
+    /// costs one branch per round.
+    pub trace: Option<&'a core::cell::RefCell<AlgoTrace>>,
+}
+
+impl EngineCtx<'_> {
+    /// Borrow the telemetry recorder, if tracing. Engines thread
+    /// `cx.recorder().as_deref_mut()` into their
+    /// [`Recorder`](crate::sim::trace::Recorder) parameter.
+    pub fn recorder(&self) -> Option<core::cell::RefMut<'_, AlgoTrace>> {
+        self.trace.map(|c| c.borrow_mut())
+    }
 }
 
 /// Compact typed algorithm output (the full vectors stay with the
@@ -177,10 +197,11 @@ pub type TracedFn = fn(&LoadedGraph, Params, V, &mut AlgoTrace);
 /// match arms in the coordinator.
 pub struct BatchEngine {
     /// One fused walk over all `seeds` (≤ [`crate::algo::multi::MAX_LANES`]).
-    /// The token (armed with the *tightest* lane deadline by the
-    /// serving layer) is polled once per round: a cancelled walk exits
-    /// early and the caller re-walks the still-live lanes.
-    pub run: fn(&LoadedGraph, Params, &[V], &mut QueryWorkspace, Option<&CancelToken>),
+    /// The context carries the cancellation token (armed with the
+    /// *tightest* lane deadline by the serving layer; polled once per
+    /// round — a cancelled walk exits early and the caller re-walks
+    /// the still-live lanes) and the optional telemetry recorder.
+    pub run: fn(&EngineCtx, &LoadedGraph, Params, &[V], &mut QueryWorkspace),
     /// Summarize one lane of the walk just run (`lane < seeds.len()`,
     /// `n` = vertex count of the graph walked).
     pub demux: fn(&mut QueryWorkspace, usize, usize) -> QueryOutput,

@@ -6,6 +6,7 @@
 //! (shared between `cargo bench` targets and the `pasgal` CLI).
 
 pub mod suite;
+pub mod trajectory;
 
 use std::time::{Duration, Instant};
 

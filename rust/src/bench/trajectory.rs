@@ -1,0 +1,425 @@
+//! Self-measuring serving trajectory: sweep the sharded server over
+//! shard counts × graph classes × every registered algorithm and emit
+//! one machine-readable JSON document (`pasgal-bench-serve/1`) built
+//! entirely from [`crate::coordinator::Metrics::snapshot`] — the bench
+//! consumes the same observability surface operators scrape, so a
+//! regression in the metrics path is a regression here too.
+//!
+//! Each sweep cell runs a **fresh** `Coordinator` + `ShardServer`
+//! (nothing leaks between cells: caches cold, histograms empty) over a
+//! deterministic request mix covering every swept spec. Shard counts
+//! are the sweep axis because the worker pool is configured once per
+//! process (`PASGAL_THREADS`) — threads cannot vary within a run, but
+//! router width can.
+//!
+//! The emitted document is schema-checked by [`validate`], which CI
+//! runs on the artifact it uploads: well-formed JSON, the schema tag,
+//! a `latency` series, and one `exec/<label>` series for every swept
+//! registry algorithm in every cell — a new registry entry that the
+//! serving path silently drops fails the bench.
+
+use crate::algo::api::{self, AlgoSpec, ParseArgs};
+use crate::coordinator::metrics::json_escape;
+use crate::coordinator::{Coordinator, JobRequest, ShardConfig, ShardServer, Summary};
+use crate::graph::gen;
+use crate::V;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Schema tag stamped into every emitted document.
+pub const SCHEMA: &str = "pasgal-bench-serve/1";
+
+/// Sweep configuration. Env knobs (`PASGAL_TRAJ_SIDE`,
+/// `PASGAL_TRAJ_REQS`, `PASGAL_TRAJ_SHARDS`) let CI shrink the sweep
+/// to smoke size without a separate code path.
+#[derive(Debug, Clone)]
+pub struct TrajectoryConfig {
+    /// Road grid is `side × 2·side` vertices; the social graph's scale
+    /// is derived to roughly match that vertex count.
+    pub side: usize,
+    /// Requests issued per (graph, algorithm) pair in each cell.
+    pub reqs_per_algo: usize,
+    /// Shard counts to sweep (deduplicated, ≥ 1 each).
+    pub shard_counts: Vec<usize>,
+}
+
+impl TrajectoryConfig {
+    /// Smoke-sized sweep for tests and CI.
+    pub fn tiny() -> Self {
+        TrajectoryConfig {
+            side: 8,
+            reqs_per_algo: 2,
+            shard_counts: vec![1, 2],
+        }
+    }
+
+    /// Default bench sweep: up to the worker-pool width.
+    pub fn default_sweep() -> Self {
+        let max = crate::parallel::num_threads().max(1);
+        let mut shard_counts = vec![1, 2, max];
+        shard_counts.sort_unstable();
+        shard_counts.dedup();
+        TrajectoryConfig {
+            side: 48,
+            reqs_per_algo: 6,
+            shard_counts,
+        }
+    }
+
+    /// Default sweep overridden by env knobs
+    /// (`PASGAL_TRAJ_SHARDS` is a comma list, e.g. `1,2,4`).
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default_sweep();
+        cfg.side = super::env_usize("PASGAL_TRAJ_SIDE", cfg.side).max(2);
+        cfg.reqs_per_algo = super::env_usize("PASGAL_TRAJ_REQS", cfg.reqs_per_algo).max(1);
+        if let Ok(s) = std::env::var("PASGAL_TRAJ_SHARDS") {
+            let parsed: Vec<usize> = s
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .filter(|&n| n >= 1)
+                .collect();
+            if !parsed.is_empty() {
+                cfg.shard_counts = parsed;
+            }
+        }
+        cfg
+    }
+}
+
+/// The registry specs the driver sweeps: every algorithm except the
+/// AOT-engine-gated ones (a bench checkout has no dense artifacts).
+pub fn swept_specs() -> Vec<&'static AlgoSpec> {
+    api::all()
+        .iter()
+        .copied()
+        .filter(|s| !s.needs_engine)
+        .collect()
+}
+
+/// Graph classes the driver sweeps: the paper's two diameter regimes.
+pub const GRAPH_CLASSES: [&str; 2] = ["road", "social"];
+
+fn build_graph(class: &str, side: usize) -> crate::graph::Graph {
+    match class {
+        "road" => gen::road(side, 2 * side, 1),
+        _ => {
+            // Match the road graph's vertex count (2·side²) in scale.
+            let n = (2 * side * side).max(2);
+            let scale = (usize::BITS - (n - 1).leading_zeros()).max(4);
+            gen::social(scale, 8, 2)
+        }
+    }
+}
+
+struct Cell {
+    shards: usize,
+    graph: String,
+    n: usize,
+    jobs: usize,
+    failed: usize,
+    wall: Duration,
+    counters: Vec<(String, u64)>,
+    series: Vec<(String, Summary)>,
+    cache_hit_rate: f64,
+    fused_fraction: f64,
+}
+
+/// One sweep cell: fresh coordinator, one graph, every swept spec,
+/// `reqs_per_algo` requests each, served through `shards` workers.
+fn run_cell(cfg: &TrajectoryConfig, shards: usize, class: &str) -> Cell {
+    let coord = Arc::new(Coordinator::new());
+    let g = build_graph(class, cfg.side);
+    let n = g.n();
+    coord.load_graph(class, g);
+    let pargs = ParseArgs { tau: 64, block: 64 };
+    let mut reqs: Vec<JobRequest> = Vec::new();
+    let mut id = 0u64;
+    for spec in swept_specs() {
+        for _ in 0..cfg.reqs_per_algo {
+            let r = JobRequest::parse(id, class, spec.label, &pargs)
+                .expect("registry label must parse")
+                .with_source(((id * 131) % n as u64) as V);
+            reqs.push(r);
+            id += 1;
+        }
+    }
+    let config = ShardConfig {
+        shards,
+        fusion_window: Duration::from_micros(100),
+        max_batch: 64,
+        inbox_cap: 0,            // unbounded: no shedding mid-sweep
+        stall_limit: Duration::ZERO, // no watchdog noise in a bench
+        breaker_cooldown: Duration::ZERO,
+    };
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    for r in &reqs {
+        req_tx.send(r.clone()).unwrap();
+    }
+    drop(req_tx);
+    let t0 = Instant::now();
+    let _per_shard = ShardServer::new(Arc::clone(&coord), config).serve(req_rx, res_tx);
+    let wall = t0.elapsed();
+    let mut jobs = 0usize;
+    let mut failed = 0usize;
+    for res in res_rx {
+        jobs += 1;
+        if matches!(res.output, crate::coordinator::JobOutput::Failed { .. }) {
+            failed += 1;
+        }
+    }
+    // Per-shard registries merged into the global one at serve() exit.
+    let snap = coord.metrics.snapshot();
+    Cell {
+        shards,
+        graph: class.to_string(),
+        n,
+        jobs,
+        failed,
+        wall,
+        counters: snap.counters,
+        series: snap.series,
+        cache_hit_rate: snap.cache_hit_rate,
+        fused_fraction: snap.fused_fraction,
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn push_summary(out: &mut String, s: &Summary) {
+    out.push_str(&format!(
+        "{{\"count\":{},\"mean_ms\":{},\"p50_ms\":{},\"p95_ms\":{},\"p99_ms\":{},\"max_ms\":{}}}",
+        s.count,
+        fmt_f64(s.mean_ms),
+        fmt_f64(s.p50_ms),
+        fmt_f64(s.p95_ms),
+        fmt_f64(s.p99_ms),
+        fmt_f64(s.max_ms),
+    ));
+}
+
+/// Run the full sweep and render the `pasgal-bench-serve/1` document.
+pub fn run(cfg: &TrajectoryConfig) -> String {
+    let specs = swept_specs();
+    let mut labels: Vec<&str> = specs.iter().map(|s| s.label).collect();
+    labels.sort_unstable();
+    let mut cells: Vec<Cell> = Vec::new();
+    for &shards in &cfg.shard_counts {
+        for class in GRAPH_CLASSES {
+            cells.push(run_cell(cfg, shards.max(1), class));
+        }
+    }
+
+    let mut out = String::from("{\"schema\":\"");
+    out.push_str(SCHEMA);
+    out.push_str("\",\"threads\":");
+    out.push_str(&crate::parallel::num_threads().to_string());
+    out.push_str(&format!(
+        ",\"config\":{{\"side\":{},\"reqs_per_algo\":{},\"shard_counts\":[{}],\"graphs\":[",
+        cfg.side,
+        cfg.reqs_per_algo,
+        cfg.shard_counts
+            .iter()
+            .map(|n| n.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    ));
+    for (i, class) in GRAPH_CLASSES.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        json_escape(class, &mut out);
+        out.push('"');
+    }
+    out.push_str("]},\"algos\":[");
+    for (i, l) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        json_escape(l, &mut out);
+        out.push('"');
+    }
+    out.push_str("],\"cells\":[");
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"shards\":{},\"graph\":\"{}\",\"n\":{},\"jobs\":{},\"failed\":{},\"wall_ms\":{},\"jobs_per_sec\":{},\"cache_hit_rate\":{},\"fused_fraction\":{},\"counters\":{{",
+            c.shards,
+            c.graph,
+            c.n,
+            c.jobs,
+            c.failed,
+            fmt_f64(c.wall.as_secs_f64() * 1e3),
+            fmt_f64(c.jobs as f64 / c.wall.as_secs_f64().max(1e-9)),
+            fmt_f64(c.cache_hit_rate),
+            fmt_f64(c.fused_fraction),
+        ));
+        for (j, (name, v)) in c.counters.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            json_escape(name, &mut out);
+            out.push_str(&format!("\":{v}"));
+        }
+        out.push_str("},\"series\":{");
+        for (j, (name, s)) in c.series.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            json_escape(name, &mut out);
+            out.push_str("\":");
+            push_summary(&mut out, s);
+        }
+        out.push_str("}}");
+    }
+    out.push_str("],\"derived\":[");
+    // The paper's headline comparison, derived from the snapshot the
+    // same way a dashboard would: VGC BFS vs frontier BFS mean exec.
+    let mut first = true;
+    for c in &cells {
+        let mean = |label: &str| {
+            let needle = format!("exec/{label}");
+            c.series
+                .iter()
+                .find(|(n, _)| *n == needle)
+                .map(|(_, s)| s.mean_ms)
+        };
+        if let (Some(vgc), Some(frontier)) = (mean("bfs-vgc"), mean("bfs-frontier")) {
+            if vgc > 0.0 {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str(&format!(
+                    "{{\"graph\":\"{}\",\"shards\":{},\"metric\":\"vgc_vs_frontier_speedup\",\"value\":{}}}",
+                    c.graph,
+                    c.shards,
+                    fmt_f64(frontier / vgc),
+                ));
+            }
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Minimal structural JSON check (no parser crate offline): balanced
+/// braces/brackets outside strings, valid string escapes, object at
+/// the top level. Shared with the trace-line tests.
+pub fn json_well_formed(s: &str) -> bool {
+    let mut stack: Vec<char> = Vec::new();
+    let mut in_string = false;
+    let mut escaped = false;
+    let trimmed = s.trim();
+    if !trimmed.starts_with('{') {
+        return false;
+    }
+    for c in trimmed.chars() {
+        if in_string {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_string = false;
+            } else if (c as u32) < 0x20 {
+                return false; // raw control char inside a string
+            }
+            continue;
+        }
+        match c {
+            '"' => in_string = true,
+            '{' | '[' => stack.push(c),
+            '}' => {
+                if stack.pop() != Some('{') {
+                    return false;
+                }
+            }
+            ']' => {
+                if stack.pop() != Some('[') {
+                    return false;
+                }
+            }
+            _ => {}
+        }
+    }
+    !in_string && stack.is_empty()
+}
+
+/// Schema-validate an emitted document. Returns every problem found
+/// (empty ⇒ valid) so CI failures name all the missing pieces at once.
+pub fn validate(json: &str) -> Result<(), Vec<String>> {
+    let mut problems = Vec::new();
+    if !json_well_formed(json) {
+        problems.push("document is not well-formed JSON".to_string());
+    }
+    if !json.contains(&format!("\"schema\":\"{SCHEMA}\"")) {
+        problems.push(format!("missing schema tag {SCHEMA:?}"));
+    }
+    for key in ["\"config\":", "\"algos\":", "\"cells\":", "\"derived\":"] {
+        if !json.contains(key) {
+            problems.push(format!("missing top-level key {key}"));
+        }
+    }
+    if !json.contains("\"latency\":") {
+        problems.push("no latency series in any cell".to_string());
+    }
+    for spec in swept_specs() {
+        let needle = format!("\"exec/{}\":", spec.label);
+        if !json.contains(&needle) {
+            problems.push(format!(
+                "registry algorithm {:?} has no exec series in the document",
+                spec.label
+            ));
+        }
+    }
+    if problems.is_empty() {
+        Ok(())
+    } else {
+        Err(problems)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_well_formed_accepts_and_rejects() {
+        assert!(json_well_formed("{\"a\":[1,2,{\"b\":\"x\\\"y\"}]}"));
+        assert!(json_well_formed("{}"));
+        assert!(!json_well_formed("{\"a\":1"), "unbalanced brace");
+        assert!(!json_well_formed("[1,2]"), "top level must be an object");
+        assert!(!json_well_formed("{\"a\":\"unterminated}"));
+        assert!(!json_well_formed("{\"a\":[1}]"), "mismatched nesting");
+    }
+
+    #[test]
+    fn swept_specs_cover_the_registry_minus_engine_gated() {
+        let swept = swept_specs();
+        let total = api::all().len();
+        let engine_gated = api::all().iter().filter(|s| s.needs_engine).count();
+        assert_eq!(swept.len(), total - engine_gated);
+        assert!(swept.len() >= 10, "the registry holds ≥10 CPU algorithms");
+    }
+
+    #[test]
+    fn config_from_env_defaults_are_sane() {
+        let cfg = TrajectoryConfig::tiny();
+        assert!(cfg.side >= 2 && cfg.reqs_per_algo >= 1);
+        assert!(cfg.shard_counts.iter().all(|&s| s >= 1));
+    }
+}

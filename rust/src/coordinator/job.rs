@@ -40,6 +40,11 @@ pub struct JobRequest {
     /// execution (mid-window expiry). `None` (the default) never
     /// expires.
     pub deadline: Option<Instant>,
+    /// Request an end-to-end [`QueryTrace`](super::trace::QueryTrace)
+    /// for this job: spans + engine telemetry ride back on the
+    /// successful [`JobResult`]. Off by default; the serve CLI sets it
+    /// on every n-th request under `--trace-sample-n`.
+    pub trace: bool,
 }
 
 impl JobRequest {
@@ -63,6 +68,7 @@ impl JobRequest {
             params: q.params,
             source: q.source,
             deadline: None,
+            trace: false,
         })
     }
 
@@ -84,6 +90,12 @@ impl JobRequest {
         self.with_deadline(Instant::now() + budget)
     }
 
+    /// Request an end-to-end trace for this job (builder style).
+    pub fn with_trace(mut self) -> JobRequest {
+        self.trace = true;
+        self
+    }
+
     /// Has this request's deadline passed? Requests without one never
     /// expire.
     pub fn expired(&self) -> bool {
@@ -100,6 +112,7 @@ impl JobRequest {
             params: q.params,
             source: q.source,
             deadline: None,
+            trace: false,
         }
     }
 
@@ -136,6 +149,11 @@ pub struct JobResult {
     pub exec: Duration,
     /// Queue + execution (request-to-response) latency.
     pub latency: Duration,
+    /// End-to-end trace, present iff the request asked for one
+    /// ([`JobRequest::with_trace`]) and the job succeeded. Boxed so an
+    /// untraced result stays one pointer wider, not a span buffer
+    /// wider.
+    pub trace: Option<Box<super::trace::QueryTrace>>,
 }
 
 #[cfg(test)]

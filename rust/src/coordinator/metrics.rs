@@ -1,13 +1,177 @@
-//! Lightweight metrics registry: counters + latency summaries.
+//! Metrics registry: counters + bounded latency histograms + snapshot export.
+//!
+//! Counters are named `AtomicU64`s behind a map lock (warm bumps take
+//! one uncontended lock and an atomic add). Latency series are
+//! fixed-size log-bucketed atomic [`Histogram`]s: recording is
+//! lock-free after the first observation of a name, memory is O(1) in
+//! the number of observations (the histogram footprint is ~30 KiB per
+//! series, allocated once), and [`Summary`] percentiles come from a
+//! bucket scan with a bounded relative error (see [`Histogram`]).
+//!
+//! [`Metrics::snapshot`] renders the whole registry — sorted counters,
+//! sorted series summaries, and derived rates — as a stable
+//! [`MetricsSnapshot`] with Prometheus-style text and JSON encoders,
+//! which the `stats --metrics` CLI, `serve --metrics-out`, and the
+//! `bench/trajectory` driver all consume.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::lock_or_recover;
 use std::time::Duration;
 
-/// Percentile summary of a sample set.
+/// Sub-bucket resolution: 2^6 = 64 linear sub-buckets per octave.
+const SUB_BITS: u32 = 6;
+const SUB: usize = 1 << SUB_BITS;
+/// Groups: one exact group for values < 64 ns, then one per octave for
+/// the 58 remaining magnitudes of a u64 nanosecond value.
+const GROUPS: usize = 64 - SUB_BITS as usize + 1;
+/// Total bucket count (59 × 64 = 3776; ~30 KiB of `AtomicU64`s).
+const NUM_BUCKETS: usize = GROUPS * SUB;
+
+/// Fixed-size log-bucketed histogram of nanosecond durations.
+///
+/// Values below 64 ns land in exact unit-width buckets; every larger
+/// value lands in one of 64 linear sub-buckets of its octave
+/// `[2^k, 2^(k+1))`, so the bucket width is at most `value / 64`
+/// (relative error ≤ 1.5625%, ≤ 0.79% reporting bucket midpoints).
+/// Count, sum, and max are kept in dedicated atomics, so `mean` and
+/// `max` are exact; only percentiles carry the bucket error.
+///
+/// All operations are lock-free; `record` is a handful of relaxed
+/// atomic RMWs. Histograms merge bucket-wise (shard registries fold
+/// into the global one exactly like counters).
+pub struct Histogram {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+    buckets: Box<[AtomicU64]>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Index of the bucket covering `ns`.
+#[inline]
+fn bucket_index(ns: u64) -> usize {
+    if ns < SUB as u64 {
+        ns as usize
+    } else {
+        let msb = 63 - ns.leading_zeros();
+        let shift = msb - SUB_BITS;
+        let group = (shift + 1) as usize;
+        let sub = ((ns >> shift) as usize) & (SUB - 1);
+        (group << SUB_BITS) | sub
+    }
+}
+
+/// Midpoint (in ns) of bucket `idx` — the value percentiles report.
+#[inline]
+fn bucket_mid_ns(idx: usize) -> f64 {
+    let group = idx >> SUB_BITS;
+    let sub = (idx & (SUB - 1)) as u64;
+    if group == 0 {
+        sub as f64
+    } else {
+        let shift = (group - 1) as u32;
+        let lo = (sub + SUB as u64) << shift;
+        lo as f64 + (1u64 << shift) as f64 / 2.0
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let buckets: Box<[AtomicU64]> =
+            (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            buckets,
+        }
+    }
+
+    /// Record one duration. Lock-free; relaxed atomics only.
+    pub fn record(&self, d: Duration) {
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Fixed memory footprint of one histogram in bytes (buckets +
+    /// header); the bound the bounded-memory regression test asserts.
+    pub fn footprint_bytes() -> usize {
+        NUM_BUCKETS * std::mem::size_of::<AtomicU64>()
+            + std::mem::size_of::<Histogram>()
+    }
+
+    /// Fold `other`'s observations into `self` (bucket-wise add,
+    /// max-of-max). Safe while either side is still recording; values
+    /// are snapshotted per-bucket.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = theirs.load(Ordering::Relaxed);
+            if v > 0 {
+                mine.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns
+            .fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Percentile summary from a bucket scan. No heap allocation; the
+    /// scan buffer is a fixed-size stack array, so cost is independent
+    /// of how many observations were recorded.
+    pub fn summary(&self) -> Option<Summary> {
+        let mut local = [0u64; NUM_BUCKETS];
+        for (slot, b) in local.iter_mut().zip(self.buckets.iter()) {
+            *slot = b.load(Ordering::Relaxed);
+        }
+        let total: u64 = local.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        // Smallest recorded value whose cumulative count reaches
+        // ceil(p * total) — the standard nearest-rank percentile.
+        let q = |p: f64| -> f64 {
+            let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+            let mut cum = 0u64;
+            for (i, &c) in local.iter().enumerate() {
+                cum += c;
+                if cum >= rank {
+                    return bucket_mid_ns(i) / 1e6;
+                }
+            }
+            self.max_ns.load(Ordering::Relaxed) as f64 / 1e6
+        };
+        Some(Summary {
+            count: total as usize,
+            mean_ms: self.sum_ns.load(Ordering::Relaxed) as f64
+                / total as f64
+                / 1e6,
+            p50_ms: q(0.50),
+            p95_ms: q(0.95),
+            p99_ms: q(0.99),
+            max_ms: self.max_ns.load(Ordering::Relaxed) as f64 / 1e6,
+        })
+    }
+}
+
+/// Percentile summary of a latency series.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
     pub count: usize,
@@ -18,11 +182,11 @@ pub struct Summary {
     pub max_ms: f64,
 }
 
-/// Thread-safe metrics: named counters and named latency series.
+/// Thread-safe metrics: named counters and named latency histograms.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<HashMap<String, AtomicU64>>,
-    series: Mutex<HashMap<String, Vec<f64>>>,
+    series: Mutex<HashMap<String, Arc<Histogram>>>,
 }
 
 impl Metrics {
@@ -47,6 +211,13 @@ impl Metrics {
             .fetch_add(by, Ordering::Relaxed);
     }
 
+    /// Ensure a counter exists (at its current value, or 0) so it
+    /// appears in snapshots and reports even if never bumped — used to
+    /// make end-of-run reports complete and diffable across runs.
+    pub fn register(&self, name: &str) {
+        self.bump(name, 0);
+    }
+
     /// Current counter value.
     pub fn counter(&self, name: &str) -> u64 {
         lock_or_recover(&self.counters)
@@ -55,35 +226,38 @@ impl Metrics {
             .unwrap_or(0)
     }
 
-    /// Record a latency observation.
+    /// Record a latency observation into the named histogram. Warm
+    /// series (every observation after the first for a name) are
+    /// allocation-free: one short map lock to clone the `Arc`, then a
+    /// lock-free bucket increment.
     pub fn observe(&self, name: &str, d: Duration) {
-        lock_or_recover(&self.series)
-            .entry(name.to_string())
-            .or_default()
-            .push(d.as_secs_f64() * 1e3);
+        let hist = {
+            let map = lock_or_recover(&self.series);
+            map.get(name).cloned()
+        };
+        let hist = match hist {
+            Some(h) => h,
+            None => {
+                let mut map = lock_or_recover(&self.series);
+                Arc::clone(
+                    map.entry(name.to_string())
+                        .or_insert_with(|| Arc::new(Histogram::new())),
+                )
+            }
+        };
+        hist.record(d);
     }
 
-    /// Summarize a latency series (None if empty/unknown).
+    /// The named histogram, if any observation was ever recorded.
+    pub fn histogram(&self, name: &str) -> Option<Arc<Histogram>> {
+        lock_or_recover(&self.series).get(name).cloned()
+    }
+
+    /// Summarize a latency series (None if empty/unknown). A fixed
+    /// bucket scan — cost and allocation are independent of how many
+    /// observations the series holds.
     pub fn summary(&self, name: &str) -> Option<Summary> {
-        let map = lock_or_recover(&self.series);
-        let xs = map.get(name)?;
-        if xs.is_empty() {
-            return None;
-        }
-        let mut sorted = xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let q = |p: f64| -> f64 {
-            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-            sorted[idx]
-        };
-        Some(Summary {
-            count: sorted.len(),
-            mean_ms: sorted.iter().sum::<f64>() / sorted.len() as f64,
-            p50_ms: q(0.50),
-            p95_ms: q(0.95),
-            p99_ms: q(0.99),
-            max_ms: *sorted.last().unwrap(),
-        })
+        self.histogram(name)?.summary()
     }
 
     /// All series names (sorted).
@@ -102,14 +276,14 @@ impl Metrics {
     }
 
     /// Fold another registry into this one: counters add, latency
-    /// series concatenate. The shard server uses this to aggregate
-    /// each worker's shard-local registry into the coordinator's
-    /// global one — per-shard counters (`shard_dispatches`,
-    /// `window_waits`, `window_timeouts`, `registry_snapshots`, ...)
-    /// sum across shards. Both sides' values are snapshotted before
-    /// writing, so merging is safe while either registry is still
-    /// being written to (merging a registry into itself doubles it —
-    /// don't).
+    /// histograms merge bucket-wise. The shard server uses this to
+    /// aggregate each worker's shard-local registry into the
+    /// coordinator's global one — per-shard counters
+    /// (`shard_dispatches`, `window_waits`, `window_timeouts`,
+    /// `registry_snapshots`, ...) sum across shards. Both sides'
+    /// values are snapshotted before writing, so merging is safe while
+    /// either registry is still being written to (merging a registry
+    /// into itself doubles it — don't).
     pub fn merge(&self, other: &Metrics) {
         let counters: Vec<(String, u64)> = {
             let theirs = lock_or_recover(&other.counters);
@@ -123,13 +297,22 @@ impl Metrics {
                 self.bump(&name, v);
             }
         }
-        let series: Vec<(String, Vec<f64>)> = {
+        let series: Vec<(String, Arc<Histogram>)> = {
             let theirs = lock_or_recover(&other.series);
-            theirs.iter().map(|(k, xs)| (k.clone(), xs.clone())).collect()
+            theirs
+                .iter()
+                .map(|(k, h)| (k.clone(), Arc::clone(h)))
+                .collect()
         };
-        let mut mine = lock_or_recover(&self.series);
-        for (name, xs) in series {
-            mine.entry(name).or_default().extend(xs);
+        for (name, theirs) in series {
+            let mine = {
+                let mut map = lock_or_recover(&self.series);
+                Arc::clone(
+                    map.entry(name)
+                        .or_insert_with(|| Arc::new(Histogram::new())),
+                )
+            };
+            mine.merge_from(&theirs);
         }
     }
 
@@ -159,6 +342,165 @@ impl Metrics {
         } else {
             hits / (hits + misses)
         }
+    }
+
+    /// Point-in-time snapshot of the whole registry: every counter and
+    /// every series summary in sorted name order, plus the derived
+    /// rates. The rendering of a snapshot is a pure function of its
+    /// values — two runs with equal metrics render byte-identically.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters: Vec<(String, u64)> = self
+            .counter_names()
+            .into_iter()
+            .map(|n| {
+                let v = self.counter(&n);
+                (n, v)
+            })
+            .collect();
+        let series: Vec<(String, Summary)> = self
+            .series_names()
+            .into_iter()
+            .filter_map(|n| {
+                let s = self.summary(&n)?;
+                Some((n, s))
+            })
+            .collect();
+        MetricsSnapshot {
+            counters,
+            series,
+            cache_hit_rate: self.cache_hit_rate(),
+            fused_fraction: self.fused_fraction(),
+        }
+    }
+}
+
+/// Stable, sorted, machine-readable view of a [`Metrics`] registry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// (name, value), sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// (name, summary), sorted by name.
+    pub series: Vec<(String, Summary)>,
+    pub cache_hit_rate: f64,
+    pub fused_fraction: f64,
+}
+
+/// Escape a string for a JSON string literal (quotes, backslashes,
+/// control characters).
+pub fn json_escape(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Render a finite float for JSON/Prometheus output (non-finite
+/// values, which the registry never produces on its own, render as 0).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Escape a Prometheus label value (`\`, `"`, newline).
+fn prom_escape(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Prometheus text exposition. Counter and series names carry
+    /// slashes (`exec/bfs-vgc`, `graph_seen/road`), which are invalid
+    /// in metric names, so names are encoded as label values under
+    /// three fixed metric families.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# TYPE pasgal_counter counter\n");
+        for (name, v) in &self.counters {
+            out.push_str("pasgal_counter{name=\"");
+            prom_escape(name, &mut out);
+            out.push_str(&format!("\"}} {v}\n"));
+        }
+        out.push_str("# TYPE pasgal_derived_ratio gauge\n");
+        out.push_str(&format!(
+            "pasgal_derived_ratio{{name=\"cache_hit_rate\"}} {}\n",
+            fmt_f64(self.cache_hit_rate)
+        ));
+        out.push_str(&format!(
+            "pasgal_derived_ratio{{name=\"fused_fraction\"}} {}\n",
+            fmt_f64(self.fused_fraction)
+        ));
+        out.push_str("# TYPE pasgal_series_ms gauge\n");
+        for (name, s) in &self.series {
+            let stats = [
+                ("count", s.count as f64),
+                ("mean", s.mean_ms),
+                ("p50", s.p50_ms),
+                ("p95", s.p95_ms),
+                ("p99", s.p99_ms),
+                ("max", s.max_ms),
+            ];
+            for (stat, v) in stats {
+                out.push_str("pasgal_series_ms{series=\"");
+                prom_escape(name, &mut out);
+                out.push_str(&format!("\",stat=\"{stat}\"}} {}\n", fmt_f64(v)));
+            }
+        }
+        out
+    }
+
+    /// Single-object JSON rendering (sorted keys, stable across runs
+    /// with equal values).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"schema\":\"pasgal-metrics/1\",\"counters\":{");
+        for (i, (name, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            json_escape(name, &mut out);
+            out.push_str(&format!("\":{v}"));
+        }
+        out.push_str("},\"derived\":{\"cache_hit_rate\":");
+        out.push_str(&fmt_f64(self.cache_hit_rate));
+        out.push_str(",\"fused_fraction\":");
+        out.push_str(&fmt_f64(self.fused_fraction));
+        out.push_str("},\"series\":{");
+        for (i, (name, s)) in self.series.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            json_escape(name, &mut out);
+            out.push_str(&format!(
+                "\":{{\"count\":{},\"mean_ms\":{},\"p50_ms\":{},\"p95_ms\":{},\"p99_ms\":{},\"max_ms\":{}}}",
+                s.count,
+                fmt_f64(s.mean_ms),
+                fmt_f64(s.p50_ms),
+                fmt_f64(s.p95_ms),
+                fmt_f64(s.p99_ms),
+                fmt_f64(s.max_ms),
+            ));
+        }
+        out.push_str("}}");
+        out
     }
 }
 
@@ -218,7 +560,7 @@ mod tests {
     }
 
     #[test]
-    fn merge_sums_counters_and_concatenates_series() {
+    fn merge_sums_counters_and_merges_series() {
         let global = Metrics::new();
         global.bump("jobs_executed", 2);
         global.observe("latency", Duration::from_millis(1));
@@ -253,5 +595,102 @@ mod tests {
             }
         });
         assert_eq!(m.summary("x").unwrap().count, 1000);
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounded() {
+        let mut prev = 0usize;
+        // Exponential sweep across all magnitudes plus the exact range.
+        for ns in 0..SUB as u64 {
+            let i = bucket_index(ns);
+            assert!(i >= prev || ns == 0);
+            assert!(i < NUM_BUCKETS);
+            prev = i;
+        }
+        // Continue from the first non-exact value (the sweep is
+        // monotone only from where the previous loop left off).
+        let mut v = SUB as u64;
+        while v < u64::MAX / 3 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index regressed at {v}");
+            assert!(i < NUM_BUCKETS);
+            prev = i;
+            v = v.saturating_mul(3) / 2 + 1;
+        }
+        assert!(bucket_index(u64::MAX) < NUM_BUCKETS);
+    }
+
+    #[test]
+    fn bucket_midpoint_relative_error_is_bounded() {
+        // Every value's bucket midpoint is within 1/128 of the value
+        // (half of the 1/64 bucket width), for values past the exact
+        // range.
+        let mut v = SUB as u64;
+        while v < 1 << 40 {
+            let mid = bucket_mid_ns(bucket_index(v));
+            let rel = (mid - v as f64).abs() / v as f64;
+            assert!(rel <= 1.0 / 64.0, "v={v} mid={mid} rel={rel}");
+            v = v * 7 / 4 + 3;
+        }
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined_recording() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let combined = Histogram::new();
+        for i in 1..=500u64 {
+            let d = Duration::from_micros(i * 37 % 1000 + 1);
+            if i % 2 == 0 { a.record(d) } else { b.record(d) };
+            combined.record(d);
+        }
+        let merged = Histogram::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        let (m, c) = (merged.summary().unwrap(), combined.summary().unwrap());
+        assert_eq!(m.count, c.count);
+        assert_eq!(m.p50_ms, c.p50_ms);
+        assert_eq!(m.p99_ms, c.p99_ms);
+        assert_eq!(m.max_ms, c.max_ms);
+    }
+
+    #[test]
+    fn register_makes_zero_counters_visible() {
+        let m = Metrics::new();
+        m.register("workers_respawned");
+        assert_eq!(m.counter("workers_respawned"), 0);
+        assert_eq!(m.counter_names(), vec!["workers_respawned".to_string()]);
+        // Registering an existing counter does not reset it.
+        m.bump("workers_respawned", 2);
+        m.register("workers_respawned");
+        assert_eq!(m.counter("workers_respawned"), 2);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_renders_deterministically() {
+        let m = Metrics::new();
+        m.bump("zeta", 1);
+        m.bump("alpha", 2);
+        m.bump("cache_hits", 3);
+        m.bump("cache_misses", 1);
+        m.observe("latency", Duration::from_millis(7));
+        m.observe("exec/bfs-vgc", Duration::from_millis(3));
+        let snap = m.snapshot();
+        let names: Vec<&str> = snap.counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "cache_hits", "cache_misses", "zeta"]);
+        let series: Vec<&str> = snap.series.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(series, vec!["exec/bfs-vgc", "latency"]);
+        assert!((snap.cache_hit_rate - 0.75).abs() < 1e-12);
+        // Same values → byte-identical renderings.
+        let again = m.snapshot();
+        assert_eq!(snap.to_json(), again.to_json());
+        assert_eq!(snap.to_prometheus(), again.to_prometheus());
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("pasgal_counter{name=\"cache_hits\"} 3"));
+        assert!(prom.contains("pasgal_series_ms{series=\"exec/bfs-vgc\",stat=\"count\"} 1.0000"));
+        let json = snap.to_json();
+        assert!(json.contains("\"schema\":\"pasgal-metrics/1\""));
+        assert!(json.contains("\"alpha\":2"));
+        assert!(json.contains("\"cache_hit_rate\":0.7500"));
     }
 }

@@ -53,15 +53,17 @@ pub mod job;
 pub mod metrics;
 pub mod server;
 pub mod shard;
+pub mod trace;
 
 pub use crate::algo::api::{AlgoSpec, Params, ParseArgs, Query, QueryOutput};
 pub use dense::DenseBlock;
 pub use directory::{GraphDirectory, GraphMap, LoadedGraph, ResultCache, SnapshotCache};
 pub use faults::{FailKind, FaultPlan, PanicBreaker};
 pub use job::{JobOutput, JobRequest, JobResult};
-pub use metrics::{Metrics, Summary};
+pub use metrics::{Metrics, MetricsSnapshot, Summary};
 pub use server::{workload, Coordinator};
 pub use shard::{ShardConfig, ShardServer};
+pub use trace::{EngineTelemetry, QueryTrace, TraceSampler};
 
 use std::sync::{Mutex, MutexGuard, PoisonError};
 

@@ -53,12 +53,15 @@ use super::job::{JobOutput, JobRequest, JobResult};
 use super::lock_or_recover;
 use super::metrics::Metrics;
 use super::shard::{admit_batch, Inbox};
+use super::trace::{EngineTelemetry, QueryTrace};
 use crate::algo::api::{AlgoSpec, EngineCtx, Params, Query};
 use crate::algo::cancel::CancelToken;
 use crate::algo::workspace::{QueryWorkspace, WorkspacePool};
 use crate::error::{Error, Result};
 use crate::runtime::EngineHandle;
+use crate::sim::AlgoTrace;
 use crate::V;
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, Sender};
@@ -250,29 +253,43 @@ impl Coordinator {
         graph: &str,
         spec: &'static AlgoSpec,
         params: Params,
+        traced: bool,
     ) -> Option<JobResult> {
         if !spec.cacheable {
             return None;
         }
         let submitted = Instant::now();
+        let mut qt = traced.then(QueryTrace::new);
+        if let Some(t) = qt.as_mut() {
+            t.begin("cache_probe");
+        }
         let lg = self.graph(graph)?;
         let hit = lock_or_recover(&self.results).lookup(graph, spec.id, params, lg.version)?;
         self.metrics.bump("cache_hits", 1);
         self.metrics.bump("cache_fast_path", 1);
         self.metrics.bump("jobs_executed", 1);
+        let latency = submitted.elapsed();
+        let trace = qt.map(|mut t| {
+            t.end();
+            t.seal(latency);
+            Box::new(t)
+        });
         Some(JobResult {
             id,
             algo: spec.label,
             output: (*hit).clone(),
             exec: Duration::ZERO,
-            latency: submitted.elapsed(),
+            latency,
+            trace,
         })
     }
 
     /// Execute one request immediately (no queueing).
     pub fn execute(&self, req: &JobRequest) -> Result<JobResult> {
         if !req.expired() {
-            if let Some(hit) = self.cache_fast_path(req.id, &req.graph, req.algo, req.params) {
+            if let Some(hit) =
+                self.cache_fast_path(req.id, &req.graph, req.algo, req.params, req.trace)
+            {
                 return Ok(hit);
             }
         }
@@ -288,7 +305,7 @@ impl Coordinator {
     /// carries no request id, so the returned [`JobResult::id`] is
     /// always 0 — correlate by call site.
     pub fn run_query(&self, q: &Query) -> Result<JobResult> {
-        if let Some(hit) = self.cache_fast_path(0, &q.graph, q.algo, q.params) {
+        if let Some(hit) = self.cache_fast_path(0, &q.graph, q.algo, q.params, false) {
             return Ok(hit);
         }
         self.with_workspace(|ws| {
@@ -299,6 +316,7 @@ impl Coordinator {
                 q.params,
                 q.source,
                 None,
+                false,
                 self.graph(&q.graph),
                 ws,
                 &mut self.guards(),
@@ -565,6 +583,7 @@ impl ExecCore<'_> {
             req.params,
             req.source,
             req.deadline,
+            req.trace,
             lg,
             ws,
             guards,
@@ -589,11 +608,16 @@ impl ExecCore<'_> {
         params: Params,
         source: V,
         deadline: Option<Instant>,
+        traced: bool,
         lg: Option<Arc<LoadedGraph>>,
         ws: &mut QueryWorkspace,
         guards: &mut Guards<'_>,
     ) -> Result<JobResult> {
         let submitted = Instant::now();
+        // Trace epoch = resolution start: queue time before this point
+        // shows up as the synthetic `wait` span when the serving loop
+        // re-seals with the batch-relative latency.
+        let mut qt = traced.then(QueryTrace::new);
         // Unknown graph: a typed negative entry (keyed at the version-0
         // sentinel — published graphs always carry version ≥ 1) answers
         // repeats without re-resolving; the first miss seeds it. The
@@ -603,12 +627,18 @@ impl ExecCore<'_> {
             if let Some(hit) = guards.cache.lookup_src(graph, spec.id, params, None, 0) {
                 self.metrics.bump("negative_hits", 1);
                 self.metrics.bump("jobs_executed", 1);
+                let latency = submitted.elapsed();
+                let trace = qt.take().map(|mut t| {
+                    t.seal(latency);
+                    Box::new(t)
+                });
                 return Ok(JobResult {
                     id,
                     algo: spec.label,
                     output: (*hit).clone(),
                     exec: Duration::ZERO,
-                    latency: submitted.elapsed(),
+                    latency,
+                    trace,
                 });
             }
             let err = faults::unknown_graph_error(graph);
@@ -637,12 +667,18 @@ impl ExecCore<'_> {
             {
                 self.metrics.bump("negative_hits", 1);
                 self.metrics.bump("jobs_executed", 1);
+                let latency = submitted.elapsed();
+                let trace = qt.take().map(|mut t| {
+                    t.seal(latency);
+                    Box::new(t)
+                });
                 return Ok(JobResult {
                     id,
                     algo: spec.label,
                     output: (*hit).clone(),
                     exec: Duration::ZERO,
-                    latency: submitted.elapsed(),
+                    latency,
+                    trace,
                 });
             }
             let err = faults::invalid_source_error(source, lg.graph.n());
@@ -661,7 +697,14 @@ impl ExecCore<'_> {
             return Err(err);
         }
         if spec.cacheable {
-            if let Some(hit) = guards.cache.lookup(graph, spec.id, params, lg.version) {
+            if let Some(t) = qt.as_mut() {
+                t.begin("cache_probe");
+            }
+            let hit = guards.cache.lookup(graph, spec.id, params, lg.version);
+            if let Some(t) = qt.as_mut() {
+                t.end();
+            }
+            if let Some(hit) = hit {
                 // Served for free: no engine ran, so `exec` is zero
                 // and no `exec/<label>` sample is recorded — the
                 // series keeps measuring real computes. A valid cached
@@ -669,12 +712,18 @@ impl ExecCore<'_> {
                 // answer is already known-good.
                 self.metrics.bump("cache_hits", 1);
                 self.metrics.bump("jobs_executed", 1);
+                let latency = submitted.elapsed();
+                let trace = qt.take().map(|mut t| {
+                    t.seal(latency);
+                    Box::new(t)
+                });
                 return Ok(JobResult {
                     id,
                     algo: spec.label,
                     output: (*hit).clone(),
                     exec: Duration::ZERO,
-                    latency: submitted.elapsed(),
+                    latency,
+                    trace,
                 });
             }
             self.metrics.bump("cache_misses", 1);
@@ -697,7 +746,7 @@ impl ExecCore<'_> {
         // query path performs zero O(n)/O(m) allocation (epoch-stamped
         // scratch, reused bags and export buffers).
         let exec_start = Instant::now();
-        let mut run = self.run_spec(graph, spec, params, source, deadline, &lg, ws);
+        let mut run = self.run_spec(graph, spec, params, source, deadline, &lg, ws, qt.as_mut());
         if let Err(e) = &run {
             if FailKind::classify(&e.to_string()) == FailKind::EnginePanic {
                 if guards.breaker.record_panic(graph, spec.id, lg.version) {
@@ -715,7 +764,8 @@ impl ExecCore<'_> {
                     && deadline.is_some_and(|d| Instant::now() < d)
                 {
                     self.metrics.bump("panic_retries", 1);
-                    run = self.run_spec(graph, spec, params, source, deadline, &lg, ws);
+                    run =
+                        self.run_spec(graph, spec, params, source, deadline, &lg, ws, qt.as_mut());
                     if let Err(e2) = &run {
                         if FailKind::classify(&e2.to_string()) == FailKind::EnginePanic
                             && guards.breaker.record_panic(graph, spec.id, lg.version)
@@ -743,12 +793,17 @@ impl ExecCore<'_> {
         let latency = submitted.elapsed();
         self.metrics.bump("jobs_executed", 1);
         self.metrics.observe(&format!("exec/{}", spec.label), exec);
+        let trace = qt.map(|mut t| {
+            t.seal(latency);
+            Box::new(t)
+        });
         Ok(JobResult {
             id,
             algo: spec.label,
             output,
             exec,
             latency,
+            trace,
         })
     }
 
@@ -761,6 +816,7 @@ impl ExecCore<'_> {
     /// never checked back into a pool. The fault-injection hook fires
     /// *inside* the guard, so injected panics exercise the real
     /// isolation path.
+    #[allow(clippy::too_many_arguments)]
     fn run_spec(
         &self,
         graph: &str,
@@ -770,6 +826,7 @@ impl ExecCore<'_> {
         deadline: Option<Instant>,
         lg: &LoadedGraph,
         ws: &mut QueryWorkspace,
+        mut qt: Option<&mut QueryTrace>,
     ) -> Result<JobOutput> {
         let g = &*lg.graph;
         if spec.needs_source && (source as usize) >= g.n() {
@@ -786,6 +843,13 @@ impl ExecCore<'_> {
             // already declared this worker stuck.
             return Err(faults::stalled_error(graph, spec.label));
         }
+        // Round-telemetry side-channel: engines record into the cell
+        // through `EngineCtx::recorder`; a successful traced run
+        // distills it into the trace's `EngineTelemetry`.
+        let cell = RefCell::new(AlgoTrace::new());
+        if let Some(t) = qt.as_deref_mut() {
+            t.begin("engine_run");
+        }
         let guarded = catch_unwind(AssertUnwindSafe(|| {
             if let Some(f) = &self.faults {
                 f.before_execute(graph, spec.label, Some(token));
@@ -794,6 +858,7 @@ impl ExecCore<'_> {
                 &EngineCtx {
                     engine: self.engine,
                     cancel: Some(token),
+                    trace: if qt.is_some() { Some(&cell) } else { None },
                 },
                 lg,
                 params,
@@ -801,22 +866,22 @@ impl ExecCore<'_> {
                 ws,
             )
         }));
-        match guarded {
+        let out = match guarded {
             Ok(res) => {
                 if token.is_hard_cancelled() {
                     // The watchdog condemned us mid-run; the engine
                     // exited early with partial workspace state that
                     // must not be summarized as an answer.
-                    return Err(faults::stalled_error(graph, spec.label));
-                }
-                if res.is_ok() && token.is_cancelled() {
+                    Err(faults::stalled_error(graph, spec.label))
+                } else if res.is_ok() && token.is_cancelled() {
                     // Deadline expired mid-run: the engine broke out of
                     // its round loop early, so the "output" would be a
                     // partial traversal — answer typed dead instead.
                     self.metrics.bump("deadline_exceeded", 1);
-                    return Err(faults::deadline_error(graph, spec.label));
+                    Err(faults::deadline_error(graph, spec.label))
+                } else {
+                    res
                 }
-                res
             }
             Err(payload) => {
                 *ws = QueryWorkspace::default();
@@ -824,7 +889,17 @@ impl ExecCore<'_> {
                 self.metrics.bump("workspaces_dropped", 1);
                 Err(faults::panic_error(graph, spec.label, payload.as_ref()))
             }
+        };
+        if let Some(t) = qt.as_deref_mut() {
+            t.end();
+            if out.is_ok() {
+                let at = cell.borrow();
+                if at.num_rounds() > 0 {
+                    t.telemetry = Some(EngineTelemetry::from_trace(&at));
+                }
+            }
         }
+        out
     }
 
     /// Run a batch against `lookup`: requests grouped by `(graph,
@@ -893,6 +968,13 @@ impl ExecCore<'_> {
                 let mut res = r.expect("every request answered");
                 if let Ok(jr) = res.as_mut() {
                     jr.latency = t0.elapsed(); // include batch queueing
+                    if let Some(t) = jr.trace.as_deref_mut() {
+                        // Re-seal from the batch epoch: the extra time
+                        // (fusion window, in-batch queueing) grows the
+                        // synthetic `wait` span, keeping span sums
+                        // equal to the reported latency.
+                        t.seal(jr.latency);
+                    }
                     self.metrics.observe("latency", jr.latency);
                 }
                 res
@@ -982,6 +1064,8 @@ impl ExecCore<'_> {
                 }
                 let seeds: Vec<V> = live.iter().map(|&i| reqs[i].source).collect();
                 let lanes = seeds.len();
+                let any_traced = live.iter().any(|&i| reqs[i].trace);
+                let cell = RefCell::new(AlgoTrace::new());
                 let tightest = live.iter().filter_map(|&i| reqs[i].deadline).min();
                 let local = CancelToken::new();
                 let token = self.cancel.unwrap_or(&local);
@@ -995,12 +1079,24 @@ impl ExecCore<'_> {
                     }
                     break;
                 }
+                let walk_t0 = Instant::now();
                 let walked = catch_unwind(AssertUnwindSafe(|| {
                     if let Some(f) = &self.faults {
                         f.before_execute(graph, spec.label, Some(token));
                     }
-                    (be.run)(&lg, params, &seeds, ws, Some(token));
+                    (be.run)(
+                        &EngineCtx {
+                            engine: self.engine,
+                            cancel: Some(token),
+                            trace: if any_traced { Some(&cell) } else { None },
+                        },
+                        &lg,
+                        params,
+                        &seeds,
+                        ws,
+                    );
                 }));
+                let walk_dur = walk_t0.elapsed();
                 if let Err(payload) = walked {
                     *ws = QueryWorkspace::default();
                     self.metrics.bump("engine_panics", 1);
@@ -1037,11 +1133,33 @@ impl ExecCore<'_> {
                 // The walk is shared: each fused request's exec is the
                 // whole walk's time (vs. k walks unfused).
                 let exec = exec_start.elapsed();
+                let telemetry = {
+                    let at = cell.borrow();
+                    (at.num_rounds() > 0).then(|| EngineTelemetry::from_trace(&at))
+                };
                 for (lane, &i) in live.iter().enumerate() {
+                    let demux_t0 = Instant::now();
                     let output = (be.demux)(ws, lane, n);
                     self.metrics.bump("jobs_executed", 1);
                     self.metrics.bump("queries_fused", 1);
                     self.metrics.observe(&format!("exec/{}", spec.label), exec);
+                    // Traced lanes share the walk's measured span and
+                    // telemetry; run_batch's latency restamp seals them.
+                    let trace = reqs[i].trace.then(|| {
+                        let mut t = QueryTrace::new_at(exec_start);
+                        t.push_span(
+                            "fused_walk",
+                            walk_t0.duration_since(exec_start),
+                            walk_dur,
+                        );
+                        t.push_span(
+                            "demux",
+                            demux_t0.duration_since(exec_start),
+                            demux_t0.elapsed(),
+                        );
+                        t.telemetry = telemetry;
+                        Box::new(t)
+                    });
                     results[i] = Some(Ok(JobResult {
                         id: reqs[i].id,
                         algo: spec.label,
@@ -1050,6 +1168,7 @@ impl ExecCore<'_> {
                         // Placeholder: run_batch stamps every Ok result
                         // with the batch-relative latency.
                         latency: exec,
+                        trace,
                     }));
                 }
                 self.metrics.bump("fused_walks", 1);
@@ -1092,6 +1211,7 @@ pub(crate) fn answer(
                 },
                 exec: Duration::ZERO,
                 latency,
+                trace: None,
             }
         }
     }
@@ -1118,6 +1238,7 @@ pub fn workload(
                 params,
                 source: rng.below(1 << 14) as V, // clamped by caller's graphs
                 deadline: None,
+                trace: false,
             }
         })
         .collect()

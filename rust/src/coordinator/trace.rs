@@ -1,0 +1,340 @@
+//! End-to-end query tracing for the serving path.
+//!
+//! A [`QueryTrace`] is a flat list of nested wall-clock spans
+//! (cache probe, engine run, fused walk, demux, ...) measured from a
+//! single epoch, plus optional per-round [`EngineTelemetry`] harvested
+//! from the engines' [`AlgoTrace`] side-channel. Traces are requested
+//! per `JobRequest` under a sampling knob (`--trace-sample-n`),
+//! attached to successful `JobResult`s, and rendered as JSON lines.
+//!
+//! Span accounting: [`QueryTrace::seal`] stamps the reported request
+//! latency and computes a synthetic top-level `wait` span covering
+//! everything the measured spans did not (inbox time, fusion-window
+//! time, inter-span gaps). By construction, `wait` plus the measured
+//! top-level spans sum exactly to the reported latency. Sealing is
+//! idempotent — when a batch path re-stamps a result's latency from
+//! the batch epoch, re-sealing just grows `wait`.
+
+use crate::sim::AlgoTrace;
+use std::time::{Duration, Instant};
+
+/// Per-round engine telemetry distilled from an [`AlgoTrace`]: the
+/// numbers behind the paper's large-diameter claim (round count is the
+/// O(D) bottleneck; local-search steps are the VGC spawns that hide
+/// scheduling overhead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EngineTelemetry {
+    /// Synchronized parallel rounds the engine executed.
+    pub rounds: usize,
+    /// Vertices expanded by the busiest round (peak frontier size).
+    pub peak_frontier: u64,
+    /// Total edges scanned across all rounds.
+    pub edges_scanned: u64,
+    /// Total parallel tasks spawned (VGC local searches).
+    pub local_search_steps: u64,
+}
+
+impl EngineTelemetry {
+    pub fn from_trace(t: &AlgoTrace) -> Self {
+        let total = t.total();
+        EngineTelemetry {
+            rounds: t.num_rounds(),
+            peak_frontier: t.peak_round_vertices(),
+            edges_scanned: total.edges,
+            local_search_steps: t.total_tasks(),
+        }
+    }
+}
+
+/// One timed span, offsets in microseconds from the trace epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Nesting depth: 0 = top-level; a span at depth d+1 is enclosed
+    /// by the nearest preceding span at depth d.
+    pub depth: u8,
+}
+
+/// A lightweight per-query trace: nested spans + engine telemetry.
+#[derive(Debug, Clone)]
+pub struct QueryTrace {
+    epoch: Instant,
+    spans: Vec<Span>,
+    /// Indices of currently open spans (a stack).
+    open: Vec<usize>,
+    /// Synthetic wait time (reported latency minus measured top-level
+    /// spans), computed by `seal`.
+    wait_us: u64,
+    /// Reported request latency, stamped by `seal`.
+    total_us: u64,
+    pub telemetry: Option<EngineTelemetry>,
+}
+
+impl Default for QueryTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QueryTrace {
+    /// A trace whose epoch is now.
+    pub fn new() -> Self {
+        Self::new_at(Instant::now())
+    }
+
+    /// A trace measured from an explicit epoch (fused walks share one
+    /// epoch across lanes).
+    pub fn new_at(epoch: Instant) -> Self {
+        QueryTrace {
+            epoch,
+            spans: Vec::new(),
+            open: Vec::new(),
+            wait_us: 0,
+            total_us: 0,
+            telemetry: None,
+        }
+    }
+
+    #[inline]
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Open a span; nested inside any currently open span.
+    pub fn begin(&mut self, name: &'static str) {
+        let depth = self.open.len().min(u8::MAX as usize) as u8;
+        self.spans.push(Span {
+            name,
+            start_us: self.now_us(),
+            dur_us: 0,
+            depth,
+        });
+        self.open.push(self.spans.len() - 1);
+    }
+
+    /// Close the innermost open span.
+    pub fn end(&mut self) {
+        if let Some(idx) = self.open.pop() {
+            let now = self.now_us();
+            let s = &mut self.spans[idx];
+            s.dur_us = now.saturating_sub(s.start_us);
+        }
+    }
+
+    /// Record an externally measured, already-complete span (the fused
+    /// path measures one walk shared by many lanes).
+    pub fn push_span(&mut self, name: &'static str, start: Duration, dur: Duration) {
+        self.spans.push(Span {
+            name,
+            start_us: start.as_micros() as u64,
+            dur_us: dur.as_micros() as u64,
+            depth: self.open.len().min(u8::MAX as usize) as u8,
+        });
+    }
+
+    /// Stamp the reported latency and account the unmeasured remainder
+    /// to a synthetic top-level `wait` span. Idempotent: re-sealing
+    /// with a larger latency (batch paths re-stamp from the batch
+    /// epoch) recomputes `wait` from scratch.
+    pub fn seal(&mut self, total: Duration) {
+        while !self.open.is_empty() {
+            self.end();
+        }
+        self.total_us = total.as_micros() as u64;
+        let measured: u64 = self
+            .spans
+            .iter()
+            .filter(|s| s.depth == 0)
+            .map(|s| s.dur_us)
+            .sum();
+        self.wait_us = self.total_us.saturating_sub(measured);
+    }
+
+    /// Measured spans (excludes the synthetic `wait`).
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Synthetic wait time computed by `seal` (µs).
+    pub fn wait_us(&self) -> u64 {
+        self.wait_us
+    }
+
+    /// Reported request latency stamped by `seal` (µs).
+    pub fn total_us(&self) -> u64 {
+        self.total_us
+    }
+
+    /// Sum of all top-level span durations including `wait` — equals
+    /// `total_us` by construction unless measured spans exceeded the
+    /// reported latency (sub-µs rounding), in which case it may exceed
+    /// it by at most the rounding error.
+    pub fn top_level_sum_us(&self) -> u64 {
+        self.wait_us
+            + self
+                .spans
+                .iter()
+                .filter(|s| s.depth == 0)
+                .map(|s| s.dur_us)
+                .sum::<u64>()
+    }
+
+    /// One JSON line (`pasgal-trace/1`): identity, total, spans
+    /// (synthetic `wait` first), telemetry (or `null`).
+    pub fn json_line(&self, id: u64, graph: &str, algo: &str) -> String {
+        use super::metrics::json_escape;
+        let mut out = String::from("{\"schema\":\"pasgal-trace/1\",\"id\":");
+        out.push_str(&id.to_string());
+        out.push_str(",\"graph\":\"");
+        json_escape(graph, &mut out);
+        out.push_str("\",\"algo\":\"");
+        json_escape(algo, &mut out);
+        out.push_str(&format!("\",\"total_us\":{},\"spans\":[", self.total_us));
+        out.push_str(&format!(
+            "{{\"name\":\"wait\",\"start_us\":0,\"dur_us\":{},\"depth\":0}}",
+            self.wait_us
+        ));
+        for s in &self.spans {
+            out.push_str(&format!(
+                ",{{\"name\":\"{}\",\"start_us\":{},\"dur_us\":{},\"depth\":{}}}",
+                s.name, s.start_us, s.dur_us, s.depth
+            ));
+        }
+        out.push_str("],\"telemetry\":");
+        match &self.telemetry {
+            Some(t) => out.push_str(&format!(
+                "{{\"rounds\":{},\"peak_frontier\":{},\"edges_scanned\":{},\"local_search_steps\":{}}}",
+                t.rounds, t.peak_frontier, t.edges_scanned, t.local_search_steps
+            )),
+            None => out.push_str("null"),
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// Client-side sampling policy for `--trace-sample-n`: marks every
+/// n-th request starting with the first (`n == 1` traces everything,
+/// `n == 0` traces nothing).
+#[derive(Debug, Clone)]
+pub struct TraceSampler {
+    n: u64,
+    seen: u64,
+}
+
+impl TraceSampler {
+    pub fn new(n: u64) -> Self {
+        TraceSampler { n, seen: 0 }
+    }
+
+    /// Whether the next request should carry a trace.
+    pub fn sample(&mut self) -> bool {
+        if self.n == 0 {
+            return false;
+        }
+        let pick = self.seen % self.n == 0;
+        self.seen += 1;
+        pick
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::sleep;
+
+    #[test]
+    fn spans_nest_and_wait_absorbs_the_rest() {
+        let mut t = QueryTrace::new();
+        t.begin("exec");
+        t.begin("cache_probe");
+        sleep(Duration::from_millis(2));
+        t.end();
+        t.begin("engine_run");
+        sleep(Duration::from_millis(2));
+        t.end();
+        t.end();
+        t.seal(Duration::from_millis(50));
+        assert_eq!(t.spans().len(), 3);
+        assert_eq!(t.spans()[0].depth, 0);
+        assert_eq!(t.spans()[1].depth, 1);
+        assert_eq!(t.spans()[2].depth, 1);
+        // Top-level spans + wait sum exactly to the sealed total.
+        assert_eq!(t.top_level_sum_us(), t.total_us());
+        assert_eq!(t.total_us(), 50_000);
+        // Children are contained in the parent.
+        let exec = t.spans()[0];
+        for child in &t.spans()[1..] {
+            assert!(child.start_us >= exec.start_us);
+            assert!(child.start_us + child.dur_us <= exec.start_us + exec.dur_us);
+        }
+    }
+
+    #[test]
+    fn seal_is_idempotent_and_restampable() {
+        let mut t = QueryTrace::new();
+        t.begin("engine_run");
+        sleep(Duration::from_millis(1));
+        t.end();
+        t.seal(Duration::from_millis(10));
+        let wait_first = t.wait_us();
+        assert_eq!(t.top_level_sum_us(), 10_000);
+        // Re-seal with a larger latency (batch restamp): wait grows.
+        t.seal(Duration::from_millis(20));
+        assert_eq!(t.top_level_sum_us(), 20_000);
+        assert!(t.wait_us() > wait_first);
+    }
+
+    #[test]
+    fn seal_closes_dangling_spans() {
+        let mut t = QueryTrace::new();
+        t.begin("engine_run");
+        t.seal(Duration::from_millis(5));
+        assert_eq!(t.spans().len(), 1);
+        assert_eq!(t.top_level_sum_us(), 5_000);
+    }
+
+    #[test]
+    fn telemetry_derives_from_algo_trace() {
+        use crate::sim::trace::TaskCost;
+        let mut at = AlgoTrace::new();
+        at.push_round(vec![
+            TaskCost { vertices: 3, edges: 10 },
+            TaskCost { vertices: 1, edges: 2 },
+        ]);
+        at.push_round(vec![TaskCost { vertices: 9, edges: 4 }]);
+        let tel = EngineTelemetry::from_trace(&at);
+        assert_eq!(tel.rounds, 2);
+        assert_eq!(tel.peak_frontier, 9);
+        assert_eq!(tel.edges_scanned, 16);
+        assert_eq!(tel.local_search_steps, 3);
+    }
+
+    #[test]
+    fn json_line_has_schema_and_escapes() {
+        let mut t = QueryTrace::new();
+        t.begin("engine_run");
+        t.end();
+        t.seal(Duration::from_micros(123));
+        let line = t.json_line(7, "gr\"aph", "bfs-vgc");
+        assert!(line.contains("\"schema\":\"pasgal-trace/1\""));
+        assert!(line.contains("\"id\":7"));
+        assert!(line.contains("gr\\\"aph"));
+        assert!(line.contains("\"name\":\"wait\""));
+        assert!(line.contains("\"telemetry\":null"));
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn sampler_picks_every_nth() {
+        let mut s = TraceSampler::new(3);
+        let picks: Vec<bool> = (0..7).map(|_| s.sample()).collect();
+        assert_eq!(picks, vec![true, false, false, true, false, false, true]);
+        let mut never = TraceSampler::new(0);
+        assert!((0..5).all(|_| !never.sample()));
+        let mut always = TraceSampler::new(1);
+        assert!((0..5).all(|_| always.sample()));
+    }
+}

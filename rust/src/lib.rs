@@ -304,6 +304,52 @@
 //! (`kcore`) were opened for serving exactly this way — try
 //! `pasgal run --algo cc --graph g.bin` or a `serve --demo` trace.
 //!
+//! ## Observability
+//!
+//! The serving path measures itself; nothing here samples wall-clock
+//! unless asked, and nothing grows with the observation count.
+//!
+//! **Bounded-histogram metrics.** Every latency series in
+//! [`coordinator::Metrics`] is a fixed-size log-bucketed atomic
+//! histogram ([`coordinator::metrics::Histogram`]): 64 sub-buckets
+//! per power-of-two octave of nanoseconds, ~30 KiB per series, total.
+//! Recording is lock-free (one `fetch_add` per bucket hit plus exact
+//! running count/sum/max), merging shard-local registries into the
+//! global one is bucket-wise addition, and
+//! [`coordinator::Metrics::summary`] reads percentiles straight from
+//! the buckets — no clone, no sort, no allocation, with relative
+//! error bounded by the bucket width (≤ 1/64 ≈ 1.6%; mean and max are
+//! exact). `tests/metrics_alloc.rs` pins this down with a counting
+//! global allocator: a million `observe` calls allocate zero bytes
+//! after the first.
+//!
+//! **End-to-end query tracing.** Any [`coordinator::JobRequest`] can
+//! ask for a [`coordinator::QueryTrace`]
+//! ([`coordinator::JobRequest::with_trace`]; the CLI samples every
+//! n-th request under `serve --trace-sample-n`). A trace is a stack
+//! of nested wall-clock spans over the serving pipeline — cache
+//! probe, engine run, fused walk, demux — sealed against the reported
+//! latency so that a synthetic top-level `wait` span absorbs inbox /
+//! fusion-window / queueing time and the top-level spans **sum
+//! exactly to the reported latency**. Engines additionally feed
+//! per-round [`coordinator::EngineTelemetry`] (rounds, peak frontier,
+//! edges scanned, local-search task count) through the same optional
+//! side-channel the simulator uses ([`sim::AlgoTrace`] via
+//! [`algo::api::EngineCtx::recorder`]) — `None` costs nothing, and
+//! unsampled requests are bit-identical to an untraced run. Traces
+//! render as one JSON line each (`pasgal-trace/1`).
+//!
+//! **Machine-readable snapshots.** [`coordinator::Metrics::snapshot`]
+//! freezes the whole registry into a sorted
+//! [`coordinator::MetricsSnapshot`] and renders it as Prometheus text
+//! or JSON (`pasgal-metrics/1`): `pasgal serve --metrics-out PATH`
+//! rewrites it periodically (atomic rename), `pasgal stats --metrics`
+//! prints one, and the `trajectory` bench sweeps shard counts × graph
+//! classes × every registry algorithm into a schema-validated
+//! `BENCH_serve.json` (`pasgal-bench-serve/1`,
+//! [`bench::trajectory`]) that CI regenerates and uploads on every
+//! push.
+//!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 

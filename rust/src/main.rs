@@ -123,6 +123,10 @@ USAGE: pasgal <command> [--key value ...]
 
   gen       --name <LJ|TW|AF|REC|...> [--scale tiny|small|medium] --out g.bin
   stats     --suite [--scale tiny]  |  --graph g.bin
+            | --metrics [--format prom|json]  run a small workload through
+                                     every registered algorithm and print
+                                     the metrics snapshot (the same format
+                                     `serve --metrics-out` writes)
   run       --algo <any registered label/alias, e.g. bfs-vgc|bfs-frontier|
                     bfs-diropt|scc-vgc|scc-multistep|bcc-fast|sssp-rho|
                     sssp-delta|cc|kcore|dense-closure> --graph g.bin
@@ -148,6 +152,16 @@ USAGE: pasgal <command> [--key value ...]
                                      closes them (default 0 = stay open
                                      until republish)
             [--tau 512] [--block 64] algorithm parameters for the demo mix
+            [--trace-sample-n N]     end-to-end trace every Nth request
+                                     (spans + per-round engine telemetry,
+                                     printed as JSON lines; 0 = off)
+            [--trace-out PATH]       write trace JSON lines to PATH instead
+                                     of stdout
+            [--metrics-out PATH]     periodically write a machine-readable
+                                     metrics snapshot to PATH (.prom/.txt =
+                                     Prometheus text, else JSON), final
+                                     write at shutdown
+            [--metrics-every-ms M]   snapshot rewrite period (default 500)
   table1 | table3 | table4 | table5 | sssp | fig1 | fig2   [--scale tiny]
   calibrate                          measure + print the sim cost model
 "
@@ -175,6 +189,9 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn cmd_stats(args: &Args) -> Result<()> {
+    if args.has("metrics") {
+        return cmd_stats_metrics(args);
+    }
     if args.has("suite") {
         println!("{}", bsuite::table1_graphs(args.scale()));
         return Ok(());
@@ -186,6 +203,47 @@ fn cmd_stats(args: &Args) -> Result<()> {
         "n={} m={} avg_deg={:.2} max_deg={} diameter_lb={} reached={}",
         s.n, s.m, s.avg_degree, s.max_degree, s.diameter_lb, s.reached
     );
+    Ok(())
+}
+
+/// `stats --metrics [--format prom|json]`: run a small in-process
+/// workload through every registered (non-engine) algorithm and print
+/// the resulting metrics snapshot — a live demo of the machine-readable
+/// export the serve path writes under `--metrics-out`.
+fn cmd_stats_metrics(args: &Args) -> Result<()> {
+    let coord = Coordinator::new();
+    coord.load_graph("road", pasgal::graph::gen::road(24, 24, 0xAF));
+    coord.load_graph("social", pasgal::graph::gen::social(9, 8, 0x17));
+    let parse_args = ParseArgs {
+        tau: args.num("tau", 512),
+        block: args.num("block", 64),
+    };
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for spec in api::all() {
+        // dense-closure needs the AOT engine; skip it in this quick demo.
+        if spec.needs_engine {
+            continue;
+        }
+        for graph in ["road", "social"] {
+            // Two identical requests per (spec, graph): the duplicate
+            // exercises result caching (cacheable specs) and fusion
+            // (fusable specs), so the snapshot shows those counters.
+            for _ in 0..2 {
+                let r = JobRequest::parse(id, graph, spec.label, &parse_args)
+                    .context("registry label must parse")?
+                    .with_source(((id * 131) % 500) as V);
+                reqs.push(r);
+                id += 1;
+            }
+        }
+    }
+    coord.run_batch(&reqs);
+    let snap = coord.metrics.snapshot();
+    match args.get("format").unwrap_or("prom") {
+        "json" => println!("{}", snap.to_json()),
+        _ => print!("{}", snap.to_prometheus()),
+    }
     Ok(())
 }
 
@@ -243,6 +301,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             let cx = EngineCtx {
                 engine: engine.as_ref(),
                 cancel: None,
+                trace: None,
             };
             let (out, d) =
                 pasgal::bench::time_once(|| (spec.solo)(&cx, &lg, params, src, &mut ws));
@@ -310,13 +369,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?;
     let mut reqs = pasgal::coordinator::workload(&["road", "social"], &algos, requests, 7);
     let deadline_ms: usize = args.num("deadline-ms", 0);
+    let sample_n: u64 = args.num("trace-sample-n", 0u64);
+    let mut sampler = pasgal::coordinator::TraceSampler::new(sample_n);
     for r in &mut reqs {
         r.source %= 4000; // clamp into the smallest loaded graph
         if deadline_ms > 0 {
             r.deadline =
                 Some(std::time::Instant::now() + std::time::Duration::from_millis(deadline_ms as u64));
         }
+        if sampler.sample() {
+            r.trace = true;
+        }
     }
+    // Results carry no graph name; remember it per id for trace lines.
+    let graph_of: HashMap<u64, String> =
+        reqs.iter().map(|r| (r.id, r.graph.clone())).collect();
     let config = ShardConfig {
         shards: args.num("shards", parallel::num_threads()),
         fusion_window: std::time::Duration::from_micros(args.num("fusion-window-us", 200)),
@@ -351,6 +418,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (req_tx, req_rx) = std::sync::mpsc::channel::<JobRequest>();
     let (res_tx, res_rx) = std::sync::mpsc::channel();
     let coord = std::sync::Arc::new(coord);
+    // Periodic machine-readable snapshot writer (--metrics-out): a
+    // scraper-friendly file rewritten every --metrics-every-ms via
+    // write-then-rename, plus one final post-merge write at shutdown.
+    let metrics_out: Option<String> = args.get("metrics-out").map(|s| s.to_string());
+    let metrics_every = std::time::Duration::from_millis(args.num("metrics-every-ms", 500u64));
+    let stop_writer = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writer = metrics_out.clone().map(|path| {
+        let coord = std::sync::Arc::clone(&coord);
+        let stop = std::sync::Arc::clone(&stop_writer);
+        std::thread::spawn(move || {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                write_metrics_snapshot(&coord.metrics, &path);
+                let mut slept = std::time::Duration::ZERO;
+                while slept < metrics_every && !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let step = std::time::Duration::from_millis(20).min(metrics_every - slept);
+                    std::thread::sleep(step);
+                    slept += step;
+                }
+            }
+        })
+    });
     let server = {
         let coord = std::sync::Arc::clone(&coord);
         std::thread::spawn(move || ShardServer::new(coord, config).serve(req_rx, res_tx))
@@ -361,6 +449,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     drop(req_tx);
     let mut done = 0usize;
+    let mut trace_lines: Vec<String> = Vec::new();
     for res in res_rx {
         done += 1;
         if done <= 5 {
@@ -372,8 +461,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 res.exec.as_millis()
             );
         }
+        if let Some(t) = &res.trace {
+            let graph = graph_of.get(&res.id).map(|s| s.as_str()).unwrap_or("");
+            trace_lines.push(t.json_line(res.id, graph, res.algo));
+        }
     }
     let per_shard = server.join().unwrap();
+    stop_writer.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
+    if let Some(path) = &metrics_out {
+        // Final write happens after the per-shard registries merged
+        // into the global one, so the file ends complete.
+        write_metrics_snapshot(&coord.metrics, path);
+        println!("metrics snapshot written to {path}");
+    }
     let wall = t0.elapsed();
     println!(
         "served {done} jobs in {:.2}s ({:.1} jobs/s, threads={})",
@@ -385,51 +488,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .iter()
         .map(|m| m.counter("shard_dispatches"))
         .collect();
+    println!("  shard dispatches: {dispatches:?}");
+    // Deterministic, complete end-of-run report: pre-register the
+    // health counters a clean run never bumps so they always appear,
+    // then dump every counter and series in sorted name order — two
+    // runs of the same workload diff line-by-line.
+    for name in [
+        "breaker_open",
+        "breaker_probes",
+        "breaker_recoveries",
+        "cache_hits",
+        "cache_misses",
+        "deadline_exceeded",
+        "engine_panics",
+        "engine_stalled",
+        "errors",
+        "negative_hits",
+        "panic_retries",
+        "shed",
+        "workers_respawned",
+    ] {
+        coord.metrics.register(name);
+    }
+    let snap = coord.metrics.snapshot();
     println!(
-        "  shard dispatches: {dispatches:?}; fused fraction {:.2} \
-         (fused {} / solo {}); window waits {} timeouts {}; registry snapshots {}",
-        coord.metrics.fused_fraction(),
-        coord.metrics.counter("queries_fused"),
-        coord.metrics.counter("queries_solo"),
-        coord.metrics.counter("window_waits"),
-        coord.metrics.counter("window_timeouts"),
-        coord.metrics.counter("registry_snapshots"),
+        "  cache hit rate {:.2}; fused fraction {:.2}",
+        snap.cache_hit_rate, snap.fused_fraction
     );
-    println!(
-        "  result cache: hit rate {:.2} (hits {} / misses {}) — duplicate \
-         whole-graph analyses (scc/cc/kcore/bcc) answered for free",
-        coord.metrics.cache_hit_rate(),
-        coord.metrics.counter("cache_hits"),
-        coord.metrics.counter("cache_misses"),
-    );
-    println!(
-        "  fault tolerance: shed {} deadline_exceeded {} engine_panics {} \
-         breaker_open {} (every request answered, typed)",
-        coord.metrics.counter("shed"),
-        coord.metrics.counter("deadline_exceeded"),
-        coord.metrics.counter("engine_panics"),
-        coord.metrics.counter("breaker_open"),
-    );
-    println!(
-        "  self-healing: engine_stalled {} workers_respawned {} \
-         breaker_probes {} breaker_recoveries {} panic_retries {} \
-         negative_hits {}",
-        coord.metrics.counter("engine_stalled"),
-        coord.metrics.counter("workers_respawned"),
-        coord.metrics.counter("breaker_probes"),
-        coord.metrics.counter("breaker_recoveries"),
-        coord.metrics.counter("panic_retries"),
-        coord.metrics.counter("negative_hits"),
-    );
-    for name in coord.metrics.series_names() {
-        if let Some(s) = coord.metrics.summary(&name) {
-            println!(
-                "  {name}: count={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms",
-                s.count, s.mean_ms, s.p50_ms, s.p95_ms, s.p99_ms
-            );
+    println!("  counters (sorted):");
+    for (name, v) in &snap.counters {
+        println!("    {name:<24} {v}");
+    }
+    println!("  series (sorted, ms):");
+    for (name, s) in &snap.series {
+        println!(
+            "    {name}: count={} mean={:.1} p50={:.1} p95={:.1} p99={:.1} max={:.1}",
+            s.count, s.mean_ms, s.p50_ms, s.p95_ms, s.p99_ms, s.max_ms
+        );
+    }
+    if sample_n > 0 {
+        println!(
+            "  traced {} of {done} requests (--trace-sample-n {sample_n})",
+            trace_lines.len()
+        );
+        match args.get("trace-out") {
+            Some(path) => {
+                let mut body = trace_lines.join("\n");
+                body.push('\n');
+                std::fs::write(path, body)
+                    .with_context(|| format!("writing trace lines to {path}"))?;
+                println!("  trace JSON lines written to {path}");
+            }
+            None => {
+                for line in &trace_lines {
+                    println!("{line}");
+                }
+            }
         }
     }
     Ok(())
+}
+
+/// Write one machine-readable metrics snapshot to `path`
+/// (Prometheus text for `.prom`/`.txt`, JSON otherwise), atomically
+/// via a write-then-rename so scrapers never see a torn file.
+fn write_metrics_snapshot(metrics: &pasgal::coordinator::Metrics, path: &str) {
+    let snap = metrics.snapshot();
+    let body = if path.ends_with(".prom") || path.ends_with(".txt") {
+        snap.to_prometheus()
+    } else {
+        snap.to_json()
+    };
+    let tmp = format!("{path}.tmp");
+    if std::fs::write(&tmp, body).is_ok() {
+        let _ = std::fs::rename(&tmp, path);
+    }
 }
 
 fn cmd_calibrate() -> Result<()> {

@@ -73,6 +73,22 @@ impl AlgoTrace {
         t
     }
 
+    /// Vertices expanded by the busiest round (peak frontier size for
+    /// frontier-synchronized algorithms).
+    pub fn peak_round_vertices(&self) -> u64 {
+        self.rounds
+            .iter()
+            .map(|r| r.total_vertices())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total parallel tasks spawned across all rounds — under VGC each
+    /// task is one local search, so this counts local-search steps.
+    pub fn total_tasks(&self) -> u64 {
+        self.rounds.iter().map(|r| r.tasks.len() as u64).sum()
+    }
+
     /// Largest single-task cost (span lower bound within rounds).
     pub fn max_task_edges(&self) -> u64 {
         self.rounds

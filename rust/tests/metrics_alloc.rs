@@ -1,0 +1,99 @@
+//! Allocation regression tests for the bounded-histogram metrics:
+//! the warm `observe` path and `summary` must not allocate at all —
+//! metrics memory is O(1) in the observation count. Enforced with a
+//! counting global allocator rather than eyeballs.
+//!
+//! The two tests share one process-global allocator counter, so they
+//! serialize on a mutex; nothing else in this binary spawns threads.
+
+use pasgal::coordinator::metrics::Histogram;
+use pasgal::coordinator::Metrics;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+struct CountingAlloc;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Serializes the tests so one test's allocations never leak into the
+/// other's measurement window.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Bytes allocated (not net of frees — any allocation counts) while
+/// running `f`.
+fn bytes_allocated_by(f: impl FnOnce()) -> u64 {
+    let before = BYTES.load(Ordering::SeqCst);
+    f();
+    BYTES.load(Ordering::SeqCst) - before
+}
+
+#[test]
+fn a_million_observes_allocate_nothing_after_the_first() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let m = Metrics::default();
+    // Cold path: the first observe materializes the histogram (one
+    // fixed ~30 KiB bucket array plus the name key).
+    m.observe("latency", Duration::from_micros(1));
+    let allocated = bytes_allocated_by(|| {
+        for i in 0..1_000_000u64 {
+            // Spread across buckets: ~1µs to ~1s.
+            m.observe("latency", Duration::from_nanos(1_000 + i * 997));
+        }
+    });
+    assert_eq!(
+        allocated, 0,
+        "warm observes must be allocation-free (got {allocated} bytes \
+         over 1M calls; histogram footprint is {} bytes total)",
+        Histogram::footprint_bytes()
+    );
+    assert_eq!(m.summary("latency").unwrap().count, 1_000_001);
+}
+
+#[test]
+fn summary_cost_is_independent_of_observation_count() {
+    // Regression for the old Vec<f64> series: summary() cloned and
+    // sorted every observation (O(n log n) time, O(n) fresh memory).
+    // Bucketed percentiles scan a fixed stack array instead, so the
+    // allocation bill is zero at any observation count.
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let m = Metrics::default();
+    for i in 0..1_000u64 {
+        m.observe("exec/bfs-vgc", Duration::from_micros(10 + i));
+    }
+    let small = bytes_allocated_by(|| {
+        let s = m.summary("exec/bfs-vgc").unwrap();
+        assert_eq!(s.count, 1_000);
+    });
+    for i in 0..100_000u64 {
+        m.observe("exec/bfs-vgc", Duration::from_micros(10 + i % 5_000));
+    }
+    let large = bytes_allocated_by(|| {
+        let s = m.summary("exec/bfs-vgc").unwrap();
+        assert_eq!(s.count, 101_000);
+    });
+    assert_eq!(small, 0, "summary over 1k observations allocates nothing");
+    assert_eq!(large, 0, "summary over 101k observations allocates nothing");
+}

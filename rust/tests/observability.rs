@@ -1,0 +1,261 @@
+//! Integration tests for the observability layer: bounded-histogram
+//! metrics merging across shard registries, end-to-end query traces
+//! on the serving path (solo and fused), engine telemetry, trace JSON
+//! rendering, and the bit-identity guarantee for unsampled requests.
+
+use pasgal::algo::api::ParseArgs;
+use pasgal::bench::trajectory::json_well_formed;
+use pasgal::coordinator::{Coordinator, JobRequest, JobResult, Metrics};
+use pasgal::graph::gen;
+use pasgal::V;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn req(id: u64, graph: &str, algo: &str, tau: usize, source: V) -> JobRequest {
+    JobRequest::parse(id, graph, algo, &ParseArgs { tau, block: 64 })
+        .unwrap()
+        .with_source(source)
+}
+
+fn coord_with_road() -> Coordinator {
+    let c = Coordinator::new();
+    c.load_graph("road", gen::road(16, 24, 1));
+    c
+}
+
+/// Reference nearest-rank percentile over the raw (exact) values.
+fn exact_percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    let rank = ((p * sorted_ms.len() as f64).ceil() as usize).clamp(1, sorted_ms.len());
+    sorted_ms[rank - 1]
+}
+
+#[test]
+fn histogram_merge_across_shard_registries_matches_reference() {
+    // Three shard-local registries record disjoint slices of one
+    // workload; merging them into a global registry must reproduce
+    // the percentiles of the combined raw data within the histogram's
+    // bucket error (≤ 1/64 relative ≈ 1.6%).
+    let shards = [Metrics::default(), Metrics::default(), Metrics::default()];
+    let mut all_ms: Vec<f64> = Vec::new();
+    // A spread covering three octaves plus a heavy tail.
+    let mut v = 0u64;
+    for ms in (1..=240u64).map(|i| 2 + i * 3) {
+        shards[(v % 3) as usize].observe("latency", Duration::from_millis(ms));
+        all_ms.push(ms as f64);
+        v += 1;
+    }
+    let global = Metrics::default();
+    for s in &shards {
+        global.merge(s);
+    }
+    all_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let s = global.summary("latency").expect("merged series exists");
+    assert_eq!(s.count, all_ms.len(), "merge keeps every observation");
+    let exact_mean = all_ms.iter().sum::<f64>() / all_ms.len() as f64;
+    assert!(
+        (s.mean_ms - exact_mean).abs() < 1e-6,
+        "mean is exact (kept in a dedicated sum): {} vs {exact_mean}",
+        s.mean_ms
+    );
+    assert!(
+        (s.max_ms - all_ms.last().unwrap()).abs() < 1e-6,
+        "max is exact (kept in a dedicated cell)"
+    );
+    for (got, p) in [(s.p50_ms, 0.50), (s.p95_ms, 0.95), (s.p99_ms, 0.99)] {
+        let want = exact_percentile(&all_ms, p);
+        let tol = want / 64.0 + 1e-6; // one bucket width
+        assert!(
+            (got - want).abs() <= tol,
+            "p{} = {got}ms must be within {tol}ms of exact {want}ms",
+            (p * 100.0) as u32
+        );
+    }
+}
+
+#[test]
+fn traced_queries_produce_sealed_nested_spans_and_telemetry() {
+    // The acceptance criterion: a traced request's spans (plus the
+    // synthetic wait) sum to exactly the reported latency, and the
+    // BFS/SSSP/SCC engines populate per-round telemetry.
+    let coord = coord_with_road();
+    for algo in ["bfs-vgc", "sssp-rho", "scc-vgc"] {
+        let reqs = vec![req(1, "road", algo, 64, 5).with_trace()];
+        let res = coord.run_batch(&reqs).pop().unwrap().unwrap();
+        let t = res
+            .trace
+            .as_ref()
+            .unwrap_or_else(|| panic!("{algo}: traced request must carry a trace"));
+        assert!(!t.spans().is_empty(), "{algo}: at least one measured span");
+        assert_eq!(
+            t.top_level_sum_us(),
+            t.total_us(),
+            "{algo}: wait + top-level spans account for the whole latency"
+        );
+        assert_eq!(
+            t.total_us(),
+            res.latency.as_micros() as u64,
+            "{algo}: sealed total is the reported latency"
+        );
+        // Spans nest: every depth-d+1 span sits inside the nearest
+        // preceding depth-d span.
+        for (i, s) in t.spans().iter().enumerate() {
+            if s.depth == 0 {
+                continue;
+            }
+            let parent = t.spans()[..i]
+                .iter()
+                .rev()
+                .find(|p| p.depth == s.depth - 1)
+                .unwrap_or_else(|| panic!("{algo}: nested span has a parent"));
+            assert!(s.start_us >= parent.start_us, "{algo}: child starts inside");
+            assert!(
+                s.start_us + s.dur_us <= parent.start_us + parent.dur_us,
+                "{algo}: child ends inside its parent"
+            );
+        }
+        let tel = t
+            .telemetry
+            .unwrap_or_else(|| panic!("{algo}: engine telemetry must be populated"));
+        assert!(tel.rounds >= 1, "{algo}: at least one engine round");
+        assert!(tel.edges_scanned >= 1, "{algo}: edges were scanned");
+        assert!(tel.peak_frontier >= 1, "{algo}: some round had vertices");
+    }
+}
+
+#[test]
+fn fused_batches_trace_the_shared_walk() {
+    // Three same-(graph, algo, τ) sssp-rho requests fuse into one
+    // multi-source walk; the traced lanes get a fused_walk span (one
+    // shared measurement) and the batch telemetry, the untraced lane
+    // stays trace-free.
+    let coord = coord_with_road();
+    let reqs = vec![
+        req(10, "road", "sssp-rho", 64, 3).with_trace(),
+        req(11, "road", "sssp-rho", 64, 99),
+        req(12, "road", "sssp-rho", 64, 200).with_trace(),
+    ];
+    let out: Vec<JobResult> = coord
+        .run_batch(&reqs)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    assert_eq!(coord.metrics.counter("queries_fused"), 3, "group fused");
+    let by_id: BTreeMap<u64, &JobResult> = out.iter().map(|r| (r.id, r)).collect();
+    assert!(by_id[&11].trace.is_none(), "untraced lane stays bare");
+    for id in [10u64, 12] {
+        let t = by_id[&id].trace.as_ref().expect("traced lane has a trace");
+        assert!(
+            t.spans().iter().any(|s| s.name == "fused_walk"),
+            "lane {id} carries the shared walk span"
+        );
+        assert_eq!(t.top_level_sum_us(), t.total_us());
+        let tel = t.telemetry.expect("fused walk telemetry");
+        assert!(tel.rounds >= 1 && tel.edges_scanned >= 1);
+    }
+}
+
+#[test]
+fn trace_json_lines_are_well_formed_and_schema_tagged() {
+    let coord = coord_with_road();
+    let reqs = vec![
+        req(1, "road", "bfs-vgc", 64, 0).with_trace(),
+        req(2, "road", "cc", 64, 0).with_trace(),
+    ];
+    for res in coord.run_batch(&reqs) {
+        let res = res.unwrap();
+        let t = res.trace.as_ref().expect("traced");
+        let line = t.json_line(res.id, "road", res.algo);
+        assert!(json_well_formed(&line), "trace line parses: {line}");
+        assert!(line.contains("\"schema\":\"pasgal-trace/1\""));
+        assert!(line.contains("\"name\":\"wait\""), "synthetic wait first");
+        assert!(!line.contains('\n'), "one line per trace");
+    }
+}
+
+/// Run one workload and distill everything externally observable:
+/// per-id output, exec/latency-series counts, and every counter.
+#[allow(clippy::type_complexity)]
+fn observable_state(
+    coord: &Coordinator,
+    results: Vec<JobResult>,
+) -> (
+    BTreeMap<u64, String>,
+    BTreeMap<String, u64>,
+    BTreeMap<String, usize>,
+) {
+    let outputs = results
+        .iter()
+        .map(|r| (r.id, format!("{:?}", r.output)))
+        .collect();
+    let counters = coord
+        .metrics
+        .counter_names()
+        .into_iter()
+        .map(|n| {
+            let v = coord.metrics.counter(&n);
+            (n, v)
+        })
+        .collect();
+    let series = coord
+        .metrics
+        .series_names()
+        .into_iter()
+        .map(|n| {
+            let c = coord.metrics.summary(&n).map(|s| s.count).unwrap_or(0);
+            (n, c)
+        })
+        .collect();
+    (outputs, counters, series)
+}
+
+#[test]
+fn sampled_tracing_leaves_unsampled_requests_bit_identical() {
+    // Two coordinators, identical workloads; B traces every other
+    // request. Outputs, counters and series counts must be identical
+    // — tracing is a side-channel, not a behavior change — and the
+    // unsampled requests in B must come back without a trace.
+    let workload = |traced: bool| -> Vec<JobRequest> {
+        ["bfs-vgc", "sssp-rho", "scc-vgc", "cc", "kcore", "bcc-fast"]
+            .iter()
+            .enumerate()
+            .flat_map(|(i, algo)| {
+                (0..4u64).map(move |k| {
+                    let id = i as u64 * 4 + k;
+                    let r = req(id, "road", algo, 64, (id * 37 % 300) as V);
+                    if traced && id % 2 == 0 {
+                        r.with_trace()
+                    } else {
+                        r
+                    }
+                })
+            })
+            .collect()
+    };
+    let coord_a = coord_with_road();
+    let res_a: Vec<JobResult> = coord_a
+        .run_batch(&workload(false))
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    let coord_b = coord_with_road();
+    let res_b: Vec<JobResult> = coord_b
+        .run_batch(&workload(true))
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    for r in &res_b {
+        if r.id % 2 == 0 {
+            assert!(r.trace.is_some(), "sampled request {} traced", r.id);
+        } else {
+            assert!(r.trace.is_none(), "unsampled request {} untouched", r.id);
+        }
+    }
+    for r in &res_a {
+        assert!(r.trace.is_none(), "untraced run never grows traces");
+    }
+    let (out_a, ctr_a, ser_a) = observable_state(&coord_a, res_a);
+    let (out_b, ctr_b, ser_b) = observable_state(&coord_b, res_b);
+    assert_eq!(out_a, out_b, "outputs bit-identical under sampling");
+    assert_eq!(ctr_a, ctr_b, "counters bit-identical under sampling");
+    assert_eq!(ser_a, ser_b, "series counts bit-identical under sampling");
+}

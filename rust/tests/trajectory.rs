@@ -1,0 +1,46 @@
+//! Integration test for the serving-trajectory driver: a tiny sweep
+//! must emit a schema-valid `pasgal-bench-serve/1` document with a
+//! series for every swept registry algorithm in every cell — the same
+//! validation CI runs on the uploaded artifact.
+
+use pasgal::bench::trajectory::{self, TrajectoryConfig};
+
+#[test]
+fn tiny_sweep_emits_a_schema_valid_document() {
+    let cfg = TrajectoryConfig::tiny();
+    let json = trajectory::run(&cfg);
+    if let Err(problems) = trajectory::validate(&json) {
+        panic!("schema violations: {problems:?}\ndocument: {json}");
+    }
+    assert!(trajectory::json_well_formed(&json));
+    assert!(json.contains(&format!("\"schema\":\"{}\"", trajectory::SCHEMA)));
+    // One cell per (shard count, graph class).
+    let cells = json.matches("{\"shards\":").count();
+    assert_eq!(
+        cells,
+        cfg.shard_counts.len() * trajectory::GRAPH_CLASSES.len(),
+        "cell per sweep point"
+    );
+    // Every swept registry algorithm shows up as an exec series in
+    // every cell — an algorithm the serving path dropped would fail
+    // here (and in CI) immediately.
+    for spec in trajectory::swept_specs() {
+        let needle = format!("\"exec/{}\":", spec.label);
+        assert_eq!(
+            json.matches(needle.as_str()).count(),
+            cells,
+            "{} must have an exec series in all {cells} cells",
+            spec.label
+        );
+    }
+    // The latency series and the derived comparison are present.
+    assert_eq!(json.matches("\"latency\":").count(), cells);
+    assert!(json.contains("vgc_vs_frontier_speedup"));
+    // No cell failed any request: the sweep runs with shedding and
+    // watchdog off, so every request executes.
+    assert_eq!(
+        json.matches("\"failed\":0").count(),
+        cells,
+        "every cell answers every request successfully"
+    );
+}
