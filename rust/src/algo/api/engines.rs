@@ -100,6 +100,15 @@ pub(super) fn parse_block(args: &super::ParseArgs) -> Params {
     Params::block(args.block)
 }
 
+/// Full-vector extractor shared by every label/coreness engine that
+/// exports its per-vertex `u32` answer into [`QueryWorkspace::out_u32`]
+/// (SCC labels, CC labels, k-core coreness). The clone is what gets
+/// wrapped in an `Arc` and parked in the result cache, so the warm
+/// workspace buffer itself is never retained past the query.
+pub(super) fn full_from_out_u32(ws: &QueryWorkspace) -> Vec<u32> {
+    ws.out_u32.clone()
+}
+
 // ---------------------------------------------------------------
 // BFS family.
 // ---------------------------------------------------------------
@@ -231,7 +240,11 @@ pub(super) fn scc_vgc_solo(
         &mut ws.scc,
         cx.cancel,
     );
-    Ok(summarize_scc(ws.scc.labels()))
+    // Export labels so the registry's `full` extractor (and thus the
+    // full-vector cache) sees the complete per-vertex answer.
+    ws.out_u32.clear();
+    ws.out_u32.extend_from_slice(ws.scc.labels());
+    Ok(summarize_scc(&ws.out_u32))
 }
 
 pub(super) fn scc_vgc_traced(lg: &LoadedGraph, p: Params, _src: V, trace: &mut AlgoTrace) {
@@ -243,13 +256,12 @@ pub(super) fn scc_multistep_solo(
     lg: &LoadedGraph,
     _p: Params,
     _src: V,
-    _ws: &mut QueryWorkspace,
+    ws: &mut QueryWorkspace,
 ) -> Result<QueryOutput> {
-    Ok(summarize_scc(&scc::multistep_scc(
-        &lg.graph,
-        Some(lg.transpose()),
-        cx.recorder().as_deref_mut(),
-    )))
+    let labels = scc::multistep_scc(&lg.graph, Some(lg.transpose()), cx.recorder().as_deref_mut());
+    ws.out_u32.clear();
+    ws.out_u32.extend_from_slice(&labels);
+    Ok(summarize_scc(&ws.out_u32))
 }
 
 pub(super) fn scc_multistep_traced(lg: &LoadedGraph, _p: Params, _src: V, trace: &mut AlgoTrace) {
@@ -358,7 +370,9 @@ pub(super) fn cc_solo(
     // the raw graph works for directed inputs too — no symmetrized
     // view needs materializing.
     let labels = cc::connected_components_ws(&lg.graph, &mut ws.cc);
-    Ok(summarize_cc(labels))
+    ws.out_u32.clear();
+    ws.out_u32.extend_from_slice(labels);
+    Ok(summarize_cc(&ws.out_u32))
 }
 
 // ---------------------------------------------------------------
@@ -376,7 +390,9 @@ pub(super) fn kcore_solo(
     // stamped workspace, so serving k-core is zero-allocation once
     // warm like the rest.
     let core = kcore::par_kcore_ws(lg.symmetrized(), cx.recorder().as_deref_mut(), &mut ws.kcore);
-    Ok(summarize_kcore(core))
+    ws.out_u32.clear();
+    ws.out_u32.extend_from_slice(core);
+    Ok(summarize_kcore(&ws.out_u32))
 }
 
 pub(super) fn kcore_traced(lg: &LoadedGraph, _p: Params, _src: V, trace: &mut AlgoTrace) {

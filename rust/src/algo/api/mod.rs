@@ -275,6 +275,14 @@ pub struct AlgoSpec {
     pub batch: Option<&'static BatchEngine>,
     /// The trace-recording single-run engine (CLI `run` / sim).
     pub traced: Option<TracedFn>,
+    /// Extracts the full per-vertex `u32` output (labels, coreness)
+    /// the solo engine exported into the workspace — the payload of
+    /// the full-vector result cache
+    /// ([`crate::coordinator::ResultCache::lookup_vector`], served by
+    /// `Coordinator::run_query_vector`). Only meaningful for
+    /// `cacheable` specs whose engines fill
+    /// [`QueryWorkspace::out_u32`]; `None` for summary-only specs.
+    pub full: Option<fn(&QueryWorkspace) -> Vec<u32>>,
 }
 
 impl AlgoSpec {

@@ -30,6 +30,7 @@ pub static BFS_VGC: AlgoSpec = AlgoSpec {
     solo: e::bfs_vgc_solo,
     batch: Some(&e::BFS_VGC_BATCH),
     traced: Some(e::bfs_vgc_traced),
+    full: None,
 };
 
 /// GBBS-like frontier BFS (round-synchronous baseline).
@@ -45,6 +46,7 @@ pub static BFS_FRONTIER: AlgoSpec = AlgoSpec {
     solo: e::bfs_frontier_solo,
     batch: None,
     traced: Some(e::bfs_frontier_traced),
+    full: None,
 };
 
 /// Direction-optimizing BFS (GAPBS-like baseline).
@@ -60,6 +62,7 @@ pub static BFS_DIROPT: AlgoSpec = AlgoSpec {
     solo: e::bfs_diropt_solo,
     batch: Some(&e::BFS_DIROPT_BATCH),
     traced: Some(e::bfs_diropt_traced),
+    full: None,
 };
 
 /// PASGAL VGC SCC.
@@ -75,6 +78,7 @@ pub static SCC_VGC: AlgoSpec = AlgoSpec {
     solo: e::scc_vgc_solo,
     batch: None,
     traced: Some(e::scc_vgc_traced),
+    full: Some(e::full_from_out_u32),
 };
 
 /// Multistep SCC (trim + FW-BW + coloring baseline).
@@ -90,6 +94,7 @@ pub static SCC_MULTISTEP: AlgoSpec = AlgoSpec {
     solo: e::scc_multistep_solo,
     batch: None,
     traced: Some(e::scc_multistep_traced),
+    full: Some(e::full_from_out_u32),
 };
 
 /// FAST-BCC.
@@ -105,6 +110,7 @@ pub static BCC_FAST: AlgoSpec = AlgoSpec {
     solo: e::bcc_solo,
     batch: None,
     traced: Some(e::bcc_traced),
+    full: None,
 };
 
 /// ρ-stepping SSSP with VGC.
@@ -120,6 +126,7 @@ pub static SSSP_RHO: AlgoSpec = AlgoSpec {
     solo: e::sssp_rho_solo,
     batch: Some(&e::SSSP_RHO_BATCH),
     traced: Some(e::sssp_rho_traced),
+    full: None,
 };
 
 /// Δ-stepping SSSP (baseline).
@@ -135,6 +142,7 @@ pub static SSSP_DELTA: AlgoSpec = AlgoSpec {
     solo: e::sssp_delta_solo,
     batch: None,
     traced: Some(e::sssp_delta_traced),
+    full: None,
 };
 
 /// Dense-block closure on the AOT engine (the L1/L2 path).
@@ -150,6 +158,7 @@ pub static DENSE_CLOSURE: AlgoSpec = AlgoSpec {
     solo: e::dense_closure_solo,
     batch: None,
     traced: None,
+    full: None,
 };
 
 /// Parallel connectivity (hook/compress union-find).
@@ -165,6 +174,7 @@ pub static CC: AlgoSpec = AlgoSpec {
     solo: e::cc_solo,
     batch: None,
     traced: None,
+    full: Some(e::full_from_out_u32),
 };
 
 /// k-core decomposition (parallel peeling over hash bags).
@@ -180,6 +190,7 @@ pub static KCORE: AlgoSpec = AlgoSpec {
     solo: e::kcore_solo,
     batch: None,
     traced: Some(e::kcore_traced),
+    full: Some(e::full_from_out_u32),
 };
 
 /// Every registered algorithm, indexed by [`AlgoSpec::id`].
@@ -298,6 +309,27 @@ mod tests {
                 assert!(!spec.needs_source, "{} caches but reads a source", spec.label);
                 assert!(!spec.needs_engine, "{} caches but reads the engine", spec.label);
                 assert!(!spec.fusable(), "{} caches but has a batch engine", spec.label);
+            }
+        }
+    }
+
+    #[test]
+    fn full_vectors_are_a_subset_of_cacheable_label_analyses() {
+        let with_full: Vec<&str> = all()
+            .iter()
+            .filter(|s| s.full.is_some())
+            .map(|s| s.label)
+            .collect();
+        // BCC summarizes block structure rather than a per-vertex
+        // label vector, so it stays summary-only.
+        assert_eq!(with_full, ["scc-vgc", "scc-multistep", "cc", "kcore"]);
+        for spec in all() {
+            if spec.full.is_some() {
+                assert!(
+                    spec.cacheable,
+                    "{} exports a full vector but is not cacheable",
+                    spec.label
+                );
             }
         }
     }

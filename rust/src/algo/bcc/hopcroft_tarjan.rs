@@ -15,7 +15,7 @@ const UNSET: u32 = u32::MAX;
 /// Arc index of (w -> u) given that (u -> w) exists — unique because
 /// the graph is deduplicated; neighbors are sorted by construction.
 fn twin(g: &Graph, u: V, w: V) -> usize {
-    let base = g.offsets[w as usize] as usize;
+    let base = g.offsets()[w as usize] as usize;
     let nbrs = g.neighbors(w);
     let i = nbrs.partition_point(|&x| x < u);
     debug_assert!(nbrs[i] == u, "twin arc missing: graph not symmetric?");
@@ -60,7 +60,7 @@ pub fn hopcroft_tarjan(g: &Graph) -> BccResult {
         }];
         while let Some(top) = stack.last_mut() {
             let v = top.v;
-            let base = g.offsets[v as usize] as usize;
+            let base = g.offsets()[v as usize] as usize;
             let nbrs = g.neighbors(v);
             if top.ei < nbrs.len() {
                 let i = top.ei;
@@ -110,7 +110,7 @@ pub fn hopcroft_tarjan(g: &Graph) -> BccResult {
                     // Pop one block: all edges until (u, v) inclusive.
                     let stop_arc = {
                         // the tree arc (u -> v) pushed at descent
-                        let ub = g.offsets[u as usize] as usize;
+                        let ub = g.offsets()[u as usize] as usize;
                         let i = g.neighbors(u).partition_point(|&x| x < v);
                         (ub + i) as u32
                     };
@@ -149,18 +149,18 @@ pub fn hopcroft_tarjan(g: &Graph) -> BccResult {
 /// (source, target) of a CSR arc index.
 fn arc_endpoints(g: &Graph, arc: usize) -> (V, V) {
     // binary search the offsets for the source vertex
-    let u = match g.offsets.binary_search(&(arc as u64)) {
+    let u = match g.offsets().binary_search(&(arc as u64)) {
         Ok(mut i) => {
             // offsets may repeat for degree-0 vertices: take the last
             // vertex whose slice starts here
-            while i + 1 < g.offsets.len() && g.offsets[i + 1] == arc as u64 {
+            while i + 1 < g.offsets().len() && g.offsets()[i + 1] == arc as u64 {
                 i += 1;
             }
             i
         }
         Err(i) => i - 1,
     };
-    (u as V, g.targets[arc])
+    (u as V, g.targets()[arc])
 }
 
 #[cfg(test)]
@@ -226,7 +226,7 @@ mod tests {
         let g = gen::road(6, 9, 2).symmetrize();
         let r = blocks(&g);
         for u in 0..g.n() as V {
-            let base = g.offsets[u as usize] as usize;
+            let base = g.offsets()[u as usize] as usize;
             for (i, &w) in g.neighbors(u).iter().enumerate() {
                 if w == u {
                     continue;

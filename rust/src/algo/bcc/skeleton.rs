@@ -203,7 +203,7 @@ pub fn run(g: &Graph, rf: &RootedForest, mode: Mode, mut rec: Recorder) -> BccRe
         let lp = crate::parallel::ops::SendPtr(arc_label.as_mut_ptr());
         let comp = &comp;
         parallel_for(0, n, 256, move |u| {
-            let base = g.offsets[u] as usize;
+            let base = g.offsets()[u] as usize;
             for (i, &w) in g.neighbors(u as V).iter().enumerate() {
                 let u = u as V;
                 if w == u {

@@ -188,7 +188,7 @@ pub fn multi_rho_ws_cancel(
                     exp: &[(usize, f32)],
                     stats: &mut SearchStats,
                     enqueue: &mut dyn FnMut(V, bool)| {
-            let ws_edge = g.weights.as_ref().map(|_| g.weights_of(v));
+            let ws_edge = g.weights().map(|_| g.weights_of(v));
             for (j, &u) in g.neighbors(v).iter().enumerate() {
                 stats.edges += 1;
                 let w = ws_edge.map_or(1.0, |we| we[j]);

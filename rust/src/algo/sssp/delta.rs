@@ -124,7 +124,7 @@ pub fn delta_stepping_ws_cancel(
                 parallel_for(0, work_ref.len(), 32, move |k| {
                     let v = work_ref[k];
                     let dv = dist.get_f32(v as usize);
-                    let ws_edge = g.weights.as_ref().map(|_| g.weights_of(v));
+                    let ws_edge = g.weights().map(|_| g.weights_of(v));
                     for (j, &u) in g.neighbors(v).iter().enumerate() {
                         let w = ws_edge.map_or(1.0, |ws_edge| ws_edge[j]);
                         let nd = dv + w;

@@ -31,7 +31,7 @@ pub fn dijkstra(g: &Graph, src: V) -> Vec<f32> {
         if d > dist[v as usize] {
             continue; // stale entry
         }
-        let ws = if g.weights.is_some() {
+        let ws = if g.weights().is_some() {
             Some(g.weights_of(v))
         } else {
             None

@@ -176,7 +176,7 @@ pub fn rho_stepping_ws_cancel(
                     {
                         continue;
                     }
-                    let ws_edge = g.weights.as_ref().map(|_| g.weights_of(v));
+                    let ws_edge = g.weights().map(|_| g.weights_of(v));
                     for (j, &u) in g.neighbors(v).iter().enumerate() {
                         stats.edges += 1;
                         let w = ws_edge.map_or(1.0, |ws_edge| ws_edge[j]);

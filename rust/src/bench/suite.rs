@@ -386,7 +386,7 @@ pub fn table_sssp(scale: Scale) -> String {
         .entries
         .iter()
         .map(|(e, g)| {
-            let w = if g.weights.is_some() {
+            let w = if g.weights().is_some() {
                 g.clone()
             } else {
                 crate::graph::gen::with_random_weights(g, 0x5e)

@@ -377,6 +377,12 @@ pub fn validate(json: &str) -> Result<(), Vec<String>> {
     if !json.contains("\"latency\":") {
         problems.push("no latency series in any cell".to_string());
     }
+    // Every cell publishes its graph through the metered load path, so
+    // the publish-cost series must appear — this is how the trajectory
+    // tracks graph-load regressions alongside query latency.
+    if !json.contains("\"graph_load_us\":") {
+        problems.push("no graph_load_us series in any cell".to_string());
+    }
     for spec in swept_specs() {
         let needle = format!("\"exec/{}\":", spec.label);
         if !json.contains(&needle) {

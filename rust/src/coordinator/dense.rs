@@ -31,7 +31,7 @@ impl DenseBlock {
         }
         let mut tile = DenseTile::empty(tile_size);
         for (i, &v) in block.iter().enumerate() {
-            let ws = g.weights.as_ref().map(|_| g.weights_of(v));
+            let ws = g.weights().map(|_| g.weights_of(v));
             for (j, &u) in g.neighbors(v).iter().enumerate() {
                 if let Some(&k) = index.get(&u) {
                     let w = ws.map_or(1.0, |ws| ws[j]);

@@ -134,11 +134,32 @@ impl GraphDirectory {
     ///
     /// [`publish`]: GraphDirectory::publish
     pub fn load_graph(&self, name: &str, graph: Graph) -> Result<()> {
+        // `Graph::validate` delegates to `graph::csr::validate_csr` —
+        // the same shared invariant check the `.pgr` loader runs, so
+        // malformed graphs are rejected identically whether they
+        // arrive in memory or from a file.
         if let Err(reason) = graph.validate() {
             return Err(faults::invalid_graph_error(name, &reason));
         }
         self.publish(name, graph);
         Ok(())
+    }
+
+    /// Load a `.pgr` file ([`crate::graph::store::load`]: one bulk
+    /// read, checksum + shared CSR validation, zero-copy arena views
+    /// for the plain encoding) and publish it under `name` through
+    /// the normal Arc-swap/version protocol. On any load error
+    /// (truncated, corrupt, wrong version) nothing is published and
+    /// the previously published graph under `name` — and every
+    /// in-flight query against it — is untouched.
+    pub fn load_graph_from_path(
+        &self,
+        name: &str,
+        path: &std::path::Path,
+    ) -> Result<crate::graph::store::LoadStats> {
+        let loaded = crate::graph::store::load(path)?;
+        self.publish(name, loaded.graph);
+        Ok(loaded.stats)
     }
 
     /// Current registry version (bumped by every [`publish`]).
@@ -267,11 +288,15 @@ pub struct ResultCache {
 type GraphResults = HashMap<(u16, Params, Option<V>), CacheSlot>;
 
 /// A cached output: the publish version it was computed at and the
-/// LRU clock of its last use.
+/// LRU clock of its last use. Whole-graph label analyses additionally
+/// carry the full per-vertex output vector, so library callers can
+/// fetch labels/coreness without recomputing
+/// ([`ResultCache::lookup_vector`]).
 struct CacheSlot {
     version: u64,
     used: u64,
     output: Arc<QueryOutput>,
+    vector: Option<Arc<Vec<u32>>>,
 }
 
 /// Default [`ResultCache`] capacity: far above any realistic
@@ -342,6 +367,31 @@ impl ResultCache {
         Some(Arc::clone(&slot.output))
     }
 
+    /// The cached *full output vector* (per-vertex labels/coreness)
+    /// for `(graph, spec, params)` at exactly `version`, if the spec
+    /// published one ([`crate::algo::api::AlgoSpec::full`]). Same
+    /// version guard and LRU accounting as
+    /// [`lookup`](ResultCache::lookup); summary-only entries miss.
+    pub fn lookup_vector(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        version: u64,
+    ) -> Option<Arc<Vec<u32>>> {
+        let slots = self.entries.get_mut(graph)?;
+        let slot = slots.get_mut(&(spec, params, None))?;
+        if slot.version != version {
+            self.len -= slots.len();
+            self.entries.remove(graph);
+            return None;
+        }
+        let vector = slot.vector.as_ref().map(Arc::clone)?;
+        self.tick += 1;
+        slot.used = self.tick;
+        Some(vector)
+    }
+
     /// Record `output` as the answer for `(graph, spec, params)` at
     /// `version`. Entries the graph accumulated at an older publish
     /// are dropped wholesale first; past capacity, the globally
@@ -355,7 +405,22 @@ impl ResultCache {
         version: u64,
         output: Arc<QueryOutput>,
     ) -> usize {
-        self.insert_src(graph, spec, params, None, version, output)
+        self.insert_slot(graph, spec, params, None, version, output, None)
+    }
+
+    /// [`insert`](ResultCache::insert) carrying the full per-vertex
+    /// output vector alongside the summary (cacheable label analyses;
+    /// served back by [`lookup_vector`](ResultCache::lookup_vector)).
+    pub fn insert_full(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        version: u64,
+        output: Arc<QueryOutput>,
+        vector: Option<Arc<Vec<u32>>>,
+    ) -> usize {
+        self.insert_slot(graph, spec, params, None, version, output, vector)
     }
 
     /// [`insert`](ResultCache::insert) with an explicit source key
@@ -369,6 +434,20 @@ impl ResultCache {
         version: u64,
         output: Arc<QueryOutput>,
     ) -> usize {
+        self.insert_slot(graph, spec, params, source, version, output, None)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn insert_slot(
+        &mut self,
+        graph: &str,
+        spec: u16,
+        params: Params,
+        source: Option<V>,
+        version: u64,
+        output: Arc<QueryOutput>,
+        vector: Option<Arc<Vec<u32>>>,
+    ) -> usize {
         if let Some(slots) = self.entries.get(graph) {
             if slots.values().any(|s| s.version != version) {
                 self.len -= slots.len();
@@ -380,6 +459,7 @@ impl ResultCache {
             version,
             used: self.tick,
             output,
+            vector,
         };
         let prev = self
             .entries
@@ -632,6 +712,55 @@ mod tests {
         assert!(dir.load_graph("g", malformed::offset_overflow()).is_err());
         assert_eq!(dir.version(), v);
         assert_eq!(dir.lookup("g").unwrap().graph.n(), 9);
+    }
+
+    #[test]
+    fn full_vectors_ride_the_same_version_guard() {
+        let mut cache = ResultCache::new();
+        let p = Params::NONE;
+        let out = Arc::new(QueryOutput::Cc {
+            components: 2,
+            largest: 3,
+        });
+        let labels = Arc::new(vec![0u32, 0, 1, 1, 1]);
+        cache.insert_full("g", 9, p, 1, Arc::clone(&out), Some(Arc::clone(&labels)));
+        // Vector and summary hit from the same slot.
+        let got = cache.lookup_vector("g", 9, p, 1).unwrap();
+        assert!(Arc::ptr_eq(&got, &labels), "no copy on hit");
+        assert!(cache.lookup("g", 9, p, 1).is_some());
+        // A summary-only entry answers lookup but not lookup_vector.
+        cache.insert("g", 5, p, 1, Arc::clone(&out));
+        assert!(cache.lookup("g", 5, p, 1).is_some());
+        assert!(cache.lookup_vector("g", 5, p, 1).is_none());
+        // Republish stales the vector exactly like the summary.
+        assert!(cache.lookup_vector("g", 9, p, 2).is_none());
+        assert_eq!(cache.len(), 0, "wholesale drop on version mismatch");
+    }
+
+    #[test]
+    fn load_graph_from_path_publishes_and_rejects_like_load_graph() {
+        use crate::coordinator::faults::FailKind;
+        use crate::graph::store;
+        let d = std::env::temp_dir().join(format!("pasgal_dir_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("g.pgr");
+        store::pack(&gen::grid(4, 4), &p, store::Encoding::Plain).unwrap();
+        let dir = GraphDirectory::new();
+        let stats = dir.load_graph_from_path("g", &p).unwrap();
+        assert_eq!(stats.encoding, store::Encoding::Plain);
+        assert_eq!(dir.lookup("g").unwrap().graph.n(), 16);
+        let v = dir.version();
+        // A corrupt file is rejected with the typed InvalidGraph error
+        // and publishes nothing: same contract as load_graph.
+        let mut img = std::fs::read(&p).unwrap();
+        let last = img.len() - 1;
+        img[last] ^= 0xff;
+        let bad = d.join("bad.pgr");
+        std::fs::write(&bad, img).unwrap();
+        let err = dir.load_graph_from_path("g", &bad).unwrap_err();
+        assert_eq!(FailKind::classify(&err.to_string()), FailKind::InvalidGraph);
+        assert_eq!(dir.version(), v, "no version burned on rejection");
+        assert_eq!(dir.lookup("g").unwrap().graph.n(), 16, "old graph intact");
     }
 
     #[test]

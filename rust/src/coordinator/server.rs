@@ -231,9 +231,35 @@ impl Coordinator {
     /// also resets any open panic breaker for it — the version moves,
     /// which is the breaker's reset protocol.
     pub fn try_load_graph(&self, name: &str, graph: crate::graph::Graph) -> Result<()> {
+        let t0 = Instant::now();
         self.directory.load_graph(name, graph)?;
+        self.metrics.observe("graph_load_us", t0.elapsed());
         self.metrics.bump("graphs_loaded", 1);
         Ok(())
+    }
+
+    /// Publish a graph straight from a `.pgr` file
+    /// ([`GraphDirectory::load_graph_from_path`]): one bulk read into
+    /// a shared arena, checksum + CSR validation, zero-copy views for
+    /// the plain encoding. Meters the publish like
+    /// [`Coordinator::try_load_graph`] (`graph_load_us`,
+    /// `graphs_loaded`) plus the store-specific `graphs_loaded_bytes`
+    /// and `store_decode_us` counters. A failed load publishes
+    /// nothing: serving on any already-published graph under `name`
+    /// continues unaffected.
+    pub fn load_graph_from_path(
+        &self,
+        name: &str,
+        path: &std::path::Path,
+    ) -> Result<crate::graph::store::LoadStats> {
+        let t0 = Instant::now();
+        let stats = self.directory.load_graph_from_path(name, path)?;
+        self.metrics.observe("graph_load_us", t0.elapsed());
+        self.metrics.bump("graphs_loaded", 1);
+        self.metrics.bump("graphs_loaded_bytes", stats.file_bytes);
+        self.metrics
+            .bump("store_decode_us", stats.decode.as_micros() as u64);
+        Ok(stats)
     }
 
     /// Fetch a registered graph.
@@ -322,6 +348,49 @@ impl Coordinator {
                 &mut self.guards(),
             )
         })
+    }
+
+    /// Answer a whole-graph label analysis with its **full per-vertex
+    /// output vector** (SCC/CC labels, coreness), served from the
+    /// versioned [`ResultCache`]: a hit returns the stored
+    /// `Arc<Vec<u32>>` without touching an engine or copying a label;
+    /// a miss computes through [`Coordinator::run_query`] (priming
+    /// both the summary and the vector under the graph's publish
+    /// version) and then answers from the fresh entry. Errors typed:
+    /// specs without a full-vector export
+    /// ([`AlgoSpec::full`](crate::algo::api::AlgoSpec::full) `None`)
+    /// are rejected, and engine/deadline/unknown-graph failures
+    /// propagate unchanged from the compute path.
+    pub fn run_query_vector(&self, q: &Query) -> Result<Arc<Vec<u32>>> {
+        let spec = q.algo;
+        if spec.full.is_none() {
+            return Err(Error::msg(format!(
+                "{} has no full-vector output (only cacheable label analyses do)",
+                spec.label
+            )));
+        }
+        if let Some(lg) = self.graph(&q.graph) {
+            if let Some(v) =
+                lock_or_recover(&self.results).lookup_vector(&q.graph, spec.id, q.params, lg.version)
+            {
+                self.metrics.bump("vector_hits", 1);
+                return Ok(v);
+            }
+        }
+        self.run_query(q)?;
+        let lg = self
+            .graph(&q.graph)
+            .ok_or_else(|| faults::unknown_graph_error(&q.graph))?;
+        lock_or_recover(&self.results)
+            .lookup_vector(&q.graph, spec.id, q.params, lg.version)
+            .ok_or_else(|| {
+                // Only a republish or eviction racing between compute
+                // and re-probe can land here; the caller just retries.
+                Error::msg(format!(
+                    "full vector for {} on {:?} displaced before read (graph republished?)",
+                    spec.label, q.graph
+                ))
+            })
     }
 
     /// Run a batch: requests grouped by (graph, algorithm, params) —
@@ -428,18 +497,22 @@ impl CacheHandle<'_> {
     }
 
     /// Returns the number of LRU evictions the insert forced.
-    fn insert(
+    /// `vector` carries the full per-vertex output for specs that
+    /// export one ([`ResultCache::insert_full`]).
+    #[allow(clippy::too_many_arguments)]
+    fn insert_full(
         &mut self,
         graph: &str,
         spec: u16,
         params: Params,
         version: u64,
         output: Arc<JobOutput>,
+        vector: Option<Arc<Vec<u32>>>,
     ) -> usize {
         match self {
-            CacheHandle::Owned(c) => c.insert(graph, spec, params, version, output),
+            CacheHandle::Owned(c) => c.insert_full(graph, spec, params, version, output, vector),
             CacheHandle::Shared(m) => {
-                lock_or_recover(m).insert(graph, spec, params, version, output)
+                lock_or_recover(m).insert_full(graph, spec, params, version, output, vector)
             }
         }
     }
@@ -783,9 +856,19 @@ impl ExecCore<'_> {
         let output = run?;
         let exec = exec_start.elapsed();
         if spec.cacheable {
-            let evicted = guards
-                .cache
-                .insert(graph, spec.id, params, lg.version, Arc::new(output.clone()));
+            // Label analyses also publish their full per-vertex vector
+            // (left in the workspace by the engine) into the same
+            // version-guarded slot, so `run_query_vector` callers stop
+            // recomputing whole-graph labelings.
+            let vector = spec.full.map(|f| Arc::new(f(ws)));
+            let evicted = guards.cache.insert_full(
+                graph,
+                spec.id,
+                params,
+                lg.version,
+                Arc::new(output.clone()),
+                vector,
+            );
             if evicted > 0 {
                 self.metrics.bump("cache_evictions", evicted as u64);
             }

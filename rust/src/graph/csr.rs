@@ -4,7 +4,15 @@
 //! (symmetrized) graphs, optionally weighted. Construction from edge
 //! lists is parallel (sort by source, then offsets by binary search
 //! per block); transpose reuses construction.
+//!
+//! Storage is abstracted behind [`CsrBacking`]: the three CSR arrays
+//! are either owned `Vec`s (built in memory by the constructors) or
+//! zero-copy [`ArenaView`]s into a `.pgr` file image loaded by
+//! [`crate::graph::store`]. Engines never see the difference — every
+//! access goes through the slice accessors [`Graph::offsets`],
+//! [`Graph::targets`] and [`Graph::weights`].
 
+use crate::graph::store::arena::{ArenaView, StoreElem};
 use crate::parallel::{parallel_for, parallel_reduce, parallel_sort_by_key, scan_inplace};
 use crate::{V, W};
 use std::sync::OnceLock;
@@ -33,16 +41,100 @@ impl Default for WeightStats {
     }
 }
 
+/// Storage backing one CSR array: an owned `Vec` (in-memory build) or
+/// a typed view into a shared load arena (`.pgr` plain encoding —
+/// published without copying a single element out of the file image).
+#[derive(Debug, Clone)]
+pub enum CsrBacking<T: StoreElem> {
+    /// Heap `Vec` owned by the graph (constructors, delta decode).
+    Owned(Vec<T>),
+    /// Zero-copy slice of an `Arc`-shared load arena.
+    Arena(ArenaView<T>),
+}
+
+impl<T: StoreElem> CsrBacking<T> {
+    /// The backed elements, whatever the representation.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            CsrBacking::Owned(v) => v,
+            CsrBacking::Arena(view) => view.as_slice(),
+        }
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            CsrBacking::Owned(v) => v.len(),
+            CsrBacking::Arena(view) => view.len(),
+        }
+    }
+
+    /// Whether the backing holds zero elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T: StoreElem> Default for CsrBacking<T> {
+    fn default() -> Self {
+        CsrBacking::Owned(Vec::new())
+    }
+}
+
+impl<T: StoreElem> From<Vec<T>> for CsrBacking<T> {
+    fn from(v: Vec<T>) -> Self {
+        CsrBacking::Owned(v)
+    }
+}
+
+/// The one CSR structural-invariant check, shared verbatim by every
+/// ingest path: [`Graph::validate`] (and through it the publish gate
+/// `coordinator::directory::GraphDirectory::load_graph`), the text/
+/// binary readers in [`crate::graph::io`], and the `.pgr` loader in
+/// [`crate::graph::store`] — so a malformed graph is rejected with the
+/// identical reason no matter how it arrived.
+pub fn validate_csr(offsets: &[u64], targets: &[V], weights: Option<&[W]>) -> Result<(), String> {
+    if offsets.is_empty() {
+        return Err("offsets empty".into());
+    }
+    if offsets[0] != 0 {
+        return Err("offsets[0] != 0".into());
+    }
+    if *offsets.last().unwrap() as usize != targets.len() {
+        return Err("offsets[n] != m".into());
+    }
+    for w in offsets.windows(2) {
+        if w[0] > w[1] {
+            return Err("offsets not monotone".into());
+        }
+    }
+    let n = offsets.len() - 1;
+    if targets.iter().any(|&t| (t as usize) >= n) {
+        return Err("target out of range".into());
+    }
+    if let Some(w) = weights {
+        if w.len() != targets.len() {
+            return Err("weights length mismatch".into());
+        }
+    }
+    Ok(())
+}
+
 /// CSR graph. Vertices are `0..n` as `u32`; edges are stored as
-/// per-source slices of `targets` (and `weights` when present).
+/// per-source slices of `targets` (and `weights` when present). The
+/// arrays live behind [`CsrBacking`] — use the accessor methods of
+/// the same names.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
     /// n+1 offsets into `targets`.
-    pub offsets: Vec<u64>,
+    offsets: CsrBacking<u64>,
     /// Flat adjacency, length m.
-    pub targets: Vec<V>,
+    targets: CsrBacking<V>,
     /// Optional per-edge weights, parallel to `targets`.
-    pub weights: Option<Vec<W>>,
+    weights: Option<CsrBacking<W>>,
     /// Whether the edge set is symmetric (undirected view).
     pub symmetric: bool,
     /// Memoized weight statistics (filled on first use; cloning a
@@ -52,10 +144,35 @@ pub struct Graph {
 }
 
 impl Graph {
+    /// The n+1 CSR offsets into [`Graph::targets`].
+    #[inline]
+    pub fn offsets(&self) -> &[u64] {
+        self.offsets.as_slice()
+    }
+
+    /// The flat adjacency array, length m.
+    #[inline]
+    pub fn targets(&self) -> &[V] {
+        self.targets.as_slice()
+    }
+
+    /// Per-edge weights parallel to [`Graph::targets`], when weighted.
+    #[inline]
+    pub fn weights(&self) -> Option<&[W]> {
+        self.weights.as_ref().map(CsrBacking::as_slice)
+    }
+
+    /// Whether any CSR array is a zero-copy view into a load arena
+    /// (true for graphs published from a plain `.pgr` file).
+    pub fn arena_backed(&self) -> bool {
+        matches!(self.targets, CsrBacking::Arena(_))
+            || matches!(self.offsets, CsrBacking::Arena(_))
+    }
+
     /// Mean/min/max edge weight, computed once per graph by a parallel
     /// reduction and memoized. Unweighted graphs report unit weights.
     pub fn weight_stats(&self) -> WeightStats {
-        *self.weight_stats.get_or_init(|| match &self.weights {
+        *self.weight_stats.get_or_init(|| match self.weights() {
             Some(ws) if !ws.is_empty() => {
                 let (sum, min, max) = parallel_reduce(
                     0,
@@ -89,23 +206,25 @@ impl Graph {
     /// Out-degree of `v`.
     #[inline]
     pub fn degree(&self, v: V) -> usize {
-        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+        let offsets = self.offsets();
+        (offsets[v as usize + 1] - offsets[v as usize]) as usize
     }
 
     /// Out-neighbors of `v`.
     #[inline]
     pub fn neighbors(&self, v: V) -> &[V] {
-        &self.targets[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+        let offsets = self.offsets();
+        &self.targets()[offsets[v as usize] as usize..offsets[v as usize + 1] as usize]
     }
 
     /// Out-edge weights of `v` (only when weighted).
     #[inline]
     pub fn weights_of(&self, v: V) -> &[W] {
         let w = self
-            .weights
-            .as_ref()
+            .weights()
             .expect("weights_of called on unweighted graph");
-        &w[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+        let offsets = self.offsets();
+        &w[offsets[v as usize] as usize..offsets[v as usize + 1] as usize]
     }
 
     /// Build from a directed edge list (parallel). Self-loops and
@@ -164,13 +283,7 @@ impl Graph {
                 *wp.add(i) = es_ref[i].2;
             });
         }
-        Graph {
-            offsets,
-            targets,
-            weights: Some(weights),
-            symmetric: false,
-            weight_stats: OnceLock::new(),
-        }
+        Graph::from_raw_parts(offsets, targets, Some(weights), false)
     }
 
     /// Transposed graph (reverse every edge). Counting-sort scatter:
@@ -181,7 +294,7 @@ impl Graph {
         let m = self.m();
         // In-degrees -> offsets.
         let mut counts = vec![0usize; n + 1];
-        for &t in &self.targets {
+        for &t in self.targets() {
             counts[t as usize] += 1;
         }
         scan_inplace(&mut counts[..n]);
@@ -190,9 +303,9 @@ impl Graph {
         // Scatter (sequential cursor bump per target; deterministic).
         let mut cursor: Vec<usize> = counts[..n].to_vec();
         let mut targets = vec![0 as V; m];
-        let mut weights = self.weights.as_ref().map(|_| vec![0.0 as W; m]);
+        let mut weights = self.weights().map(|_| vec![0.0 as W; m]);
         for u in 0..n as V {
-            let ws = self.weights.as_ref().map(|_| self.weights_of(u));
+            let ws = self.weights().map(|_| self.weights_of(u));
             for (j, &v) in self.neighbors(u).iter().enumerate() {
                 let slot = cursor[v as usize];
                 cursor[v as usize] += 1;
@@ -202,13 +315,7 @@ impl Graph {
                 }
             }
         }
-        Graph {
-            offsets,
-            targets,
-            weights,
-            symmetric: self.symmetric,
-            weight_stats: OnceLock::new(),
-        }
+        Graph::from_raw_parts(offsets, targets, weights, self.symmetric)
     }
 
     /// Symmetrized graph: edge set ∪ reversed edge set, deduplicated.
@@ -230,7 +337,7 @@ impl Graph {
         let mut out = Vec::with_capacity(self.m());
         for u in 0..self.n() as V {
             let nbrs = self.neighbors(u);
-            match &self.weights {
+            match self.weights() {
                 Some(_) => {
                     let ws = self.weights_of(u);
                     for (&v, &w) in nbrs.iter().zip(ws) {
@@ -255,13 +362,30 @@ impl Graph {
             .collect()
     }
 
-    /// Assemble a graph from prebuilt CSR arrays (used by the IO
+    /// Assemble a graph from prebuilt owned CSR arrays (used by the IO
     /// readers). The caller is responsible for validity; run
     /// [`Graph::validate`] afterwards on untrusted input.
     pub fn from_raw_parts(
         offsets: Vec<u64>,
         targets: Vec<V>,
         weights: Option<Vec<W>>,
+        symmetric: bool,
+    ) -> Graph {
+        Graph::from_backings(
+            offsets.into(),
+            targets.into(),
+            weights.map(Into::into),
+            symmetric,
+        )
+    }
+
+    /// Assemble a graph from arbitrary backings — the `.pgr` loader
+    /// hands arena views in here. Same validity contract as
+    /// [`Graph::from_raw_parts`].
+    pub fn from_backings(
+        offsets: CsrBacking<u64>,
+        targets: CsrBacking<V>,
+        weights: Option<CsrBacking<W>>,
         symmetric: bool,
     ) -> Graph {
         Graph {
@@ -279,7 +403,7 @@ impl Graph {
         if let Some(w) = &weights {
             assert_eq!(w.len(), self.m(), "weights length mismatch");
         }
-        self.weights = weights;
+        self.weights = weights.map(Into::into);
         self.weight_stats = OnceLock::new();
     }
 
@@ -297,32 +421,12 @@ impl Graph {
         (0..self.n() as V).map(|v| self.degree(v)).max().unwrap_or(0)
     }
 
-    /// Structural sanity check used by tests and after IO round-trips.
+    /// Structural sanity check used by tests, after IO round-trips,
+    /// and as the publish gate — delegates to the shared
+    /// [`validate_csr`] so owned and arena-backed graphs are checked
+    /// identically.
     pub fn validate(&self) -> Result<(), String> {
-        let n = self.n();
-        if self.offsets.is_empty() {
-            return Err("offsets empty".into());
-        }
-        if self.offsets[0] != 0 {
-            return Err("offsets[0] != 0".into());
-        }
-        if *self.offsets.last().unwrap() as usize != self.targets.len() {
-            return Err("offsets[n] != m".into());
-        }
-        for w in self.offsets.windows(2) {
-            if w[0] > w[1] {
-                return Err("offsets not monotone".into());
-            }
-        }
-        if self.targets.iter().any(|&t| (t as usize) >= n) {
-            return Err("target out of range".into());
-        }
-        if let Some(w) = &self.weights {
-            if w.len() != self.targets.len() {
-                return Err("weights length mismatch".into());
-            }
-        }
-        Ok(())
+        validate_csr(self.offsets(), self.targets(), self.weights())
     }
 }
 
@@ -346,6 +450,7 @@ mod tests {
         assert_eq!(g.neighbors(2), &[] as &[V]);
         assert_eq!(g.neighbors(3), &[0]);
         assert_eq!(g.degree(4), 0);
+        assert!(!g.arena_backed());
         g.validate().unwrap();
     }
 
@@ -416,7 +521,7 @@ mod tests {
             .collect();
         let g = Graph::from_weighted_edges(1000, &edges, false);
         let s = g.weight_stats();
-        let ws = g.weights.as_ref().unwrap();
+        let ws = g.weights().unwrap();
         let serial_mean = ws.iter().map(|&w| w as f64).sum::<f64>() / ws.len() as f64;
         assert!((s.mean as f64 - serial_mean).abs() < 1e-3);
         assert_eq!(s.min, ws.iter().copied().fold(f32::INFINITY, f32::min));
@@ -443,8 +548,8 @@ mod tests {
                 .collect();
             let g = Graph::from_edges(n, &edges, true);
             let tt = g.transpose().transpose();
-            assert_eq!(g.offsets, tt.offsets);
-            assert_eq!(g.targets, tt.targets);
+            assert_eq!(g.offsets(), tt.offsets());
+            assert_eq!(g.targets(), tt.targets());
         });
     }
 
@@ -477,5 +582,38 @@ mod tests {
         assert_eq!(g.m(), 500_000);
         let deg_sum: usize = (0..n as V).map(|v| g.degree(v)).sum();
         assert_eq!(deg_sum, g.m());
+    }
+
+    #[test]
+    fn validate_csr_is_shared_and_exact() {
+        // Same reasons as Graph::validate, callable on raw sections
+        // (the .pgr loader checks arena slices before construction).
+        assert_eq!(validate_csr(&[], &[], None), Err("offsets empty".into()));
+        assert_eq!(
+            validate_csr(&[1, 1], &[], None),
+            Err("offsets[0] != 0".into())
+        );
+        assert_eq!(
+            validate_csr(&[0, 2], &[0], None),
+            Err("offsets[n] != m".into())
+        );
+        assert_eq!(
+            validate_csr(&[0, 2, 1, 3], &[0, 0, 0], None),
+            Err("offsets not monotone".into())
+        );
+        assert_eq!(
+            validate_csr(&[0, 1], &[5], None),
+            Err("target out of range".into())
+        );
+        assert_eq!(
+            validate_csr(&[0, 1], &[0], Some(&[1.0, 2.0])),
+            Err("weights length mismatch".into())
+        );
+        assert_eq!(validate_csr(&[0, 1], &[0], Some(&[1.0])), Ok(()));
+        let g = tiny();
+        assert_eq!(
+            g.validate(),
+            validate_csr(g.offsets(), g.targets(), g.weights())
+        );
     }
 }

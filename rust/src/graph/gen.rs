@@ -575,7 +575,7 @@ mod tests {
     #[test]
     fn road_is_weighted_mostly_bidirectional() {
         let g = road(20, 30, 1);
-        assert!(g.weights.is_some());
+        assert!(g.weights().is_some());
         g.validate().unwrap();
         let (mut two_way, mut total) = (0usize, 0usize);
         for u in 0..g.n() as V {
@@ -657,9 +657,9 @@ mod tests {
     fn generators_are_deterministic() {
         let a = social(10, 8, 7);
         let b = social(10, 8, 7);
-        assert_eq!(a.targets, b.targets);
+        assert_eq!(a.targets(), b.targets());
         let a = road(10, 10, 3);
         let b = road(10, 10, 3);
-        assert_eq!(a.targets, b.targets);
+        assert_eq!(a.targets(), b.targets());
     }
 }

@@ -22,7 +22,7 @@ const FLAG_WEIGHTED: u64 = 2;
 pub fn write_adj(g: &Graph, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
     let mut w = BufWriter::new(f);
-    let weighted = g.weights.is_some();
+    let weighted = g.weights().is_some();
     writeln!(
         w,
         "{}",
@@ -35,12 +35,12 @@ pub fn write_adj(g: &Graph, path: &Path) -> Result<()> {
     writeln!(w, "{}", g.n())?;
     writeln!(w, "{}", g.m())?;
     for v in 0..g.n() {
-        writeln!(w, "{}", g.offsets[v])?;
+        writeln!(w, "{}", g.offsets()[v])?;
     }
-    for &t in &g.targets {
+    for &t in g.targets() {
         writeln!(w, "{t}")?;
     }
-    if let Some(ws) = &g.weights {
+    if let Some(ws) = g.weights() {
         for &x in ws {
             writeln!(w, "{x}")?;
         }
@@ -109,19 +109,19 @@ pub fn write_bin(g: &Graph, path: &Path) -> Result<()> {
     if g.symmetric {
         flags |= FLAG_SYMMETRIC;
     }
-    if g.weights.is_some() {
+    if g.weights().is_some() {
         flags |= FLAG_WEIGHTED;
     }
     w.write_all(&flags.to_le_bytes())?;
     w.write_all(&(g.n() as u64).to_le_bytes())?;
     w.write_all(&(g.m() as u64).to_le_bytes())?;
-    for &o in &g.offsets {
+    for &o in g.offsets() {
         w.write_all(&o.to_le_bytes())?;
     }
-    for &t in &g.targets {
+    for &t in g.targets() {
         w.write_all(&t.to_le_bytes())?;
     }
-    if let Some(ws) = &g.weights {
+    if let Some(ws) = g.weights() {
         for &x in ws {
             w.write_all(&x.to_le_bytes())?;
         }
@@ -173,12 +173,13 @@ pub fn read_bin(path: &Path) -> Result<Graph> {
     Ok(g)
 }
 
-/// Load a graph by extension (.adj or .bin).
+/// Load a graph by extension (.adj, .bin or .pgr).
 pub fn read_graph(path: &Path) -> Result<Graph> {
     match path.extension().and_then(|e| e.to_str()) {
         Some("adj") => read_adj(path),
         Some("bin") => read_bin(path),
-        other => bail!("unknown graph extension {other:?} (want .adj or .bin)"),
+        Some("pgr") => Ok(super::store::load(path)?.graph),
+        other => bail!("unknown graph extension {other:?} (want .adj, .bin or .pgr)"),
     }
 }
 
@@ -219,9 +220,9 @@ mod tests {
         let p = tmpdir().join("t1.adj");
         write_adj(&g, &p).unwrap();
         let h = read_adj(&p).unwrap();
-        assert_eq!(g.offsets, h.offsets);
-        assert_eq!(g.targets, h.targets);
-        assert!(h.weights.is_none());
+        assert_eq!(g.offsets(), h.offsets());
+        assert_eq!(g.targets(), h.targets());
+        assert!(h.weights().is_none());
     }
 
     #[test]
@@ -230,8 +231,8 @@ mod tests {
         let p = tmpdir().join("t2.adj");
         write_adj(&g, &p).unwrap();
         let h = read_adj(&p).unwrap();
-        assert_eq!(g.targets, h.targets);
-        assert_eq!(g.weights, h.weights);
+        assert_eq!(g.targets(), h.targets());
+        assert_eq!(g.weights(), h.weights());
     }
 
     #[test]
@@ -240,9 +241,9 @@ mod tests {
         let p = tmpdir().join("t3.bin");
         write_bin(&g, &p).unwrap();
         let h = read_bin(&p).unwrap();
-        assert_eq!(g.offsets, h.offsets);
-        assert_eq!(g.targets, h.targets);
-        assert_eq!(g.weights, h.weights);
+        assert_eq!(g.offsets(), h.offsets());
+        assert_eq!(g.targets(), h.targets());
+        assert_eq!(g.weights(), h.weights());
         assert_eq!(g.symmetric, h.symmetric);
     }
 
@@ -261,8 +262,8 @@ mod tests {
         let pb = d.join("t4.bin");
         write_adj(&g, &pa).unwrap();
         write_bin(&g, &pb).unwrap();
-        assert_eq!(read_graph(&pa).unwrap().targets, g.targets);
-        assert_eq!(read_graph(&pb).unwrap().targets, g.targets);
+        assert_eq!(read_graph(&pa).unwrap().targets(), g.targets());
+        assert_eq!(read_graph(&pb).unwrap().targets(), g.targets());
         assert!(read_graph(&d.join("t4.xyz")).is_err());
     }
 
@@ -274,7 +275,7 @@ mod tests {
         let before = std::fs::metadata(d.join("LJ_tiny.bin")).unwrap().modified().unwrap();
         let b = cached_suite_graph(&d, &entry, gen::Scale::Tiny).unwrap();
         let after = std::fs::metadata(d.join("LJ_tiny.bin")).unwrap().modified().unwrap();
-        assert_eq!(a.targets, b.targets);
+        assert_eq!(a.targets(), b.targets());
         assert_eq!(before, after, "second call must not regenerate");
     }
 }

@@ -10,6 +10,10 @@
 //!   substitution argument).
 //! * [`io`] — PBBS `.adj` text format and a GBBS-style `.bin` binary
 //!   format, reader + writer.
+//! * [`store`] — the versioned `pasgal-graph/1` on-disk CSR format
+//!   (`.pgr`): checksummed 64-byte-aligned sections, plain (zero-copy
+//!   arena-viewed) and delta (varint byte-coded) adjacency encodings,
+//!   `pack`/`load` with typed corruption rejection.
 //! * [`stats`] — degree statistics and sampled-search diameter
 //!   estimation (the paper's Table 1 `D`/`D'` methodology).
 
@@ -17,6 +21,7 @@ pub mod csr;
 pub mod gen;
 pub mod io;
 pub mod stats;
+pub mod store;
 
-pub use csr::{Graph, WeightStats};
+pub use csr::{CsrBacking, Graph, WeightStats};
 pub use gen::{suite, Category, Scale, SuiteEntry};

@@ -1,0 +1,252 @@
+//! Aligned byte arenas and typed zero-copy views.
+//!
+//! A [`Arena`] is one cache-line-aligned allocation holding an entire
+//! `.pgr` file image, filled by a single bulk read. Plain-encoded
+//! sections are then *viewed* in place as typed slices through
+//! [`ArenaView`] — no per-element decode, no copy — and the arena
+//! stays alive for as long as any view (and therefore any published
+//! graph snapshot) still references it, via a shared `Arc`.
+//!
+//! Safety rests on three invariants, all enforced at construction:
+//!
+//! * the viewed byte range lies inside the arena,
+//! * the range start is aligned for the element type (sections are
+//!   written 64-byte-aligned, and the arena itself is 64-byte-aligned,
+//!   so file-offset alignment transfers to memory alignment),
+//! * element types are restricted to the sealed plain-old-data marker
+//!   [`StoreElem`] (`u32`/`u64`/`f32`), for which every bit pattern is
+//!   a valid value.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::io::Read;
+use std::marker::PhantomData;
+use std::ptr::NonNull;
+use std::sync::Arc;
+
+/// Alignment of every [`Arena`] allocation (one x86 cache line; also
+/// the section alignment of the `pasgal-graph/1` format, so aligned
+/// file offsets become aligned memory addresses).
+pub const ARENA_ALIGN: usize = 64;
+
+/// Marker for element types that may be reinterpreted directly from
+/// arena bytes: fixed-size plain old data with no padding and no
+/// invalid bit patterns, stored little-endian on disk.
+///
+/// # Safety
+///
+/// Implementors must guarantee every `size_of::<Self>()`-byte pattern
+/// is a valid value of `Self`. The trait is deliberately implemented
+/// only for the three scalar types the CSR sections use.
+pub unsafe trait StoreElem: Copy + Send + Sync + 'static {}
+
+unsafe impl StoreElem for u32 {}
+unsafe impl StoreElem for u64 {}
+unsafe impl StoreElem for f32 {}
+
+/// One 64-byte-aligned heap allocation, immutable after construction.
+///
+/// The arena is shared (`Arc<Arena>`) between every [`ArenaView`] cut
+/// from it; dropping the last view frees the whole file image at
+/// once. Immutability after construction is what makes the
+/// `Send`/`Sync` impls sound.
+pub struct Arena {
+    ptr: NonNull<u8>,
+    len: usize,
+}
+
+// Safety: the buffer is written only during construction (before the
+// Arena is shared) and read-only afterwards; `NonNull` is the sole
+// owner until Drop.
+unsafe impl Send for Arena {}
+unsafe impl Sync for Arena {}
+
+impl Arena {
+    /// Allocate a zeroed, 64-byte-aligned arena of `len` bytes.
+    pub fn zeroed(len: usize) -> Arena {
+        // Zero-size allocations are UB; a 1-byte slab keeps Drop
+        // uniform and costs nothing.
+        let layout = Layout::from_size_align(len.max(1), ARENA_ALIGN)
+            .expect("arena layout (len rounded up overflows?)");
+        let raw = unsafe { alloc_zeroed(layout) };
+        let ptr = NonNull::new(raw).unwrap_or_else(|| handle_alloc_error(layout));
+        Arena { ptr, len }
+    }
+
+    /// Fill a fresh arena with exactly `len` bytes from `r` — the
+    /// loader's *single bulk read* of the whole file image.
+    pub fn from_reader(r: &mut impl Read, len: usize) -> std::io::Result<Arena> {
+        let arena = Arena::zeroed(len);
+        // Safety: freshly allocated, not yet shared.
+        let bytes = unsafe { std::slice::from_raw_parts_mut(arena.ptr.as_ptr(), len) };
+        r.read_exact(bytes)?;
+        Ok(arena)
+    }
+
+    /// Length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the arena holds zero bytes.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The whole arena as bytes.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for Arena {
+    fn drop(&mut self) {
+        let layout = Layout::from_size_align(self.len.max(1), ARENA_ALIGN).unwrap();
+        unsafe { dealloc(self.ptr.as_ptr(), layout) }
+    }
+}
+
+impl std::fmt::Debug for Arena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Arena").field("len", &self.len).finish()
+    }
+}
+
+/// A typed slice view into a shared [`Arena`]: `len` elements of `T`
+/// starting `byte_off` bytes in. Bounds and alignment are checked
+/// once at construction; [`ArenaView::as_slice`] is then a free cast.
+pub struct ArenaView<T: StoreElem> {
+    arena: Arc<Arena>,
+    byte_off: usize,
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<T: StoreElem> ArenaView<T> {
+    /// Cut a typed view out of `arena`, validating bounds and
+    /// alignment. Errors carry a human-readable reason (the loader
+    /// wraps them into typed `InvalidGraph` failures).
+    pub fn new(arena: Arc<Arena>, byte_off: usize, len: usize) -> Result<ArenaView<T>, String> {
+        let size = len
+            .checked_mul(std::mem::size_of::<T>())
+            .ok_or_else(|| "section byte size overflows".to_string())?;
+        match byte_off.checked_add(size) {
+            Some(end) if end <= arena.len() => {}
+            _ => return Err("section extends past end of arena".into()),
+        }
+        let addr = arena.ptr.as_ptr() as usize + byte_off;
+        if addr % std::mem::align_of::<T>() != 0 {
+            return Err("section misaligned for element type".into());
+        }
+        Ok(ArenaView {
+            arena,
+            byte_off,
+            len,
+            _elem: PhantomData,
+        })
+    }
+
+    /// The viewed elements. Zero-cost: pointer add + slice from raw
+    /// parts, validated at construction.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        unsafe {
+            std::slice::from_raw_parts(
+                self.arena.ptr.as_ptr().add(self.byte_off) as *const T,
+                self.len,
+            )
+        }
+    }
+
+    /// Number of elements viewed.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the view is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl<T: StoreElem> Clone for ArenaView<T> {
+    fn clone(&self) -> Self {
+        ArenaView {
+            arena: Arc::clone(&self.arena),
+            byte_off: self.byte_off,
+            len: self.len,
+            _elem: PhantomData,
+        }
+    }
+}
+
+impl<T: StoreElem> std::fmt::Debug for ArenaView<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArenaView")
+            .field("byte_off", &self.byte_off)
+            .field("len", &self.len)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_is_aligned_and_zeroed() {
+        let a = Arena::zeroed(130);
+        assert_eq!(a.len(), 130);
+        assert_eq!(a.bytes().as_ptr() as usize % ARENA_ALIGN, 0);
+        assert!(a.bytes().iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn from_reader_is_one_bulk_read() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let a = Arena::from_reader(&mut &data[..], 256).unwrap();
+        assert_eq!(a.bytes(), &data[..]);
+        // Short input fails instead of yielding a partial arena.
+        assert!(Arena::from_reader(&mut &data[..10], 256).is_err());
+    }
+
+    #[test]
+    fn views_reinterpret_in_place() {
+        let mut bytes = vec![0u8; 64];
+        bytes[..8].copy_from_slice(&0x0102030405060708u64.to_le_bytes());
+        bytes[8..12].copy_from_slice(&7u32.to_le_bytes());
+        let arena = Arc::new(Arena::from_reader(&mut &bytes[..], 64).unwrap());
+        let v64: ArenaView<u64> = ArenaView::new(Arc::clone(&arena), 0, 1).unwrap();
+        // Little-endian hosts read the stored value back verbatim.
+        if cfg!(target_endian = "little") {
+            assert_eq!(v64.as_slice(), &[0x0102030405060708]);
+            let v32: ArenaView<u32> = ArenaView::new(Arc::clone(&arena), 8, 1).unwrap();
+            assert_eq!(v32.as_slice(), &[7]);
+        }
+    }
+
+    #[test]
+    fn views_reject_out_of_bounds_and_misalignment() {
+        let arena = Arc::new(Arena::zeroed(64));
+        assert!(ArenaView::<u64>::new(Arc::clone(&arena), 0, 9).is_err());
+        assert!(ArenaView::<u64>::new(Arc::clone(&arena), 64, 1).is_err());
+        assert!(ArenaView::<u64>::new(Arc::clone(&arena), 3, 1).is_err());
+        assert!(ArenaView::<u64>::new(Arc::clone(&arena), usize::MAX, 2).is_err());
+        assert!(ArenaView::<u64>::new(arena, 0, 8).is_ok());
+    }
+
+    #[test]
+    fn views_share_one_arena() {
+        let arena = Arc::new(Arena::zeroed(128));
+        let a: ArenaView<u32> = ArenaView::new(Arc::clone(&arena), 0, 8).unwrap();
+        let b = a.clone();
+        drop(arena);
+        assert_eq!(a.as_slice().len(), 8);
+        assert_eq!(b.len(), 8);
+        assert!(!b.is_empty());
+    }
+}

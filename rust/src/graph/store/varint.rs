@@ -1,0 +1,109 @@
+//! Base-128 varints and zigzag, the GBBS-style byte codes behind the
+//! `.pgr` delta adjacency encoding.
+//!
+//! Each `u64` is stored as 1–10 bytes, 7 payload bits per byte,
+//! low-order group first, high bit = continuation. Signed values
+//! (the first target of a neighbor list, stored relative to its
+//! source vertex) go through zigzag first so small magnitudes of
+//! either sign stay short.
+
+/// Append `x` as a base-128 varint.
+#[inline]
+pub fn encode_u64(mut x: u64, out: &mut Vec<u8>) {
+    loop {
+        let byte = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode one varint from `buf` starting at `*pos`, advancing `pos`.
+/// Errors (reason string) on truncation or a >64-bit encoding.
+#[inline]
+pub fn decode_u64(buf: &[u8], pos: &mut usize) -> Result<u64, String> {
+    let mut x = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf
+            .get(*pos)
+            .ok_or_else(|| "varint truncated".to_string())?;
+        *pos += 1;
+        x |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(x);
+        }
+        shift += 7;
+        if shift >= 64 {
+            return Err("varint overflows u64".into());
+        }
+    }
+}
+
+/// Map a signed value to an unsigned one with small absolute values
+/// staying small: 0, -1, 1, -2, ... → 0, 1, 2, 3, ...
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Rng};
+
+    #[test]
+    fn roundtrips_edge_values() {
+        for x in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            encode_u64(x, &mut buf);
+            let mut pos = 0;
+            assert_eq!(decode_u64(&buf, &mut pos).unwrap(), x);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn zigzag_roundtrips_and_keeps_small_values_short() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        let mut buf = Vec::new();
+        encode_u64(zigzag(-3), &mut buf);
+        assert_eq!(buf.len(), 1);
+    }
+
+    #[test]
+    fn rejects_truncated_and_oversized() {
+        let mut pos = 0;
+        assert!(decode_u64(&[0x80, 0x80], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(decode_u64(&[0xff; 11], &mut pos).is_err());
+    }
+
+    #[test]
+    fn prop_stream_roundtrip() {
+        forall(0x7A41, |rng: &mut Rng| {
+            let k = rng.range(0, 64);
+            let vals: Vec<u64> = (0..k).map(|_| rng.below(u64::MAX)).collect();
+            let mut buf = Vec::new();
+            for &v in &vals {
+                encode_u64(v, &mut buf);
+            }
+            let mut pos = 0;
+            for &v in &vals {
+                assert_eq!(decode_u64(&buf, &mut pos).unwrap(), v);
+            }
+            assert_eq!(pos, buf.len());
+        });
+    }
+}

@@ -304,6 +304,59 @@
 //! (`kcore`) were opened for serving exactly this way — try
 //! `pasgal run --algo cc --graph g.bin` or a `serve --demo` trace.
 //!
+//! ## Graph storage
+//!
+//! Graphs persist in the versioned `pasgal-graph/1` binary CSR format
+//! (`.pgr`, [`graph::store`]): an 8-byte magic + fixed header (n, m,
+//! flags, encoding, total length), a checksummed section table, and
+//! 64-byte-aligned little-endian sections —
+//!
+//! ```text
+//! ┌────────────────────┬─────────────────────────────────────────┐
+//! │ header (192 B)     │ magic · version · encoding · n · m ·    │
+//! │                    │ flags · file len · FNV-1a checksums ·   │
+//! │                    │ section table (offset, len, FNV) × 4    │
+//! ├────────────────────┼─────────────────────────────────────────┤
+//! │ OFFSETS            │ (n+1) × u64 CSR spine                   │
+//! │ ADJ                │ m × u32 targets (plain) — or a varint   │
+//! │                    │ byte stream (delta)                     │
+//! │ WEIGHTS            │ m × f32 (weighted graphs only)          │
+//! │ ADJ_INDEX          │ (n+1) × u64 byte index (delta only)     │
+//! └────────────────────┴─────────────────────────────────────────┘
+//! ```
+//!
+//! Two adjacency encodings share the container. **Plain** stores the
+//! CSR arrays verbatim: [`graph::store::load`] does one bulk read
+//! into a 64-byte-aligned arena and (on little-endian hosts)
+//! publishes the graph as **zero-copy views into the file image** —
+//! load cost is read + checksum + validation, nothing per-element.
+//! **Delta** stores each sorted neighbor list GBBS-style as a zigzag
+//! varint first-target relative to the source plus plain varint gaps
+//! — 2–4× smaller adjacency on gap-friendly graphs, decoded in
+//! parallel per vertex at publish time. Choose plain when load
+//! latency or mmap-like sharing matters; choose delta when files are
+//! shipped or stored. Either way the in-memory representation is the
+//! same: [`graph::Graph`]'s arrays live behind
+//! [`graph::CsrBacking`] (owned `Vec`s or arena views) and every
+//! consumer reads slices through `offsets()` / `targets()` /
+//! `weights()`.
+//!
+//! Loads are fail-closed: magic/version/encoding checks, header and
+//! per-section FNV-1a checksums, section bounds/alignment/length
+//! arithmetic, then the **same** [`graph::csr::validate_csr`]
+//! invariant check the in-memory publish path uses — a corrupt or
+//! truncated file is a typed `InvalidGraph` error and never replaces
+//! a healthy published snapshot
+//! ([`coordinator::Coordinator::load_graph_from_path`] publishes
+//! under the normal Arc-swap version protocol, metering
+//! `graph_load_us`, `graphs_loaded_bytes` and `store_decode_us`).
+//! CLI: `pasgal pack` writes, `pasgal load --from-file` publishes and
+//! serves; `benches/ablation_store.rs` measures publish-from-file vs
+//! rebuild-from-edges; `tests/graph_store.rs` property-tests that
+//! round-tripped graphs answer every registry algorithm
+//! bit-identically and that random truncations/bit-flips are
+//! rejected.
+//!
 //! ## Observability
 //!
 //! The serving path measures itself; nothing here samples wall-clock

@@ -1,0 +1,270 @@
+//! Pack → load round-trip, corruption-rejection, and mid-serve
+//! publish tests for the `pasgal-graph/1` on-disk store.
+//!
+//! The contract under test: a graph that travels through `pack` +
+//! `load` answers every registered algorithm **bit-identically** to
+//! the in-memory original (both encodings), and every malformed file —
+//! truncated, bit-flipped, or structurally inconsistent under valid
+//! checksums — is rejected with a typed `InvalidGraph` error before
+//! anything reaches the directory, leaving whatever was already
+//! published untouched.
+
+use pasgal::algo::api::{self, ParseArgs};
+use pasgal::coordinator::{Coordinator, FailKind, JobOutput, JobRequest};
+use pasgal::graph::{gen, store, Graph};
+use pasgal::prop::{forall, Rng};
+use pasgal::V;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pasgal_store_it_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(name)
+}
+
+/// A small random graph from the generator zoo: mixed families,
+/// directed and symmetrized, weighted and unweighted.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let g = match rng.below(6) {
+        0 => gen::road(rng.range(2, 8), rng.range(2, 8), rng.u64()),
+        1 => gen::social(rng.range(4, 8) as u32, rng.range(2, 6), rng.u64()),
+        2 => gen::grid(rng.range(2, 10), rng.range(2, 10)),
+        3 => gen::path(rng.range(2, 64)),
+        4 => gen::complete(rng.range(2, 12)),
+        _ => gen::knn_chain(rng.range(4, 64), 3, 8, rng.u64()),
+    };
+    let g = if g.weights().is_none() && rng.chance(0.5) {
+        gen::with_random_weights(&g, rng.u64())
+    } else {
+        g
+    };
+    if rng.chance(0.3) {
+        g.symmetrize()
+    } else {
+        g
+    }
+}
+
+/// Serve every registered (non-engine) algorithm against `g` on a
+/// fresh coordinator and collect the outputs — the "answers" whose
+/// bit-identity the round-trip property asserts.
+fn answers(g: Graph) -> Vec<(&'static str, JobOutput)> {
+    let n = g.n().max(1);
+    let c = Coordinator::new();
+    c.load_graph("g", g);
+    let pargs = ParseArgs { tau: 64, block: 64 };
+    let mut out = Vec::new();
+    for (i, spec) in api::all().iter().filter(|s| !s.needs_engine).enumerate() {
+        let req = JobRequest::parse(i as u64, "g", spec.label, &pargs)
+            .expect("registry label parses")
+            .with_source(((i * 131) % n) as V);
+        let res = c.execute(&req).expect("query serves");
+        assert!(
+            !matches!(res.output, JobOutput::Failed { .. }),
+            "{} failed on a healthy graph: {:?}",
+            spec.label,
+            res.output
+        );
+        out.push((spec.label, res.output));
+    }
+    out
+}
+
+#[test]
+fn prop_roundtrip_answers_are_bit_identical_for_every_algorithm() {
+    forall(0x5709, |rng| {
+        let g = random_graph(rng);
+        let want = answers(g.clone());
+        for enc in [store::Encoding::Plain, store::Encoding::Delta] {
+            let p = tmp(&format!("prop_{}.pgr", enc.label()));
+            store::pack(&g, &p, enc).unwrap();
+            let loaded = store::load(&p).unwrap();
+            // Structure: offsets always survive verbatim; plain keeps
+            // the exact arrays, delta canonicalizes each neighbor list
+            // to sorted order.
+            assert_eq!(loaded.graph.offsets(), g.offsets());
+            assert_eq!(loaded.graph.symmetric, g.symmetric);
+            assert_eq!(loaded.graph.weights().is_some(), g.weights().is_some());
+            match enc {
+                store::Encoding::Plain => {
+                    assert_eq!(loaded.graph.targets(), g.targets());
+                    assert_eq!(loaded.graph.weights(), g.weights());
+                    assert_eq!(loaded.stats.zero_copy, cfg!(target_endian = "little"));
+                }
+                store::Encoding::Delta => {
+                    for v in 0..g.n() as V {
+                        let mut sorted = g.neighbors(v).to_vec();
+                        sorted.sort_unstable();
+                        assert_eq!(loaded.graph.neighbors(v), &sorted[..]);
+                    }
+                    assert!(!loaded.stats.zero_copy);
+                }
+            }
+            // Behavior: every registered algorithm answers the same.
+            let got = answers(loaded.graph);
+            assert_eq!(got, want, "{} round-trip changed answers", enc.label());
+        }
+    });
+}
+
+#[test]
+fn prop_any_truncation_is_rejected_typed() {
+    let g = gen::road(7, 9, 0x7C);
+    for enc in [store::Encoding::Plain, store::Encoding::Delta] {
+        let p = tmp(&format!("trunc_{}.pgr", enc.label()));
+        store::pack(&g, &p, enc).unwrap();
+        let img = std::fs::read(&p).unwrap();
+        forall(0x7C01, |rng| {
+            let cut = rng.range(0, img.len());
+            let q = tmp("trunc_cut.pgr");
+            std::fs::write(&q, &img[..cut]).unwrap();
+            let err = store::load(&q).expect_err("truncated file").to_string();
+            assert_eq!(
+                FailKind::classify(&err),
+                FailKind::InvalidGraph,
+                "cut at {cut}: {err}"
+            );
+        });
+    }
+}
+
+#[test]
+fn prop_bit_flips_never_corrupt_silently() {
+    let g = gen::with_random_weights(&gen::grid(6, 11), 5);
+    for enc in [store::Encoding::Plain, store::Encoding::Delta] {
+        let p = tmp(&format!("flip_{}.pgr", enc.label()));
+        store::pack(&g, &p, enc).unwrap();
+        let img = std::fs::read(&p).unwrap();
+        forall(0xF11B, |rng| {
+            let mut bad = img.clone();
+            let byte = rng.range(0, bad.len());
+            bad[byte] ^= 1 << rng.below(8);
+            let q = tmp("flip_mut.pgr");
+            std::fs::write(&q, &bad).unwrap();
+            match store::load(&q) {
+                // A flip in alignment padding is semantically inert;
+                // anything the loader accepts must be the exact graph.
+                Ok(loaded) => {
+                    assert_eq!(loaded.graph.offsets(), g.offsets(), "flip at byte {byte}");
+                    assert_eq!(loaded.graph.targets(), g.targets(), "flip at byte {byte}");
+                }
+                Err(e) => {
+                    let err = e.to_string();
+                    assert_eq!(
+                        FailKind::classify(&err),
+                        FailKind::InvalidGraph,
+                        "flip at byte {byte}: {err}"
+                    );
+                }
+            }
+        });
+    }
+}
+
+/// Rewrite a `.pgr` image's section + header checksums after a
+/// deliberate payload edit, so the *structural* validators — not the
+/// checksums — are what must catch the corruption.
+fn fix_checksums(img: &mut [u8]) {
+    const HEADER_BYTES: usize = 192;
+    const TABLE_AT: usize = 64;
+    const CHECKSUM_AT: usize = 48;
+    for i in 0..4 {
+        let at = TABLE_AT + i * 24;
+        let off = u64::from_le_bytes(img[at..at + 8].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(img[at + 8..at + 16].try_into().unwrap()) as usize;
+        if len == 0 {
+            continue;
+        }
+        let sum = store::fnv1a(&img[off..off + len]);
+        img[at + 16..at + 24].copy_from_slice(&sum.to_le_bytes());
+    }
+    img[CHECKSUM_AT..CHECKSUM_AT + 8].fill(0);
+    let hsum = store::fnv1a(&img[..HEADER_BYTES]);
+    img[CHECKSUM_AT..CHECKSUM_AT + 8].copy_from_slice(&hsum.to_le_bytes());
+}
+
+#[test]
+fn shared_csr_validator_catches_semantic_corruption_behind_valid_checksums() {
+    let g = gen::road(5, 8, 2);
+    let p = tmp("semantic.pgr");
+    store::pack(&g, &p, store::Encoding::Plain).unwrap();
+    let mut img = std::fs::read(&p).unwrap();
+    // Point the first target past n, then re-seal every checksum: only
+    // the shared `validate_csr` pass can reject this file now.
+    let adj_at = u64::from_le_bytes(img[88..96].try_into().unwrap()) as usize;
+    let huge = (g.n() as u32 + 100).to_le_bytes();
+    img[adj_at..adj_at + 4].copy_from_slice(&huge);
+    fix_checksums(&mut img);
+    std::fs::write(&p, &img).unwrap();
+    let err = store::load(&p).expect_err("out-of-range target").to_string();
+    assert_eq!(FailKind::classify(&err), FailKind::InvalidGraph);
+    assert!(
+        err.contains("target out of range"),
+        "shared validator reason expected, got: {err}"
+    );
+
+    // The in-memory publish path rejects the same violation with the
+    // same typed kind and the same reason — one validator, two doors.
+    let bad = Graph::from_raw_parts(vec![0, 1], vec![5], None, false);
+    let c = Coordinator::new();
+    let err2 = c
+        .try_load_graph("bad", bad)
+        .expect_err("out-of-range target")
+        .to_string();
+    assert_eq!(FailKind::classify(&err2), FailKind::InvalidGraph);
+    assert!(err2.contains("target out of range"), "got: {err2}");
+}
+
+#[test]
+fn mid_serve_publish_from_file_swaps_answers_and_survives_bad_loads() {
+    let c = Coordinator::new();
+    // Phase 1: serve on an in-memory graph.
+    c.load_graph("g", gen::path(40));
+    let pargs = ParseArgs::default();
+    let cc_req = |id| {
+        JobRequest::parse(id, "g", "cc", &pargs)
+            .expect("cc registered")
+            .with_source(0)
+    };
+    let before = c.execute(&cc_req(1)).unwrap().output;
+    let old_snapshot = c.graph("g").expect("published");
+    let v1 = c.directory().version();
+
+    // Phase 2: publish a structurally different graph from a file.
+    let star = gen::star(60);
+    let p = tmp("swap.pgr");
+    store::pack(&star, &p, store::Encoding::Plain).unwrap();
+    let info = c.load_graph_from_path("g", &p).expect("healthy load");
+    assert_eq!(info.encoding, store::Encoding::Plain);
+    let after = c.execute(&cc_req(2)).unwrap().output;
+    assert_ne!(before, after, "republish must change the served answers");
+    assert!(c.directory().version() > v1, "publish burns a version");
+    // The pre-swap snapshot is still alive and queryable for any
+    // in-flight readers holding it.
+    assert_eq!(old_snapshot.graph.n(), 40);
+    assert!(c.metrics.counter("graphs_loaded_bytes") >= info.file_bytes);
+
+    // Phase 3: a corrupt file must change nothing.
+    let v2 = c.directory().version();
+    let mut img = std::fs::read(&p).unwrap();
+    *img.last_mut().unwrap() ^= 0x10;
+    std::fs::write(&p, &img).unwrap();
+    let err = c
+        .load_graph_from_path("g", &p)
+        .expect_err("corrupt file")
+        .to_string();
+    assert_eq!(FailKind::classify(&err), FailKind::InvalidGraph);
+    assert_eq!(c.directory().version(), v2, "failed load burns no version");
+    let still = c.execute(&cc_req(3)).unwrap().output;
+    assert_eq!(still, after, "failed load must not disturb serving");
+}
+
+#[test]
+fn read_graph_routes_pgr_files_through_the_store() {
+    let g = gen::road(4, 9, 1);
+    let p = tmp("via_io.pgr");
+    store::pack(&g, &p, store::Encoding::Delta).unwrap();
+    let g2 = pasgal::graph::io::read_graph(&p).unwrap();
+    assert_eq!(g2.offsets(), g.offsets());
+    assert_eq!(g2.n(), g.n());
+}

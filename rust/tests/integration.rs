@@ -22,7 +22,7 @@ fn generate_save_load_analyze_roundtrip() {
     let path = dir.join("road.bin");
     io::write_bin(&g, &path).unwrap();
     let g2 = io::read_bin(&path).unwrap();
-    assert_eq!(g.targets, g2.targets);
+    assert_eq!(g.targets(), g2.targets());
 
     let d = bfs::vgc_bfs(&g2, 0, 128, None);
     assert_eq!(d, bfs::seq_bfs(&g2, 0));

@@ -133,6 +133,58 @@ fn duplicates_within_one_batch_hit_the_cache() {
 }
 
 #[test]
+fn full_vectors_serve_from_the_cache_and_match_direct_computation() {
+    use pasgal::coordinator::Query;
+    let c = Coordinator::new();
+    c.load_graph("tri", two_triangles());
+    let q = Query::new("tri", "cc", &ParseArgs::default()).unwrap();
+    // First ask computes (priming summary + vector), second must
+    // return the *same allocation* — an Arc clone, not a recompute.
+    let v1 = c.run_query_vector(&q).unwrap();
+    let v2 = c.run_query_vector(&q).unwrap();
+    assert!(Arc::ptr_eq(&v1, &v2), "hit must alias the cached vector");
+    assert_eq!(c.metrics.counter("vector_hits"), 1);
+    // Correctness: the cached labels are the algorithm's labels.
+    let lg = c.graph("tri").unwrap();
+    let want = pasgal::algo::cc::connected_components(&lg.graph);
+    assert_eq!(&*v1, &want, "cached vector must equal direct CC labels");
+    assert_eq!(v1.len(), 7);
+
+    // Coreness vectors ride the same path.
+    let qk = Query::new("tri", "kcore", &ParseArgs::default()).unwrap();
+    let core1 = c.run_query_vector(&qk).unwrap();
+    let core2 = c.run_query_vector(&qk).unwrap();
+    assert!(Arc::ptr_eq(&core1, &core2));
+    assert_eq!(core1[6], 0, "isolated vertex has coreness 0");
+    assert_eq!(core1[0], 2, "triangle vertices have coreness 2");
+}
+
+#[test]
+fn full_vectors_invalidate_on_republish_and_reject_summary_only_specs() {
+    use pasgal::coordinator::Query;
+    let c = Coordinator::new();
+    c.load_graph("g", gen::grid(3, 3).symmetrize());
+    let q = Query::new("g", "cc", &ParseArgs::default()).unwrap();
+    let small = c.run_query_vector(&q).unwrap();
+    assert_eq!(small.len(), 9);
+    // Republish: the stale 9-vertex vector must never answer again.
+    c.load_graph("g", gen::grid(4, 4).symmetrize());
+    let big = c.run_query_vector(&q).unwrap();
+    assert!(!Arc::ptr_eq(&small, &big), "republish must drop the vector");
+    assert_eq!(big.len(), 16);
+
+    // Specs without a full-vector export are rejected up front, not
+    // silently summarized: BFS output depends on `source`, which the
+    // whole-graph cache key deliberately excludes.
+    let qb = Query::new("g", "bfs-vgc", &ParseArgs::default()).unwrap();
+    let err = c.run_query_vector(&qb).expect_err("bfs has no full vector");
+    assert!(
+        err.to_string().contains("no full-vector output"),
+        "got: {err}"
+    );
+}
+
+#[test]
 fn cached_and_fresh_outputs_are_bit_identical_across_shards() {
     // Duplicate-heavy mix over two graphs through the sharded server:
     // every response (cache hit or fresh compute, whichever shard
