@@ -13,6 +13,13 @@
 //! side, default 48), `PASGAL_TRAJ_REQS` (requests per
 //! (graph, algorithm) cell, default 6), `PASGAL_TRAJ_SHARDS` (comma
 //! list of shard counts, default `1,2,<pool width>`).
+//!
+//! When `PASGAL_TRAJ_PREV` names a previously committed document, the
+//! fresh one is **trend-gated** against it
+//! (`trajectory::trend_regressions`): any algorithm exec series whose
+//! mean regressed past 2× its previous value in the same
+//! (shards, graph) cell fails the bench — after the fresh document is
+//! written, so the artifact is still there to inspect.
 
 use pasgal::bench::trajectory;
 
@@ -41,4 +48,21 @@ fn main() {
         trajectory::SCHEMA,
         t0.elapsed().as_secs_f64()
     );
+    if let Ok(prev_path) = std::env::var("PASGAL_TRAJ_PREV") {
+        let prev = std::fs::read_to_string(&prev_path)
+            .unwrap_or_else(|e| panic!("PASGAL_TRAJ_PREV={prev_path}: {e}"));
+        let problems = trajectory::trend_regressions(&json, &prev);
+        if problems.is_empty() {
+            println!(
+                "trend gate vs {prev_path}: {} comparable exec series, no >{}x regressions",
+                trajectory::exec_points(&prev).len(),
+                trajectory::TREND_FACTOR
+            );
+        } else {
+            for p in &problems {
+                eprintln!("trajectory: trend regression: {p}");
+            }
+            panic!("{} exec series regressed past the trend gate", problems.len());
+        }
+    }
 }

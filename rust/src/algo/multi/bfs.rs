@@ -37,7 +37,8 @@
 //! [`StampedU64`]: crate::parallel::StampedU64
 
 use super::mask::{
-    for_each_lane, full_mask, lane_fifo_search, reset_mask_state, MaskFrontier, MAX_LANES,
+    compact_lanes, compaction_due, for_each_lane, full_mask, lane_fifo_search, reset_mask_state,
+    LanePerm, MaskFrontier, MAX_LANES,
 };
 use crate::algo::cancel::{cancelled, Cancel};
 use crate::algo::workspace::MultiBfsWorkspace;
@@ -117,6 +118,10 @@ pub fn multi_bfs_vgc_ws_cancel(
     ws.expanded.ensure_len(n * lanes);
     ws.expanded.reset(UNREACHED);
     reset_mask_state(n, &mut ws.masks, &mut ws.pending, &mut ws.bag);
+    // Submission lane -> physical lane; identity (empty) until a
+    // mid-walk compaction permutes the stripes.
+    let mut lane_map = std::mem::take(&mut ws.lane_map);
+    lane_map.clear();
 
     let dist = &ws.dist;
     let expanded = &ws.expanded;
@@ -140,24 +145,57 @@ pub fn multi_bfs_vgc_ws_cancel(
     // distance (the lane scan is paid once, not twice).
     let mut dmins = std::mem::take(&mut ws.offs);
 
+    // Mid-walk lane compaction state: `width` is the physical lane
+    // count still walking, `live` the live set seen by the previous
+    // round's wavefront scan (a converged lane can never produce work
+    // again — its improvements are all expanded and expansion is the
+    // only source of new ones — so liveness is monotone).
+    let mut width = lanes;
+    let mut live = full_mask(lanes);
+    let mut compactions = 0u64;
+
     while !frontier.is_empty() {
         // Cancellation point: break (never return) so the workspace
         // restores below still run and the pooled buffers stay warm.
         if cancelled(cancel) {
             break;
         }
+        // Re-pack live lanes into a dense prefix once >= 3/4 of the
+        // batch has converged: later mask scans stop visiting dead
+        // lanes entirely, while their final distances stay exportable
+        // at the parked positions via `lane_map`.
+        if compaction_due(live, width) {
+            let perm = LanePerm::build(live, width);
+            compact_lanes(n, lanes, width, &perm, &[dist, expanded], mf.masks);
+            if lane_map.is_empty() {
+                lane_map.extend(0..lanes as u32);
+            }
+            for m in lane_map.iter_mut() {
+                if (*m as usize) < width {
+                    *m = perm.target(*m as usize) as u32;
+                }
+            }
+            width = perm.live;
+            live = full_mask(width);
+            compactions += 1;
+        }
         // Re-align the hop window to the smallest unexpanded distance
         // still pending (lanes run at different phases; the minimum is
-        // the wavefront).
+        // the wavefront). The same scan observes which lanes still
+        // have unexpanded work — the compaction live set.
         dmins.clear();
         let mut cur = UNREACHED;
+        let mut round_live = 0u64;
         for &v in &frontier {
             let mut dmin = UNREACHED;
             for_each_lane(mf.mask(v), |lane| {
                 let idx = v as usize * lanes + lane;
                 let d = dist.get(idx);
-                if d < expanded.get(idx) && d < dmin {
-                    dmin = d;
+                if d < expanded.get(idx) {
+                    round_live |= 1u64 << lane;
+                    if d < dmin {
+                        dmin = d;
+                    }
                 }
             });
             dmins.push(dmin as usize);
@@ -165,6 +203,7 @@ pub fn multi_bfs_vgc_ws_cancel(
                 cur = dmin;
             }
         }
+        live = round_live;
         // Admit the within-window slice; defer unready (far-ahead)
         // vertices so overshooting claims are corrected before they
         // are expanded — vgc_bfs's bucket rule, one window at a time.
@@ -227,6 +266,8 @@ pub fn multi_bfs_vgc_ws_cancel(
     ws.frontier = frontier;
     ws.next = work;
     ws.offs = dmins;
+    ws.lane_map = lane_map;
+    ws.compactions = compactions;
 }
 
 /// Hop distances from every seed (allocate-per-call wrapper around
@@ -272,6 +313,10 @@ pub fn multi_bfs_diropt_ws_cancel(
     let n = g.n();
     let m = g.m();
     ws.lanes = lanes;
+    // Level synchrony never compacts: lanes stay at their submission
+    // positions (a stale map from a previous VGC walk must not leak).
+    ws.lane_map.clear();
+    ws.compactions = 0;
     ws.dist.ensure_len(n * lanes);
     ws.dist.reset(UNREACHED);
     ws.masks.ensure_len(n);
@@ -498,6 +543,48 @@ mod tests {
         check_lanes(&g, &seeds, &got, "with transpose");
         let got = multi_bfs_diropt(&g, None, &seeds, None);
         check_lanes(&g, &seeds, &got, "top-down only");
+    }
+
+    #[test]
+    fn vgc_lane_compaction_is_bit_identical() {
+        // Directed path: seeds near the tail converge within a few
+        // hops, the seed at the head walks the whole chain — the skew
+        // that triggers mid-walk compaction.
+        let g = gen::path(2048);
+        let n = g.n() as u32;
+        for &w in &[5usize, 17, 64] {
+            let mut seeds: Vec<V> = (0..w as u32 - 1).map(|i| n - 1 - i).collect();
+            seeds.push(0);
+            let mut ws = MultiBfsWorkspace::new();
+            multi_bfs_vgc_ws(&g, &seeds, 32, None, &mut ws);
+            assert!(
+                ws.compactions > 0,
+                "width {w}: skewed batch should compact, got 0"
+            );
+            check_lanes(&g, &seeds, &ws.export_all(g.n()), &format!("compacted w={w}"));
+        }
+    }
+
+    #[test]
+    fn vgc_repeated_compaction_composes_the_lane_map() {
+        // Three convergence tiers: 48 tail seeds die first (live drops
+        // to 16 of 64 -> first re-pack), 15 mid-chain seeds die next
+        // (live drops to 1 of 16 -> second re-pack), the head seed
+        // walks alone to the end. Exports must survive the composed
+        // permutation.
+        let g = gen::path(4096);
+        let n = g.n() as u32;
+        let mut seeds: Vec<V> = (0..48).map(|i| n - 1 - i).collect();
+        seeds.extend((0..15u32).map(|i| n / 2 - i * 7));
+        seeds.push(0);
+        let mut ws = MultiBfsWorkspace::new();
+        multi_bfs_vgc_ws(&g, &seeds, 64, None, &mut ws);
+        assert!(
+            ws.compactions >= 2,
+            "tiered convergence should compact at least twice, got {}",
+            ws.compactions
+        );
+        check_lanes(&g, &seeds, &ws.export_all(g.n()), "two-tier 64");
     }
 
     #[test]

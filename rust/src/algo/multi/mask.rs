@@ -28,6 +28,16 @@
 //!   array; the mask is just a filter of ever-touched lanes (it only
 //!   grows; the per-lane "expanded at" qualification makes re-visits
 //!   of settled lanes cheap no-ops).
+//!
+//! Distance-style walks additionally support **mid-walk lane
+//! compaction**: once ≥3/4 of a fused walk's lanes have converged
+//! ([`compaction_due`]), [`compact_lanes`] re-packs the live lanes
+//! into a dense low-lane prefix — permuting the lane-striped state and
+//! dropping converged lanes' mask bits — so a skewed batch mixing tiny
+//! and huge searches stops paying wide mask scans for a handful of
+//! live lanes. The permutation is invisible to results: converged
+//! lanes keep their final values at parked positions and the engines
+//! record the submission-lane → physical-lane map for export.
 
 use crate::hashbag::HashBag;
 use crate::parallel::ops::parallel_for_chunks;
@@ -216,6 +226,113 @@ pub fn lane_fifo_search<P: Copy>(
     });
 }
 
+/// True when a fused walk should re-pack its lanes: at least 3/4 of
+/// the current `width` lanes have converged (no pending improvement
+/// anywhere) while at least one lane is still walking. The 4× ratio
+/// keeps compaction rare — at most `log4(MAX_LANES) = 3` re-packs per
+/// walk — so the O(n·width) permutation pass amortizes against the
+/// per-round mask scans it eliminates.
+#[inline]
+pub fn compaction_due(live_mask: u64, width: usize) -> bool {
+    let live = live_mask.count_ones() as usize;
+    live > 0 && live < width && live * 4 <= width
+}
+
+/// A lane permutation packing live lanes into the dense prefix
+/// `[0, live)` and parking converged lanes behind them (see
+/// [`compact_lanes`]). Converged lanes keep their (final) lane-striped
+/// values at their parked positions, so every lane stays exportable;
+/// only the *mask bits* of converged lanes are dropped — a converged
+/// lane can never improve again, so its bits would only cost
+/// [`for_each_lane`] scan work in every later round.
+pub struct LanePerm {
+    /// Old physical lane → new physical lane (bijective over the old
+    /// width).
+    to: [u8; MAX_LANES],
+    /// Bits (old positions) of the lanes still live.
+    live_mask: u64,
+    /// Number of live lanes — the compacted width.
+    pub live: usize,
+}
+
+impl LanePerm {
+    /// Build the packing permutation for the given live set over the
+    /// current `width` physical lanes.
+    pub fn build(live_mask: u64, width: usize) -> LanePerm {
+        debug_assert!(width <= MAX_LANES);
+        debug_assert_eq!(live_mask & !full_mask(width), 0, "live bits past width");
+        let mut to = [0u8; MAX_LANES];
+        let mut next_live = 0u8;
+        let mut next_dead = live_mask.count_ones() as u8;
+        for (lane, slot) in to.iter_mut().enumerate().take(width) {
+            if live_mask & (1u64 << lane) != 0 {
+                *slot = next_live;
+                next_live += 1;
+            } else {
+                *slot = next_dead;
+                next_dead += 1;
+            }
+        }
+        LanePerm {
+            to,
+            live_mask,
+            live: next_live as usize,
+        }
+    }
+
+    /// New physical position of old physical lane `lane`.
+    #[inline]
+    pub fn target(&self, lane: usize) -> usize {
+        self.to[lane] as usize
+    }
+
+    /// Re-map a per-vertex mask word: live bits move to their packed
+    /// positions, converged bits are dropped.
+    #[inline]
+    pub fn remap_word(&self, word: u64) -> u64 {
+        let mut out = 0u64;
+        for_each_lane(word & self.live_mask, |lane| out |= 1u64 << self.to[lane]);
+        out
+    }
+}
+
+/// Apply `perm` to every vertex's lane-striped state in one parallel
+/// pass: each array in `striped` (stride-`stride` per vertex, e.g.
+/// dist + expanded for BFS, dist + settled for SSSP) has its first
+/// `width` lanes permuted in place, and each vertex's mask word is
+/// re-packed via [`LanePerm::remap_word`]. Runs between rounds, when
+/// no search tasks are in flight — the unconditional stores are not
+/// linearizable against concurrent `fetch_or`/`write_min` traffic.
+pub fn compact_lanes(
+    n: usize,
+    stride: usize,
+    width: usize,
+    perm: &LanePerm,
+    striped: &[&StampedU32],
+    masks: &StampedU64,
+) {
+    debug_assert!(width <= stride && width <= MAX_LANES);
+    parallel_for_chunks(0, n, 512, |_, range| {
+        let mut tmp = [0u32; MAX_LANES];
+        for v in range {
+            let base = v * stride;
+            for arr in striped {
+                for (lane, t) in tmp.iter_mut().enumerate().take(width) {
+                    *t = arr.get(base + lane);
+                }
+                for (lane, t) in tmp.iter().enumerate().take(width) {
+                    arr.store(base + perm.to[lane] as usize, *t);
+                }
+            }
+            let word = masks.get(v);
+            let packed = perm.remap_word(word);
+            if packed != word {
+                masks.store(v, packed);
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +376,84 @@ mod tests {
         assert!(mf.mark_pending(3, 0b01));
         assert!(!mf.mark_pending(3, 0b01), "already pending again");
         assert!(mf.is_pending(3));
+    }
+
+    #[test]
+    fn compaction_due_needs_three_quarters_converged() {
+        // width 5: due once a single lane remains.
+        assert!(compaction_due(0b00100, 5));
+        assert!(!compaction_due(0b00101, 5), "2 live of 5 is below 3/4");
+        // width 17: due at <= 4 live lanes.
+        assert!(compaction_due(0b1111, 17));
+        assert!(!compaction_due(0b11111, 17));
+        // width 64: due at <= 16 live lanes.
+        assert!(compaction_due((1u64 << 16) - 1, 64));
+        assert!(!compaction_due((1u64 << 17) - 1, 64));
+        // Degenerate cases never trigger.
+        assert!(!compaction_due(0, 64), "no live lanes: walk is over");
+        assert!(!compaction_due(1, 1), "nothing to pack at width 1");
+        assert!(!compaction_due(full_mask(8), 8), "all live");
+    }
+
+    #[test]
+    fn lane_perm_is_a_bijection_packing_live_lanes_first() {
+        let live = 0b1000_0100_0001u64; // lanes 0, 6, 11 live of 12
+        let perm = LanePerm::build(live, 12);
+        assert_eq!(perm.live, 3);
+        assert_eq!(perm.target(0), 0);
+        assert_eq!(perm.target(6), 1);
+        assert_eq!(perm.target(11), 2);
+        // Bijective over the old width: every target hit exactly once.
+        let mut seen = vec![false; 12];
+        for lane in 0..12 {
+            let t = perm.target(lane);
+            assert!(!seen[t], "duplicate target {t}");
+            seen[t] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Dead lanes keep ascending order behind the live prefix.
+        assert!(perm.target(1) < perm.target(2));
+        // Mask re-pack keeps live bits only, at packed positions.
+        assert_eq!(perm.remap_word(live), 0b111);
+        assert_eq!(perm.remap_word(0b0100_0010), 0b010, "dead bit 1 dropped");
+        assert_eq!(perm.remap_word(0), 0);
+    }
+
+    #[test]
+    fn compact_lanes_permutes_striped_state_and_repacks_masks() {
+        let n = 7usize;
+        let width = 8usize;
+        let stride = 8usize;
+        let mut dist = StampedU32::new(u32::MAX);
+        dist.ensure_len(n * stride);
+        dist.reset(u32::MAX);
+        let mut masks = StampedU64::new(0);
+        let mut pending = StampedU32::new(0);
+        let mut bag = HashBag::default();
+        reset_mask_state(n, &mut masks, &mut pending, &mut bag);
+        // Stamp a recognizable value into every (vertex, lane) slot and
+        // give each vertex a mask word mixing live and dead lanes.
+        for v in 0..n {
+            for lane in 0..width {
+                dist.store(v * stride + lane, (v * 100 + lane) as u32);
+            }
+            masks.fetch_or(v, full_mask(width));
+        }
+        let live = 0b0010_0010u64; // lanes 1 and 5 still walking
+        let perm = LanePerm::build(live, width);
+        compact_lanes(n, stride, width, &perm, &[&dist], &masks);
+        for v in 0..n {
+            // Live lanes packed to the prefix, dead values preserved at
+            // their parked positions (still exportable).
+            assert_eq!(dist.get(v * stride), (v * 100 + 1) as u32);
+            assert_eq!(dist.get(v * stride + 1), (v * 100 + 5) as u32);
+            let mut vals: Vec<u32> = (0..width).map(|l| dist.get(v * stride + l)).collect();
+            vals.sort_unstable();
+            let mut want: Vec<u32> = (0..width).map(|l| (v * 100 + l) as u32).collect();
+            want.sort_unstable();
+            assert_eq!(vals, want, "permutation lost a lane value");
+            assert_eq!(masks.get(v), 0b11, "masks keep live bits only");
+        }
     }
 
     #[test]

@@ -36,7 +36,8 @@ pub use bfs::{
     multi_bfs_vgc_ws, multi_bfs_vgc_ws_cancel,
 };
 pub use mask::{
-    for_each_lane, full_mask, lane_fifo_search, reset_mask_state, MaskFrontier, MAX_LANES,
+    compact_lanes, compaction_due, for_each_lane, full_mask, lane_fifo_search, reset_mask_state,
+    LanePerm, MaskFrontier, MAX_LANES,
 };
 pub use reach::{
     bfs_multi_reach, bfs_multi_reach_ws, vgc_multi_reach, vgc_multi_reach_ws, ReachCtx, UNSET,

@@ -25,6 +25,16 @@
 //! The same mask technique, generalized to per-source distances,
 //! powers the batched BFS/SSSP engines in [`super::bfs`] and
 //! [`super::sssp`].
+//!
+//! Unlike those distance engines, reachability does **not** perform
+//! mid-walk lane compaction ([`super::mask::compact_lanes`]): its only
+//! per-lane state is the mask word itself, every lane scan is a
+//! whole-word `fetch_or`/popcount (no lane-striped arrays to stride
+//! over), and the SCC caller reads `masks[v]` by the *original* seed
+//! bit positions — so a lane permutation would buy nothing and break
+//! the caller's bit contract. What compaction relies on, though —
+//! lanes being fully independent under permutation — holds here too,
+//! and is pinned by a test below.
 
 use super::mask::{reset_mask_state, MaskFrontier, MAX_LANES};
 use crate::algo::cancel::{cancelled, Cancel};
@@ -388,6 +398,35 @@ mod tests {
             t_vgc.num_rounds(),
             t_bfs.num_rounds()
         );
+    }
+
+    #[test]
+    fn lanes_are_invariant_under_seed_permutation() {
+        // The independence property lane compaction builds on (see the
+        // module docs): permuting the seed order only permutes which
+        // *bit* carries each source's answer, never the answer itself.
+        let g = gen::web(9, 6, 2);
+        let (scc, sub) = fresh_ctx(g.n());
+        let ctx = ReachCtx {
+            scc: &scc,
+            sub: &sub,
+        };
+        let seeds: Vec<V> = (0..24).map(|i| (i * 11) % g.n() as u32).collect();
+        let base = vgc_multi_reach(&g, &seeds, &ctx, 16, None);
+        let mut shuffled = seeds.clone();
+        shuffled.reverse();
+        shuffled.swap(0, 12);
+        let perm = vgc_multi_reach(&g, &shuffled, &ctx, 16, None);
+        for v in 0..g.n() {
+            for (lane, &s) in seeds.iter().enumerate() {
+                let shuffled_lane = shuffled.iter().position(|&x| x == s).unwrap();
+                assert_eq!(
+                    base[v] >> lane & 1,
+                    perm[v] >> shuffled_lane & 1,
+                    "vertex {v} seed {s}: reachability depends on lane position"
+                );
+            }
+        }
     }
 
     #[test]

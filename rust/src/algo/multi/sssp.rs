@@ -20,7 +20,10 @@
 //!
 //! [`StampedU32`]: crate::parallel::StampedU32
 
-use super::mask::{for_each_lane, lane_fifo_search, reset_mask_state, MaskFrontier, MAX_LANES};
+use super::mask::{
+    compact_lanes, compaction_due, for_each_lane, full_mask, lane_fifo_search, reset_mask_state,
+    LanePerm, MaskFrontier, MAX_LANES,
+};
 use crate::algo::cancel::{cancelled, Cancel};
 use crate::algo::workspace::MultiSsspWorkspace;
 use crate::graph::Graph;
@@ -85,6 +88,10 @@ pub fn multi_rho_ws_cancel(
     ws.settled.ensure_len(n * lanes);
     ws.settled.reset(INF.to_bits());
     reset_mask_state(n, &mut ws.masks, &mut ws.flags, &mut ws.bag);
+    // Submission lane -> physical lane; identity (empty) until a
+    // mid-walk compaction permutes the stripes.
+    let mut lane_map = std::mem::take(&mut ws.lane_map);
+    lane_map.clear();
 
     let dist = &ws.dist;
     // settled[v*L+lane] = bits of the distance that lane was last
@@ -130,11 +137,39 @@ pub fn multi_rho_ws_cancel(
         best
     };
 
+    // Mid-walk lane compaction state: `active` is the physical lane
+    // count still walking, `live` the live set seen by the previous
+    // round's partition scan (liveness is monotone: a settled lane's
+    // improvements are all expanded, and expansion is the only source
+    // of new ones).
+    let mut active = lanes;
+    let mut live = full_mask(lanes);
+    let mut compactions = 0u64;
+
     while !pending.is_empty() {
         // Cancellation point: break (never return) so the workspace
         // restores below still run and the pooled buffers stay warm.
         if cancelled(cancel) {
             break;
+        }
+        // Re-pack live lanes into a dense prefix once >= 3/4 of the
+        // batch has settled: later mask scans stop visiting dead lanes
+        // entirely, while their final distances stay exportable at the
+        // parked positions via `lane_map`.
+        if compaction_due(live, active) {
+            let perm = LanePerm::build(live, active);
+            compact_lanes(n, lanes, active, &perm, &[dist, settled], mf.masks);
+            if lane_map.is_empty() {
+                lane_map.extend(0..lanes as u32);
+            }
+            for m in lane_map.iter_mut() {
+                if (*m as usize) < active {
+                    *m = perm.target(*m as usize) as u32;
+                }
+            }
+            active = perm.live;
+            live = full_mask(active);
+            compactions += 1;
         }
         // Threshold: the smaller of (a) the ~RHO-th smallest pending
         // distance and (b) min pending distance + the width cap —
@@ -151,15 +186,31 @@ pub fn multi_rho_ws_cancel(
         };
         let theta = by_count.min(sample[0] + width);
 
-        // Partition: admitted now, deferred back to the bag.
+        // Partition: admitted now, deferred back to the bag. The same
+        // lane scan observes which lanes still carry unsettled work —
+        // the compaction live set.
         work.clear();
+        let mut round_live = 0u64;
         for &v in &pending {
-            if pending_min(v) <= theta {
+            let mut best = INF;
+            for_each_lane(mf.mask(v), |lane| {
+                let idx = v as usize * lanes + lane;
+                let db = dist.get(idx);
+                if db < settled.get(idx) {
+                    round_live |= 1u64 << lane;
+                    let d = f32::from_bits(db);
+                    if d < best {
+                        best = d;
+                    }
+                }
+            });
+            if best <= theta {
                 work.push(v);
             } else {
                 mf.defer(v); // still pending (flag stays 1)
             }
         }
+        live = round_live;
         if work.is_empty() {
             // θ below every pending distance can't happen (θ is a
             // pending distance or INF), but guard against fp quirks.
@@ -221,6 +272,8 @@ pub fn multi_rho_ws_cancel(
     ws.pending = pending;
     ws.work = work;
     ws.sample = sample;
+    ws.lane_map = lane_map;
+    ws.compactions = compactions;
 }
 
 #[cfg(test)]
@@ -291,6 +344,33 @@ mod tests {
             let got = multi_rho(&g, &seeds, tau, None);
             for (lane, &s) in seeds.iter().enumerate() {
                 close(&got[lane], &dijkstra(&g, s), &format!("tau {tau} lane {lane}"));
+            }
+        }
+    }
+
+    #[test]
+    fn lane_compaction_stays_bit_identical_to_solo_rho() {
+        // Directed path with unit weights: tail seeds settle within a
+        // few rounds, the head seed walks the whole chain — the skew
+        // that triggers mid-walk compaction.
+        let g = gen::path(2048);
+        let n = g.n() as u32;
+        for &w in &[5usize, 17, 64] {
+            let mut seeds: Vec<V> = (0..w as u32 - 1).map(|i| n - 1 - i).collect();
+            seeds.push(0);
+            let mut ws = MultiSsspWorkspace::new();
+            multi_rho_ws(&g, &seeds, 32, None, &mut ws);
+            assert!(
+                ws.compactions > 0,
+                "width {w}: skewed batch should compact, got 0"
+            );
+            let got = ws.export_all(g.n());
+            for (lane, &s) in seeds.iter().enumerate() {
+                assert_eq!(
+                    got[lane],
+                    rho_stepping(&g, s, 32, None),
+                    "width {w} lane {lane}: compaction must be invisible"
+                );
             }
         }
     }

@@ -108,6 +108,12 @@ pub struct MultiBfsWorkspace {
     pub edge_buf: Vec<u32>,
     /// Batch width of the last query (the lane stride of `dist`).
     pub lanes: usize,
+    /// Submission lane → physical lane after mid-walk compaction
+    /// ([`crate::algo::multi::compact_lanes`]); empty means identity.
+    pub lane_map: Vec<u32>,
+    /// Lane compactions performed by the last query (drained into the
+    /// `lane_compactions` counter by the coordinator).
+    pub compactions: u64,
 }
 
 impl MultiBfsWorkspace {
@@ -116,11 +122,20 @@ impl MultiBfsWorkspace {
         Self::default()
     }
 
+    /// Physical lane currently holding submission lane `lane`.
+    #[inline]
+    fn physical(&self, lane: usize) -> usize {
+        self.lane_map.get(lane).map_or(lane, |&p| p as usize)
+    }
+
     /// Distances of one lane from the last query into `out` (parallel
-    /// strided export — the coordinator's demultiplex path).
+    /// strided export — the coordinator's demultiplex path). `lane` is
+    /// the submission lane; compaction-induced permutations are
+    /// resolved here, so callers never see physical lane positions.
     pub fn export_lane_into(&self, lane: usize, n: usize, out: &mut Vec<u32>) {
         assert!(lane < self.lanes, "lane {lane} out of range ({})", self.lanes);
-        self.dist.export_strided_into(lane, self.lanes, n, out);
+        self.dist
+            .export_strided_into(self.physical(lane), self.lanes, n, out);
     }
 
     /// Per-lane distance vectors of the last query.
@@ -159,6 +174,12 @@ pub struct MultiSsspWorkspace {
     pub sample: Vec<f32>,
     /// Batch width of the last query (the lane stride of `dist`).
     pub lanes: usize,
+    /// Submission lane → physical lane after mid-walk compaction
+    /// ([`crate::algo::multi::compact_lanes`]); empty means identity.
+    pub lane_map: Vec<u32>,
+    /// Lane compactions performed by the last query (drained into the
+    /// `lane_compactions` counter by the coordinator).
+    pub compactions: u64,
 }
 
 impl MultiSsspWorkspace {
@@ -167,11 +188,19 @@ impl MultiSsspWorkspace {
         Self::default()
     }
 
+    /// Physical lane currently holding submission lane `lane`.
+    #[inline]
+    fn physical(&self, lane: usize) -> usize {
+        self.lane_map.get(lane).map_or(lane, |&p| p as usize)
+    }
+
     /// Distances of one lane from the last query into `out` (parallel
-    /// strided export).
+    /// strided export). `lane` is the submission lane; compaction
+    /// permutations are resolved here.
     pub fn export_lane_into(&self, lane: usize, n: usize, out: &mut Vec<f32>) {
         assert!(lane < self.lanes, "lane {lane} out of range ({})", self.lanes);
-        self.dist.export_f32_strided_into(lane, self.lanes, n, out);
+        self.dist
+            .export_f32_strided_into(self.physical(lane), self.lanes, n, out);
     }
 
     /// Per-lane distance vectors of the last query.
@@ -333,6 +362,16 @@ impl QueryWorkspace {
     /// Fresh (cold) workspace.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Drain the lane-compaction tallies of the last fused walk (both
+    /// multi-source workspaces), zeroing them so pooled reuse never
+    /// double-counts.
+    pub fn take_lane_compactions(&mut self) -> u64 {
+        let c = self.multi_bfs.compactions + self.multi_sssp.compactions;
+        self.multi_bfs.compactions = 0;
+        self.multi_sssp.compactions = 0;
+        c
     }
 }
 

@@ -17,6 +17,15 @@
 //! a `latency` series, and one `exec/<label>` series for every swept
 //! registry algorithm in every cell — a new registry entry that the
 //! serving path silently drops fails the bench.
+//!
+//! Documents are also **trend-gated** ([`trend_regressions`]): a fresh
+//! document diffs against a committed previous artifact cell by cell
+//! (same shard count, graph, algorithm), and any exec series whose
+//! mean regressed past 2× the previous mean (plus an absolute noise
+//! floor — sub-50µs wiggle never trips it) is reported. The bench
+//! binary runs the gate when `PASGAL_TRAJ_PREV` names the previous
+//! artifact; series present in only one document are ignored, so
+//! adding or retiring an algorithm never fails the gate.
 
 use crate::algo::api::{self, AlgoSpec, ParseArgs};
 use crate::coordinator::metrics::json_escape;
@@ -151,6 +160,8 @@ fn run_cell(cfg: &TrajectoryConfig, shards: usize, class: &str) -> Cell {
         inbox_cap: 0,            // unbounded: no shedding mid-sweep
         stall_limit: Duration::ZERO, // no watchdog noise in a bench
         breaker_cooldown: Duration::ZERO,
+        steal: true,             // the production default is what we track
+        fusion_window_max: Duration::ZERO,
     };
     let (req_tx, req_rx) = channel();
     let (res_tx, res_rx) = channel();
@@ -399,6 +410,144 @@ pub fn validate(json: &str) -> Result<(), Vec<String>> {
     }
 }
 
+/// One `exec/<algo>` measurement extracted from a trajectory document,
+/// keyed by its sweep cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecPoint {
+    pub shards: u64,
+    pub graph: String,
+    pub algo: String,
+    pub mean_ms: f64,
+}
+
+/// Parse the number starting at the front of `s` (optionally signed,
+/// decimal, exponent), or `None` if none is there.
+fn leading_number(s: &str) -> Option<f64> {
+    let end = s
+        .find(|c: char| !matches!(c, '0'..='9' | '-' | '+' | '.' | 'e' | 'E'))
+        .unwrap_or(s.len());
+    s[..end].parse().ok()
+}
+
+/// The string literal starting at the front of `s` (which must begin
+/// right after the opening quote). Trajectory keys are emitted through
+/// `json_escape`, so only `\"` and `\\` escapes occur in practice;
+/// other escapes pass through verbatim rather than failing the scan.
+fn leading_string(s: &str) -> Option<(String, usize)> {
+    let mut out = String::new();
+    let mut chars = s.char_indices();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Some((out, i + 1)),
+            '\\' => match chars.next() {
+                Some((_, esc)) => out.push(esc),
+                None => return None,
+            },
+            _ => out.push(c),
+        }
+    }
+    None
+}
+
+/// Extract every per-cell `exec/<algo>` mean from a
+/// `pasgal-bench-serve/1` document.
+///
+/// This is a targeted scan of the schema this module emits, not a
+/// general JSON parser (the offline crate set has none): cells are the
+/// only objects that open with `{"shards":`, and each one carries its
+/// `"graph"` key and `"series"` map before the next cell begins.
+/// Malformed fragments are skipped, never panicked on — the gate
+/// should fail with a diagnostic, not a crash, on a corrupt baseline.
+pub fn exec_points(json: &str) -> Vec<ExecPoint> {
+    let mut points = Vec::new();
+    let cell_open = "{\"shards\":";
+    let mut starts: Vec<usize> = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = json[from..].find(cell_open) {
+        starts.push(from + pos);
+        from += pos + cell_open.len();
+    }
+    for (k, &start) in starts.iter().enumerate() {
+        let end = starts.get(k + 1).copied().unwrap_or(json.len());
+        let cell = &json[start..end];
+        let Some(shards) = leading_number(&cell[cell_open.len()..]) else {
+            continue;
+        };
+        let Some(gpos) = cell.find("\"graph\":\"") else {
+            continue;
+        };
+        let Some((graph, _)) = leading_string(&cell[gpos + 9..]) else {
+            continue;
+        };
+        // Series only: an `exec/...` match inside the counters map
+        // (e.g. a future counter named exec/x) must not be misread.
+        let Some(spos) = cell.find("\"series\":{") else {
+            continue;
+        };
+        let series = &cell[spos..];
+        let mut sfrom = 0;
+        while let Some(pos) = series[sfrom..].find("\"exec/") {
+            let at = sfrom + pos + 6;
+            let Some((algo, used)) = leading_string(&series[at..]) else {
+                break;
+            };
+            let rest = &series[at + used..];
+            sfrom = at + used;
+            // Stay inside this entry's flat summary object: an entry
+            // missing its mean must not read the next entry's.
+            let entry_end = rest.find('}').unwrap_or(rest.len());
+            let Some(mpos) = rest[..entry_end].find("\"mean_ms\":") else {
+                continue;
+            };
+            if let Some(mean_ms) = leading_number(&rest[mpos + 10..]) {
+                points.push(ExecPoint {
+                    shards: shards as u64,
+                    graph: graph.clone(),
+                    algo,
+                    mean_ms,
+                });
+            }
+        }
+    }
+    points
+}
+
+/// Regression factor the trend gate fails on: a cell's exec mean more
+/// than doubling versus the committed previous artifact.
+pub const TREND_FACTOR: f64 = 2.0;
+
+/// Absolute slack under which the trend gate never fires: sub-50µs
+/// means are timer wiggle on a smoke-sized sweep, and 2× of almost
+/// nothing is still almost nothing.
+pub const TREND_NOISE_FLOOR_MS: f64 = 0.05;
+
+/// Diff a freshly generated document against a previous artifact and
+/// report every algorithm exec series that regressed past
+/// [`TREND_FACTOR`]× (plus [`TREND_NOISE_FLOOR_MS`] of absolute
+/// slack) in the same (shards, graph) cell. Empty ⇒ the trend holds.
+/// Cells or series present in only one document are ignored, so sweep
+/// or registry changes never fail the gate spuriously.
+pub fn trend_regressions(current: &str, previous: &str) -> Vec<String> {
+    let cur = exec_points(current);
+    let prev = exec_points(previous);
+    let mut problems = Vec::new();
+    for c in &cur {
+        let Some(p) = prev
+            .iter()
+            .find(|p| p.shards == c.shards && p.graph == c.graph && p.algo == c.algo)
+        else {
+            continue;
+        };
+        if c.mean_ms > p.mean_ms * TREND_FACTOR + TREND_NOISE_FLOOR_MS {
+            problems.push(format!(
+                "exec/{} on {} @ {} shard(s): mean {:.4}ms vs previous {:.4}ms (> {}x)",
+                c.algo, c.graph, c.shards, c.mean_ms, p.mean_ms, TREND_FACTOR
+            ));
+        }
+    }
+    problems
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -427,5 +576,102 @@ mod tests {
         let cfg = TrajectoryConfig::tiny();
         assert!(cfg.side >= 2 && cfg.reqs_per_algo >= 1);
         assert!(cfg.shard_counts.iter().all(|&s| s >= 1));
+    }
+
+    fn doc(cells: &[(u64, &str, &[(&str, f64)])]) -> String {
+        let mut out = String::from("{\"schema\":\"pasgal-bench-serve/1\",\"cells\":[");
+        for (i, (shards, graph, series)) in cells.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"shards\":{shards},\"graph\":\"{graph}\",\"counters\":{{\"x\":1}},\"series\":{{"
+            ));
+            for (j, (algo, mean)) in series.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "\"exec/{algo}\":{{\"count\":4,\"mean_ms\":{mean:.4},\"p50_ms\":0,\"p95_ms\":0,\"p99_ms\":0,\"max_ms\":0}}"
+                ));
+            }
+            out.push_str("}}");
+        }
+        out.push_str("],\"derived\":[{\"graph\":\"road\",\"shards\":1,\"metric\":\"m\",\"value\":1}]}");
+        out
+    }
+
+    #[test]
+    fn exec_points_extracts_per_cell_series() {
+        let d = doc(&[
+            (1, "road", &[("bfs-vgc", 1.5), ("cc", 0.25)]),
+            (2, "social", &[("bfs-vgc", 0.75)]),
+        ]);
+        let pts = exec_points(&d);
+        assert_eq!(pts.len(), 3);
+        assert!(pts.contains(&ExecPoint {
+            shards: 1,
+            graph: "road".into(),
+            algo: "bfs-vgc".into(),
+            mean_ms: 1.5,
+        }));
+        assert!(pts.contains(&ExecPoint {
+            shards: 2,
+            graph: "social".into(),
+            algo: "bfs-vgc".into(),
+            mean_ms: 0.75,
+        }));
+        // The derived section's {"graph":..,"shards":..} entries are
+        // not cells and must contribute nothing.
+        assert!(pts.iter().all(|p| p.shards <= 2));
+    }
+
+    #[test]
+    fn exec_points_reads_a_real_emitted_document() {
+        let cfg = TrajectoryConfig {
+            side: 6,
+            reqs_per_algo: 1,
+            shard_counts: vec![1],
+        };
+        let json = run(&cfg);
+        let pts = exec_points(&json);
+        // One point per (cell, swept algorithm): 2 graphs × registry.
+        assert_eq!(pts.len(), 2 * swept_specs().len());
+        assert!(pts.iter().all(|p| p.shards == 1 && p.mean_ms >= 0.0));
+        assert!(pts.iter().any(|p| p.graph == "road"));
+        assert!(pts.iter().any(|p| p.graph == "social"));
+    }
+
+    #[test]
+    fn trend_gate_fires_only_past_double_plus_noise_floor() {
+        let prev = doc(&[(1, "road", &[("bfs-vgc", 1.0), ("cc", 0.01)])]);
+        // 1.9x: holds.
+        let ok = doc(&[(1, "road", &[("bfs-vgc", 1.9), ("cc", 0.01)])]);
+        assert!(trend_regressions(&ok, &prev).is_empty());
+        // >2x: fails, naming the cell.
+        let bad = doc(&[(1, "road", &[("bfs-vgc", 2.2), ("cc", 0.01)])]);
+        let problems = trend_regressions(&bad, &prev);
+        assert_eq!(problems.len(), 1);
+        assert!(problems[0].contains("exec/bfs-vgc"), "{problems:?}");
+        assert!(problems[0].contains("road"), "{problems:?}");
+        // 5x on a sub-noise-floor series: timer wiggle, holds.
+        let tiny = doc(&[(1, "road", &[("bfs-vgc", 1.0), ("cc", 0.05)])]);
+        assert!(trend_regressions(&tiny, &prev).is_empty());
+    }
+
+    #[test]
+    fn trend_gate_ignores_one_sided_cells_and_series() {
+        let prev = doc(&[(1, "road", &[("bfs-vgc", 1.0)])]);
+        // New algorithm, new shard count, new graph: all ignored.
+        let cur = doc(&[
+            (1, "road", &[("kcore", 99.0)]),
+            (4, "road", &[("bfs-vgc", 99.0)]),
+            (1, "social", &[("bfs-vgc", 99.0)]),
+        ]);
+        assert!(trend_regressions(&cur, &prev).is_empty());
+        // And a corrupt previous artifact yields no points, not a
+        // panic — the gate degrades to a no-op diff.
+        assert!(exec_points("{\"cells\":[{\"shards\":oops").is_empty());
+        assert!(trend_regressions(&cur, "not json at all").is_empty());
     }
 }

@@ -13,6 +13,16 @@
 //! [`MetricsSnapshot`] with Prometheus-style text and JSON encoders,
 //! which the `stats --metrics` CLI, `serve --metrics-out`, and the
 //! `bench/trajectory` driver all consume.
+//!
+//! Elasticity observability (see `coordinator::shard`): the
+//! `steal_attempts` / `steal_conflicts` / `batches_stolen` counters
+//! trace the cross-shard work-stealing protocol, `lane_compactions`
+//! counts mid-walk re-packs of fused multi-source walks,
+//! `engines_replicated` counts per-shard dense-engine replicas spawned
+//! at serve start, and the `fusion_window_us` series records the
+//! (possibly load-adaptive) admission window each dispatch actually
+//! opened — its exact `max`/`mean` make the shrink-vs-grow behaviour
+//! assertable in tests.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -78,6 +78,13 @@ pub struct Coordinator {
     /// through lock-free [`super::directory::SnapshotCache`]s.
     pub(crate) directory: GraphDirectory,
     engine: Option<EngineHandle>,
+    /// Artifact directory the dense engine was spawned from, when
+    /// known: lets shard workers replicate an engine of their own
+    /// ([`ShardState`]) instead of funneling every dense closure
+    /// through one executor thread.
+    ///
+    /// [`ShardState`]: super::shard
+    engine_dir: Option<std::path::PathBuf>,
     /// Warm per-worker query workspaces: checked out per request,
     /// returned after, so the steady-state serving path performs zero
     /// O(n) allocation (see module docs). Shard workers bypass this
@@ -110,6 +117,7 @@ impl Coordinator {
         Coordinator {
             directory: GraphDirectory::new(),
             engine: None,
+            engine_dir: None,
             workspaces: Mutex::new(WorkspacePool::new()),
             results: Mutex::new(ResultCache::new()),
             breaker: Mutex::new(PanicBreaker::new()),
@@ -122,6 +130,20 @@ impl Coordinator {
     pub fn with_engine(engine: EngineHandle) -> Self {
         Coordinator {
             engine: Some(engine),
+            ..Self::new()
+        }
+    }
+
+    /// Coordinator with the dense engine attached *and* its artifact
+    /// directory recorded, so the sharded server can replicate one
+    /// engine per shard worker (dense traffic stops funneling through
+    /// a single executor thread). [`Coordinator::with_engine`] keeps
+    /// the directory unknown — shards then fall back to this shared
+    /// handle.
+    pub fn with_engine_at(engine: EngineHandle, dir: std::path::PathBuf) -> Self {
+        Coordinator {
+            engine: Some(engine),
+            engine_dir: Some(dir),
             ..Self::new()
         }
     }
@@ -153,6 +175,12 @@ impl Coordinator {
     /// The dense engine, if one is attached.
     pub(crate) fn engine(&self) -> Option<&EngineHandle> {
         self.engine.as_ref()
+    }
+
+    /// The artifact directory the dense engine came from, when known
+    /// (the basis of per-shard engine replication).
+    pub(crate) fn engine_dir(&self) -> Option<&std::path::PathBuf> {
+        self.engine_dir.as_ref()
     }
 
     /// The execution core bound to this coordinator's engine and
@@ -1193,6 +1221,12 @@ impl ExecCore<'_> {
                         results[i] = Some(Err(Error::msg(msg.clone())));
                     }
                     break;
+                }
+                // Drain the engines' mid-walk lane-compaction tally —
+                // even a cancelled walk paid for its re-packs.
+                let compacted = ws.take_lane_compactions();
+                if compacted > 0 {
+                    self.metrics.bump("lane_compactions", compacted);
                 }
                 if token.is_hard_cancelled() {
                     let msg = faults::stalled_error(graph, spec.label).to_string();

@@ -55,6 +55,40 @@
 //!   [`Failed`](super::job::JobOutput::Failed) outputs carrying the
 //!   request id (with the `errors` counter bumped), so clients
 //!   correlating responses by id never hang on an error.
+//! * **Adaptive fusion window** — with a nonzero
+//!   [`ShardConfig::fusion_window_max`], the per-dispatch window
+//!   deadline is load-driven ([`effective_window`]): `window(depth) =
+//!   floor + (max − floor) · min(depth, max_batch) / max_batch`,
+//!   where `floor = min(20µs, fusion_window, max)` and `depth` is the
+//!   shard's queue gauge at dispatch. A shallow inbox dispatches after
+//!   ~20µs (latency); a deep backlog waits up to the cap so fusion
+//!   swallows it (throughput). Every opened window lands in the
+//!   `fusion_window_us` histogram series.
+//! * **Cross-shard work stealing** — an idle worker (no request for
+//!   [`STEAL_POLL`]) picks the deepest sibling inbox by the router's
+//!   depth gauges and tries to take it over ([`try_steal`]): lock via
+//!   `try_lock` (a conflict with the owner or another thief is
+//!   counted, never waited on), receive the head, then run the
+//!   *whole* fusion-window admission itself — a steal moves complete
+//!   batches, so a window or 64-lane fused walk is never split across
+//!   workers. Stolen batches execute on the thief's snapshot cache,
+//!   workspace pool and engine, but against the **owner shard's**
+//!   [`ShardState`] (result cache + breaker), keeping affinity-keyed
+//!   state coherent; the thief's own watchdog slot supervises the
+//!   dispatch, so exactly-once answering holds across steals, stalls,
+//!   respawns and shutdown drain. Gauge accounting stays exact: the
+//!   takeover wraps the victim's receiver in an [`Inbox`] carrying
+//!   the victim's depth gauge, so every steal-path receive decrements
+//!   it like an owner receive would. Counters: `steal_attempts`,
+//!   `steal_conflicts`, `batches_stolen`. Disable with
+//!   [`ShardConfig::steal`] (`--no-steal`).
+//! * **Per-shard engine affinity** — when the coordinator knows its
+//!   dense engine's artifact directory
+//!   ([`Coordinator::with_engine_at`]), every shard spawns an engine
+//!   replica of its own (`engines_replicated` counter), so dense
+//!   closures stop funneling through one executor thread; shards fall
+//!   back to the shared handle when the directory is unknown or the
+//!   spawn fails.
 //!
 //! The serve path is **fault-tolerant** (see [`super::faults`] and the
 //! crate-level "Failure semantics" section):
@@ -99,9 +133,12 @@
 //!   worker: healthy → stalled (inflight past the limit) → respawned.
 //!
 //! Per-shard counters: `shard_dispatches`, `window_waits`,
-//! `window_timeouts`, `registry_snapshots`, `graph_seen/<name>`, plus
+//! `window_timeouts`, `registry_snapshots`, `graph_seen/<name>`,
+//! `steal_attempts`, `steal_conflicts`, `batches_stolen`, plus
 //! everything [`ExecCore`] meters (`queries_fused`, `jobs_executed`,
-//! `engine_panics`, ...). [`Metrics::merge`] folds them into the
+//! `engine_panics`, `lane_compactions`, ...). `graph_seen/<name>` is
+//! bumped only for *owner* dispatches — it describes router placement,
+//! which a steal does not change. [`Metrics::merge`] folds them into the
 //! global registry (router-side `shed`/`deadline_exceeded` land in the
 //! global registry directly); [`ShardServer::serve`] also returns the
 //! per-shard registries so callers can inspect placement and balance.
@@ -120,11 +157,23 @@ use super::server::{
 };
 use crate::algo::cancel::CancelToken;
 use crate::algo::workspace::WorkspacePool;
+use crate::runtime::EngineHandle;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvError, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, TryLockError};
 use std::thread::{Scope, ScopedJoinHandle};
 use std::time::{Duration, Instant};
+
+/// How long a steal-enabled worker blocks on its own (empty) inbox
+/// before looking for a sibling to rob. Small enough that an idle
+/// worker notices a skewed neighbor within a millisecond, large enough
+/// that the idle-loop wakeups are noise.
+pub(crate) const STEAL_POLL: Duration = Duration::from_micros(500);
+
+/// The latency end of the adaptive fusion window: with an empty inbox
+/// at dispatch, the window shrinks to ~this (capped by the configured
+/// fixed window — see [`effective_window`]).
+pub(crate) const ADAPTIVE_FLOOR: Duration = Duration::from_micros(20);
 
 /// Tuning knobs for the sharded server.
 #[derive(Debug, Clone)]
@@ -157,6 +206,18 @@ pub struct ShardConfig {
     /// until the graph is republished — the CLI exposes this as
     /// `--breaker-cooldown-ms`).
     pub breaker_cooldown: Duration,
+    /// Cross-shard work stealing: idle workers take whole admitted
+    /// batches from the deepest sibling inbox (default true; the CLI
+    /// exposes the off switch as `--no-steal`). Irrelevant with one
+    /// shard.
+    pub steal: bool,
+    /// Upper bound of the *adaptive* fusion window: when nonzero, the
+    /// per-dispatch window deadline scales with the shard's queue
+    /// depth from ~[`ADAPTIVE_FLOOR`] (empty inbox) up to this cap
+    /// (backlog ≥ `max_batch`) — see [`effective_window`]. Default
+    /// `Duration::ZERO` keeps the fixed `fusion_window` behavior (the
+    /// CLI exposes this as `--fusion-window-max-us`).
+    pub fusion_window_max: Duration,
 }
 
 impl Default for ShardConfig {
@@ -168,8 +229,36 @@ impl Default for ShardConfig {
             inbox_cap: 1024,
             stall_limit: Duration::from_secs(30),
             breaker_cooldown: Duration::ZERO,
+            steal: true,
+            fusion_window_max: Duration::ZERO,
         }
     }
+}
+
+/// The fusion-window deadline for one dispatch, given the shard's
+/// queue depth at that instant (the router-maintained gauge, read
+/// *after* taking the head).
+///
+/// * Fixed mode (`fusion_window_max` zero, the default): always the
+///   configured `fusion_window`.
+/// * Adaptive mode: linear in the backlog —
+///   `floor + (max − floor) · min(depth, max_batch) / max_batch`,
+///   with `floor = min(ADAPTIVE_FLOOR, fusion_window, max)`. An empty
+///   inbox buys latency (~20µs of waiting); a backlog of `max_batch`
+///   or more buys throughput (wait out the full cap so fusion
+///   swallows the queue).
+///
+/// `fusion_window == 0` disables windows entirely in both modes.
+pub(crate) fn effective_window(config: &ShardConfig, depth: usize) -> Duration {
+    let base = config.fusion_window;
+    let max = config.fusion_window_max;
+    if base.is_zero() || max.is_zero() {
+        return base;
+    }
+    let floor = ADAPTIVE_FLOOR.min(base).min(max);
+    let cap = config.max_batch.max(1) as f64;
+    let fill = (depth as f64).min(cap) / cap;
+    floor + (max - floor).mul_f64(fill)
 }
 
 /// State shared between one shard worker and the router's watchdog.
@@ -209,15 +298,44 @@ impl WorkerShared {
 struct ShardState {
     results: Mutex<ResultCache>,
     breaker: Mutex<PanicBreaker>,
+    /// This shard's own dense-engine replica, when the coordinator
+    /// knows the engine's artifact directory and the spawn succeeded:
+    /// dense closures then stop funneling through the coordinator's
+    /// one executor thread. `None` falls back to the shared handle.
+    /// Lives here (not in the worker) so a watchdog respawn reuses the
+    /// replica instead of leaking one executor thread per respawn.
+    engine: Option<EngineHandle>,
 }
 
 impl ShardState {
-    fn new(config: &ShardConfig) -> Self {
+    fn new(config: &ShardConfig, coord: &Coordinator) -> Self {
+        // Replication only pays when there is more than one shard to
+        // contend; a solo shard keeps the coordinator's handle.
+        let engine = if config.shards.max(1) > 1 {
+            coord
+                .engine_dir()
+                .and_then(|dir| EngineHandle::spawn(dir.clone()).ok())
+        } else {
+            None
+        };
         ShardState {
             results: Mutex::new(ResultCache::new()),
             breaker: Mutex::new(PanicBreaker::new().with_cooldown(config.breaker_cooldown)),
+            engine,
         }
     }
+}
+
+/// Everything a worker needs to see its *siblings*: the inbox handles
+/// (steal takeover + respawn takeover), the router's depth gauges
+/// (victim selection + exact accounting) and the per-shard guard
+/// state (stolen batches must hit the owner's cache and breaker).
+/// Index i is shard i; one `Arc<Shards>` is shared by the router and
+/// every worker.
+struct Shards {
+    rxs: Vec<Arc<Mutex<Receiver<JobRequest>>>>,
+    depths: Vec<Arc<AtomicUsize>>,
+    states: Vec<Arc<ShardState>>,
 }
 
 /// A worker's receiving end of a request channel, with an optional
@@ -305,34 +423,45 @@ impl ShardServer {
             let mut inboxes = Vec::with_capacity(n);
             // Each shard's receiver sits behind an Arc<Mutex<..>> so a
             // replacement worker can take over the *same* inbox after
-            // a respawn: requests queued behind a stuck batch are
-            // never dropped. Workers hold the lock only while
+            // a respawn — and an idle sibling can take it over for a
+            // steal: requests queued behind a stuck batch are never
+            // dropped. Workers hold a lock only while
             // receiving/admitting, never across a dispatch.
-            let mut shard_rxs: Vec<Arc<Mutex<Receiver<JobRequest>>>> = Vec::with_capacity(n);
+            let mut rxs: Vec<Arc<Mutex<Receiver<JobRequest>>>> = Vec::with_capacity(n);
             let mut depths: Vec<Arc<AtomicUsize>> = Vec::with_capacity(n);
             let mut states: Vec<Arc<ShardState>> = Vec::with_capacity(n);
-            let mut workers: Vec<Arc<WorkerShared>> = Vec::with_capacity(n);
-            let mut handles = Vec::with_capacity(n);
+            // Every per-shard handle exists before any worker spawns:
+            // workers receive the whole `Shards` table plus their own
+            // index, which is what lets an idle one see its siblings.
             for _ in 0..n {
                 let (shard_tx, shard_rx) = std::sync::mpsc::channel::<JobRequest>();
-                let shard_rx = Arc::new(Mutex::new(shard_rx));
-                let depth = Arc::new(AtomicUsize::new(0));
-                let state = Arc::new(ShardState::new(config));
-                let shared = Arc::new(WorkerShared::new());
                 inboxes.push(shard_tx);
+                rxs.push(Arc::new(Mutex::new(shard_rx)));
+                depths.push(Arc::new(AtomicUsize::new(0)));
+                states.push(Arc::new(ShardState::new(config, coord)));
+            }
+            let replicated = states.iter().filter(|st| st.engine.is_some()).count();
+            if replicated > 0 {
+                coord.metrics.bump("engines_replicated", replicated as u64);
+            }
+            let shards = Arc::new(Shards {
+                rxs,
+                depths,
+                states,
+            });
+            let mut workers: Vec<Arc<WorkerShared>> = Vec::with_capacity(n);
+            let mut handles = Vec::with_capacity(n);
+            for idx in 0..n {
+                let shared = Arc::new(WorkerShared::new());
                 handles.push(spawn_worker(
                     s,
                     coord,
                     config,
-                    Arc::clone(&shard_rx),
-                    Arc::clone(&depth),
+                    &shards,
+                    idx,
                     tx.clone(),
-                    Arc::clone(&state),
                     Arc::clone(&shared),
                 ));
-                shard_rxs.push(shard_rx);
-                depths.push(depth);
-                states.push(state);
                 workers.push(shared);
             }
             // The router: one hash (plus one atomic depth load) per
@@ -360,8 +489,7 @@ impl ShardServer {
                         Ok(r) => r,
                         Err(RecvTimeoutError::Timeout) => {
                             patrol_workers(
-                                s, coord, config, &shard_rxs, &depths, &states,
-                                &mut workers, &mut handles, &tx,
+                                s, coord, config, &shards, &mut workers, &mut handles, &tx,
                             );
                             last_patrol = Instant::now();
                             continue;
@@ -378,14 +506,14 @@ impl ShardServer {
                     }
                 } else {
                     let shard = (req.route_hash() % n as u64) as usize;
-                    if cap > 0 && depths[shard].load(Ordering::Relaxed) >= cap {
+                    if cap > 0 && shards.depths[shard].load(Ordering::Relaxed) >= cap {
                         coord.metrics.bump("shed", 1);
                         let err = faults::overload_error(shard, cap);
                         if tx.send(answer(&req, Err(err), t0, &coord.metrics)).is_err() {
                             break;
                         }
                     } else {
-                        depths[shard].fetch_add(1, Ordering::Relaxed);
+                        shards.depths[shard].fetch_add(1, Ordering::Relaxed);
                         if inboxes[shard].send(req).is_err() {
                             break; // shard died (results receiver hung up)
                         }
@@ -394,10 +522,7 @@ impl ShardServer {
                 // A steady request flood must not starve the patrol:
                 // check the clock here too, not only on idle ticks.
                 if !stall.is_zero() && last_patrol.elapsed() >= tick {
-                    patrol_workers(
-                        s, coord, config, &shard_rxs, &depths, &states, &mut workers,
-                        &mut handles, &tx,
-                    );
+                    patrol_workers(s, coord, config, &shards, &mut workers, &mut handles, &tx);
                     last_patrol = Instant::now();
                 }
             }
@@ -411,10 +536,7 @@ impl ShardServer {
                 while handles.iter().any(|h| !h.is_finished()) {
                     std::thread::sleep(Duration::from_millis(1));
                     if last_patrol.elapsed() >= tick {
-                        patrol_workers(
-                            s, coord, config, &shard_rxs, &depths, &states, &mut workers,
-                            &mut handles, &tx,
-                        );
+                        patrol_workers(s, coord, config, &shards, &mut workers, &mut handles, &tx);
                         last_patrol = Instant::now();
                     }
                 }
@@ -432,22 +554,24 @@ impl ShardServer {
     }
 }
 
-/// Spawn one shard worker over a (possibly already-used) inbox. Its
+/// Spawn one shard worker over a (possibly already-used) inbox. The
+/// worker gets the whole [`Shards`] table plus its own index — that is
+/// what lets an idle worker find and rob a backlogged sibling. Its
 /// metrics registry comes back through the join handle so retired and
 /// replacement workers alike merge into the global registry.
 fn spawn_worker<'scope, 'env>(
     s: &'scope Scope<'scope, 'env>,
     coord: &'env Coordinator,
     config: &'env ShardConfig,
-    rx: Arc<Mutex<Receiver<JobRequest>>>,
-    depth: Arc<AtomicUsize>,
+    shards: &Arc<Shards>,
+    idx: usize,
     tx: Sender<JobResult>,
-    state: Arc<ShardState>,
     shared: Arc<WorkerShared>,
 ) -> ScopedJoinHandle<'scope, Metrics> {
+    let shards = Arc::clone(shards);
     s.spawn(move || {
         let metrics = Metrics::new();
-        shard_loop(coord, config, &rx, &depth, tx, &metrics, &state, &shared);
+        shard_loop(coord, config, &shards, idx, tx, &metrics, &shared);
         metrics
     })
 }
@@ -456,14 +580,11 @@ fn spawn_worker<'scope, 'env>(
 /// published dispatch has overrun [`ShardConfig::stall_limit`],
 /// answer its batch [`EngineStalled`](super::faults::FailKind::EngineStalled),
 /// and respawn a fresh worker over the same inbox.
-#[allow(clippy::too_many_arguments)]
 fn patrol_workers<'scope, 'env>(
     s: &'scope Scope<'scope, 'env>,
     coord: &'env Coordinator,
     config: &'env ShardConfig,
-    shard_rxs: &[Arc<Mutex<Receiver<JobRequest>>>],
-    depths: &[Arc<AtomicUsize>],
-    states: &[Arc<ShardState>],
+    shards: &Arc<Shards>,
     workers: &mut [Arc<WorkerShared>],
     handles: &mut Vec<ScopedJoinHandle<'scope, Metrics>>,
     tx: &Sender<JobResult>,
@@ -494,69 +615,118 @@ fn patrol_workers<'scope, 'env>(
             s,
             coord,
             config,
-            Arc::clone(&shard_rxs[shard]),
-            Arc::clone(&depths[shard]),
+            shards,
+            shard,
             tx.clone(),
-            Arc::clone(&states[shard]),
             fresh,
         ));
     }
 }
 
-/// One shard worker: fusion-window admission over its inbox, batch
-/// execution against shard-local state, results answered in dispatch
-/// order. Exits when the inbox closes (after draining it), when the
-/// result channel hangs up, or when the watchdog takes its inflight
-/// dispatch (it has been replaced — retire without answering).
-#[allow(clippy::too_many_arguments)]
+/// One shard worker: fusion-window admission over its inbox (or a
+/// stolen takeover of a backlogged sibling's — see the module docs),
+/// batch execution against shard-local state, results answered in
+/// dispatch order. Exits when the inbox closes (after draining it),
+/// when the result channel hangs up, or when the watchdog takes its
+/// inflight dispatch (it has been replaced — retire without
+/// answering).
 fn shard_loop(
     coord: &Coordinator,
     config: &ShardConfig,
-    rx: &Mutex<Receiver<JobRequest>>,
-    depth: &AtomicUsize,
+    shards: &Shards,
+    idx: usize,
     tx: Sender<JobResult>,
     metrics: &Metrics,
-    state: &ShardState,
     shared: &WorkerShared,
 ) {
+    let state = &*shards.states[idx];
     let mut cache = SnapshotCache::new();
     let mut pool = WorkspacePool::new();
     let core = ExecCore {
-        engine: coord.engine(),
+        // Per-shard engine affinity: this shard's replica when one was
+        // spawned, else the coordinator's shared handle.
+        engine: state.engine.as_ref().or(coord.engine()),
         metrics,
         faults: coord.fault_plan(),
         cancel: Some(&shared.token),
     };
     let max_batch = config.max_batch.max(1);
+    let steal = config.steal && shards.rxs.len() > 1;
     loop {
+        // Which shard's work this dispatch is (`None` = our own), the
+        // latency epoch, and the admitted batch — filled by either the
+        // own-inbox path or the steal path below.
+        let stolen_from: Option<usize>;
+        let t0: Instant;
+        let mut batch: Vec<JobRequest>;
         // The inbox lock is held only while receiving and admitting —
-        // never across a dispatch — so a replacement worker can take
-        // over this inbox while a condemned predecessor is still
-        // unwinding.
-        let guard = lock_or_recover(rx);
-        let inbox = Inbox::with_depth(&guard, depth);
-        let Ok(first) = inbox.recv() else { return };
-        // Latency epoch: the head request waits from here on, so the
-        // fusion-window wait counts toward reported latency.
-        let t0 = Instant::now();
-        // An already-expired head never opens a fusion window: answer
-        // it dead and move on to live work (the router checks too, but
-        // a request can expire while queued).
-        if first.expired() {
-            drop(guard);
-            metrics.bump("deadline_exceeded", 1);
-            let err = faults::deadline_error(&first.graph, first.algo.label);
-            if tx.send(answer(&first, Err(err), t0, metrics)).is_err() {
-                return;
+        // never across a dispatch — so a replacement worker (or a
+        // thief) can take over this inbox while a condemned
+        // predecessor is still unwinding. Note the flip side: an idle
+        // worker blocked *receiving* holds its own lock, so thieves
+        // only succeed against a victim that is mid-dispatch with a
+        // backlog — exactly the skew that makes a steal worth it.
+        let guard = lock_or_recover(&shards.rxs[idx]);
+        let inbox = Inbox::with_depth(&guard, &shards.depths[idx]);
+        let first = if steal {
+            // Bounded wait: give our own inbox STEAL_POLL to produce
+            // work before looking for a sibling to rob.
+            match inbox.recv_timeout(STEAL_POLL) {
+                Ok(r) => Some(r),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => return,
             }
-            continue;
+        } else {
+            match inbox.recv() {
+                Ok(r) => Some(r),
+                Err(RecvError) => None,
+            }
+        };
+        if let Some(first) = first {
+            stolen_from = None;
+            // Latency epoch: the head request waits from here on, so
+            // the fusion-window wait counts toward reported latency.
+            t0 = Instant::now();
+            // An already-expired head never opens a fusion window:
+            // answer it dead and move on to live work (the router
+            // checks too, but a request can expire while queued).
+            if first.expired() {
+                drop(guard);
+                metrics.bump("deadline_exceeded", 1);
+                let err = faults::deadline_error(&first.graph, first.algo.label);
+                if tx.send(answer(&first, Err(err), t0, metrics)).is_err() {
+                    return;
+                }
+                continue;
+            }
+            batch = vec![first];
+            // Adaptive mode reads the backlog *after* taking the head:
+            // a shallow inbox dispatches fast, a deep one waits out a
+            // longer window so fusion swallows it.
+            let window =
+                effective_window(config, shards.depths[idx].load(Ordering::Relaxed));
+            admit_batch(&inbox, &mut batch, max_batch, window, metrics);
+            drop(guard);
+        } else {
+            drop(guard);
+            if !steal {
+                return; // own inbox closed, nothing left to drain
+            }
+            match try_steal(idx, shards, config, metrics) {
+                Some((steal_t0, stolen, victim)) => {
+                    stolen_from = Some(victim);
+                    t0 = steal_t0;
+                    batch = stolen;
+                }
+                None => continue,
+            }
         }
-        let mut batch = vec![first];
-        admit_batch(&inbox, &mut batch, max_batch, config.fusion_window, metrics);
-        drop(guard);
         // Heartbeat: publish the dispatch to the watchdog before any
         // engine code runs. The clone is the price of supervision —
         // the watchdog must be able to answer these requests itself.
+        // Stolen batches are supervised by *this* worker's slot: the
+        // thief is the one executing, so it is the one a stall
+        // condemns.
         *lock_or_recover(&shared.inflight) = Some((t0, batch.clone()));
         metrics.bump("shard_dispatches", 1);
         // One freshness check per dispatch (an atomic load; the
@@ -570,34 +740,44 @@ fn shard_loop(
         // *registered* graph per dispatch: bounded metric cardinality
         // (client-supplied names that resolve to nothing get no
         // counter) and O(distinct graphs), not O(requests), metric
-        // work per batch.
-        let mut seen: Vec<(&str, u64)> = Vec::new();
-        for r in &batch {
-            if let Some(entry) = seen.iter_mut().find(|(g, _)| *g == r.graph.as_str()) {
-                entry.1 += 1;
-            } else if cache.cached(&r.graph).is_some() {
-                seen.push((r.graph.as_str(), 1));
+        // work per batch. Skipped for stolen batches — the counter
+        // describes router placement, which a steal does not change.
+        if stolen_from.is_none() {
+            let mut seen: Vec<(&str, u64)> = Vec::new();
+            for r in &batch {
+                if let Some(entry) = seen.iter_mut().find(|(g, _)| *g == r.graph.as_str()) {
+                    entry.1 += 1;
+                } else if cache.cached(&r.graph).is_some() {
+                    seen.push((r.graph.as_str(), 1));
+                }
             }
-        }
-        for (g, count) in seen {
-            metrics.bump(&format!("graph_seen/{g}"), count);
+            for (g, count) in seen {
+                metrics.bump(&format!("graph_seen/{g}"), count);
+            }
         }
         if pool.is_empty() {
             metrics.bump("workspaces_created", 1);
         }
         let mut ws = pool.checkout();
+        // Guard state follows the *batch's* shard, not the executing
+        // worker: a stolen batch must hit the owner's result cache
+        // (the router pins its graph there — hits and fills elsewhere
+        // would be invisible to later requests) and the owner's
+        // breaker (its panic streak must not reset just because a
+        // thief ran the next repeat).
+        let owner = stolen_from.map_or(state, |v| &*shards.states[v]);
         let results = core.run_batch_from(
             t0,
             &batch,
             |name| cache.cached(name),
             &mut ws,
             // Shard-level handles, not worker-owned: graph→shard
-            // affinity still means this shard's cache/breaker see the
-            // full hit and consecutive-panic streams, and keeping them
-            // in ShardState lets them survive a watchdog respawn.
+            // affinity still means the owner shard's cache/breaker see
+            // the full hit and consecutive-panic streams, and keeping
+            // them in ShardState lets them survive a watchdog respawn.
             &mut Guards {
-                cache: CacheHandle::Shared(&state.results),
-                breaker: BreakerHandle::Shared(&state.breaker),
+                cache: CacheHandle::Shared(&owner.results),
+                breaker: BreakerHandle::Shared(&owner.breaker),
             },
         );
         // Reclaim the dispatch. An empty slot means the watchdog
@@ -616,6 +796,69 @@ fn shard_loop(
             }
         }
     }
+}
+
+/// One steal attempt by idle worker `me`: pick the deepest sibling
+/// inbox by the router's depth gauges, `try_lock` it (a conflict with
+/// the owner or another thief is counted, never waited on — the owner
+/// holds its lock while blocked receiving, so a successful steal
+/// implies the victim is mid-dispatch with queued backlog), then run
+/// the *whole* fusion-window admission against the victim's inbox.
+/// Whole batches move, so a window or 64-lane fused walk is never
+/// split; the [`Inbox`] wraps the victim's depth gauge, so gauge
+/// accounting stays exact.
+///
+/// Returns `(latency epoch, batch, victim shard)` on success.
+fn try_steal(
+    me: usize,
+    shards: &Shards,
+    config: &ShardConfig,
+    metrics: &Metrics,
+) -> Option<(Instant, Vec<JobRequest>, usize)> {
+    let mut victim = None;
+    let mut deepest = 0usize;
+    for (i, d) in shards.depths.iter().enumerate() {
+        if i == me {
+            continue;
+        }
+        let depth = d.load(Ordering::Relaxed);
+        if depth > deepest {
+            deepest = depth;
+            victim = Some(i);
+        }
+    }
+    // Every sibling idle: nothing worth robbing this poll.
+    let victim = victim?;
+    metrics.bump("steal_attempts", 1);
+    let guard = match shards.rxs[victim].try_lock() {
+        Ok(g) => g,
+        Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        Err(TryLockError::WouldBlock) => {
+            metrics.bump("steal_conflicts", 1);
+            return None;
+        }
+    };
+    let inbox = Inbox::with_depth(&guard, &shards.depths[victim]);
+    // The gauge read raced the owner's receives: the backlog may be
+    // gone by the time the lock lands.
+    let Ok(first) = inbox.try_recv() else {
+        metrics.bump("steal_conflicts", 1);
+        return None;
+    };
+    let t0 = Instant::now();
+    let mut batch = vec![first];
+    // An expired stolen head opens no window (run_batch_from answers
+    // it dead); a live one gets the same adaptive admission the owner
+    // would have run, keyed to the *victim's* remaining backlog.
+    if !batch[0].expired() {
+        let window = effective_window(
+            config,
+            shards.depths[victim].load(Ordering::Relaxed),
+        );
+        admit_batch(&inbox, &mut batch, config.max_batch.max(1), window, metrics);
+    }
+    metrics.bump("batches_stolen", 1);
+    Some((t0, batch, victim))
 }
 
 /// Fusion-window admission: grow `batch` (which already holds the
@@ -645,6 +888,10 @@ pub(crate) fn admit_batch(
     // never happen (e.g. the unbatched max_batch=1 baseline).
     if !window.is_zero() && max_batch > 1 && batch[0].algo.fusable() {
         metrics.bump("window_waits", 1);
+        // The opened window's width — under the adaptive policy this
+        // series is the direct evidence of load-driven sizing
+        // (shallow inbox ⇒ ~ADAPTIVE_FLOOR, backlog ⇒ the cap).
+        metrics.observe("fusion_window_us", window);
         let deadline = Instant::now() + window;
         // The grouping key run_batch fuses on: registry spec id +
         // parsed params (+ the graph name) — exactly what the wire
@@ -787,6 +1034,161 @@ mod tests {
             0,
             "every admission-path receive decrements"
         );
+        drop(tx);
+    }
+
+    #[test]
+    fn effective_window_is_fixed_without_a_max_and_adaptive_with_one() {
+        let mut config = ShardConfig {
+            fusion_window: Duration::from_micros(200),
+            fusion_window_max: Duration::ZERO,
+            max_batch: 64,
+            ..ShardConfig::default()
+        };
+        // Fixed mode: depth is irrelevant.
+        assert_eq!(effective_window(&config, 0), Duration::from_micros(200));
+        assert_eq!(effective_window(&config, 1000), Duration::from_micros(200));
+        // Adaptive mode: floor at an empty inbox, the cap at a backlog
+        // of max_batch or more, monotone in between.
+        config.fusion_window_max = Duration::from_micros(2000);
+        assert_eq!(effective_window(&config, 0), ADAPTIVE_FLOOR);
+        assert_eq!(
+            effective_window(&config, config.max_batch),
+            Duration::from_micros(2000)
+        );
+        assert_eq!(
+            effective_window(&config, 10 * config.max_batch),
+            Duration::from_micros(2000),
+            "backlog past max_batch clamps at the cap"
+        );
+        let mut prev = Duration::ZERO;
+        for depth in 0..=config.max_batch {
+            let w = effective_window(&config, depth);
+            assert!(w >= prev, "adaptive window is monotone in depth");
+            prev = w;
+        }
+        // A fixed window *below* the floor caps the floor: adaptivity
+        // never waits longer than the configured minimum at depth 0.
+        config.fusion_window = Duration::from_micros(5);
+        assert_eq!(effective_window(&config, 0), Duration::from_micros(5));
+        // Zero base window disables windows entirely in both modes.
+        config.fusion_window = Duration::ZERO;
+        assert_eq!(effective_window(&config, 64), Duration::ZERO);
+    }
+
+    fn test_shards(config: &ShardConfig, depths: &[usize]) -> (Vec<Sender<JobRequest>>, Shards) {
+        let coord = Coordinator::new();
+        let mut txs = Vec::new();
+        let mut shards = Shards {
+            rxs: Vec::new(),
+            depths: Vec::new(),
+            states: Vec::new(),
+        };
+        for &d in depths {
+            let (tx, rx) = std::sync::mpsc::channel();
+            for i in 0..d as u64 {
+                tx.send(req(i, "g", "bfs-vgc", 8)).unwrap();
+            }
+            txs.push(tx);
+            shards.rxs.push(Arc::new(Mutex::new(rx)));
+            shards.depths.push(Arc::new(AtomicUsize::new(d)));
+            shards.states.push(Arc::new(ShardState::new(config, &coord)));
+        }
+        (txs, shards)
+    }
+
+    #[test]
+    fn try_steal_robs_the_deepest_sibling_and_keeps_gauges_exact() {
+        let m = Metrics::new();
+        let config = ShardConfig {
+            fusion_window: Duration::from_millis(5),
+            max_batch: 64,
+            ..ShardConfig::default()
+        };
+        let (_txs, shards) = test_shards(&config, &[0, 3, 7]);
+        // Thief is shard 0; shard 2 is deepest and must be the victim.
+        let (t0, batch, victim) = try_steal(0, &shards, &config, &m).expect("backlog to steal");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(victim, 2, "deepest sibling selected");
+        assert_eq!(batch.len(), 7, "whole admitted window moves");
+        assert_eq!(
+            shards.depths[2].load(Ordering::Relaxed),
+            0,
+            "every steal-path receive decremented the victim's gauge"
+        );
+        assert_eq!(
+            shards.depths[1].load(Ordering::Relaxed),
+            3,
+            "non-victim untouched"
+        );
+        assert_eq!(m.counter("steal_attempts"), 1);
+        assert_eq!(m.counter("batches_stolen"), 1);
+        assert_eq!(m.counter("steal_conflicts"), 0);
+    }
+
+    #[test]
+    fn try_steal_counts_lock_conflicts_and_empty_races_without_waiting() {
+        let m = Metrics::new();
+        let config = ShardConfig::default();
+        let (_txs, shards) = test_shards(&config, &[0, 4]);
+        // The victim's own worker holds the inbox lock (as it does
+        // while blocked receiving): the thief must bail immediately.
+        let held = shards.rxs[1].lock().unwrap();
+        let t0 = Instant::now();
+        assert!(try_steal(0, &shards, &config, &m).is_none());
+        assert!(t0.elapsed() < Duration::from_secs(1), "try_lock, never wait");
+        assert_eq!(m.counter("steal_attempts"), 1);
+        assert_eq!(m.counter("steal_conflicts"), 1);
+        drop(held);
+        // A stale gauge (backlog drained between the read and the
+        // lock) is a conflict too, not a panic or a block.
+        let rx = shards.rxs[1].lock().unwrap();
+        while rx.try_recv().is_ok() {}
+        drop(rx);
+        assert!(try_steal(0, &shards, &config, &m).is_none());
+        assert_eq!(m.counter("steal_conflicts"), 2);
+        // All siblings idle: no attempt is even recorded.
+        shards.depths[1].store(0, Ordering::Relaxed);
+        assert!(try_steal(0, &shards, &config, &m).is_none());
+        assert_eq!(m.counter("steal_attempts"), 2);
+    }
+
+    #[test]
+    fn stolen_windows_are_never_split() {
+        // 70 same-key requests queued at the victim: the thief's
+        // admission must stop at the 64-lane fused-walk cap, exactly
+        // like an owner dispatch — a steal moves whole windows.
+        let m = Metrics::new();
+        let config = ShardConfig {
+            fusion_window: Duration::from_secs(10),
+            max_batch: 1 << 20,
+            ..ShardConfig::default()
+        };
+        let coord = Coordinator::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..70u64 {
+            tx.send(req(i, "g", "sssp-rho", 8)).unwrap();
+        }
+        let shards = Shards {
+            rxs: vec![
+                Arc::new(Mutex::new(std::sync::mpsc::channel().1)),
+                Arc::new(Mutex::new(rx)),
+            ],
+            depths: vec![
+                Arc::new(AtomicUsize::new(0)),
+                Arc::new(AtomicUsize::new(70)),
+            ],
+            states: vec![
+                Arc::new(ShardState::new(&config, &coord)),
+                Arc::new(ShardState::new(&config, &coord)),
+            ],
+        };
+        let t0 = Instant::now();
+        let (_t, batch, victim) = try_steal(0, &shards, &config, &m).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "early dispatch");
+        assert_eq!(victim, 1);
+        assert_eq!(batch.len(), MAX_FUSE, "stops at 64 same-key lanes");
+        assert_eq!(shards.depths[1].load(Ordering::Relaxed), 70 - MAX_FUSE as usize);
         drop(tx);
     }
 

@@ -129,6 +129,38 @@
 //!   the request channel mid-window never drops accepted work. The
 //!   `shard_dispatches` / `window_waits` / `window_timeouts` /
 //!   `registry_snapshots` counters expose the admission behavior.
+//! * **Adaptive window** — with `--fusion-window-max-us` set, the
+//!   window deadline is load-driven:
+//!   `window(depth) = floor + (max − floor) · min(depth, max_batch) / max_batch`
+//!   with a ~20µs floor, so a shallow inbox dispatches almost
+//!   immediately (latency) while a deep backlog waits out the full
+//!   cap to fuse more lanes per dispatch (throughput). Every opened
+//!   window is recorded in the `fusion_window_us` series.
+//! * **Work stealing** — graph→shard affinity is what makes windows
+//!   and result caches work, but it also means a skewed mix pins one
+//!   shard while its siblings idle. A worker whose own inbox stays
+//!   empty for 500µs picks the deepest sibling inbox (per-shard depth
+//!   gauges), `try_lock`s its receiver — never waiting; the owner
+//!   holds that lock whenever it is idle-blocked, so steals land
+//!   exactly when the owner is mid-dispatch with backlog queued — and
+//!   admits one whole batch through the normal window (a fusion
+//!   window or 64-lane fused walk is never split). Stolen batches run
+//!   on the thief's snapshot cache and workspace pool but read/write
+//!   the **owner** shard's result cache and circuit breaker, so
+//!   caching and breaker semantics are placement-invariant.
+//!   `steal_attempts` / `steal_conflicts` / `batches_stolen` trace
+//!   the protocol; `--no-steal` disables it
+//!   ([`coordinator::ShardConfig::steal`]).
+//! * **Lane compaction** — when ≥ 3/4 of a fused walk's lanes have
+//!   converged, the multi-source engines re-pack the survivors into a
+//!   dense low-lane prefix mid-walk, shrinking every later frontier
+//!   word (`lane_compactions` counter); per-lane results stay
+//!   bit-identical under the permutation.
+//! * **Engine affinity** — when a dense-closure engine directory is
+//!   known, each shard spawns its own engine replica at serve start
+//!   (`engines_replicated` counter) so engine-gated analyses don't
+//!   serialize shards through one shared process; shards whose spawn
+//!   fails fall back to the shared handle transparently.
 //! * **Result cache** — whole-graph analyses (SCC summary, CC,
 //!   k-core, BCC: specs declaring [`algo::api::AlgoSpec::cacheable`])
 //!   are answered from a shard-local [`coordinator::ResultCache`]
@@ -151,7 +183,10 @@
 //! asserts `fused_fraction` rises once a window is in play;
 //! `benches/ablation_result_cache.rs` asserts a duplicate-heavy
 //! workload hits the cache and answers duplicates below fresh-compute
-//! latency.
+//! latency; `benches/ablation_steal.rs` runs a 90%-one-graph skew with
+//! deterministic per-execution delays and asserts stealing strictly
+//! beats no-stealing while recovering most of the gap to the uniform
+//! ceiling.
 //!
 //! ## Failure semantics
 //!

@@ -7,6 +7,7 @@
 //! pasgal stats  --suite [--scale tiny] | --graph path.bin
 //! pasgal run    --algo bfs-vgc --graph path.bin --source 0 [--tau 512] [--p 192]
 //! pasgal serve  --demo [--requests 64] [--shards N] [--fusion-window-us 200]
+//!               [--fusion-window-max-us 0] [--no-steal]
 //!               [--inbox-cap 1024] [--deadline-ms 0] [--stall-limit-ms 30000]
 //!               [--breaker-cooldown-ms 0]
 //! pasgal table1|table3|table4|table5|sssp|fig1|fig2   [--scale tiny]
@@ -147,6 +148,16 @@ USAGE: pasgal <command> [--key value ...]
   serve     --demo [--requests 64]   sharded serving demo over a workload trace
             [--shards N]             shard workers (default: pool width)
             [--fusion-window-us U]   fusion-window deadline (default 200, 0 = off)
+            [--fusion-window-max-us U] adaptive fusion window: the per-dispatch
+                                     deadline scales with the shard's queue
+                                     depth from ~20us (empty inbox) up to this
+                                     cap (backlog >= max_batch); recorded as
+                                     the fusion_window_us series (default 0 =
+                                     fixed window)
+            [--no-steal]             disable cross-shard work stealing (idle
+                                     workers taking whole admitted batches
+                                     from the deepest sibling inbox; on by
+                                     default with more than one shard)
             [--inbox-cap N]          per-shard queue bound; past it requests are
                                      shed with a typed Overloaded failure
                                      (default 1024, 0 = unbounded)
@@ -438,7 +449,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.num("requests", 64);
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let coord = match pasgal::runtime::EngineHandle::spawn(artifacts) {
+    let coord = match pasgal::runtime::EngineHandle::spawn(artifacts.clone()) {
         Ok(engine) => {
             let (specs, tiles, _) = engine.info()?;
             println!(
@@ -446,7 +457,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 specs.len(),
                 tiles.len()
             );
-            Coordinator::with_engine(engine)
+            // The artifact directory travels with the engine so shard
+            // workers can replicate it (per-shard engine affinity).
+            Coordinator::with_engine_at(engine, artifacts)
         }
         Err(e) => {
             println!("no dense engine ({e}); serving sparse algorithms only");
@@ -497,12 +510,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         inbox_cap: args.num("inbox-cap", 1024),
         stall_limit: std::time::Duration::from_millis(args.num("stall-limit-ms", 30_000)),
         breaker_cooldown: std::time::Duration::from_millis(args.num("breaker-cooldown-ms", 0)),
+        steal: !args.has("no-steal"),
+        fusion_window_max: std::time::Duration::from_micros(args.num("fusion-window-max-us", 0)),
     };
     println!(
-        "sharded serving: {} shards, fusion window {:?}, inbox cap {} ({}), \
-         deadline {}, stall limit {}, breaker cooldown {}",
+        "sharded serving: {} shards, fusion window {} (stealing {}), \
+         inbox cap {} ({}), deadline {}, stall limit {}, breaker cooldown {}",
         config.shards.max(1),
-        config.fusion_window,
+        if config.fusion_window_max.is_zero() {
+            format!("{:?} fixed", config.fusion_window)
+        } else {
+            format!(
+                "adaptive up to {:?} (base {:?})",
+                config.fusion_window_max, config.fusion_window
+            )
+        },
+        if config.steal { "on" } else { "off" },
         config.inbox_cap,
         if config.inbox_cap == 0 { "unbounded" } else { "bounded" },
         if deadline_ms == 0 {
@@ -600,6 +623,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // then dump every counter and series in sorted name order — two
     // runs of the same workload diff line-by-line.
     for name in [
+        "batches_stolen",
         "breaker_open",
         "breaker_probes",
         "breaker_recoveries",
@@ -608,10 +632,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "deadline_exceeded",
         "engine_panics",
         "engine_stalled",
+        "engines_replicated",
         "errors",
+        "lane_compactions",
         "negative_hits",
         "panic_retries",
         "shed",
+        "steal_attempts",
+        "steal_conflicts",
         "workers_respawned",
     ] {
         coord.metrics.register(name);

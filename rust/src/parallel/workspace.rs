@@ -455,6 +455,16 @@ impl StampedU64 {
         }
     }
 
+    /// Unconditional store of the logical value. Not linearizable
+    /// against a concurrent [`StampedU64::fetch_or`] on the same slot —
+    /// callers must guarantee exclusive access to slot `i` (lane
+    /// compaction permutes each vertex's word from exactly one task).
+    #[inline]
+    pub fn store(&self, i: usize, v: u64) {
+        self.vals[i].store(v, Ordering::Relaxed);
+        self.stamps[i].store(self.valid_stamp(), Ordering::Release);
+    }
+
     /// Copy the first `n` logical values into `out`. Parallel above
     /// [`PAR_EXPORT_MIN`] elements.
     pub fn export_into(&self, n: usize, out: &mut Vec<u64>) {

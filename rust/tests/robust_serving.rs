@@ -341,6 +341,13 @@ fn stall_chaos_watchdog_respawns_and_breaker_recovers() {
             inbox_cap: 0,
             stall_limit: Duration::from_millis(25),
             breaker_cooldown: Duration::from_millis(40),
+            // Stealing off: this test's breaker-probe sequencing needs
+            // strict per-shard FIFO (ids 3-4 must stall out flaky's
+            // shard *before* id 5 probes), and a thief robbing id 5
+            // early would run the probe inside the cooldown. The
+            // steal-enabled chaos contract lives in serve_steal.rs.
+            steal: false,
+            fusion_window_max: Duration::ZERO,
         },
         &reqs,
     );

@@ -1,0 +1,378 @@
+//! Integration tests for serving elasticity (`coordinator::shard`):
+//! cross-shard work stealing (bit-identical results, exactly-once
+//! under chaos, whole-window moves), the adaptive fusion window
+//! (shrinks on light load, grows with backlog — read back through the
+//! `fusion_window_us` series), and mid-walk lane compaction through
+//! the full serving path (bit-equality at widths 5, 17 and 64).
+//!
+//! The skew harness: every execution pays a deterministic injected
+//! delay ([`FaultPlan::delay`]) and ~90% of traffic names one graph,
+//! so the router piles a serial backlog onto one shard while its
+//! siblings go idle — exactly the regime stealing exists for. The
+//! delay also makes steals reliable to *force* in a test: thieves
+//! only take an inbox over while its owner is mid-dispatch, and the
+//! delay keeps owners mid-dispatch for milliseconds at a time.
+
+use pasgal::algo::api::ParseArgs;
+use pasgal::coordinator::faults;
+use pasgal::coordinator::{
+    Coordinator, FailKind, FaultPlan, JobOutput, JobRequest, JobResult, ShardConfig, ShardServer,
+};
+use pasgal::graph::gen;
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pasgal::V;
+
+/// Registry-native request (label or alias, τ 64, block 64).
+fn req(id: u64, graph: &str, algo: &str, source: V) -> JobRequest {
+    JobRequest::parse(id, graph, algo, &ParseArgs { tau: 64, block: 64 })
+        .unwrap()
+        .with_source(source)
+}
+
+/// Run `reqs` through a `ShardServer` (all requests queued before the
+/// router starts); return results by id plus per-id answer counts so
+/// duplicate answers are caught, not masked.
+fn serve_all(
+    coord: &Arc<Coordinator>,
+    config: ShardConfig,
+    reqs: &[JobRequest],
+) -> (HashMap<u64, JobResult>, HashMap<u64, usize>) {
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    for r in reqs {
+        req_tx.send(r.clone()).unwrap();
+    }
+    drop(req_tx);
+    ShardServer::new(Arc::clone(coord), config).serve(req_rx, res_tx);
+    let mut results = HashMap::new();
+    let mut counts: HashMap<u64, usize> = HashMap::new();
+    for r in res_rx.iter() {
+        *counts.entry(r.id).or_default() += 1;
+        results.insert(r.id, r);
+    }
+    (results, counts)
+}
+
+/// ~90% of `requests` hit the hot graph; the rest spread over three
+/// cold graphs — the skew that pins one shard's queue.
+fn skewed_reqs(requests: u64, algo: &str) -> Vec<JobRequest> {
+    (0..requests)
+        .map(|i| {
+            let graph = if i % 10 == 9 {
+                ["cold-a", "cold-b", "cold-c"][(i / 10) as usize % 3]
+            } else {
+                "hot"
+            };
+            req(i, graph, algo, (i % 7) as V)
+        })
+        .collect()
+}
+
+fn load_skew_graphs(coord: &Coordinator) {
+    coord.load_graph("hot", gen::road(8, 12, 1));
+    coord.load_graph("cold-a", gen::road(7, 7, 2));
+    coord.load_graph("cold-b", gen::road(7, 7, 3));
+    coord.load_graph("cold-c", gen::road(7, 7, 4));
+}
+
+#[test]
+fn stolen_batches_are_bit_identical_to_owner_execution() {
+    let coord = Arc::new(Coordinator::new());
+    load_skew_graphs(&coord);
+    // 3ms per execution: the hot shard stays mid-dispatch (inbox lock
+    // free, backlog queued) long enough that idle siblings must steal.
+    coord.set_faults(Arc::new(FaultPlan::new().delay(
+        None,
+        None,
+        Duration::from_millis(3),
+    )));
+    let reqs = skewed_reqs(60, "bfs-vgc");
+    let (results, counts) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 4,
+            fusion_window: Duration::ZERO,
+            max_batch: 4, // small batches: a backlog of stealable units
+            inbox_cap: 0,
+            ..ShardConfig::default()
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 60, "every request answered");
+    assert!(counts.values().all(|&c| c == 1), "exactly once each");
+    assert!(
+        coord.metrics.counter("batches_stolen") > 0,
+        "idle shards must have stolen from the hot backlog \
+         (attempts {}, conflicts {})",
+        coord.metrics.counter("steal_attempts"),
+        coord.metrics.counter("steal_conflicts"),
+    );
+    // Bit-identity: a stolen batch ran on the thief's snapshot cache
+    // and workspace pool, but its per-lane outputs must match a
+    // coordinator that never sharded (or stole, or fused) anything.
+    let reference = Coordinator::new();
+    load_skew_graphs(&reference);
+    for r in &reqs {
+        let want = reference.execute(r).unwrap();
+        assert_eq!(
+            results[&r.id].output, want.output,
+            "request {} ({} on {})",
+            r.id, r.algo.label, r.graph
+        );
+    }
+}
+
+#[test]
+fn chaos_with_stealing_keeps_exactly_once_across_stalls_and_panics() {
+    faults::silence_injected_panics();
+    let coord = Arc::new(Coordinator::new());
+    load_skew_graphs(&coord);
+    coord.load_graph("flaky", gen::road(8, 8, 0xB));
+    coord.load_graph("stuck", gen::social(9, 8, 0xC));
+    coord.set_faults(Arc::new(
+        FaultPlan::new()
+            // The skew: every hot/cold execution costs 2ms.
+            .delay(None, None, Duration::from_millis(2))
+            // Every engine run on the flaky graph dies.
+            .panic_on(Some("flaky"), None, 0, u64::MAX)
+            // bfs-vgc on stuck parks until cancelled: stolen or not,
+            // whoever runs it must be condemned and respawned.
+            .stall_forever(Some("stuck"), Some("bfs-vgc")),
+    ));
+    let mut reqs = skewed_reqs(180, "bfs-frontier");
+    for i in 180..196u64 {
+        reqs.push(req(i, "flaky", "bfs-frontier", (i % 3) as V));
+    }
+    reqs.push(req(196, "stuck", "bfs-vgc", 0));
+    reqs.push(req(197, "stuck", "bfs-vgc", 1));
+    let (results, counts) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 3,
+            fusion_window: Duration::from_micros(100),
+            max_batch: 4,
+            inbox_cap: 0, // no shedding: the exactly-once set stays full
+            stall_limit: Duration::from_millis(25),
+            ..ShardConfig::default()
+        },
+        &reqs,
+    );
+    // The serving contract, now with thieves in the mix: every request
+    // answered exactly once, no worker died (serve returned).
+    assert_eq!(results.len(), reqs.len(), "every request answered");
+    assert!(counts.values().all(|&c| c == 1), "no request answered twice");
+    assert!(
+        coord.metrics.counter("batches_stolen") > 0,
+        "the skewed backlog must have been stolen from"
+    );
+    assert!(coord.metrics.counter("engine_panics") >= 1, "panics fired");
+    // The two stuck requests share a fusion key, so they may stall as
+    // one fused dispatch or two solo ones — either way the watchdog
+    // must condemn at least one dispatch and answer both typed.
+    assert!(
+        coord.metrics.counter("engine_stalled") >= 1,
+        "infinite stalls condemned"
+    );
+    assert!(
+        coord.metrics.counter("workers_respawned") >= 1,
+        "stalled workers respawned"
+    );
+    for id in [196u64, 197] {
+        assert_eq!(
+            match &results[&id].output {
+                JobOutput::Failed { kind, .. } => Some(*kind),
+                _ => None,
+            },
+            Some(FailKind::EngineStalled),
+            "id {id} answered typed EngineStalled"
+        );
+    }
+    // The healthy skewed bulk all answered successfully.
+    assert!(reqs[..180]
+        .iter()
+        .all(|r| !matches!(results[&r.id].output, JobOutput::Failed { .. })));
+}
+
+#[test]
+fn adaptive_window_grows_with_backlog_and_shrinks_when_idle() {
+    // Backlogged: 40 fusable same-key requests pre-queued on one
+    // shard. At dispatch the queue gauge is deep, so the adaptive
+    // window must open at (or near) the 5ms cap — far above the 100µs
+    // fixed base.
+    let backlogged = Arc::new(Coordinator::new());
+    backlogged.load_graph("g", gen::road(8, 12, 1));
+    // 1ms per execution: the router finishes queueing all 40 requests
+    // while the first dispatch runs, so later heads provably see a
+    // deep gauge.
+    backlogged.set_faults(Arc::new(FaultPlan::new().delay(
+        None,
+        None,
+        Duration::from_millis(1),
+    )));
+    let reqs: Vec<JobRequest> = (0..40u64)
+        .map(|i| req(i, "g", "bfs-vgc", (i % 7) as V))
+        .collect();
+    let config = ShardConfig {
+        shards: 1,
+        fusion_window: Duration::from_micros(100),
+        fusion_window_max: Duration::from_millis(5),
+        max_batch: 8,
+        inbox_cap: 0,
+        ..ShardConfig::default()
+    };
+    let (results, _) = serve_all(&backlogged, config.clone(), &reqs);
+    assert_eq!(results.len(), 40);
+    let deep = backlogged
+        .metrics
+        .summary("fusion_window_us")
+        .expect("windows opened");
+    assert!(
+        deep.max_ms > 2.0,
+        "a deep backlog must grow the window toward the 5ms cap (max {:.3}ms)",
+        deep.max_ms
+    );
+
+    // Idle: one request in flight at a time (each sent only after the
+    // previous answer), so the gauge is 0 at every dispatch and the
+    // window must shrink to the ~20µs floor.
+    let idle = Arc::new(Coordinator::new());
+    idle.load_graph("g", gen::road(8, 12, 1));
+    let (req_tx, req_rx) = channel();
+    let (res_tx, res_rx) = channel();
+    let server = {
+        let coord = Arc::clone(&idle);
+        let config = config.clone();
+        std::thread::spawn(move || ShardServer::new(coord, config).serve(req_rx, res_tx))
+    };
+    for i in 0..6u64 {
+        req_tx.send(req(i, "g", "bfs-vgc", (i % 7) as V)).unwrap();
+        let r = res_rx.recv().unwrap();
+        assert_eq!(r.id, i);
+    }
+    drop(req_tx);
+    server.join().unwrap();
+    let light = idle
+        .metrics
+        .summary("fusion_window_us")
+        .expect("windows opened");
+    assert!(
+        light.max_ms < 0.5,
+        "an empty inbox must shrink the window to the floor (max {:.3}ms)",
+        light.max_ms
+    );
+    assert!(
+        deep.max_ms > 10.0 * light.max_ms,
+        "backlogged windows ({:.3}ms) must dwarf idle windows ({:.3}ms)",
+        deep.max_ms,
+        light.max_ms
+    );
+
+    // Fixed mode (`fusion_window_max` zero) records the base verbatim:
+    // adaptivity is strictly opt-in.
+    let fixed = Arc::new(Coordinator::new());
+    fixed.load_graph("g", gen::road(8, 12, 1));
+    let (results, _) = serve_all(
+        &fixed,
+        ShardConfig {
+            fusion_window_max: Duration::ZERO,
+            ..config
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 40);
+    let s = fixed.metrics.summary("fusion_window_us").unwrap();
+    assert!(
+        (s.max_ms - 0.1).abs() < 1e-6 && (s.mean_ms - 0.1).abs() < 1e-6,
+        "fixed mode always opens the configured 100µs window (max {:.6}ms)",
+        s.max_ms
+    );
+}
+
+#[test]
+fn lane_compaction_is_bit_identical_through_the_serving_path() {
+    // Fused walks whose lanes converge at very different times: w−1
+    // sources near the tail of a long path converge in a few rounds,
+    // the source-0 lane walks the whole diameter. Once ≥3/4 of lanes
+    // are done the engine re-packs the live ones (lane_compactions
+    // ticks) — and every per-lane answer must still be bit-identical
+    // to a solo run. Widths cover the compaction threshold edges and
+    // the full 64-lane walk.
+    for width in [5usize, 17, 64] {
+        let coord = Arc::new(Coordinator::new());
+        let n = 2048usize;
+        coord.load_graph("path", gen::path(n));
+        let reference = Coordinator::new();
+        reference.load_graph("path", gen::path(n));
+        let reqs: Vec<JobRequest> = (0..width as u64)
+            .map(|i| {
+                let source = if i == 0 {
+                    0
+                } else {
+                    (n as u64 - i) as V
+                };
+                req(i, "path", "bfs-vgc", source)
+            })
+            .collect();
+        let (results, counts) = serve_all(
+            &coord,
+            ShardConfig {
+                shards: 1,
+                fusion_window: Duration::from_millis(20),
+                max_batch: 64,
+                inbox_cap: 0,
+                ..ShardConfig::default()
+            },
+            &reqs,
+        );
+        assert_eq!(results.len(), width, "width {width}");
+        assert!(counts.values().all(|&c| c == 1));
+        assert!(
+            coord.metrics.counter("queries_fused") as usize >= width,
+            "width {width}: the window must fuse all lanes into one walk"
+        );
+        assert!(
+            coord.metrics.counter("lane_compactions") > 0,
+            "width {width}: skewed lane convergence must trigger compaction"
+        );
+        for r in &reqs {
+            let want = reference.execute(r).unwrap();
+            assert_eq!(
+                results[&r.id].output, want.output,
+                "width {width}, lane source {}",
+                r.source
+            );
+        }
+    }
+}
+
+#[test]
+fn engineless_shards_fall_back_to_the_shared_path() {
+    // Without a known engine artifact directory there is nothing to
+    // replicate: shards must fall back to the coordinator's (absent)
+    // shared handle and serve CPU algorithms exactly as before, with
+    // the replication counter untouched.
+    let coord = Arc::new(Coordinator::new());
+    load_skew_graphs(&coord);
+    let reqs = skewed_reqs(20, "bfs-vgc");
+    let (results, counts) = serve_all(
+        &coord,
+        ShardConfig {
+            shards: 3,
+            fusion_window: Duration::from_micros(200),
+            max_batch: 8,
+            inbox_cap: 0,
+            ..ShardConfig::default()
+        },
+        &reqs,
+    );
+    assert_eq!(results.len(), 20);
+    assert!(counts.values().all(|&c| c == 1));
+    assert_eq!(coord.metrics.counter("engines_replicated"), 0);
+    assert!(results
+        .values()
+        .all(|r| !matches!(r.output, JobOutput::Failed { .. })));
+}
